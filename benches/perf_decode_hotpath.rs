@@ -1,0 +1,44 @@
+//! The REAL decode hot path: PJRT decode steps with a device-resident
+//! fused state, measured per step and per token across batch buckets.
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use std::time::Instant;
+
+use epdserve::runtime::tiny_lmm::{argmax, TinyLmmRuntime};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("perf_decode_hotpath: artifacts/ missing — run `make artifacts`; skipping");
+        return;
+    }
+    let mut rt = TinyLmmRuntime::load("artifacts").expect("load runtime");
+    rt.warm_decode().expect("warm decode");
+    let kv_len = rt.kv_len();
+    let kv: Vec<f32> = vec![0.01; kv_len];
+
+    for batch in [1usize, 2, 4, 8] {
+        let kvs: Vec<&[f32]> = (0..batch).map(|_| kv.as_slice()).collect();
+        let lens: Vec<i32> = vec![32; batch];
+        let mut state = rt.decode_start(&kvs, &lens).expect("decode_start");
+        let mut tokens: Vec<i32> = vec![256; batch];
+
+        // Warmup.
+        for _ in 0..5 {
+            let logits = rt.decode_step(&mut state, &tokens).unwrap();
+            tokens = (0..batch).map(|i| argmax(&logits[i * 512..(i + 1) * 512])).collect();
+        }
+        let steps = 40;
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            let logits = rt.decode_step(&mut state, &tokens).unwrap();
+            tokens = (0..batch).map(|i| argmax(&logits[i * 512..(i + 1) * 512])).collect();
+        }
+        let per_step = t0.elapsed().as_secs_f64() / steps as f64;
+        println!(
+            "decode_step b={batch}: {:.2} ms/step, {:.2} ms/token ({:.0} tok/s)",
+            per_step * 1e3,
+            per_step * 1e3 / batch as f64,
+            batch as f64 / per_step
+        );
+    }
+}

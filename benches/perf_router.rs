@@ -1,0 +1,43 @@
+//! Router/coordination micro-benchmarks: IRP shard planning, instance
+//! assignment, migration cost modelling — everything on the request-entry
+//! path.
+
+use epdserve::coordinator::irp::plan_shards;
+use epdserve::coordinator::migration::{MigrationKind, TransferModel};
+use epdserve::core::config::AssignPolicy;
+use epdserve::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use epdserve::sched::assign::Assigner;
+use epdserve::util::bench::BenchRunner;
+
+fn main() {
+    let runner = BenchRunner::default();
+    let mut results = Vec::new();
+
+    let mut n = 0u32;
+    results.push(runner.time("plan_shards_80_tiles_5way", || {
+        n = n.wrapping_add(1);
+        let p = plan_shards(80 + (n % 7), 5, true);
+        assert!(p.num_shards() <= 5);
+    }));
+
+    let mut assigner = Assigner::new(AssignPolicy::LeastLoaded);
+    let candidates: Vec<usize> = (0..8).collect();
+    let loads = [0.3, 0.1, 0.9, 0.2, 0.5, 0.8, 0.05, 0.4];
+    results.push(runner.time("assign_least_loaded_8", || {
+        let pick = assigner.pick(&candidates, &loads).unwrap();
+        assert_eq!(pick, 6);
+    }));
+
+    let spec = LmmSpec::get(ModelId::InternVl2_8b);
+    let tm = TransferModel::from_device(&DeviceSpec::a100());
+    results.push(runner.time("migration_time_model", || {
+        let t = tm.migration_time(MigrationKind::PrefillToDecode, &spec, 0, 13_334);
+        assert!(t > 0.0);
+    }));
+
+    for r in &results {
+        println!("{}", r.report());
+    }
+    assert!(results[0].mean_ns < 5_000.0, "shard planning too slow");
+    assert!(results[1].mean_ns < 500.0, "assignment too slow");
+}

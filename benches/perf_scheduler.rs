@@ -1,0 +1,57 @@
+//! Scheduler micro-benchmarks: queue push/pop under each policy and batch
+//! formation.
+
+use epdserve::core::config::QueuePolicy;
+use epdserve::sched::batcher::Batcher;
+use epdserve::sched::queue::{QueuedRequest, StageQueue};
+use epdserve::util::bench::BenchRunner;
+use epdserve::util::rng::Rng;
+
+fn item(rng: &mut Rng, id: u64) -> QueuedRequest {
+    QueuedRequest {
+        id,
+        shard: 0,
+        enqueue_time: rng.f64(),
+        est_cost: rng.f64(),
+        deadline: rng.f64() * 100.0,
+    }
+}
+
+fn main() {
+    let runner = BenchRunner::default();
+    let mut results = Vec::new();
+    for policy in [QueuePolicy::Fcfs, QueuePolicy::Sjf, QueuePolicy::SloAware] {
+        let mut rng = Rng::new(1);
+        let mut q = StageQueue::new(policy);
+        for i in 0..256 {
+            q.push(item(&mut rng, i));
+        }
+        let mut i = 256u64;
+        let name = format!("queue_push_pop_depth256_{policy:?}");
+        results.push(runner.time(&name, || {
+            i += 1;
+            q.push(item(&mut rng, i));
+            let _ = q.pop().unwrap();
+        }));
+    }
+
+    // Batch formation over a deep queue.
+    let mut rng = Rng::new(2);
+    let mut q = StageQueue::new(QueuePolicy::Fcfs);
+    let batcher = Batcher::new(16, 49_152);
+    let mut i = 0u64;
+    results.push(runner.time("batcher_form_16_of_512", || {
+        while q.len() < 512 {
+            i += 1;
+            q.push(item(&mut rng, i));
+        }
+        let b = batcher.form(&mut q, |_| true, |_| 512);
+        assert_eq!(b.len(), 16);
+    }));
+
+    for r in &results {
+        println!("{}", r.report());
+    }
+    // FCFS pop must be O(1)-ish.
+    assert!(results[0].mean_ns < 2_000.0, "fcfs too slow");
+}

@@ -1,0 +1,44 @@
+//! End-to-end simulator throughput: virtual requests simulated per second
+//! of wall clock. The optimizer runs hundreds of these; this is its inner
+//! loop.
+
+use std::time::Instant;
+
+use epdserve::core::config::EpdConfig;
+use epdserve::core::topology::Topology;
+use epdserve::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use epdserve::sim::engine::{SimConfig, Simulator};
+use epdserve::util::rng::Rng;
+use epdserve::workload::synthetic::SyntheticWorkload;
+use epdserve::workload::Workload;
+
+fn main() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    let cfg = SimConfig::new(
+        spec.clone(),
+        DeviceSpec::a100(),
+        EpdConfig::epd(Topology::new(5, 2, 1), 1, 1, 128),
+    );
+    let w = SyntheticWorkload::new(4, 50);
+    let mut rng = Rng::new(9);
+    let reqs = w.generate(&spec, 2_000, 2.0, &mut rng);
+
+    // Warmup.
+    let _ = Simulator::run(&cfg, &reqs[..200]);
+
+    let t0 = Instant::now();
+    let iters = 5;
+    for _ in 0..iters {
+        let out = Simulator::run(&cfg, &reqs);
+        assert_eq!(out.finished().count(), reqs.len());
+    }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    let rps = reqs.len() as f64 / dt;
+    println!(
+        "sim_engine: {:.0} simulated requests/s wall ({:.1} ms per 2k-request run)",
+        rps,
+        dt * 1e3
+    );
+    // The optimizer needs thousands of runs; demand >= 50k req/s throughput.
+    assert!(rps > 50_000.0, "simulator too slow: {rps:.0} req/s");
+}

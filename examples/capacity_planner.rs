@@ -1,0 +1,52 @@
+//! Capacity planning with the analytical memory model: for each paper
+//! model, show what disaggregation buys at each resolution — the
+//! Figure 2 / Table 2 / Table 3 primitives as a planning tool.
+//!
+//! ```sh
+//! cargo run --release --example capacity_planner
+//! ```
+
+use epdserve::model::memory::{MemoryModel, NodeKind};
+use epdserve::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use epdserve::model::vision::Resolution;
+use epdserve::util::bytes::human;
+
+fn main() {
+    for id in ModelId::all_paper_models() {
+        let m = MemoryModel::new(LmmSpec::get(id), DeviceSpec::a100());
+        println!("\n=== {} on {} ===", m.spec.name, m.device.name);
+        println!(
+            "weights: encoder {} + LLM {}; KV {} B/token",
+            human(m.spec.encoder_weight_bytes()),
+            human(m.spec.llm_weight_bytes()),
+            m.spec.llm.kv_bytes_per_token(),
+        );
+        println!(
+            "{:<12} {:>8} {:>22} {:>22} {:>20}",
+            "resolution", "tiles", "imgs/req (agg->EPD)", "batch@10img (agg->E)", "KV tokens (agg->P)"
+        );
+        for res in Resolution::paper_set() {
+            let tiles = epdserve::model::vision::tiles_for_image(&m.spec, res);
+            let (i_agg, _) = m.max_images_per_request(NodeKind::Colocated, res, 0.8, 22);
+            let (i_e, _) = m.max_images_per_request(NodeKind::EncodeOnly, res, 0.8, 22);
+            let (i_p, _) = m.max_images_per_request(NodeKind::LlmOnly, res, 0.8, 22);
+            let i_epd = i_e.min(i_p);
+            let (b_agg, _) = m.max_batch(NodeKind::Colocated, 10, res, 0.8);
+            let (b_e, _) = m.max_batch(NodeKind::EncodeOnly, 10, res, 0.8);
+            let kv_agg = m.kv_capacity_tokens(NodeKind::Colocated, 0.8);
+            let kv_p = m.kv_capacity_tokens(NodeKind::LlmOnly, 0.8);
+            println!(
+                "{:<12} {:>8} {:>12} -> {:<7} {:>12} -> {:<7} {:>9} -> {:<9}",
+                res.to_string(),
+                tiles,
+                i_agg,
+                i_epd,
+                b_agg,
+                b_e,
+                kv_agg / 1000,
+                format!("{}k", kv_p / 1000),
+            );
+        }
+    }
+    println!("\n(run `epdserve repro table2` / `table3` / `table8` for the full paper tables)");
+}

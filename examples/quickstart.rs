@@ -1,0 +1,44 @@
+//! Quickstart: boot a 2E1P1D EPD engine over the AOT artifacts and serve a
+//! handful of multimodal requests end to end.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use epdserve::core::config::EpdConfig;
+use epdserve::core::topology::Topology;
+use epdserve::engine::serve::{EngineConfig, EpdEngine};
+
+fn main() -> anyhow::Result<()> {
+    epdserve::util::logging::init();
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    println!("starting EPD engine (2E1P1D) — each instance compiles its own executables…");
+    let epd = EpdConfig::epd(Topology::new(2, 1, 1), 1, 1, 128);
+    let engine = EpdEngine::start(EngineConfig::new("artifacts", epd))?;
+
+    for (images, prompt) in [
+        (1u32, "what is in this image?"),
+        (2, "compare these two photos"),
+        (4, "summarize the sequence of frames"),
+    ] {
+        let resp = engine.generate(images, prompt, 16)?;
+        println!(
+            "req {:>2}: images={images} -> {} tokens in {:.3}s  text={:?}",
+            resp.id,
+            resp.tokens.len(),
+            resp.latency,
+            truncate(&resp.text, 32),
+        );
+    }
+    println!("\nmetrics: {}", engine.metrics.report().pretty());
+    engine.shutdown();
+    Ok(())
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    s.chars().take(n).collect()
+}

@@ -1,0 +1,87 @@
+//! Dynamic role switching on the REAL engine (§3.2.4): start 3E1P1D, hit
+//! it with a decode-heavy workload shift (long outputs), and watch the
+//! monitor move encode instances to decode.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example role_switching_demo
+//! ```
+
+use std::time::Duration;
+
+use epdserve::core::config::EpdConfig;
+
+use epdserve::core::topology::Topology;
+use epdserve::coordinator::role_switch::SwitchPolicy;
+use epdserve::engine::job::GenRequest;
+use epdserve::engine::serve::{EngineConfig, EpdEngine};
+
+fn main() -> anyhow::Result<()> {
+    epdserve::util::logging::init();
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let mut epd = EpdConfig::epd(Topology::new(3, 1, 1), 1, 1, 4);
+    epd.role_switching = true;
+    let mut cfg = EngineConfig::new("artifacts", epd);
+    cfg.switch_policy = SwitchPolicy {
+        imbalance_ratio: 2.0,
+        min_pressure: 0.5,
+        cooldown: 2.0,
+        min_instances: 1,
+        switch_time_with_e: 0.7,
+        switch_time_pd: 0.1,
+    };
+    let engine = EpdEngine::start(cfg)?;
+
+    let roles_snapshot = |engine: &EpdEngine| {
+        let roles = engine.queues().roles.lock().unwrap().clone();
+        roles.iter().map(|r| r.code()).collect::<String>()
+    };
+    println!("initial roles: {}", roles_snapshot(&engine));
+
+    // Phase 1: encode-heavy, short outputs.
+    let mut rxs = Vec::new();
+    for i in 0..8u64 {
+        rxs.push(engine.submit(GenRequest {
+            id: i + 1,
+            images: 4,
+            prompt: "short".into(),
+            max_tokens: 4,
+            seed: 1,
+        }));
+    }
+    for rx in rxs.drain(..) {
+        rx.recv_timeout(Duration::from_secs(120))?;
+    }
+    println!("after short-output phase: {}", roles_snapshot(&engine));
+
+    // Phase 2: decode-heavy (long outputs) — pressure shifts to D.
+    for i in 100..124u64 {
+        rxs.push(engine.submit(GenRequest {
+            id: i,
+            images: 1,
+            prompt: "long".into(),
+            max_tokens: 200,
+            seed: 2,
+        }));
+    }
+    // Watch roles while the burst drains.
+    for _ in 0..10 {
+        std::thread::sleep(Duration::from_millis(600));
+        let roles = roles_snapshot(&engine);
+        let d_count = roles.matches('D').count();
+        println!("roles: {roles}  (decode instances: {d_count})");
+    }
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(300))?;
+    }
+    let final_roles = roles_snapshot(&engine);
+    println!("final roles: {final_roles}");
+    println!(
+        "decode instances grew from 1 to {}",
+        final_roles.matches('D').count()
+    );
+    engine.shutdown();
+    Ok(())
+}

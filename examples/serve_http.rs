@@ -1,0 +1,65 @@
+//! Start the HTTP frontend and exercise it with a client request —
+//! demonstrates the OpenAI-flavoured API surface (Appendix E).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_http
+//! ```
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use epdserve::core::config::EpdConfig;
+use epdserve::core::topology::Topology;
+use epdserve::engine::http::HttpServer;
+use epdserve::engine::serve::{EngineConfig, EpdEngine};
+
+fn http_post(addr: &std::net::SocketAddr, path: &str, body: &str) -> anyhow::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut out = String::new();
+    stream.read_to_string(&mut out)?;
+    Ok(out)
+}
+
+fn http_get(addr: &std::net::SocketAddr, path: &str) -> anyhow::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!("GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    let mut out = String::new();
+    stream.read_to_string(&mut out)?;
+    Ok(out)
+}
+
+fn main() -> anyhow::Result<()> {
+    epdserve::util::logging::init();
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let epd = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
+    let engine = Arc::new(EpdEngine::start(EngineConfig::new("artifacts", epd))?);
+    let server = HttpServer::serve(Arc::clone(&engine), "127.0.0.1:0")?;
+    println!("serving on http://{}", server.addr);
+
+    let resp = http_post(
+        &server.addr,
+        "/v1/completions",
+        r#"{"prompt":"what do you see?","images":2,"max_tokens":12}"#,
+    )?;
+    println!("\nPOST /v1/completions →\n{resp}");
+
+    let metrics = http_get(&server.addr, "/metrics")?;
+    println!("\nGET /metrics →\n{metrics}");
+
+    server.stop();
+    match Arc::try_unwrap(engine) {
+        Ok(engine) => engine.shutdown(),
+        Err(_) => {}
+    }
+    Ok(())
+}

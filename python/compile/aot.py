@@ -1,0 +1,239 @@
+"""AOT lowering: tiny-LMM stage graphs -> HLO text artifacts + weights.
+
+Run once by ``make artifacts``::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits:
+
+- ``encode_t{N}.hlo.txt``   one per encoder tile-batch bucket
+- ``prefill_i{N}.hlo.txt``  one per images-per-request bucket
+- ``decode_b{N}.hlo.txt``   one per decode batch bucket
+- ``weights.bin``           all parameters, f32 LE, concatenated in
+                            sorted-name order (the HLO parameter order)
+- ``manifest.json``         weight table + artifact index + model config
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: the
+rust side's xla_extension 0.5.1 rejects jax>=0.5 protos whose instruction
+ids exceed INT_MAX; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Every executable takes the flattened parameter list first (sorted by
+name — JAX's dict flattening order), then its runtime inputs; the rust
+runtime (rust/src/runtime/artifacts.rs) relies on this, so the manifest
+records both halves explicitly.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import BUCKETS, LLM, VISION
+from . import model
+
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def lower_encode(params, tiles: int) -> str:
+    spec = jax.ShapeDtypeStruct(
+        (tiles, VISION.num_patches, VISION.patch_dim), jnp.float32
+    )
+    fn = lambda p, x: (model.encode_fn(p, x),)
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(params, spec))
+
+
+def lower_prefill(params, images: int) -> str:
+    t = BUCKETS.prefill_tokens(images, VISION)
+    m = images * VISION.out_tokens
+    tok = jax.ShapeDtypeStruct((t,), jnp.int32)
+    mm = jax.ShapeDtypeStruct((m, LLM.hidden), jnp.float32)
+    ln = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = lambda p, a, b, c: model.prefill_fn(p, a, b, c)
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(params, tok, mm, ln))
+
+
+def lower_decode_logits(batch: int) -> str:
+    """Companion executable: slice the [batch, vocab] logits prefix out of
+    the fused decode state. The CPU PJRT plugin lacks partial raw host
+    copies, so the runtime runs this tiny kernel instead of fetching the
+    whole state (rust/src/runtime/tiny_lmm.rs)."""
+    state = jax.ShapeDtypeStruct((model.decode_state_len(batch),), jnp.float32)
+    fn = lambda st: (st[: batch * LLM.vocab].reshape(batch, LLM.vocab),)
+    return to_hlo_text(jax.jit(fn).lower(state))
+
+
+def lower_decode(params, batch: int) -> str:
+    """Fused decode: flat [logits | kv] state in and out, non-tuple root so
+    the rust runtime keeps the state buffer on device across steps."""
+    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    state = jax.ShapeDtypeStruct((model.decode_state_len(batch),), jnp.float32)
+    ln = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    fn = lambda p, a, b, c: model.decode_fused_fn(p, a, b, c)
+    return to_hlo_text(
+        jax.jit(fn, keep_unused=True).lower(params, tok, state, ln),
+        return_tuple=False,
+    )
+
+
+def build(out_dir: str, seed: int = 0, quiet: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    params = model.init_params(seed)
+    names = sorted(params.keys())
+
+    # ---- weights.bin + weight table ----
+    weight_table = []
+    offset = 0
+    blobs = []
+    for name in names:
+        arr = np.asarray(params[name], dtype=np.float32)
+        blobs.append(arr.tobytes())
+        weight_table.append(
+            {
+                "name": name,
+                "shape": list(arr.shape),
+                "dtype": "f32",
+                "offset": offset,
+                "size_bytes": arr.nbytes,
+            }
+        )
+        offset += arr.nbytes
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for b in blobs:
+            f.write(b)
+
+    artifacts = {"encode": [], "prefill": [], "decode": []}
+
+    def emit(name: str, text: str):
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        if not quiet:
+            print(f"  wrote {name} ({len(text) // 1024} KiB)")
+
+    for tiles in BUCKETS.encode_tiles:
+        fname = f"encode_t{tiles}.hlo.txt"
+        emit(fname, lower_encode(params, tiles))
+        artifacts["encode"].append(
+            {
+                "tiles": tiles,
+                "file": fname,
+                "inputs": [
+                    {"name": "patches", "shape": [tiles, VISION.num_patches, VISION.patch_dim], "dtype": "f32"}
+                ],
+                "outputs": [
+                    {"name": "mm_tokens", "shape": [tiles, VISION.out_tokens, LLM.hidden], "dtype": "f32"}
+                ],
+            }
+        )
+
+    for images in BUCKETS.prefill_images:
+        t = BUCKETS.prefill_tokens(images, VISION)
+        m = images * VISION.out_tokens
+        fname = f"prefill_i{images}.hlo.txt"
+        emit(fname, lower_prefill(params, images))
+        artifacts["prefill"].append(
+            {
+                "images": images,
+                "tokens": t,
+                "mm_tokens": m,
+                "file": fname,
+                "inputs": [
+                    {"name": "tokens", "shape": [t], "dtype": "i32"},
+                    {"name": "mm", "shape": [m, LLM.hidden], "dtype": "f32"},
+                    {"name": "length", "shape": [], "dtype": "i32"},
+                ],
+                "outputs": [
+                    {"name": "logits", "shape": [LLM.vocab], "dtype": "f32"},
+                    {
+                        "name": "kv",
+                        "shape": [LLM.layers, 2, LLM.heads, LLM.max_seq, LLM.head_dim],
+                        "dtype": "f32",
+                    },
+                ],
+            }
+        )
+
+    for batch in BUCKETS.decode_batch:
+        fname = f"decode_b{batch}.hlo.txt"
+        logits_fname = f"decode_logits_b{batch}.hlo.txt"
+        emit(fname, lower_decode(params, batch))
+        emit(logits_fname, lower_decode_logits(batch))
+        artifacts["decode"].append(
+            {
+                "batch": batch,
+                "file": fname,
+                "state_len": model.decode_state_len(batch),
+                "logits_file": logits_fname,
+                "inputs": [
+                    {"name": "token", "shape": [batch], "dtype": "i32"},
+                    {"name": "state", "shape": [model.decode_state_len(batch)], "dtype": "f32"},
+                    {"name": "cur_len", "shape": [batch], "dtype": "i32"},
+                ],
+                "outputs": [
+                    {"name": "state", "shape": [model.decode_state_len(batch)], "dtype": "f32"}
+                ],
+            }
+        )
+
+    manifest = {
+        "format_version": 1,
+        "seed": seed,
+        "weights_file": "weights.bin",
+        "weights": weight_table,
+        "artifacts": artifacts,
+        "config": {
+            "vision": {
+                "image_px": VISION.image_px,
+                "patch_px": VISION.patch_px,
+                "num_patches": VISION.num_patches,
+                "patch_dim": VISION.patch_dim,
+                "hidden": VISION.hidden,
+                "layers": VISION.layers,
+                "out_tokens": VISION.out_tokens,
+            },
+            "llm": {
+                "hidden": LLM.hidden,
+                "layers": LLM.layers,
+                "heads": LLM.heads,
+                "head_dim": LLM.head_dim,
+                "vocab": LLM.vocab,
+                "max_seq": LLM.max_seq,
+            },
+            "buckets": {
+                "encode_tiles": list(BUCKETS.encode_tiles),
+                "prefill_images": list(BUCKETS.prefill_images),
+                "prefill_text": BUCKETS.prefill_text,
+                "decode_batch": list(BUCKETS.decode_batch),
+            },
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if not quiet:
+        total = sum(w["size_bytes"] for w in weight_table)
+        print(f"  wrote weights.bin ({total // 1024} KiB, {len(weight_table)} tensors)")
+        print(f"  wrote manifest.json")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    build(args.out, args.seed)
+
+
+if __name__ == "__main__":
+    main()

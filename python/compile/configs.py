@@ -1,0 +1,89 @@
+"""Tiny-LMM architecture constants and AOT shape buckets.
+
+These MUST stay in sync with `ModelId::TinyLmm` in rust/src/model/spec.rs
+and with rust/src/runtime/artifacts.rs, which reads the manifest emitted by
+aot.py.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class VisionConfig:
+    """ViT-style encoder: 64x64 RGB images, 8x8 patches."""
+
+    image_px: int = 64
+    patch_px: int = 8
+    channels: int = 3
+    hidden: int = 128
+    layers: int = 2
+    heads: int = 4
+    mlp_ratio: int = 4
+    # Tokens emitted to the LLM per image tile (resampler output).
+    out_tokens: int = 16
+
+    @property
+    def grid(self) -> int:
+        return self.image_px // self.patch_px  # 8
+
+    @property
+    def num_patches(self) -> int:
+        return self.grid * self.grid  # 64
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch_px * self.patch_px * self.channels  # 192
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads  # 32
+
+    @property
+    def pool(self) -> int:
+        """Patches pooled into one output token."""
+        return self.num_patches // self.out_tokens  # 4
+
+
+@dataclass(frozen=True)
+class LlmConfig:
+    """Decoder-only LM."""
+
+    hidden: int = 256
+    layers: int = 4
+    heads: int = 8
+    vocab: int = 512
+    max_seq: int = 512
+    mlp_ratio: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads  # 32
+
+
+@dataclass(frozen=True)
+class Buckets:
+    """Static-shape buckets compiled to separate HLO artifacts."""
+
+    # Encoder batch sizes (tiles per invocation).
+    encode_tiles: tuple = (1, 2, 4, 8, 16)
+    # Prefill: images-per-request buckets; token length is derived.
+    prefill_images: tuple = (1, 2, 4, 8)
+    # Max text tokens (incl. BOS) padded into every prefill bucket.
+    prefill_text: int = 32
+    # Decode batch sizes.
+    decode_batch: tuple = (1, 2, 4, 8)
+
+    def prefill_tokens(self, images: int, vis: VisionConfig) -> int:
+        """Total padded sequence length of a prefill bucket."""
+        return self.prefill_text + images * vis.out_tokens
+
+
+VISION = VisionConfig()
+LLM = LlmConfig()
+BUCKETS = Buckets()
+
+# Control token ids (mirror rust/src/model/tokenizer.rs).
+BOS = 256
+EOS = 257
+IMAGE_PLACEHOLDER = 258
+PAD = 259

@@ -1,0 +1,138 @@
+"""L1: fused multi-head attention as a Pallas kernel (flash-attention
+style online softmax).
+
+TPU adaptation of the paper's CUDA hot path (DESIGN.md §Hardware-
+Adaptation): instead of warp-level softmax reductions over shared-memory
+tiles, the grid is (heads, query-blocks); each program holds one query
+block in VMEM via `BlockSpec`, streams the K/V sequence in `BLOCK_K`-sized
+chunks, and maintains the running max / normalizer of the online softmax
+in registers. QKᵀ and PV products map to the MXU.
+
+Kernels are lowered with `interpret=True`: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and the interpret path lowers to plain HLO that the
+rust runtime executes. Correctness vs `ref.attention_ref` is enforced by
+pytest + hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 32
+BLOCK_K = 64
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool, s_len: int,
+                 block_k: int, q_offset_blocks: int):
+    """One (head, q-block) program: online softmax over K/V chunks."""
+    q = q_ref[...].astype(jnp.float32)  # [bq, D]
+    bq, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    q = q * scale
+
+    qi = pl.program_id(1)
+    # Global row index of each query in this block.
+    row = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    num_kb = s_len // block_k
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        k = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+        scores = q @ k.T  # [bq, bk]
+        if causal:
+            col = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_k), 1
+            )
+            mask = col <= row  # queries attend to keys at or before them
+            scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m_prev, scores.max(axis=1, keepdims=True))
+        p = jnp.exp(scores - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=1, keepdims=True)
+        acc = acc * alpha + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq, 1), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, num_kb, body, (acc0, m0, l0))
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+    del q_offset_blocks  # reserved for future paged variants
+
+
+def _pad_to(x, size, axis):
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def attention(q, k, v, causal: bool = False):
+    """Fused attention. q: [T, H, D]; k, v: [S, H, D] -> [T, H, D]."""
+    t, h, d = q.shape
+    s = k.shape[0]
+    bq = min(BLOCK_Q, t)
+    bk = min(BLOCK_K, s)
+    # Pad sequence dims to block multiples (interpret path requires exact
+    # tiling; padded key columns are masked out by construction only in the
+    # causal case, so pad K with NEG_INF-producing zeros and rely on the
+    # fact that padded *queries* are discarded and padded *keys* only occur
+    # beyond s, handled by masking below through causal or explicit trim).
+    t_pad = (t + bq - 1) // bq * bq
+    s_pad = (s + bk - 1) // bk * bk
+
+    # For non-causal attention padded keys would corrupt the softmax; mask
+    # them by padding K with a large negative sentinel is not possible
+    # (it enters via dot products). Instead require exact tiling for the
+    # non-causal path and pad only queries.
+    if not causal and s_pad != s:
+        bk = _largest_divisor(s, BLOCK_K)
+        s_pad = s
+
+    qp = _pad_to(q, t_pad, 0)
+    kp = _pad_to(k, s_pad, 0)
+    vp = _pad_to(v, s_pad, 0)
+
+    grid = (h, t_pad // bq)
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel,
+            causal=causal,
+            s_len=s_pad,
+            block_k=bk,
+            q_offset_blocks=0,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda hh, qi: (hh, qi, 0)),
+            pl.BlockSpec((None, s_pad, d), lambda hh, qi: (hh, 0, 0)),
+            pl.BlockSpec((None, s_pad, d), lambda hh, qi: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda hh, qi: (hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t_pad, d), q.dtype),
+        interpret=True,
+    )(
+        jnp.swapaxes(qp, 0, 1),  # [H, T, D]
+        jnp.swapaxes(kp, 0, 1),
+        jnp.swapaxes(vp, 0, 1),
+    )
+    out = jnp.swapaxes(out, 0, 1)[:t]
+    return out
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    for b in range(min(n, cap), 0, -1):
+        if n % b == 0:
+            return b
+    return 1

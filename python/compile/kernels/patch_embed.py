@@ -1,0 +1,46 @@
+"""L1: patch-embedding projection as a Pallas matmul kernel.
+
+The conv-style patch projection is expressed as one MXU matmul
+`[N, patch_dim] x [patch_dim, D]` (im2col done by free XLA reshapes in the
+caller). The grid tiles N so each program's A-block plus the whole weight
+panel fit in VMEM; at production sizes the weight panel would be double-
+buffered across the K dimension.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 64
+
+
+def _patch_embed_kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # [bn, P]
+    w = w_ref[...].astype(jnp.float32)  # [P, D]
+    b = b_ref[...].astype(jnp.float32)  # [1, D]
+    o_ref[...] = (x @ w + b).astype(o_ref.dtype)
+
+
+@jax.jit
+def patch_embed(x, w, b):
+    """[N, P] @ [P, D] + [D] -> [N, D] via a tiled Pallas matmul."""
+    n, p = x.shape
+    d = w.shape[1]
+    bn = min(BLOCK_N, n)
+    n_pad = (n + bn - 1) // bn * bn
+    xp = jnp.pad(x, ((0, n_pad - n), (0, 0))) if n_pad != n else x
+    out = pl.pallas_call(
+        _patch_embed_kernel,
+        grid=(n_pad // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, p), lambda i: (i, 0)),
+            pl.BlockSpec((p, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), x.dtype),
+        interpret=True,
+    )(xp, w, b.reshape(1, d))
+    return out[:n]

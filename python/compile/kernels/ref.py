@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+asserts allclose between the two across shapes/dtypes (see
+python/tests/test_kernels.py). The references are deliberately naive —
+clarity over speed.
+"""
+
+import jax.numpy as jnp
+
+
+def patch_embed_ref(x, w, b):
+    """[N, P] @ [P, D] + [D] -> [N, D]."""
+    return x @ w + b
+
+
+def attention_ref(q, k, v, causal: bool):
+    """Multi-head attention.
+
+    q: [T, H, D], k/v: [S, H, D] -> [T, H, D]. Softmax over S per head,
+    optional causal mask (valid only when T == S up to an offset).
+    """
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    # [H, T, S]
+    scores = jnp.einsum("thd,shd->hts", qf, kf) * scale
+    if causal:
+        t = q.shape[0]
+        s = k.shape[0]
+        mask = jnp.tril(jnp.ones((t, s), dtype=bool), k=s - t)
+        scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hts,shd->thd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lens):
+    """Single-token decode attention against a padded KV cache.
+
+    q: [B, H, D]; k/v: [B, H, S, D]; lens: [B] (valid KV length per seq).
+    Returns [B, H, D].
+    """
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.einsum("bhd,bhsd->bhs", qf, kf) * scale  # [B, H, S]
+    s = k.shape[2]
+    mask = jnp.arange(s)[None, None, :] < lens[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhs,bhsd->bhd", probs, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,279 @@
+"""L2: the tiny-LMM compute graphs (encode / prefill / decode) in JAX.
+
+Three jittable functions mirror the paper's pipeline stages:
+
+- ``encode_fn``:  image tiles -> multimodal tokens (the MME).
+- ``prefill_fn``: prompt tokens + MM tokens -> KV cache + last logits.
+- ``decode_fn``:  one token per sequence + KV cache -> next logits + KV.
+
+All attention flows through the L1 Pallas kernels. Parameters are passed
+as a flat ``{name: array}`` dict; JAX flattens dicts in sorted-key order,
+which fixes the HLO parameter order the rust runtime relies on (see
+aot.py's manifest).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import BUCKETS, LLM, VISION, PAD
+from .kernels.attention import attention
+from .kernels.decode_attention import decode_attention
+from .kernels.patch_embed import patch_embed
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(seed: int = 0):
+    """Deterministic parameter dict for the tiny-LMM."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+
+    def add(name, shape, scale=None):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        if scale is None:
+            scale = 1.0 / jnp.sqrt(jnp.asarray(shape[0], jnp.float32))
+        params[name] = (jax.random.normal(sub, shape, jnp.float32) * scale)
+
+    v, l = VISION, LLM
+    # Vision encoder.
+    add("vis.patch_w", (v.patch_dim, v.hidden))
+    add("vis.patch_b", (v.hidden,), scale=0.0)
+    add("vis.pos", (v.num_patches, v.hidden), scale=0.02)
+    for i in range(v.layers):
+        p = f"vis.l{i}."
+        add(p + "qkv_w", (v.hidden, 3 * v.hidden))
+        add(p + "qkv_b", (3 * v.hidden,), scale=0.0)
+        add(p + "o_w", (v.hidden, v.hidden))
+        add(p + "o_b", (v.hidden,), scale=0.0)
+        add(p + "mlp1_w", (v.hidden, v.mlp_ratio * v.hidden))
+        add(p + "mlp1_b", (v.mlp_ratio * v.hidden,), scale=0.0)
+        add(p + "mlp2_w", (v.mlp_ratio * v.hidden, v.hidden))
+        add(p + "mlp2_b", (v.hidden,), scale=0.0)
+        add(p + "ln1_g", (v.hidden,), scale=0.0)
+        add(p + "ln2_g", (v.hidden,), scale=0.0)
+    # Resampler: pool groups of patches, project into LLM space.
+    add("vis.proj_w", (v.pool * v.hidden, l.hidden))
+    add("vis.proj_b", (l.hidden,), scale=0.0)
+
+    # LLM.
+    add("llm.embed", (l.vocab, l.hidden), scale=0.02)
+    add("llm.pos", (l.max_seq, l.hidden), scale=0.02)
+    for i in range(l.layers):
+        p = f"llm.l{i}."
+        add(p + "qkv_w", (l.hidden, 3 * l.hidden))
+        add(p + "qkv_b", (3 * l.hidden,), scale=0.0)
+        add(p + "o_w", (l.hidden, l.hidden))
+        add(p + "o_b", (l.hidden,), scale=0.0)
+        add(p + "mlp1_w", (l.hidden, l.mlp_ratio * l.hidden))
+        add(p + "mlp1_b", (l.mlp_ratio * l.hidden,), scale=0.0)
+        add(p + "mlp2_w", (l.mlp_ratio * l.hidden, l.hidden))
+        add(p + "mlp2_b", (l.hidden,), scale=0.0)
+        add(p + "ln1_g", (l.hidden,), scale=0.0)
+        add(p + "ln2_g", (l.hidden,), scale=0.0)
+    add("llm.ln_f_g", (l.hidden,), scale=0.0)
+    # Tied-ish but separate head for clarity.
+    add("llm.head_w", (l.hidden, l.vocab))
+    return params
+
+
+def _ln(x, gain):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * (1.0 + gain)
+
+
+# --------------------------------------------------------------------------
+# Encoder (MME)
+# --------------------------------------------------------------------------
+
+def encode_fn(params, patches):
+    """Encode image tiles.
+
+    patches: [N, num_patches, patch_dim] -> MM tokens [N, out_tokens, llm_hidden].
+    """
+    v = VISION
+    n = patches.shape[0]
+    x = patch_embed(
+        patches.reshape(n * v.num_patches, v.patch_dim),
+        params["vis.patch_w"],
+        params["vis.patch_b"],
+    ).reshape(n, v.num_patches, v.hidden)
+    x = x + params["vis.pos"][None]
+
+    for i in range(v.layers):
+        p = f"vis.l{i}."
+        h = _ln(x, params[p + "ln1_g"])
+        qkv = h @ params[p + "qkv_w"] + params[p + "qkv_b"]
+        q, k, val = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(n, v.num_patches, v.heads, v.head_dim)
+
+        # Full (non-causal) attention within each tile, via the Pallas
+        # kernel, vmapped over tiles.
+        att = jax.vmap(lambda qq, kk, vv: attention(qq, kk, vv, causal=False))(
+            heads(q), heads(k), heads(val)
+        )
+        att = att.reshape(n, v.num_patches, v.hidden)
+        x = x + att @ params[p + "o_w"] + params[p + "o_b"]
+        h = _ln(x, params[p + "ln2_g"])
+        h = jax.nn.gelu(h @ params[p + "mlp1_w"] + params[p + "mlp1_b"])
+        x = x + h @ params[p + "mlp2_w"] + params[p + "mlp2_b"]
+
+    # Resampler: group `pool` adjacent patches -> one LLM token.
+    x = x.reshape(n, v.out_tokens, v.pool * v.hidden)
+    return x @ params["vis.proj_w"] + params["vis.proj_b"]
+
+
+# --------------------------------------------------------------------------
+# Prefill
+# --------------------------------------------------------------------------
+
+def prefill_fn(params, tokens, mm, length):
+    """Prefill one sequence.
+
+    tokens: [T] int32 — layout [BOS, <M image slots>, text..., PAD...].
+    mm:     [M, hidden] — encoder output spliced into positions 1..1+M.
+    length: [] int32 — true sequence length (1 + M + text tokens).
+
+    Returns (logits [vocab], kv [layers, 2, heads, max_seq, head_dim]).
+    """
+    l = LLM
+    t = tokens.shape[0]
+    m = mm.shape[0]
+
+    emb = params["llm.embed"][tokens]  # [T, H]
+    emb = jnp.concatenate([emb[:1], mm, emb[1 + m:]], axis=0)
+    x = emb + params["llm.pos"][:t]
+
+    kv_layers = []
+    for i in range(l.layers):
+        p = f"llm.l{i}."
+        h = _ln(x, params[p + "ln1_g"])
+        qkv = h @ params[p + "qkv_w"] + params[p + "qkv_b"]
+        q, k, val = jnp.split(qkv, 3, axis=-1)
+
+        def heads(tensor):
+            return tensor.reshape(t, l.heads, l.head_dim)
+
+        att = attention(heads(q), heads(k), heads(val), causal=True)
+        att = att.reshape(t, l.hidden)
+        x = x + att @ params[p + "o_w"] + params[p + "o_b"]
+        h = _ln(x, params[p + "ln2_g"])
+        h = jax.nn.gelu(h @ params[p + "mlp1_w"] + params[p + "mlp1_b"])
+        x = x + h @ params[p + "mlp2_w"] + params[p + "mlp2_b"]
+
+        # KV padded to max_seq for direct use by the decode bucket.
+        k_pad = jnp.zeros((l.heads, l.max_seq, l.head_dim), jnp.float32)
+        v_pad = jnp.zeros((l.heads, l.max_seq, l.head_dim), jnp.float32)
+        k_pad = k_pad.at[:, :t].set(jnp.swapaxes(heads(k), 0, 1))
+        v_pad = v_pad.at[:, :t].set(jnp.swapaxes(heads(val), 0, 1))
+        kv_layers.append(jnp.stack([k_pad, v_pad]))
+
+    kv = jnp.stack(kv_layers)  # [L, 2, H, S, D]
+    x = _ln(x, params["llm.ln_f_g"])
+    last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=0)[0]
+    logits = last @ params["llm.head_w"]
+    return logits, kv
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def decode_fn(params, token, kv, cur_len):
+    """One decode step for a batch.
+
+    token:   [B] int32 — current input token per sequence.
+    kv:      [L, 2, B, H, S, D] — running KV cache.
+    cur_len: [B] int32 — tokens already in the cache per sequence.
+
+    Returns (logits [B, vocab], new_kv).
+    """
+    l = LLM
+    b = token.shape[0]
+
+    x = params["llm.embed"][token] + params["llm.pos"][cur_len]  # [B, H]
+
+    new_layers = []
+    for i in range(l.layers):
+        p = f"llm.l{i}."
+        h = _ln(x, params[p + "ln1_g"])
+        qkv = h @ params[p + "qkv_w"] + params[p + "qkv_b"]
+        q, k, val = jnp.split(qkv, 3, axis=-1)
+        qh = q.reshape(b, l.heads, l.head_dim)
+        kh = k.reshape(b, l.heads, l.head_dim)
+        vh = val.reshape(b, l.heads, l.head_dim)
+
+        # Write this step's K/V at position cur_len (per sequence).
+        def write(cache, new):
+            # cache: [B, H, S, D]; new: [B, H, D].
+            def one(c, n_, pos):
+                return jax.lax.dynamic_update_slice(c, n_[:, None, :], (0, pos, 0))
+
+            return jax.vmap(one)(cache, new, cur_len)
+
+        k_cache = write(kv[i, 0], kh)
+        v_cache = write(kv[i, 1], vh)
+        new_layers.append(jnp.stack([k_cache, v_cache]))
+
+        att = decode_attention(qh, k_cache, v_cache, cur_len + 1)  # [B, H, D]
+        att = att.reshape(b, l.hidden)
+        x = x + att @ params[p + "o_w"] + params[p + "o_b"]
+        h = _ln(x, params[p + "ln2_g"])
+        h = jax.nn.gelu(h @ params[p + "mlp1_w"] + params[p + "mlp1_b"])
+        x = x + h @ params[p + "mlp2_w"] + params[p + "mlp2_b"]
+
+    new_kv = jnp.stack(new_layers)
+    x = _ln(x, params["llm.ln_f_g"])
+    logits = x @ params["llm.head_w"]
+    return logits, new_kv
+
+
+def decode_state_len(batch: int) -> int:
+    """Flat f32 length of the fused decode state: [logits | kv]."""
+    l = LLM
+    return batch * l.vocab + l.layers * 2 * batch * l.heads * l.max_seq * l.head_dim
+
+
+def decode_fused_fn(params, token, state, cur_len):
+    """Decode step over a *fused* state vector.
+
+    ``state`` is ``concat(prev_logits.flatten(), kv.flatten())`` — a single
+    f32 array, so the lowered HLO has a non-tuple root and the rust runtime
+    can keep one device-resident buffer across steps, reading back only the
+    logits prefix each step (rust/src/runtime/tiny_lmm.rs).
+    """
+    l = LLM
+    b = token.shape[0]
+    kv = state[b * l.vocab :].reshape(
+        l.layers, 2, b, l.heads, l.max_seq, l.head_dim
+    )
+    logits, new_kv = decode_fn(params, token, kv, cur_len)
+    return jnp.concatenate([logits.reshape(-1), new_kv.reshape(-1)])
+
+
+# --------------------------------------------------------------------------
+# Host-side helpers (build-time + tests only)
+# --------------------------------------------------------------------------
+
+def make_patches(images):
+    """[N, 64, 64, 3] uint8/float -> [N, num_patches, patch_dim] f32."""
+    v = VISION
+    n = images.shape[0]
+    x = jnp.asarray(images, jnp.float32) / 255.0
+    x = x.reshape(n, v.grid, v.patch_px, v.grid, v.patch_px, v.channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(n, v.num_patches, v.patch_dim)
+
+
+def pad_tokens(tokens, images: int):
+    """Pad a [BOS, placeholders, text] token list to its prefill bucket."""
+    t_bucket = BUCKETS.prefill_tokens(images, VISION)
+    out = list(tokens)[:t_bucket]
+    length = len(out)
+    out = out + [PAD] * (t_bucket - length)
+    return jnp.asarray(out, jnp.int32), jnp.asarray(length, jnp.int32)

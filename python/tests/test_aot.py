@@ -1,0 +1,80 @@
+"""AOT path: lowered HLO text is well-formed and the manifest is complete.
+
+Full lowering of every bucket happens in `make artifacts`; here we lower a
+single representative of each stage (fast) and validate structure, then
+check the manifest written by a real build when artifacts/ exists.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+from compile.configs import BUCKETS, LLM, VISION
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(0)
+
+
+def entry_param_count(text: str) -> int:
+    """Parameters of the ENTRY computation (nested reducers also declare
+    parameters, so a global count would overcount)."""
+    entry = text[text.index("\nENTRY") :]
+    entry = entry[: entry.index("\n}")]
+    return entry.count("parameter(")
+
+
+def test_hlo_text_well_formed_encode(params):
+    text = aot.lower_encode(params, tiles=1)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # Weights (69) + 1 runtime input (keep_unused=True keeps all weights).
+    assert entry_param_count(text) == 70
+
+
+def test_hlo_text_well_formed_prefill(params):
+    text = aot.lower_prefill(params, images=1)
+    assert "HloModule" in text
+    # Weights + tokens + mm + length.
+    assert entry_param_count(text) == 72
+    # Output is a tuple (logits, kv).
+    assert "tuple(" in text
+
+
+def test_hlo_text_well_formed_decode(params):
+    text = aot.lower_decode(params, batch=2)
+    assert "HloModule" in text
+    assert entry_param_count(text) == 72
+
+
+def test_full_build_manifest(tmp_path):
+    manifest = aot.build(str(tmp_path), seed=0, quiet=True)
+    # Weight table covers all parameters, contiguous offsets.
+    names = sorted(p for p in model.init_params(0))
+    assert [w["name"] for w in manifest["weights"]] == names
+    offset = 0
+    for w in manifest["weights"]:
+        assert w["offset"] == offset
+        offset += w["size_bytes"]
+    assert os.path.getsize(tmp_path / "weights.bin") == offset
+
+    # Every bucket has an artifact on disk.
+    arts = manifest["artifacts"]
+    assert len(arts["encode"]) == len(BUCKETS.encode_tiles)
+    assert len(arts["prefill"]) == len(BUCKETS.prefill_images)
+    assert len(arts["decode"]) == len(BUCKETS.decode_batch)
+    for group in arts.values():
+        for a in group:
+            assert (tmp_path / a["file"]).exists()
+
+    # Config mirrors the dataclasses (the rust runtime validates these).
+    assert manifest["config"]["llm"]["vocab"] == LLM.vocab
+    assert manifest["config"]["vision"]["out_tokens"] == VISION.out_tokens
+
+    # Manifest is valid JSON on disk.
+    with open(tmp_path / "manifest.json") as f:
+        loaded = json.load(f)
+    assert loaded["format_version"] == 1

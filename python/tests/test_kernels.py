@@ -1,0 +1,162 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Fixed-shape spot checks plus hypothesis sweeps over shapes and dtypes —
+the CORE correctness signal for the compute layer (everything the rust
+engine executes flows through these kernels).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.patch_embed import patch_embed
+
+RNG = np.random.default_rng(1234)
+
+
+def randn(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def assert_close(a, b, dtype=jnp.float32):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32),
+        np.asarray(b, np.float32),
+        rtol=TOL[dtype],
+        atol=TOL[dtype] * 10,
+    )
+
+
+# ---------------------------------------------------------------- attention
+
+@pytest.mark.parametrize("t,h,d", [(16, 2, 16), (48, 4, 32), (64, 8, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_attention_matches_ref(t, h, d, causal):
+    q, k, v = randn((t, h, d)), randn((t, h, d)), randn((t, h, d))
+    assert_close(attention(q, k, v, causal=causal), ref.attention_ref(q, k, v, causal))
+
+
+def test_attention_cross_lengths_non_causal():
+    q = randn((8, 2, 16))
+    k = randn((24, 2, 16))
+    v = randn((24, 2, 16))
+    assert_close(attention(q, k, v, causal=False), ref.attention_ref(q, k, v, False))
+
+
+def test_attention_causal_first_token_sees_only_itself():
+    t, h, d = 8, 2, 16
+    q, k = randn((t, h, d)), randn((t, h, d))
+    v = randn((t, h, d))
+    out = attention(q, k, v, causal=True)
+    # Row 0 attends only to position 0 → output == v[0].
+    assert_close(out[0], v[0])
+
+
+def test_attention_bfloat16():
+    q = randn((32, 4, 32), jnp.bfloat16)
+    k = randn((32, 4, 32), jnp.bfloat16)
+    v = randn((32, 4, 32), jnp.bfloat16)
+    assert_close(
+        attention(q, k, v, causal=True),
+        ref.attention_ref(q, k, v, True),
+        jnp.bfloat16,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 96),
+    h=st.sampled_from([1, 2, 4, 8]),
+    d=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_hypothesis(t, h, d, causal, seed):
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.normal(size=(t, h, d)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(t, h, d)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(t, h, d)), jnp.float32)
+    assert_close(attention(q, k, v, causal=causal), ref.attention_ref(q, k, v, causal))
+
+
+# ---------------------------------------------------------- decode attention
+
+@pytest.mark.parametrize("b,h,s,d", [(1, 2, 32, 16), (4, 8, 512, 32)])
+def test_decode_attention_matches_ref(b, h, s, d):
+    q = randn((b, h, d))
+    k = randn((b, h, s, d))
+    v = randn((b, h, s, d))
+    lens = jnp.asarray(RNG.integers(1, s + 1, size=(b,)), jnp.int32)
+    assert_close(decode_attention(q, k, v, lens), ref.decode_attention_ref(q, k, v, lens))
+
+
+def test_decode_attention_masks_padded_tail():
+    # Garbage beyond `lens` must not affect the output.
+    b, h, s, d = 2, 4, 64, 16
+    q = randn((b, h, d))
+    k = randn((b, h, s, d))
+    v = randn((b, h, s, d))
+    lens = jnp.asarray([10, 20], jnp.int32)
+    out1 = decode_attention(q, k, v, lens)
+    k2 = k.at[:, :, 32:].set(1e6)
+    v2 = v.at[:, :, 32:].set(-1e6)
+    out2 = decode_attention(q, k2, v2, lens)
+    assert_close(out1, out2)
+
+
+def test_decode_attention_len1_returns_v0():
+    b, h, s, d = 1, 2, 16, 8
+    q = randn((b, h, d))
+    k = randn((b, h, s, d))
+    v = randn((b, h, s, d))
+    out = decode_attention(q, k, v, jnp.asarray([1], jnp.int32))
+    assert_close(out[0], v[0, :, 0, :])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    h=st.sampled_from([2, 8]),
+    s=st.sampled_from([16, 64, 512]),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_attention_hypothesis(b, h, s, seed):
+    d = 32
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.normal(size=(b, h, d)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b, h, s, d)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, h, s, d)), jnp.float32)
+    lens = jnp.asarray(r.integers(1, s + 1, size=(b,)), jnp.int32)
+    assert_close(decode_attention(q, k, v, lens), ref.decode_attention_ref(q, k, v, lens))
+
+
+# --------------------------------------------------------------- patch embed
+
+@pytest.mark.parametrize("n", [1, 63, 64, 65, 256])
+def test_patch_embed_matches_ref(n):
+    x = randn((n, 192))
+    w = randn((192, 128))
+    b = randn((128,))
+    assert_close(patch_embed(x, w, b), ref.patch_embed_ref(x, w, b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    p=st.sampled_from([16, 64, 192]),
+    d=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_patch_embed_hypothesis(n, p, d, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(n, p)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(p, d)), jnp.float32)
+    b = jnp.asarray(r.normal(size=(d,)), jnp.float32)
+    assert_close(patch_embed(x, w, b), ref.patch_embed_ref(x, w, b))

@@ -1,0 +1,152 @@
+"""L2 correctness: tiny-LMM stage graphs compose — prefill+decode must be
+exactly consistent with running the whole sequence through prefill."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import BOS, BUCKETS, IMAGE_PLACEHOLDER, LLM, PAD, VISION
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(0)
+
+
+def mm_for(params, n_images, seed=7):
+    rng = np.random.default_rng(seed)
+    imgs = rng.integers(0, 255, size=(n_images, 64, 64, 3))
+    mm = model.encode_fn(params, model.make_patches(imgs))
+    return mm.reshape(-1, LLM.hidden)
+
+
+def test_encode_shapes(params):
+    for n in [1, 2, 4]:
+        mm = mm_for(params, n)
+        assert mm.shape == (n * VISION.out_tokens, LLM.hidden)
+        assert bool(jnp.isfinite(mm).all())
+
+
+def test_encode_deterministic(params):
+    a = mm_for(params, 2, seed=3)
+    b = mm_for(params, 2, seed=3)
+    assert bool(jnp.array_equal(a, b))
+
+
+def test_encode_tiles_independent(params):
+    """IRP's premise: tiles encode independently, so encoding a batch must
+    equal encoding each tile separately (modulo exact fp determinism)."""
+    rng = np.random.default_rng(11)
+    imgs = rng.integers(0, 255, size=(4, 64, 64, 3))
+    patches = model.make_patches(imgs)
+    full = model.encode_fn(params, patches)
+    parts = jnp.concatenate(
+        [model.encode_fn(params, patches[i : i + 1]) for i in range(4)], axis=0
+    )
+    np.testing.assert_allclose(np.asarray(full), np.asarray(parts), rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_shapes_and_finite(params):
+    mm = mm_for(params, 2)
+    toks = [BOS] + [IMAGE_PLACEHOLDER] * 32 + list(b"what is this?")
+    tok, ln = model.pad_tokens(toks, 2)
+    logits, kv = model.prefill_fn(params, tok, mm, ln)
+    assert logits.shape == (LLM.vocab,)
+    assert kv.shape == (LLM.layers, 2, LLM.heads, LLM.max_seq, LLM.head_dim)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_prefill_ignores_padding(params):
+    """Changing PAD tokens beyond `length` must not change the logits."""
+    mm = mm_for(params, 1)
+    toks = [BOS] + [IMAGE_PLACEHOLDER] * 16 + list(b"hi")
+    tok, ln = model.pad_tokens(toks, 1)
+    logits1, _ = model.prefill_fn(params, tok, mm, ln)
+    tok2 = tok.at[int(ln) :].set(7)  # overwrite padding with a real token id
+    logits2, _ = model.prefill_fn(params, tok2, mm, ln)
+    np.testing.assert_allclose(np.asarray(logits1), np.asarray(logits2), rtol=1e-5)
+
+
+def test_prefill_decode_consistency(params):
+    """Greedy continuation via decode steps == prefill of the longer prompt.
+
+    This is the end-to-end guarantee the serving engine relies on: the KV
+    cache handed from P to D must produce identical next-token logits to
+    recomputing from scratch.
+    """
+    mm = mm_for(params, 1)
+    text = list(b"abc")
+    toks = [BOS] + [IMAGE_PLACEHOLDER] * 16 + text
+    tok, ln = model.pad_tokens(toks, 1)
+    logits, kv = model.prefill_fn(params, tok, mm, ln)
+    next_tok = int(jnp.argmax(logits))
+
+    # Path A: one decode step from the prefill KV.
+    kvb = kv[:, :, None]  # [L, 2, 1, H, S, D]
+    lg_dec, _ = model.decode_fn(
+        params, jnp.asarray([next_tok], jnp.int32), kvb, jnp.asarray([int(ln)], jnp.int32)
+    )
+
+    # Path B: prefill the prompt extended by next_tok (same bucket, fits
+    # within padding).
+    toks_b = toks + [next_tok]
+    tok_b, ln_b = model.pad_tokens(toks_b, 1)
+    lg_pf, _ = model.prefill_fn(params, tok_b, mm, ln_b)
+
+    np.testing.assert_allclose(
+        np.asarray(lg_dec[0]), np.asarray(lg_pf), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_decode_batch_slots_independent(params):
+    """Sequences in a decode batch must not leak into each other."""
+    mm = mm_for(params, 1)
+    toks = [BOS] + [IMAGE_PLACEHOLDER] * 16 + list(b"xy")
+    tok, ln = model.pad_tokens(toks, 1)
+    _, kv = model.prefill_fn(params, tok, mm, ln)
+
+    kv2 = jnp.stack([kv, kv], axis=2)
+    lens = jnp.asarray([int(ln), int(ln)], jnp.int32)
+    t_same = jnp.asarray([65, 65], jnp.int32)
+    lg_same, _ = model.decode_fn(params, t_same, kv2, lens)
+
+    # Perturb slot 1's token; slot 0's logits must be unchanged.
+    t_diff = jnp.asarray([65, 90], jnp.int32)
+    lg_diff, _ = model.decode_fn(params, t_diff, kv2, lens)
+    np.testing.assert_allclose(np.asarray(lg_same[0]), np.asarray(lg_diff[0]), rtol=1e-5)
+    assert not np.allclose(np.asarray(lg_same[1]), np.asarray(lg_diff[1]))
+
+
+def test_decode_kv_grows_at_cur_len(params):
+    mm = mm_for(params, 1)
+    toks = [BOS] + [IMAGE_PLACEHOLDER] * 16 + list(b"z")
+    tok, ln = model.pad_tokens(toks, 1)
+    _, kv = model.prefill_fn(params, tok, mm, ln)
+    kvb = kv[:, :, None]
+    pos = int(ln)
+    t_bucket = BUCKETS.prefill_tokens(1, VISION)
+    # Prefill fills the whole padded bucket; beyond it the cache is zero.
+    assert float(jnp.abs(kvb[:, :, :, :, t_bucket:]).max()) == 0.0
+    before = kvb[:, :, :, :, pos]
+    _, kv_new = model.decode_fn(
+        params, jnp.asarray([65], jnp.int32), kvb, jnp.asarray([pos], jnp.int32)
+    )
+    after = kv_new[:, :, :, :, pos]
+    # The step overwrites the (padded) slot at cur_len with real K/V...
+    assert not np.allclose(np.asarray(before), np.asarray(after))
+    # ...and leaves every other slot untouched.
+    mask = np.ones(kv_new.shape[4], dtype=bool)
+    mask[pos] = False
+    np.testing.assert_array_equal(
+        np.asarray(kv_new)[:, :, :, :, mask], np.asarray(kvb)[:, :, :, :, mask]
+    )
+
+
+def test_pad_tokens_buckets():
+    for n in BUCKETS.prefill_images:
+        toks = [BOS] + [IMAGE_PLACEHOLDER] * (16 * n) + list(b"q")
+        tok, ln = model.pad_tokens(toks, n)
+        assert tok.shape[0] == BUCKETS.prefill_tokens(n, VISION)
+        assert int(ln) == len(toks)
+        assert int(tok[-1]) == PAD or int(ln) == tok.shape[0]

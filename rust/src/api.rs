@@ -1,0 +1,89 @@
+//! HTTP API types: OpenAI-flavoured request/response JSON (App. E: "the
+//! API interface adheres to OpenAI's multimodal specifications").
+
+use crate::util::json::Json;
+
+/// Parsed body of `POST /v1/completions`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompletionRequest {
+    pub prompt: String,
+    /// Number of synthetic images attached (stand-in for image payloads).
+    pub images: u32,
+    pub max_tokens: u32,
+    pub seed: u64,
+}
+
+impl CompletionRequest {
+    pub fn from_json(j: &Json) -> anyhow::Result<CompletionRequest> {
+        Ok(CompletionRequest {
+            prompt: j
+                .get("prompt")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            images: j.get("images").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+            max_tokens: j
+                .get("max_tokens")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(16)
+                .clamp(1, 256) as u32,
+            seed: j.get("seed").and_then(|v| v.as_u64()).unwrap_or(0),
+        })
+    }
+}
+
+/// Body of the completion response.
+pub fn completion_response(id: u64, text: &str, tokens: usize, ttft: f64, latency: f64) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("object", Json::str("text_completion")),
+        ("text", Json::str(text)),
+        ("usage", Json::obj(vec![("completion_tokens", Json::num(tokens as f64))])),
+        ("ttft_s", Json::num(ttft)),
+        ("latency_s", Json::num(latency)),
+    ])
+}
+
+/// Error body.
+pub fn error_response(msg: &str) -> Json {
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![("message", Json::str(msg))]),
+    )])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_request() {
+        let j = Json::parse(r#"{"prompt":"hi","images":4,"max_tokens":32,"seed":7}"#).unwrap();
+        let r = CompletionRequest::from_json(&j).unwrap();
+        assert_eq!(r.prompt, "hi");
+        assert_eq!(r.images, 4);
+        assert_eq!(r.max_tokens, 32);
+        assert_eq!(r.seed, 7);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let j = Json::parse("{}").unwrap();
+        let r = CompletionRequest::from_json(&j).unwrap();
+        assert_eq!(r.images, 0);
+        assert_eq!(r.max_tokens, 16);
+    }
+
+    #[test]
+    fn max_tokens_clamped() {
+        let j = Json::parse(r#"{"max_tokens":100000}"#).unwrap();
+        assert_eq!(CompletionRequest::from_json(&j).unwrap().max_tokens, 256);
+    }
+
+    #[test]
+    fn response_shape() {
+        let j = completion_response(3, "out", 5, 0.1, 0.5);
+        assert_eq!(j.get("text").unwrap().as_str(), Some("out"));
+        assert!(j.get("usage").unwrap().get("completion_tokens").is_some());
+    }
+}

@@ -1,0 +1,178 @@
+//! The shared block pool: a fixed number of fixed-size blocks with an O(1)
+//! free-list allocator. Underlies both the KV and MM block managers.
+
+/// Index of a cache block within a pool.
+pub type BlockId = u32;
+
+/// A pool of `num_blocks` equally-sized blocks.
+///
+/// Invariants (checked by the property tests in `tests/`):
+/// - every block is either free or allocated, never both;
+/// - `free_blocks() + allocated_blocks() == num_blocks()` always;
+/// - a block returned by [`BlockPool::alloc`] is not handed out again until
+///   freed.
+#[derive(Debug, Clone)]
+pub struct BlockPool {
+    num_blocks: u32,
+    block_tokens: u32,
+    /// Free-list as a stack of block ids.
+    free: Vec<BlockId>,
+    /// Allocation bitmap for debug validation.
+    allocated: Vec<bool>,
+}
+
+impl BlockPool {
+    /// Create a pool of `num_blocks` blocks of `block_tokens` tokens each.
+    pub fn new(num_blocks: u32, block_tokens: u32) -> BlockPool {
+        assert!(block_tokens > 0);
+        BlockPool {
+            num_blocks,
+            block_tokens,
+            free: (0..num_blocks).rev().collect(),
+            allocated: vec![false; num_blocks as usize],
+        }
+    }
+
+    pub fn num_blocks(&self) -> u32 {
+        self.num_blocks
+    }
+
+    pub fn block_tokens(&self) -> u32 {
+        self.block_tokens
+    }
+
+    pub fn free_blocks(&self) -> u32 {
+        self.free.len() as u32
+    }
+
+    pub fn allocated_blocks(&self) -> u32 {
+        self.num_blocks - self.free_blocks()
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for_tokens(&self, tokens: u64) -> u32 {
+        tokens.div_ceil(self.block_tokens as u64) as u32
+    }
+
+    /// Can `n` blocks be allocated right now?
+    pub fn can_alloc(&self, n: u32) -> bool {
+        self.free_blocks() >= n
+    }
+
+    /// Allocate one block. `None` when exhausted.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let id = self.free.pop()?;
+        debug_assert!(!self.allocated[id as usize], "double allocation of {id}");
+        self.allocated[id as usize] = true;
+        Some(id)
+    }
+
+    /// Allocate `n` blocks atomically: either all or none.
+    pub fn alloc_n(&mut self, n: u32) -> Option<Vec<BlockId>> {
+        if !self.can_alloc(n) {
+            return None;
+        }
+        Some((0..n).map(|_| self.alloc().unwrap()).collect())
+    }
+
+    /// Return a block to the pool.
+    ///
+    /// # Panics
+    /// On double-free or out-of-range ids — these are always bugs in the
+    /// caller and must not be absorbed silently.
+    pub fn free(&mut self, id: BlockId) {
+        assert!(id < self.num_blocks, "free of out-of-range block {id}");
+        assert!(self.allocated[id as usize], "double free of block {id}");
+        self.allocated[id as usize] = false;
+        self.free.push(id);
+    }
+
+    /// Free a batch of blocks.
+    pub fn free_all(&mut self, ids: &[BlockId]) {
+        for &id in ids {
+            self.free(id);
+        }
+    }
+
+    /// Utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.num_blocks == 0 {
+            return 0.0;
+        }
+        self.allocated_blocks() as f64 / self.num_blocks as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut p = BlockPool::new(4, 16);
+        assert_eq!(p.free_blocks(), 4);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.allocated_blocks(), 2);
+        p.free(a);
+        assert_eq!(p.free_blocks(), 3);
+        let c = p.alloc().unwrap();
+        assert_ne!(c, b, "b is still live");
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut p = BlockPool::new(2, 16);
+        assert!(p.alloc().is_some());
+        assert!(p.alloc().is_some());
+        assert!(p.alloc().is_none());
+        assert!(p.alloc_n(1).is_none());
+    }
+
+    #[test]
+    fn alloc_n_atomic() {
+        let mut p = BlockPool::new(3, 16);
+        assert!(p.alloc_n(4).is_none());
+        assert_eq!(p.free_blocks(), 3, "failed alloc_n must not leak");
+        let blocks = p.alloc_n(3).unwrap();
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(p.free_blocks(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut p = BlockPool::new(2, 16);
+        let a = p.alloc().unwrap();
+        p.free(a);
+        p.free(a);
+    }
+
+    #[test]
+    fn blocks_for_tokens_rounds_up() {
+        let p = BlockPool::new(10, 16);
+        assert_eq!(p.blocks_for_tokens(0), 0);
+        assert_eq!(p.blocks_for_tokens(1), 1);
+        assert_eq!(p.blocks_for_tokens(16), 1);
+        assert_eq!(p.blocks_for_tokens(17), 2);
+    }
+
+    #[test]
+    fn conservation_under_random_ops() {
+        use crate::util::rng::Rng;
+        let mut p = BlockPool::new(64, 16);
+        let mut live: Vec<BlockId> = Vec::new();
+        let mut rng = Rng::new(42);
+        for _ in 0..10_000 {
+            if rng.bool(0.5) && !live.is_empty() {
+                let i = rng.below(live.len() as u64) as usize;
+                p.free(live.swap_remove(i));
+            } else if let Some(b) = p.alloc() {
+                live.push(b);
+            }
+            assert_eq!(p.allocated_blocks() as usize, live.len());
+            assert_eq!(p.free_blocks() + p.allocated_blocks(), 64);
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Paged KV-cache manager: per-request block tables over a [`BlockPool`],
+//! with incremental growth during decode (one block at a time as the
+//! sequence crosses block boundaries) — the vLLM PagedAttention scheme the
+//! paper builds on (§E.1: block size 16, max 2048 blocks/request).
+
+use std::collections::HashMap;
+
+use super::block::{BlockId, BlockPool};
+use crate::core::request::RequestId;
+
+/// KV-cache block manager for one instance.
+#[derive(Debug, Clone)]
+pub struct KvBlockManager {
+    pool: BlockPool,
+    /// Per-request block table and current token count.
+    tables: HashMap<RequestId, KvEntry>,
+    /// §E.1: at most this many blocks per request.
+    max_blocks_per_request: u32,
+}
+
+#[derive(Debug, Clone)]
+struct KvEntry {
+    blocks: Vec<BlockId>,
+    tokens: u64,
+}
+
+impl KvBlockManager {
+    pub fn new(num_blocks: u32, block_tokens: u32, max_blocks_per_request: u32) -> KvBlockManager {
+        KvBlockManager {
+            pool: BlockPool::new(num_blocks, block_tokens),
+            tables: HashMap::new(),
+            max_blocks_per_request,
+        }
+    }
+
+    /// Build a manager sized to `capacity_tokens` of KV cache.
+    pub fn with_capacity_tokens(capacity_tokens: u64, block_tokens: u32) -> KvBlockManager {
+        let blocks = (capacity_tokens / block_tokens as u64) as u32;
+        KvBlockManager::new(blocks, block_tokens, 2048)
+    }
+
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
+    }
+
+    /// Can a sequence of `tokens` tokens be admitted for `req`?
+    pub fn can_admit(&self, tokens: u64) -> bool {
+        let need = self.pool.blocks_for_tokens(tokens);
+        need <= self.max_blocks_per_request && self.pool.can_alloc(need)
+    }
+
+    /// Admit a request with an initial `tokens`-token sequence (prefill
+    /// output). Returns false (and allocates nothing) when it doesn't fit.
+    pub fn admit(&mut self, req: RequestId, tokens: u64) -> bool {
+        assert!(!self.tables.contains_key(&req), "request {req} already admitted");
+        let need = self.pool.blocks_for_tokens(tokens);
+        if need > self.max_blocks_per_request {
+            return false;
+        }
+        match self.pool.alloc_n(need) {
+            Some(blocks) => {
+                self.tables.insert(req, KvEntry { blocks, tokens });
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Append one generated token; allocates a new block when the sequence
+    /// crosses a block boundary. Returns false on OOM or per-request cap
+    /// (caller must preempt/evict).
+    pub fn append_token(&mut self, req: RequestId) -> bool {
+        let block_tokens = self.pool.block_tokens() as u64;
+        // Compute need first to avoid holding a &mut borrow across alloc.
+        let (needs_block, at_cap) = match self.tables.get(&req) {
+            Some(e) => (
+                e.tokens % block_tokens == 0 && e.tokens > 0 || e.blocks.is_empty(),
+                e.blocks.len() as u32 >= self.max_blocks_per_request,
+            ),
+            None => panic!("append_token for unknown request {req}"),
+        };
+        if needs_block {
+            if at_cap {
+                return false;
+            }
+            match self.pool.alloc() {
+                Some(b) => self.tables.get_mut(&req).unwrap().blocks.push(b),
+                None => return false,
+            }
+        }
+        self.tables.get_mut(&req).unwrap().tokens += 1;
+        true
+    }
+
+    /// Release all blocks of a finished/preempted request.
+    pub fn release(&mut self, req: RequestId) {
+        if let Some(entry) = self.tables.remove(&req) {
+            self.pool.free_all(&entry.blocks);
+        }
+    }
+
+    /// Transfer ownership of a request's KV blocks *out* of this manager
+    /// (PD migration: the source side frees after the destination confirms;
+    /// this models the confirm+free step). Returns the token count moved.
+    pub fn migrate_out(&mut self, req: RequestId) -> Option<u64> {
+        let entry = self.tables.remove(&req)?;
+        self.pool.free_all(&entry.blocks);
+        Some(entry.tokens)
+    }
+
+    /// Accept a migrated-in request with `tokens` of KV already computed.
+    pub fn migrate_in(&mut self, req: RequestId, tokens: u64) -> bool {
+        self.admit(req, tokens)
+    }
+
+    pub fn tokens_of(&self, req: RequestId) -> Option<u64> {
+        self.tables.get(&req).map(|e| e.tokens)
+    }
+
+    pub fn blocks_of(&self, req: RequestId) -> Option<&[BlockId]> {
+        self.tables.get(&req).map(|e| e.blocks.as_slice())
+    }
+
+    pub fn active_requests(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.pool.utilization()
+    }
+
+    /// Release everything (role switch away from an LLM stage).
+    pub fn clear(&mut self) {
+        let reqs: Vec<RequestId> = self.tables.keys().copied().collect();
+        for r in reqs {
+            self.release(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_and_release() {
+        let mut kv = KvBlockManager::new(8, 16, 2048);
+        assert!(kv.admit(1, 33)); // 3 blocks
+        assert_eq!(kv.blocks_of(1).unwrap().len(), 3);
+        assert_eq!(kv.pool().free_blocks(), 5);
+        kv.release(1);
+        assert_eq!(kv.pool().free_blocks(), 8);
+        assert_eq!(kv.active_requests(), 0);
+    }
+
+    #[test]
+    fn admit_fails_clean_when_full() {
+        let mut kv = KvBlockManager::new(4, 16, 2048);
+        assert!(kv.admit(1, 48)); // 3 blocks
+        assert!(!kv.admit(2, 32)); // needs 2, only 1 free
+        assert_eq!(kv.pool().free_blocks(), 1, "failed admit must not leak");
+        assert!(kv.admit(3, 10)); // 1 block fits
+    }
+
+    #[test]
+    fn append_allocates_at_boundary() {
+        let mut kv = KvBlockManager::new(4, 4, 2048);
+        assert!(kv.admit(1, 4)); // exactly one full block
+        assert_eq!(kv.blocks_of(1).unwrap().len(), 1);
+        assert!(kv.append_token(1)); // crosses boundary → second block
+        assert_eq!(kv.blocks_of(1).unwrap().len(), 2);
+        assert_eq!(kv.tokens_of(1), Some(5));
+        for _ in 0..3 {
+            assert!(kv.append_token(1)); // fills block 2 (6,7,8)
+        }
+        assert_eq!(kv.blocks_of(1).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn append_oom_detected() {
+        let mut kv = KvBlockManager::new(1, 4, 2048);
+        assert!(kv.admit(1, 4));
+        assert!(!kv.append_token(1), "no block available for growth");
+        // Token count unchanged on failure.
+        assert_eq!(kv.tokens_of(1), Some(4));
+    }
+
+    #[test]
+    fn per_request_cap_enforced() {
+        let mut kv = KvBlockManager::new(100, 4, 2);
+        assert!(!kv.admit(1, 100), "needs 25 blocks > cap 2");
+        assert!(kv.admit(1, 8));
+        assert!(!kv.append_token(1), "cap reached");
+    }
+
+    #[test]
+    fn migration_conserves_blocks() {
+        let mut src = KvBlockManager::new(8, 16, 2048);
+        let mut dst = KvBlockManager::new(8, 16, 2048);
+        assert!(src.admit(7, 40));
+        let moved = src.migrate_out(7).unwrap();
+        assert_eq!(moved, 40);
+        assert_eq!(src.pool().free_blocks(), 8);
+        assert!(dst.migrate_in(7, moved));
+        assert_eq!(dst.tokens_of(7), Some(40));
+    }
+
+    #[test]
+    fn clear_releases_everything() {
+        let mut kv = KvBlockManager::new(16, 16, 2048);
+        for r in 0..4 {
+            assert!(kv.admit(r, 20));
+        }
+        kv.clear();
+        assert_eq!(kv.pool().free_blocks(), 16);
+    }
+}

@@ -1,0 +1,206 @@
+//! The MMBlockManager of §3.2.1: a paged cache for multimodal tokens that
+//! exists on both encode and prefill instances.
+//!
+//! Lifecycle on the encode side: blocks are **pre-allocated** when a
+//! request is scheduled (based on its tile count), filled as tiles finish,
+//! then held until the asynchronous EP transfer is confirmed, at which
+//! point they are freed ("once the transfer is confirmed, the encoding
+//! cache entries are cleared to free memory"). On the prefill side blocks
+//! are allocated when the transfer begins and freed after prefill consumes
+//! them. With IRP a request's tokens arrive as independent shards that are
+//! aligned and merged once all shards landed (§3.2.2).
+
+use std::collections::HashMap;
+
+use super::block::{BlockId, BlockPool};
+use crate::core::request::RequestId;
+
+/// State of a request's MM-cache entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MmEntryState {
+    /// Blocks reserved, encoding in progress (encode side).
+    Filling,
+    /// All tokens present, awaiting/undergoing EP transfer (encode side) or
+    /// arriving shards (prefill side).
+    Ready,
+    /// All shards arrived and merged (prefill side); consumable by prefill.
+    Merged,
+}
+
+#[derive(Debug, Clone)]
+struct MmEntry {
+    blocks: Vec<BlockId>,
+    tokens: u64,
+    state: MmEntryState,
+    /// IRP: shards expected / arrived (1/1 for non-IRP requests).
+    shards_expected: u32,
+    shards_arrived: u32,
+}
+
+/// Paged multimodal-token cache for one instance.
+#[derive(Debug, Clone)]
+pub struct MmBlockManager {
+    pool: BlockPool,
+    entries: HashMap<RequestId, MmEntry>,
+}
+
+impl MmBlockManager {
+    pub fn new(num_blocks: u32, block_tokens: u32) -> MmBlockManager {
+        MmBlockManager {
+            pool: BlockPool::new(num_blocks, block_tokens),
+            entries: HashMap::new(),
+        }
+    }
+
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
+    }
+
+    /// Pre-allocate blocks for a request that will produce `tokens` MM
+    /// tokens in `shards` independent shards (IRP fan-out; 1 = whole
+    /// request). Returns false without allocating when the cache is full.
+    pub fn reserve(&mut self, req: RequestId, tokens: u64, shards: u32) -> bool {
+        assert!(shards >= 1);
+        assert!(!self.entries.contains_key(&req), "request {req} already reserved");
+        let need = self.pool.blocks_for_tokens(tokens);
+        match self.pool.alloc_n(need) {
+            Some(blocks) => {
+                self.entries.insert(
+                    req,
+                    MmEntry {
+                        blocks,
+                        tokens,
+                        state: MmEntryState::Filling,
+                        shards_expected: shards,
+                        shards_arrived: 0,
+                    },
+                );
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Mark one shard's tokens as produced/arrived. Returns the new state.
+    /// When all shards are in, the entry becomes `Ready` (encode side
+    /// semantics) — callers on the prefill side then call [`Self::merge`].
+    pub fn shard_done(&mut self, req: RequestId) -> MmEntryState {
+        let e = self
+            .entries
+            .get_mut(&req)
+            .unwrap_or_else(|| panic!("shard_done for unknown request {req}"));
+        assert!(e.shards_arrived < e.shards_expected, "extra shard for {req}");
+        e.shards_arrived += 1;
+        if e.shards_arrived == e.shards_expected {
+            e.state = MmEntryState::Ready;
+        }
+        e.state
+    }
+
+    /// Align/merge a Ready entry (prefill side, §3.2.2): all patch-level
+    /// tokens are projected and concatenated in request order.
+    pub fn merge(&mut self, req: RequestId) {
+        let e = self.entries.get_mut(&req).expect("merge of unknown request");
+        assert_eq!(e.state, MmEntryState::Ready, "merge before all shards arrived");
+        e.state = MmEntryState::Merged;
+    }
+
+    /// Free a request's blocks (encode side: after transfer confirmation;
+    /// prefill side: after prefill consumed the tokens).
+    pub fn release(&mut self, req: RequestId) {
+        if let Some(e) = self.entries.remove(&req) {
+            self.pool.free_all(&e.blocks);
+        }
+    }
+
+    pub fn state_of(&self, req: RequestId) -> Option<MmEntryState> {
+        self.entries.get(&req).map(|e| e.state)
+    }
+
+    pub fn tokens_of(&self, req: RequestId) -> Option<u64> {
+        self.entries.get(&req).map(|e| e.tokens)
+    }
+
+    pub fn can_reserve(&self, tokens: u64) -> bool {
+        self.pool.can_alloc(self.pool.blocks_for_tokens(tokens))
+    }
+
+    pub fn active_requests(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.pool.utilization()
+    }
+
+    /// Drop everything (role switch away from a stage that owns MM cache).
+    pub fn clear(&mut self) {
+        let reqs: Vec<RequestId> = self.entries.keys().copied().collect();
+        for r in reqs {
+            self.release(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_fill_release() {
+        let mut mm = MmBlockManager::new(8, 64);
+        assert!(mm.reserve(1, 128, 1)); // 2 blocks
+        assert_eq!(mm.state_of(1), Some(MmEntryState::Filling));
+        assert_eq!(mm.shard_done(1), MmEntryState::Ready);
+        mm.release(1);
+        assert_eq!(mm.pool().free_blocks(), 8);
+    }
+
+    #[test]
+    fn irp_shards_accumulate() {
+        let mut mm = MmBlockManager::new(16, 64);
+        assert!(mm.reserve(5, 640, 4)); // 4-way IRP
+        assert_eq!(mm.shard_done(5), MmEntryState::Filling);
+        assert_eq!(mm.shard_done(5), MmEntryState::Filling);
+        assert_eq!(mm.shard_done(5), MmEntryState::Filling);
+        assert_eq!(mm.shard_done(5), MmEntryState::Ready);
+        mm.merge(5);
+        assert_eq!(mm.state_of(5), Some(MmEntryState::Merged));
+    }
+
+    #[test]
+    #[should_panic(expected = "merge before all shards")]
+    fn merge_requires_ready() {
+        let mut mm = MmBlockManager::new(16, 64);
+        mm.reserve(5, 640, 4);
+        mm.shard_done(5);
+        mm.merge(5);
+    }
+
+    #[test]
+    fn reserve_fails_clean_when_full() {
+        let mut mm = MmBlockManager::new(2, 64);
+        assert!(mm.reserve(1, 128, 1));
+        assert!(!mm.reserve(2, 64, 1));
+        assert_eq!(mm.pool().free_blocks(), 0);
+        assert_eq!(mm.active_requests(), 1);
+    }
+
+    #[test]
+    fn release_then_reuse() {
+        let mut mm = MmBlockManager::new(2, 64);
+        assert!(mm.reserve(1, 128, 1));
+        mm.release(1);
+        assert!(mm.reserve(2, 128, 1), "blocks reusable after release");
+    }
+
+    #[test]
+    fn clear_frees_all() {
+        let mut mm = MmBlockManager::new(8, 64);
+        mm.reserve(1, 64, 1);
+        mm.reserve(2, 64, 2);
+        mm.clear();
+        assert_eq!(mm.pool().free_blocks(), 8);
+        assert_eq!(mm.active_requests(), 0);
+    }
+}

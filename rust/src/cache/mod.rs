@@ -1,0 +1,15 @@
+//! Paged cache management (§3.2.1 and §E.1).
+//!
+//! Both caches follow vLLM-style paging: fixed-size blocks handed out from
+//! a free list, per-request block tables, O(1) allocate/free. The
+//! [`mm_block_manager::MmBlockManager`] is the paper's contribution — a
+//! paged cache for *multimodal* tokens that exists on both the encode and
+//! prefill instances and backs the asynchronous EP token transfer.
+
+pub mod block;
+pub mod kv_block_manager;
+pub mod mm_block_manager;
+
+pub use block::{BlockId, BlockPool};
+pub use kv_block_manager::KvBlockManager;
+pub use mm_block_manager::{MmBlockManager, MmEntryState};

@@ -1,0 +1,291 @@
+//! Command-line interface for the `epdserve` binary.
+//!
+//! Commands:
+//! - `serve`      — start the real engine + HTTP frontend.
+//! - `generate`   — one-shot generation through an in-process engine.
+//! - `simulate`   — run the cluster simulator for a workload/config.
+//! - `optimize`   — run the resource-allocation optimizer (§3.2.3).
+//! - `repro`      — regenerate a paper table/figure (or `all`).
+//! - `capacity`   — query the memory model (Tables 2/3/8 primitives).
+
+use std::sync::Arc;
+
+use crate::core::config::EpdConfig;
+use crate::core::slo::Slo;
+use crate::core::topology::{DeploymentMode, Topology};
+use crate::metrics::goodput::find_goodput;
+use crate::model::memory::{MemoryModel, NodeKind};
+use crate::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use crate::model::vision::Resolution;
+use crate::optimizer::bayes::{BayesOpt, BayesOptConfig};
+use crate::optimizer::objective::{ConfigEvaluator, Objective};
+use crate::optimizer::space::SearchSpace;
+use crate::sim::engine::{SimConfig, Simulator};
+use crate::util::argp::{flag, opt, ArgError, Cli, CmdSpec};
+use crate::util::rng::Rng;
+use crate::workload::synthetic::SyntheticWorkload;
+use crate::workload::Workload;
+
+fn cli() -> Cli {
+    Cli::new("epdserve", "EPD-disaggregated LMM serving (ICML 2025 reproduction)")
+        .cmd(CmdSpec {
+            name: "serve",
+            about: "start the real engine with an HTTP frontend",
+            opts: vec![
+                opt("artifacts", Some("artifacts"), "AOT artifacts directory"),
+                opt("mode", Some("epd"), "epd | distserve | vllm"),
+                opt("topology", Some("2E1P1D"), "instance topology, e.g. 5E2P1D"),
+                opt("addr", Some("127.0.0.1:8072"), "listen address"),
+                flag("role-switching", "enable dynamic role switching"),
+            ],
+            positional: vec![],
+        })
+        .cmd(CmdSpec {
+            name: "generate",
+            about: "one-shot generation through an in-process engine",
+            opts: vec![
+                opt("artifacts", Some("artifacts"), "AOT artifacts directory"),
+                opt("prompt", Some("describe the image"), "text prompt"),
+                opt("images", Some("2"), "synthetic images to attach"),
+                opt("max-tokens", Some("16"), "tokens to generate"),
+                opt("topology", Some("2E1P1D"), "instance topology"),
+            ],
+            positional: vec![],
+        })
+        .cmd(CmdSpec {
+            name: "simulate",
+            about: "run the discrete-event cluster simulator",
+            opts: vec![
+                opt("model", Some("minicpm"), "minicpm | internvl2-8b | internvl2-26b | ultravox"),
+                opt("mode", Some("epd"), "epd | distserve | vllm"),
+                opt("topology", Some("5E2P1D"), "instance topology"),
+                opt("rate", Some("0.5"), "Poisson arrival rate (req/s)"),
+                opt("requests", Some("100"), "number of requests"),
+                opt("images", Some("2"), "images per request"),
+                opt("output-tokens", Some("10"), "output length"),
+                opt("device", Some("a100"), "a100 | npu"),
+                flag("no-irp", "disable intra-request parallelism"),
+                flag("goodput", "search for goodput instead of one run"),
+                opt("slo-ttft", Some("2.6"), "TTFT SLO (s)"),
+                opt("slo-tpot", Some("0.04"), "TPOT SLO (s)"),
+            ],
+            positional: vec![],
+        })
+        .cmd(CmdSpec {
+            name: "optimize",
+            about: "black-box config optimization over the simulator (Eq. 1)",
+            opts: vec![
+                opt("model", Some("minicpm"), "target model"),
+                opt("gpus", Some("8"), "total GPUs"),
+                opt("budget", Some("16"), "evaluation budget"),
+                opt("images", Some("6"), "images per request"),
+                opt("requests", Some("50"), "requests per evaluation"),
+                flag("random", "random search instead of Bayesian"),
+            ],
+            positional: vec![],
+        })
+        .cmd(CmdSpec {
+            name: "repro",
+            about: "regenerate a paper table/figure (fig2..fig12, table1..table8, all)",
+            opts: vec![],
+            positional: vec![("id", "experiment id, e.g. fig5 or all")],
+        })
+        .cmd(CmdSpec {
+            name: "capacity",
+            about: "query the GPU memory model",
+            opts: vec![
+                opt("model", Some("minicpm"), "target model"),
+                opt("resolution", Some("4032x3024"), "image resolution WxH"),
+                opt("images", Some("10"), "images per request"),
+                opt("kv-frac", Some("0.8"), "KV cache fraction of free memory"),
+            ],
+            positional: vec![],
+        })
+}
+
+/// Entry point (called from main).
+pub fn run() {
+    crate::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match cli().parse(&argv) {
+        Ok(args) => {
+            if let Err(e) = dispatch(&args) {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        Err(ArgError(msg)) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_model(s: &str) -> anyhow::Result<LmmSpec> {
+    ModelId::parse(s)
+        .map(LmmSpec::get)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{s}'"))
+}
+
+fn parse_resolution(s: &str) -> anyhow::Result<Resolution> {
+    let (w, h) = s
+        .split_once('x')
+        .ok_or_else(|| anyhow::anyhow!("resolution must be WxH"))?;
+    Ok(Resolution::new(w.parse()?, h.parse()?))
+}
+
+fn epd_config(mode: &str, topology: &str) -> anyhow::Result<EpdConfig> {
+    let mode = DeploymentMode::parse(mode).ok_or_else(|| anyhow::anyhow!("bad mode"))?;
+    let topo = Topology::parse(topology).ok_or_else(|| anyhow::anyhow!("bad topology"))?;
+    let mut cfg = match mode {
+        DeploymentMode::Epd => EpdConfig::epd(topo, 1, 1, 128),
+        DeploymentMode::PdDisagg => {
+            EpdConfig::distserve(topo.prefill.max(topo.encode), topo.decode.max(1), 1, 128)
+        }
+        DeploymentMode::Aggregated => EpdConfig::aggregated(topo.total().max(1), 64),
+    };
+    cfg.mode = mode;
+    Ok(cfg)
+}
+
+fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
+    match args.cmd.as_str() {
+        "serve" => {
+            let mut cfg = epd_config(args.str("mode"), args.str("topology"))?;
+            cfg.role_switching = args.flag("role-switching");
+            let engine = Arc::new(crate::engine::serve::EpdEngine::start(
+                crate::engine::serve::EngineConfig::new(args.str("artifacts"), cfg),
+            )?);
+            let server = crate::engine::http::HttpServer::serve(engine, args.str("addr"))?;
+            println!("serving on http://{} — POST /v1/completions", server.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "generate" => {
+            let cfg = epd_config("epd", args.str("topology"))?;
+            let engine = crate::engine::serve::EpdEngine::start(
+                crate::engine::serve::EngineConfig::new(args.str("artifacts"), cfg),
+            )?;
+            let resp = engine.generate(
+                args.u64("images") as u32,
+                args.str("prompt"),
+                args.u64("max-tokens") as u32,
+            )?;
+            println!("tokens: {:?}", resp.tokens);
+            println!("text:   {:?}", resp.text);
+            println!("latency: {:.3}s", resp.latency);
+            engine.shutdown();
+            Ok(())
+        }
+        "simulate" => {
+            let spec = parse_model(args.str("model"))?;
+            let device = match args.str("device") {
+                "npu" => DeviceSpec::npu_910b3(),
+                _ => DeviceSpec::a100(),
+            };
+            let mut epd = epd_config(args.str("mode"), args.str("topology"))?;
+            epd.irp = !args.flag("no-irp");
+            let cfg = SimConfig::new(spec.clone(), device, epd);
+            let w = SyntheticWorkload::new(args.u64("images") as u32, args.u64("output-tokens") as u32);
+            let slo = Slo::new(args.f64("slo-ttft"), args.f64("slo-tpot"));
+            if args.flag("goodput") {
+                let n = args.usize("requests");
+                let result = find_goodput(
+                    |rate| {
+                        let mut rng = Rng::new(42);
+                        let reqs = w.generate(&spec, n, rate, &mut rng);
+                        Simulator::run(&cfg, &reqs).slo_attainment(slo)
+                    },
+                    0.05,
+                    0.9,
+                    0.05,
+                );
+                println!(
+                    "goodput: {:.3} req/s (attainment {:.3}, {} evals)",
+                    result.goodput, result.attainment, result.evals
+                );
+            } else {
+                let mut rng = Rng::new(42);
+                let reqs = w.generate(&spec, args.usize("requests"), args.f64("rate"), &mut rng);
+                let out = Simulator::run(&cfg, &reqs);
+                println!("finished:   {}/{}", out.finished().count(), reqs.len());
+                println!("mean TTFT:  {:.3}s", out.mean_ttft());
+                println!("mean TPOT:  {:.4}s", out.mean_tpot());
+                println!("SLO attain: {:.3}", out.slo_attainment(slo));
+                println!("switches:   {}", out.role_switches);
+            }
+            Ok(())
+        }
+        "optimize" => {
+            let spec = parse_model(args.str("model"))?;
+            let w = SyntheticWorkload::new(args.u64("images") as u32, 10);
+            let ev = ConfigEvaluator {
+                spec: spec.clone(),
+                device: DeviceSpec::a100(),
+                workload: &w,
+                objective: Objective {
+                    beta: 0.0,
+                    gpu_cost: 1.0,
+                    slo: Slo::new(3.9, 0.06),
+                    threshold: 0.9,
+                },
+                n_requests: args.usize("requests"),
+                seed: 42,
+            };
+            let space = SearchSpace::paper_default(args.u64("gpus") as u32);
+            let opt = BayesOpt::new(
+                space,
+                BayesOptConfig { budget: args.usize("budget"), ..Default::default() },
+            );
+            let result = if args.flag("random") {
+                opt.random_search(|p| ev.goodput(p))
+            } else {
+                opt.run(|p| ev.goodput(p))
+            };
+            println!(
+                "best config: {} (batch E{}/P{}/D{}, {}, irp={})",
+                result.best.topology,
+                result.best.batch_e,
+                result.best.batch_p,
+                result.best.batch_d,
+                result.best.queue.name(),
+                result.best.irp
+            );
+            println!(
+                "best goodput: {:.3} req/s over {} evals",
+                result.best_value,
+                result.history.len()
+            );
+            Ok(())
+        }
+        "repro" => {
+            let id = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+            let tables = crate::repro::run(id)?;
+            for t in tables {
+                t.emit();
+            }
+            Ok(())
+        }
+        "capacity" => {
+            let spec = parse_model(args.str("model"))?;
+            let res = parse_resolution(args.str("resolution"))?;
+            let images = args.u64("images") as u32;
+            let kv = args.f64("kv-frac");
+            let m = MemoryModel::new(spec, DeviceSpec::a100());
+            for (name, node) in [
+                ("DistServe/vLLM (colocated)", NodeKind::Colocated),
+                ("EPD encode node", NodeKind::EncodeOnly),
+                ("EPD prefill node", NodeKind::LlmOnly),
+            ] {
+                let (imgs, why1) = m.max_images_per_request(node, res, kv, 22);
+                let (batch, why2) = m.max_batch(node, images, res, kv);
+                println!(
+                    "{name:<28} max images/req: {imgs:>6} ({why1:?})   max batch @{images} img: {batch:>5} ({why2:?})"
+                );
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+}

@@ -1,0 +1,121 @@
+//! Intra-Request Parallelism (§3.2.2): shard one request's tiles across
+//! multiple encode instances. Tiles are encoded independently, so the
+//! request's tiles are split as evenly as possible across up to
+//! `max_fanout` workers; each shard is an independent encoding job whose
+//! tokens are transferred asynchronously and merged at the prefill side.
+
+/// The shard layout for one request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Tiles assigned to each shard (non-empty, sums to total tiles).
+    pub tiles_per_shard: Vec<u32>,
+}
+
+impl ShardPlan {
+    pub fn num_shards(&self) -> u32 {
+        self.tiles_per_shard.len() as u32
+    }
+
+    pub fn total_tiles(&self) -> u32 {
+        self.tiles_per_shard.iter().sum()
+    }
+
+    /// The largest shard — encode completion time is governed by it.
+    pub fn max_shard_tiles(&self) -> u32 {
+        self.tiles_per_shard.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Split `total_tiles` across at most `max_fanout` encode workers. With
+/// IRP disabled (or a single worker) the plan is one shard. Never creates
+/// empty shards: fan-out is capped at the tile count.
+pub fn plan_shards(total_tiles: u32, max_fanout: u32, irp_enabled: bool) -> ShardPlan {
+    if total_tiles == 0 {
+        return ShardPlan { tiles_per_shard: vec![] };
+    }
+    let fanout = if irp_enabled {
+        max_fanout.max(1).min(total_tiles)
+    } else {
+        1
+    };
+    let base = total_tiles / fanout;
+    let rem = total_tiles % fanout;
+    let tiles_per_shard = (0..fanout)
+        .map(|i| base + if i < rem { 1 } else { 0 })
+        .collect();
+    ShardPlan { tiles_per_shard }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split() {
+        let p = plan_shards(12, 4, true);
+        assert_eq!(p.tiles_per_shard, vec![3, 3, 3, 3]);
+        assert_eq!(p.max_shard_tiles(), 3);
+    }
+
+    #[test]
+    fn uneven_split_front_loaded() {
+        let p = plan_shards(10, 4, true);
+        assert_eq!(p.tiles_per_shard, vec![3, 3, 2, 2]);
+        assert_eq!(p.total_tiles(), 10);
+    }
+
+    #[test]
+    fn fanout_capped_by_tiles() {
+        let p = plan_shards(3, 8, true);
+        assert_eq!(p.num_shards(), 3);
+        assert_eq!(p.tiles_per_shard, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn disabled_is_single_shard() {
+        let p = plan_shards(40, 5, false);
+        assert_eq!(p.num_shards(), 1);
+        assert_eq!(p.tiles_per_shard, vec![40]);
+    }
+
+    #[test]
+    fn zero_tiles() {
+        let p = plan_shards(0, 4, true);
+        assert_eq!(p.num_shards(), 0);
+        assert_eq!(p.max_shard_tiles(), 0);
+    }
+
+    /// IRP's headline effect (Table 4): max shard shrinks ~linearly with
+    /// fan-out, so encode latency does too.
+    #[test]
+    fn speedup_scales_with_fanout() {
+        let serial = plan_shards(40, 1, true).max_shard_tiles();
+        let par5 = plan_shards(40, 5, true).max_shard_tiles();
+        assert_eq!(serial, 40);
+        assert_eq!(par5, 8);
+    }
+
+    /// Property: shards always partition the tiles, no shard empty.
+    #[test]
+    fn partition_property() {
+        use crate::util::quickcheck::{forall, pair, usize_in};
+        forall(
+            pair(usize_in(1, 500), usize_in(1, 16)),
+            |&(tiles, fanout)| {
+                let p = plan_shards(tiles as u32, fanout as u32, true);
+                if p.total_tiles() != tiles as u32 {
+                    return Err(format!("lost tiles: {:?}", p));
+                }
+                if p.tiles_per_shard.iter().any(|&t| t == 0) {
+                    return Err(format!("empty shard: {:?}", p));
+                }
+                let max = p.max_shard_tiles();
+                let min = p.tiles_per_shard.iter().copied().min().unwrap();
+                if max - min > 1 {
+                    return Err(format!("imbalanced: {:?}", p));
+                }
+                Ok(())
+            },
+        );
+    }
+}

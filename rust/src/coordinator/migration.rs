@@ -1,0 +1,108 @@
+//! Inter-stage migration (§3.1, §3.2.1): the EP transfer moves multimodal
+//! tokens (encode → prefill MM cache), the PD transfer moves the KV cache
+//! and first token (prefill → decode). Transfers are asynchronous — the
+//! source instance keeps serving while the transfer is in flight — so the
+//! model here only computes *what* moves and *how long* it takes on a
+//! given interconnect.
+
+use crate::model::spec::{DeviceSpec, LmmSpec};
+
+/// Which migration edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrationKind {
+    /// Encode → prefill: multimodal token embeddings.
+    EncodeToPrefill,
+    /// Prefill → decode: KV cache + first token.
+    PrefillToDecode,
+}
+
+/// Byte-accounting + latency model for inter-instance transfers.
+#[derive(Debug, Clone)]
+pub struct TransferModel {
+    /// Link bandwidth, bytes/s (NVLink intra-node, IB inter-node).
+    pub bandwidth: f64,
+    /// Per-transfer latency floor, seconds.
+    pub latency: f64,
+}
+
+impl TransferModel {
+    pub fn from_device(dev: &DeviceSpec) -> TransferModel {
+        TransferModel {
+            bandwidth: dev.link_bw,
+            latency: dev.link_latency,
+        }
+    }
+
+    /// Bytes moved by a migration for a request with the given token
+    /// counts.
+    pub fn bytes(&self, kind: MigrationKind, spec: &LmmSpec, mm_tokens: u64, kv_tokens: u64) -> u64 {
+        match kind {
+            // MM token embeddings at fp16: tokens × hidden × 2.
+            MigrationKind::EncodeToPrefill => mm_tokens * spec.mm_token_bytes(),
+            // Full KV cache of the prefilled sequence.
+            MigrationKind::PrefillToDecode => kv_tokens * spec.llm.kv_bytes_per_token(),
+        }
+    }
+
+    /// Transfer time, seconds.
+    pub fn time(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+
+    /// Convenience: time for a migration given token counts.
+    pub fn migration_time(
+        &self,
+        kind: MigrationKind,
+        spec: &LmmSpec,
+        mm_tokens: u64,
+        kv_tokens: u64,
+    ) -> f64 {
+        self.time(self.bytes(kind, spec, mm_tokens, kv_tokens))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelId;
+
+    fn setup() -> (TransferModel, LmmSpec) {
+        (
+            TransferModel::from_device(&DeviceSpec::a100()),
+            LmmSpec::get(ModelId::InternVl2_8b),
+        )
+    }
+
+    #[test]
+    fn ep_bytes_are_embedding_bytes() {
+        let (t, spec) = setup();
+        // 3328 MM tokens (one 4K image) × 4096 hidden × 2 B ≈ 27.3 MB.
+        let b = t.bytes(MigrationKind::EncodeToPrefill, &spec, 3328, 0);
+        assert_eq!(b, 3328 * 4096 * 2);
+    }
+
+    #[test]
+    fn pd_bytes_are_kv_bytes() {
+        let (t, spec) = setup();
+        let b = t.bytes(MigrationKind::PrefillToDecode, &spec, 0, 13_334);
+        assert_eq!(b, 13_334 * 131_072);
+    }
+
+    #[test]
+    fn pd_dominates_ep_for_long_context() {
+        // The paper's asymmetry: KV moves ~64× more bytes per token than
+        // MM embeddings for InternVL2-8B (131072 vs 8192 B/token).
+        let (t, spec) = setup();
+        let ep = t.migration_time(MigrationKind::EncodeToPrefill, &spec, 13_334, 0);
+        let pd = t.migration_time(MigrationKind::PrefillToDecode, &spec, 0, 13_334);
+        assert!(pd > 5.0 * ep);
+    }
+
+    #[test]
+    fn latency_floor_applies() {
+        let t = TransferModel { bandwidth: 300e9, latency: 1e-3 };
+        assert!(t.time(0) >= 1e-3);
+        // 3 GB at 300 GB/s = 10 ms + 1 ms floor.
+        assert!((t.time(3_000_000_000) - 0.011).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,14 @@
+//! The paper's coordination layer: intra-request parallelism (§3.2.2),
+//! EP/PD migration accounting (§3.2.1), and dynamic role switching
+//! (§3.2.4). These are pure policy components consumed by both the
+//! discrete-event simulator and the real engine.
+
+pub mod irp;
+pub mod migration;
+pub mod monitor;
+pub mod role_switch;
+
+pub use irp::{plan_shards, ShardPlan};
+pub use migration::{MigrationKind, TransferModel};
+pub use monitor::{QueueMonitor, StageLoad};
+pub use role_switch::{RoleSwitchController, SwitchDecision, SwitchPolicy};

@@ -1,0 +1,138 @@
+//! Queue monitoring (§3.2.4): exponentially-smoothed per-stage queueing
+//! statistics that drive the role-switch controller.
+
+use crate::core::stage::Stage;
+
+/// Smoothed load signal for one stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageLoad {
+    /// EWMA of queue length (requests).
+    pub queue_len: f64,
+    /// EWMA of queue backlog (estimated seconds of work).
+    pub backlog: f64,
+    /// EWMA of instance busy fraction.
+    pub utilization: f64,
+    /// Instances currently serving this stage.
+    pub instances: u32,
+}
+
+impl StageLoad {
+    fn zero() -> StageLoad {
+        StageLoad { queue_len: 0.0, backlog: 0.0, utilization: 0.0, instances: 0 }
+    }
+
+    /// Backlog seconds per instance — the controller's pressure signal.
+    pub fn pressure(&self) -> f64 {
+        if self.instances == 0 {
+            // A stage with work but no instances is infinitely pressured.
+            if self.backlog > 0.0 || self.queue_len > 0.0 {
+                return f64::INFINITY;
+            }
+            return 0.0;
+        }
+        self.backlog / self.instances as f64
+    }
+}
+
+/// EWMA monitor across the three stages.
+#[derive(Debug, Clone)]
+pub struct QueueMonitor {
+    alpha: f64,
+    loads: [StageLoad; 3],
+}
+
+impl QueueMonitor {
+    /// `alpha` ∈ (0, 1]: weight of the newest observation.
+    pub fn new(alpha: f64) -> QueueMonitor {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        QueueMonitor {
+            alpha,
+            loads: [StageLoad::zero(); 3],
+        }
+    }
+
+    fn idx(stage: Stage) -> usize {
+        match stage {
+            Stage::Encode => 0,
+            Stage::Prefill => 1,
+            Stage::Decode => 2,
+        }
+    }
+
+    /// Feed one observation for a stage.
+    pub fn observe(
+        &mut self,
+        stage: Stage,
+        queue_len: usize,
+        backlog: f64,
+        utilization: f64,
+        instances: u32,
+    ) {
+        let a = self.alpha;
+        let l = &mut self.loads[Self::idx(stage)];
+        l.queue_len = (1.0 - a) * l.queue_len + a * queue_len as f64;
+        l.backlog = (1.0 - a) * l.backlog + a * backlog;
+        l.utilization = (1.0 - a) * l.utilization + a * utilization.clamp(0.0, 1.0);
+        l.instances = instances;
+    }
+
+    pub fn load(&self, stage: Stage) -> StageLoad {
+        self.loads[Self::idx(stage)]
+    }
+
+    /// The most and least pressured stages right now.
+    pub fn extremes(&self) -> (Stage, Stage) {
+        let mut hi = Stage::Encode;
+        let mut lo = Stage::Encode;
+        for s in Stage::ALL {
+            if self.load(s).pressure() > self.load(hi).pressure() {
+                hi = s;
+            }
+            if self.load(s).pressure() < self.load(lo).pressure() {
+                lo = s;
+            }
+        }
+        (hi, lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_converges() {
+        let mut m = QueueMonitor::new(0.5);
+        for _ in 0..20 {
+            m.observe(Stage::Decode, 10, 5.0, 1.0, 2);
+        }
+        let l = m.load(Stage::Decode);
+        assert!((l.queue_len - 10.0).abs() < 0.1);
+        assert!((l.backlog - 5.0).abs() < 0.1);
+        assert!((l.pressure() - 2.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn extremes_identify_bottleneck() {
+        let mut m = QueueMonitor::new(1.0);
+        m.observe(Stage::Encode, 0, 0.1, 0.2, 5);
+        m.observe(Stage::Prefill, 2, 1.0, 0.9, 1);
+        m.observe(Stage::Decode, 50, 40.0, 1.0, 2);
+        let (hi, lo) = m.extremes();
+        assert_eq!(hi, Stage::Decode);
+        assert_eq!(lo, Stage::Encode);
+    }
+
+    #[test]
+    fn empty_stage_with_work_is_infinite_pressure() {
+        let mut m = QueueMonitor::new(1.0);
+        m.observe(Stage::Prefill, 3, 2.0, 0.0, 0);
+        assert!(m.load(Stage::Prefill).pressure().is_infinite());
+    }
+
+    #[test]
+    fn idle_empty_stage_zero_pressure() {
+        let m = QueueMonitor::new(0.3);
+        assert_eq!(m.load(Stage::Encode).pressure(), 0.0);
+    }
+}

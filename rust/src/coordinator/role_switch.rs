@@ -1,0 +1,228 @@
+//! Dynamic role switching (§3.2.4): move an instance from its current
+//! stage to the bottleneck stage via offload → migrate → onload.
+//!
+//! The controller watches the [`QueueMonitor`](super::monitor::QueueMonitor)
+//! pressure signals and proposes a switch when the imbalance between the
+//! most- and least-pressured stages exceeds a hysteresis threshold. The
+//! migration itself costs time: the paper measures < 0.7 s when the E stage
+//! is involved (model + cache type change) and much less for P↔D (LLM and
+//! KV cache are reused).
+
+use crate::core::stage::Stage;
+
+use super::monitor::QueueMonitor;
+
+/// Tunables for the switch policy.
+#[derive(Debug, Clone, Copy)]
+pub struct SwitchPolicy {
+    /// Minimum ratio of max-stage to min-stage pressure before switching.
+    pub imbalance_ratio: f64,
+    /// Minimum absolute pressure (seconds of backlog per instance) at the
+    /// bottleneck before a switch is worth the disruption.
+    pub min_pressure: f64,
+    /// Cool-down between switches, seconds.
+    pub cooldown: f64,
+    /// Never leave a stage with fewer than this many instances.
+    pub min_instances: u32,
+    /// Migration duration when the encode stage is source or target
+    /// (model weights + cache type change). Paper: ≲ 0.7 s.
+    pub switch_time_with_e: f64,
+    /// Migration duration for P↔D (weights and KV cache reused).
+    pub switch_time_pd: f64,
+}
+
+impl Default for SwitchPolicy {
+    fn default() -> Self {
+        SwitchPolicy {
+            imbalance_ratio: 3.0,
+            min_pressure: 1.0,
+            cooldown: 5.0,
+            min_instances: 1,
+            switch_time_with_e: 0.7,
+            switch_time_pd: 0.1,
+        }
+    }
+}
+
+/// A proposed role switch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwitchDecision {
+    pub from: Stage,
+    pub to: Stage,
+    /// How long the migrating instance is offline.
+    pub migration_time: f64,
+}
+
+/// The §3.2.4 controller.
+#[derive(Debug, Clone)]
+pub struct RoleSwitchController {
+    policy: SwitchPolicy,
+    last_switch: f64,
+    switches: u32,
+}
+
+impl RoleSwitchController {
+    pub fn new(policy: SwitchPolicy) -> RoleSwitchController {
+        RoleSwitchController {
+            policy,
+            last_switch: f64::NEG_INFINITY,
+            switches: 0,
+        }
+    }
+
+    pub fn switches_made(&self) -> u32 {
+        self.switches
+    }
+
+    /// Migration time for a given edge.
+    pub fn migration_time(&self, from: Stage, to: Stage) -> f64 {
+        if from == Stage::Encode || to == Stage::Encode {
+            self.policy.switch_time_with_e
+        } else {
+            self.policy.switch_time_pd
+        }
+    }
+
+    /// Evaluate the monitor at time `now`; maybe propose a switch.
+    /// `instance_counts` are the current live counts per stage (E, P, D).
+    pub fn evaluate(
+        &mut self,
+        now: f64,
+        monitor: &QueueMonitor,
+        instance_counts: [u32; 3],
+    ) -> Option<SwitchDecision> {
+        if now - self.last_switch < self.policy.cooldown {
+            return None;
+        }
+        let (hi, _) = monitor.extremes();
+        let hi_p = monitor.load(hi).pressure();
+        if hi_p < self.policy.min_pressure {
+            return None;
+        }
+        // Donor: the least-pressured *eligible* stage — one that is not the
+        // bottleneck and still has instances to spare above the floor.
+        let count_of = |s: Stage| match s {
+            Stage::Encode => instance_counts[0],
+            Stage::Prefill => instance_counts[1],
+            Stage::Decode => instance_counts[2],
+        };
+        let lo = Stage::ALL
+            .into_iter()
+            .filter(|&s| s != hi && count_of(s) > self.policy.min_instances)
+            .min_by(|&a, &b| {
+                monitor
+                    .load(a)
+                    .pressure()
+                    .partial_cmp(&monitor.load(b).pressure())
+                    .unwrap()
+            })?;
+        let lo_p = monitor.load(lo).pressure();
+        // Ratio test with care for lo_p == 0 (idle donor stage).
+        let imbalanced = if lo_p <= 0.0 {
+            true
+        } else {
+            hi_p / lo_p >= self.policy.imbalance_ratio
+        };
+        if !imbalanced {
+            return None;
+        }
+        self.last_switch = now;
+        self.switches += 1;
+        Some(SwitchDecision {
+            from: lo,
+            to: hi,
+            migration_time: self.migration_time(lo, hi),
+        })
+    }
+
+    /// The offload step (§3.2.4): requeue a draining instance's items onto
+    /// its siblings (pure function; callers apply it to their queue type).
+    /// Returns, for each drained item index, the sibling index it goes to
+    /// (round-robin for even spread).
+    pub fn offload_targets(num_items: usize, num_siblings: usize) -> Vec<usize> {
+        assert!(num_siblings > 0, "offload requires at least one sibling");
+        (0..num_items).map(|i| i % num_siblings).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monitor_with(e: f64, p: f64, d: f64, counts: [u32; 3]) -> QueueMonitor {
+        let mut m = QueueMonitor::new(1.0);
+        m.observe(Stage::Encode, 0, e * counts[0] as f64, 0.5, counts[0]);
+        m.observe(Stage::Prefill, 0, p * counts[1] as f64, 0.5, counts[1]);
+        m.observe(Stage::Decode, 0, d * counts[2] as f64, 0.5, counts[2]);
+        m
+    }
+
+    #[test]
+    fn switches_to_bottleneck() {
+        // The paper's Table 6 scenario: decode becomes the bottleneck, an
+        // encode instance should move E→D.
+        let mut c = RoleSwitchController::new(SwitchPolicy::default());
+        let m = monitor_with(0.1, 0.5, 30.0, [5, 1, 2]);
+        let d = c.evaluate(100.0, &m, [5, 1, 2]).expect("should switch");
+        assert_eq!(d.from, Stage::Encode);
+        assert_eq!(d.to, Stage::Decode);
+        assert!((d.migration_time - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pd_switch_is_cheap() {
+        let c = RoleSwitchController::new(SwitchPolicy::default());
+        assert!(c.migration_time(Stage::Prefill, Stage::Decode) < 0.2);
+        assert!(c.migration_time(Stage::Encode, Stage::Decode) >= 0.7);
+    }
+
+    #[test]
+    fn respects_cooldown() {
+        let mut c = RoleSwitchController::new(SwitchPolicy::default());
+        let m = monitor_with(0.1, 0.5, 30.0, [5, 1, 2]);
+        assert!(c.evaluate(10.0, &m, [5, 1, 2]).is_some());
+        assert!(c.evaluate(11.0, &m, [4, 1, 3]).is_none(), "cooldown");
+        assert!(c.evaluate(16.0, &m, [4, 1, 3]).is_some());
+    }
+
+    #[test]
+    fn never_drains_last_instance() {
+        let mut c = RoleSwitchController::new(SwitchPolicy::default());
+        // Decode is the bottleneck; encode and prefill are idle but both
+        // sit at the 1-instance floor — the controller must refuse.
+        let m = monitor_with(0.0, 0.2, 30.0, [1, 1, 2]);
+        assert!(c.evaluate(10.0, &m, [1, 1, 2]).is_none());
+    }
+
+    #[test]
+    fn falls_back_to_next_donor_when_least_is_at_floor() {
+        // Prefill is the least pressured but has only 1 instance; encode
+        // (slightly busier, 5 instances) must be chosen instead — the
+        // Table 6 scenario.
+        let mut c = RoleSwitchController::new(SwitchPolicy::default());
+        let m = monitor_with(0.05, 0.0, 20.0, [5, 1, 2]);
+        let d = c.evaluate(10.0, &m, [5, 1, 2]).expect("switch");
+        assert_eq!(d.from, Stage::Encode);
+        assert_eq!(d.to, Stage::Decode);
+    }
+
+    #[test]
+    fn quiet_system_never_switches() {
+        let mut c = RoleSwitchController::new(SwitchPolicy::default());
+        let m = monitor_with(0.01, 0.02, 0.03, [2, 2, 2]);
+        assert!(c.evaluate(10.0, &m, [2, 2, 2]).is_none());
+    }
+
+    #[test]
+    fn offload_spreads_evenly() {
+        let t = RoleSwitchController::offload_targets(7, 3);
+        assert_eq!(t, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn balanced_pressure_below_ratio_no_switch() {
+        let mut c = RoleSwitchController::new(SwitchPolicy::default());
+        let m = monitor_with(2.0, 2.5, 3.0, [2, 2, 2]);
+        assert!(c.evaluate(10.0, &m, [2, 2, 2]).is_none());
+    }
+}

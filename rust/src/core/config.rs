@@ -1,0 +1,288 @@
+//! System configuration: the (p, b, s) tuple of Appendix D — per-instance
+//! parallelization, max batch sizes and scheduling strategies — plus the
+//! feature toggles the ablations flip (IRP, role switching).
+
+use super::stage::Stage;
+use super::topology::{DeploymentMode, Topology};
+use crate::util::toml::TomlDoc;
+
+/// Queue-ordering strategy within an instance (Appendix D "Scheduling").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QueuePolicy {
+    /// First-come-first-served (the paper's default, §E.1).
+    Fcfs,
+    /// Shortest-job-first by estimated stage cost.
+    Sjf,
+    /// Earliest-SLO-deadline-first.
+    SloAware,
+}
+
+impl QueuePolicy {
+    pub fn parse(s: &str) -> Option<QueuePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fcfs" => Some(QueuePolicy::Fcfs),
+            "sjf" => Some(QueuePolicy::Sjf),
+            "slo" | "slo-aware" => Some(QueuePolicy::SloAware),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueuePolicy::Fcfs => "fcfs",
+            QueuePolicy::Sjf => "sjf",
+            QueuePolicy::SloAware => "slo-aware",
+        }
+    }
+}
+
+/// Instance-assignment strategy at stage entry (Appendix D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AssignPolicy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+impl AssignPolicy {
+    pub fn parse(s: &str) -> Option<AssignPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" => Some(AssignPolicy::RoundRobin),
+            "ll" | "least-loaded" => Some(AssignPolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            AssignPolicy::RoundRobin => "round-robin",
+            AssignPolicy::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+/// Per-stage scheduling configuration (all instances within a stage share
+/// one strategy, as Appendix D constrains).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchedulingConfig {
+    pub queue: QueuePolicy,
+    pub assign: AssignPolicy,
+}
+
+impl Default for SchedulingConfig {
+    fn default() -> Self {
+        SchedulingConfig {
+            queue: QueuePolicy::Fcfs,
+            assign: AssignPolicy::LeastLoaded,
+        }
+    }
+}
+
+/// Per-instance configuration (one element of the paper's p and b vectors).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstanceConfig {
+    pub role: Stage,
+    /// Max concurrent requests batched per step.
+    pub max_batch: u32,
+    /// Tensor-parallel degree (GPUs per instance). For encode instances
+    /// this is the IRP fan-out (Appendix D overloads p^TP = p^IRP).
+    pub tp: u32,
+    /// Pipeline-parallel degree.
+    pub pp: u32,
+}
+
+impl InstanceConfig {
+    pub fn new(role: Stage, max_batch: u32) -> InstanceConfig {
+        InstanceConfig { role, max_batch, tp: 1, pp: 1 }
+    }
+
+    /// GPUs consumed by this instance.
+    pub fn gpus(&self) -> u32 {
+        self.tp * self.pp
+    }
+}
+
+/// Complete system configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpdConfig {
+    pub mode: DeploymentMode,
+    pub instances: Vec<InstanceConfig>,
+    pub sched_encode: SchedulingConfig,
+    pub sched_prefill: SchedulingConfig,
+    pub sched_decode: SchedulingConfig,
+    /// Intra-request parallelism across encode instances (§3.2.2).
+    pub irp: bool,
+    /// Dynamic role switching (§3.2.4).
+    pub role_switching: bool,
+    /// Fraction of post-weight free memory reserved for KV cache (§E.1
+    /// uses 50% in latency experiments, 80% in capacity experiments).
+    pub kv_frac: f64,
+    /// MM cache entries per instance (§E.1 fixes 3000).
+    pub mm_cache_entries: u32,
+}
+
+impl EpdConfig {
+    /// EPD topology with uniform per-stage batch sizes.
+    pub fn epd(topology: Topology, batch_e: u32, batch_p: u32, batch_d: u32) -> EpdConfig {
+        let mut instances = Vec::new();
+        for role in topology.roles() {
+            let b = match role {
+                Stage::Encode => batch_e,
+                Stage::Prefill => batch_p,
+                Stage::Decode => batch_d,
+            };
+            instances.push(InstanceConfig::new(role, b));
+        }
+        EpdConfig {
+            mode: DeploymentMode::Epd,
+            instances,
+            sched_encode: SchedulingConfig::default(),
+            sched_prefill: SchedulingConfig::default(),
+            sched_decode: SchedulingConfig::default(),
+            irp: true,
+            role_switching: false,
+            kv_frac: 0.5,
+            mm_cache_entries: 3000,
+        }
+    }
+
+    /// DistServe-style PD disaggregation: `p` encode+prefill instances,
+    /// `d` decode instances.
+    pub fn distserve(p: u32, d: u32, batch_p: u32, batch_d: u32) -> EpdConfig {
+        let mut cfg = EpdConfig::epd(Topology::new(0, p, d), 1, batch_p, batch_d);
+        cfg.mode = DeploymentMode::PdDisagg;
+        cfg.irp = false;
+        cfg
+    }
+
+    /// vLLM-style aggregated serving on `n` instances.
+    pub fn aggregated(n: u32, batch: u32) -> EpdConfig {
+        let mut cfg = EpdConfig::epd(Topology::new(0, 0, n), 1, 1, batch);
+        // Aggregated instances are all "decode" roles that run every stage.
+        cfg.mode = DeploymentMode::Aggregated;
+        cfg.irp = false;
+        cfg
+    }
+
+    /// The instance topology (derived from roles).
+    pub fn topology(&self) -> Topology {
+        let mut t = Topology::new(0, 0, 0);
+        for inst in &self.instances {
+            t.set_count(inst.role, t.count(inst.role) + 1);
+        }
+        t
+    }
+
+    /// Total GPUs across instances.
+    pub fn total_gpus(&self) -> u32 {
+        self.instances.iter().map(|i| i.gpus()).sum()
+    }
+
+    pub fn sched_for(&self, stage: Stage) -> SchedulingConfig {
+        match stage {
+            Stage::Encode => self.sched_encode,
+            Stage::Prefill => self.sched_prefill,
+            Stage::Decode => self.sched_decode,
+        }
+    }
+
+    /// Load from a TOML config file. Format:
+    ///
+    /// ```toml
+    /// mode = "epd"            # epd | distserve | vllm
+    /// topology = "5E2P1D"
+    /// irp = true
+    /// role_switching = false
+    /// kv_frac = 0.5
+    /// batch_encode = 1
+    /// batch_prefill = 1
+    /// batch_decode = 128
+    /// [sched]
+    /// queue = "fcfs"          # fcfs | sjf | slo-aware
+    /// assign = "least-loaded" # round-robin | least-loaded
+    /// ```
+    pub fn from_toml(doc: &TomlDoc) -> anyhow::Result<EpdConfig> {
+        use anyhow::Context;
+        let mode = DeploymentMode::parse(doc.get_str("", "mode").unwrap_or("epd"))
+            .context("bad 'mode'")?;
+        let topo = Topology::parse(doc.get_str("", "topology").unwrap_or("2E1P1D"))
+            .context("bad 'topology'")?;
+        let be = doc.get_i64("", "batch_encode").unwrap_or(1) as u32;
+        let bp = doc.get_i64("", "batch_prefill").unwrap_or(1) as u32;
+        let bd = doc.get_i64("", "batch_decode").unwrap_or(128) as u32;
+        let mut cfg = EpdConfig::epd(topo, be, bp, bd);
+        cfg.mode = mode;
+        cfg.irp = doc.get_bool("", "irp").unwrap_or(true);
+        cfg.role_switching = doc.get_bool("", "role_switching").unwrap_or(false);
+        cfg.kv_frac = doc.get_f64("", "kv_frac").unwrap_or(0.5);
+        if let Some(q) = doc.get_str("sched", "queue") {
+            let q = QueuePolicy::parse(q).context("bad sched.queue")?;
+            cfg.sched_encode.queue = q;
+            cfg.sched_prefill.queue = q;
+            cfg.sched_decode.queue = q;
+        }
+        if let Some(a) = doc.get_str("sched", "assign") {
+            let a = AssignPolicy::parse(a).context("bad sched.assign")?;
+            cfg.sched_encode.assign = a;
+            cfg.sched_prefill.assign = a;
+            cfg.sched_decode.assign = a;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders() {
+        let cfg = EpdConfig::epd(Topology::new(5, 2, 1), 2, 1, 128);
+        assert_eq!(cfg.instances.len(), 8);
+        assert_eq!(cfg.topology(), Topology::new(5, 2, 1));
+        assert_eq!(cfg.total_gpus(), 8);
+        assert!(cfg.irp);
+
+        let ds = EpdConfig::distserve(7, 1, 1, 128);
+        assert_eq!(ds.mode, DeploymentMode::PdDisagg);
+        assert_eq!(ds.topology(), Topology::new(0, 7, 1));
+
+        let agg = EpdConfig::aggregated(8, 64);
+        assert_eq!(agg.mode, DeploymentMode::Aggregated);
+        assert_eq!(agg.instances.len(), 8);
+    }
+
+    #[test]
+    fn from_toml_full() {
+        let doc = TomlDoc::parse(
+            r#"
+mode = "epd"
+topology = "5E2P1D"
+irp = true
+kv_frac = 0.8
+batch_decode = 64
+[sched]
+queue = "sjf"
+assign = "round-robin"
+"#,
+        )
+        .unwrap();
+        let cfg = EpdConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.topology(), Topology::new(5, 2, 1));
+        assert_eq!(cfg.kv_frac, 0.8);
+        assert_eq!(cfg.sched_decode.queue, QueuePolicy::Sjf);
+        assert_eq!(cfg.sched_encode.assign, AssignPolicy::RoundRobin);
+        let d = cfg.instances.iter().find(|i| i.role == Stage::Decode).unwrap();
+        assert_eq!(d.max_batch, 64);
+    }
+
+    #[test]
+    fn from_toml_rejects_bad_mode() {
+        let doc = TomlDoc::parse("mode = \"nope\"").unwrap();
+        assert!(EpdConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(QueuePolicy::parse("FCFS"), Some(QueuePolicy::Fcfs));
+        assert_eq!(AssignPolicy::parse("least-loaded"), Some(AssignPolicy::LeastLoaded));
+        assert_eq!(QueuePolicy::parse("??"), None);
+    }
+}

@@ -1,0 +1,14 @@
+//! Core request/stage/topology/SLO types shared by the simulator, the real
+//! engine and the optimizer.
+
+pub mod request;
+pub mod stage;
+pub mod topology;
+pub mod slo;
+pub mod config;
+
+pub use config::{EpdConfig, InstanceConfig, SchedulingConfig};
+pub use request::{Request, RequestId, RequestPhase, RequestTimeline};
+pub use slo::{Slo, SloTable};
+pub use stage::Stage;
+pub use topology::{DeploymentMode, Topology};

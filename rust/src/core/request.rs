@@ -1,0 +1,170 @@
+//! The multimodal request and its lifecycle timeline.
+
+use crate::model::vision::Resolution;
+
+/// Unique request identifier.
+pub type RequestId = u64;
+
+/// Where a request currently is in the E→P→D pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestPhase {
+    /// Waiting in (or being assigned to) an encode queue.
+    PendingEncode,
+    Encoding,
+    /// MM tokens produced; EP-migration pending/in-flight.
+    MigratingToPrefill,
+    PendingPrefill,
+    Prefilling,
+    /// KV cache produced; PD-migration pending/in-flight.
+    MigratingToDecode,
+    PendingDecode,
+    Decoding,
+    Finished,
+}
+
+/// A serving request: prompt + multimodal payload + generation length.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Arrival time, seconds since experiment start.
+    pub arrival: f64,
+    /// Text prompt length in tokens.
+    pub prompt_tokens: u32,
+    /// Number of images (or audio clips / video frames) attached.
+    pub images: u32,
+    /// Resolution of each image.
+    pub resolution: Resolution,
+    /// Number of output tokens to generate.
+    pub output_tokens: u32,
+    /// Precomputed tiles per image for the target model (cached by the
+    /// workload generator so the hot path never recomputes tiling).
+    pub tiles_per_image: u32,
+    /// Precomputed MM tokens per image.
+    pub mm_tokens_per_image: u32,
+}
+
+impl Request {
+    /// Total encoder tiles in this request.
+    pub fn total_tiles(&self) -> u32 {
+        self.images * self.tiles_per_image
+    }
+
+    /// Total multimodal tokens this request contributes to prefill.
+    pub fn total_mm_tokens(&self) -> u64 {
+        self.images as u64 * self.mm_tokens_per_image as u64
+    }
+
+    /// Total prefill context length (MM + text prompt).
+    pub fn prefill_tokens(&self) -> u64 {
+        self.total_mm_tokens() + self.prompt_tokens as u64
+    }
+
+    /// Final sequence length after generation completes.
+    pub fn final_tokens(&self) -> u64 {
+        self.prefill_tokens() + self.output_tokens as u64
+    }
+}
+
+/// Timestamps collected as a request moves through the pipeline.
+/// All in seconds since experiment start; `f64::NAN` until set.
+#[derive(Debug, Clone)]
+pub struct RequestTimeline {
+    pub id: RequestId,
+    pub arrival: f64,
+    pub encode_start: f64,
+    pub encode_end: f64,
+    pub prefill_start: f64,
+    pub prefill_end: f64,
+    /// Time the first output token reached the user (end of prefill plus
+    /// any PD-migration the first token waits on).
+    pub first_token: f64,
+    pub finish: f64,
+    pub output_tokens: u32,
+}
+
+impl RequestTimeline {
+    pub fn new(id: RequestId, arrival: f64) -> RequestTimeline {
+        RequestTimeline {
+            id,
+            arrival,
+            encode_start: f64::NAN,
+            encode_end: f64::NAN,
+            prefill_start: f64::NAN,
+            prefill_end: f64::NAN,
+            first_token: f64::NAN,
+            finish: f64::NAN,
+            output_tokens: 0,
+        }
+    }
+
+    /// Time to first token (§4's TTFT).
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    /// Time per output token excluding the first (§4's TPOT). Zero when
+    /// one or fewer tokens were generated.
+    pub fn tpot(&self) -> f64 {
+        if self.output_tokens <= 1 {
+            return 0.0;
+        }
+        (self.finish - self.first_token) / (self.output_tokens - 1) as f64
+    }
+
+    /// End-to-end latency.
+    pub fn latency(&self) -> f64 {
+        self.finish - self.arrival
+    }
+
+    pub fn is_finished(&self) -> bool {
+        !self.finish.is_nan()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request {
+            id: 1,
+            arrival: 0.0,
+            prompt_tokens: 22,
+            images: 4,
+            resolution: Resolution::four_k(),
+            output_tokens: 10,
+            tiles_per_image: 10,
+            mm_tokens_per_image: 640,
+        }
+    }
+
+    #[test]
+    fn token_arithmetic() {
+        let r = req();
+        assert_eq!(r.total_tiles(), 40);
+        assert_eq!(r.total_mm_tokens(), 2560);
+        assert_eq!(r.prefill_tokens(), 2582);
+        assert_eq!(r.final_tokens(), 2592);
+    }
+
+    #[test]
+    fn timeline_metrics() {
+        let mut t = RequestTimeline::new(1, 10.0);
+        t.first_token = 12.5;
+        t.finish = 13.4;
+        t.output_tokens = 10;
+        assert!((t.ttft() - 2.5).abs() < 1e-12);
+        assert!((t.tpot() - 0.1).abs() < 1e-12);
+        assert!((t.latency() - 3.4).abs() < 1e-12);
+        assert!(t.is_finished());
+    }
+
+    #[test]
+    fn tpot_degenerate_single_token() {
+        let mut t = RequestTimeline::new(1, 0.0);
+        t.first_token = 1.0;
+        t.finish = 1.0;
+        t.output_tokens = 1;
+        assert_eq!(t.tpot(), 0.0);
+    }
+}

@@ -1,0 +1,98 @@
+//! Service-level objectives: the TTFT/TPOT thresholds from Appendix E.3
+//! (Table 9) and the dataset-specific criteria used in §4.1.
+
+use crate::model::spec::ModelId;
+
+/// A TTFT/TPOT SLO pair, seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    pub ttft: f64,
+    pub tpot: f64,
+}
+
+impl Slo {
+    pub const fn new(ttft: f64, tpot: f64) -> Slo {
+        Slo { ttft, tpot }
+    }
+
+    /// Does a request with the given measured latencies attain the SLO?
+    pub fn attained(&self, ttft: f64, tpot: f64) -> bool {
+        ttft <= self.ttft && tpot <= self.tpot
+    }
+}
+
+/// Lookup of the paper's SLO criteria.
+pub struct SloTable;
+
+impl SloTable {
+    /// Table 9: per-model SLOs by images-per-request for the synthetic
+    /// workload. (The 6-image InternVL-26B TPOT of 0.95 in the paper is a
+    /// typo for 0.095; we keep the published value for fidelity and note it
+    /// in EXPERIMENTS.md.)
+    pub fn synthetic(model: ModelId, images_per_request: u32) -> Option<Slo> {
+        let table: &[(u32, Slo, Slo, Slo)] = &[
+            // (#I/R, MiniCPM, InternVL-8B, InternVL-26B)
+            (2, Slo::new(1.40, 0.04), Slo::new(1.20, 0.05), Slo::new(3.50, 0.07)),
+            (4, Slo::new(2.60, 0.04), Slo::new(2.40, 0.06), Slo::new(7.05, 0.08)),
+            (6, Slo::new(3.90, 0.06), Slo::new(3.55, 0.09), Slo::new(11.00, 0.95)),
+            (8, Slo::new(5.10, 0.06), Slo::new(5.00, 0.18), Slo::new(15.00, 0.15)),
+        ];
+        let row = table.iter().find(|(n, ..)| *n == images_per_request)?;
+        match model {
+            ModelId::MiniCpmV26 => Some(row.1),
+            ModelId::InternVl2_8b => Some(row.2),
+            ModelId::InternVl2_26b => Some(row.3),
+            _ => None,
+        }
+    }
+
+    /// NextQA experiment (§4.1): TTFT = 5.60 s, TPOT = 0.06 s.
+    pub fn nextqa() -> Slo {
+        Slo::new(5.60, 0.06)
+    }
+
+    /// Video-MME experiment (§4.1): TTFT ≤ 3.1 s, TPOT ≤ 0.025 s.
+    pub fn videomme() -> Slo {
+        Slo::new(3.1, 0.025)
+    }
+
+    /// Audio experiment (App. A.1): TTFT ≤ 2.0 s, TPOT ≤ 0.025 s.
+    pub fn audio() -> Slo {
+        Slo::new(2.0, 0.025)
+    }
+
+    /// NPU experiment (§4.5): TTFT ≤ 8.5 s, TPOT ≤ 0.12 s.
+    pub fn npu() -> Slo {
+        Slo::new(8.5, 0.12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table9_lookups() {
+        let s = SloTable::synthetic(ModelId::MiniCpmV26, 2).unwrap();
+        assert_eq!(s, Slo::new(1.40, 0.04));
+        let s = SloTable::synthetic(ModelId::InternVl2_26b, 8).unwrap();
+        assert_eq!(s, Slo::new(15.00, 0.15));
+        assert!(SloTable::synthetic(ModelId::MiniCpmV26, 3).is_none());
+        assert!(SloTable::synthetic(ModelId::TinyLmm, 2).is_none());
+    }
+
+    #[test]
+    fn attainment_boundary() {
+        let s = Slo::new(1.0, 0.05);
+        assert!(s.attained(1.0, 0.05));
+        assert!(!s.attained(1.01, 0.05));
+        assert!(!s.attained(1.0, 0.051));
+    }
+
+    #[test]
+    fn dataset_slos() {
+        assert_eq!(SloTable::nextqa().ttft, 5.60);
+        assert_eq!(SloTable::videomme().tpot, 0.025);
+        assert_eq!(SloTable::npu().ttft, 8.5);
+    }
+}

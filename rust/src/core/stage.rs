@@ -1,0 +1,75 @@
+//! The three pipeline stages of §3.1.
+
+/// A pipeline stage an instance can serve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Stage {
+    /// Multimodal encoding: raw media → MM tokens.
+    Encode,
+    /// Prefill: MM tokens + prompt → KV cache + first token.
+    Prefill,
+    /// Decode: autoregressive generation.
+    Decode,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 3] = [Stage::Encode, Stage::Prefill, Stage::Decode];
+
+    /// One-letter code used in configuration strings like "5E2P1D".
+    pub fn code(&self) -> char {
+        match self {
+            Stage::Encode => 'E',
+            Stage::Prefill => 'P',
+            Stage::Decode => 'D',
+        }
+    }
+
+    pub fn from_code(c: char) -> Option<Stage> {
+        match c.to_ascii_uppercase() {
+            'E' => Some(Stage::Encode),
+            'P' => Some(Stage::Prefill),
+            'D' => Some(Stage::Decode),
+            _ => None,
+        }
+    }
+
+    /// The downstream stage a request migrates to, if any.
+    pub fn next(&self) -> Option<Stage> {
+        match self {
+            Stage::Encode => Some(Stage::Prefill),
+            Stage::Prefill => Some(Stage::Decode),
+            Stage::Decode => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Stage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Stage::Encode => "encode",
+            Stage::Prefill => "prefill",
+            Stage::Decode => "decode",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_roundtrip() {
+        for s in Stage::ALL {
+            assert_eq!(Stage::from_code(s.code()), Some(s));
+        }
+        assert_eq!(Stage::from_code('x'), None);
+        assert_eq!(Stage::from_code('e'), Some(Stage::Encode));
+    }
+
+    #[test]
+    fn pipeline_order() {
+        assert_eq!(Stage::Encode.next(), Some(Stage::Prefill));
+        assert_eq!(Stage::Prefill.next(), Some(Stage::Decode));
+        assert_eq!(Stage::Decode.next(), None);
+    }
+}

@@ -1,0 +1,183 @@
+//! Deployment topologies: how stages map onto instances/GPUs.
+//!
+//! The paper's three compared systems are three topologies of the same
+//! pipeline:
+//! - **EPD** (ours): dedicated E, P and D instances ("5E2P1D").
+//! - **PD / DistServe**: encode+prefill colocated, decode separate ("7P1D"
+//!   where each P instance runs E then P).
+//! - **Aggregated / vLLM**: every instance runs all three stages.
+
+use super::stage::Stage;
+
+/// Which system architecture a set of instances implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeploymentMode {
+    /// Full EPD disaggregation (the paper's contribution).
+    Epd,
+    /// Prefill–decode disaggregation with encode fused into prefill
+    /// (the extended-DistServe baseline).
+    PdDisagg,
+    /// Monolithic: all stages on every instance (the vLLM baseline).
+    Aggregated,
+}
+
+impl DeploymentMode {
+    pub fn parse(s: &str) -> Option<DeploymentMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "epd" => Some(DeploymentMode::Epd),
+            "pd" | "distserve" | "pd-disagg" => Some(DeploymentMode::PdDisagg),
+            "aggregated" | "vllm" | "agg" => Some(DeploymentMode::Aggregated),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeploymentMode::Epd => "EPD",
+            DeploymentMode::PdDisagg => "DistServe",
+            DeploymentMode::Aggregated => "vLLM",
+        }
+    }
+
+    /// The stages an instance assigned `role` actually executes under this
+    /// mode. In PD mode a "prefill" instance also encodes; in aggregated
+    /// mode every instance does everything.
+    pub fn stages_for_role(&self, role: Stage) -> &'static [Stage] {
+        match self {
+            DeploymentMode::Epd => match role {
+                Stage::Encode => &[Stage::Encode],
+                Stage::Prefill => &[Stage::Prefill],
+                Stage::Decode => &[Stage::Decode],
+            },
+            DeploymentMode::PdDisagg => match role {
+                Stage::Encode | Stage::Prefill => &[Stage::Encode, Stage::Prefill],
+                Stage::Decode => &[Stage::Decode],
+            },
+            DeploymentMode::Aggregated => &[Stage::Encode, Stage::Prefill, Stage::Decode],
+        }
+    }
+}
+
+/// A cluster topology: per-stage instance counts, e.g. "5E2P1D".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Topology {
+    pub encode: u32,
+    pub prefill: u32,
+    pub decode: u32,
+}
+
+impl Topology {
+    pub const fn new(encode: u32, prefill: u32, decode: u32) -> Topology {
+        Topology { encode, prefill, decode }
+    }
+
+    /// Parse a "5E2P1D"-style string (stage letters may appear in any
+    /// order; missing stages default to zero).
+    pub fn parse(s: &str) -> Option<Topology> {
+        let mut t = Topology::new(0, 0, 0);
+        let mut num = String::new();
+        let mut saw_any = false;
+        for c in s.chars() {
+            if c.is_ascii_digit() {
+                num.push(c);
+            } else {
+                let stage = Stage::from_code(c)?;
+                let n: u32 = num.parse().ok()?;
+                num.clear();
+                saw_any = true;
+                match stage {
+                    Stage::Encode => t.encode += n,
+                    Stage::Prefill => t.prefill += n,
+                    Stage::Decode => t.decode += n,
+                }
+            }
+        }
+        if !num.is_empty() || !saw_any {
+            return None;
+        }
+        Some(t)
+    }
+
+    pub fn total(&self) -> u32 {
+        self.encode + self.prefill + self.decode
+    }
+
+    pub fn count(&self, stage: Stage) -> u32 {
+        match stage {
+            Stage::Encode => self.encode,
+            Stage::Prefill => self.prefill,
+            Stage::Decode => self.decode,
+        }
+    }
+
+    pub fn set_count(&mut self, stage: Stage, n: u32) {
+        match stage {
+            Stage::Encode => self.encode = n,
+            Stage::Prefill => self.prefill = n,
+            Stage::Decode => self.decode = n,
+        }
+    }
+
+    /// Expand into per-instance roles, encode instances first.
+    pub fn roles(&self) -> Vec<Stage> {
+        let mut v = Vec::with_capacity(self.total() as usize);
+        v.extend(std::iter::repeat(Stage::Encode).take(self.encode as usize));
+        v.extend(std::iter::repeat(Stage::Prefill).take(self.prefill as usize));
+        v.extend(std::iter::repeat(Stage::Decode).take(self.decode as usize));
+        v
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}E{}P{}D", self.encode, self.prefill, self.decode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display() {
+        let t = Topology::parse("5E2P1D").unwrap();
+        assert_eq!(t, Topology::new(5, 2, 1));
+        assert_eq!(t.to_string(), "5E2P1D");
+        assert_eq!(Topology::parse("7P1D"), Some(Topology::new(0, 7, 1)));
+        assert_eq!(Topology::parse("2e1p1d"), Some(Topology::new(2, 1, 1)));
+        assert_eq!(Topology::parse(""), None);
+        assert_eq!(Topology::parse("5X"), None);
+        assert_eq!(Topology::parse("5"), None);
+    }
+
+    #[test]
+    fn totals_and_roles() {
+        let t = Topology::new(2, 1, 1);
+        assert_eq!(t.total(), 4);
+        assert_eq!(
+            t.roles(),
+            vec![Stage::Encode, Stage::Encode, Stage::Prefill, Stage::Decode]
+        );
+    }
+
+    #[test]
+    fn mode_stage_expansion() {
+        assert_eq!(
+            DeploymentMode::PdDisagg.stages_for_role(Stage::Prefill),
+            &[Stage::Encode, Stage::Prefill]
+        );
+        assert_eq!(
+            DeploymentMode::Epd.stages_for_role(Stage::Prefill),
+            &[Stage::Prefill]
+        );
+        assert_eq!(DeploymentMode::Aggregated.stages_for_role(Stage::Decode).len(), 3);
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(DeploymentMode::parse("vllm"), Some(DeploymentMode::Aggregated));
+        assert_eq!(DeploymentMode::parse("distserve"), Some(DeploymentMode::PdDisagg));
+        assert_eq!(DeploymentMode::parse("epd"), Some(DeploymentMode::Epd));
+        assert_eq!(DeploymentMode::parse("zzz"), None);
+    }
+}

@@ -1,0 +1,149 @@
+//! Minimal HTTP/1.1 frontend over `std::net` (no hyper/axum offline):
+//! thread-per-connection, enough of the protocol for the API surface:
+//!
+//! - `POST /v1/completions` — generate (blocking until completion)
+//! - `GET  /metrics`        — live TTFT/TPOT/latency report (JSON)
+//! - `GET  /healthz`        — liveness
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use log::{info, warn};
+
+use crate::api::{completion_response, error_response, CompletionRequest};
+use crate::engine::job::GenRequest;
+use crate::engine::serve::EpdEngine;
+use crate::util::json::Json;
+
+/// A running HTTP server.
+pub struct HttpServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind and serve on a background thread. `addr` like "127.0.0.1:8080"
+    /// (port 0 picks a free port).
+    pub fn serve(engine: Arc<EpdEngine>, addr: &str) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr).context("binding http listener")?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            info!("http: serving on {local}");
+            while !stop2.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let eng = Arc::clone(&engine);
+                        std::thread::spawn(move || {
+                            if let Err(e) = handle_conn(stream, &eng) {
+                                warn!("http: connection error: {e:#}");
+                            }
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                    Err(e) => {
+                        warn!("http: accept error: {e}");
+                        break;
+                    }
+                }
+            }
+        });
+        Ok(HttpServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, engine: &Arc<EpdEngine>) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("/").to_string();
+
+    // Headers.
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim();
+        if line.is_empty() {
+            break;
+        }
+        if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length.min(1 << 20)];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    let body = String::from_utf8_lossy(&body).into_owned();
+
+    let (status, payload) = route(&method, &path, &body, engine);
+    respond(stream, status, &payload.to_string())
+}
+
+fn route(method: &str, path: &str, body: &str, engine: &Arc<EpdEngine>) -> (u16, Json) {
+    match (method, path) {
+        ("GET", "/healthz") => (200, Json::obj(vec![("ok", Json::Bool(true))])),
+        ("GET", "/metrics") => (200, engine.metrics.report()),
+        ("POST", "/v1/completions") => {
+            let parsed = match Json::parse(body) {
+                Ok(j) => j,
+                Err(e) => return (400, error_response(&format!("bad json: {e}"))),
+            };
+            let req = match CompletionRequest::from_json(&parsed) {
+                Ok(r) => r,
+                Err(e) => return (400, error_response(&format!("bad request: {e}"))),
+            };
+            let id = engine.fresh_id();
+            let rx = engine.submit(GenRequest {
+                id,
+                images: req.images,
+                prompt: req.prompt,
+                max_tokens: req.max_tokens,
+                seed: req.seed,
+            });
+            match rx.recv() {
+                Ok(resp) => (
+                    200,
+                    completion_response(id, &resp.text, resp.tokens.len(), resp.ttft, resp.latency),
+                ),
+                Err(_) => (500, error_response("engine dropped the request")),
+            }
+        }
+        _ => (404, error_response("not found")),
+    }
+}
+
+fn respond(mut stream: TcpStream, status: u16, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}

@@ -1,0 +1,371 @@
+//! The instance thread: owns one `TinyLmmRuntime` ("its GPU"), pulls work
+//! for its current role from the stage queues, and executes it. Handles
+//! dynamic role switching via its control channel (§3.2.4: offload is
+//! implicit — unprocessed work lives in the *global* queues, so a
+//! switching instance simply stops pulling; migration is modelled by the
+//! executable warm-up for the new role plus the configured pause).
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Duration;
+
+use log::{debug, info, warn};
+
+use crate::core::stage::Stage;
+use crate::core::topology::DeploymentMode;
+use crate::metrics::recorder::MetricsRecorder;
+use crate::model::tokenizer;
+use crate::runtime::tiny_lmm::{argmax, TinyLmmRuntime};
+
+use super::job::{GenResponse, Job, ReqCtx};
+use super::queues::StageQueues;
+
+/// Control messages to an instance.
+pub enum Ctrl {
+    /// Switch role to the given stage after a simulated migration pause.
+    Switch { to: Stage, pause: Duration },
+    Shutdown,
+}
+
+/// Per-instance configuration.
+pub struct InstanceParams {
+    pub idx: usize,
+    pub role: Stage,
+    pub mode: DeploymentMode,
+    pub artifacts_dir: String,
+    /// Decode batch cap (bounded by the largest decode bucket).
+    pub max_decode_batch: u32,
+    /// Steps between queue re-checks inside a decode loop (monolith
+    /// preemption granularity).
+    pub decode_recheck_steps: u32,
+}
+
+/// Stage-pull priority for a role under a deployment mode.
+pub fn pull_stages(mode: DeploymentMode, role: Stage) -> Vec<Stage> {
+    match mode {
+        DeploymentMode::Epd => vec![role],
+        DeploymentMode::PdDisagg => match role {
+            Stage::Encode | Stage::Prefill => vec![Stage::Encode, Stage::Prefill],
+            Stage::Decode => vec![Stage::Decode],
+        },
+        // vLLM-like: EP work preempts decode.
+        DeploymentMode::Aggregated => vec![Stage::Encode, Stage::Prefill, Stage::Decode],
+    }
+}
+
+/// Thread body.
+pub fn instance_main(
+    params: InstanceParams,
+    queues: Arc<StageQueues>,
+    ctrl: Receiver<Ctrl>,
+    metrics: Arc<MetricsRecorder>,
+) {
+    let mut rt = match TinyLmmRuntime::load(&params.artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            warn!("instance {}: runtime load failed: {e:#}", params.idx);
+            return;
+        }
+    };
+    let mut role = params.role;
+    if let Err(e) = warm_for(&mut rt, params.mode, role) {
+        warn!("instance {}: warm-up failed: {e:#}", params.idx);
+        return;
+    }
+    info!("instance {} up as {role}", params.idx);
+
+    loop {
+        // Control first: switches and shutdown preempt new work.
+        match ctrl.try_recv() {
+            Ok(Ctrl::Shutdown) => break,
+            Ok(Ctrl::Switch { to, pause }) => {
+                info!("instance {}: switching {role} -> {to}", params.idx);
+                // Migration (§3.2.4): reconfigure model + caches. Weight
+                // upload for the new role is real work; the pause models
+                // the remainder of the paper's measured switch time.
+                std::thread::sleep(pause);
+                if let Err(e) = warm_for(&mut rt, params.mode, to) {
+                    warn!("instance {}: warm failed on switch: {e:#}", params.idx);
+                }
+                role = to;
+                queues.set_role(params.idx, to);
+                continue;
+            }
+            Err(_) => {}
+        }
+        if queues.is_shutdown() {
+            break;
+        }
+
+        let stages = pull_stages(params.mode, role);
+        // Decode work is batch-formed separately.
+        let non_decode: Vec<Stage> =
+            stages.iter().copied().filter(|s| *s != Stage::Decode).collect();
+
+        if let Some(job) = queues.try_pop(&non_decode) {
+            handle_ep_job(&mut rt, job, &queues, &metrics, params.mode);
+            continue;
+        }
+        if stages.contains(&Stage::Decode) {
+            let jobs = queues.pop_decode_batch(params.max_decode_batch as usize);
+            if !jobs.is_empty() {
+                run_decode_batch(&mut rt, jobs, &params, &queues, &metrics, role);
+                continue;
+            }
+        }
+        // Nothing to do: block briefly.
+        if queues
+            .pop_timeout(&non_decode, Duration::from_millis(5))
+            .map(|job| handle_ep_job(&mut rt, job, &queues, &metrics, params.mode))
+            .is_none()
+        {
+            // Timed out; loop to re-check control/decode.
+        }
+    }
+    debug!("instance {} down", params.idx);
+}
+
+fn warm_for(rt: &mut TinyLmmRuntime, mode: DeploymentMode, role: Stage) -> anyhow::Result<()> {
+    for s in pull_stages(mode, role) {
+        match s {
+            Stage::Encode => rt.warm_encode()?,
+            Stage::Prefill => rt.warm_prefill()?,
+            Stage::Decode => rt.warm_decode()?,
+        }
+    }
+    Ok(())
+}
+
+/// Encode or prefill one job.
+fn handle_ep_job(
+    rt: &mut TinyLmmRuntime,
+    job: Job,
+    queues: &Arc<StageQueues>,
+    metrics: &Arc<MetricsRecorder>,
+    mode: DeploymentMode,
+) {
+    match job {
+        Job::Encode { ctx, shard, patches, tiles } => {
+            match rt.encode(&patches, tiles) {
+                Ok(mm) => {
+                    let bytes = mm.len() * 4;
+                    if ctx.shard_done(shard, mm) {
+                        // Last shard: EP migration of the merged tokens.
+                        let merged = ctx.merged_mm();
+                        queues.account_ep(merged.len() * 4);
+                        queues.push(Stage::Prefill, Job::Prefill { ctx, mm: merged });
+                    } else {
+                        let _ = bytes;
+                    }
+                }
+                Err(e) => warn!("encode failed for req {}: {e:#}", ctx.id),
+            }
+        }
+        Job::Prefill { ctx, mm } => {
+            let images = ctx.images.max(1);
+            let (bucket_tokens, mm_tokens) = match rt.prefill_bucket_tokens(images) {
+                Ok(x) => x,
+                Err(e) => {
+                    warn!("no prefill bucket for req {}: {e:#}", ctx.id);
+                    return;
+                }
+            };
+            // Token layout: [BOS, M placeholders, text..., PAD...].
+            let mut tokens: Vec<i32> = vec![tokenizer::BOS as i32];
+            tokens.extend(
+                std::iter::repeat(tokenizer::IMAGE_PLACEHOLDER as i32).take(mm_tokens as usize),
+            );
+            let text_budget = (bucket_tokens as usize).saturating_sub(tokens.len());
+            tokens.extend(ctx.text_tokens.iter().take(text_budget));
+            let len = tokens.len() as i32;
+            tokens.resize(bucket_tokens as usize, tokenizer::PAD as i32);
+
+            match rt.prefill(images, &tokens, &mm, len) {
+                Ok(pf) => {
+                    let first = argmax(&pf.logits);
+                    metrics.on_first_token(ctx.id);
+                    if ctx.max_tokens <= 1 {
+                        finish(&ctx, vec![first], metrics);
+                        return;
+                    }
+                    queues.account_pd(pf.kv.len() * 4);
+                    let _ = mode;
+                    queues.push(
+                        Stage::Decode,
+                        Job::Decode {
+                            ctx,
+                            kv: pf.kv,
+                            len,
+                            next_token: first,
+                            generated: vec![first],
+                        },
+                    );
+                }
+                Err(e) => warn!("prefill failed for req {}: {e:#}", ctx.id),
+            }
+        }
+        Job::Decode { .. } => unreachable!("decode jobs go through run_decode_batch"),
+    }
+}
+
+struct Slot {
+    ctx: Arc<ReqCtx>,
+    generated: Vec<i32>,
+    cur: i32,
+    done: bool,
+}
+
+/// Continuous-batching decode loop with periodic queue re-checks (the
+/// monolith preemption point, and the join point for waiting requests).
+fn run_decode_batch(
+    rt: &mut TinyLmmRuntime,
+    jobs: Vec<Job>,
+    params: &InstanceParams,
+    queues: &Arc<StageQueues>,
+    metrics: &Arc<MetricsRecorder>,
+    role: Stage,
+) {
+    let mut slots: Vec<Slot> = Vec::new();
+    let mut kvs: Vec<Vec<f32>> = Vec::new();
+    let mut lens: Vec<i32> = Vec::new();
+    for job in jobs {
+        let Job::Decode { ctx, kv, len, next_token, generated } = job else {
+            unreachable!()
+        };
+        slots.push(Slot { ctx, generated, cur: next_token, done: false });
+        kvs.push(kv);
+        lens.push(len);
+    }
+
+    'outer: loop {
+        let kv_refs: Vec<&[f32]> = kvs.iter().map(|k| k.as_slice()).collect();
+        let mut state = match rt.decode_start(&kv_refs, &lens) {
+            Ok(s) => s,
+            Err(e) => {
+                warn!("decode_start failed: {e:#}");
+                return;
+            }
+        };
+        let bucket = state.batch as usize;
+
+        let mut steps_since_recheck = 0u32;
+        loop {
+            // Build the token vector (idle/finished slots feed PAD).
+            let mut tokens = vec![tokenizer::PAD as i32; bucket];
+            for (i, s) in slots.iter().enumerate() {
+                if !s.done {
+                    tokens[i] = s.cur;
+                }
+            }
+            let logits = match rt.decode_step(&mut state, &tokens) {
+                Ok(l) => l,
+                Err(e) => {
+                    warn!("decode_step failed: {e:#}");
+                    return;
+                }
+            };
+            let vocab = rt.config().llm_vocab as usize;
+            let max_seq = rt.config().llm_max_seq as i32;
+            for (i, s) in slots.iter_mut().enumerate() {
+                if s.done {
+                    continue;
+                }
+                let next = argmax(&logits[i * vocab..(i + 1) * vocab]);
+                s.generated.push(next);
+                s.cur = next;
+                let at_cap = state.lens[i] + 1 >= max_seq;
+                if s.generated.len() as u32 >= s.ctx.max_tokens
+                    || next == tokenizer::EOS as i32
+                    || at_cap
+                {
+                    s.done = true;
+                    finish(&s.ctx, s.generated.clone(), metrics);
+                }
+            }
+            if slots.iter().all(|s| s.done) {
+                return;
+            }
+            steps_since_recheck += 1;
+            if steps_since_recheck >= params.decode_recheck_steps {
+                steps_since_recheck = 0;
+                let stages = pull_stages(params.mode, role);
+                let has_ep_work = stages
+                    .iter()
+                    .any(|&s| s != Stage::Decode && queues.len(s) > 0);
+                let can_grow = slots.iter().filter(|s| !s.done).count()
+                    < params.max_decode_batch as usize
+                    && queues.len(Stage::Decode) > 0;
+                if has_ep_work || can_grow {
+                    // Re-form: pull live KV back to the host, handle the
+                    // EP work / admit waiting sequences, then resume.
+                    let extracted = match rt.decode_extract(&state) {
+                        Ok(x) => x,
+                        Err(e) => {
+                            warn!("decode_extract failed: {e:#}");
+                            return;
+                        }
+                    };
+                    let mut new_slots = Vec::new();
+                    let mut new_kvs = Vec::new();
+                    let mut new_lens = Vec::new();
+                    for (i, s) in slots.drain(..).enumerate() {
+                        if !s.done {
+                            new_kvs.push(extracted[i].clone());
+                            new_lens.push(state.lens[i]);
+                            new_slots.push(s);
+                        }
+                    }
+                    drop(state);
+
+                    if has_ep_work {
+                        // Preemption (the Figure 1 interference): serve the
+                        // EP queue before decoding resumes.
+                        let non_decode: Vec<Stage> = stages
+                            .iter()
+                            .copied()
+                            .filter(|s| *s != Stage::Decode)
+                            .collect();
+                        while let Some(job) = queues.try_pop(&non_decode) {
+                            handle_ep_job(rt, job, queues, metrics, params.mode);
+                        }
+                    }
+                    // Admit waiting decode jobs into the freed capacity.
+                    let room = params.max_decode_batch as usize - new_slots.len();
+                    for job in queues.pop_decode_batch(room) {
+                        let Job::Decode { ctx, kv, len, next_token, generated } = job else {
+                            unreachable!()
+                        };
+                        new_slots.push(Slot { ctx, generated, cur: next_token, done: false });
+                        new_kvs.push(kv);
+                        new_lens.push(len);
+                    }
+                    if new_slots.is_empty() {
+                        return;
+                    }
+                    slots = new_slots;
+                    kvs = new_kvs;
+                    lens = new_lens;
+                    continue 'outer;
+                }
+            }
+        }
+    }
+}
+
+fn finish(ctx: &Arc<ReqCtx>, tokens: Vec<i32>, metrics: &Arc<MetricsRecorder>) {
+    metrics.on_finish(ctx.id, tokens.len() as u32);
+    let text = tokenizer::decode(
+        &tokens.iter().map(|&t| t.max(0) as u32).collect::<Vec<u32>>(),
+    );
+    let now = std::time::Instant::now();
+    let latency = now.duration_since(ctx.arrival).as_secs_f64();
+    let resp = GenResponse {
+        id: ctx.id,
+        tokens,
+        text,
+        ttft: f64::NAN, // filled by the engine from the recorder
+        latency,
+    };
+    // Receiver may have gone away (fire-and-forget submits) — ignore.
+    let _ = ctx.done_tx.try_send(resp);
+}

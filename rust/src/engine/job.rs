@@ -1,0 +1,142 @@
+//! Engine job types and the per-request shared context.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::mpsc::SyncSender;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::core::request::RequestId;
+
+/// A generation request submitted to the engine.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: RequestId,
+    /// Synthetic images attached (each is one encoder tile for tiny-lmm).
+    pub images: u32,
+    pub prompt: String,
+    pub max_tokens: u32,
+    /// Seed for the synthetic image content.
+    pub seed: u64,
+}
+
+/// The completed response.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    pub text: String,
+    /// Seconds from submit to first token.
+    pub ttft: f64,
+    /// Seconds from submit to completion.
+    pub latency: f64,
+}
+
+/// Shared per-request state, referenced by every job of the request.
+pub struct ReqCtx {
+    pub id: RequestId,
+    pub images: u32,
+    pub text_tokens: Vec<i32>,
+    pub max_tokens: u32,
+    pub arrival: Instant,
+    pub shards_total: u32,
+    shards_done: AtomicU32,
+    /// MM token shards, indexed by shard number, merged when all arrive
+    /// (§3.2.2's align-and-merge at the prefill side).
+    pub mm_parts: Mutex<Vec<Option<Vec<f32>>>>,
+    pub done_tx: SyncSender<GenResponse>,
+}
+
+impl ReqCtx {
+    pub fn new(
+        id: RequestId,
+        images: u32,
+        text_tokens: Vec<i32>,
+        max_tokens: u32,
+        shards_total: u32,
+        done_tx: SyncSender<GenResponse>,
+    ) -> ReqCtx {
+        ReqCtx {
+            id,
+            images,
+            text_tokens,
+            max_tokens,
+            arrival: Instant::now(),
+            shards_total,
+            shards_done: AtomicU32::new(0),
+            mm_parts: Mutex::new(vec![None; shards_total as usize]),
+            done_tx,
+        }
+    }
+
+    /// Record one finished shard; returns true when this was the last.
+    pub fn shard_done(&self, shard: usize, mm: Vec<f32>) -> bool {
+        {
+            let mut parts = self.mm_parts.lock().unwrap();
+            assert!(parts[shard].is_none(), "duplicate shard {shard}");
+            parts[shard] = Some(mm);
+        }
+        let done = self.shards_done.fetch_add(1, Ordering::SeqCst) + 1;
+        done == self.shards_total
+    }
+
+    /// Merge shards in order (call only after the last `shard_done`).
+    pub fn merged_mm(&self) -> Vec<f32> {
+        let parts = self.mm_parts.lock().unwrap();
+        let mut out = Vec::new();
+        for p in parts.iter() {
+            out.extend_from_slice(p.as_ref().expect("missing shard"));
+        }
+        out
+    }
+}
+
+/// Work items flowing through the stage queues.
+pub enum Job {
+    /// One IRP shard of a request's tiles.
+    Encode {
+        ctx: std::sync::Arc<ReqCtx>,
+        shard: usize,
+        /// Flattened `[tiles, num_patches, patch_dim]`.
+        patches: Vec<f32>,
+        tiles: u32,
+    },
+    /// A request whose MM tokens arrived at the prefill side.
+    Prefill {
+        ctx: std::sync::Arc<ReqCtx>,
+        mm: Vec<f32>,
+    },
+    /// A prefilled request migrating to decode.
+    Decode {
+        ctx: std::sync::Arc<ReqCtx>,
+        kv: Vec<f32>,
+        len: i32,
+        /// Next input token (the first generated token).
+        next_token: i32,
+        generated: Vec<i32>,
+    },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    #[test]
+    fn shard_accounting() {
+        let (tx, _rx) = sync_channel(1);
+        let ctx = ReqCtx::new(1, 2, vec![256], 4, 3, tx);
+        assert!(!ctx.shard_done(0, vec![1.0]));
+        assert!(!ctx.shard_done(2, vec![3.0]));
+        assert!(ctx.shard_done(1, vec![2.0]));
+        assert_eq!(ctx.merged_mm(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate shard")]
+    fn duplicate_shard_panics() {
+        let (tx, _rx) = sync_channel(1);
+        let ctx = ReqCtx::new(1, 1, vec![], 1, 2, tx);
+        ctx.shard_done(0, vec![]);
+        ctx.shard_done(0, vec![]);
+    }
+}

@@ -1,0 +1,24 @@
+//! The real serving engine: threaded E/P/D instances executing the
+//! tiny-LMM artifacts on PJRT, wired together by the coordinator policies.
+//!
+//! Each instance is an OS thread owning its own [`TinyLmmRuntime`]
+//! (PJRT client + compiled executables — its "GPU"). Stage hand-offs go
+//! through global per-stage queues (§3.2's "between different stages,
+//! global queues are used, and each available engine pulls proactively").
+//! EP and PD migrations move the actual token/KV bytes between instance-
+//! owned runtimes; IRP shards a request's tiles across encode instances;
+//! a monitor thread drives dynamic role switching.
+//!
+//! [`crate::runtime::TinyLmmRuntime`] is deliberately *not* `Send` (the
+//! `xla` client is `Rc`-based), so every runtime is created inside its
+//! instance thread and never crosses threads; queues carry plain `Vec<f32>`
+//! tensors.
+
+pub mod job;
+pub mod queues;
+pub mod instance;
+pub mod serve;
+pub mod http;
+
+pub use job::{GenRequest, GenResponse};
+pub use serve::{EngineConfig, EpdEngine};

@@ -1,0 +1,191 @@
+//! Global per-stage queues with condvar wakeups, byte-accounted
+//! migrations, and the live role registry the monitor thread reads.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::core::stage::Stage;
+
+use super::job::Job;
+
+/// Transfer byte counters (EP and PD migrations).
+#[derive(Debug, Default)]
+pub struct TransferStats {
+    pub ep_bytes: AtomicU64,
+    pub ep_count: AtomicU64,
+    pub pd_bytes: AtomicU64,
+    pub pd_count: AtomicU64,
+}
+
+/// The shared queue fabric.
+pub struct StageQueues {
+    encode: Mutex<VecDeque<Job>>,
+    prefill: Mutex<VecDeque<Job>>,
+    decode: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    /// Paired with `cv` for waits that span all queues.
+    wait_lock: Mutex<()>,
+    pub shutdown: AtomicBool,
+    pub transfers: TransferStats,
+    /// Current role of each instance (monitor + IRP fan-out read this).
+    pub roles: Mutex<Vec<Stage>>,
+}
+
+impl StageQueues {
+    pub fn new(initial_roles: Vec<Stage>) -> StageQueues {
+        StageQueues {
+            encode: Mutex::new(VecDeque::new()),
+            prefill: Mutex::new(VecDeque::new()),
+            decode: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            wait_lock: Mutex::new(()),
+            shutdown: AtomicBool::new(false),
+            transfers: TransferStats::default(),
+            roles: Mutex::new(initial_roles),
+        }
+    }
+
+    fn queue(&self, stage: Stage) -> &Mutex<VecDeque<Job>> {
+        match stage {
+            Stage::Encode => &self.encode,
+            Stage::Prefill => &self.prefill,
+            Stage::Decode => &self.decode,
+        }
+    }
+
+    /// Push a job to a stage queue and wake pollers.
+    pub fn push(&self, stage: Stage, job: Job) {
+        self.queue(stage).lock().unwrap().push_back(job);
+        self.cv.notify_all();
+    }
+
+    /// Record an EP migration's bytes (the mm vector really moved between
+    /// instance runtimes through this queue).
+    pub fn account_ep(&self, bytes: usize) {
+        self.transfers.ep_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.transfers.ep_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn account_pd(&self, bytes: usize) {
+        self.transfers.pd_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.transfers.pd_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Pop one job from the first non-empty stage in `stages` (priority
+    /// order). Returns immediately.
+    pub fn try_pop(&self, stages: &[Stage]) -> Option<Job> {
+        for &s in stages {
+            if let Some(j) = self.queue(s).lock().unwrap().pop_front() {
+                return Some(j);
+            }
+        }
+        None
+    }
+
+    /// Pop up to `n` decode jobs at once (batch forming).
+    pub fn pop_decode_batch(&self, n: usize) -> Vec<Job> {
+        let mut q = self.decode.lock().unwrap();
+        let take = n.min(q.len());
+        q.drain(..take).collect()
+    }
+
+    /// Blocking pop with timeout across the given stages.
+    pub fn pop_timeout(&self, stages: &[Stage], timeout: Duration) -> Option<Job> {
+        if let Some(j) = self.try_pop(stages) {
+            return Some(j);
+        }
+        let guard = self.wait_lock.lock().unwrap();
+        let _unused = self.cv.wait_timeout(guard, timeout).unwrap();
+        self.try_pop(stages)
+    }
+
+    pub fn len(&self, stage: Stage) -> usize {
+        self.queue(stage).lock().unwrap().len()
+    }
+
+    pub fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Instances currently serving `stage`.
+    pub fn role_count(&self, stage: Stage) -> u32 {
+        self.roles.lock().unwrap().iter().filter(|&&r| r == stage).count() as u32
+    }
+
+    pub fn set_role(&self, idx: usize, role: Stage) {
+        self.roles.lock().unwrap()[idx] = role;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::job::ReqCtx;
+    use std::sync::mpsc::sync_channel;
+    use std::sync::Arc;
+
+    fn dummy_job() -> Job {
+        let (tx, _rx) = sync_channel(1);
+        Job::Prefill {
+            ctx: Arc::new(ReqCtx::new(0, 0, vec![], 1, 1, tx)),
+            mm: vec![],
+        }
+    }
+
+    #[test]
+    fn push_pop_priority() {
+        let q = StageQueues::new(vec![Stage::Encode]);
+        q.push(Stage::Decode, dummy_job());
+        q.push(Stage::Encode, dummy_job());
+        // Priority order: encode first.
+        let got = q.try_pop(&[Stage::Encode, Stage::Decode]).unwrap();
+        assert!(matches!(got, Job::Prefill { .. }));
+        assert_eq!(q.len(Stage::Encode), 0);
+        assert_eq!(q.len(Stage::Decode), 1);
+    }
+
+    #[test]
+    fn pop_timeout_times_out_empty() {
+        let q = StageQueues::new(vec![]);
+        let t0 = std::time::Instant::now();
+        assert!(q.pop_timeout(&[Stage::Encode], Duration::from_millis(30)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn decode_batch_pop() {
+        let q = StageQueues::new(vec![]);
+        for _ in 0..5 {
+            q.push(Stage::Decode, dummy_job());
+        }
+        assert_eq!(q.pop_decode_batch(3).len(), 3);
+        assert_eq!(q.pop_decode_batch(8).len(), 2);
+    }
+
+    #[test]
+    fn role_registry() {
+        let q = StageQueues::new(vec![Stage::Encode, Stage::Encode, Stage::Decode]);
+        assert_eq!(q.role_count(Stage::Encode), 2);
+        q.set_role(0, Stage::Decode);
+        assert_eq!(q.role_count(Stage::Encode), 1);
+        assert_eq!(q.role_count(Stage::Decode), 2);
+    }
+
+    #[test]
+    fn transfer_accounting() {
+        let q = StageQueues::new(vec![]);
+        q.account_ep(1024);
+        q.account_ep(1024);
+        q.account_pd(4096);
+        assert_eq!(q.transfers.ep_bytes.load(Ordering::Relaxed), 2048);
+        assert_eq!(q.transfers.ep_count.load(Ordering::Relaxed), 2);
+        assert_eq!(q.transfers.pd_bytes.load(Ordering::Relaxed), 4096);
+    }
+}

@@ -1,0 +1,258 @@
+//! The engine front: spawns instance threads per the deployment config,
+//! routes submissions (IRP sharding at entry), runs the role-switch
+//! monitor, and exposes synchronous/asynchronous submit APIs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+use log::info;
+
+use crate::coordinator::monitor::QueueMonitor;
+use crate::coordinator::role_switch::{RoleSwitchController, SwitchPolicy};
+use crate::core::config::EpdConfig;
+use crate::core::stage::Stage;
+use crate::metrics::recorder::MetricsRecorder;
+use crate::model::tokenizer;
+use crate::util::rng::Rng;
+
+use super::instance::{instance_main, Ctrl, InstanceParams};
+use super::job::{GenRequest, GenResponse, Job, ReqCtx};
+use super::queues::StageQueues;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub artifacts_dir: String,
+    pub epd: EpdConfig,
+    /// Largest decode batch an instance forms (bounded by decode buckets).
+    pub max_decode_batch: u32,
+    /// Steps between decode-loop queue re-checks.
+    pub decode_recheck_steps: u32,
+    /// Role-switch policy (used when `epd.role_switching`).
+    pub switch_policy: SwitchPolicy,
+}
+
+impl EngineConfig {
+    pub fn new(artifacts_dir: &str, epd: EpdConfig) -> EngineConfig {
+        EngineConfig {
+            artifacts_dir: artifacts_dir.to_string(),
+            epd,
+            max_decode_batch: 8,
+            decode_recheck_steps: 4,
+            switch_policy: SwitchPolicy::default(),
+        }
+    }
+}
+
+/// The running engine.
+pub struct EpdEngine {
+    cfg: EngineConfig,
+    queues: Arc<StageQueues>,
+    ctrls: Vec<Sender<Ctrl>>,
+    handles: Vec<JoinHandle<()>>,
+    monitor_handle: Option<JoinHandle<()>>,
+    pub metrics: Arc<MetricsRecorder>,
+    next_id: AtomicU64,
+}
+
+impl EpdEngine {
+    /// Start instance threads (each compiles its own executables — expect
+    /// a few seconds of warm-up for large topologies).
+    pub fn start(cfg: EngineConfig) -> Result<EpdEngine> {
+        let roles: Vec<Stage> = cfg.epd.instances.iter().map(|i| i.role).collect();
+        let queues = Arc::new(StageQueues::new(roles.clone()));
+        let metrics = Arc::new(MetricsRecorder::new());
+        let mut ctrls = Vec::new();
+        let mut handles = Vec::new();
+        for (idx, role) in roles.iter().enumerate() {
+            let (tx, rx) = std::sync::mpsc::channel();
+            ctrls.push(tx);
+            let params = InstanceParams {
+                idx,
+                role: *role,
+                mode: cfg.epd.mode,
+                artifacts_dir: cfg.artifacts_dir.clone(),
+                max_decode_batch: cfg.max_decode_batch,
+                decode_recheck_steps: cfg.decode_recheck_steps,
+            };
+            let q = Arc::clone(&queues);
+            let m = Arc::clone(&metrics);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("epd-inst-{idx}"))
+                    .spawn(move || instance_main(params, q, rx, m))?,
+            );
+        }
+
+        let monitor_handle = if cfg.epd.role_switching {
+            let q = Arc::clone(&queues);
+            let ctrls2 = ctrls.clone();
+            let policy = cfg.switch_policy;
+            Some(std::thread::spawn(move || monitor_main(q, ctrls2, policy)))
+        } else {
+            None
+        };
+
+        info!(
+            "engine started: mode={} topology={}",
+            cfg.epd.mode.name(),
+            cfg.epd.topology()
+        );
+        Ok(EpdEngine {
+            cfg,
+            queues,
+            ctrls,
+            handles,
+            monitor_handle,
+            metrics,
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
+        let (tx, rx) = sync_channel(1);
+        let id = req.id;
+        self.metrics.on_arrival(id);
+
+        let text_tokens: Vec<i32> = tokenizer::encode(&req.prompt)[1..] // drop BOS (layout adds it)
+            .iter()
+            .map(|&t| t as i32)
+            .collect();
+
+        let tiles = req.images; // tiny-lmm: one tile per image
+        // IRP fan-out: shard across the instances currently encoding.
+        let fanout = if self.cfg.epd.irp {
+            self.queues.role_count(Stage::Encode).max(1).min(tiles.max(1))
+        } else {
+            1
+        };
+        let plan = crate::coordinator::irp::plan_shards(tiles, fanout, self.cfg.epd.irp);
+        let shards_total = plan.num_shards().max(1);
+
+        let ctx = Arc::new(ReqCtx::new(
+            id,
+            req.images,
+            text_tokens,
+            req.max_tokens,
+            shards_total,
+            tx,
+        ));
+
+        if tiles == 0 {
+            // Text-only: straight to prefill with zero MM tokens.
+            self.queues.push(Stage::Prefill, Job::Prefill { ctx, mm: vec![] });
+            return rx;
+        }
+
+        // Generate synthetic patch data per tile (the "image"): content is
+        // a pure function of the caller-provided seed, so identical
+        // requests reproduce identical tokens regardless of request id.
+        let mut rng = Rng::new(req.seed);
+        let per_tile = 64 * 192; // num_patches × patch_dim
+        let mut tile_cursor = 0u32;
+        for (shard, &shard_tiles) in plan.tiles_per_shard.iter().enumerate() {
+            let mut patches = Vec::with_capacity((shard_tiles as usize) * per_tile);
+            for _ in 0..shard_tiles {
+                for _ in 0..per_tile {
+                    patches.push(rng.f64() as f32);
+                }
+            }
+            tile_cursor += shard_tiles;
+            self.queues.push(
+                Stage::Encode,
+                Job::Encode {
+                    ctx: Arc::clone(&ctx),
+                    shard,
+                    patches,
+                    tiles: shard_tiles,
+                },
+            );
+        }
+        debug_assert_eq!(tile_cursor, tiles);
+        rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn generate(&self, images: u32, prompt: &str, max_tokens: u32) -> Result<GenResponse> {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let rx = self.submit(GenRequest {
+            id,
+            images,
+            prompt: prompt.to_string(),
+            max_tokens,
+            seed: 0x5EED,
+        });
+        Ok(rx.recv()?)
+    }
+
+    pub fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::SeqCst)
+    }
+
+    pub fn queues(&self) -> &Arc<StageQueues> {
+        &self.queues
+    }
+
+    /// Graceful shutdown: waits for instance threads.
+    pub fn shutdown(mut self) {
+        self.queues.begin_shutdown();
+        for c in &self.ctrls {
+            let _ = c.send(Ctrl::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.monitor_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Role-switch monitor thread (§3.2.4): samples queue depths, feeds the
+/// EWMA monitor, and instructs the least-loaded donor instance to switch
+/// when the controller fires.
+fn monitor_main(queues: Arc<StageQueues>, ctrls: Vec<Sender<Ctrl>>, policy: SwitchPolicy) {
+    let mut monitor = QueueMonitor::new(0.4);
+    let mut controller = RoleSwitchController::new(policy);
+    let t0 = std::time::Instant::now();
+    while !queues.is_shutdown() {
+        std::thread::sleep(Duration::from_millis(100));
+        let now = t0.elapsed().as_secs_f64();
+        let counts = [
+            queues.role_count(Stage::Encode),
+            queues.role_count(Stage::Prefill),
+            queues.role_count(Stage::Decode),
+        ];
+        for s in Stage::ALL {
+            let qlen = queues.len(s);
+            // Backlog proxy: queue length (the engine has no cost model —
+            // deliberately; it measures rather than predicts).
+            monitor.observe(s, qlen, qlen as f64, 0.0, counts[stage_idx(s)]);
+        }
+        if let Some(dec) = controller.evaluate(now, &monitor, counts) {
+            // Donor: any instance currently in `dec.from`.
+            let roles = queues.roles.lock().unwrap().clone();
+            if let Some(idx) = roles.iter().position(|&r| r == dec.from) {
+                queues.set_role(idx, dec.to);
+                let _ = ctrls[idx].send(Ctrl::Switch {
+                    to: dec.to,
+                    pause: Duration::from_secs_f64(dec.migration_time),
+                });
+                info!("monitor: switching instance {idx} {} -> {}", dec.from, dec.to);
+            }
+        }
+    }
+}
+
+fn stage_idx(s: Stage) -> usize {
+    match s {
+        Stage::Encode => 0,
+        Stage::Prefill => 1,
+        Stage::Decode => 2,
+    }
+}

@@ -1,0 +1,47 @@
+//! # epdserve — Encode–Prefill–Decode disaggregated serving for LMMs
+//!
+//! Reproduction of *"Efficiently Serving Large Multimodal Models Using EPD
+//! Disaggregation"* (ICML 2025). The crate contains:
+//!
+//! - [`core`] — request model, stages, deployment topologies, SLO types.
+//! - [`model`] — LMM specifications (MiniCPM-V 2.6, InternVL2-8B/26B, …),
+//!   image→patch→token math, and the GPU memory model behind the paper's
+//!   capacity tables (Tables 2, 3, 8; Figure 2).
+//! - [`cache`] — paged KV and multimodal (MM) block managers (§3.2.1).
+//! - [`sched`] — per-stage queueing/batching policies and instance
+//!   assignment strategies (Appendix D).
+//! - [`coordinator`] — the paper's system contribution: EP/PD migration,
+//!   intra-request parallelism (§3.2.2), dynamic role switching (§3.2.4),
+//!   and the queue monitor that drives it.
+//! - [`sim`] — the DistServe-style discrete-event cluster simulator used by
+//!   the optimizer and by every table/figure bench.
+//! - [`workload`] — synthetic, NextQA-like, Video-MME-like and audio
+//!   workload generators with Poisson arrivals.
+//! - [`metrics`] — TTFT/TPOT recording, SLO attainment, goodput search.
+//! - [`optimizer`] — the black-box resource-allocation optimizer (Eq. 1).
+//! - [`runtime`] — PJRT client wrapper that loads AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py`.
+//! - [`engine`] — the *real* serving engine: threaded E/P/D instances
+//!   executing the tiny-LMM artifacts on the CPU PJRT client, plus a
+//!   minimal HTTP frontend.
+//! - [`util`] — zero-dependency substrates (PRNG, JSON, TOML, CLI parser,
+//!   thread pool, stats, logging, bench harness, property testing).
+
+pub mod util;
+pub mod model;
+pub mod core;
+pub mod cache;
+pub mod sched;
+pub mod coordinator;
+pub mod sim;
+pub mod workload;
+pub mod metrics;
+pub mod optimizer;
+pub mod runtime;
+pub mod engine;
+pub mod api;
+pub mod cli;
+pub mod repro;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,106 @@
+//! Goodput search: the highest λ with ≥ 90% SLO attainment, found by
+//! doubling + bisection over a caller-supplied evaluation function
+//! (normally a simulator run at rate λ).
+
+/// Result of a goodput search.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GoodputResult {
+    /// Highest rate (req/s) sustaining the attainment threshold; 0 when
+    /// even the lowest probed rate misses it.
+    pub goodput: f64,
+    /// Attainment measured at `goodput`.
+    pub attainment: f64,
+    /// Evaluation calls spent.
+    pub evals: u32,
+}
+
+/// Find goodput by exponential bracketing then bisection.
+///
+/// `eval(rate)` must return SLO attainment in [0, 1] for a run at `rate`.
+/// `lo_rate` seeds the search (must be > 0); `tol` is the relative rate
+/// resolution at which bisection stops.
+pub fn find_goodput<F: FnMut(f64) -> f64>(
+    mut eval: F,
+    lo_rate: f64,
+    threshold: f64,
+    tol: f64,
+) -> GoodputResult {
+    assert!(lo_rate > 0.0 && threshold > 0.0 && threshold <= 1.0);
+    let mut evals = 0u32;
+    let mut probe = |r: f64, evals: &mut u32| {
+        *evals += 1;
+        eval(r)
+    };
+
+    // The lowest rate must pass, otherwise goodput is 0.
+    let base = probe(lo_rate, &mut evals);
+    if base < threshold {
+        return GoodputResult { goodput: 0.0, attainment: base, evals };
+    }
+
+    // Exponential growth until failure (or a generous cap).
+    let mut lo = lo_rate;
+    let mut lo_att = base;
+    let mut hi = lo_rate;
+    let mut failed = false;
+    for _ in 0..20 {
+        hi *= 2.0;
+        let att = probe(hi, &mut evals);
+        if att < threshold {
+            failed = true;
+            break;
+        }
+        lo = hi;
+        lo_att = att;
+    }
+    if !failed {
+        // Saturation never reached — report the bracket edge.
+        return GoodputResult { goodput: lo, attainment: lo_att, evals };
+    }
+
+    // Bisect (lo passes, hi fails).
+    while (hi - lo) / lo > tol {
+        let mid = 0.5 * (lo + hi);
+        let att = probe(mid, &mut evals);
+        if att >= threshold {
+            lo = mid;
+            lo_att = att;
+        } else {
+            hi = mid;
+        }
+    }
+    GoodputResult { goodput: lo, attainment: lo_att, evals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_step_boundary() {
+        // Attainment is 1.0 below rate 3.7, 0 above.
+        let r = find_goodput(|rate| if rate <= 3.7 { 1.0 } else { 0.0 }, 0.1, 0.9, 0.01);
+        assert!((r.goodput - 3.7).abs() < 0.08, "goodput {}", r.goodput);
+        assert!(r.attainment >= 0.9);
+    }
+
+    #[test]
+    fn zero_when_never_attained() {
+        let r = find_goodput(|_| 0.5, 0.1, 0.9, 0.01);
+        assert_eq!(r.goodput, 0.0);
+    }
+
+    #[test]
+    fn saturates_cap_when_always_attained() {
+        let r = find_goodput(|_| 1.0, 0.1, 0.9, 0.01);
+        assert!(r.goodput > 10_000.0, "cap edge {}", r.goodput);
+    }
+
+    #[test]
+    fn smooth_degradation() {
+        // Attainment falls linearly from 1.0 at rate 0 to 0 at rate 10 —
+        // 90% attainment crossing at rate 1.0.
+        let r = find_goodput(|rate| (1.0 - rate / 10.0).max(0.0), 0.05, 0.9, 0.005);
+        assert!((r.goodput - 1.0).abs() < 0.05, "goodput {}", r.goodput);
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation metrics (§4): TTFT, TPOT, SLO attainment, and goodput — "the
+//! highest request rate at which 90% or more SLO attainment is achieved".
+
+pub mod goodput;
+pub mod recorder;
+
+pub use goodput::{find_goodput, GoodputResult};
+pub use recorder::MetricsRecorder;

@@ -1,0 +1,184 @@
+//! Wall-clock metrics recorder for the real engine: thread-safe TTFT/TPOT
+//! collection plus derived reports. (The simulator computes metrics from
+//! virtual-time timelines instead; this type is for live serving.)
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::core::request::RequestId;
+use crate::core::slo::Slo;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone, Copy)]
+struct Record {
+    arrival: Instant,
+    first_token: Option<Instant>,
+    finish: Option<Instant>,
+    output_tokens: u32,
+}
+
+/// Thread-safe live metrics store.
+#[derive(Debug, Default)]
+pub struct MetricsRecorder {
+    inner: Mutex<Vec<(RequestId, Record)>>,
+}
+
+impl MetricsRecorder {
+    pub fn new() -> MetricsRecorder {
+        MetricsRecorder { inner: Mutex::new(Vec::new()) }
+    }
+
+    pub fn on_arrival(&self, id: RequestId) {
+        self.inner.lock().unwrap().push((
+            id,
+            Record { arrival: Instant::now(), first_token: None, finish: None, output_tokens: 0 },
+        ));
+    }
+
+    pub fn on_first_token(&self, id: RequestId) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some((_, r)) = g.iter_mut().find(|(rid, _)| *rid == id) {
+            if r.first_token.is_none() {
+                r.first_token = Some(Instant::now());
+            }
+        }
+    }
+
+    pub fn on_finish(&self, id: RequestId, output_tokens: u32) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some((_, r)) = g.iter_mut().find(|(rid, _)| *rid == id) {
+            r.finish = Some(Instant::now());
+            r.output_tokens = output_tokens;
+        }
+    }
+
+    /// (ttfts, tpots, latencies) of finished requests, seconds.
+    pub fn series(&self) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let g = self.inner.lock().unwrap();
+        let mut ttfts = Vec::new();
+        let mut tpots = Vec::new();
+        let mut lats = Vec::new();
+        for (_, r) in g.iter() {
+            let (Some(ft), Some(fin)) = (r.first_token, r.finish) else { continue };
+            let ttft = ft.duration_since(r.arrival).as_secs_f64();
+            let lat = fin.duration_since(r.arrival).as_secs_f64();
+            ttfts.push(ttft);
+            lats.push(lat);
+            if r.output_tokens > 1 {
+                tpots.push(fin.duration_since(ft).as_secs_f64() / (r.output_tokens - 1) as f64);
+            }
+        }
+        (ttfts, tpots, lats)
+    }
+
+    pub fn finished(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, r)| r.finish.is_some())
+            .count()
+    }
+
+    pub fn submitted(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// SLO attainment over submitted requests.
+    pub fn slo_attainment(&self, slo: Slo) -> f64 {
+        let g = self.inner.lock().unwrap();
+        if g.is_empty() {
+            return 0.0;
+        }
+        let ok = g
+            .iter()
+            .filter(|(_, r)| {
+                let (Some(ft), Some(fin)) = (r.first_token, r.finish) else { return false };
+                let ttft = ft.duration_since(r.arrival).as_secs_f64();
+                let tpot = if r.output_tokens > 1 {
+                    fin.duration_since(ft).as_secs_f64() / (r.output_tokens - 1) as f64
+                } else {
+                    0.0
+                };
+                slo.attained(ttft, tpot)
+            })
+            .count();
+        ok as f64 / g.len() as f64
+    }
+
+    /// JSON report (written by `/metrics` and the examples).
+    pub fn report(&self) -> Json {
+        let (ttfts, tpots, lats) = self.series();
+        let s = |x: &Summary| {
+            Json::obj(vec![
+                ("mean", Json::num(x.mean)),
+                ("p50", Json::num(x.p50)),
+                ("p90", Json::num(x.p90)),
+                ("p99", Json::num(x.p99)),
+                ("max", Json::num(x.max)),
+            ])
+        };
+        Json::obj(vec![
+            ("submitted", Json::num(self.submitted() as f64)),
+            ("finished", Json::num(self.finished() as f64)),
+            ("ttft", s(&Summary::of(&ttfts))),
+            ("tpot", s(&Summary::of(&tpots))),
+            ("latency", s(&Summary::of(&lats))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_and_series() {
+        let m = MetricsRecorder::new();
+        m.on_arrival(1);
+        m.on_first_token(1);
+        m.on_finish(1, 5);
+        m.on_arrival(2); // never finishes
+        let (ttfts, tpots, lats) = m.series();
+        assert_eq!(ttfts.len(), 1);
+        assert_eq!(tpots.len(), 1);
+        assert_eq!(lats.len(), 1);
+        assert_eq!(m.finished(), 1);
+        assert_eq!(m.submitted(), 2);
+    }
+
+    #[test]
+    fn attainment_counts_unfinished_as_miss() {
+        let m = MetricsRecorder::new();
+        m.on_arrival(1);
+        m.on_first_token(1);
+        m.on_finish(1, 2);
+        m.on_arrival(2);
+        let att = m.slo_attainment(Slo::new(10.0, 10.0));
+        assert!((att - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_first_token_ignored() {
+        let m = MetricsRecorder::new();
+        m.on_arrival(1);
+        m.on_first_token(1);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        m.on_first_token(1); // must not move the timestamp
+        m.on_finish(1, 3);
+        let (ttfts, _, _) = m.series();
+        assert!(ttfts[0] < 0.002, "first timestamp kept");
+    }
+
+    #[test]
+    fn report_shape() {
+        let m = MetricsRecorder::new();
+        m.on_arrival(7);
+        m.on_first_token(7);
+        m.on_finish(7, 4);
+        let j = m.report();
+        assert_eq!(j.get("finished").unwrap().as_u64(), Some(1));
+        assert!(j.get("ttft").unwrap().get("mean").is_some());
+    }
+}

@@ -1,0 +1,335 @@
+//! GPU capacity model — the analysis behind §4.3: Figure 2 (batch/image
+//! growth when the LLM leaves the GPU), Table 2 (max images per request),
+//! Table 3 (max E/P batch sizes) and Table 8 (max KV-cache fraction).
+//!
+//! A node hosts some subset of {encoder weights, LLM weights}; after
+//! weights, a fraction of the free memory is reserved for the KV cache
+//! (the paper uses 80% in Tables 2–3), and what remains is the working
+//! space that encode / prefill activations must fit into. The per-tile
+//! workspace coefficients live in [`MemCoeffs`](super::spec::MemCoeffs)
+//! and are calibrated against the paper's measured rows.
+
+use super::spec::{DeviceSpec, LmmSpec};
+use super::vision::{mm_tokens_for_image, tiles_for_image, Resolution};
+
+/// What a node hosts — determines its weight footprint and which phases'
+/// workspace it must provide.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// EPD encode node: encoder weights only, MM cache, no KV cache.
+    EncodeOnly,
+    /// EPD prefill (or decode) node: LLM weights + KV cache.
+    LlmOnly,
+    /// Aggregated / DistServe prefill node: encoder + LLM colocated.
+    Colocated,
+}
+
+/// Why a capacity query returned zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CapacityLimit {
+    /// Fits the returned amount (> 0).
+    Ok,
+    /// Does not fit even at the minimum size (paper's "OOM").
+    Oom,
+    /// Exceeds the model's context limit (paper's "OOCL").
+    OutOfContext,
+}
+
+/// The capacity model for one (model, device) pair.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    pub spec: LmmSpec,
+    pub device: DeviceSpec,
+    /// Non-weight fixed overhead (CUDA context, allocator slack, runtime).
+    pub fixed_overhead: u64,
+}
+
+impl MemoryModel {
+    pub fn new(spec: LmmSpec, device: DeviceSpec) -> MemoryModel {
+        MemoryModel { spec, device, fixed_overhead: 0 }
+    }
+
+    /// Weight bytes resident on a node of the given kind.
+    pub fn weight_bytes(&self, node: NodeKind) -> u64 {
+        match node {
+            NodeKind::EncodeOnly => self.spec.encoder_weight_bytes(),
+            NodeKind::LlmOnly => self.spec.llm_weight_bytes(),
+            NodeKind::Colocated => self.spec.total_weight_bytes(),
+        }
+    }
+
+    /// Free memory after weights and fixed overhead.
+    pub fn free_after_weights(&self, node: NodeKind) -> u64 {
+        self.device
+            .mem_bytes
+            .saturating_sub(self.weight_bytes(node) + self.fixed_overhead)
+    }
+
+    /// Workspace available for activations once `kv_frac` of the free
+    /// memory is reserved for the KV cache. Encode-only nodes hold no KV
+    /// cache, so the reservation does not apply (§4.3: "since KV cache is
+    /// also not required at E workers, the memory saving can be even
+    /// higher").
+    pub fn workspace_bytes(&self, node: NodeKind, kv_frac: f64) -> u64 {
+        let free = self.free_after_weights(node);
+        match node {
+            NodeKind::EncodeOnly => free,
+            _ => ((1.0 - kv_frac) * free as f64) as u64,
+        }
+    }
+
+    /// Encode-phase workspace for a request with `images` images at `res`.
+    pub fn encode_request_bytes(&self, images: u32, res: Resolution) -> u64 {
+        let tiles = tiles_for_image(&self.spec, res) as u64 * images as u64;
+        self.spec.mem.encode_ws_per_request + tiles * self.spec.mem.encode_ws_per_tile
+    }
+
+    /// Prefill-phase workspace for a request with `images` images at `res`.
+    pub fn prefill_request_bytes(&self, images: u32, res: Resolution) -> u64 {
+        let tiles = tiles_for_image(&self.spec, res) as u64 * images as u64;
+        tiles * self.spec.mem.prefill_ws_per_tile
+    }
+
+    /// Combined workspace on a node of `kind` for one request. Colocated
+    /// nodes run encode then prefill sequentially on the same GPU and can
+    /// reuse a `coloc_reuse` fraction of the smaller phase's buffers.
+    pub fn request_bytes(&self, node: NodeKind, images: u32, res: Resolution) -> u64 {
+        let e = self.encode_request_bytes(images, res);
+        let p = self.prefill_request_bytes(images, res);
+        match node {
+            NodeKind::EncodeOnly => e,
+            NodeKind::LlmOnly => p,
+            NodeKind::Colocated => {
+                let reuse = (self.spec.mem.coloc_reuse * e.min(p) as f64) as u64;
+                e + p - reuse
+            }
+        }
+    }
+
+    /// Prompt tokens a request contributes to the LLM context: MM tokens
+    /// plus the text prompt.
+    pub fn request_context_tokens(&self, images: u32, res: Resolution, prompt_tokens: u32) -> u64 {
+        mm_tokens_for_image(&self.spec, res) * images as u64 + prompt_tokens as u64
+    }
+
+    /// Table 2: maximum images in a single request (batch = 1) on a node of
+    /// `kind`, with `kv_frac` of free memory reserved for KV cache.
+    /// Returns the count and the limiting factor.
+    pub fn max_images_per_request(
+        &self,
+        node: NodeKind,
+        res: Resolution,
+        kv_frac: f64,
+        prompt_tokens: u32,
+    ) -> (u32, CapacityLimit) {
+        let ws = self.workspace_bytes(node, kv_frac);
+        let mut n = 0u32;
+        loop {
+            let next = n + 1;
+            if self.request_bytes(node, next, res) > ws {
+                break;
+            }
+            // Context limit applies wherever the LLM runs; an encode-only
+            // node defers it to the prefill node, but the *request* is
+            // still infeasible, so enforce it uniformly.
+            if self.request_context_tokens(next, res, prompt_tokens) > self.spec.llm.max_context as u64 {
+                return (n, CapacityLimit::OutOfContext);
+            }
+            n = next;
+            if n > 100_000 {
+                break; // tiny models: effectively unbounded
+            }
+        }
+        if n == 0 {
+            (0, CapacityLimit::Oom)
+        } else {
+            (n, CapacityLimit::Ok)
+        }
+    }
+
+    /// Table 3: maximum batch size (concurrent requests) on a node of
+    /// `kind` for requests with `images` images at `res`.
+    pub fn max_batch(
+        &self,
+        node: NodeKind,
+        images: u32,
+        res: Resolution,
+        kv_frac: f64,
+    ) -> (u32, CapacityLimit) {
+        let ws = self.workspace_bytes(node, kv_frac);
+        let per_req = self.request_bytes(node, images, res);
+        if per_req == 0 {
+            return (u32::MAX, CapacityLimit::Ok);
+        }
+        let n = (ws / per_req) as u32;
+        if n == 0 {
+            (0, CapacityLimit::Oom)
+        } else {
+            (n, CapacityLimit::Ok)
+        }
+    }
+
+    /// Table 8: the maximum fraction of free memory that can be given to
+    /// the KV cache on the prefill node while one request with `images`
+    /// images still fits. Returns percent (0–100).
+    pub fn max_kv_frac_pct(
+        &self,
+        node: NodeKind,
+        images: u32,
+        res: Resolution,
+        prompt_tokens: u32,
+    ) -> (u32, CapacityLimit) {
+        if self.request_context_tokens(images, res, prompt_tokens)
+            > self.spec.llm.max_context as u64
+        {
+            return (0, CapacityLimit::OutOfContext);
+        }
+        let free = self.free_after_weights(node) as f64;
+        if free <= 0.0 {
+            return (0, CapacityLimit::Oom);
+        }
+        let need = self.request_bytes(node, images, res) as f64;
+        if need > free {
+            return (0, CapacityLimit::Oom);
+        }
+        let pct = ((1.0 - need / free) * 100.0).floor() as u32;
+        (pct, CapacityLimit::Ok)
+    }
+
+    /// KV-cache capacity in tokens given a reservation fraction.
+    pub fn kv_capacity_tokens(&self, node: NodeKind, kv_frac: f64) -> u64 {
+        let bytes = (self.free_after_weights(node) as f64 * kv_frac) as u64;
+        bytes / self.spec.llm.kv_bytes_per_token()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelId;
+
+    fn model(id: ModelId) -> MemoryModel {
+        MemoryModel::new(LmmSpec::get(id), DeviceSpec::a100())
+    }
+
+    /// Table 2, MiniCPM-V 2.6: DistServe {77, 26, 7} vs EPD {490, 165, 49}.
+    /// The calibrated model must land within ~10% of each row.
+    #[test]
+    fn table2_minicpm_shape() {
+        let m = model(ModelId::MiniCpmV26);
+        let expect = [
+            (Resolution::new(313, 234), 77u32, 490u32),
+            (Resolution::new(787, 444), 26, 165),
+            (Resolution::new(4032, 3024), 7, 49),
+        ];
+        for (res, dist, epd) in expect {
+            let (d, _) = m.max_images_per_request(NodeKind::Colocated, res, 0.8, 22);
+            let (e, _) = m.max_images_per_request(NodeKind::EncodeOnly, res, 0.8, 22);
+            assert!(
+                (d as f64 - dist as f64).abs() / dist as f64 <= 0.12,
+                "{res}: dist {d} vs paper {dist}"
+            );
+            assert!(
+                (e as f64 - epd as f64).abs() / epd as f64 <= 0.12,
+                "{res}: epd {e} vs paper {epd}"
+            );
+            assert!(e > 5 * d, "EPD should dominate: {e} vs {d}");
+        }
+    }
+
+    /// Table 2, InternVL2-8B: both systems stop at 19 images — the context
+    /// limit, not memory (the paper calls this out explicitly).
+    #[test]
+    fn table2_internvl8b_context_limited() {
+        let m = model(ModelId::InternVl2_8b);
+        let res = Resolution::four_k();
+        let (e, why) = m.max_images_per_request(NodeKind::EncodeOnly, res, 0.8, 22);
+        assert_eq!(e, 19);
+        assert_eq!(why, CapacityLimit::OutOfContext);
+    }
+
+    /// Table 3, MiniCPM-V 2.6 EPD E column: {49, 16, 4} at 10 images/req.
+    #[test]
+    fn table3_minicpm_encode_batches() {
+        let m = model(ModelId::MiniCpmV26);
+        let expect = [
+            (Resolution::new(313, 234), 49u32),
+            (Resolution::new(787, 444), 16),
+            (Resolution::new(4032, 3024), 4),
+        ];
+        for (res, want) in expect {
+            let (b, _) = m.max_batch(NodeKind::EncodeOnly, 10, res, 0.8);
+            assert_eq!(b, want, "{res}");
+        }
+    }
+
+    /// Table 3, InternVL2-26B DistServe column: {OOM, 1, OOM}.
+    #[test]
+    fn table3_internvl26_distserve_ooms() {
+        let m = model(ModelId::InternVl2_26b);
+        let (b1, l1) = m.max_batch(NodeKind::Colocated, 10, Resolution::new(313, 234), 0.8);
+        assert_eq!((b1, l1), (0, CapacityLimit::Oom));
+        let (b2, _) = m.max_batch(NodeKind::Colocated, 10, Resolution::new(787, 444), 0.8);
+        assert_eq!(b2, 1);
+        let (b3, l3) = m.max_batch(NodeKind::Colocated, 10, Resolution::four_k(), 0.8);
+        assert_eq!((b3, l3), (0, CapacityLimit::Oom));
+    }
+
+    /// Table 8, MiniCPM rows: EPD {99, 97, 95, 92} at {5, 10, 20, 40}
+    /// images, OOCL at 80; DistServe OOM from 40.
+    #[test]
+    fn table8_minicpm_kv_fracs() {
+        let m = model(ModelId::MiniCpmV26);
+        let res = Resolution::four_k();
+        for (n, want) in [(5u32, 98u32), (10, 97), (20, 95), (40, 90)] {
+            let (pct, ok) = m.max_kv_frac_pct(NodeKind::LlmOnly, n, res, 22);
+            assert_eq!(ok, CapacityLimit::Ok);
+            assert!((pct as i64 - want as i64).abs() <= 2, "{n} images: {pct} vs {want}");
+        }
+        let (_, why) = m.max_kv_frac_pct(NodeKind::LlmOnly, 80, res, 22);
+        assert_eq!(why, CapacityLimit::OutOfContext);
+        let (_, why) = m.max_kv_frac_pct(NodeKind::Colocated, 40, res, 22);
+        assert_eq!(why, CapacityLimit::Oom);
+        let (pct5, _) = m.max_kv_frac_pct(NodeKind::Colocated, 5, res, 22);
+        assert!((pct5 as i64 - 86).abs() <= 2, "dist 5 images: {pct5}");
+    }
+
+    /// §4.3's headline: E workers see ~15× lower peak memory (93.3% saving)
+    /// once neither LLM weights nor KV cache are resident.
+    #[test]
+    fn encode_node_memory_saving_15x() {
+        let m = model(ModelId::MiniCpmV26);
+        // Peak usage for a typical 2-image 4K request: weights + KV
+        // reservation (colocated) vs encoder weights + encode workspace.
+        let res = Resolution::four_k();
+        let coloc = m.weight_bytes(NodeKind::Colocated) as f64
+            + 0.8 * m.free_after_weights(NodeKind::Colocated) as f64
+            + m.request_bytes(NodeKind::Colocated, 2, res) as f64;
+        let enc = m.weight_bytes(NodeKind::EncodeOnly) as f64
+            + m.encode_request_bytes(2, res) as f64;
+        let ratio = coloc / enc;
+        assert!(ratio > 12.0 && ratio < 20.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn kv_capacity_tokens_positive_and_ordered() {
+        let m = model(ModelId::InternVl2_8b);
+        let llm_only = m.kv_capacity_tokens(NodeKind::LlmOnly, 0.8);
+        let coloc = m.kv_capacity_tokens(NodeKind::Colocated, 0.8);
+        assert!(llm_only > coloc);
+        assert!(coloc > 100_000);
+    }
+
+    #[test]
+    fn workspace_monotone_in_kv_frac() {
+        let m = model(ModelId::MiniCpmV26);
+        let w50 = m.workspace_bytes(NodeKind::Colocated, 0.5);
+        let w80 = m.workspace_bytes(NodeKind::Colocated, 0.8);
+        assert!(w50 > w80);
+        // Encode node ignores kv_frac.
+        assert_eq!(
+            m.workspace_bytes(NodeKind::EncodeOnly, 0.5),
+            m.workspace_bytes(NodeKind::EncodeOnly, 0.8)
+        );
+    }
+}

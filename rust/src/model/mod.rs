@@ -1,0 +1,17 @@
+//! LMM model descriptions and the analytical GPU memory model.
+//!
+//! [`spec`] declares the three paper models (MiniCPM-V 2.6, InternVL2-8B,
+//! InternVL2-26B), the audio model from Appendix A.1, and the runnable
+//! `tiny-lmm` the real engine serves. [`vision`] implements each family's
+//! image→tile→token math (MiniCPM adaptive slicing, InternVL closest-
+//! aspect-ratio tiling). [`memory`] is the capacity model behind Figure 2
+//! and Tables 2, 3 and 8.
+
+pub mod spec;
+pub mod vision;
+pub mod memory;
+pub mod tokenizer;
+
+pub use memory::{MemoryModel, NodeKind, CapacityLimit};
+pub use spec::{DeviceSpec, LlmSpec, LmmSpec, MemCoeffs, ModelId, TilingPolicy, VisionSpec};
+pub use vision::{mm_tokens_for_image, tiles_for_image, Resolution};

@@ -1,0 +1,79 @@
+//! Byte-level tokenizer for the tiny-lmm served by the real engine.
+//!
+//! The tiny model's vocabulary is 512: ids 0–255 are raw bytes, 256–259 are
+//! control tokens, 260–511 are reserved for multimodal placeholder ids.
+//! This is deliberately trivial — the serving system under test cares about
+//! token *counts and timing*, not linguistic quality — but it is a real,
+//! invertible tokenizer so decoded output can be checked end to end.
+
+/// Beginning-of-sequence token.
+pub const BOS: u32 = 256;
+/// End-of-sequence token.
+pub const EOS: u32 = 257;
+/// Placeholder marking where an image's MM tokens are spliced in.
+pub const IMAGE_PLACEHOLDER: u32 = 258;
+/// Padding token.
+pub const PAD: u32 = 259;
+/// Vocabulary size (matches `LlmSpec::vocab` for `TinyLmm`).
+pub const VOCAB: u32 = 512;
+
+/// Encode text to token ids (bytes + BOS).
+pub fn encode(text: &str) -> Vec<u32> {
+    let mut out = Vec::with_capacity(text.len() + 1);
+    out.push(BOS);
+    out.extend(text.bytes().map(|b| b as u32));
+    out
+}
+
+/// Decode token ids back to text, skipping control tokens.
+pub fn decode(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| t < 256)
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Build a prompt token sequence with `n_images` image placeholders
+/// preceding the text (the layout the tiny-lmm prefill graph expects).
+pub fn encode_multimodal(text: &str, n_images: usize) -> Vec<u32> {
+    let mut out = Vec::with_capacity(text.len() + n_images + 1);
+    out.push(BOS);
+    for _ in 0..n_images {
+        out.push(IMAGE_PLACEHOLDER);
+    }
+    out.extend(text.bytes().map(|b| b as u32));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let toks = encode("hello, world");
+        assert_eq!(toks[0], BOS);
+        assert_eq!(decode(&toks), "hello, world");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "café ✓";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn multimodal_layout() {
+        let toks = encode_multimodal("hi", 3);
+        assert_eq!(toks[0], BOS);
+        assert_eq!(&toks[1..4], &[IMAGE_PLACEHOLDER; 3]);
+        assert_eq!(decode(&toks), "hi");
+    }
+
+    #[test]
+    fn control_tokens_within_vocab() {
+        assert!(PAD < VOCAB && EOS < VOCAB);
+    }
+}

@@ -1,0 +1,203 @@
+//! Image → tile ("patch") → multimodal-token math for each model family.
+//!
+//! The paper's capacity and latency results hinge on how many tiles an
+//! image of a given resolution produces (Table 3's `#Patch` column) and how
+//! many LLM tokens those tiles become. Both families' published
+//! preprocessing algorithms are implemented here and validated against the
+//! paper's reported patch counts.
+
+use super::spec::{LmmSpec, TilingPolicy};
+
+/// Image resolution in pixels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Resolution {
+    pub w: u32,
+    pub h: u32,
+}
+
+impl Resolution {
+    pub const fn new(w: u32, h: u32) -> Resolution {
+        Resolution { w, h }
+    }
+
+    /// The three resolutions the paper evaluates (Tables 2–3).
+    pub fn paper_set() -> [Resolution; 3] {
+        [
+            Resolution::new(313, 234),
+            Resolution::new(787, 444),
+            Resolution::new(4032, 3024),
+        ]
+    }
+
+    /// The "4K" resolution used in most experiments.
+    pub const fn four_k() -> Resolution {
+        Resolution::new(4032, 3024)
+    }
+
+    pub fn pixels(&self) -> u64 {
+        self.w as u64 * self.h as u64
+    }
+
+    pub fn aspect(&self) -> f64 {
+        self.w as f64 / self.h as f64
+    }
+}
+
+impl std::fmt::Display for Resolution {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.w, self.h)
+    }
+}
+
+/// Number of tiles ("patches") the encoder processes for one image,
+/// including any overview/thumbnail tile.
+pub fn tiles_for_image(spec: &LmmSpec, res: Resolution) -> u32 {
+    match spec.vision.tiling {
+        TilingPolicy::MiniCpmSlice { scale_res, max_slices } => {
+            minicpm_slices(res, scale_res, max_slices)
+        }
+        TilingPolicy::InternVlRatio { tile_px: _, max_tiles } => {
+            internvl_tiles(res, max_tiles)
+        }
+        TilingPolicy::AudioClip => 1,
+        TilingPolicy::Fixed { tiles } => tiles,
+    }
+}
+
+/// LLM-facing multimodal tokens for one image.
+pub fn mm_tokens_for_image(spec: &LmmSpec, res: Resolution) -> u64 {
+    tiles_for_image(spec, res) as u64 * spec.vision.tokens_per_tile as u64
+}
+
+/// MiniCPM-V adaptive slicing: `multiple = ceil(W·H / scale_res²)` clamped
+/// to `max_slices`; when the image is sliced, the model additionally
+/// processes a downscaled overview image, hence `slices + 1`.
+fn minicpm_slices(res: Resolution, scale_res: u32, max_slices: u32) -> u32 {
+    let ideal = (res.pixels() as f64 / (scale_res as u64 * scale_res as u64) as f64).ceil() as u32;
+    let multiple = ideal.clamp(1, max_slices);
+    if multiple <= 1 {
+        1
+    } else {
+        multiple + 1
+    }
+}
+
+/// InternVL dynamic preprocessing: pick the tile grid `(i, j)` with
+/// `i·j ≤ max_tiles` whose aspect ratio is closest to the image's (ties
+/// broken toward the larger grid when the image has enough area), then add
+/// a thumbnail tile when the grid has more than one tile.
+fn internvl_tiles(res: Resolution, max_tiles: u32) -> u32 {
+    let aspect = res.aspect();
+    let area = res.pixels() as f64;
+    let tile_px = 448.0_f64;
+    // Candidate grids sorted by tile count ascending, exactly like the
+    // published `find_closest_aspect_ratio`.
+    let mut grids: Vec<(u32, u32)> = Vec::new();
+    for i in 1..=max_tiles {
+        for j in 1..=max_tiles {
+            if i * j <= max_tiles {
+                grids.push((i, j));
+            }
+        }
+    }
+    grids.sort_by_key(|&(i, j)| i * j);
+
+    let mut best = (1u32, 1u32);
+    let mut best_diff = f64::INFINITY;
+    for &(i, j) in &grids {
+        let target = i as f64 / j as f64;
+        let diff = (aspect - target).abs();
+        if diff < best_diff {
+            best_diff = diff;
+            best = (i, j);
+        } else if diff == best_diff {
+            // Tie-break from the reference implementation: only move to the
+            // larger grid when the image has enough pixels to fill half of
+            // that grid's canvas.
+            if area > 0.5 * tile_px * tile_px * (i * j) as f64 {
+                best = (i, j);
+            }
+        }
+    }
+    let n = best.0 * best.1;
+    if n > 1 {
+        n + 1
+    } else {
+        1
+    }
+}
+
+/// Total multimodal tokens for a request with `images` images at `res`.
+pub fn mm_tokens_for_request(spec: &LmmSpec, images: u32, res: Resolution) -> u64 {
+    images as u64 * mm_tokens_for_image(spec, res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelId;
+
+    /// Table 3's `#Patch` column, MiniCPM-V 2.6 rows: 1 / 3 / 10.
+    #[test]
+    fn minicpm_patch_counts_match_table3() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        assert_eq!(tiles_for_image(&spec, Resolution::new(313, 234)), 1);
+        assert_eq!(tiles_for_image(&spec, Resolution::new(787, 444)), 3);
+        assert_eq!(tiles_for_image(&spec, Resolution::new(4032, 3024)), 10);
+    }
+
+    /// Table 3's `#Patch` column, InternVL rows: 13 / 3 / 13.
+    #[test]
+    fn internvl_patch_counts_match_table3() {
+        for id in [ModelId::InternVl2_8b, ModelId::InternVl2_26b] {
+            let spec = LmmSpec::get(id);
+            assert_eq!(tiles_for_image(&spec, Resolution::new(313, 234)), 13, "{id:?}");
+            assert_eq!(tiles_for_image(&spec, Resolution::new(787, 444)), 3, "{id:?}");
+            assert_eq!(tiles_for_image(&spec, Resolution::new(4032, 3024)), 13, "{id:?}");
+        }
+    }
+
+    #[test]
+    fn token_counts() {
+        let mini = LmmSpec::get(ModelId::MiniCpmV26);
+        // 10 tiles × 64 tokens at 4K.
+        assert_eq!(mm_tokens_for_image(&mini, Resolution::four_k()), 640);
+        let ivl = LmmSpec::get(ModelId::InternVl2_8b);
+        // 13 tiles × 256 tokens at 4K.
+        assert_eq!(mm_tokens_for_image(&ivl, Resolution::four_k()), 3328);
+    }
+
+    #[test]
+    fn square_small_image_single_tile_minicpm() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        assert_eq!(tiles_for_image(&spec, Resolution::new(448, 448)), 1);
+        // Just over one tile's area → 2 slices + overview.
+        assert_eq!(tiles_for_image(&spec, Resolution::new(640, 448)), 3);
+    }
+
+    #[test]
+    fn internvl_square_image() {
+        let spec = LmmSpec::get(ModelId::InternVl2_8b);
+        // Square → best grid by aspect is i == j; area rule favours 3×3=9
+        // (+1 thumbnail).
+        let t = tiles_for_image(&spec, Resolution::new(1024, 1024));
+        assert!(t == 10, "got {t}");
+    }
+
+    #[test]
+    fn request_tokens_scale_linearly() {
+        let spec = LmmSpec::get(ModelId::InternVl2_8b);
+        let one = mm_tokens_for_request(&spec, 1, Resolution::four_k());
+        let four = mm_tokens_for_request(&spec, 4, Resolution::four_k());
+        assert_eq!(four, 4 * one);
+    }
+
+    #[test]
+    fn tiny_is_fixed_single_tile() {
+        let spec = LmmSpec::get(ModelId::TinyLmm);
+        for res in Resolution::paper_set() {
+            assert_eq!(tiles_for_image(&spec, res), 1);
+        }
+        assert_eq!(mm_tokens_for_image(&spec, Resolution::new(64, 64)), 16);
+    }
+}

@@ -1,0 +1,197 @@
+//! A small Gaussian-process regressor (RBF kernel, Cholesky solve) — the
+//! surrogate for Bayesian optimization over the config space. Sample
+//! counts are tiny (tens of simulator evaluations), so the O(n³) solve is
+//! irrelevant.
+
+/// GP with RBF kernel k(x,x') = σ²·exp(−‖x−x'‖²/(2ℓ²)) + noise·δ.
+#[derive(Debug, Clone)]
+pub struct Gp {
+    lengthscale: f64,
+    signal_var: f64,
+    noise_var: f64,
+    xs: Vec<Vec<f64>>,
+    /// Cholesky factor L of K (lower triangular, row-major packed).
+    chol: Vec<Vec<f64>>,
+    /// α = K⁻¹ y.
+    alpha: Vec<f64>,
+    y_mean: f64,
+}
+
+impl Gp {
+    pub fn new(lengthscale: f64, signal_var: f64, noise_var: f64) -> Gp {
+        assert!(lengthscale > 0.0 && signal_var > 0.0 && noise_var >= 0.0);
+        Gp {
+            lengthscale,
+            signal_var,
+            noise_var,
+            xs: Vec::new(),
+            chol: Vec::new(),
+            alpha: Vec::new(),
+            y_mean: 0.0,
+        }
+    }
+
+    fn kernel(&self, a: &[f64], b: &[f64]) -> f64 {
+        let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+        self.signal_var * (-d2 / (2.0 * self.lengthscale * self.lengthscale)).exp()
+    }
+
+    /// Fit to observations (replaces previous fit).
+    pub fn fit(&mut self, xs: Vec<Vec<f64>>, ys: &[f64]) {
+        assert_eq!(xs.len(), ys.len());
+        let n = xs.len();
+        self.y_mean = if n == 0 { 0.0 } else { ys.iter().sum::<f64>() / n as f64 };
+        let yc: Vec<f64> = ys.iter().map(|y| y - self.y_mean).collect();
+
+        // Build K + noise I.
+        let mut k = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.kernel(&xs[i], &xs[j]);
+                k[i][j] = v;
+                k[j][i] = v;
+            }
+            k[i][i] += self.noise_var + 1e-9;
+        }
+        // Cholesky K = L Lᵀ.
+        let mut l = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = k[i][j];
+                for t in 0..j {
+                    s -= l[i][t] * l[j][t];
+                }
+                if i == j {
+                    l[i][j] = s.max(1e-12).sqrt();
+                } else {
+                    l[i][j] = s / l[j][j];
+                }
+            }
+        }
+        // Solve L z = y, then Lᵀ α = z.
+        let mut z = vec![0.0; n];
+        for i in 0..n {
+            let mut s = yc[i];
+            for t in 0..i {
+                s -= l[i][t] * z[t];
+            }
+            z[i] = s / l[i][i];
+        }
+        let mut alpha = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = z[i];
+            for t in i + 1..n {
+                s -= l[t][i] * alpha[t];
+            }
+            alpha[i] = s / l[i][i];
+        }
+        self.xs = xs;
+        self.chol = l;
+        self.alpha = alpha;
+    }
+
+    /// Posterior mean and variance at `x`.
+    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let n = self.xs.len();
+        if n == 0 {
+            return (self.y_mean, self.signal_var);
+        }
+        let kstar: Vec<f64> = self.xs.iter().map(|xi| self.kernel(xi, x)).collect();
+        let mean = self.y_mean + kstar.iter().zip(&self.alpha).map(|(k, a)| k * a).sum::<f64>();
+        // v = L⁻¹ k*.
+        let mut v = vec![0.0; n];
+        for i in 0..n {
+            let mut s = kstar[i];
+            for t in 0..i {
+                s -= self.chol[i][t] * v[t];
+            }
+            v[i] = s / self.chol[i][i];
+        }
+        let var = (self.signal_var - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
+        (mean, var)
+    }
+
+    /// Expected improvement over `best` (maximization).
+    pub fn expected_improvement(&self, x: &[f64], best: f64) -> f64 {
+        let (mu, var) = self.predict(x);
+        let sigma = var.sqrt();
+        if sigma < 1e-12 {
+            return (mu - best).max(0.0);
+        }
+        let z = (mu - best) / sigma;
+        (mu - best) * norm_cdf(z) + sigma * norm_pdf(z)
+    }
+}
+
+fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Abramowitz–Stegun style erf approximation (max abs error ~1.5e-7).
+fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interpolates_training_points() {
+        let mut gp = Gp::new(1.0, 1.0, 1e-6);
+        let xs = vec![vec![0.0], vec![1.0], vec![2.0]];
+        let ys = [0.0, 1.0, 0.0];
+        gp.fit(xs.clone(), &ys);
+        for (x, y) in xs.iter().zip(ys) {
+            let (mu, var) = gp.predict(x);
+            assert!((mu - y).abs() < 1e-2, "mu {mu} vs {y}");
+            assert!(var < 0.01);
+        }
+    }
+
+    #[test]
+    fn uncertainty_grows_away_from_data() {
+        let mut gp = Gp::new(0.5, 1.0, 1e-6);
+        gp.fit(vec![vec![0.0]], &[1.0]);
+        let (_, v_near) = gp.predict(&[0.1]);
+        let (_, v_far) = gp.predict(&[5.0]);
+        assert!(v_far > 10.0 * v_near);
+    }
+
+    #[test]
+    fn ei_positive_in_unexplored_regions() {
+        let mut gp = Gp::new(0.5, 1.0, 1e-6);
+        gp.fit(vec![vec![0.0], vec![1.0]], &[0.0, 0.5]);
+        let ei_far = gp.expected_improvement(&[3.0], 0.5);
+        let ei_known_bad = gp.expected_improvement(&[0.0], 0.5);
+        assert!(ei_far > ei_known_bad);
+    }
+
+    #[test]
+    fn erf_sanity() {
+        assert!((erf(0.0)).abs() < 1e-7); // A&S 7.1.26 max error ~1.5e-7
+        assert!((erf(1.0) - 0.8427).abs() < 1e-3);
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-9);
+        assert!(norm_cdf(3.0) > 0.998);
+    }
+
+    #[test]
+    fn empty_gp_predicts_prior() {
+        let gp = Gp::new(1.0, 2.0, 1e-6);
+        let (mu, var) = gp.predict(&[1.0]);
+        assert_eq!(mu, 0.0);
+        assert_eq!(var, 2.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! The black-box resource-allocation optimizer (§3.2.3, Appendix D):
+//! maximize `f(p, b, s) − β·cost(p)` over parallelization, batch-size and
+//! scheduling configurations, evaluating `f` with the simulator.
+//!
+//! [`bayes`] implements Bayesian optimization with a Gaussian-process
+//! surrogate ([`gp`]) and expected improvement; [`space`] defines the
+//! discrete configuration space with the paper's implicit constraints
+//! (total GPUs fixed, ≥1 instance per needed stage).
+
+pub mod space;
+pub mod gp;
+pub mod bayes;
+pub mod objective;
+
+pub use bayes::{BayesOpt, BayesOptConfig};
+pub use objective::{ConfigEvaluator, Objective};
+pub use space::{ConfigPoint, SearchSpace};

@@ -1,0 +1,140 @@
+//! The optimization objective (Eq. 1): `f(p, b, s) − β·cost(p)` where `f`
+//! is goodput measured by the simulator and `cost(p)` is the GPU count
+//! (constant per-GPU price `c`). With the fixed-cluster constraint the
+//! cost term is constant, making the objective pure goodput — exactly the
+//! Appendix E.4 setting — but β and variable-GPU spaces are supported.
+
+use crate::core::slo::Slo;
+use crate::model::spec::{DeviceSpec, LmmSpec};
+use crate::metrics::goodput::find_goodput;
+use crate::sim::engine::{SimConfig, Simulator};
+use crate::util::rng::Rng;
+use crate::workload::Workload;
+
+use super::space::ConfigPoint;
+
+/// Objective definition.
+#[derive(Debug, Clone, Copy)]
+pub struct Objective {
+    /// GPU-count penalty weight β.
+    pub beta: f64,
+    /// Per-GPU unit cost c.
+    pub gpu_cost: f64,
+    /// SLO used for goodput.
+    pub slo: Slo,
+    /// Attainment threshold (the paper uses 0.9).
+    pub threshold: f64,
+}
+
+/// Evaluates configurations through the simulator (the black-box `f`).
+pub struct ConfigEvaluator<'w> {
+    pub spec: LmmSpec,
+    pub device: DeviceSpec,
+    pub workload: &'w dyn Workload,
+    pub objective: Objective,
+    /// Requests per evaluation run (the paper samples 100-request trials).
+    pub n_requests: usize,
+    pub seed: u64,
+}
+
+impl<'w> ConfigEvaluator<'w> {
+    /// Goodput (req/s at ≥ threshold attainment) for a configuration.
+    pub fn goodput(&self, point: &ConfigPoint) -> f64 {
+        let cfg = SimConfig::new(self.spec.clone(), self.device, point.to_epd());
+        let result = find_goodput(
+            |rate| {
+                let mut rng = Rng::new(self.seed);
+                let reqs = self.workload.generate(&self.spec, self.n_requests, rate, &mut rng);
+                let out = Simulator::run(&cfg, &reqs);
+                out.slo_attainment(self.objective.slo)
+            },
+            0.05,
+            self.objective.threshold,
+            0.05,
+        );
+        result.goodput
+    }
+
+    /// Full objective value (Eq. 1).
+    pub fn objective_value(&self, point: &ConfigPoint) -> f64 {
+        let f = self.goodput(point);
+        let cost = self.objective.gpu_cost * point.topology.total() as f64;
+        f - self.objective.beta * cost
+    }
+
+    /// Mean TTFT/TPOT at a fixed rate (for the Table 5 comparison, which
+    /// holds the rate at the optimized system's goodput).
+    pub fn latency_at_rate(&self, point: &ConfigPoint, rate: f64) -> (f64, f64) {
+        let cfg = SimConfig::new(self.spec.clone(), self.device, point.to_epd());
+        let mut rng = Rng::new(self.seed);
+        let reqs = self.workload.generate(&self.spec, self.n_requests, rate, &mut rng);
+        let out = Simulator::run(&cfg, &reqs);
+        (out.mean_ttft(), out.mean_tpot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::config::{AssignPolicy, QueuePolicy};
+    use crate::core::topology::Topology;
+    use crate::model::spec::ModelId;
+    use crate::workload::synthetic::SyntheticWorkload;
+
+    fn evaluator(w: &SyntheticWorkload) -> ConfigEvaluator<'_> {
+        ConfigEvaluator {
+            spec: LmmSpec::get(ModelId::MiniCpmV26),
+            device: DeviceSpec::a100(),
+            workload: w,
+            objective: Objective {
+                beta: 0.0,
+                gpu_cost: 1.0,
+                slo: Slo::new(3.9, 0.06),
+                threshold: 0.9,
+            },
+            n_requests: 30,
+            seed: 42,
+        }
+    }
+
+    fn point(t: Topology) -> ConfigPoint {
+        ConfigPoint {
+            topology: t,
+            batch_e: 2,
+            batch_p: 1,
+            batch_d: 128,
+            queue: QueuePolicy::Fcfs,
+            assign: AssignPolicy::LeastLoaded,
+            irp: true,
+        }
+    }
+
+    #[test]
+    fn sensible_config_has_positive_goodput() {
+        let w = SyntheticWorkload::new(6, 10);
+        let ev = evaluator(&w);
+        let g = ev.goodput(&point(Topology::new(5, 2, 1)));
+        assert!(g > 0.1, "goodput {g}");
+    }
+
+    #[test]
+    fn starved_prefill_loses_to_balanced() {
+        let w = SyntheticWorkload::new(6, 10);
+        let ev = evaluator(&w);
+        let balanced = ev.goodput(&point(Topology::new(5, 2, 1)));
+        let starved = ev.goodput(&point(Topology::new(1, 1, 6)));
+        assert!(
+            balanced > starved,
+            "balanced {balanced} vs encode-starved {starved}"
+        );
+    }
+
+    #[test]
+    fn beta_penalizes_gpus() {
+        let w = SyntheticWorkload::new(2, 10);
+        let mut ev = evaluator(&w);
+        ev.objective.beta = 100.0;
+        let v = ev.objective_value(&point(Topology::new(5, 2, 1)));
+        assert!(v < 0.0, "β dominates: {v}");
+    }
+}

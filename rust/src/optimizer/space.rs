@@ -1,0 +1,174 @@
+//! The configuration search space X of Appendix D.
+//!
+//! A point fixes: the topology (instances per stage, constrained to the
+//! cluster's GPU count), per-stage max batch sizes, the queue/assignment
+//! policies, and the IRP toggle. Appendix E.4's restricted space (TP = PP
+//! = 1, uniform batch per stage) is the default; rejection sampling
+//! enforces the total-GPU constraint exactly as described.
+
+use crate::core::config::{AssignPolicy, EpdConfig, QueuePolicy};
+use crate::core::topology::Topology;
+use crate::util::rng::Rng;
+
+/// One candidate configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigPoint {
+    pub topology: Topology,
+    pub batch_e: u32,
+    pub batch_p: u32,
+    pub batch_d: u32,
+    pub queue: QueuePolicy,
+    pub assign: AssignPolicy,
+    pub irp: bool,
+}
+
+impl ConfigPoint {
+    /// Materialize as an [`EpdConfig`].
+    pub fn to_epd(&self) -> EpdConfig {
+        let mut cfg = EpdConfig::epd(self.topology, self.batch_e, self.batch_p, self.batch_d);
+        cfg.irp = self.irp;
+        for s in [
+            &mut cfg.sched_encode,
+            &mut cfg.sched_prefill,
+            &mut cfg.sched_decode,
+        ] {
+            s.queue = self.queue;
+            s.assign = self.assign;
+        }
+        cfg
+    }
+
+    /// Encode as a numeric feature vector for the GP surrogate.
+    pub fn features(&self) -> Vec<f64> {
+        vec![
+            self.topology.encode as f64,
+            self.topology.prefill as f64,
+            self.topology.decode as f64,
+            (self.batch_e as f64).ln_1p(),
+            (self.batch_p as f64).ln_1p(),
+            (self.batch_d as f64).ln_1p(),
+            match self.queue {
+                QueuePolicy::Fcfs => 0.0,
+                QueuePolicy::Sjf => 1.0,
+                QueuePolicy::SloAware => 2.0,
+            },
+            match self.assign {
+                AssignPolicy::RoundRobin => 0.0,
+                AssignPolicy::LeastLoaded => 1.0,
+            },
+            self.irp as u8 as f64,
+        ]
+    }
+}
+
+/// The search space.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Total GPUs that must be used exactly (Appendix D's implicit
+    /// constraint for full utilization).
+    pub total_gpus: u32,
+    pub batch_choices: Vec<u32>,
+    pub decode_batch_choices: Vec<u32>,
+    pub queue_choices: Vec<QueuePolicy>,
+    pub assign_choices: Vec<AssignPolicy>,
+    pub allow_irp_toggle: bool,
+}
+
+impl SearchSpace {
+    /// The Appendix E.4 space on `total_gpus` GPUs.
+    pub fn paper_default(total_gpus: u32) -> SearchSpace {
+        SearchSpace {
+            total_gpus,
+            batch_choices: vec![1, 2, 4, 8],
+            decode_batch_choices: vec![16, 32, 64, 128],
+            queue_choices: vec![QueuePolicy::Fcfs, QueuePolicy::Sjf],
+            assign_choices: vec![AssignPolicy::RoundRobin, AssignPolicy::LeastLoaded],
+            allow_irp_toggle: true,
+        }
+    }
+
+    /// Sample a valid point uniformly (rejection sampling over topologies).
+    pub fn sample(&self, rng: &mut Rng) -> ConfigPoint {
+        let topology = loop {
+            let e = rng.range(1, self.total_gpus as usize - 2) as u32;
+            let p = rng.range(1, self.total_gpus as usize - 2) as u32;
+            let d = self.total_gpus as i64 - e as i64 - p as i64;
+            if d >= 1 {
+                break Topology::new(e, p, d as u32);
+            }
+        };
+        ConfigPoint {
+            topology,
+            batch_e: *rng.choose(&self.batch_choices),
+            batch_p: *rng.choose(&self.batch_choices),
+            batch_d: *rng.choose(&self.decode_batch_choices),
+            queue: *rng.choose(&self.queue_choices),
+            assign: *rng.choose(&self.assign_choices),
+            irp: if self.allow_irp_toggle { rng.bool(0.5) } else { true },
+        }
+    }
+
+    /// Enumerate all topologies summing to the GPU budget (used by the
+    /// exhaustive mode of small sweeps, e.g. Figure 10-left).
+    pub fn topologies(&self) -> Vec<Topology> {
+        let n = self.total_gpus;
+        let mut out = Vec::new();
+        for e in 1..=(n - 2) {
+            for p in 1..=(n - 1 - e) {
+                let d = n - e - p;
+                if d >= 1 {
+                    out.push(Topology::new(e, p, d));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_respect_gpu_budget() {
+        let space = SearchSpace::paper_default(8);
+        let mut rng = Rng::new(11);
+        for _ in 0..500 {
+            let p = space.sample(&mut rng);
+            assert_eq!(p.topology.total(), 8);
+            assert!(p.topology.encode >= 1 && p.topology.prefill >= 1 && p.topology.decode >= 1);
+            assert!(space.batch_choices.contains(&p.batch_e));
+            assert!(space.decode_batch_choices.contains(&p.batch_d));
+        }
+    }
+
+    #[test]
+    fn enumeration_complete_for_8_gpus() {
+        let space = SearchSpace::paper_default(8);
+        let topos = space.topologies();
+        // Compositions of 8 into 3 positive parts: C(7,2) = 21.
+        assert_eq!(topos.len(), 21);
+        assert!(topos.contains(&Topology::new(5, 2, 1)));
+        assert!(topos.iter().all(|t| t.total() == 8));
+    }
+
+    #[test]
+    fn features_are_stable_length() {
+        let space = SearchSpace::paper_default(8);
+        let mut rng = Rng::new(12);
+        let a = space.sample(&mut rng).features();
+        let b = space.sample(&mut rng).features();
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.len(), 9);
+    }
+
+    #[test]
+    fn to_epd_roundtrip() {
+        let space = SearchSpace::paper_default(8);
+        let mut rng = Rng::new(13);
+        let p = space.sample(&mut rng);
+        let cfg = p.to_epd();
+        assert_eq!(cfg.topology(), p.topology);
+        assert_eq!(cfg.irp, p.irp);
+    }
+}

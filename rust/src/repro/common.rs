@@ -1,0 +1,74 @@
+//! Shared setup for the paper experiments: the three compared systems on
+//! the 8-GPU testbed, simulation helpers, and formatting.
+
+use crate::core::config::EpdConfig;
+use crate::core::slo::Slo;
+use crate::core::topology::Topology;
+use crate::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use crate::sim::engine::{SimConfig, Simulator};
+use crate::sim::outcome::SimOutcome;
+use crate::util::rng::Rng;
+use crate::workload::Workload;
+
+/// Experiment seed — every table regenerates bit-identically.
+pub const SEED: u64 = 0xEBD_2025;
+
+/// The three compared systems on 8 GPUs (§4: EPD uses the optimizer's
+/// 5E2P1D default; DistServe is 7P1D; vLLM is 8-way DP).
+pub fn system_configs() -> [(&'static str, EpdConfig); 3] {
+    [
+        ("EPD", EpdConfig::epd(Topology::new(5, 2, 1), 1, 1, 128)),
+        ("DistServe", EpdConfig::distserve(7, 1, 1, 128)),
+        ("vLLM", EpdConfig::aggregated(8, 64)),
+    ]
+}
+
+/// Run one (system, workload, rate) cell.
+pub fn run_cell(
+    spec: &LmmSpec,
+    device: DeviceSpec,
+    epd: &EpdConfig,
+    workload: &dyn Workload,
+    n: usize,
+    rate: f64,
+) -> SimOutcome {
+    let cfg = SimConfig::new(spec.clone(), device, epd.clone());
+    let mut rng = Rng::new(SEED);
+    let reqs = workload.generate(spec, n, rate, &mut rng);
+    Simulator::run(&cfg, &reqs)
+}
+
+/// SLO attainment across the three systems at one rate.
+pub fn attainment_row(
+    spec: &LmmSpec,
+    device: DeviceSpec,
+    workload: &dyn Workload,
+    n: usize,
+    rate: f64,
+    slo: Slo,
+) -> [f64; 3] {
+    let mut out = [0.0; 3];
+    for (i, (_, cfg)) in system_configs().iter().enumerate() {
+        out[i] = run_cell(spec, device, cfg, workload, n, rate, ).slo_attainment(slo);
+    }
+    out
+}
+
+pub fn spec(id: ModelId) -> LmmSpec {
+    LmmSpec::get(id)
+}
+
+/// Format an attainment as 0.00–1.00.
+pub fn att(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format seconds.
+pub fn secs(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format a ratio like "2.4x".
+pub fn ratio(x: f64) -> String {
+    format!("{x:.1}x")
+}

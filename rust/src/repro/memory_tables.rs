@@ -1,0 +1,245 @@
+//! Capacity artifacts from the memory model: Figure 2, Table 2, Table 3,
+//! Table 8.
+
+use crate::model::memory::{CapacityLimit, MemoryModel, NodeKind};
+use crate::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use crate::model::vision::Resolution;
+use crate::util::bench::TableReport;
+
+fn mm(id: ModelId) -> MemoryModel {
+    MemoryModel::new(LmmSpec::get(id), DeviceSpec::a100())
+}
+
+fn cap_str(n: u32, why: CapacityLimit) -> String {
+    match why {
+        CapacityLimit::Oom if n == 0 => "OOM".to_string(),
+        CapacityLimit::OutOfContext if n == 0 => "OOCL".to_string(),
+        CapacityLimit::OutOfContext => format!("{n} (ctx)"),
+        _ => n.to_string(),
+    }
+}
+
+/// Figure 2: removing the LLM from the GPU grows max batch and images/req
+/// (MiniCPM-V 2.6).
+pub fn fig2_capacity() -> Vec<TableReport> {
+    let m = mm(ModelId::MiniCpmV26);
+    let mut t = TableReport::new(
+        "fig2_capacity",
+        "Fig 2 — supported batch & images/req with vs without LLM on the GPU (MiniCPM-V 2.6)",
+        &["resolution", "metric", "with LLM (agg.)", "LLM removed (E-only)", "gain"],
+    );
+    for res in Resolution::paper_set() {
+        let (b_with, _) = m.max_batch(NodeKind::Colocated, 1, res, 0.8);
+        let (b_wo, _) = m.max_batch(NodeKind::EncodeOnly, 1, res, 0.8);
+        t.row(vec![
+            res.to_string(),
+            "max batch (1 img/req)".into(),
+            b_with.to_string(),
+            b_wo.to_string(),
+            format!("{:.1}x", b_wo as f64 / b_with.max(1) as f64),
+        ]);
+        let (i_with, w1) = m.max_images_per_request(NodeKind::Colocated, res, 0.8, 22);
+        let (i_wo, w2) = m.max_images_per_request(NodeKind::EncodeOnly, res, 0.8, 22);
+        t.row(vec![
+            res.to_string(),
+            "max images/request".into(),
+            cap_str(i_with, w1),
+            cap_str(i_wo, w2),
+            format!("{:.1}x", i_wo as f64 / i_with.max(1) as f64),
+        ]);
+    }
+    t.note("paper: removing the LLM enables much larger batches and image counts (Fig 2)");
+    vec![t]
+}
+
+/// Table 2: max images per request, DistServe vs EPD, with paper values.
+pub fn table2_images_per_req() -> Vec<TableReport> {
+    let expect: &[(ModelId, &[(u32, u32, &str, &str)])] = &[
+        (
+            ModelId::MiniCpmV26,
+            &[(313, 234, "77", "490"), (787, 444, "26", "165"), (4032, 3024, "7", "49")],
+        ),
+        (
+            ModelId::InternVl2_8b,
+            &[(313, 234, "19", "19"), (787, 444, "19", "19"), (4032, 3024, "19", "19")],
+        ),
+        (
+            ModelId::InternVl2_26b,
+            &[(313, 234, "1", "10"), (787, 444, "11", "45"), (4032, 3024, "1", "10")],
+        ),
+    ];
+    let mut t = TableReport::new(
+        "table2_images_per_req",
+        "Table 2 — max images per request (batch 1, KV 80%)",
+        &["model", "resolution", "DistServe", "EPD", "paper DistServe", "paper EPD"],
+    );
+    for (id, rows) in expect {
+        let m = mm(*id);
+        for (w, h, p_dist, p_epd) in *rows {
+            let res = Resolution::new(*w, *h);
+            let (d, wd) = m.max_images_per_request(NodeKind::Colocated, res, 0.8, 22);
+            // EPD: the binding node is whichever of encode/prefill admits
+            // fewer images.
+            let (e1, we1) = m.max_images_per_request(NodeKind::EncodeOnly, res, 0.8, 22);
+            let (e2, we2) = m.max_images_per_request(NodeKind::LlmOnly, res, 0.8, 22);
+            let (e, we) = if e1 <= e2 { (e1, we1) } else { (e2, we2) };
+            t.row(vec![
+                m.spec.name.to_string(),
+                res.to_string(),
+                cap_str(d, wd),
+                cap_str(e, we),
+                p_dist.to_string(),
+                p_epd.to_string(),
+            ]);
+        }
+    }
+    t.note("headline: 10x more images at 4K for InternVL2-8B-class; 7-10x for 26B");
+    vec![t]
+}
+
+/// Table 3: max batch sizes for E and P stages.
+pub fn table3_batch_sizes() -> Vec<TableReport> {
+    let expect: &[(ModelId, &[(u32, u32, &str, &str, &str)])] = &[
+        (
+            ModelId::MiniCpmV26,
+            &[
+                (313, 234, "7", "49", "86"),
+                (787, 444, "2", "16", "29"),
+                (4032, 3024, "OOM", "4", "9"),
+            ],
+        ),
+        (
+            ModelId::InternVl2_8b,
+            &[
+                (313, 234, "2", "15", "2"),
+                (787, 444, "9", "67", "10"),
+                (4032, 3024, "2", "15", "2"),
+            ],
+        ),
+        (
+            ModelId::InternVl2_26b,
+            &[
+                (313, 234, "OOM", "6", "1"),
+                (787, 444, "1", "22", "4"),
+                (4032, 3024, "OOM", "6", "1"),
+            ],
+        ),
+    ];
+    let mut t = TableReport::new(
+        "table3_batch_sizes",
+        "Table 3 — max batch size for E and P stages (10 images/req, KV 80%)",
+        &[
+            "model", "resolution", "#patch", "DistServe (E,P)", "EPD E", "EPD P",
+            "paper (E,P)", "paper E", "paper P",
+        ],
+    );
+    for (id, rows) in expect {
+        let m = mm(*id);
+        for (w, h, p_d, p_e, p_p) in *rows {
+            let res = Resolution::new(*w, *h);
+            let patches = crate::model::vision::tiles_for_image(&m.spec, res);
+            let (d, wd) = m.max_batch(NodeKind::Colocated, 10, res, 0.8);
+            let (e, we) = m.max_batch(NodeKind::EncodeOnly, 10, res, 0.8);
+            let (p, wp) = m.max_batch(NodeKind::LlmOnly, 10, res, 0.8);
+            t.row(vec![
+                m.spec.name.to_string(),
+                res.to_string(),
+                patches.to_string(),
+                cap_str(d, wd),
+                cap_str(e, we),
+                cap_str(p, wp),
+                p_d.to_string(),
+                p_e.to_string(),
+                p_p.to_string(),
+            ]);
+        }
+    }
+    t.note("headline: 22x encode batch for InternVL2-26B at 787x444; 14.5x prefill for MiniCPM");
+    vec![t]
+}
+
+/// Table 8: max KV-cache fraction on the prefill node.
+pub fn table8_kvcache() -> Vec<TableReport> {
+    let expect: &[(ModelId, &[(u32, &str, &str)])] = &[
+        (
+            ModelId::MiniCpmV26,
+            &[(5, "86%", "99%"), (10, "74%", "97%"), (20, "49%", "95%"), (40, "OOM", "92%"), (80, "OOM", "OOCL")],
+        ),
+        (ModelId::InternVl2_8b, &[(5, "94%", "95%"), (10, "89%", "91%"), (20, "OOCL", "OOCL")]),
+        (
+            ModelId::InternVl2_26b,
+            &[(5, "67%", "89%"), (10, "36%", "80%"), (20, "OOM", "63%"), (40, "OOM", "OOCL")],
+        ),
+    ];
+    let mut t = TableReport::new(
+        "table8_kvcache",
+        "Table 8 — max KV-cache size (% of free memory) on the prefill node, 4K images",
+        &["model", "#images/req", "DistServe", "EPD", "paper DistServe", "paper EPD"],
+    );
+    let res = Resolution::four_k();
+    for (id, rows) in expect {
+        let m = mm(*id);
+        for (n, p_d, p_e) in *rows {
+            let (d, wd) = m.max_kv_frac_pct(NodeKind::Colocated, *n, res, 22);
+            let (e, we) = m.max_kv_frac_pct(NodeKind::LlmOnly, *n, res, 22);
+            let s = |v: u32, w: CapacityLimit| match w {
+                CapacityLimit::Ok => format!("{v}%"),
+                CapacityLimit::Oom => "OOM".to_string(),
+                CapacityLimit::OutOfContext => "OOCL".to_string(),
+            };
+            t.row(vec![
+                m.spec.name.to_string(),
+                n.to_string(),
+                s(d, wd),
+                s(e, we),
+                p_d.to_string(),
+                p_e.to_string(),
+            ]);
+        }
+    }
+    t.note("headline: 2.2x larger KV for InternVL2-26B @10 images (80% vs 36%)");
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_capacity_tables_build() {
+        for t in fig2_capacity()
+            .into_iter()
+            .chain(table2_images_per_req())
+            .chain(table3_batch_sizes())
+            .chain(table8_kvcache())
+        {
+            assert!(!t.rows.is_empty(), "{} empty", t.id);
+            let rendered = t.render();
+            assert!(rendered.contains(&t.id));
+        }
+    }
+
+    /// The Table 2 headline ratio (10x more images at 4K for IVL-26B).
+    #[test]
+    fn table2_headline_ratios_hold() {
+        let m = mm(ModelId::InternVl2_26b);
+        let res = Resolution::four_k();
+        let (d, _) = m.max_images_per_request(NodeKind::Colocated, res, 0.8, 22);
+        let (e, _) = m.max_images_per_request(NodeKind::LlmOnly, res, 0.8, 22);
+        // Paper: 10 vs 1 (10x). Our colocated model admits 3, so the
+        // measured ratio is >=3x; see EXPERIMENTS.md for the deviation note.
+        assert!(e >= 3 * d.max(1), "EPD {e} vs DistServe {d}");
+        assert_eq!(e, 10, "EPD side matches the paper exactly");
+    }
+
+    /// Table 8 headline: ~2.2x KV for IVL-26B at 10 images.
+    #[test]
+    fn table8_headline_ratio_holds() {
+        let m = mm(ModelId::InternVl2_26b);
+        let res = Resolution::four_k();
+        let (d, _) = m.max_kv_frac_pct(NodeKind::Colocated, 10, res, 22);
+        let (e, _) = m.max_kv_frac_pct(NodeKind::LlmOnly, 10, res, 22);
+        let r = e as f64 / d.max(1) as f64;
+        assert!(r > 1.7 && r < 3.0, "ratio {r}");
+    }
+}

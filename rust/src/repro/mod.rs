@@ -1,0 +1,58 @@
+//! Paper-artifact regeneration: one function per table/figure in the
+//! evaluation section, each returning [`TableReport`]s with our measured
+//! values next to the paper's published numbers. Driven both by
+//! `epdserve repro <id>` and by the `benches/` targets (`cargo bench`).
+//!
+//! Absolute latencies come from the calibrated simulator (DESIGN.md
+//! §Substitutions); capacity numbers come from the analytical memory
+//! model. The *shape* — who wins, by what factor, where crossovers sit —
+//! is the reproduction target.
+
+pub mod common;
+pub mod memory_tables;
+pub mod slo_figures;
+pub mod latency;
+pub mod ablations;
+pub mod offline;
+pub mod npu;
+pub mod audio;
+
+use crate::util::bench::TableReport;
+
+/// All experiment ids in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "fig2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+    "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8",
+];
+
+/// Run one experiment (or `all`).
+pub fn run(id: &str) -> anyhow::Result<Vec<TableReport>> {
+    let out = match id {
+        "fig2" => memory_tables::fig2_capacity(),
+        "fig5" => slo_figures::fig5_slo_synthetic(),
+        "fig6" => latency::fig6_ttft_dist(),
+        "fig7" => slo_figures::fig7_nextqa(),
+        "fig8" => slo_figures::fig8_videomme(),
+        "fig9" => npu::fig9_npu_slo(),
+        "fig10" => offline::fig10_offline_throughput(),
+        "fig11" => slo_figures::fig11_slo_6_8_images(),
+        "fig12" => npu::fig12_npu_breakdown(),
+        "table1" => latency::table1_ttft_frames(),
+        "table2" => memory_tables::table2_images_per_req(),
+        "table3" => memory_tables::table3_batch_sizes(),
+        "table4" => ablations::table4_irp(),
+        "table5" => ablations::table5_optimizer(),
+        "table6" => ablations::table6_role_switch(),
+        "table7" => audio::table7_audio(),
+        "table8" => memory_tables::table8_kvcache(),
+        "all" => {
+            let mut all = Vec::new();
+            for id in ALL_IDS {
+                all.extend(run(id)?);
+            }
+            return Ok(all);
+        }
+        other => anyhow::bail!("unknown experiment id '{other}' (try 'all')"),
+    };
+    Ok(out)
+}

@@ -1,0 +1,112 @@
+//! Figure 10 (Appendix A.3): offline throughput — encoder-count sweep,
+//! images-per-request sweep, and batch-size sensitivity.
+
+use crate::core::config::EpdConfig;
+use crate::core::topology::Topology;
+use crate::model::spec::{DeviceSpec, ModelId};
+use crate::sim::engine::{SimConfig, Simulator};
+use crate::util::bench::TableReport;
+use crate::util::rng::Rng;
+use crate::workload::synthetic::SyntheticWorkload;
+use crate::workload::Workload;
+
+use super::common::{spec, SEED};
+
+/// Offline run: all requests submitted at t = 0 (rate = ∞).
+fn offline_throughput(epd: &EpdConfig, images: u32, n: usize) -> f64 {
+    let sp = spec(ModelId::MiniCpmV26);
+    let cfg = SimConfig::new(sp.clone(), DeviceSpec::a100(), epd.clone());
+    let mut w = SyntheticWorkload::new(images, 10);
+    w.prompt_tokens = 7; // "What is the content of this image?"
+    w.resolution = crate::model::vision::Resolution::new(313, 234); // single modest image
+    let mut rng = Rng::new(SEED);
+    let reqs = w.generate(&sp, n, f64::INFINITY, &mut rng);
+    Simulator::run(&cfg, &reqs).throughput()
+}
+
+pub fn fig10_offline_throughput() -> Vec<TableReport> {
+    let n = 1000;
+
+    // Left: xE yP sweep with x + y = 7, 1 decode instance, vs DistServe 7P.
+    let mut left = TableReport::new(
+        "fig10_left_encoder_sweep",
+        "Fig 10 (left) — offline throughput vs encoder/prefill split (1000 req, 1 image)",
+        &["config", "throughput (req/s)"],
+    );
+    for e in 1..=6u32 {
+        let p = 7 - e;
+        let epd = EpdConfig::epd(Topology::new(e, p, 1), 8, 8, 128);
+        left.row(vec![
+            format!("{e}E{p}P1D"),
+            format!("{:.2}", offline_throughput(&epd, 1, n)),
+        ]);
+    }
+    let ds = EpdConfig::distserve(7, 1, 1, 128);
+    left.row(vec![
+        "DistServe 7P1D".into(),
+        format!("{:.2}", offline_throughput(&ds, 1, n)),
+    ]);
+    left.note("paper: the optimizer's 5E2P pick maximizes E2E throughput");
+
+    // Middle: images-per-request sweep, EPD 5E2P1D vs DistServe 7P1D.
+    let mut mid = TableReport::new(
+        "fig10_mid_images_sweep",
+        "Fig 10 (middle) — offline throughput vs images/request",
+        &["#images", "EPD 5E2P1D", "DistServe 7P1D"],
+    );
+    let epd = EpdConfig::epd(Topology::new(5, 2, 1), 8, 8, 128);
+    for images in [1u32, 2, 4, 8] {
+        mid.row(vec![
+            images.to_string(),
+            format!("{:.2}", offline_throughput(&epd, images, 400)),
+            format!("{:.2}", offline_throughput(&ds, images, 400)),
+        ]);
+    }
+    mid.note("paper: EPD's edge is largest at small image counts");
+
+    // Right: encode/prefill batch-size sensitivity (batches set equal).
+    let mut right = TableReport::new(
+        "fig10_right_batch_sweep",
+        "Fig 10 (right) — offline throughput vs encode=prefill batch size",
+        &["batch", "EPD 5E2P1D throughput"],
+    );
+    for b in [1u32, 2, 4, 8, 16] {
+        let cfg = EpdConfig::epd(Topology::new(5, 2, 1), b, b, 128);
+        right.row(vec![
+            b.to_string(),
+            format!("{:.2}", offline_throughput(&cfg, 1, 400)),
+        ]);
+    }
+    right.note("paper: EPD is relatively insensitive to E/P batch sizes");
+
+    vec![left, mid, right]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The balanced 5E2P split must beat the most lopsided ones, and EPD
+    /// must beat DistServe at 1 image (the paper's left/middle panels).
+    #[test]
+    fn fig10_shape() {
+        let t_5e2p = offline_throughput(&EpdConfig::epd(Topology::new(5, 2, 1), 8, 8, 128), 1, 300);
+        let t_1e6p = offline_throughput(&EpdConfig::epd(Topology::new(1, 6, 1), 8, 8, 128), 1, 300);
+        let t_ds = offline_throughput(&EpdConfig::distserve(7, 1, 1, 128), 1, 300);
+        assert!(t_5e2p > t_1e6p, "5E2P {t_5e2p} vs 1E6P {t_1e6p}");
+        assert!(t_5e2p > t_ds, "5E2P {t_5e2p} vs DistServe {t_ds}");
+    }
+
+    /// Batch-size insensitivity (right panel): ≤ 30% spread across 1..16.
+    #[test]
+    fn fig10_batch_insensitive() {
+        let mut vals = Vec::new();
+        for b in [1u32, 4, 16] {
+            let cfg = EpdConfig::epd(Topology::new(5, 2, 1), b, b, 128);
+            vals.push(offline_throughput(&cfg, 1, 200));
+        }
+        let min = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = vals.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max / min < 1.6, "spread too large: {vals:?}");
+    }
+}

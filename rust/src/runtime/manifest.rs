@@ -1,0 +1,231 @@
+//! `artifacts/manifest.json` parsing — the contract between `aot.py` and
+//! the rust runtime: weight table (name, shape, byte offset into
+//! weights.bin, in HLO parameter order), per-bucket artifact index and the
+//! tiny-LMM dimensions.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+
+/// One weight tensor in `weights.bin`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size_bytes: usize,
+}
+
+/// One compiled-shape bucket.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bucket {
+    /// Bucket key: tiles (encode), images (prefill) or batch (decode).
+    pub key: u32,
+    pub file: String,
+    /// Prefill only: padded token length of the bucket.
+    pub tokens: u32,
+    /// Prefill only: MM token count.
+    pub mm_tokens: u32,
+    /// Decode only: companion executable that slices the logits prefix
+    /// from the fused state (CPU PJRT lacks partial raw host reads).
+    pub logits_file: Option<String>,
+}
+
+/// Tiny-LMM dimensions (mirrors python/compile/configs.py).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TinyConfig {
+    pub vis_num_patches: u32,
+    pub vis_patch_dim: u32,
+    pub vis_out_tokens: u32,
+    pub llm_hidden: u32,
+    pub llm_layers: u32,
+    pub llm_heads: u32,
+    pub llm_head_dim: u32,
+    pub llm_vocab: u32,
+    pub llm_max_seq: u32,
+    pub prefill_text: u32,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub weights: Vec<WeightEntry>,
+    pub encode: Vec<Bucket>,
+    pub prefill: Vec<Bucket>,
+    pub decode: Vec<Bucket>,
+    pub config: TinyConfig,
+}
+
+fn req_u64(j: &Json, key: &str) -> anyhow::Result<u64> {
+    j.get(key)
+        .and_then(|v| v.as_u64())
+        .with_context(|| format!("manifest missing numeric '{key}'"))
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        if req_u64(&j, "format_version")? != 1 {
+            bail!("unsupported manifest format_version");
+        }
+
+        let mut weights = Vec::new();
+        for w in j.get("weights").and_then(|v| v.as_arr()).context("weights[]")? {
+            weights.push(WeightEntry {
+                name: w.get("name").and_then(|v| v.as_str()).context("weight name")?.to_string(),
+                shape: w
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .context("weight shape")?
+                    .iter()
+                    .map(|x| x.as_u64().unwrap_or(0) as usize)
+                    .collect(),
+                offset: req_u64(w, "offset")? as usize,
+                size_bytes: req_u64(w, "size_bytes")? as usize,
+            });
+        }
+        // The weight table must be sorted by name (HLO parameter order).
+        for pair in weights.windows(2) {
+            if pair[0].name >= pair[1].name {
+                bail!("weight table not sorted: {} >= {}", pair[0].name, pair[1].name);
+            }
+        }
+
+        let arts = j.get("artifacts").context("artifacts{}")?;
+        let parse_group = |group: &str, key_field: &str| -> anyhow::Result<Vec<Bucket>> {
+            let mut out = Vec::new();
+            for a in arts.get(group).and_then(|v| v.as_arr()).context("artifact group")? {
+                out.push(Bucket {
+                    key: req_u64(a, key_field)? as u32,
+                    file: a.get("file").and_then(|v| v.as_str()).context("file")?.to_string(),
+                    tokens: a.get("tokens").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+                    mm_tokens: a.get("mm_tokens").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+                    logits_file: a
+                        .get("logits_file")
+                        .and_then(|v| v.as_str())
+                        .map(|s| s.to_string()),
+                });
+            }
+            out.sort_by_key(|b| b.key);
+            Ok(out)
+        };
+
+        let cfg = j.get("config").context("config{}")?;
+        let vis = cfg.get("vision").context("config.vision")?;
+        let llm = cfg.get("llm").context("config.llm")?;
+        let buckets = cfg.get("buckets").context("config.buckets")?;
+        let config = TinyConfig {
+            vis_num_patches: req_u64(vis, "num_patches")? as u32,
+            vis_patch_dim: req_u64(vis, "patch_dim")? as u32,
+            vis_out_tokens: req_u64(vis, "out_tokens")? as u32,
+            llm_hidden: req_u64(llm, "hidden")? as u32,
+            llm_layers: req_u64(llm, "layers")? as u32,
+            llm_heads: req_u64(llm, "heads")? as u32,
+            llm_head_dim: req_u64(llm, "head_dim")? as u32,
+            llm_vocab: req_u64(llm, "vocab")? as u32,
+            llm_max_seq: req_u64(llm, "max_seq")? as u32,
+            prefill_text: req_u64(buckets, "prefill_text")? as u32,
+        };
+
+        Ok(Manifest {
+            dir,
+            weights,
+            encode: parse_group("encode", "tiles")?,
+            prefill: parse_group("prefill", "images")?,
+            decode: parse_group("decode", "batch")?,
+            config,
+        })
+    }
+
+    /// Read weights.bin as f32 tensors in table order.
+    pub fn load_weights(&self) -> anyhow::Result<Vec<(WeightEntry, Vec<f32>)>> {
+        let path = self.dir.join("weights.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut out = Vec::with_capacity(self.weights.len());
+        for w in &self.weights {
+            let end = w.offset + w.size_bytes;
+            if end > bytes.len() {
+                bail!("weights.bin truncated at {}", w.name);
+            }
+            let data: Vec<f32> = bytes[w.offset..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let expect: usize = w.shape.iter().product::<usize>().max(1);
+            if data.len() != expect {
+                bail!("weight {}: {} elements, expected {}", w.name, data.len(), expect);
+            }
+            out.push((w.clone(), data));
+        }
+        Ok(out)
+    }
+
+    /// Smallest bucket with key ≥ `need` (shape-bucket selection).
+    pub fn pick_bucket(buckets: &[Bucket], need: u32) -> Option<&Bucket> {
+        buckets.iter().find(|b| b.key >= need)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        assert_eq!(m.weights.len(), 69);
+        assert_eq!(m.config.llm_vocab, 512);
+        assert_eq!(m.config.vis_out_tokens, 16);
+        assert!(!m.encode.is_empty() && !m.prefill.is_empty() && !m.decode.is_empty());
+        // Weight offsets are contiguous.
+        let mut off = 0;
+        for w in &m.weights {
+            assert_eq!(w.offset, off);
+            off += w.size_bytes;
+        }
+    }
+
+    #[test]
+    fn loads_weights_bin() {
+        if !artifacts_available() {
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        let ws = m.load_weights().unwrap();
+        assert_eq!(ws.len(), 69);
+        // Every tensor has finite values.
+        for (e, data) in &ws {
+            assert!(data.iter().all(|x| x.is_finite()), "{} has non-finite", e.name);
+        }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let buckets = vec![
+            Bucket { key: 1, file: "a".into(), tokens: 0, mm_tokens: 0, logits_file: None },
+            Bucket { key: 4, file: "b".into(), tokens: 0, mm_tokens: 0, logits_file: None },
+            Bucket { key: 8, file: "c".into(), tokens: 0, mm_tokens: 0, logits_file: None },
+        ];
+        assert_eq!(Manifest::pick_bucket(&buckets, 1).unwrap().key, 1);
+        assert_eq!(Manifest::pick_bucket(&buckets, 2).unwrap().key, 4);
+        assert_eq!(Manifest::pick_bucket(&buckets, 8).unwrap().key, 8);
+        assert!(Manifest::pick_bucket(&buckets, 9).is_none());
+    }
+}

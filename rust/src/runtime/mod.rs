@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from the serving hot path. Python never runs here.
+//!
+//! - [`manifest`] parses `artifacts/manifest.json` (weight table, bucket
+//!   index, model config).
+//! - [`tiny_lmm`] owns the PJRT client, the device-resident weight buffers
+//!   and one compiled executable per shape bucket, and exposes typed
+//!   `encode` / `prefill` / `decode_step` calls.
+
+pub mod manifest;
+pub mod tiny_lmm;
+
+pub use manifest::{Manifest};
+pub use tiny_lmm::{DecodeState, PrefillOutput, TinyLmmRuntime};

@@ -1,0 +1,463 @@
+//! Tiny-LMM execution over PJRT (CPU plugin).
+//!
+//! Each engine instance owns one `TinyLmmRuntime` (its "device"): a PJRT
+//! client, device-resident weight buffers and lazily-compiled executables
+//! per shape bucket. The `xla` crate's client is `Rc`-based (not `Send`),
+//! so runtimes are created *inside* the instance thread — never shared.
+//!
+//! Hot-path design:
+//! - weights are uploaded once per (client, role) and passed by reference
+//!   to every `execute_b` call;
+//! - the decode state `[logits | kv]` is a single device buffer fed back
+//!   each step; only the `B × vocab` logits prefix is copied to the host
+//!   per step via a tiny companion "slicer" executable (the CPU plugin
+//!   lacks partial raw host reads), so the KV cache never round-trips.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{Bucket, Manifest, TinyConfig};
+
+/// Output of a prefill call.
+#[derive(Debug, Clone)]
+pub struct PrefillOutput {
+    /// Last-position logits, `[vocab]`.
+    pub logits: Vec<f32>,
+    /// Flattened per-sequence KV cache, `[L, 2, H, max_seq, D]`.
+    pub kv: Vec<f32>,
+    /// Sequence length represented in the KV cache.
+    pub len: i32,
+}
+
+/// A running decode batch whose fused state lives on the device.
+pub struct DecodeState {
+    /// Bucket batch size (slots).
+    pub batch: u32,
+    /// Per-slot current sequence length.
+    pub lens: Vec<i32>,
+    state_buf: PjRtBuffer,
+    state_len: usize,
+}
+
+impl DecodeState {
+    pub fn state_len(&self) -> usize {
+        self.state_len
+    }
+}
+
+/// Per-instance runtime.
+pub struct TinyLmmRuntime {
+    client: PjRtClient,
+    manifest: Manifest,
+    /// Host copies of the weights (kept for re-upload after role switch
+    /// compaction; ~16 MB).
+    host_weights: Vec<(Vec<usize>, Vec<f32>)>,
+    weight_bufs: Vec<PjRtBuffer>,
+    encode_exes: BTreeMap<u32, PjRtLoadedExecutable>,
+    prefill_exes: BTreeMap<u32, PjRtLoadedExecutable>,
+    decode_exes: BTreeMap<u32, PjRtLoadedExecutable>,
+    /// Logits-prefix slicers, one per decode bucket (see decode_step).
+    decode_logits_exes: BTreeMap<u32, PjRtLoadedExecutable>,
+}
+
+impl TinyLmmRuntime {
+    /// Load manifest + weights and create the PJRT client. Executables are
+    /// compiled lazily per bucket (mimics per-role model loading).
+    pub fn load(artifacts_dir: &str) -> Result<TinyLmmRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let host_weights: Vec<(Vec<usize>, Vec<f32>)> = manifest
+            .load_weights()?
+            .into_iter()
+            .map(|(e, data)| (e.shape, data))
+            .collect();
+        let mut rt = TinyLmmRuntime {
+            client,
+            manifest,
+            host_weights,
+            weight_bufs: Vec::new(),
+            encode_exes: BTreeMap::new(),
+            prefill_exes: BTreeMap::new(),
+            decode_exes: BTreeMap::new(),
+            decode_logits_exes: BTreeMap::new(),
+        };
+        rt.upload_weights()?;
+        Ok(rt)
+    }
+
+    pub fn config(&self) -> &TinyConfig {
+        &self.manifest.config
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn upload_weights(&mut self) -> Result<()> {
+        self.weight_bufs.clear();
+        for (shape, data) in &self.host_weights {
+            let dims: Vec<usize> = if shape.is_empty() { vec![] } else { shape.clone() };
+            let buf = self
+                .client
+                .buffer_from_host_buffer(data, &dims, None)
+                .context("uploading weight")?;
+            self.weight_bufs.push(buf);
+        }
+        Ok(())
+    }
+
+    fn compile(&self, file: &str) -> Result<PjRtLoadedExecutable> {
+        let path = self.manifest.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Ensure the executables a role needs exist (encode / prefill /
+    /// decode). Called on startup and after role switches.
+    pub fn warm_encode(&mut self) -> Result<()> {
+        let buckets: Vec<Bucket> = self.manifest.encode.clone();
+        for b in buckets {
+            if !self.encode_exes.contains_key(&b.key) {
+                let exe = self.compile(&b.file)?;
+                self.encode_exes.insert(b.key, exe);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn warm_prefill(&mut self) -> Result<()> {
+        let buckets: Vec<Bucket> = self.manifest.prefill.clone();
+        for b in buckets {
+            if !self.prefill_exes.contains_key(&b.key) {
+                let exe = self.compile(&b.file)?;
+                self.prefill_exes.insert(b.key, exe);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn warm_decode(&mut self) -> Result<()> {
+        let buckets: Vec<Bucket> = self.manifest.decode.clone();
+        for b in buckets {
+            self.ensure_decode(&b)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_decode(&mut self, b: &Bucket) -> Result<()> {
+        if !self.decode_exes.contains_key(&b.key) {
+            let exe = self.compile(&b.file)?;
+            self.decode_exes.insert(b.key, exe);
+            let lf = b
+                .logits_file
+                .as_ref()
+                .context("decode bucket missing logits_file")?;
+            let lexe = self.compile(lf)?;
+            self.decode_logits_exes.insert(b.key, lexe);
+        }
+        Ok(())
+    }
+
+    /// Per-sequence flattened KV length: L × 2 × H × S × D.
+    pub fn kv_len(&self) -> usize {
+        let c = &self.manifest.config;
+        (c.llm_layers * 2 * c.llm_heads * c.llm_max_seq * c.llm_head_dim) as usize
+    }
+
+    /// Encode `tiles` image tiles. `patches` is `[tiles, num_patches,
+    /// patch_dim]` flattened. Returns MM tokens `[tiles, out_tokens,
+    /// hidden]` flattened.
+    pub fn encode(&mut self, patches: &[f32], tiles: u32) -> Result<Vec<f32>> {
+        let c = self.manifest.config;
+        let per_tile = (c.vis_num_patches * c.vis_patch_dim) as usize;
+        if patches.len() != per_tile * tiles as usize {
+            bail!("encode: got {} floats for {tiles} tiles", patches.len());
+        }
+        let bucket = Manifest::pick_bucket(&self.manifest.encode, tiles)
+            .with_context(|| format!("no encode bucket ≥ {tiles} tiles"))?
+            .clone();
+        if !self.encode_exes.contains_key(&bucket.key) {
+            let exe = self.compile(&bucket.file)?;
+            self.encode_exes.insert(bucket.key, exe);
+        }
+
+        // Pad to the bucket.
+        let mut padded = patches.to_vec();
+        padded.resize(per_tile * bucket.key as usize, 0.0);
+        let input = self.client.buffer_from_host_buffer(
+            &padded,
+            &[
+                bucket.key as usize,
+                c.vis_num_patches as usize,
+                c.vis_patch_dim as usize,
+            ],
+            None,
+        )?;
+
+        let mut args: Vec<&PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&input);
+        let exe = &self.encode_exes[&bucket.key];
+        let result = exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?.to_tuple1()?;
+        let full: Vec<f32> = lit.to_vec()?;
+        let per_tile_out = (c.vis_out_tokens * c.llm_hidden) as usize;
+        Ok(full[..per_tile_out * tiles as usize].to_vec())
+    }
+
+    /// Prefill a sequence. `images` picks the bucket; `tokens` must already
+    /// be padded to the bucket's token length (see
+    /// [`Self::prefill_bucket_tokens`]); `mm` is padded/truncated here.
+    pub fn prefill(
+        &mut self,
+        images: u32,
+        tokens: &[i32],
+        mm: &[f32],
+        len: i32,
+    ) -> Result<PrefillOutput> {
+        let c = self.manifest.config;
+        let bucket = Manifest::pick_bucket(&self.manifest.prefill, images.max(1))
+            .with_context(|| format!("no prefill bucket ≥ {images} images"))?
+            .clone();
+        if tokens.len() != bucket.tokens as usize {
+            bail!(
+                "prefill: {} tokens given, bucket i{} wants {}",
+                tokens.len(),
+                bucket.key,
+                bucket.tokens
+            );
+        }
+        if !self.prefill_exes.contains_key(&bucket.key) {
+            let exe = self.compile(&bucket.file)?;
+            self.prefill_exes.insert(bucket.key, exe);
+        }
+
+        let mm_len = (bucket.mm_tokens * c.llm_hidden) as usize;
+        let mut mm_padded = mm.to_vec();
+        mm_padded.resize(mm_len, 0.0);
+
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(tokens, &[tokens.len()], None)?;
+        let mm_buf = self.client.buffer_from_host_buffer(
+            &mm_padded,
+            &[bucket.mm_tokens as usize, c.llm_hidden as usize],
+            None,
+        )?;
+        let len_buf = self.client.buffer_from_host_buffer(&[len], &[], None)?;
+
+        let mut args: Vec<&PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&mm_buf);
+        args.push(&len_buf);
+        let exe = &self.prefill_exes[&bucket.key];
+        let result = exe.execute_b(&args)?;
+        let (logits_lit, kv_lit) = result[0][0].to_literal_sync()?.to_tuple2()?;
+        Ok(PrefillOutput {
+            logits: logits_lit.to_vec()?,
+            kv: kv_lit.to_vec()?,
+            len,
+        })
+    }
+
+    /// Padded token length of the prefill bucket covering `images`.
+    pub fn prefill_bucket_tokens(&self, images: u32) -> Result<(u32, u32)> {
+        let b = Manifest::pick_bucket(&self.manifest.prefill, images.max(1))
+            .with_context(|| format!("no prefill bucket ≥ {images} images"))?;
+        Ok((b.tokens, b.mm_tokens))
+    }
+
+    /// Assemble a decode batch from per-sequence prefill KVs and upload the
+    /// fused state to the device.
+    pub fn decode_start(&mut self, kvs: &[&[f32]], lens: &[i32]) -> Result<DecodeState> {
+        let c = self.manifest.config;
+        assert_eq!(kvs.len(), lens.len());
+        let n = kvs.len() as u32;
+        let bucket = Manifest::pick_bucket(&self.manifest.decode, n.max(1))
+            .with_context(|| format!("no decode bucket ≥ batch {n}"))?
+            .clone();
+        self.ensure_decode(&bucket)?;
+        let b = bucket.key as usize;
+        let v = c.llm_vocab as usize;
+        let slab = (c.llm_heads * c.llm_max_seq * c.llm_head_dim) as usize; // per (l, c, seq)
+        let lc = (c.llm_layers * 2) as usize;
+        let kv_seq = self.kv_len();
+        let state_len = b * v + lc * b * slab;
+
+        let mut state = vec![0.0f32; state_len];
+        // Interleave per-seq [L, 2, H, S, D] into [L, 2, B, H, S, D].
+        for (bi, kv) in kvs.iter().enumerate() {
+            if kv.len() != kv_seq {
+                bail!("decode_start: kv[{bi}] has {} floats, want {kv_seq}", kv.len());
+            }
+            for lci in 0..lc {
+                let src = &kv[lci * slab..(lci + 1) * slab];
+                let dst_off = b * v + (lci * b + bi) * slab;
+                state[dst_off..dst_off + slab].copy_from_slice(src);
+            }
+        }
+        let mut lens_padded = lens.to_vec();
+        lens_padded.resize(b, 1); // idle slots decode garbage at pos 1, ignored
+        let state_buf = self
+            .client
+            .buffer_from_host_buffer(&state, &[state_len], None)?;
+        Ok(DecodeState {
+            batch: bucket.key,
+            lens: lens_padded,
+            state_buf,
+            state_len,
+        })
+    }
+
+    /// One decode step: feeds `tokens` (one per slot) and returns the new
+    /// logits `[batch, vocab]`. The KV stays on the device.
+    pub fn decode_step(&mut self, state: &mut DecodeState, tokens: &[i32]) -> Result<Vec<f32>> {
+        let c = self.manifest.config;
+        let b = state.batch as usize;
+        if tokens.len() != b {
+            bail!("decode_step: {} tokens for batch {b}", tokens.len());
+        }
+        let tok_buf = self.client.buffer_from_host_buffer(tokens, &[b], None)?;
+        let len_buf = self
+            .client
+            .buffer_from_host_buffer(&state.lens, &[b], None)?;
+        let exe = &self.decode_exes[&state.batch];
+        let mut args: Vec<&PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&state.state_buf);
+        args.push(&len_buf);
+        let mut result = exe.execute_b(&args)?;
+        let new_state = result[0].remove(0);
+
+        // Only the logits prefix comes back to the host, via the companion
+        // slicer executable — the fused state stays on the device (the CPU
+        // PJRT plugin does not implement partial raw host copies).
+        let lexe = &self.decode_logits_exes[&state.batch];
+        let lit = lexe.execute_b(&[&new_state])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        let logits: Vec<f32> = lit.to_vec()?;
+        debug_assert_eq!(logits.len(), b * c.llm_vocab as usize);
+
+        state.state_buf = new_state;
+        for l in &mut state.lens {
+            *l += 1;
+        }
+        Ok(logits)
+    }
+
+    /// Pull the full state back to the host and split out each slot's KV
+    /// (`[L, 2, H, S, D]` flattened) — used when a batch re-forms.
+    pub fn decode_extract(&mut self, state: &DecodeState) -> Result<Vec<Vec<f32>>> {
+        let c = self.manifest.config;
+        let b = state.batch as usize;
+        let v = c.llm_vocab as usize;
+        let slab = (c.llm_heads * c.llm_max_seq * c.llm_head_dim) as usize;
+        let lc = (c.llm_layers * 2) as usize;
+        let full: Vec<f32> = state.state_buf.to_literal_sync()?.to_vec()?;
+        debug_assert_eq!(full.len(), state.state_len);
+        let mut out = Vec::with_capacity(b);
+        for bi in 0..b {
+            let mut kv = vec![0.0f32; lc * slab];
+            for lci in 0..lc {
+                let src_off = b * v + (lci * b + bi) * slab;
+                kv[lci * slab..(lci + 1) * slab]
+                    .copy_from_slice(&full[src_off..src_off + slab]);
+            }
+            out.push(kv);
+        }
+        Ok(out)
+    }
+}
+
+/// Greedy sampling: argmax over one slot's logits.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for i in 1..logits.len() {
+        if logits[i] > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    /// End-to-end through PJRT: encode → prefill → decode 4 tokens, and
+    /// check decode-vs-prefill consistency exactly like the python test.
+    #[test]
+    fn full_pipeline_through_pjrt() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = TinyLmmRuntime::load("artifacts").unwrap();
+        let c = *rt.config();
+
+        // Synthetic image tile.
+        let per_tile = (c.vis_num_patches * c.vis_patch_dim) as usize;
+        let patches: Vec<f32> = (0..per_tile).map(|i| (i % 255) as f32 / 255.0).collect();
+        let mm = rt.encode(&patches, 1).unwrap();
+        assert_eq!(mm.len(), (c.vis_out_tokens * c.llm_hidden) as usize);
+        assert!(mm.iter().all(|x| x.is_finite()));
+
+        // Prefill: [BOS, 16 placeholders, 'h', 'i'] padded to the bucket.
+        let (bucket_tokens, mm_tokens) = rt.prefill_bucket_tokens(1).unwrap();
+        let mut tokens = vec![256i32]; // BOS
+        tokens.extend(std::iter::repeat(258).take(mm_tokens as usize));
+        tokens.extend([104, 105]); // "hi"
+        let len = tokens.len() as i32;
+        tokens.resize(bucket_tokens as usize, 259); // PAD
+        let pf = rt.prefill(1, &tokens, &mm, len).unwrap();
+        assert_eq!(pf.logits.len(), c.llm_vocab as usize);
+        assert!(pf.logits.iter().all(|x| x.is_finite()));
+
+        // Decode 4 greedy tokens with device-resident state.
+        let first = argmax(&pf.logits);
+        let mut state = rt.decode_start(&[&pf.kv], &[len]).unwrap();
+        let mut cur = first;
+        let mut generated = vec![first];
+        for _ in 0..3 {
+            let logits = rt.decode_step(&mut state, &[cur]).unwrap();
+            cur = argmax(&logits[..c.llm_vocab as usize]);
+            generated.push(cur);
+        }
+        assert_eq!(generated.len(), 4);
+        assert!(generated.iter().all(|&t| t >= 0 && t < c.llm_vocab as i32));
+        assert_eq!(state.lens[0], len + 3);
+    }
+
+    #[test]
+    fn decode_extract_roundtrip() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut rt = TinyLmmRuntime::load("artifacts").unwrap();
+        let kv_len = rt.kv_len();
+        let kv_a: Vec<f32> = (0..kv_len).map(|i| (i % 97) as f32).collect();
+        let kv_b: Vec<f32> = (0..kv_len).map(|i| (i % 89) as f32 * 0.5).collect();
+        let state = rt.decode_start(&[&kv_a, &kv_b], &[10, 20]).unwrap();
+        let out = rt.decode_extract(&state).unwrap();
+        assert_eq!(out[0], kv_a);
+        assert_eq!(out[1], kv_b);
+    }
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

@@ -1,0 +1,93 @@
+//! Instance assignment at stage entry (Appendix D): round-robin or
+//! least-loaded-first over the instances currently serving a stage.
+
+use crate::core::config::AssignPolicy;
+
+/// Stateful assigner over a dynamic set of instances (identified by dense
+/// indices supplied per call — the set changes under role switching).
+#[derive(Debug, Clone)]
+pub struct Assigner {
+    policy: AssignPolicy,
+    rr_cursor: usize,
+}
+
+impl Assigner {
+    pub fn new(policy: AssignPolicy) -> Assigner {
+        Assigner { policy, rr_cursor: 0 }
+    }
+
+    pub fn policy(&self) -> AssignPolicy {
+        self.policy
+    }
+
+    /// Choose one of `candidates` (instance ids) given their current load
+    /// (`loads[i]` corresponds to `candidates[i]`; lower is better).
+    /// Returns `None` when no candidate exists.
+    pub fn pick(&mut self, candidates: &[usize], loads: &[f64]) -> Option<usize> {
+        if candidates.is_empty() {
+            return None;
+        }
+        debug_assert_eq!(candidates.len(), loads.len());
+        match self.policy {
+            AssignPolicy::RoundRobin => {
+                let i = self.rr_cursor % candidates.len();
+                self.rr_cursor = self.rr_cursor.wrapping_add(1);
+                Some(candidates[i])
+            }
+            AssignPolicy::LeastLoaded => {
+                let mut best = 0usize;
+                for i in 1..candidates.len() {
+                    if loads[i] < loads[best] {
+                        best = i;
+                    }
+                }
+                Some(candidates[best])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut a = Assigner::new(AssignPolicy::RoundRobin);
+        let c = [10, 20, 30];
+        let l = [0.0; 3];
+        let picks: Vec<usize> = (0..6).map(|_| a.pick(&c, &l).unwrap()).collect();
+        assert_eq!(picks, vec![10, 20, 30, 10, 20, 30]);
+    }
+
+    #[test]
+    fn least_loaded_picks_minimum() {
+        let mut a = Assigner::new(AssignPolicy::LeastLoaded);
+        let c = [10, 20, 30];
+        assert_eq!(a.pick(&c, &[3.0, 1.0, 2.0]), Some(20));
+        assert_eq!(a.pick(&c, &[0.5, 1.0, 2.0]), Some(10));
+    }
+
+    #[test]
+    fn least_loaded_ties_prefer_first() {
+        let mut a = Assigner::new(AssignPolicy::LeastLoaded);
+        assert_eq!(a.pick(&[7, 8], &[1.0, 1.0]), Some(7));
+    }
+
+    #[test]
+    fn empty_candidates() {
+        let mut a = Assigner::new(AssignPolicy::RoundRobin);
+        assert_eq!(a.pick(&[], &[]), None);
+    }
+
+    #[test]
+    fn round_robin_survives_shrinking_set() {
+        let mut a = Assigner::new(AssignPolicy::RoundRobin);
+        let l3 = [0.0; 3];
+        let l1 = [0.0; 1];
+        a.pick(&[1, 2, 3], &l3);
+        a.pick(&[1, 2, 3], &l3);
+        // Set shrinks (role switch took an instance away) — must not panic.
+        assert!(a.pick(&[9], &l1).is_some());
+    }
+}

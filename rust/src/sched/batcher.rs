@@ -1,0 +1,134 @@
+//! Batch formation: pull up to `max_batch` compatible items from a stage
+//! queue, subject to an admission predicate (cache capacity, context
+//! budget). Continuous batching for decode; batch-of-requests for encode
+//! and prefill.
+
+use super::queue::{QueuedRequest, StageQueue};
+
+/// A formed batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub items: Vec<QueuedRequest>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+/// Batch former for one instance.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    pub max_batch: u32,
+    /// Token budget per batch (§E.1: context tokens capped at 49,152).
+    pub max_batch_tokens: u64,
+}
+
+impl Batcher {
+    pub fn new(max_batch: u32, max_batch_tokens: u64) -> Batcher {
+        Batcher { max_batch, max_batch_tokens }
+    }
+
+    /// Form a batch by repeatedly popping the queue while (a) the batch has
+    /// room, (b) the per-item `admit` predicate accepts (given tokens the
+    /// item adds), and (c) the token budget holds. `tokens_of` maps an item
+    /// to its token contribution. The first rejected item is pushed back.
+    pub fn form<FA, FT>(&self, queue: &mut StageQueue, mut admit: FA, tokens_of: FT) -> Batch
+    where
+        FA: FnMut(&QueuedRequest) -> bool,
+        FT: Fn(&QueuedRequest) -> u64,
+    {
+        let mut items = Vec::new();
+        let mut tokens = 0u64;
+        while (items.len() as u32) < self.max_batch {
+            let Some(candidate) = queue.peek() else { break };
+            let t = tokens_of(candidate);
+            if !items.is_empty() && tokens + t > self.max_batch_tokens {
+                break;
+            }
+            if !admit(candidate) {
+                break;
+            }
+            let item = queue.pop().unwrap();
+            tokens += t;
+            items.push(item);
+        }
+        Batch { items }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::config::QueuePolicy;
+
+    fn q(id: u64, cost: f64) -> QueuedRequest {
+        QueuedRequest {
+            id,
+            shard: 0,
+            enqueue_time: 0.0,
+            est_cost: cost,
+            deadline: f64::INFINITY,
+        }
+    }
+
+    fn queue_with(n: u64) -> StageQueue {
+        let mut sq = StageQueue::new(QueuePolicy::Fcfs);
+        for i in 0..n {
+            sq.push(q(i, 1.0));
+        }
+        sq
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut sq = queue_with(10);
+        let b = Batcher::new(4, u64::MAX).form(&mut sq, |_| true, |_| 1);
+        assert_eq!(b.len(), 4);
+        assert_eq!(sq.len(), 6);
+    }
+
+    #[test]
+    fn respects_token_budget() {
+        let mut sq = queue_with(10);
+        let b = Batcher::new(100, 25).form(&mut sq, |_| true, |_| 10);
+        // 10 + 10 fits; adding a third (30 > 25) does not.
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn first_item_always_admitted_past_token_budget() {
+        // A single huge request must still be schedulable (chunked prefill
+        // is out of scope; the budget only limits *batching*).
+        let mut sq = queue_with(2);
+        let b = Batcher::new(4, 5).form(&mut sq, |_| true, |_| 100);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn admission_predicate_stops_batch() {
+        let mut sq = queue_with(5);
+        let mut admitted = 0;
+        let b = Batcher::new(10, u64::MAX).form(
+            &mut sq,
+            |_| {
+                admitted += 1;
+                admitted <= 3
+            },
+            |_| 1,
+        );
+        assert_eq!(b.len(), 3);
+        assert_eq!(sq.len(), 2, "rejected item stays queued");
+    }
+
+    #[test]
+    fn empty_queue_empty_batch() {
+        let mut sq = queue_with(0);
+        let b = Batcher::new(4, 100).form(&mut sq, |_| true, |_| 1);
+        assert!(b.is_empty());
+    }
+}

@@ -1,0 +1,10 @@
+//! Per-stage scheduling: queue ordering policies, instance assignment and
+//! batch formation (Appendix D).
+
+pub mod queue;
+pub mod assign;
+pub mod batcher;
+
+pub use assign::Assigner;
+pub use batcher::{Batch, Batcher};
+pub use queue::{QueuedRequest, StageQueue};

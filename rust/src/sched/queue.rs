@@ -1,0 +1,164 @@
+//! Instance request queues with pluggable ordering (Appendix D: FCFS,
+//! shortest-job-first, or SLO-deadline-aware).
+
+use std::collections::VecDeque;
+
+use crate::core::config::QueuePolicy;
+use crate::core::request::RequestId;
+
+/// A queued unit of work: a request (or, under IRP, one shard of one) with
+/// the attributes the ordering policies need.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueuedRequest {
+    pub id: RequestId,
+    /// IRP shard index (0 for whole requests).
+    pub shard: u32,
+    pub enqueue_time: f64,
+    /// Estimated stage-processing cost, seconds (SJF key).
+    pub est_cost: f64,
+    /// Absolute deadline for SLO-aware ordering, seconds.
+    pub deadline: f64,
+}
+
+/// A stage queue for one instance.
+#[derive(Debug, Clone)]
+pub struct StageQueue {
+    policy: QueuePolicy,
+    items: VecDeque<QueuedRequest>,
+}
+
+impl StageQueue {
+    pub fn new(policy: QueuePolicy) -> StageQueue {
+        StageQueue {
+            policy,
+            items: VecDeque::new(),
+        }
+    }
+
+    pub fn policy(&self) -> QueuePolicy {
+        self.policy
+    }
+
+    pub fn push(&mut self, item: QueuedRequest) {
+        self.items.push_back(item);
+    }
+
+    /// Remove and return the next item according to the policy.
+    pub fn pop(&mut self) -> Option<QueuedRequest> {
+        if self.items.is_empty() {
+            return None;
+        }
+        let idx = match self.policy {
+            QueuePolicy::Fcfs => 0,
+            QueuePolicy::Sjf => self
+                .items
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.est_cost.partial_cmp(&b.1.est_cost).unwrap())
+                .map(|(i, _)| i)
+                .unwrap(),
+            QueuePolicy::SloAware => self
+                .items
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.deadline.partial_cmp(&b.1.deadline).unwrap())
+                .map(|(i, _)| i)
+                .unwrap(),
+        };
+        self.items.remove(idx)
+    }
+
+    /// Peek at what `pop` would return.
+    pub fn peek(&self) -> Option<&QueuedRequest> {
+        match self.policy {
+            QueuePolicy::Fcfs => self.items.front(),
+            QueuePolicy::Sjf => self
+                .items
+                .iter()
+                .min_by(|a, b| a.est_cost.partial_cmp(&b.est_cost).unwrap()),
+            QueuePolicy::SloAware => self
+                .items
+                .iter()
+                .min_by(|a, b| a.deadline.partial_cmp(&b.deadline).unwrap()),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Total estimated work in the queue (the role-switch monitor's load
+    /// signal).
+    pub fn backlog_cost(&self) -> f64 {
+        self.items.iter().map(|i| i.est_cost).sum()
+    }
+
+    /// Drain everything (role-switch offload: redistribute to siblings).
+    pub fn drain_all(&mut self) -> Vec<QueuedRequest> {
+        self.items.drain(..).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &QueuedRequest> {
+        self.items.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: RequestId, t: f64, cost: f64, deadline: f64) -> QueuedRequest {
+        QueuedRequest {
+            id,
+            shard: 0,
+            enqueue_time: t,
+            est_cost: cost,
+            deadline,
+        }
+    }
+
+    #[test]
+    fn fcfs_order() {
+        let mut sq = StageQueue::new(QueuePolicy::Fcfs);
+        sq.push(q(1, 0.0, 9.0, 100.0));
+        sq.push(q(2, 1.0, 1.0, 1.0));
+        assert_eq!(sq.pop().unwrap().id, 1);
+        assert_eq!(sq.pop().unwrap().id, 2);
+        assert!(sq.pop().is_none());
+    }
+
+    #[test]
+    fn sjf_order() {
+        let mut sq = StageQueue::new(QueuePolicy::Sjf);
+        sq.push(q(1, 0.0, 9.0, 100.0));
+        sq.push(q(2, 1.0, 1.0, 200.0));
+        sq.push(q(3, 2.0, 5.0, 300.0));
+        assert_eq!(sq.pop().unwrap().id, 2);
+        assert_eq!(sq.pop().unwrap().id, 3);
+        assert_eq!(sq.pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn slo_aware_order() {
+        let mut sq = StageQueue::new(QueuePolicy::SloAware);
+        sq.push(q(1, 0.0, 1.0, 50.0));
+        sq.push(q(2, 1.0, 1.0, 10.0));
+        assert_eq!(sq.peek().unwrap().id, 2);
+        assert_eq!(sq.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn backlog_and_drain() {
+        let mut sq = StageQueue::new(QueuePolicy::Fcfs);
+        sq.push(q(1, 0.0, 2.0, 0.0));
+        sq.push(q(2, 0.0, 3.0, 0.0));
+        assert!((sq.backlog_cost() - 5.0).abs() < 1e-12);
+        let drained = sq.drain_all();
+        assert_eq!(drained.len(), 2);
+        assert!(sq.is_empty());
+    }
+}

@@ -1,0 +1,1041 @@
+//! The discrete-event serving simulator.
+//!
+//! One [`Simulator::run`] call replays a workload (a list of
+//! [`Request`]s with arrival times) against a cluster configured by
+//! [`SimConfig`] and returns per-request timelines. The engine implements
+//! all three deployment modes with the *same* mechanism — instances whose
+//! role determines which work they pull:
+//!
+//! - **EPD**: encode instances pull IRP shards, prefill instances pull
+//!   migrated requests, decode instances run continuous batching.
+//! - **PD (DistServe)**: "prefill" instances run encode+prefill fused per
+//!   request; decode is separate.
+//! - **Aggregated (vLLM)**: every instance runs fused encode+prefill *and*
+//!   decode, with fused work preempting decode steps — reproducing the
+//!   interference of Figure 1.
+
+use std::collections::HashMap;
+
+use crate::cache::kv_block_manager::KvBlockManager;
+use crate::cache::mm_block_manager::MmBlockManager;
+use crate::coordinator::irp::plan_shards;
+use crate::coordinator::migration::{MigrationKind, TransferModel};
+use crate::coordinator::monitor::QueueMonitor;
+use crate::coordinator::role_switch::{RoleSwitchController, SwitchPolicy};
+use crate::core::config::EpdConfig;
+use crate::core::request::{Request, RequestId, RequestTimeline};
+use crate::core::stage::Stage;
+use crate::core::topology::DeploymentMode;
+use crate::model::memory::{MemoryModel, NodeKind};
+use crate::model::spec::{DeviceSpec, LmmSpec};
+use crate::sched::batcher::Batcher;
+use crate::sched::queue::{QueuedRequest, StageQueue};
+
+use super::cost::CostModel;
+use super::event::{Event, EventQueue};
+use super::outcome::SimOutcome;
+
+/// Simulator configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub spec: LmmSpec,
+    pub device: DeviceSpec,
+    pub epd: EpdConfig,
+    /// §E.1: context tokens per batch cap.
+    pub max_batch_tokens: u64,
+    /// Monitor tick period for role switching, seconds.
+    pub monitor_interval: f64,
+    pub switch_policy: SwitchPolicy,
+}
+
+impl SimConfig {
+    pub fn new(spec: LmmSpec, device: DeviceSpec, epd: EpdConfig) -> SimConfig {
+        SimConfig {
+            spec,
+            device,
+            epd,
+            max_batch_tokens: 49_152,
+            monitor_interval: 0.25,
+            switch_policy: SwitchPolicy::default(),
+        }
+    }
+}
+
+/// What kind of work an instance executes for a given role+mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WorkKind {
+    /// EPD encode: IRP shard batches.
+    Encode,
+    /// EPD prefill: prefill batches.
+    Prefill,
+    /// DistServe: encode+prefill fused per request.
+    FusedEp,
+    /// Decode only.
+    Decode,
+    /// vLLM: fused EP plus decode on the same device.
+    Monolith,
+}
+
+struct Inst {
+    role: Stage,
+    kind: WorkKind,
+    max_batch: u32,
+    busy: bool,
+    switching: bool,
+    /// Requests/shards waiting for this instance's primary work
+    /// (encode shards, prefill requests, or fused EP requests).
+    queue: StageQueue,
+    /// Requests waiting to join the continuous decode batch (decode-capable
+    /// kinds only; kept separate from `queue` so a monolith instance never
+    /// mistakes migrated decode work for fresh EP work).
+    decode_queue: StageQueue,
+    /// Continuous-batching active set (decode-capable kinds only).
+    active: Vec<RequestId>,
+    kv: KvBlockManager,
+    mm: MmBlockManager,
+    /// Items being processed right now (completion event will land).
+    in_flight: Vec<QueuedRequest>,
+}
+
+impl Inst {
+    fn serves_decode(&self) -> bool {
+        matches!(self.kind, WorkKind::Decode | WorkKind::Monolith)
+    }
+
+    fn load(&self) -> f64 {
+        self.queue.backlog_cost()
+            + self.decode_queue.backlog_cost()
+            + self.active.len() as f64 * 0.01
+            + if self.busy { 0.05 } else { 0.0 }
+    }
+}
+
+struct ReqState {
+    req: Request,
+    tl: RequestTimeline,
+    shards_total: u32,
+    shards_done: u32,
+    decoded: u32,
+    rejected: bool,
+}
+
+/// The simulator.
+pub struct Simulator<'a> {
+    cfg: &'a SimConfig,
+    cost: CostModel,
+    transfer: TransferModel,
+    mem: MemoryModel,
+    events: EventQueue,
+    now: f64,
+    insts: Vec<Inst>,
+    reqs: HashMap<RequestId, ReqState>,
+    switch_ctl: RoleSwitchController,
+    monitor: QueueMonitor,
+    busy_acc: [f64; 3],
+    role_switches: u32,
+    rejected: u32,
+    pending_arrivals: HashMap<RequestId, Request>,
+    finished_count: usize,
+    total_count: usize,
+}
+
+impl<'a> Simulator<'a> {
+    /// Run a workload to completion and return the outcome.
+    pub fn run(cfg: &'a SimConfig, requests: &[Request]) -> SimOutcome {
+        let mut sim = Simulator::new(cfg, requests);
+        sim.main_loop();
+        sim.into_outcome()
+    }
+
+    fn new(cfg: &'a SimConfig, requests: &[Request]) -> Simulator<'a> {
+        let cost = CostModel::new(cfg.spec.clone(), cfg.device);
+        let transfer = TransferModel::from_device(&cfg.device);
+        let mem = MemoryModel::new(cfg.spec.clone(), cfg.device);
+
+        let mut insts = Vec::new();
+        for ic in &cfg.epd.instances {
+            let kind = work_kind(cfg.epd.mode, ic.role);
+            let node = node_kind(kind);
+            let kv_tokens = mem.kv_capacity_tokens(node, cfg.epd.kv_frac);
+            let kv = KvBlockManager::with_capacity_tokens(kv_tokens.max(16), 16);
+            // MM cache: entries sized in tiles; §E.1 fixes 3000 entries.
+            let mm = MmBlockManager::new(cfg.epd.mm_cache_entries, cfg.spec.vision.tokens_per_tile.max(1));
+            insts.push(Inst {
+                role: ic.role,
+                kind,
+                max_batch: ic.max_batch.max(1),
+                busy: false,
+                switching: false,
+                queue: StageQueue::new(cfg.epd.sched_for(ic.role).queue),
+                decode_queue: StageQueue::new(cfg.epd.sched_for(Stage::Decode).queue),
+                active: Vec::new(),
+                kv,
+                mm,
+                in_flight: Vec::new(),
+            });
+        }
+
+        let mut events = EventQueue::new();
+        let mut pending = HashMap::new();
+        for r in requests {
+            events.push(r.arrival, Event::Arrival(r.id));
+            pending.insert(r.id, r.clone());
+        }
+        if cfg.epd.role_switching {
+            events.push(cfg.monitor_interval, Event::MonitorTick);
+        }
+
+        Simulator {
+            cfg,
+            cost,
+            transfer,
+            mem,
+            events,
+            now: 0.0,
+            insts,
+            reqs: HashMap::new(),
+            switch_ctl: RoleSwitchController::new(cfg.switch_policy),
+            monitor: QueueMonitor::new(0.3),
+            busy_acc: [0.0; 3],
+            role_switches: 0,
+            rejected: 0,
+            pending_arrivals: pending,
+            finished_count: 0,
+            total_count: requests.len(),
+        }
+    }
+
+    fn main_loop(&mut self) {
+        while let Some((t, ev)) = self.events.pop() {
+            self.now = t;
+            match ev {
+                Event::Arrival(id) => self.on_arrival(id),
+                Event::EncodeDone { instance } => self.on_encode_done(instance),
+                Event::EpTransferDone { req } => self.on_ep_transfer_done(req),
+                Event::PrefillDone { instance } => self.on_prefill_done(instance),
+                Event::PdTransferDone { req } => self.on_pd_transfer_done(req),
+                Event::DecodeStepDone { instance } => self.on_decode_step_done(instance),
+                Event::FusedStepDone { instance } => self.on_fused_step_done(instance),
+                Event::MonitorTick => self.on_monitor_tick(),
+                Event::SwitchDone { instance } => self.on_switch_done(instance),
+            }
+            if self.finished_count >= self.total_count && self.all_idle() {
+                break;
+            }
+        }
+    }
+
+    fn all_idle(&self) -> bool {
+        self.insts
+            .iter()
+            .all(|i| !i.busy && i.queue.is_empty() && i.decode_queue.is_empty() && i.active.is_empty())
+    }
+
+    fn into_outcome(self) -> SimOutcome {
+        let mut timelines: Vec<RequestTimeline> = self
+            .reqs
+            .into_values()
+            .filter(|r| !r.rejected)
+            .map(|r| r.tl)
+            .collect();
+        timelines.sort_by_key(|t| t.id);
+        let makespan = timelines
+            .iter()
+            .filter(|t| t.is_finished())
+            .map(|t| t.finish)
+            .fold(0.0f64, f64::max);
+        SimOutcome {
+            timelines,
+            makespan,
+            role_switches: self.role_switches,
+            busy: self.busy_acc,
+            rejected: self.rejected,
+        }
+    }
+
+    // ---- instance selection ----
+
+    fn instances_with_kind(&self, kind: WorkKind) -> Vec<usize> {
+        self.insts
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.kind == kind && !i.switching)
+            .map(|(idx, _)| idx)
+            .collect()
+    }
+
+    /// Instances accepting entry-stage work (encode shards in EPD, fused
+    /// requests in PD/aggregated).
+    fn entry_instances(&self) -> Vec<usize> {
+        match self.cfg.epd.mode {
+            DeploymentMode::Epd => self.instances_with_kind(WorkKind::Encode),
+            DeploymentMode::PdDisagg => self.instances_with_kind(WorkKind::FusedEp),
+            DeploymentMode::Aggregated => self.instances_with_kind(WorkKind::Monolith),
+        }
+    }
+
+    fn least_loaded(&self, candidates: &[usize]) -> Option<usize> {
+        candidates
+            .iter()
+            .copied()
+            .min_by(|&a, &b| self.insts[a].load().partial_cmp(&self.insts[b].load()).unwrap())
+    }
+
+    // ---- arrival ----
+
+    fn on_arrival(&mut self, id: RequestId) {
+        let req = self.pending_arrivals.remove(&id).expect("unknown arrival");
+        let tl = RequestTimeline::new(id, self.now);
+        let total_tiles = req.total_tiles();
+
+        let entry = self.entry_instances();
+        if entry.is_empty() {
+            // No instance can take entry work right now (all switching) —
+            // retry shortly rather than dropping.
+            self.pending_arrivals.insert(id, req);
+            self.events.push(self.now + 0.01, Event::Arrival(id));
+            return;
+        }
+
+        match self.cfg.epd.mode {
+            DeploymentMode::Epd => {
+                let fanout = entry.len() as u32;
+                let plan = plan_shards(total_tiles, fanout, self.cfg.epd.irp);
+                let shards_total = plan.num_shards().max(1);
+                let state = ReqState {
+                    req: req.clone(),
+                    tl,
+                    shards_total,
+                    shards_done: 0,
+                    decoded: 0,
+                    rejected: false,
+                };
+                self.reqs.insert(id, state);
+
+                if total_tiles == 0 {
+                    // Text-only request: skip encode entirely.
+                    let r = self.reqs.get_mut(&id).unwrap();
+                    r.tl.encode_start = self.now;
+                    r.tl.encode_end = self.now;
+                    self.enqueue_prefill(id);
+                    return;
+                }
+                // Spread shards over distinct least-loaded encode instances.
+                let mut order: Vec<usize> = entry.clone();
+                order.sort_by(|&a, &b| {
+                    self.insts[a].load().partial_cmp(&self.insts[b].load()).unwrap()
+                });
+                let shard_fanout = plan.num_shards();
+                for (k, &tiles) in plan.tiles_per_shard.iter().enumerate() {
+                    let inst_idx = order[k % order.len()];
+                    let est = self.cost.shard_preprocess_time(
+                        req.images,
+                        req.resolution,
+                        tiles,
+                        total_tiles,
+                        shard_fanout,
+                        k as u32,
+                    ) + self.cost.encode_time(tiles);
+                    self.insts[inst_idx].queue.push(QueuedRequest {
+                        id,
+                        shard: tiles, // carry the shard's tile count
+                        enqueue_time: self.now,
+                        est_cost: est,
+                        deadline: f64::INFINITY,
+                    });
+                    self.kick_instance(inst_idx);
+                }
+            }
+            DeploymentMode::PdDisagg | DeploymentMode::Aggregated => {
+                self.reqs.insert(
+                    id,
+                    ReqState { req: req.clone(), tl, shards_total: 1, shards_done: 0, decoded: 0, rejected: false },
+                );
+                let inst_idx = self.least_loaded(&entry).unwrap();
+                let est = self.cost.preprocess_time(req.images, req.resolution)
+                    + self.cost.encode_time(total_tiles)
+                    + self.cost.prefill_time(req.prefill_tokens());
+                self.insts[inst_idx].queue.push(QueuedRequest {
+                    id,
+                    shard: total_tiles,
+                    enqueue_time: self.now,
+                    est_cost: est,
+                    deadline: f64::INFINITY,
+                });
+                self.kick_instance(inst_idx);
+            }
+        }
+    }
+
+    // ---- work dispatch ----
+
+    fn kick_instance(&mut self, idx: usize) {
+        if self.insts[idx].busy || self.insts[idx].switching {
+            return;
+        }
+        match self.insts[idx].kind {
+            WorkKind::Encode => self.start_encode(idx),
+            WorkKind::Prefill => self.start_prefill(idx),
+            WorkKind::FusedEp => self.start_fused(idx),
+            WorkKind::Decode => self.start_decode_step(idx),
+            WorkKind::Monolith => {
+                // vLLM priority: fused EP work first (prefill-prioritising
+                // scheduler); decode only when no EP work waits.
+                if !self.insts[idx].queue.is_empty() {
+                    self.start_fused(idx);
+                } else {
+                    self.start_decode_step(idx);
+                }
+            }
+        }
+    }
+
+    fn start_encode(&mut self, idx: usize) {
+        let max_batch = self.insts[idx].max_batch;
+        let batcher = Batcher::new(max_batch, u64::MAX);
+        let batch = {
+            let inst = &mut self.insts[idx];
+            batcher.form(&mut inst.queue, |_| true, |q| q.shard as u64)
+        };
+        if batch.is_empty() {
+            return;
+        }
+        let mut duration = 0.0;
+        for item in &batch.items {
+            duration += item.est_cost; // preproc + encode per shard
+            let r = self.reqs.get_mut(&item.id).unwrap();
+            if r.tl.encode_start.is_nan() {
+                r.tl.encode_start = self.now;
+            }
+        }
+        // Batched execution pays the per-invocation overhead once; each
+        // item's est_cost included it, so refund the duplicates.
+        duration -= self.cost.overheads.encode_step * (batch.len() as f64 - 1.0);
+        let inst = &mut self.insts[idx];
+        inst.busy = true;
+        inst.in_flight = batch.items;
+        self.busy_acc[0] += duration;
+        self.events.push(self.now + duration, Event::EncodeDone { instance: idx });
+    }
+
+    fn on_encode_done(&mut self, idx: usize) {
+        let items = std::mem::take(&mut self.insts[idx].in_flight);
+        self.insts[idx].busy = false;
+        for item in items {
+            let (all_done, mm_tokens) = {
+                let r = self.reqs.get_mut(&item.id).unwrap();
+                r.shards_done += 1;
+                (r.shards_done >= r.shards_total, r.req.total_mm_tokens())
+            };
+            if all_done {
+                let r = self.reqs.get_mut(&item.id).unwrap();
+                r.tl.encode_end = self.now;
+                // Asynchronous EP transfer (§3.2.1) — does not occupy the
+                // encode instance.
+                let t = self.transfer.migration_time(
+                    MigrationKind::EncodeToPrefill,
+                    &self.cfg.spec,
+                    mm_tokens,
+                    0,
+                );
+                self.events.push(self.now + t, Event::EpTransferDone { req: item.id });
+            }
+        }
+        self.kick_instance(idx);
+    }
+
+    fn on_ep_transfer_done(&mut self, id: RequestId) {
+        self.enqueue_prefill(id);
+    }
+
+    fn enqueue_prefill(&mut self, id: RequestId) {
+        let prefills = self.instances_with_kind(WorkKind::Prefill);
+        if prefills.is_empty() {
+            // All prefill instances switching — retry.
+            self.events.push(self.now + 0.01, Event::EpTransferDone { req: id });
+            return;
+        }
+        let est = {
+            let r = &self.reqs[&id];
+            self.cost.prefill_time(r.req.prefill_tokens())
+        };
+        let idx = self.least_loaded(&prefills).unwrap();
+        self.insts[idx].queue.push(QueuedRequest {
+            id,
+            shard: 0,
+            enqueue_time: self.now,
+            est_cost: est,
+            deadline: f64::INFINITY,
+        });
+        self.kick_instance(idx);
+    }
+
+    fn start_prefill(&mut self, idx: usize) {
+        let max_batch = self.insts[idx].max_batch;
+        let batcher = Batcher::new(max_batch, self.cfg.max_batch_tokens);
+        let reqs = &self.reqs;
+        let batch = {
+            let inst = &mut self.insts[idx];
+            batcher.form(
+                &mut inst.queue,
+                |_| true,
+                |q| reqs[&q.id].req.prefill_tokens(),
+            )
+        };
+        if batch.is_empty() {
+            return;
+        }
+        let total_tokens: u64 = batch
+            .items
+            .iter()
+            .map(|q| self.reqs[&q.id].req.prefill_tokens())
+            .sum();
+        for item in &batch.items {
+            let r = self.reqs.get_mut(&item.id).unwrap();
+            r.tl.prefill_start = self.now;
+        }
+        let duration = self.cost.prefill_time(total_tokens)
+            + self.cost.overheads.prefill_per_request * batch.items.len() as f64;
+        let inst = &mut self.insts[idx];
+        inst.busy = true;
+        inst.in_flight = batch.items;
+        self.busy_acc[1] += duration;
+        self.events.push(self.now + duration, Event::PrefillDone { instance: idx });
+    }
+
+    fn on_prefill_done(&mut self, idx: usize) {
+        let items = std::mem::take(&mut self.insts[idx].in_flight);
+        self.insts[idx].busy = false;
+        for item in items {
+            self.finish_prefill_for(item.id);
+        }
+        self.kick_instance(idx);
+    }
+
+    /// Common post-prefill path: first token out; route to decode.
+    fn finish_prefill_for(&mut self, id: RequestId) {
+        let (out_tokens, kv_tokens) = {
+            let r = self.reqs.get_mut(&id).unwrap();
+            r.tl.prefill_end = self.now;
+            r.tl.first_token = self.now;
+            (r.req.output_tokens, r.req.prefill_tokens())
+        };
+        if out_tokens <= 1 {
+            self.finish_request(id);
+            return;
+        }
+        match self.cfg.epd.mode {
+            DeploymentMode::Aggregated => {
+                // Decode continues on the same instance — no transfer.
+                self.events.push(self.now, Event::PdTransferDone { req: id });
+            }
+            _ => {
+                let t = self.transfer.migration_time(
+                    MigrationKind::PrefillToDecode,
+                    &self.cfg.spec,
+                    0,
+                    kv_tokens,
+                );
+                self.events.push(self.now + t, Event::PdTransferDone { req: id });
+            }
+        }
+    }
+
+    fn on_pd_transfer_done(&mut self, id: RequestId) {
+        let decoders = match self.cfg.epd.mode {
+            DeploymentMode::Aggregated => self.instances_with_kind(WorkKind::Monolith),
+            _ => self.instances_with_kind(WorkKind::Decode),
+        };
+        if decoders.is_empty() {
+            self.events.push(self.now + 0.01, Event::PdTransferDone { req: id });
+            return;
+        }
+        // Reject a request whose context can never fit this cluster's KV.
+        let ctx = self.reqs[&id].req.prefill_tokens();
+        let fits_somewhere = decoders.iter().any(|&d| {
+            let pool = self.insts[d].kv.pool();
+            pool.blocks_for_tokens(ctx + 1) <= pool.num_blocks()
+        });
+        if !fits_somewhere {
+            let r = self.reqs.get_mut(&id).unwrap();
+            r.rejected = true;
+            self.rejected += 1;
+            self.finished_count += 1;
+            return;
+        }
+        // Estimated cost = full remaining decode time at a typical batch
+        // amortization (drives least-loaded assignment and the §3.2.4
+        // monitor's backlog signal).
+        let out = self.reqs[&id].req.output_tokens;
+        let est = out.saturating_sub(1) as f64 * self.cost.decode_step_time(1, ctx)
+            / 8.0_f64.min(self.cfg.epd.instances.iter().map(|i| i.max_batch).max().unwrap_or(1) as f64);
+        let idx = self
+            .least_loaded(&decoders)
+            .unwrap();
+        self.insts[idx].decode_queue.push(QueuedRequest {
+            id,
+            shard: 0,
+            enqueue_time: self.now,
+            est_cost: est,
+            deadline: f64::INFINITY,
+        });
+        self.kick_instance(idx);
+    }
+
+    fn start_decode_step(&mut self, idx: usize) {
+        // Admit waiting sequences up to max_batch, KV permitting.
+        let max_batch = self.insts[idx].max_batch as usize;
+        loop {
+            if self.insts[idx].active.len() >= max_batch {
+                break;
+            }
+            let Some(peek) = self.insts[idx].decode_queue.peek().cloned() else { break };
+            let ctx = {
+                let r = &self.reqs[&peek.id];
+                r.req.prefill_tokens() + r.decoded as u64
+            };
+            let admitted = self.insts[idx].kv.can_admit(ctx + 1);
+            if !admitted {
+                break;
+            }
+            let item = self.insts[idx].decode_queue.pop().unwrap();
+            let ok = self.insts[idx].kv.admit(item.id, ctx + 1);
+            debug_assert!(ok);
+            self.insts[idx].active.push(item.id);
+        }
+        if self.insts[idx].active.is_empty() || self.insts[idx].busy {
+            return;
+        }
+        let batch = self.insts[idx].active.len() as u32;
+        let avg_ctx: u64 = self.insts[idx]
+            .active
+            .iter()
+            .map(|id| {
+                let r = &self.reqs[id];
+                r.req.prefill_tokens() + r.decoded as u64
+            })
+            .sum::<u64>()
+            / batch as u64;
+        let duration = self.cost.decode_step_time(batch, avg_ctx);
+        self.insts[idx].busy = true;
+        self.busy_acc[2] += duration;
+        self.events.push(self.now + duration, Event::DecodeStepDone { instance: idx });
+    }
+
+    fn on_decode_step_done(&mut self, idx: usize) {
+        self.insts[idx].busy = false;
+        let active = std::mem::take(&mut self.insts[idx].active);
+        let mut still_active = Vec::with_capacity(active.len());
+        for id in active {
+            let done = {
+                let r = self.reqs.get_mut(&id).unwrap();
+                r.decoded += 1;
+                // First token came from prefill; decode produces the rest.
+                r.decoded + 1 >= r.req.output_tokens
+            };
+            let _ = self.insts[idx].kv.append_token(id);
+            if done {
+                self.insts[idx].kv.release(id);
+                self.finish_request(id);
+            } else {
+                still_active.push(id);
+            }
+        }
+        self.insts[idx].active = still_active;
+        self.kick_instance(idx);
+    }
+
+    fn start_fused(&mut self, idx: usize) {
+        // Fused encode+prefill: one request at a time per batch slot; the
+        // paper's baselines run these sequentially per request, batching at
+        // the configured max_batch.
+        let max_batch = self.insts[idx].max_batch;
+        let batcher = Batcher::new(max_batch, self.cfg.max_batch_tokens);
+        let reqs = &self.reqs;
+        let batch = {
+            let inst = &mut self.insts[idx];
+            batcher.form(
+                &mut inst.queue,
+                |_| true,
+                |q| reqs[&q.id].req.prefill_tokens(),
+            )
+        };
+        if batch.is_empty() {
+            return;
+        }
+        let mut duration = 0.0;
+        let mut total_tokens = 0u64;
+        for item in &batch.items {
+            let r = self.reqs.get_mut(&item.id).unwrap();
+            if r.tl.encode_start.is_nan() {
+                r.tl.encode_start = self.now;
+            }
+            duration += self.cost.preprocess_time(r.req.images, r.req.resolution);
+            total_tokens += r.req.prefill_tokens();
+        }
+        let tiles: u32 = batch
+            .items
+            .iter()
+            .map(|q| self.reqs[&q.id].req.total_tiles())
+            .sum();
+        duration += self.cost.encode_time(tiles)
+            + self.cost.prefill_time(total_tokens)
+            + self.cost.overheads.prefill_per_request * batch.items.len() as f64;
+        let inst = &mut self.insts[idx];
+        inst.busy = true;
+        inst.in_flight = batch.items;
+        self.busy_acc[0] += duration; // fused work accounted to E+P jointly
+        self.events.push(self.now + duration, Event::FusedStepDone { instance: idx });
+    }
+
+    fn on_fused_step_done(&mut self, idx: usize) {
+        let items = std::mem::take(&mut self.insts[idx].in_flight);
+        self.insts[idx].busy = false;
+        for item in items {
+            {
+                let r = self.reqs.get_mut(&item.id).unwrap();
+                r.tl.encode_end = self.now;
+                r.tl.prefill_start = self.now;
+            }
+            self.finish_prefill_for(item.id);
+        }
+        self.kick_instance(idx);
+    }
+
+    fn finish_request(&mut self, id: RequestId) {
+        let r = self.reqs.get_mut(&id).unwrap();
+        r.tl.finish = self.now;
+        r.tl.output_tokens = r.req.output_tokens;
+        self.finished_count += 1;
+    }
+
+    // ---- role switching ----
+
+    fn on_monitor_tick(&mut self) {
+        // Feed per-stage signals.
+        let mut counts = [0u32; 3];
+        let mut qlen = [0usize; 3];
+        let mut backlog = [0.0f64; 3];
+        let mut busy = [0u32; 3];
+        for inst in &self.insts {
+            if inst.switching {
+                continue;
+            }
+            let sidx = stage_index(inst.role);
+            counts[sidx] += 1;
+            qlen[sidx] += inst.queue.len() + inst.decode_queue.len() + inst.active.len();
+            // Remaining decode work of the active set: steps left × step
+            // time at the current batch size.
+            let active_remaining: u32 = inst
+                .active
+                .iter()
+                .map(|id| {
+                    let r = &self.reqs[id];
+                    r.req.output_tokens.saturating_sub(1 + r.decoded)
+                })
+                .max()
+                .unwrap_or(0);
+            let step = self.cost.decode_step_time(inst.active.len() as u32, 2048);
+            backlog[sidx] += inst.queue.backlog_cost()
+                + inst.decode_queue.backlog_cost()
+                + active_remaining as f64 * step;
+            if inst.busy {
+                busy[sidx] += 1;
+            }
+        }
+        for s in Stage::ALL {
+            let i = stage_index(s);
+            let util = if counts[i] == 0 { 0.0 } else { busy[i] as f64 / counts[i] as f64 };
+            self.monitor.observe(s, qlen[i], backlog[i], util, counts[i]);
+        }
+
+        if std::env::var("EPD_SIM_DEBUG").is_ok() {
+            eprintln!(
+                "tick t={:.2} counts={counts:?} qlen={qlen:?} backlog=[{:.2},{:.2},{:.2}] pressures=[{:.2},{:.2},{:.2}]",
+                self.now,
+                backlog[0], backlog[1], backlog[2],
+                self.monitor.load(Stage::Encode).pressure(),
+                self.monitor.load(Stage::Prefill).pressure(),
+                self.monitor.load(Stage::Decode).pressure(),
+            );
+        }
+        if let Some(dec) = self.switch_ctl.evaluate(self.now, &self.monitor, counts) {
+            // Pick a donor: an instance of `dec.from` with no active decode
+            // batch (drain-free switch), preferring the least loaded.
+            let donors: Vec<usize> = self
+                .insts
+                .iter()
+                .enumerate()
+                .filter(|(_, i)| i.role == dec.from && !i.switching && i.active.is_empty())
+                .map(|(idx, _)| idx)
+                .collect();
+            if let Some(donor) = self.least_loaded(&donors) {
+                self.begin_switch(donor, dec.to, dec.migration_time);
+            }
+        }
+        self.events
+            .push(self.now + self.cfg.monitor_interval, Event::MonitorTick);
+    }
+
+    fn begin_switch(&mut self, idx: usize, to: Stage, migration_time: f64) {
+        // Offload (§3.2.4): requeue this instance's waiting items onto
+        // siblings in the same stage.
+        let from = self.insts[idx].role;
+        let mut drained = self.insts[idx].queue.drain_all();
+        let drained_decode = self.insts[idx].decode_queue.drain_all();
+        let siblings: Vec<usize> = self
+            .insts
+            .iter()
+            .enumerate()
+            .filter(|(i, inst)| *i != idx && inst.role == from && !inst.switching)
+            .map(|(i, _)| i)
+            .collect();
+        if siblings.is_empty() && (!drained.is_empty() || !drained_decode.is_empty()) {
+            // Nobody to offload to — abort the switch.
+            for item in drained {
+                self.insts[idx].queue.push(item);
+            }
+            for item in drained_decode {
+                self.insts[idx].decode_queue.push(item);
+            }
+            return;
+        }
+        for (k, item) in drained.drain(..).enumerate() {
+            let target = siblings[k % siblings.len()];
+            self.insts[target].queue.push(item);
+            self.kick_instance(target);
+        }
+        for (k, item) in drained_decode.into_iter().enumerate() {
+            let target = siblings[k % siblings.len()];
+            self.insts[target].decode_queue.push(item);
+            self.kick_instance(target);
+        }
+        let inst = &mut self.insts[idx];
+        inst.switching = true;
+        inst.role = to;
+        inst.kind = work_kind(self.cfg.epd.mode, to);
+        inst.kv.clear();
+        inst.mm.clear();
+        // Re-size KV for the new role.
+        let node = node_kind(inst.kind);
+        let kv_tokens = self.mem.kv_capacity_tokens(node, self.cfg.epd.kv_frac);
+        inst.kv = KvBlockManager::with_capacity_tokens(kv_tokens.max(16), 16);
+        inst.queue = StageQueue::new(self.cfg.epd.sched_for(to).queue);
+        inst.decode_queue = StageQueue::new(self.cfg.epd.sched_for(Stage::Decode).queue);
+        self.role_switches += 1;
+        self.events
+            .push(self.now + migration_time, Event::SwitchDone { instance: idx });
+    }
+
+    fn on_switch_done(&mut self, idx: usize) {
+        self.insts[idx].switching = false;
+        self.kick_instance(idx);
+    }
+}
+
+fn stage_index(s: Stage) -> usize {
+    match s {
+        Stage::Encode => 0,
+        Stage::Prefill => 1,
+        Stage::Decode => 2,
+    }
+}
+
+fn work_kind(mode: DeploymentMode, role: Stage) -> WorkKind {
+    match mode {
+        DeploymentMode::Epd => match role {
+            Stage::Encode => WorkKind::Encode,
+            Stage::Prefill => WorkKind::Prefill,
+            Stage::Decode => WorkKind::Decode,
+        },
+        DeploymentMode::PdDisagg => match role {
+            Stage::Encode | Stage::Prefill => WorkKind::FusedEp,
+            Stage::Decode => WorkKind::Decode,
+        },
+        DeploymentMode::Aggregated => WorkKind::Monolith,
+    }
+}
+
+fn node_kind(kind: WorkKind) -> NodeKind {
+    match kind {
+        WorkKind::Encode => NodeKind::EncodeOnly,
+        WorkKind::Prefill | WorkKind::Decode => NodeKind::LlmOnly,
+        WorkKind::FusedEp | WorkKind::Monolith => NodeKind::Colocated,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::topology::Topology;
+    use crate::model::spec::ModelId;
+    use crate::model::vision::{mm_tokens_for_image, tiles_for_image, Resolution};
+
+    fn mk_requests(n: u64, rate: f64, images: u32, out: u32, spec: &LmmSpec) -> Vec<Request> {
+        let res = Resolution::four_k();
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut t = 0.0;
+        (0..n)
+            .map(|id| {
+                t += rng.exp(rate);
+                Request {
+                    id,
+                    arrival: t,
+                    prompt_tokens: 22,
+                    images,
+                    resolution: res,
+                    output_tokens: out,
+                    tiles_per_image: tiles_for_image(spec, res),
+                    mm_tokens_per_image: mm_tokens_for_image(spec, res) as u32,
+                }
+            })
+            .collect()
+    }
+
+    fn epd_cfg(spec: &LmmSpec) -> SimConfig {
+        let epd = EpdConfig::epd(Topology::new(5, 2, 1), 1, 1, 128);
+        SimConfig::new(spec.clone(), DeviceSpec::a100(), epd)
+    }
+
+    #[test]
+    fn all_requests_finish_epd() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(30, 0.5, 2, 10, &spec);
+        let out = Simulator::run(&epd_cfg(&spec), &reqs);
+        assert_eq!(out.finished().count(), 30);
+        assert_eq!(out.rejected, 0);
+        for t in out.finished() {
+            assert!(t.ttft() > 0.0, "ttft positive");
+            assert!(t.finish >= t.first_token);
+            assert!(t.encode_end >= t.encode_start);
+        }
+    }
+
+    #[test]
+    fn all_requests_finish_baselines() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(20, 0.3, 2, 10, &spec);
+        for cfg in [
+            SimConfig::new(spec.clone(), DeviceSpec::a100(), EpdConfig::distserve(7, 1, 1, 128)),
+            SimConfig::new(spec.clone(), DeviceSpec::a100(), EpdConfig::aggregated(8, 64)),
+        ] {
+            let out = Simulator::run(&cfg, &reqs);
+            assert_eq!(out.finished().count(), 20, "{:?}", cfg.epd.mode);
+        }
+    }
+
+    #[test]
+    fn epd_beats_distserve_ttft_under_encode_load() {
+        // The Figure 6 effect: IRP spreads encode across 5 instances.
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(40, 0.25, 4, 10, &spec);
+        let epd = Simulator::run(&epd_cfg(&spec), &reqs);
+        let ds_cfg =
+            SimConfig::new(spec.clone(), DeviceSpec::a100(), EpdConfig::distserve(7, 1, 1, 128));
+        let ds = Simulator::run(&ds_cfg, &reqs);
+        assert!(
+            epd.mean_ttft() < 0.75 * ds.mean_ttft(),
+            "EPD {} vs DistServe {}",
+            epd.mean_ttft(),
+            ds.mean_ttft()
+        );
+    }
+
+    #[test]
+    fn irp_ablation_hurts_ttft() {
+        // Table 4: disabling IRP worsens TTFT substantially.
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(40, 0.25, 4, 10, &spec);
+        let with = Simulator::run(&epd_cfg(&spec), &reqs);
+        let mut cfg = epd_cfg(&spec);
+        cfg.epd.irp = false;
+        let without = Simulator::run(&cfg, &reqs);
+        assert!(
+            without.mean_ttft() > 1.5 * with.mean_ttft(),
+            "w/o IRP {} vs with {}",
+            without.mean_ttft(),
+            with.mean_ttft()
+        );
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(15, 0.5, 2, 5, &spec);
+        let a = Simulator::run(&epd_cfg(&spec), &reqs);
+        let b = Simulator::run(&epd_cfg(&spec), &reqs);
+        assert_eq!(a.mean_ttft(), b.mean_ttft());
+        assert_eq!(a.mean_tpot(), b.mean_tpot());
+    }
+
+    #[test]
+    fn single_token_requests_finish_at_prefill() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut reqs = mk_requests(5, 1.0, 1, 1, &spec);
+        for r in &mut reqs {
+            r.output_tokens = 1;
+        }
+        let out = Simulator::run(&epd_cfg(&spec), &reqs);
+        assert_eq!(out.finished().count(), 5);
+        for t in out.finished() {
+            assert_eq!(t.finish, t.first_token);
+        }
+    }
+
+    #[test]
+    fn text_only_requests_skip_encode() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut reqs = mk_requests(5, 1.0, 0, 5, &spec);
+        for r in &mut reqs {
+            r.images = 0;
+        }
+        let out = Simulator::run(&epd_cfg(&spec), &reqs);
+        assert_eq!(out.finished().count(), 5);
+        for t in out.finished() {
+            assert_eq!(t.encode_start, t.encode_end);
+        }
+    }
+
+    #[test]
+    fn role_switching_triggers_under_decode_pressure() {
+        // Table 6 scenario: long outputs shift the bottleneck to decode.
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut reqs = mk_requests(40, 3.0, 1, 50, &spec);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.output_tokens = if i < 4 { 50 } else { 400 };
+        }
+        let mut cfg = epd_cfg(&spec);
+        cfg.epd.role_switching = true;
+        cfg.switch_policy.cooldown = 2.0;
+        let out = Simulator::run(&cfg, &reqs);
+        assert_eq!(out.finished().count(), 40);
+        assert!(out.role_switches > 0, "expected at least one switch");
+    }
+
+    #[test]
+    fn aggregated_interference_hurts_tpot() {
+        // Figure 1 / Figure 5's story: on the monolith, fused encode+prefill
+        // work contends with decode on the same GPUs. The dominant effect is
+        // queueing ahead of the first token (TTFT collapse); decode steps
+        // also stall behind fused jobs (TPOT).
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(80, 2.0, 2, 200, &spec);
+        let epd = Simulator::run(&epd_cfg(&spec), &reqs);
+        let agg_cfg =
+            SimConfig::new(spec.clone(), DeviceSpec::a100(), EpdConfig::aggregated(8, 64));
+        let agg = Simulator::run(&agg_cfg, &reqs);
+        assert!(
+            agg.mean_ttft() > 2.0 * epd.mean_ttft(),
+            "agg ttft {} vs epd {}",
+            agg.mean_ttft(),
+            epd.mean_ttft()
+        );
+        assert!(
+            agg.mean_tpot() > epd.mean_tpot(),
+            "agg tpot {} vs epd {}",
+            agg.mean_tpot(),
+            epd.mean_tpot()
+        );
+    }
+
+}

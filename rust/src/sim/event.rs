@@ -1,0 +1,132 @@
+//! Event queue for the discrete-event simulator: a time-ordered heap with
+//! FIFO tie-breaking (events at equal timestamps fire in schedule order,
+//! keeping runs deterministic).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::core::request::RequestId;
+
+/// Simulator events.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A request arrives at the frontend.
+    Arrival(RequestId),
+    /// An encode instance finished the shard batch it was running.
+    EncodeDone { instance: usize },
+    /// An EP transfer for (request, shard) landed at the prefill side.
+    EpTransferDone { req: RequestId },
+    /// A prefill instance finished its batch.
+    PrefillDone { instance: usize },
+    /// A PD transfer landed at the decode side.
+    PdTransferDone { req: RequestId },
+    /// A decode instance finished one autoregressive step.
+    DecodeStepDone { instance: usize },
+    /// An aggregated/PD instance finished its current (fused) work item.
+    FusedStepDone { instance: usize },
+    /// Periodic monitor tick (role switching, §3.2.4).
+    MonitorTick,
+    /// A role-switching migration completed; the instance onloads.
+    SwitchDone { instance: usize },
+}
+
+#[derive(Debug, Clone)]
+struct Scheduled {
+    time: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert so earliest time pops first,
+        // then lowest sequence number.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic time-ordered event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn push(&mut self, time: f64, event: Event) {
+        assert!(time.is_finite(), "non-finite event time for {event:?}");
+        self.seq += 1;
+        self.heap.push(Scheduled { time, seq: self.seq, event });
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        self.heap.pop().map(|s| (s.time, s.event))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, Event::MonitorTick);
+        q.push(1.0, Event::Arrival(1));
+        q.push(2.0, Event::Arrival(2));
+        assert_eq!(q.pop().unwrap().0, 1.0);
+        assert_eq!(q.pop().unwrap().0, 2.0);
+        assert_eq!(q.pop().unwrap().0, 3.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn equal_times_fifo() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Event::Arrival(10));
+        q.push(1.0, Event::Arrival(20));
+        q.push(1.0, Event::Arrival(30));
+        let ids: Vec<_> = (0..3)
+            .map(|_| match q.pop().unwrap().1 {
+                Event::Arrival(id) => id,
+                e => panic!("{e:?}"),
+            })
+            .collect();
+        assert_eq!(ids, vec![10, 20, 30]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn rejects_nan_times() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, Event::MonitorTick);
+    }
+}

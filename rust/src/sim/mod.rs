@@ -1,0 +1,19 @@
+//! The DistServe-style discrete-event cluster simulator (§3.2.3: "we rely
+//! on a simulator — extended from DistServe — to evaluate performance
+//! metrics efficiently").
+//!
+//! The simulator drives the same policy components as the real engine
+//! (queues, batchers, block managers, IRP planner, role-switch controller)
+//! over virtual time, with stage latencies from the analytic [`cost`]
+//! model. It simulates all three deployment modes — EPD, PD-disaggregated
+//! (DistServe) and aggregated (vLLM) — on A100 or Ascend-910B3 device
+//! profiles.
+
+pub mod cost;
+pub mod event;
+pub mod engine;
+pub mod outcome;
+
+pub use cost::CostModel;
+pub use engine::{SimConfig, Simulator};
+pub use outcome::SimOutcome;

@@ -1,0 +1,125 @@
+//! Simulation results: per-request timelines plus system-level counters.
+
+use crate::core::request::RequestTimeline;
+use crate::core::slo::Slo;
+use crate::util::stats::{self, Summary};
+
+/// The result of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    pub timelines: Vec<RequestTimeline>,
+    /// Virtual time at which the last request finished.
+    pub makespan: f64,
+    /// Role switches performed (§3.2.4).
+    pub role_switches: u32,
+    /// Per-stage busy time across instances (E, P, D), seconds.
+    pub busy: [f64; 3],
+    /// Requests rejected at admission (cache exhaustion with no recovery).
+    pub rejected: u32,
+}
+
+impl SimOutcome {
+    pub fn finished(&self) -> impl Iterator<Item = &RequestTimeline> {
+        self.timelines.iter().filter(|t| t.is_finished())
+    }
+
+    pub fn ttfts(&self) -> Vec<f64> {
+        self.finished().map(|t| t.ttft()).collect()
+    }
+
+    pub fn tpots(&self) -> Vec<f64> {
+        self.finished().map(|t| t.tpot()).collect()
+    }
+
+    pub fn latencies(&self) -> Vec<f64> {
+        self.finished().map(|t| t.latency()).collect()
+    }
+
+    pub fn mean_ttft(&self) -> f64 {
+        stats::mean(&self.ttfts())
+    }
+
+    pub fn mean_tpot(&self) -> f64 {
+        stats::mean(&self.tpots())
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        stats::mean(&self.latencies())
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::of(&self.ttfts())
+    }
+
+    /// Fraction of submitted requests meeting both TTFT and TPOT SLOs
+    /// (unfinished/rejected requests count as misses — §4's definition).
+    pub fn slo_attainment(&self, slo: Slo) -> f64 {
+        let total = self.timelines.len() + self.rejected as usize;
+        if total == 0 {
+            return 0.0;
+        }
+        let ok = self
+            .finished()
+            .filter(|t| slo.attained(t.ttft(), t.tpot()))
+            .count();
+        ok as f64 / total as f64
+    }
+
+    /// Completed requests per second of makespan (offline throughput).
+    pub fn throughput(&self) -> f64 {
+        let n = self.finished().count();
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        n as f64 / self.makespan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::request::RequestTimeline;
+
+    fn tl(id: u64, arrival: f64, first: f64, finish: f64, out: u32) -> RequestTimeline {
+        let mut t = RequestTimeline::new(id, arrival);
+        t.first_token = first;
+        t.finish = finish;
+        t.output_tokens = out;
+        t
+    }
+
+    fn outcome() -> SimOutcome {
+        SimOutcome {
+            timelines: vec![
+                tl(1, 0.0, 1.0, 2.0, 10),  // ttft 1.0, tpot ~0.111
+                tl(2, 0.0, 3.0, 4.0, 10),  // ttft 3.0
+                RequestTimeline::new(3, 0.0), // never finished
+            ],
+            makespan: 4.0,
+            role_switches: 0,
+            busy: [1.0, 1.0, 1.0],
+            rejected: 1,
+        }
+    }
+
+    #[test]
+    fn attainment_counts_unfinished_and_rejected_as_misses() {
+        let o = outcome();
+        // SLO admits only request 1 → 1 of (3 timelines + 1 rejected).
+        let att = o.slo_attainment(Slo::new(2.0, 0.2));
+        assert!((att - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_metrics_ignore_unfinished() {
+        let o = outcome();
+        assert!((o.mean_ttft() - 2.0).abs() < 1e-12);
+        assert_eq!(o.ttfts().len(), 2);
+    }
+
+    #[test]
+    fn throughput() {
+        let o = outcome();
+        assert!((o.throughput() - 0.5).abs() < 1e-12);
+    }
+}

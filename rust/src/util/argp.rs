@@ -1,0 +1,291 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Model: `prog <subcommand> [--flag] [--key value] [positional...]`.
+//! Declarative enough for `--help` generation; typed accessors with
+//! defaults; unknown flags are hard errors so typos don't silently fall
+//! through to defaults.
+
+use std::collections::BTreeMap;
+
+/// Specification of a single option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// true → boolean flag (no value); false → takes one value.
+    pub is_flag: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Specification of a subcommand.
+#[derive(Debug, Clone)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positional: Vec<(&'static str, &'static str)>, // (name, help)
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub cmd: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.get(name)
+            .unwrap_or_else(|| panic!("option --{name} has no value and no default"))
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("option --{name} is not an integer"))
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.u64(name) as usize
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("option --{name} is not a number"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// A CLI with subcommands.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub prog: &'static str,
+    pub about: &'static str,
+    pub cmds: Vec<CmdSpec>,
+}
+
+/// Parse failure (message already formatted for the user).
+#[derive(Debug, thiserror::Error)]
+#[error("{0}")]
+pub struct ArgError(pub String);
+
+impl Cli {
+    pub fn new(prog: &'static str, about: &'static str) -> Cli {
+        Cli {
+            prog,
+            about,
+            cmds: Vec::new(),
+        }
+    }
+
+    pub fn cmd(mut self, spec: CmdSpec) -> Cli {
+        self.cmds.push(spec);
+        self
+    }
+
+    /// Render top-level or per-command help text.
+    pub fn help(&self, cmd: Option<&str>) -> String {
+        match cmd.and_then(|c| self.cmds.iter().find(|s| s.name == c)) {
+            Some(spec) => {
+                let mut out = format!("{} {} — {}\n\nOptions:\n", self.prog, spec.name, spec.about);
+                for o in &spec.opts {
+                    let kind = if o.is_flag { "" } else { " <value>" };
+                    let def = o
+                        .default
+                        .map(|d| format!(" [default: {d}]"))
+                        .unwrap_or_default();
+                    out.push_str(&format!("  --{}{kind}\n      {}{def}\n", o.name, o.help));
+                }
+                for (p, h) in &spec.positional {
+                    out.push_str(&format!("  <{p}>\n      {h}\n"));
+                }
+                out
+            }
+            None => {
+                let mut out = format!("{} — {}\n\nCommands:\n", self.prog, self.about);
+                for c in &self.cmds {
+                    out.push_str(&format!("  {:<22} {}\n", c.name, c.about));
+                }
+                out.push_str("\nRun with '<command> --help' for command options.\n");
+                out
+            }
+        }
+    }
+
+    /// Parse argv (excluding the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, ArgError> {
+        let cmd_name = argv
+            .first()
+            .ok_or_else(|| ArgError(self.help(None)))?
+            .clone();
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(ArgError(self.help(None)));
+        }
+        let spec = self
+            .cmds
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| {
+                ArgError(format!(
+                    "unknown command '{cmd_name}'\n\n{}",
+                    self.help(None)
+                ))
+            })?;
+
+        let mut args = Args {
+            cmd: cmd_name.clone(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positional: Vec::new(),
+        };
+        for o in &spec.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(ArgError(self.help(Some(&cmd_name))));
+            }
+            if let Some(name) = tok.strip_prefix("--") {
+                // --key=value form
+                let (name, inline_val) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let opt = spec.opts.iter().find(|o| o.name == name).ok_or_else(|| {
+                    ArgError(format!("unknown option '--{name}' for '{cmd_name}'"))
+                })?;
+                if opt.is_flag {
+                    if inline_val.is_some() {
+                        return Err(ArgError(format!("flag '--{name}' takes no value")));
+                    }
+                    args.flags.insert(name.to_string(), true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| ArgError(format!("option '--{name}' needs a value")))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        if args.positional.len() > spec.positional.len() {
+            return Err(ArgError(format!(
+                "too many positional arguments for '{cmd_name}'"
+            )));
+        }
+        Ok(args)
+    }
+}
+
+/// Convenience builder for an option that takes a value.
+pub fn opt(name: &'static str, default: Option<&'static str>, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        is_flag: false,
+        default,
+    }
+}
+
+/// Convenience builder for a boolean flag.
+pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        is_flag: true,
+        default: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("epdserve", "test").cmd(CmdSpec {
+            name: "simulate",
+            about: "run the simulator",
+            opts: vec![
+                opt("rate", Some("1.0"), "request rate"),
+                opt("model", None, "model name"),
+                flag("verbose", "chatty output"),
+            ],
+            positional: vec![("config", "config path")],
+        })
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(&sv(&["simulate"])).unwrap();
+        assert_eq!(a.f64("rate"), 1.0);
+        assert!(!a.flag("verbose"));
+        assert!(a.get("model").is_none());
+    }
+
+    #[test]
+    fn values_flags_positionals() {
+        let a = cli()
+            .parse(&sv(&["simulate", "--rate", "2.5", "--verbose", "cfg.toml"]))
+            .unwrap();
+        assert_eq!(a.f64("rate"), 2.5);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["cfg.toml"]);
+    }
+
+    #[test]
+    fn key_equals_value_form() {
+        let a = cli().parse(&sv(&["simulate", "--rate=0.25"])).unwrap();
+        assert_eq!(a.f64("rate"), 0.25);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cli().parse(&sv(&["simulate", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        assert!(cli().parse(&sv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cli().parse(&sv(&["simulate", "--rate"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_commands() {
+        let h = cli().help(None);
+        assert!(h.contains("simulate"));
+        let h2 = cli().help(Some("simulate"));
+        assert!(h2.contains("--rate"));
+        assert!(h2.contains("default: 1.0"));
+    }
+}

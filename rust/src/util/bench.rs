@@ -1,0 +1,254 @@
+//! Mini-criterion: the bench harness behind every `benches/*.rs` target
+//! (criterion is unavailable offline). Two modes:
+//!
+//! - [`BenchRunner::time`] — classic micro-benchmark: warmup, N timed
+//!   samples, median/MAD outlier rejection, mean ± CI report.
+//! - [`table`]/[`TableReport`] — "regenerate the paper artifact" mode: runs
+//!   a closure that produces labelled rows (the table/figure series) and
+//!   writes them to stdout and `results/<id>.{txt,json}`.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Micro-benchmark runner.
+pub struct BenchRunner {
+    pub warmup_iters: u32,
+    pub samples: u32,
+    pub iters_per_sample: u32,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner {
+            warmup_iters: 50,
+            samples: 30,
+            iters_per_sample: 20,
+        }
+    }
+}
+
+/// Result of one micro-benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Mean ns/iter after outlier rejection.
+    pub mean_ns: f64,
+    pub ci95_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub samples_kept: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12.0} ns/iter (±{:.0}, p50 {:.0}, p99 {:.0}, n={})",
+            self.name, self.mean_ns, self.ci95_ns, self.p50_ns, self.p99_ns, self.samples_kept
+        )
+    }
+}
+
+impl BenchRunner {
+    pub fn quick() -> BenchRunner {
+        BenchRunner {
+            warmup_iters: 5,
+            samples: 10,
+            iters_per_sample: 3,
+        }
+    }
+
+    /// Time `f`, amortized over `iters_per_sample` calls per sample.
+    pub fn time<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut per_iter_ns = Vec::with_capacity(self.samples as usize);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            per_iter_ns.push(dt / self.iters_per_sample as f64);
+        }
+        // Outlier rejection: keep samples within 5 MADs of the median.
+        let med = stats::percentile(&per_iter_ns, 50.0);
+        let mut devs: Vec<f64> = per_iter_ns.iter().map(|x| (x - med).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = stats::percentile_sorted(&devs, 50.0).max(1e-9);
+        let kept: Vec<f64> = per_iter_ns
+            .iter()
+            .copied()
+            .filter(|x| (x - med).abs() <= 5.0 * mad)
+            .collect();
+        let kept = if kept.is_empty() { per_iter_ns.clone() } else { kept };
+        BenchResult {
+            name: name.to_string(),
+            mean_ns: stats::mean(&kept),
+            ci95_ns: stats::ci95_half_width(&kept),
+            p50_ns: stats::percentile(&kept, 50.0),
+            p99_ns: stats::percentile(&kept, 99.0),
+            samples_kept: kept.len(),
+        }
+    }
+}
+
+/// A labelled table of rows — the unit in which paper artifacts are
+/// regenerated. Columns are strings so rows can mix numbers and "OOM".
+#[derive(Debug, Clone, Default)]
+pub struct TableReport {
+    pub id: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl TableReport {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> TableReport {
+        TableReport {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.columns.len(),
+            "row width mismatch in table {}",
+            self.id
+        );
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Render an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} — {} ==", self.id, self.title);
+        let hdr: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+            .collect();
+        let _ = writeln!(out, "| {} |", hdr.join(" | "));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            let _ = writeln!(out, "| {} |", cells.join(" | "));
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "  note: {n}");
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("title", Json::str(self.title.clone())),
+            (
+                "columns",
+                Json::arr(self.columns.iter().map(|c| Json::str(c.clone()))),
+            ),
+            (
+                "rows",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::arr(r.iter().map(|c| Json::str(c.clone())))),
+                ),
+            ),
+            (
+                "notes",
+                Json::arr(self.notes.iter().map(|n| Json::str(n.clone()))),
+            ),
+        ])
+    }
+
+    /// Print to stdout and persist under `results/`.
+    pub fn emit(&self) {
+        let text = self.render();
+        println!("{text}");
+        let _ = std::fs::create_dir_all("results");
+        let _ = std::fs::write(format!("results/{}.txt", self.id), &text);
+        let _ = std::fs::write(format!("results/{}.json", self.id), self.to_json().pretty());
+    }
+}
+
+/// Entry point used by the table/figure benches: runs `f` and emits every
+/// produced table. `cargo bench` passes `--bench`; ignore argv entirely.
+pub fn table<F: FnOnce() -> Vec<TableReport>>(f: F) {
+    let t0 = Instant::now();
+    let tables = f();
+    for t in &tables {
+        t.emit();
+    }
+    eprintln!("[bench] {} table(s) in {:.2}s", tables.len(), t0.elapsed().as_secs_f64());
+}
+
+/// Format helper: f64 with fixed decimals, used across the benches.
+pub fn fmt(x: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micro_bench_positive_time() {
+        let r = BenchRunner::quick().time("spin", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.samples_kept > 0);
+    }
+
+    #[test]
+    fn table_render_aligned() {
+        let mut t = TableReport::new("t0", "demo", &["model", "value"]);
+        t.row(vec!["MiniCPM-V 2.6".into(), "49".into()]);
+        t.row(vec!["IVL2-8B".into(), "19".into()]);
+        let s = t.render();
+        assert!(s.contains("MiniCPM-V 2.6"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = TableReport::new("t1", "demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = TableReport::new("t2", "demo", &["a"]);
+        t.row(vec!["1".into()]);
+        let j = t.to_json();
+        assert_eq!(j.get("id").unwrap().as_str(), Some("t2"));
+    }
+}

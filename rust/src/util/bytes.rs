@@ -1,0 +1,69 @@
+//! Byte-size arithmetic and pretty-printing. All memory accounting in the
+//! model/cache layers flows through these helpers so units stay explicit.
+
+/// Bytes in a kibibyte/mebibyte/gibibyte.
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+
+/// Convert GiB (float) to bytes.
+pub fn gib(x: f64) -> u64 {
+    (x * GIB as f64) as u64
+}
+
+/// Convert MiB (float) to bytes.
+pub fn mib(x: f64) -> u64 {
+    (x * MIB as f64) as u64
+}
+
+/// Bytes as fractional GiB.
+pub fn to_gib(bytes: u64) -> f64 {
+    bytes as f64 / GIB as f64
+}
+
+/// Human-readable byte count ("1.50 GiB", "320.0 MiB", "42 B").
+pub fn human(bytes: u64) -> String {
+    if bytes >= GIB {
+        format!("{:.2} GiB", bytes as f64 / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.1} MiB", bytes as f64 / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.1} KiB", bytes as f64 / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    assert!(b > 0);
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(gib(1.0), GIB);
+        assert_eq!(mib(2.0), 2 * MIB);
+        assert!((to_gib(GIB * 3 / 2) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn human_format() {
+        assert_eq!(human(42), "42 B");
+        assert_eq!(human(2 * KIB), "2.0 KiB");
+        assert_eq!(human(GIB + GIB / 2), "1.50 GiB");
+    }
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(0, 16), 0);
+        assert_eq!(ceil_div(1, 16), 1);
+        assert_eq!(ceil_div(16, 16), 1);
+        assert_eq!(ceil_div(17, 16), 2);
+    }
+}

@@ -1,0 +1,21 @@
+//! Zero-dependency substrates.
+//!
+//! The build environment has no access to crates.io beyond a small vendored
+//! set (no tokio / clap / serde / criterion / proptest), so the pieces a
+//! production serving system normally pulls in are implemented here from
+//! scratch: a PRNG with the distributions the workload generators need, a
+//! JSON writer/parser for metrics dumps and traces, a TOML-subset parser for
+//! config files, a CLI argument parser, a thread pool, descriptive
+//! statistics, a `log` backend, a mini-criterion bench harness and a small
+//! property-based testing framework.
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod toml;
+pub mod argp;
+pub mod threadpool;
+pub mod logging;
+pub mod bench;
+pub mod quickcheck;
+pub mod bytes;

@@ -1,0 +1,240 @@
+//! Small property-based testing framework (proptest is unavailable
+//! offline). Provides generators over a seeded [`Rng`], a `forall` runner
+//! that reports the failing seed, and greedy input shrinking for the
+//! common shapes (integers, vectors).
+//!
+//! Used for the coordinator invariants: block-manager conservation,
+//! scheduler fairness, router consistency, role-switch safety.
+
+use crate::util::rng::Rng;
+
+/// A generator of values of type `T` from randomness.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Rng) -> T;
+}
+
+impl<T, F: Fn(&mut Rng) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Rng) -> T {
+        self(rng)
+    }
+}
+
+/// Configuration of the property runner.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 256,
+            seed: 0xE9D_5E24E ^ 0x9E37_79B9_7F4A_7C15,
+            max_shrink_steps: 500,
+        }
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum CheckResult<T> {
+    Passed { cases: usize },
+    Failed { seed: u64, case: usize, input: T, message: String },
+}
+
+/// Run `prop` against `cases` random inputs; panics with the failing seed
+/// and (possibly shrunk) input on failure.
+pub fn forall<T, G, P>(gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    forall_cfg(Config::default(), gen, prop)
+}
+
+/// Like [`forall`] with explicit configuration.
+pub fn forall_cfg<T, G, P>(cfg: Config, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    match check(&cfg, &gen, &prop) {
+        CheckResult::Passed { .. } => {}
+        CheckResult::Failed { seed, case, input, message } => {
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: {input:?}\n  error: {message}"
+            );
+        }
+    }
+}
+
+/// Non-panicking property check.
+pub fn check<T, G, P>(cfg: &Config, gen: &G, prop: &P) -> CheckResult<T>
+where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen.generate(&mut rng);
+        if let Err(message) = prop(&input) {
+            return CheckResult::Failed {
+                seed: cfg.seed,
+                case,
+                input,
+                message,
+            };
+        }
+    }
+    CheckResult::Passed { cases: cfg.cases }
+}
+
+/// Shrink a failing `Vec<T>` input by greedily removing chunks while the
+/// property still fails. Returns the smallest failing input found.
+pub fn shrink_vec<T, P>(mut input: Vec<T>, prop: P, max_steps: usize) -> Vec<T>
+where
+    T: Clone,
+    P: Fn(&Vec<T>) -> Result<(), String>,
+{
+    debug_assert!(prop(&input).is_err(), "shrink_vec needs a failing input");
+    let mut steps = 0;
+    let mut chunk = (input.len() / 2).max(1);
+    while chunk >= 1 && steps < max_steps {
+        let mut progressed = false;
+        let mut start = 0;
+        while start < input.len() && steps < max_steps {
+            let end = (start + chunk).min(input.len());
+            let mut candidate = input.clone();
+            candidate.drain(start..end);
+            steps += 1;
+            if prop(&candidate).is_err() {
+                input = candidate;
+                progressed = true;
+                // do not advance: same start now covers new elements
+            } else {
+                start += chunk;
+            }
+        }
+        if !progressed {
+            if chunk == 1 {
+                break;
+            }
+            chunk /= 2;
+        }
+    }
+    input
+}
+
+/// Shrink a failing integer toward zero by bisection.
+pub fn shrink_u64<P>(mut input: u64, prop: P, max_steps: usize) -> u64
+where
+    P: Fn(u64) -> Result<(), String>,
+{
+    debug_assert!(prop(input).is_err());
+    let mut lo = 0u64;
+    let mut steps = 0;
+    while lo < input && steps < max_steps {
+        let mid = lo + (input - lo) / 2;
+        steps += 1;
+        if prop(mid).is_err() {
+            input = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    input
+}
+
+// -------- common generators --------
+
+/// Uniform usize in `[lo, hi]`.
+pub fn usize_in(lo: usize, hi: usize) -> impl Gen<usize> {
+    move |rng: &mut Rng| rng.range(lo, hi)
+}
+
+/// Uniform f64 in `[lo, hi)`.
+pub fn f64_in(lo: f64, hi: f64) -> impl Gen<f64> {
+    move |rng: &mut Rng| rng.uniform(lo, hi)
+}
+
+/// Vector with length in `[0, max_len]` of elements from `inner`.
+pub fn vec_of<T, G: Gen<T>>(inner: G, max_len: usize) -> impl Gen<Vec<T>> {
+    move |rng: &mut Rng| {
+        let len = rng.range(0, max_len);
+        (0..len).map(|_| inner.generate(rng)).collect()
+    }
+}
+
+/// Pair generator.
+pub fn pair<A, B>(ga: impl Gen<A>, gb: impl Gen<B>) -> impl Gen<(A, B)> {
+    move |rng: &mut Rng| (ga.generate(rng), gb.generate(rng))
+}
+
+/// One of the provided values.
+pub fn one_of<T: Clone>(choices: Vec<T>) -> impl Gen<T> {
+    move |rng: &mut Rng| rng.choose(&choices).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(usize_in(0, 100), |&x| {
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_detected() {
+        let cfg = Config { cases: 500, ..Default::default() };
+        let result = check(&cfg, &usize_in(0, 100), &|&x: &usize| {
+            if x < 90 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+        assert!(matches!(result, CheckResult::Failed { .. }));
+    }
+
+    #[test]
+    fn shrink_vec_finds_minimal() {
+        // Property: fails iff the vector contains a 7.
+        let prop = |v: &Vec<u64>| {
+            if v.contains(&7) {
+                Err("has 7".into())
+            } else {
+                Ok(())
+            }
+        };
+        let failing = vec![1, 2, 7, 3, 4, 7, 5];
+        let minimal = shrink_vec(failing, prop, 1000);
+        assert_eq!(minimal, vec![7]);
+    }
+
+    #[test]
+    fn shrink_u64_bisects() {
+        // Fails for x >= 37; minimal failing input is 37.
+        let prop = |x: u64| if x >= 37 { Err("ge 37".into()) } else { Ok(()) };
+        assert_eq!(shrink_u64(1_000_000, prop, 200), 37);
+    }
+
+    #[test]
+    fn generators_deterministic_per_seed() {
+        let g = vec_of(usize_in(0, 9), 16);
+        let mut r1 = Rng::new(99);
+        let mut r2 = Rng::new(99);
+        assert_eq!(g.generate(&mut r1), g.generate(&mut r2));
+    }
+}

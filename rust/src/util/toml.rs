@@ -1,0 +1,295 @@
+//! TOML-subset parser for configuration files.
+//!
+//! Supports the features our config format uses: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! bool / array values, `#` comments, and bare or quoted keys. No
+//! multi-line strings, dates or inline tables — `cluster.toml` does not
+//! need them, and rejecting them loudly beats mis-parsing.
+
+use std::collections::BTreeMap;
+
+/// A TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: dotted section path → (key → value).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Look up `key` in `section` ("" = top level).
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key)?.as_str()
+    }
+    pub fn get_i64(&self, section: &str, key: &str) -> Option<i64> {
+        self.get(section, key)?.as_i64()
+    }
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.as_f64()
+    }
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key)?.as_bool()
+    }
+
+    /// Section names that start with `prefix.` (for array-of-config idioms
+    /// like `[instance.0]`, `[instance.1]`).
+    pub fn sections_with_prefix(&self, prefix: &str) -> Vec<&str> {
+        let pfx = format!("{prefix}.");
+        self.sections
+            .keys()
+            .filter(|k| k.starts_with(&pfx))
+            .map(|k| k.as_str())
+            .collect()
+    }
+
+    /// Parse a document.
+    pub fn parse(input: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        doc.sections.entry(String::new()).or_default();
+        let mut current = String::new();
+        for (lineno, raw) in input.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| TomlError::at(lineno, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(TomlError::at(lineno, "empty section name"));
+                }
+                current = name.to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| TomlError::at(lineno, "expected 'key = value'"))?;
+            let key = line[..eq].trim().trim_matches('"').to_string();
+            if key.is_empty() {
+                return Err(TomlError::at(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            doc.sections
+                .entry(current.clone())
+                .or_default()
+                .insert(key, value);
+        }
+        Ok(doc)
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl TomlError {
+    fn at(line0: usize, msg: &str) -> TomlError {
+        TomlError {
+            line: line0 + 1,
+            msg: msg.to_string(),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<TomlValue, TomlError> {
+    if text.is_empty() {
+        return Err(TomlError::at(lineno, "missing value"));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let end = rest
+            .find('"')
+            .ok_or_else(|| TomlError::at(lineno, "unterminated string"))?;
+        if !rest[end + 1..].trim().is_empty() {
+            return Err(TomlError::at(lineno, "trailing characters after string"));
+        }
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if text.starts_with('[') {
+        let inner = text
+            .strip_prefix('[')
+            .unwrap()
+            .strip_suffix(']')
+            .ok_or_else(|| TomlError::at(lineno, "unterminated array"))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim(), lineno)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = text.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = text.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(TomlError::at(lineno, &format!("cannot parse value '{text}'")))
+}
+
+/// Split on commas not inside nested brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_doc() {
+        let doc = TomlDoc::parse(
+            r#"
+# cluster definition
+name = "a100-pod"
+
+[cluster]
+num_gpus = 8
+gpu_mem_gb = 82.0
+nvlink = true
+
+[stage.encode]
+instances = 5
+batch = [1, 2, 4]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("", "name"), Some("a100-pod"));
+        assert_eq!(doc.get_i64("cluster", "num_gpus"), Some(8));
+        assert_eq!(doc.get_f64("cluster", "gpu_mem_gb"), Some(82.0));
+        assert_eq!(doc.get_bool("cluster", "nvlink"), Some(true));
+        let arr = doc.get("stage.encode", "batch").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_i64(), Some(4));
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let doc = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.get_f64("", "x"), Some(3.0));
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let doc = TomlDoc::parse(r##"k = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.get_str("", "k"), Some("a#b"));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = TomlDoc::parse("m = [[1,2],[3,4]]").unwrap();
+        let outer = doc.get("", "m").unwrap().as_arr().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[1].as_arr().unwrap()[0].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn section_prefix_listing() {
+        let doc = TomlDoc::parse("[instance.0]\nrole=\"encode\"\n[instance.1]\nrole=\"decode\"\n").unwrap();
+        let secs = doc.sections_with_prefix("instance");
+        assert_eq!(secs, vec!["instance.0", "instance.1"]);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("x = ").is_err());
+        assert!(TomlDoc::parse("x = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = TomlDoc::parse("big = 1_000_000").unwrap();
+        assert_eq!(doc.get_i64("", "big"), Some(1_000_000));
+    }
+}

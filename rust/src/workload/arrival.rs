@@ -1,0 +1,51 @@
+//! Arrival-process generation (§4.1: "requests arrive following a Poisson
+//! process with rate λ").
+
+use crate::util::rng::Rng;
+
+/// `n` arrival times of a Poisson process with rate `rate` (req/s),
+/// starting after time 0. `rate == f64::INFINITY` yields all-at-once
+/// arrivals at t = 0 (the offline batch setting of Appendix A.3).
+pub fn poisson_arrivals(n: usize, rate: f64, rng: &mut Rng) -> Vec<f64> {
+    if rate.is_infinite() {
+        return vec![0.0; n];
+    }
+    assert!(rate > 0.0, "rate must be positive");
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exp(rate);
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_increasing() {
+        let mut rng = Rng::new(1);
+        let a = poisson_arrivals(100, 2.0, &mut rng);
+        assert_eq!(a.len(), 100);
+        for w in a.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn mean_rate_matches() {
+        let mut rng = Rng::new(2);
+        let a = poisson_arrivals(20_000, 4.0, &mut rng);
+        let empirical = a.len() as f64 / a.last().unwrap();
+        assert!((empirical - 4.0).abs() < 0.15, "rate {empirical}");
+    }
+
+    #[test]
+    fn offline_batch_all_at_zero() {
+        let mut rng = Rng::new(3);
+        let a = poisson_arrivals(10, f64::INFINITY, &mut rng);
+        assert!(a.iter().all(|&t| t == 0.0));
+    }
+}

@@ -1,0 +1,74 @@
+//! Audio workload (Appendix A.1): ultravox-v0_3 serving with 24 audio
+//! clips per request — an encode-intensive configuration. Each clip is one
+//! encoder "tile" producing `tokens_per_tile` LLM tokens; resolution is
+//! meaningless for audio, so a nominal value carries the clip count.
+
+use super::{build_request, Workload};
+use crate::core::request::Request;
+use crate::model::spec::LmmSpec;
+use crate::model::vision::Resolution;
+use crate::util::rng::Rng;
+
+/// Audio (ultravox) workload generator.
+#[derive(Debug, Clone)]
+pub struct AudioWorkload {
+    pub clips_per_request: u32,
+}
+
+impl Default for AudioWorkload {
+    fn default() -> Self {
+        AudioWorkload { clips_per_request: 24 }
+    }
+}
+
+impl Workload for AudioWorkload {
+    fn generate(&self, spec: &LmmSpec, n: usize, rate: f64, rng: &mut Rng) -> Vec<Request> {
+        let arrivals = super::arrival::poisson_arrivals(n, rate, rng);
+        arrivals
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let prompt = rng.range(10, 40) as u32;
+                let out = rng.range(30, 120) as u32;
+                // Audio clips: nominal 1-"pixel" resolution; clip count in
+                // `images`. AudioClip tiling yields 1 tile per clip.
+                build_request(
+                    spec,
+                    i as u64,
+                    t,
+                    prompt,
+                    self.clips_per_request,
+                    Resolution::new(1, 1),
+                    out,
+                )
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "audio"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelId;
+
+    #[test]
+    fn clip_counts_and_tokens() {
+        let spec = LmmSpec::get(ModelId::UltravoxV03);
+        let mut rng = Rng::new(6);
+        let reqs = AudioWorkload::default().generate(&spec, 10, 1.0, &mut rng);
+        for r in &reqs {
+            assert_eq!(r.images, 24);
+            assert_eq!(r.tiles_per_image, 1);
+            // 24 clips × tokens_per_tile each.
+            assert_eq!(
+                r.total_mm_tokens(),
+                24 * spec.vision.tokens_per_tile as u64
+            );
+            assert!((30..120).contains(&r.output_tokens));
+        }
+    }
+}

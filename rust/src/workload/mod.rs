@@ -1,0 +1,52 @@
+//! Workload generators for the paper's four evaluation datasets.
+//!
+//! The real datasets (NextQA, Video-MME, the audio corpus) are not
+//! redistributable here; per DESIGN.md's substitution table, the
+//! generators reproduce the *statistics the serving system observes* —
+//! token counts, frame/image counts, resolutions, output lengths and
+//! Poisson arrivals — using the figures the paper itself publishes.
+
+pub mod synthetic;
+pub mod nextqa;
+pub mod videomme;
+pub mod audio;
+pub mod arrival;
+
+pub use arrival::poisson_arrivals;
+pub use synthetic::SyntheticWorkload;
+
+use crate::core::request::Request;
+use crate::model::spec::LmmSpec;
+use crate::model::vision::{mm_tokens_for_image, tiles_for_image, Resolution};
+use crate::util::rng::Rng;
+
+/// Common builder: materialize a request for `spec`, caching tiling math.
+pub(crate) fn build_request(
+    spec: &LmmSpec,
+    id: u64,
+    arrival: f64,
+    prompt_tokens: u32,
+    images: u32,
+    resolution: Resolution,
+    output_tokens: u32,
+) -> Request {
+    Request {
+        id,
+        arrival,
+        prompt_tokens,
+        images,
+        resolution,
+        output_tokens,
+        tiles_per_image: tiles_for_image(spec, resolution),
+        mm_tokens_per_image: mm_tokens_for_image(spec, resolution) as u32,
+    }
+}
+
+/// A workload generator: yields a request list for a target model at a
+/// given arrival rate.
+pub trait Workload {
+    /// Generate `n` requests with Poisson(rate) arrivals.
+    fn generate(&self, spec: &LmmSpec, n: usize, rate: f64, rng: &mut Rng) -> Vec<Request>;
+    /// Short name for reports.
+    fn name(&self) -> &'static str;
+}

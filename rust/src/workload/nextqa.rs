@@ -1,0 +1,92 @@
+//! NextQA-shaped workload (§4.1): video question answering. The paper's
+//! sample of 100 requests had text prompts of 4–21 tokens (mean 11.42),
+//! outputs of 1–7 tokens (mean 2.75), and 8 uniformly-sampled frames per
+//! video at typical NextQA frame resolution (~640×480).
+
+use super::{build_request, Workload};
+use crate::core::request::Request;
+use crate::model::spec::LmmSpec;
+use crate::model::vision::Resolution;
+use crate::util::rng::Rng;
+
+/// NextQA-like trace generator.
+#[derive(Debug, Clone)]
+pub struct NextQaWorkload {
+    pub frames: u32,
+}
+
+impl Default for NextQaWorkload {
+    fn default() -> Self {
+        NextQaWorkload { frames: 8 }
+    }
+}
+
+/// Draw from a discrete triangular-ish distribution on `[lo, hi]` with the
+/// given mean by mixture of two uniforms (simple moment matching).
+fn bounded_mean_draw(rng: &mut Rng, lo: u32, hi: u32, mean: f64) -> u32 {
+    // Mix U[lo, m] and U[m, hi] with weights that hit the target mean.
+    let m = mean.round() as u32;
+    let lo_mean = (lo + m) as f64 / 2.0;
+    let hi_mean = (m + hi) as f64 / 2.0;
+    let w = if hi_mean > lo_mean {
+        ((mean - lo_mean) / (hi_mean - lo_mean)).clamp(0.0, 1.0)
+    } else {
+        0.5
+    };
+    if rng.bool(w) {
+        rng.range(m as usize, hi as usize) as u32
+    } else {
+        rng.range(lo as usize, m as usize) as u32
+    }
+}
+
+impl Workload for NextQaWorkload {
+    fn generate(&self, spec: &LmmSpec, n: usize, rate: f64, rng: &mut Rng) -> Vec<Request> {
+        let arrivals = super::arrival::poisson_arrivals(n, rate, rng);
+        arrivals
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let prompt = bounded_mean_draw(rng, 4, 21, 11.42);
+                let out = bounded_mean_draw(rng, 1, 7, 2.75);
+                build_request(
+                    spec,
+                    i as u64,
+                    t,
+                    prompt,
+                    self.frames,
+                    Resolution::new(640, 480),
+                    out,
+                )
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "nextqa"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelId;
+
+    #[test]
+    fn statistics_match_paper() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut rng = Rng::new(3);
+        let reqs = NextQaWorkload::default().generate(&spec, 5000, 1.0, &mut rng);
+        let mean_prompt: f64 =
+            reqs.iter().map(|r| r.prompt_tokens as f64).sum::<f64>() / reqs.len() as f64;
+        let mean_out: f64 =
+            reqs.iter().map(|r| r.output_tokens as f64).sum::<f64>() / reqs.len() as f64;
+        assert!((mean_prompt - 11.42).abs() < 1.0, "prompt mean {mean_prompt}");
+        assert!((mean_out - 2.75).abs() < 0.5, "output mean {mean_out}");
+        for r in &reqs {
+            assert!((4..=21).contains(&r.prompt_tokens));
+            assert!((1..=7).contains(&r.output_tokens));
+            assert_eq!(r.images, 8);
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! The configurable synthetic workload (§4: prompt length, images per
+//! request, resolution, output length all parameterized; defaults follow
+//! §4.1 — 22-token prompts, 4032×3024 images, 10 output tokens).
+
+use super::{build_request, Workload};
+use crate::core::request::Request;
+use crate::model::spec::LmmSpec;
+use crate::model::vision::Resolution;
+use crate::util::rng::Rng;
+
+/// Synthetic multimodal workload.
+#[derive(Debug, Clone)]
+pub struct SyntheticWorkload {
+    pub prompt_tokens: u32,
+    pub images_per_request: u32,
+    pub resolution: Resolution,
+    pub output_tokens: u32,
+    /// Optional jitter: when > 0, output length is uniform in
+    /// `[output_tokens, output_tokens + output_jitter]`.
+    pub output_jitter: u32,
+}
+
+impl Default for SyntheticWorkload {
+    fn default() -> Self {
+        SyntheticWorkload {
+            prompt_tokens: 22,
+            images_per_request: 2,
+            resolution: Resolution::four_k(),
+            output_tokens: 10,
+            output_jitter: 0,
+        }
+    }
+}
+
+impl SyntheticWorkload {
+    pub fn new(images_per_request: u32, output_tokens: u32) -> SyntheticWorkload {
+        SyntheticWorkload {
+            images_per_request,
+            output_tokens,
+            ..Default::default()
+        }
+    }
+}
+
+impl Workload for SyntheticWorkload {
+    fn generate(&self, spec: &LmmSpec, n: usize, rate: f64, rng: &mut Rng) -> Vec<Request> {
+        let arrivals = super::arrival::poisson_arrivals(n, rate, rng);
+        arrivals
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let out = if self.output_jitter > 0 {
+                    self.output_tokens + rng.below(self.output_jitter as u64 + 1) as u32
+                } else {
+                    self.output_tokens
+                };
+                build_request(
+                    spec,
+                    i as u64,
+                    t,
+                    self.prompt_tokens,
+                    self.images_per_request,
+                    self.resolution,
+                    out.max(1),
+                )
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "synthetic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelId;
+
+    #[test]
+    fn generates_paper_defaults() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut rng = Rng::new(1);
+        let w = SyntheticWorkload::new(4, 10);
+        let reqs = w.generate(&spec, 100, 1.0, &mut rng);
+        assert_eq!(reqs.len(), 100);
+        for r in &reqs {
+            assert_eq!(r.prompt_tokens, 22);
+            assert_eq!(r.images, 4);
+            assert_eq!(r.output_tokens, 10);
+            assert_eq!(r.tiles_per_image, 10); // MiniCPM @ 4K
+            assert_eq!(r.mm_tokens_per_image, 640);
+        }
+    }
+
+    #[test]
+    fn jitter_varies_outputs() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut rng = Rng::new(2);
+        let mut w = SyntheticWorkload::new(1, 50);
+        w.output_jitter = 100;
+        let reqs = w.generate(&spec, 200, 1.0, &mut rng);
+        let min = reqs.iter().map(|r| r.output_tokens).min().unwrap();
+        let max = reqs.iter().map(|r| r.output_tokens).max().unwrap();
+        assert!(min >= 50 && max <= 150 && max > min);
+    }
+}

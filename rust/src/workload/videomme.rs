@@ -1,0 +1,85 @@
+//! Video-MME-shaped workload (§4.1): multiple-choice video QA across short
+//! / medium / long videos. Following the paper's setup, each video is
+//! represented by a configurable number of uniformly sampled frames (64 by
+//! default — the MiniCPM leaderboard configuration; Table 1 sweeps
+//! {8, 16, 32, 64}). Multiple-choice answers are short (1–4 tokens);
+//! prompts carry the question plus options (~40–120 tokens).
+
+use super::{build_request, Workload};
+use crate::core::request::Request;
+use crate::model::spec::LmmSpec;
+use crate::model::vision::Resolution;
+use crate::util::rng::Rng;
+
+/// Video-MME-like trace generator.
+#[derive(Debug, Clone)]
+pub struct VideoMmeWorkload {
+    pub frames: u32,
+}
+
+impl Default for VideoMmeWorkload {
+    fn default() -> Self {
+        VideoMmeWorkload { frames: 64 }
+    }
+}
+
+impl VideoMmeWorkload {
+    pub fn with_frames(frames: u32) -> VideoMmeWorkload {
+        VideoMmeWorkload { frames }
+    }
+}
+
+impl Workload for VideoMmeWorkload {
+    fn generate(&self, spec: &LmmSpec, n: usize, rate: f64, rng: &mut Rng) -> Vec<Request> {
+        let arrivals = super::arrival::poisson_arrivals(n, rate, rng);
+        arrivals
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let prompt = rng.range(40, 120) as u32;
+                let out = rng.range(1, 4) as u32;
+                // Video frames decode at sub-HD resolution.
+                build_request(
+                    spec,
+                    i as u64,
+                    t,
+                    prompt,
+                    self.frames,
+                    Resolution::new(480, 360),
+                    out,
+                )
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "video-mme"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelId;
+
+    #[test]
+    fn frame_sweep_configs() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut rng = Rng::new(4);
+        for frames in [8u32, 16, 32, 64] {
+            let reqs = VideoMmeWorkload::with_frames(frames).generate(&spec, 10, 1.0, &mut rng);
+            assert!(reqs.iter().all(|r| r.images == frames));
+        }
+    }
+
+    #[test]
+    fn frames_are_single_tile_for_minicpm() {
+        // 480×360 < 448² pixels → 1 slice per frame for MiniCPM.
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut rng = Rng::new(5);
+        let reqs = VideoMmeWorkload::default().generate(&spec, 5, 1.0, &mut rng);
+        assert!(reqs.iter().all(|r| r.tiles_per_image == 1));
+        // 64 frames × 64 tokens = 4096 MM tokens per request.
+        assert_eq!(reqs[0].total_mm_tokens(), 64 * 64);
+    }
+}

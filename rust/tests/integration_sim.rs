@@ -1,0 +1,173 @@
+//! Cross-module integration over the simulator: workload generators →
+//! simulator → metrics → goodput/optimizer, plus coordinator-invariant
+//! property tests at the system level.
+
+use epdserve::core::config::EpdConfig;
+use epdserve::core::slo::{Slo, SloTable};
+use epdserve::core::topology::Topology;
+use epdserve::metrics::goodput::find_goodput;
+use epdserve::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use epdserve::sim::engine::{SimConfig, Simulator};
+use epdserve::util::quickcheck::{forall_cfg, pair, usize_in, Config};
+use epdserve::util::rng::Rng;
+use epdserve::workload::nextqa::NextQaWorkload;
+use epdserve::workload::synthetic::SyntheticWorkload;
+use epdserve::workload::Workload;
+
+fn epd_sim(spec: &LmmSpec, topo: Topology) -> SimConfig {
+    SimConfig::new(
+        spec.clone(),
+        DeviceSpec::a100(),
+        EpdConfig::epd(topo, 1, 1, 128),
+    )
+}
+
+/// Every request injected into any deployment mode either finishes with a
+/// consistent timeline or is explicitly rejected — across random workload
+/// shapes (the system-level liveness/conservation property).
+#[test]
+fn no_request_lost_under_random_workloads() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    forall_cfg(
+        Config { cases: 40, seed: 1234, max_shrink_steps: 0 },
+        pair(usize_in(1, 8), usize_in(1, 60)),
+        |&(images, out)| {
+            let w = SyntheticWorkload::new(images as u32, out as u32);
+            let mut rng = Rng::new(images as u64 * 31 + out as u64);
+            let reqs = w.generate(&spec, 25, 1.0, &mut rng);
+            for epd in [
+                EpdConfig::epd(Topology::new(2, 1, 1), 1, 1, 64),
+                EpdConfig::distserve(3, 1, 1, 64),
+                EpdConfig::aggregated(4, 32),
+            ] {
+                let cfg = SimConfig::new(spec.clone(), DeviceSpec::a100(), epd);
+                let outc = Simulator::run(&cfg, &reqs);
+                let done = outc.finished().count() as u32 + outc.rejected;
+                if done != 25 {
+                    return Err(format!(
+                        "{:?}: {done}/25 accounted (images={images} out={out})",
+                        cfg.epd.mode
+                    ));
+                }
+                for t in outc.finished() {
+                    if !(t.first_token >= t.arrival && t.finish >= t.first_token) {
+                        return Err(format!("inconsistent timeline {t:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Goodput search composes with the simulator and behaves monotonically:
+/// a 2x bigger cluster has >= goodput.
+#[test]
+fn goodput_scales_with_cluster() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    let slo = SloTable::synthetic(ModelId::MiniCpmV26, 2).unwrap();
+    let w = SyntheticWorkload::new(2, 10);
+    let measure = |topo: Topology| {
+        let cfg = epd_sim(&spec, topo);
+        find_goodput(
+            |rate| {
+                let mut rng = Rng::new(5);
+                let reqs = w.generate(&spec, 60, rate, &mut rng);
+                Simulator::run(&cfg, &reqs).slo_attainment(slo)
+            },
+            0.05,
+            0.9,
+            0.05,
+        )
+        .goodput
+    };
+    let small = measure(Topology::new(2, 1, 1));
+    let large = measure(Topology::new(5, 2, 1));
+    assert!(large >= small, "large {large} vs small {small}");
+    assert!(small > 0.0);
+}
+
+/// NextQA trace: EPD sustains the paper's SLO at moderate rates where
+/// baselines collapse (the Figure 7 integration path).
+#[test]
+fn nextqa_end_to_end() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    let slo = SloTable::nextqa();
+    let w = NextQaWorkload::default();
+    let mut rng = Rng::new(11);
+    let reqs = w.generate(&spec, 80, 1.0, &mut rng);
+
+    let epd = Simulator::run(&epd_sim(&spec, Topology::new(5, 2, 1)), &reqs);
+    let ds_cfg = SimConfig::new(
+        spec.clone(),
+        DeviceSpec::a100(),
+        EpdConfig::distserve(7, 1, 1, 128),
+    );
+    let ds = Simulator::run(&ds_cfg, &reqs);
+    assert!(epd.slo_attainment(slo) >= 0.9, "EPD {}", epd.slo_attainment(slo));
+    assert!(
+        epd.slo_attainment(slo) >= ds.slo_attainment(slo),
+        "EPD {} vs DS {}",
+        epd.slo_attainment(slo),
+        ds.slo_attainment(slo)
+    );
+}
+
+/// SJF ordering reduces mean TTFT vs FCFS under mixed job sizes (the
+/// Appendix D scheduling knob actually does something).
+#[test]
+fn sjf_beats_fcfs_on_mixed_sizes() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    // Mixed image counts → mixed encode costs.
+    let mut rng = Rng::new(3);
+    let mut reqs = SyntheticWorkload::new(1, 10).generate(&spec, 80, 1.2, &mut rng);
+    let mut rng2 = Rng::new(4);
+    for r in reqs.iter_mut() {
+        r.images = *rng2.choose(&[1u32, 1, 1, 8]);
+    }
+
+    let run = |queue: epdserve::core::config::QueuePolicy| {
+        let mut epd = EpdConfig::epd(Topology::new(2, 1, 1), 1, 1, 128);
+        epd.sched_encode.queue = queue;
+        epd.sched_prefill.queue = queue;
+        let cfg = SimConfig::new(spec.clone(), DeviceSpec::a100(), epd);
+        Simulator::run(&cfg, &reqs).mean_ttft()
+    };
+    let fcfs = run(epdserve::core::config::QueuePolicy::Fcfs);
+    let sjf = run(epdserve::core::config::QueuePolicy::Sjf);
+    assert!(sjf <= fcfs * 1.02, "sjf {sjf} vs fcfs {fcfs}");
+}
+
+/// Role switching never loses requests even under aggressive policies.
+#[test]
+fn role_switching_conserves_requests() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    let w = SyntheticWorkload::new(2, 100);
+    let mut rng = Rng::new(17);
+    let reqs = w.generate(&spec, 60, 3.0, &mut rng);
+    let mut epd = EpdConfig::epd(Topology::new(4, 2, 2), 1, 1, 1);
+    epd.role_switching = true;
+    let mut cfg = SimConfig::new(spec.clone(), DeviceSpec::a100(), epd);
+    cfg.switch_policy.cooldown = 1.0;
+    cfg.switch_policy.min_pressure = 0.2;
+    cfg.switch_policy.imbalance_ratio = 2.0;
+    let out = Simulator::run(&cfg, &reqs);
+    assert_eq!(out.finished().count() as u32 + out.rejected, 60);
+    assert!(out.role_switches > 0, "aggressive policy should switch");
+}
+
+/// Low-rate attainment with tight-but-feasible SLOs is deterministic and
+/// repeatable across runs (replay guarantee for the benches).
+#[test]
+fn deterministic_replay() {
+    let spec = LmmSpec::get(ModelId::InternVl2_8b);
+    let w = SyntheticWorkload::new(4, 10);
+    let run = || {
+        let mut rng = Rng::new(99);
+        let reqs = w.generate(&spec, 50, 0.05, &mut rng);
+        let cfg = epd_sim(&spec, Topology::new(5, 2, 1));
+        let out = Simulator::run(&cfg, &reqs);
+        (out.mean_ttft(), out.mean_tpot(), out.slo_attainment(Slo::new(2.4, 0.06)))
+    };
+    assert_eq!(run(), run());
+}

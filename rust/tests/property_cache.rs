@@ -1,0 +1,216 @@
+//! Property-based invariant tests over the paged cache managers — the
+//! state the EP/PD migrations and the decode loop depend on. Uses the
+//! built-in quickcheck framework with deterministic seeds.
+
+use epdserve::cache::block::BlockPool;
+use epdserve::cache::kv_block_manager::KvBlockManager;
+use epdserve::cache::mm_block_manager::MmBlockManager;
+use epdserve::util::quickcheck::{forall_cfg, vec_of, usize_in, Config};
+use epdserve::util::rng::Rng;
+
+/// A random op sequence against the KV manager never violates block
+/// conservation, and every admitted request's tokens are tracked exactly.
+#[test]
+fn kv_manager_conservation_under_random_ops() {
+    forall_cfg(
+        Config { cases: 60, seed: 2024, max_shrink_steps: 0 },
+        vec_of(usize_in(0, 99), 400),
+        |ops| {
+            let mut kv = KvBlockManager::new(256, 16, 64);
+            let mut live: Vec<(u64, u64)> = Vec::new(); // (id, tokens)
+            let mut next_id = 0u64;
+            let mut rng = Rng::new(7);
+            for &op in ops {
+                match op % 3 {
+                    0 => {
+                        // Admit a random-size sequence.
+                        next_id += 1;
+                        let tokens = 1 + rng.below(200);
+                        if kv.admit(next_id, tokens) {
+                            live.push((next_id, tokens));
+                        }
+                    }
+                    1 => {
+                        // Append to a random live sequence.
+                        if !live.is_empty() {
+                            let i = rng.below(live.len() as u64) as usize;
+                            if kv.append_token(live[i].0) {
+                                live[i].1 += 1;
+                            }
+                        }
+                    }
+                    _ => {
+                        // Release a random live sequence.
+                        if !live.is_empty() {
+                            let i = rng.below(live.len() as u64) as usize;
+                            let (id, _) = live.swap_remove(i);
+                            kv.release(id);
+                        }
+                    }
+                }
+                // Invariants after EVERY op.
+                let pool = kv.pool();
+                if pool.free_blocks() + pool.allocated_blocks() != 256 {
+                    return Err("block conservation violated".into());
+                }
+                if kv.active_requests() != live.len() {
+                    return Err(format!(
+                        "tracking mismatch: {} vs {}",
+                        kv.active_requests(),
+                        live.len()
+                    ));
+                }
+                for &(id, tokens) in &live {
+                    match kv.tokens_of(id) {
+                        Some(t) if t == tokens => {}
+                        other => return Err(format!("tokens_of({id}) = {other:?}, want {tokens}")),
+                    }
+                    // Block count must exactly cover the tokens.
+                    let blocks = kv.blocks_of(id).unwrap().len() as u64;
+                    let need = tokens.div_ceil(16);
+                    if blocks != need {
+                        return Err(format!("req {id}: {blocks} blocks for {tokens} tokens"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Releasing everything always returns the pool to full capacity, no
+/// matter the interleaving (the role-switch `clear()` safety property).
+#[test]
+fn kv_clear_always_full_recovery() {
+    forall_cfg(
+        Config { cases: 80, seed: 31, max_shrink_steps: 0 },
+        vec_of(usize_in(1, 300), 30),
+        |sizes| {
+            let mut kv = KvBlockManager::new(128, 16, 2048);
+            for (i, &tokens) in sizes.iter().enumerate() {
+                let _ = kv.admit(i as u64, tokens as u64);
+            }
+            kv.clear();
+            if kv.pool().free_blocks() != 128 {
+                return Err(format!("leaked: {} free of 128", kv.pool().free_blocks()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// MM cache: any reserve/shard/merge/release interleaving preserves
+/// conservation and the shard protocol (never Ready before all shards).
+#[test]
+fn mm_manager_shard_protocol() {
+    use epdserve::cache::mm_block_manager::MmEntryState;
+    forall_cfg(
+        Config { cases: 60, seed: 99, max_shrink_steps: 0 },
+        vec_of(usize_in(1, 6), 40),
+        |shard_counts| {
+            let mut mm = MmBlockManager::new(512, 64);
+            let mut pending: Vec<(u64, u32, u32)> = Vec::new(); // (id, total, done)
+            for (i, &shards) in shard_counts.iter().enumerate() {
+                let id = i as u64;
+                let tokens = shards as u64 * 160;
+                if !mm.reserve(id, tokens, shards as u32) {
+                    continue;
+                }
+                pending.push((id, shards as u32, 0));
+                // Drive a random number of shards to completion now.
+                let p = pending.last_mut().unwrap();
+                while p.2 < p.1 {
+                    let state = mm.shard_done(id);
+                    p.2 += 1;
+                    let expect_ready = p.2 == p.1;
+                    match (expect_ready, state) {
+                        (true, MmEntryState::Ready) => {}
+                        (false, MmEntryState::Filling) => {}
+                        (e, s) => return Err(format!("req {id}: state {s:?}, ready={e}")),
+                    }
+                }
+                mm.merge(id);
+                if mm.state_of(id) != Some(MmEntryState::Merged) {
+                    return Err("merge did not stick".into());
+                }
+                mm.release(id);
+                pending.pop();
+            }
+            if mm.pool().free_blocks() != 512 {
+                return Err(format!("leaked: {}", mm.pool().free_blocks()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Pool-level: alloc_n atomicity under arbitrary demand patterns — a
+/// failed group allocation must leave the pool untouched.
+#[test]
+fn pool_alloc_n_atomicity() {
+    forall_cfg(
+        Config { cases: 100, seed: 5, max_shrink_steps: 0 },
+        vec_of(usize_in(1, 40), 60),
+        |demands| {
+            let mut pool = BlockPool::new(100, 16);
+            let mut held: Vec<Vec<u32>> = Vec::new();
+            for &n in demands {
+                let free_before = pool.free_blocks();
+                match pool.alloc_n(n as u32) {
+                    Some(blocks) => {
+                        if blocks.len() != n {
+                            return Err("short allocation".into());
+                        }
+                        held.push(blocks);
+                    }
+                    None => {
+                        if pool.free_blocks() != free_before {
+                            return Err("failed alloc_n mutated the pool".into());
+                        }
+                        // Free the oldest group to make progress.
+                        if let Some(blocks) = held.first().cloned() {
+                            held.remove(0);
+                            pool.free_all(&blocks);
+                        }
+                    }
+                }
+            }
+            let held_total: u32 = held.iter().map(|b| b.len() as u32).sum();
+            if pool.allocated_blocks() != held_total {
+                return Err("accounting mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Cross-manager migration property: moving a request out of one KV
+/// manager and into another preserves token counts and frees the source.
+#[test]
+fn kv_migration_roundtrip_property() {
+    forall_cfg(
+        Config { cases: 100, seed: 13, max_shrink_steps: 0 },
+        usize_in(1, 2000),
+        |&tokens| {
+            let mut src = KvBlockManager::new(256, 16, 2048);
+            let mut dst = KvBlockManager::new(256, 16, 2048);
+            if !src.admit(1, tokens as u64) {
+                return Ok(()); // larger than pool: nothing to check
+            }
+            let moved = src.migrate_out(1).ok_or("migrate_out failed")?;
+            if moved != tokens as u64 {
+                return Err(format!("moved {moved}, want {tokens}"));
+            }
+            if src.pool().free_blocks() != 256 {
+                return Err("source not freed".into());
+            }
+            if !dst.migrate_in(1, moved) {
+                return Err("migrate_in failed".into());
+            }
+            if dst.tokens_of(1) != Some(tokens as u64) {
+                return Err("destination token mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,18 @@
+# Convenience targets; see README.md.
+
+.PHONY: artifacts build test bench check
+
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+check:
+	scripts/check.sh

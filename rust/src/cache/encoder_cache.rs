@@ -1,0 +1,443 @@
+//! Cross-request, content-addressed encoder-output cache.
+//!
+//! The §3.2.1 MM cache ([`super::MmBlockManager`]) is *per-request*: its
+//! blocks are freed the moment the EP transfer is confirmed, so two
+//! requests carrying the same image (hot thumbnails, shared video frames,
+//! few-shot prompt templates) pay the full preprocess+encode cost twice.
+//! This module adds the layer follow-up systems (EPD-Serve's flexible
+//! encoder-cache transfer, ElasticMM's elastic multimodal parallelism)
+//! identify as the next TTFT/encode-capacity win: an LRU cache keyed by a
+//! *content hash* of the media payload, holding the encoder's output
+//! tokens across requests.
+//!
+//! Design:
+//!
+//! - Entries are backed by ref-counted [`BlockPool`] blocks, so capacity
+//!   accounting matches the paged MM cache it sits beside.
+//! - A hit **pins** the entry (refcount +1) for the duration of its use —
+//!   pinned entries are never evicted (enforced by a property test in
+//!   `tests/property_cache.rs`). Consumers unpin after the EP transfer is
+//!   confirmed (simulator) or after the prefill job is enqueued (engine),
+//!   and on request abort.
+//! - A miss encodes as usual, then **populates** the cache at transfer
+//!   confirmation instead of freeing, evicting least-recently-used
+//!   *unpinned* entries to make room.
+//! - The engine variant stores the actual MM token vector as a shared
+//!   payload ([`std::sync::Arc`]); the simulator stores accounting only.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::block::{BlockId, BlockPool};
+
+/// Content address of a media item: a 64-bit digest of its bytes.
+pub type ContentHash = u64;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over raw bytes — the admission-time content hash. Not
+/// cryptographic: collisions only cause a (deterministic) wrong-token
+/// reuse in this reproduction, never memory unsafety; a production system
+/// would use a 128/256-bit digest here.
+pub fn content_hash(bytes: &[u8]) -> ContentHash {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a over a sequence of words (media ids, seeds, image counts).
+pub fn content_hash_words(words: &[u64]) -> ContentHash {
+    let mut h = FNV_OFFSET;
+    for &w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Hit/miss/eviction counters, exported into [`crate::sim::SimOutcome`]
+/// and the engine's `/metrics` report.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EncoderCacheStats {
+    /// Lookups that found a cached entry.
+    pub hits: u64,
+    /// Lookups that found nothing.
+    pub misses: u64,
+    /// Entries admitted (first insertion of a hash).
+    pub insertions: u64,
+    /// Entries evicted to make room.
+    pub evictions: u64,
+    /// Insertions rejected because unpinned capacity was insufficient.
+    pub rejected: u64,
+}
+
+impl EncoderCacheStats {
+    /// Hits over lookups, in [0, 1]; 0 when no lookups happened.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+#[derive(Debug, Clone)]
+struct CacheEntry {
+    blocks: Vec<BlockId>,
+    tokens: u64,
+    /// Ref count: number of in-flight requests using this entry. Only
+    /// `pins == 0` entries are eviction candidates.
+    pins: u32,
+    /// LRU clock value at last touch.
+    last_used: u64,
+    /// Engine side: the actual MM token vector. `None` in the simulator.
+    payload: Option<Arc<Vec<f32>>>,
+}
+
+/// Content-addressed LRU over encoder outputs with ref-counted pinning.
+///
+/// All operations are O(entries) worst case on the eviction scan and O(1)
+/// amortized otherwise; the cache sits off the per-token hot path (it is
+/// touched once per request, not per decode step).
+#[derive(Debug, Clone)]
+pub struct EncoderCache {
+    pool: BlockPool,
+    entries: HashMap<ContentHash, CacheEntry>,
+    /// Monotonic LRU clock (bumped on every touch).
+    tick: u64,
+    stats: EncoderCacheStats,
+}
+
+impl EncoderCache {
+    /// Cache over `num_blocks` blocks of `block_tokens` tokens each.
+    pub fn new(num_blocks: u32, block_tokens: u32) -> EncoderCache {
+        EncoderCache {
+            pool: BlockPool::new(num_blocks, block_tokens),
+            entries: HashMap::new(),
+            tick: 0,
+            stats: EncoderCacheStats::default(),
+        }
+    }
+
+    /// Cache sized to hold `capacity_tokens` MM tokens. A capacity of 0
+    /// disables the cache (every lookup misses, every insert is rejected).
+    pub fn with_capacity_tokens(capacity_tokens: u64, block_tokens: u32) -> EncoderCache {
+        let bt = block_tokens.max(1);
+        let blocks = capacity_tokens.div_ceil(bt as u64);
+        EncoderCache::new(blocks.min(u32::MAX as u64) as u32, bt)
+    }
+
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
+    }
+
+    pub fn stats(&self) -> EncoderCacheStats {
+        self.stats
+    }
+
+    /// Cached entries (pinned + unpinned).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, h: ContentHash) -> bool {
+        self.entries.contains_key(&h)
+    }
+
+    /// Ref count of an entry, if cached.
+    pub fn pins_of(&self, h: ContentHash) -> Option<u32> {
+        self.entries.get(&h).map(|e| e.pins)
+    }
+
+    pub fn tokens_of(&self, h: ContentHash) -> Option<u64> {
+        self.entries.get(&h).map(|e| e.tokens)
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.pool.utilization()
+    }
+
+    /// Look up `h`; on a hit, pin the entry (refcount +1), bump its LRU
+    /// position and return its token count. Counts a hit or miss.
+    ///
+    /// Every successful `lookup_pin` must be balanced by exactly one
+    /// [`Self::unpin`] once the tokens have been consumed (EP transfer
+    /// confirmed / prefill job enqueued) — including when the request
+    /// aborts before consuming them.
+    pub fn lookup_pin(&mut self, h: ContentHash) -> Option<u64> {
+        self.tick += 1;
+        match self.entries.get_mut(&h) {
+            Some(e) => {
+                e.pins += 1;
+                e.last_used = self.tick;
+                self.stats.hits += 1;
+                Some(e.tokens)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Shared payload of a cached entry (engine side).
+    pub fn payload(&self, h: ContentHash) -> Option<Arc<Vec<f32>>> {
+        self.entries.get(&h).and_then(|e| e.payload.clone())
+    }
+
+    /// Insert `tokens` MM tokens under `h`, pinned (refcount 1), evicting
+    /// least-recently-used unpinned entries as needed. Returns false (and
+    /// changes nothing) when even full eviction cannot make room.
+    ///
+    /// If `h` is already cached (two identical requests racing through the
+    /// miss path), the existing entry is pinned one more time instead —
+    /// the caller's balancing [`Self::unpin`] stays correct either way.
+    pub fn insert_pinned(
+        &mut self,
+        h: ContentHash,
+        tokens: u64,
+        payload: Option<Arc<Vec<f32>>>,
+    ) -> bool {
+        self.tick += 1;
+        if let Some(e) = self.entries.get_mut(&h) {
+            e.pins += 1;
+            e.last_used = self.tick;
+            return true;
+        }
+        let need = self.pool.blocks_for_tokens(tokens);
+        if !self.make_room(need) {
+            self.stats.rejected += 1;
+            return false;
+        }
+        let blocks = self.pool.alloc_n(need).expect("make_room guaranteed space");
+        self.entries.insert(
+            h,
+            CacheEntry { blocks, tokens, pins: 1, last_used: self.tick, payload },
+        );
+        self.stats.insertions += 1;
+        true
+    }
+
+    /// Release one reference to `h` (EP transfer confirmed, prefill
+    /// consumed the tokens, or the request aborted). The entry stays
+    /// cached; at `pins == 0` it becomes evictable.
+    ///
+    /// # Panics
+    /// On unknown hashes or a refcount underflow — both are caller bugs
+    /// (an unpin with no matching `lookup_pin`/`insert_pinned`) and must
+    /// not be absorbed silently.
+    pub fn unpin(&mut self, h: ContentHash) {
+        let e = self
+            .entries
+            .get_mut(&h)
+            .unwrap_or_else(|| panic!("unpin of uncached hash {h:#x}"));
+        assert!(e.pins > 0, "refcount underflow for hash {h:#x}");
+        e.pins -= 1;
+    }
+
+    /// Evict unpinned LRU entries until `need` blocks are free. Returns
+    /// false when pinned entries make that impossible.
+    fn make_room(&mut self, need: u32) -> bool {
+        if need > self.pool.num_blocks() {
+            return false;
+        }
+        while !self.pool.can_alloc(need) {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| e.pins == 0)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&h, _)| h);
+            match victim {
+                Some(h) => {
+                    let e = self.entries.remove(&h).unwrap();
+                    self.pool.free_all(&e.blocks);
+                    self.stats.evictions += 1;
+                }
+                None => return false, // everything left is pinned
+            }
+        }
+        true
+    }
+
+    /// Drop every unpinned entry (memory-pressure reset). Pinned entries
+    /// stay — they back in-flight requests.
+    pub fn clear_unpinned(&mut self) {
+        let victims: Vec<ContentHash> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.pins == 0)
+            .map(|(&h, _)| h)
+            .collect();
+        for h in victims {
+            let e = self.entries.remove(&h).unwrap();
+            self.pool.free_all(&e.blocks);
+            self.stats.evictions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_insert_then_hit() {
+        let mut c = EncoderCache::new(16, 64);
+        let h = content_hash(b"image-bytes");
+        assert_eq!(c.lookup_pin(h), None);
+        assert!(c.insert_pinned(h, 640, None)); // 10 blocks
+        c.unpin(h); // transfer confirmed
+        assert_eq!(c.lookup_pin(h), Some(640));
+        assert_eq!(c.pins_of(h), Some(1));
+        c.unpin(h);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 1, 1));
+    }
+
+    #[test]
+    fn lru_eviction_prefers_oldest_unpinned() {
+        let mut c = EncoderCache::new(4, 64); // room for 4 one-block entries
+        for i in 0..4u64 {
+            assert!(c.insert_pinned(i, 64, None));
+            c.unpin(i);
+        }
+        // Touch entry 0 so 1 becomes the LRU victim.
+        assert_eq!(c.lookup_pin(0), Some(64));
+        c.unpin(0);
+        assert!(c.insert_pinned(99, 64, None));
+        assert!(c.contains(0), "recently used survives");
+        assert!(!c.contains(1), "oldest unpinned evicted");
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn pinned_entries_never_evicted() {
+        let mut c = EncoderCache::new(2, 64);
+        assert!(c.insert_pinned(1, 64, None)); // stays pinned
+        assert!(c.insert_pinned(2, 64, None));
+        c.unpin(2);
+        // Needs both blocks; only entry 2 is evictable → rejected.
+        assert!(!c.insert_pinned(3, 128, None));
+        assert!(c.contains(1), "pinned entry survived");
+        assert_eq!(c.stats().rejected, 1);
+        // After unpinning, the same insert succeeds.
+        c.unpin(1);
+        assert!(c.insert_pinned(3, 128, None));
+        assert!(!c.contains(1));
+        assert!(!c.contains(2));
+    }
+
+    #[test]
+    fn refcount_release_on_abort_makes_entry_evictable() {
+        let mut c = EncoderCache::new(1, 64);
+        assert!(c.insert_pinned(7, 64, None));
+        c.unpin(7);
+        // A request pins the entry, then aborts before consuming it.
+        assert_eq!(c.lookup_pin(7), Some(64));
+        c.unpin(7); // abort path: release the ref without consuming
+        assert_eq!(c.pins_of(7), Some(0));
+        assert!(c.insert_pinned(8, 64, None), "abort left the entry evictable");
+        assert!(!c.contains(7));
+    }
+
+    #[test]
+    fn duplicate_insert_pins_existing_entry() {
+        let mut c = EncoderCache::new(8, 64);
+        assert!(c.insert_pinned(5, 128, None));
+        let allocated = c.pool().allocated_blocks();
+        assert!(c.insert_pinned(5, 128, None)); // racing identical miss
+        assert_eq!(c.pool().allocated_blocks(), allocated, "no double alloc");
+        assert_eq!(c.pins_of(5), Some(2));
+        c.unpin(5);
+        c.unpin(5);
+        assert_eq!(c.stats().insertions, 1);
+    }
+
+    #[test]
+    fn zero_capacity_disables_cleanly() {
+        let mut c = EncoderCache::with_capacity_tokens(0, 64);
+        assert_eq!(c.lookup_pin(1), None);
+        assert!(!c.insert_pinned(1, 64, None));
+        assert_eq!(c.stats().rejected, 1);
+    }
+
+    #[test]
+    fn payload_roundtrip() {
+        let mut c = EncoderCache::new(8, 64);
+        let mm = Arc::new(vec![1.0f32, 2.0, 3.0]);
+        assert!(c.insert_pinned(9, 3, Some(Arc::clone(&mm))));
+        c.unpin(9);
+        assert_eq!(c.lookup_pin(9), Some(3));
+        assert_eq!(*c.payload(9).unwrap(), vec![1.0, 2.0, 3.0]);
+        c.unpin(9);
+    }
+
+    #[test]
+    fn clear_unpinned_keeps_pinned() {
+        let mut c = EncoderCache::new(8, 64);
+        assert!(c.insert_pinned(1, 64, None)); // pinned
+        assert!(c.insert_pinned(2, 64, None));
+        c.unpin(2);
+        c.clear_unpinned();
+        assert!(c.contains(1));
+        assert!(!c.contains(2));
+        assert_eq!(c.pool().allocated_blocks(), 1);
+    }
+
+    #[test]
+    fn content_hash_discriminates_and_repeats() {
+        assert_eq!(content_hash(b"abc"), content_hash(b"abc"));
+        assert_ne!(content_hash(b"abc"), content_hash(b"abd"));
+        assert_eq!(content_hash_words(&[1, 2]), content_hash_words(&[1, 2]));
+        assert_ne!(content_hash_words(&[1, 2]), content_hash_words(&[2, 1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "refcount underflow")]
+    fn unpin_underflow_panics() {
+        let mut c = EncoderCache::new(4, 64);
+        c.insert_pinned(1, 64, None);
+        c.unpin(1);
+        c.unpin(1);
+    }
+
+    #[test]
+    fn conservation_under_churn() {
+        let mut c = EncoderCache::new(32, 64);
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut pinned: Vec<ContentHash> = Vec::new();
+        for i in 0..2_000u64 {
+            if rng.bool(0.4) && !pinned.is_empty() {
+                let k = rng.below(pinned.len() as u64) as usize;
+                c.unpin(pinned.swap_remove(k));
+            } else {
+                let h = rng.below(64); // small key space → hits + evictions
+                let tokens = 64 * (1 + rng.below(4));
+                if let Some(_t) = c.lookup_pin(h) {
+                    pinned.push(h);
+                } else if c.insert_pinned(h, tokens, None) {
+                    pinned.push(h);
+                }
+            }
+            let pool = c.pool();
+            assert_eq!(pool.free_blocks() + pool.allocated_blocks(), 32, "step {i}");
+        }
+        for h in pinned {
+            c.unpin(h);
+        }
+        c.clear_unpinned();
+        assert_eq!(c.pool().free_blocks(), 32, "full recovery");
+    }
+}

@@ -1,15 +1,20 @@
 //! Paged cache management (§3.2.1 and §E.1).
 //!
-//! Both caches follow vLLM-style paging: fixed-size blocks handed out from
-//! a free list, per-request block tables, O(1) allocate/free. The
+//! All three caches follow vLLM-style paging: fixed-size blocks handed out
+//! from a free list, per-request block tables, O(1) allocate/free. The
 //! [`mm_block_manager::MmBlockManager`] is the paper's contribution — a
 //! paged cache for *multimodal* tokens that exists on both the encode and
-//! prefill instances and backs the asynchronous EP token transfer.
+//! prefill instances and backs the asynchronous EP token transfer. The
+//! [`encoder_cache::EncoderCache`] extends it *across* requests: a
+//! content-addressed LRU that lets a request whose media was seen before
+//! skip the encode stage entirely.
 
 pub mod block;
+pub mod encoder_cache;
 pub mod kv_block_manager;
 pub mod mm_block_manager;
 
 pub use block::{BlockId, BlockPool};
+pub use encoder_cache::{content_hash, content_hash_words, ContentHash, EncoderCache, EncoderCacheStats};
 pub use kv_block_manager::KvBlockManager;
 pub use mm_block_manager::{MmBlockManager, MmEntryState};

@@ -116,6 +116,12 @@ pub struct EpdConfig {
     pub kv_frac: f64,
     /// MM cache entries per instance (§E.1 fixes 3000).
     pub mm_cache_entries: u32,
+    /// Capacity of the cluster-wide, cross-request encoder cache in MM
+    /// tokens (content-addressed LRU over encoder outputs; see
+    /// `cache::encoder_cache`). 0 disables it. Only requests whose
+    /// workload assigns a `media_hash` participate, so enabling it leaves
+    /// unique-media workloads bit-identical.
+    pub encoder_cache_tokens: u64,
 }
 
 impl EpdConfig {
@@ -140,6 +146,7 @@ impl EpdConfig {
             role_switching: false,
             kv_frac: 0.5,
             mm_cache_entries: 3000,
+            encoder_cache_tokens: 1 << 20,
         }
     }
 
@@ -194,6 +201,7 @@ impl EpdConfig {
     /// batch_encode = 1
     /// batch_prefill = 1
     /// batch_decode = 128
+    /// encoder_cache_tokens = 1048576
     /// [sched]
     /// queue = "fcfs"          # fcfs | sjf | slo-aware
     /// assign = "least-loaded" # round-robin | least-loaded
@@ -212,6 +220,9 @@ impl EpdConfig {
         cfg.irp = doc.get_bool("", "irp").unwrap_or(true);
         cfg.role_switching = doc.get_bool("", "role_switching").unwrap_or(false);
         cfg.kv_frac = doc.get_f64("", "kv_frac").unwrap_or(0.5);
+        if let Some(t) = doc.get_i64("", "encoder_cache_tokens") {
+            cfg.encoder_cache_tokens = t.max(0) as u64;
+        }
         if let Some(q) = doc.get_str("sched", "queue") {
             let q = QueuePolicy::parse(q).context("bad sched.queue")?;
             cfg.sched_encode.queue = q;
@@ -258,6 +269,7 @@ topology = "5E2P1D"
 irp = true
 kv_frac = 0.8
 batch_decode = 64
+encoder_cache_tokens = 4096
 [sched]
 queue = "sjf"
 assign = "round-robin"
@@ -267,6 +279,7 @@ assign = "round-robin"
         let cfg = EpdConfig::from_toml(&doc).unwrap();
         assert_eq!(cfg.topology(), Topology::new(5, 2, 1));
         assert_eq!(cfg.kv_frac, 0.8);
+        assert_eq!(cfg.encoder_cache_tokens, 4096);
         assert_eq!(cfg.sched_decode.queue, QueuePolicy::Sjf);
         assert_eq!(cfg.sched_encode.assign, AssignPolicy::RoundRobin);
         let d = cfg.instances.iter().find(|i| i.role == Stage::Decode).unwrap();

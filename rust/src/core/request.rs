@@ -41,6 +41,12 @@ pub struct Request {
     pub tiles_per_image: u32,
     /// Precomputed MM tokens per image.
     pub mm_tokens_per_image: u32,
+    /// Content address of the attached media, computed at admission
+    /// (FNV-1a over the media bytes — see [`crate::cache::content_hash`]).
+    /// `Some` enables the cross-request encoder cache: requests sharing a
+    /// hash share encoder output. `None` (the default for workloads
+    /// without repeated media) opts the request out of caching.
+    pub media_hash: Option<u64>,
 }
 
 impl Request {
@@ -135,6 +141,7 @@ mod tests {
             output_tokens: 10,
             tiles_per_image: 10,
             mm_tokens_per_image: 640,
+            media_hash: None,
         }
     }
 

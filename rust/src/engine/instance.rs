@@ -150,8 +150,26 @@ fn handle_ep_job(
                 Ok(mm) => {
                     let bytes = mm.len() * 4;
                     if ctx.shard_done(shard, mm) {
-                        // Last shard: EP migration of the merged tokens.
-                        let merged = ctx.merged_mm();
+                        // Last shard: EP migration of the merged tokens,
+                        // shared between the prefill job and the cache.
+                        let merged = std::sync::Arc::new(ctx.merged_mm());
+                        // Miss-path population of the cross-request
+                        // encoder cache: instead of the tokens dying with
+                        // the request, later requests carrying the same
+                        // media skip encode entirely. The pin is released
+                        // immediately — the queue push below *is* the
+                        // confirmed intra-process "transfer". Capacity is
+                        // charged in MM tokens (merged holds llm_hidden
+                        // floats per token), matching the simulator.
+                        if let Some(h) = ctx.media_hash {
+                            let mm_tokens =
+                                merged.len() as u64 / rt.config().llm_hidden.max(1) as u64;
+                            let payload = std::sync::Arc::clone(&merged);
+                            let mut cache = queues.encoder_cache.lock().unwrap();
+                            if cache.insert_pinned(h, mm_tokens, Some(payload)) {
+                                cache.unpin(h);
+                            }
+                        }
                         queues.account_ep(merged.len() * 4);
                         queues.push(Stage::Prefill, Job::Prefill { ctx, mm: merged });
                     } else {
@@ -180,7 +198,7 @@ fn handle_ep_job(
             let len = tokens.len() as i32;
             tokens.resize(bucket_tokens as usize, tokenizer::PAD as i32);
 
-            match rt.prefill(images, &tokens, &mm, len) {
+            match rt.prefill(images, &tokens, mm.as_slice(), len) {
                 Ok(pf) => {
                     let first = argmax(&pf.logits);
                     metrics.on_first_token(ctx.id);

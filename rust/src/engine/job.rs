@@ -38,6 +38,10 @@ pub struct ReqCtx {
     pub text_tokens: Vec<i32>,
     pub max_tokens: u32,
     pub arrival: Instant,
+    /// Content address of the request's media (None for text-only):
+    /// the cross-request encoder-cache key. Hits skip encode at submit;
+    /// misses populate the cache when the last shard merges.
+    pub media_hash: Option<u64>,
     pub shards_total: u32,
     shards_done: AtomicU32,
     /// MM token shards, indexed by shard number, merged when all arrive
@@ -52,6 +56,7 @@ impl ReqCtx {
         images: u32,
         text_tokens: Vec<i32>,
         max_tokens: u32,
+        media_hash: Option<u64>,
         shards_total: u32,
         done_tx: SyncSender<GenResponse>,
     ) -> ReqCtx {
@@ -61,6 +66,7 @@ impl ReqCtx {
             text_tokens,
             max_tokens,
             arrival: Instant::now(),
+            media_hash,
             shards_total,
             shards_done: AtomicU32::new(0),
             mm_parts: Mutex::new(vec![None; shards_total as usize]),
@@ -100,10 +106,12 @@ pub enum Job {
         patches: Vec<f32>,
         tiles: u32,
     },
-    /// A request whose MM tokens arrived at the prefill side.
+    /// A request whose MM tokens arrived at the prefill side. The tokens
+    /// are shared (`Arc`) so an encoder-cache entry and any number of
+    /// hit-path prefill jobs reference one buffer without copying.
     Prefill {
         ctx: std::sync::Arc<ReqCtx>,
-        mm: Vec<f32>,
+        mm: std::sync::Arc<Vec<f32>>,
     },
     /// A prefilled request migrating to decode.
     Decode {
@@ -124,7 +132,7 @@ mod tests {
     #[test]
     fn shard_accounting() {
         let (tx, _rx) = sync_channel(1);
-        let ctx = ReqCtx::new(1, 2, vec![256], 4, 3, tx);
+        let ctx = ReqCtx::new(1, 2, vec![256], 4, None, 3, tx);
         assert!(!ctx.shard_done(0, vec![1.0]));
         assert!(!ctx.shard_done(2, vec![3.0]));
         assert!(ctx.shard_done(1, vec![2.0]));
@@ -135,7 +143,7 @@ mod tests {
     #[should_panic(expected = "duplicate shard")]
     fn duplicate_shard_panics() {
         let (tx, _rx) = sync_channel(1);
-        let ctx = ReqCtx::new(1, 1, vec![], 1, 2, tx);
+        let ctx = ReqCtx::new(1, 1, vec![], 1, None, 2, tx);
         ctx.shard_done(0, vec![]);
         ctx.shard_done(0, vec![]);
     }

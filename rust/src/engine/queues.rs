@@ -1,14 +1,22 @@
 //! Global per-stage queues with condvar wakeups, byte-accounted
-//! migrations, and the live role registry the monitor thread reads.
+//! migrations, the live role registry the monitor thread reads, and the
+//! process-wide cross-request encoder cache (shared here because both the
+//! submit path and the instance threads touch it).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
+use crate::cache::EncoderCache;
 use crate::core::stage::Stage;
 
 use super::job::Job;
+
+/// MM tokens per encoder-cache block on the engine side. Tiny-lmm's
+/// encoder emits 16 MM tokens per tile (`TinyConfig::vis_out_tokens`),
+/// so one block holds one tile's output.
+pub const ENCODER_CACHE_BLOCK_TOKENS: u32 = 16;
 
 /// Transfer byte counters (EP and PD migrations).
 #[derive(Debug, Default)]
@@ -31,10 +39,23 @@ pub struct StageQueues {
     pub transfers: TransferStats,
     /// Current role of each instance (monitor + IRP fan-out read this).
     pub roles: Mutex<Vec<Stage>>,
+    /// Cross-request content-addressed encoder cache: submit consults it
+    /// (hit → straight to prefill), instance threads populate it when the
+    /// last IRP shard merges.
+    pub encoder_cache: Mutex<EncoderCache>,
 }
 
 impl StageQueues {
     pub fn new(initial_roles: Vec<Stage>) -> StageQueues {
+        // Default capacity matches `EpdConfig::epd`'s encoder_cache_tokens
+        // default (1 Mi MM tokens); the engine passes the configured value
+        // through `with_encoder_cache`.
+        StageQueues::with_encoder_cache(initial_roles, 1 << 20)
+    }
+
+    /// Like [`StageQueues::new`] with an explicit encoder-cache capacity
+    /// in MM tokens (0 disables cross-request reuse).
+    pub fn with_encoder_cache(initial_roles: Vec<Stage>, cache_tokens: u64) -> StageQueues {
         StageQueues {
             encode: Mutex::new(VecDeque::new()),
             prefill: Mutex::new(VecDeque::new()),
@@ -44,6 +65,10 @@ impl StageQueues {
             shutdown: AtomicBool::new(false),
             transfers: TransferStats::default(),
             roles: Mutex::new(initial_roles),
+            encoder_cache: Mutex::new(EncoderCache::with_capacity_tokens(
+                cache_tokens,
+                ENCODER_CACHE_BLOCK_TOKENS,
+            )),
         }
     }
 
@@ -134,8 +159,8 @@ mod tests {
     fn dummy_job() -> Job {
         let (tx, _rx) = sync_channel(1);
         Job::Prefill {
-            ctx: Arc::new(ReqCtx::new(0, 0, vec![], 1, 1, tx)),
-            mm: vec![],
+            ctx: Arc::new(ReqCtx::new(0, 0, vec![], 1, None, 1, tx)),
+            mm: Arc::new(vec![]),
         }
     }
 
@@ -176,6 +201,20 @@ mod tests {
         q.set_role(0, Stage::Decode);
         assert_eq!(q.role_count(Stage::Encode), 1);
         assert_eq!(q.role_count(Stage::Decode), 2);
+    }
+
+    #[test]
+    fn encoder_cache_shared_through_fabric() {
+        let q = StageQueues::with_encoder_cache(vec![], 1024);
+        {
+            let mut c = q.encoder_cache.lock().unwrap();
+            assert!(c.insert_pinned(42, 64, Some(Arc::new(vec![0.5f32; 64]))));
+            c.unpin(42);
+        }
+        let mut c = q.encoder_cache.lock().unwrap();
+        assert_eq!(c.lookup_pin(42), Some(64));
+        assert_eq!(c.payload(42).unwrap().len(), 64);
+        c.unpin(42);
     }
 
     #[test]

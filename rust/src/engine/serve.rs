@@ -24,13 +24,37 @@ use super::job::{GenRequest, GenResponse, Job, ReqCtx};
 use super::queues::StageQueues;
 
 /// Engine configuration.
+///
+/// Start from [`EngineConfig::new`] and override fields as needed:
+///
+/// ```no_run
+/// use epdserve::core::config::EpdConfig;
+/// use epdserve::core::topology::Topology;
+/// use epdserve::engine::serve::{EngineConfig, EpdEngine};
+///
+/// // 2 encode, 1 prefill, 1 decode instance over prebuilt artifacts.
+/// let mut epd = EpdConfig::epd(Topology::new(2, 1, 1), 1, 1, 128);
+/// epd.encoder_cache_tokens = 1 << 18; // 256Ki MM tokens of media reuse
+/// let mut cfg = EngineConfig::new("artifacts", epd);
+/// cfg.max_decode_batch = 16;          // larger continuous batches
+/// let engine = EpdEngine::start(cfg).unwrap();
+/// let resp = engine.generate(2, "what do you see?", 12).unwrap();
+/// assert_eq!(resp.tokens.len(), 12);
+/// engine.shutdown();
+/// ```
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
+    /// Directory holding the AOT artifacts produced by
+    /// `python -m compile.aot` (`manifest.json`, `weights.bin`, HLO text).
     pub artifacts_dir: String,
+    /// Deployment: mode, per-instance roles/batches, IRP and role-switch
+    /// toggles, and the cross-request encoder-cache capacity
+    /// (`EpdConfig::encoder_cache_tokens`; 0 disables media reuse).
     pub epd: EpdConfig,
     /// Largest decode batch an instance forms (bounded by decode buckets).
     pub max_decode_batch: u32,
-    /// Steps between decode-loop queue re-checks.
+    /// Steps between decode-loop queue re-checks — the preemption/join
+    /// granularity of continuous batching.
     pub decode_recheck_steps: u32,
     /// Role-switch policy (used when `epd.role_switching`).
     pub switch_policy: SwitchPolicy,
@@ -64,7 +88,10 @@ impl EpdEngine {
     /// a few seconds of warm-up for large topologies).
     pub fn start(cfg: EngineConfig) -> Result<EpdEngine> {
         let roles: Vec<Stage> = cfg.epd.instances.iter().map(|i| i.role).collect();
-        let queues = Arc::new(StageQueues::new(roles.clone()));
+        let queues = Arc::new(StageQueues::with_encoder_cache(
+            roles.clone(),
+            cfg.epd.encoder_cache_tokens,
+        ));
         let metrics = Arc::new(MetricsRecorder::new());
         let mut ctrls = Vec::new();
         let mut handles = Vec::new();
@@ -114,6 +141,12 @@ impl EpdEngine {
     }
 
     /// Submit a request; returns a receiver for the response.
+    ///
+    /// Admission computes the media's content hash and consults the
+    /// cross-request encoder cache: a hit routes the request straight to
+    /// prefill with the cached MM tokens — no patch generation, no IRP
+    /// fan-out, no encode occupancy. A miss proceeds through encode and
+    /// populates the cache when the last shard merges.
     pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
         let (tx, rx) = sync_channel(1);
         let id = req.id;
@@ -125,6 +158,16 @@ impl EpdEngine {
             .collect();
 
         let tiles = req.images; // tiny-lmm: one tile per image
+        // Content address of the media payload. Tiny-lmm's synthetic
+        // pixels are a pure function of (seed, images), so hashing those
+        // two words is exactly hashing the image bytes — a real frontend
+        // would run `cache::content_hash` over the decoded media instead.
+        let media_hash = if tiles > 0 {
+            Some(crate::cache::content_hash_words(&[req.seed, req.images as u64]))
+        } else {
+            None
+        };
+
         // IRP fan-out: shard across the instances currently encoding.
         let fanout = if self.cfg.epd.irp {
             self.queues.role_count(Stage::Encode).max(1).min(tiles.max(1))
@@ -139,14 +182,36 @@ impl EpdEngine {
             req.images,
             text_tokens,
             req.max_tokens,
+            media_hash,
             shards_total,
             tx,
         ));
 
         if tiles == 0 {
             // Text-only: straight to prefill with zero MM tokens.
-            self.queues.push(Stage::Prefill, Job::Prefill { ctx, mm: vec![] });
+            self.queues.push(Stage::Prefill, Job::Prefill { ctx, mm: Arc::new(vec![]) });
             return rx;
+        }
+
+        if let Some(h) = media_hash {
+            let cached = {
+                let mut cache = self.queues.encoder_cache.lock().unwrap();
+                if cache.lookup_pin(h).is_some() {
+                    let payload = cache.payload(h);
+                    // The Arc clone keeps the tokens alive independently
+                    // of the entry, so the pin can be released here.
+                    cache.unpin(h);
+                    payload
+                } else {
+                    None
+                }
+            };
+            self.metrics.on_encoder_cache(cached.is_some());
+            if let Some(mm) = cached {
+                // Zero-copy hit: the job shares the cached buffer.
+                self.queues.push(Stage::Prefill, Job::Prefill { ctx, mm });
+                return rx;
+            }
         }
 
         // Generate synthetic patch data per tile (the "image"): content is

@@ -1,13 +1,19 @@
 //! # epdserve — Encode–Prefill–Decode disaggregated serving for LMMs
 //!
 //! Reproduction of *"Efficiently Serving Large Multimodal Models Using EPD
-//! Disaggregation"* (ICML 2025). The crate contains:
+//! Disaggregation"* (ICML 2025), grown toward a production-scale serving
+//! system. Start with the repository's `README.md` (build/quickstart) and
+//! `ARCHITECTURE.md` (request lifecycle, block managers, IRP, role
+//! switching); the crate contains:
 //!
 //! - [`core`] — request model, stages, deployment topologies, SLO types.
 //! - [`model`] — LMM specifications (MiniCPM-V 2.6, InternVL2-8B/26B, …),
 //!   image→patch→token math, and the GPU memory model behind the paper's
 //!   capacity tables (Tables 2, 3, 8; Figure 2).
-//! - [`cache`] — paged KV and multimodal (MM) block managers (§3.2.1).
+//! - [`cache`] — paged KV and multimodal (MM) block managers (§3.2.1),
+//!   plus the cross-request content-addressed encoder cache
+//!   ([`cache::EncoderCache`]): requests whose media content was seen
+//!   before skip the encode stage entirely.
 //! - [`sched`] — per-stage queueing/batching policies and instance
 //!   assignment strategies (Appendix D).
 //! - [`coordinator`] — the paper's system contribution: EP/PD migration,
@@ -15,8 +21,8 @@
 //!   and the queue monitor that drives it.
 //! - [`sim`] — the DistServe-style discrete-event cluster simulator used by
 //!   the optimizer and by every table/figure bench.
-//! - [`workload`] — synthetic, NextQA-like, Video-MME-like and audio
-//!   workload generators with Poisson arrivals.
+//! - [`workload`] — synthetic, NextQA-like, Video-MME-like, audio and
+//!   Zipf repeated-media workload generators with Poisson arrivals.
 //! - [`metrics`] — TTFT/TPOT recording, SLO attainment, goodput search.
 //! - [`optimizer`] — the black-box resource-allocation optimizer (Eq. 1).
 //! - [`runtime`] — PJRT client wrapper that loads AOT-compiled HLO

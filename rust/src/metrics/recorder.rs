@@ -2,6 +2,7 @@
 //! collection plus derived reports. (The simulator computes metrics from
 //! virtual-time timelines instead; this type is for live serving.)
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -22,11 +23,42 @@ struct Record {
 #[derive(Debug, Default)]
 pub struct MetricsRecorder {
     inner: Mutex<Vec<(RequestId, Record)>>,
+    /// Cross-request encoder-cache lookups that skipped encode.
+    enc_cache_hits: AtomicU64,
+    /// Lookups that went through the full encode path.
+    enc_cache_misses: AtomicU64,
 }
 
 impl MetricsRecorder {
     pub fn new() -> MetricsRecorder {
-        MetricsRecorder { inner: Mutex::new(Vec::new()) }
+        MetricsRecorder::default()
+    }
+
+    /// Record an encoder-cache lookup outcome at admission.
+    pub fn on_encoder_cache(&self, hit: bool) {
+        if hit {
+            self.enc_cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.enc_cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn encoder_cache_hits(&self) -> u64 {
+        self.enc_cache_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn encoder_cache_misses(&self) -> u64 {
+        self.enc_cache_misses.load(Ordering::Relaxed)
+    }
+
+    /// Hits over lookups, in [0, 1]; 0 before any media request arrived.
+    pub fn encoder_cache_hit_rate(&self) -> f64 {
+        let h = self.encoder_cache_hits();
+        let m = self.encoder_cache_misses();
+        if h + m == 0 {
+            return 0.0;
+        }
+        h as f64 / (h + m) as f64
     }
 
     pub fn on_arrival(&self, id: RequestId) {
@@ -125,6 +157,14 @@ impl MetricsRecorder {
             ("ttft", s(&Summary::of(&ttfts))),
             ("tpot", s(&Summary::of(&tpots))),
             ("latency", s(&Summary::of(&lats))),
+            (
+                "encoder_cache",
+                Json::obj(vec![
+                    ("hits", Json::num(self.encoder_cache_hits() as f64)),
+                    ("misses", Json::num(self.encoder_cache_misses() as f64)),
+                    ("hit_rate", Json::num(self.encoder_cache_hit_rate())),
+                ]),
+            ),
         ])
     }
 }
@@ -180,5 +220,18 @@ mod tests {
         let j = m.report();
         assert_eq!(j.get("finished").unwrap().as_u64(), Some(1));
         assert!(j.get("ttft").unwrap().get("mean").is_some());
+        assert!(j.get("encoder_cache").unwrap().get("hit_rate").is_some());
+    }
+
+    #[test]
+    fn encoder_cache_counters() {
+        let m = MetricsRecorder::new();
+        assert_eq!(m.encoder_cache_hit_rate(), 0.0);
+        m.on_encoder_cache(false);
+        m.on_encoder_cache(true);
+        m.on_encoder_cache(true);
+        assert_eq!(m.encoder_cache_hits(), 2);
+        assert_eq!(m.encoder_cache_misses(), 1);
+        assert!((m.encoder_cache_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
     }
 }

@@ -1,5 +1,8 @@
 //! Instance assignment at stage entry (Appendix D): round-robin or
-//! least-loaded-first over the instances currently serving a stage.
+//! least-loaded-first over the instances currently serving a stage, plus
+//! content-affinity assignment (rendezvous hashing) for the cross-request
+//! encoder cache — repeated media keeps landing on the same encode
+//! instance so its warm state is actually reused.
 
 use crate::core::config::AssignPolicy;
 
@@ -45,6 +48,50 @@ impl Assigner {
             }
         }
     }
+
+    /// Content-affinity pick: rendezvous (highest-random-weight) hashing
+    /// of `key` over `candidates`, so the same media hash deterministically
+    /// routes to the same instance while distinct hashes spread uniformly
+    /// — the assignment that makes per-instance encoder-cache state pay
+    /// off and that survives the candidate set growing or shrinking under
+    /// role switching (only ~1/n of keys move).
+    ///
+    /// Overload guard: when the affinity winner's load exceeds the current
+    /// minimum by more than `2× min + 1`, affinity yields to the policy
+    /// pick — a hot key must not melt one instance while siblings idle.
+    pub fn pick_affinity(
+        &mut self,
+        candidates: &[usize],
+        loads: &[f64],
+        key: u64,
+    ) -> Option<usize> {
+        if candidates.is_empty() {
+            return None;
+        }
+        debug_assert_eq!(candidates.len(), loads.len());
+        let mut best = 0usize;
+        let mut best_w = 0u64;
+        for (i, &c) in candidates.iter().enumerate() {
+            let w = mix64(key ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            if i == 0 || w > best_w {
+                best = i;
+                best_w = w;
+            }
+        }
+        let min_load = loads.iter().copied().fold(f64::INFINITY, f64::min);
+        if loads[best] > 2.0 * min_load + 1.0 {
+            return self.pick(candidates, loads);
+        }
+        Some(candidates[best])
+    }
+}
+
+/// SplitMix64 finalizer — a cheap, well-distributed 64-bit mixer.
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 #[cfg(test)]
@@ -78,6 +125,64 @@ mod tests {
     fn empty_candidates() {
         let mut a = Assigner::new(AssignPolicy::RoundRobin);
         assert_eq!(a.pick(&[], &[]), None);
+    }
+
+    #[test]
+    fn affinity_is_sticky_per_key() {
+        let mut a = Assigner::new(AssignPolicy::LeastLoaded);
+        let c = [10, 20, 30];
+        let l = [0.0; 3];
+        for key in [1u64, 42, 0xDEAD_BEEF] {
+            let first = a.pick_affinity(&c, &l, key).unwrap();
+            for _ in 0..5 {
+                assert_eq!(a.pick_affinity(&c, &l, key), Some(first));
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_spreads_distinct_keys() {
+        let mut a = Assigner::new(AssignPolicy::LeastLoaded);
+        let c = [0, 1, 2, 3];
+        let l = [0.0; 4];
+        let mut counts = [0u32; 4];
+        for key in 0..4000u64 {
+            counts[a.pick_affinity(&c, &l, key).unwrap()] += 1;
+        }
+        for (i, &n) in counts.iter().enumerate() {
+            assert!((700..=1300).contains(&n), "instance {i} got {n} of 4000");
+        }
+    }
+
+    #[test]
+    fn affinity_mostly_stable_under_membership_change() {
+        // Rendezvous property: removing one of four instances moves only
+        // the keys that lived there (~25%), not a full reshuffle.
+        let mut a = Assigner::new(AssignPolicy::LeastLoaded);
+        let all = [0usize, 1, 2, 3];
+        let fewer = [0usize, 1, 2];
+        let l4 = [0.0; 4];
+        let l3 = [0.0; 3];
+        let mut moved = 0;
+        for key in 0..1000u64 {
+            let before = a.pick_affinity(&all, &l4, key).unwrap();
+            let after = a.pick_affinity(&fewer, &l3, key).unwrap();
+            if before != 3 && before != after {
+                moved += 1;
+            }
+        }
+        assert_eq!(moved, 0, "surviving instances keep their keys");
+    }
+
+    #[test]
+    fn affinity_yields_to_load_when_winner_overloaded() {
+        let mut a = Assigner::new(AssignPolicy::LeastLoaded);
+        let c = [10, 20];
+        // Find a key whose affinity winner is index 0, then overload it.
+        let key = (0..64u64)
+            .find(|&k| a.pick_affinity(&c, &[0.0, 0.0], k) == Some(10))
+            .unwrap();
+        assert_eq!(a.pick_affinity(&c, &[100.0, 0.1], key), Some(20));
     }
 
     #[test]

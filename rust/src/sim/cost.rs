@@ -38,6 +38,11 @@ pub struct Overheads {
     /// IRP speedups come out 1.6–2.9× rather than the naive tile-count
     /// fan-out.
     pub preproc_image_frac: f64,
+    /// Cross-request encoder-cache hit path: content-hash lookup plus
+    /// pinning the cached blocks (host-side hash of the media bytes is
+    /// already paid at admission). Replaces preprocess + encode entirely
+    /// on a hit — the whole point of the cache.
+    pub cache_lookup: f64,
 }
 
 impl Default for Overheads {
@@ -50,6 +55,7 @@ impl Default for Overheads {
             preprocess_per_pixel: 4.6e-8,
             preprocess_per_image: 30e-3, // incl. frame extraction for video workloads (Table 1: ~48 ms/frame end-to-end)
             preproc_image_frac: 0.7,
+            cache_lookup: 0.5e-3,
         }
     }
 }
@@ -149,6 +155,20 @@ impl CostModel {
         let kv_read = batch as f64 * avg_ctx as f64 * self.spec.llm.kv_bytes_per_token() as f64
             / self.device.hbm_bw;
         self.overheads.decode_step + weight_read + kv_read
+    }
+
+    /// Encode-stage service time on an encoder-cache *hit*: the lookup
+    /// overhead alone — preprocessing and the encoder forward are skipped
+    /// because the MM tokens already sit in cache blocks.
+    pub fn cache_hit_time(&self) -> f64 {
+        self.overheads.cache_lookup
+    }
+
+    /// Encode-stage service time on an encoder-cache *miss* (the cost a
+    /// hit avoids): host preprocessing plus the encoder forward for all of
+    /// the request's tiles. Queueing and EP transfer are extra.
+    pub fn cache_miss_time(&self, images: u32, res: Resolution, tiles: u32) -> f64 {
+        self.preprocess_time(images, res) + self.encode_time(tiles)
     }
 
     /// End-to-end single-request service time (no queueing): preprocessing
@@ -273,6 +293,20 @@ mod tests {
             + c26.encode_time(11)
             + c26.prefill_time(13_334);
         assert!(epd26 < 7.05, "EPD with IRP under SLO: {epd26}");
+    }
+
+    #[test]
+    fn cache_hit_orders_of_magnitude_under_miss() {
+        // The tentpole claim: a hit pays a lookup, a miss pays host
+        // preprocessing + the encoder forward. At the paper's default
+        // workload unit (2 × 4K images) that gap is >1000×; the bench
+        // gate (`benches/perf_encoder_cache.rs`) enforces ≥10×.
+        let c = cm(ModelId::MiniCpmV26);
+        let res = Resolution::four_k();
+        let miss = c.cache_miss_time(2, res, 20);
+        let hit = c.cache_hit_time();
+        assert!(hit > 0.0);
+        assert!(miss / hit >= 10.0, "miss {miss} vs hit {hit}");
     }
 
     #[test]

@@ -16,6 +16,7 @@
 
 use std::collections::HashMap;
 
+use crate::cache::encoder_cache::EncoderCache;
 use crate::cache::kv_block_manager::KvBlockManager;
 use crate::cache::mm_block_manager::MmBlockManager;
 use crate::coordinator::irp::plan_shards;
@@ -28,6 +29,7 @@ use crate::core::stage::Stage;
 use crate::core::topology::DeploymentMode;
 use crate::model::memory::{MemoryModel, NodeKind};
 use crate::model::spec::{DeviceSpec, LmmSpec};
+use crate::sched::assign::Assigner;
 use crate::sched::batcher::Batcher;
 use crate::sched::queue::{QueuedRequest, StageQueue};
 
@@ -117,6 +119,26 @@ struct ReqState {
     shards_done: u32,
     decoded: u32,
     rejected: bool,
+    /// Encoder-cache hit: encode stage skipped entirely.
+    encode_cached: bool,
+    /// This request holds a pin on its encoder-cache entry (released at
+    /// EP-transfer confirmation / fused-step completion).
+    cache_pinned: bool,
+}
+
+impl ReqState {
+    fn new(req: Request, tl: RequestTimeline, shards_total: u32) -> ReqState {
+        ReqState {
+            req,
+            tl,
+            shards_total,
+            shards_done: 0,
+            decoded: 0,
+            rejected: false,
+            encode_cached: false,
+            cache_pinned: false,
+        }
+    }
 }
 
 /// The simulator.
@@ -129,6 +151,12 @@ pub struct Simulator<'a> {
     now: f64,
     insts: Vec<Inst>,
     reqs: HashMap<RequestId, ReqState>,
+    /// Cluster-wide, cross-request content-addressed encoder cache. Unlike
+    /// the per-instance `Inst::mm` caches it survives role switching: its
+    /// entries are keyed by content, not by request or instance.
+    enc_cache: EncoderCache,
+    /// Content-affinity assigner for encode entry (rendezvous hashing).
+    encode_assigner: Assigner,
     switch_ctl: RoleSwitchController,
     monitor: QueueMonitor,
     busy_acc: [f64; 3],
@@ -194,6 +222,11 @@ impl<'a> Simulator<'a> {
             now: 0.0,
             insts,
             reqs: HashMap::new(),
+            enc_cache: EncoderCache::with_capacity_tokens(
+                cfg.epd.encoder_cache_tokens,
+                cfg.spec.vision.tokens_per_tile.max(1),
+            ),
+            encode_assigner: Assigner::new(cfg.epd.sched_encode.assign),
             switch_ctl: RoleSwitchController::new(cfg.switch_policy),
             monitor: QueueMonitor::new(0.3),
             busy_acc: [0.0; 3],
@@ -250,6 +283,7 @@ impl<'a> Simulator<'a> {
             role_switches: self.role_switches,
             busy: self.busy_acc,
             rejected: self.rejected,
+            encoder_cache: self.enc_cache.stats(),
         }
     }
 
@@ -297,20 +331,21 @@ impl<'a> Simulator<'a> {
             return;
         }
 
+        // Cross-request encoder cache: a content-addressed hit skips the
+        // encode stage entirely (preprocess + encoder forward), pinning
+        // the cached blocks until the EP transfer is confirmed.
+        let cache_hit = total_tiles > 0
+            && req
+                .media_hash
+                .map(|h| self.enc_cache.lookup_pin(h).is_some())
+                .unwrap_or(false);
+
         match self.cfg.epd.mode {
             DeploymentMode::Epd => {
                 let fanout = entry.len() as u32;
                 let plan = plan_shards(total_tiles, fanout, self.cfg.epd.irp);
                 let shards_total = plan.num_shards().max(1);
-                let state = ReqState {
-                    req: req.clone(),
-                    tl,
-                    shards_total,
-                    shards_done: 0,
-                    decoded: 0,
-                    rejected: false,
-                };
-                self.reqs.insert(id, state);
+                self.reqs.insert(id, ReqState::new(req.clone(), tl, shards_total));
 
                 if total_tiles == 0 {
                     // Text-only request: skip encode entirely.
@@ -320,12 +355,48 @@ impl<'a> Simulator<'a> {
                     self.enqueue_prefill(id);
                     return;
                 }
-                // Spread shards over distinct least-loaded encode instances.
+                if cache_hit {
+                    // Hit: pay the lookup, then go straight to the EP
+                    // transfer of the cached tokens — no encode queueing,
+                    // no encoder occupancy.
+                    let r = self.reqs.get_mut(&id).unwrap();
+                    r.encode_cached = true;
+                    r.cache_pinned = true;
+                    r.shards_total = 0;
+                    r.tl.encode_start = self.now;
+                    r.tl.encode_end = self.now + self.cost.cache_hit_time();
+                    let t = self.transfer.migration_time(
+                        MigrationKind::EncodeToPrefill,
+                        &self.cfg.spec,
+                        req.total_mm_tokens(),
+                        0,
+                    );
+                    let done = r.tl.encode_end + t;
+                    self.events.push(done, Event::EpTransferDone { req: id });
+                    return;
+                }
+                // Spread shards over distinct least-loaded encode
+                // instances. A single-shard request with a media hash —
+                // i.e. IRP disabled, or a one-tile request — routes by
+                // content affinity instead: deterministic placement that
+                // keeps repeated media on one instance (the assignment a
+                // per-instance encoder cache needs; the modelled cache is
+                // cluster-global, so here it shapes load placement only).
                 let mut order: Vec<usize> = entry.clone();
                 order.sort_by(|&a, &b| {
                     self.insts[a].load().partial_cmp(&self.insts[b].load()).unwrap()
                 });
                 let shard_fanout = plan.num_shards();
+                if shard_fanout == 1 {
+                    if let Some(h) = req.media_hash {
+                        let loads: Vec<f64> =
+                            entry.iter().map(|&i| self.insts[i].load()).collect();
+                        if let Some(pick) = self.encode_assigner.pick_affinity(&entry, &loads, h)
+                        {
+                            order = vec![pick];
+                        }
+                    }
+                }
                 for (k, &tiles) in plan.tiles_per_shard.iter().enumerate() {
                     let inst_idx = order[k % order.len()];
                     let est = self.cost.shard_preprocess_time(
@@ -347,14 +418,20 @@ impl<'a> Simulator<'a> {
                 }
             }
             DeploymentMode::PdDisagg | DeploymentMode::Aggregated => {
-                self.reqs.insert(
-                    id,
-                    ReqState { req: req.clone(), tl, shards_total: 1, shards_done: 0, decoded: 0, rejected: false },
-                );
+                self.reqs.insert(id, ReqState::new(req.clone(), tl, 1));
+                if cache_hit {
+                    let r = self.reqs.get_mut(&id).unwrap();
+                    r.encode_cached = true;
+                    r.cache_pinned = true;
+                }
                 let inst_idx = self.least_loaded(&entry).unwrap();
-                let est = self.cost.preprocess_time(req.images, req.resolution)
-                    + self.cost.encode_time(total_tiles)
-                    + self.cost.prefill_time(req.prefill_tokens());
+                let encode_est = if cache_hit {
+                    self.cost.cache_hit_time()
+                } else {
+                    self.cost.preprocess_time(req.images, req.resolution)
+                        + self.cost.encode_time(total_tiles)
+                };
+                let est = encode_est + self.cost.prefill_time(req.prefill_tokens());
                 self.insts[inst_idx].queue.push(QueuedRequest {
                     id,
                     shard: total_tiles,
@@ -428,8 +505,18 @@ impl<'a> Simulator<'a> {
                 (r.shards_done >= r.shards_total, r.req.total_mm_tokens())
             };
             if all_done {
-                let r = self.reqs.get_mut(&item.id).unwrap();
-                r.tl.encode_end = self.now;
+                let media_hash = {
+                    let r = self.reqs.get_mut(&item.id).unwrap();
+                    r.tl.encode_end = self.now;
+                    r.req.media_hash
+                };
+                // Miss path population: instead of freeing the MM tokens
+                // after transfer, admit them to the cross-request cache
+                // (pinned until the transfer is confirmed).
+                if let Some(h) = media_hash {
+                    let inserted = self.enc_cache.insert_pinned(h, mm_tokens, None);
+                    self.reqs.get_mut(&item.id).unwrap().cache_pinned = inserted;
+                }
                 // Asynchronous EP transfer (§3.2.1) — does not occupy the
                 // encode instance.
                 let t = self.transfer.migration_time(
@@ -445,6 +532,22 @@ impl<'a> Simulator<'a> {
     }
 
     fn on_ep_transfer_done(&mut self, id: RequestId) {
+        // Transfer confirmed: release this request's pin on its encoder-
+        // cache entry (the entry itself stays cached — that is the whole
+        // point). Idempotent under the retry re-push in `enqueue_prefill`.
+        let unpin = {
+            let r = self.reqs.get_mut(&id).unwrap();
+            let hash = r.req.media_hash;
+            if r.cache_pinned {
+                r.cache_pinned = false;
+                hash
+            } else {
+                None
+            }
+        };
+        if let Some(h) = unpin {
+            self.enc_cache.unpin(h);
+        }
         self.enqueue_prefill(id);
     }
 
@@ -670,12 +773,19 @@ impl<'a> Simulator<'a> {
             if r.tl.encode_start.is_nan() {
                 r.tl.encode_start = self.now;
             }
-            duration += self.cost.preprocess_time(r.req.images, r.req.resolution);
+            // Encoder-cache hits pay a lookup instead of preprocessing
+            // (and contribute no tiles to the encode forward below).
+            duration += if r.encode_cached {
+                self.cost.cache_hit_time()
+            } else {
+                self.cost.preprocess_time(r.req.images, r.req.resolution)
+            };
             total_tokens += r.req.prefill_tokens();
         }
         let tiles: u32 = batch
             .items
             .iter()
+            .filter(|q| !self.reqs[&q.id].encode_cached)
             .map(|q| self.reqs[&q.id].req.total_tiles())
             .sum();
         duration += self.cost.encode_time(tiles)
@@ -692,10 +802,23 @@ impl<'a> Simulator<'a> {
         let items = std::mem::take(&mut self.insts[idx].in_flight);
         self.insts[idx].busy = false;
         for item in items {
-            {
+            let (media_hash, was_pinned, mm_tokens) = {
                 let r = self.reqs.get_mut(&item.id).unwrap();
                 r.tl.encode_end = self.now;
                 r.tl.prefill_start = self.now;
+                let pinned = r.cache_pinned;
+                r.cache_pinned = false;
+                (r.req.media_hash, pinned, r.req.total_mm_tokens())
+            };
+            // Fused step complete = tokens consumed: release the hit-path
+            // pin, or populate the cache on the miss path (immediately
+            // unpinned — nothing downstream still reads the entry).
+            if let Some(h) = media_hash {
+                if was_pinned {
+                    self.enc_cache.unpin(h);
+                } else if mm_tokens > 0 && self.enc_cache.insert_pinned(h, mm_tokens, None) {
+                    self.enc_cache.unpin(h);
+                }
             }
             self.finish_prefill_for(item.id);
         }
@@ -887,6 +1010,7 @@ mod tests {
                     output_tokens: out,
                     tiles_per_image: tiles_for_image(spec, res),
                     mm_tokens_per_image: mm_tokens_for_image(spec, res) as u32,
+                    media_hash: None,
                 }
             })
             .collect()
@@ -994,6 +1118,109 @@ mod tests {
         for t in out.finished() {
             assert_eq!(t.encode_start, t.encode_end);
         }
+    }
+
+    #[test]
+    fn encoder_cache_hits_skip_encode_and_cut_ttft() {
+        // Two request streams with identical shapes; one repeats the same
+        // media item, the other is all-unique. The repeated stream must
+        // hit the cache after the first miss and see lower mean TTFT.
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut repeated = mk_requests(30, 0.5, 2, 10, &spec);
+        for r in &mut repeated {
+            r.media_hash = Some(0xCAFE);
+        }
+        let unique = mk_requests(30, 0.5, 2, 10, &spec);
+
+        let cfg = epd_cfg(&spec);
+        let hot = Simulator::run(&cfg, &repeated);
+        let cold = Simulator::run(&cfg, &unique);
+
+        assert_eq!(hot.finished().count(), 30);
+        // The first request misses; later arrivals landing inside its
+        // encode window may also miss, but the stream must be hit-dominated.
+        assert!(hot.encoder_cache.misses >= 1);
+        assert!(
+            hot.encoder_cache.hits >= 25,
+            "hits {} misses {}",
+            hot.encoder_cache.hits,
+            hot.encoder_cache.misses
+        );
+        assert_eq!(hot.encoder_cache.hits + hot.encoder_cache.misses, 30);
+        assert_eq!(cold.encoder_cache.hits + cold.encoder_cache.misses, 0, "no media_hash → no lookups");
+        assert!(
+            hot.mean_ttft() < 0.6 * cold.mean_ttft(),
+            "hot {} vs cold {}",
+            hot.mean_ttft(),
+            cold.mean_ttft()
+        );
+        // Encode busy time collapses to the single miss.
+        assert!(hot.busy[0] < 0.2 * cold.busy[0], "encode busy {} vs {}", hot.busy[0], cold.busy[0]);
+    }
+
+    #[test]
+    fn encoder_cache_disabled_by_zero_capacity() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut reqs = mk_requests(10, 0.5, 2, 10, &spec);
+        for r in &mut reqs {
+            r.media_hash = Some(0xCAFE);
+        }
+        let mut cfg = epd_cfg(&spec);
+        cfg.epd.encoder_cache_tokens = 0;
+        let out = Simulator::run(&cfg, &reqs);
+        assert_eq!(out.finished().count(), 10);
+        assert_eq!(out.encoder_cache.hits, 0);
+        assert_eq!(out.encoder_cache.insertions, 0);
+    }
+
+    #[test]
+    fn encoder_cache_helps_fused_baselines_too() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut reqs = mk_requests(20, 0.3, 2, 10, &spec);
+        for r in &mut reqs {
+            r.media_hash = Some(0xBEEF);
+        }
+        for epd in [EpdConfig::distserve(7, 1, 1, 128), EpdConfig::aggregated(8, 64)] {
+            let cfg = SimConfig::new(spec.clone(), DeviceSpec::a100(), epd);
+            let out = Simulator::run(&cfg, &reqs);
+            assert_eq!(out.finished().count(), 20, "{:?}", cfg.epd.mode);
+            assert!(out.encoder_cache.hits >= 1, "{:?}", cfg.epd.mode);
+        }
+    }
+
+    #[test]
+    fn affinity_routing_fires_without_irp() {
+        // With IRP off every request is a single shard, so media-hash
+        // requests route by content affinity: each distinct hash must
+        // land on exactly one encode instance across the whole run.
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut reqs = mk_requests(40, 0.2, 2, 5, &spec);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.media_hash = Some(1 + (i as u64 % 8));
+        }
+        let mut cfg = epd_cfg(&spec);
+        cfg.epd.irp = false;
+        cfg.epd.encoder_cache_tokens = 0; // force every request through encode
+        let out = Simulator::run(&cfg, &reqs);
+        assert_eq!(out.finished().count(), 40);
+        // Placement determinism (sticky per key) is covered by the
+        // `sched::assign` unit tests; end-to-end the run must stay
+        // reproducible through the affinity path.
+        let again = Simulator::run(&cfg, &reqs);
+        assert_eq!(out.mean_ttft(), again.mean_ttft());
+    }
+
+    #[test]
+    fn encoder_cache_runs_stay_deterministic() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut reqs = mk_requests(25, 0.5, 2, 8, &spec);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.media_hash = Some(1 + (i as u64 % 5));
+        }
+        let a = Simulator::run(&epd_cfg(&spec), &reqs);
+        let b = Simulator::run(&epd_cfg(&spec), &reqs);
+        assert_eq!(a.mean_ttft(), b.mean_ttft());
+        assert_eq!(a.encoder_cache, b.encoder_cache);
     }
 
     #[test]

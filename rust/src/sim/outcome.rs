@@ -1,5 +1,6 @@
 //! Simulation results: per-request timelines plus system-level counters.
 
+use crate::cache::EncoderCacheStats;
 use crate::core::request::RequestTimeline;
 use crate::core::slo::Slo;
 use crate::util::stats::{self, Summary};
@@ -16,6 +17,11 @@ pub struct SimOutcome {
     pub busy: [f64; 3],
     /// Requests rejected at admission (cache exhaustion with no recovery).
     pub rejected: u32,
+    /// Cross-request encoder-cache counters. All zero when the workload
+    /// carries no `media_hash`; with the cache disabled (capacity 0),
+    /// `hits`/`insertions` stay zero but lookups still count as `misses`
+    /// and population attempts as `rejected`.
+    pub encoder_cache: EncoderCacheStats,
 }
 
 impl SimOutcome {
@@ -99,6 +105,7 @@ mod tests {
             role_switches: 0,
             busy: [1.0, 1.0, 1.0],
             rejected: 1,
+            encoder_cache: EncoderCacheStats::default(),
         }
     }
 

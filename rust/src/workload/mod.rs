@@ -11,8 +11,10 @@ pub mod nextqa;
 pub mod videomme;
 pub mod audio;
 pub mod arrival;
+pub mod repeated_media;
 
 pub use arrival::poisson_arrivals;
+pub use repeated_media::RepeatedMediaWorkload;
 pub use synthetic::SyntheticWorkload;
 
 use crate::core::request::Request;
@@ -39,6 +41,7 @@ pub(crate) fn build_request(
         output_tokens,
         tiles_per_image: tiles_for_image(spec, resolution),
         mm_tokens_per_image: mm_tokens_for_image(spec, resolution) as u32,
+        media_hash: None,
     }
 }
 

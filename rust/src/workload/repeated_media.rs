@@ -1,0 +1,173 @@
+//! Repeated-media workload: Zipf-distributed media popularity.
+//!
+//! Production multimodal traffic is not all-unique: hot thumbnails,
+//! shared video frames and few-shot prompt templates recur across
+//! requests (the observation behind EPD-Serve's cross-request encoder
+//! cache and ElasticMM's encode-pool elasticity). This generator models
+//! that with a fixed catalog of media items whose request popularity
+//! follows Zipf(`s`) — rank 1 is the hottest item — plus an optional
+//! fraction of never-repeated one-off media.
+//!
+//! Each generated request carries `media_hash = Some(content hash of its
+//! catalog item)`, which is what arms the cross-request encoder cache in
+//! both the simulator and the real engine; the remaining shape (prompt
+//! length, images, resolution, output length) matches the §4.1 synthetic
+//! workload.
+
+use super::{build_request, Workload};
+use crate::cache::content_hash_words;
+use crate::core::request::Request;
+use crate::model::spec::LmmSpec;
+use crate::model::vision::Resolution;
+use crate::util::rng::Rng;
+
+/// Domain-separation tag so catalog hashes cannot collide with other
+/// `content_hash_words` users (e.g. the engine's (seed, images) hashes).
+const CATALOG_TAG: u64 = 0x5EED_0CA7_A106_0000;
+
+/// Zipf-popularity repeated-media workload.
+#[derive(Debug, Clone)]
+pub struct RepeatedMediaWorkload {
+    /// Text prompt length (paper default: 22).
+    pub prompt_tokens: u32,
+    /// Images per request (all drawn from the same catalog item —
+    /// modelling e.g. one shared template or one re-sent photo set).
+    pub images_per_request: u32,
+    pub resolution: Resolution,
+    pub output_tokens: u32,
+    /// Distinct media items in the catalog.
+    pub catalog_size: u64,
+    /// Zipf exponent over catalog ranks (s > 0 skews toward rank 1;
+    /// s = 0 degenerates to uniform popularity).
+    pub zipf_s: f64,
+    /// Fraction of requests carrying fresh, never-repeated media
+    /// (cold-path traffic mixed into the hot catalog).
+    pub unique_frac: f64,
+}
+
+impl Default for RepeatedMediaWorkload {
+    fn default() -> Self {
+        RepeatedMediaWorkload {
+            prompt_tokens: 22,
+            images_per_request: 2,
+            resolution: Resolution::four_k(),
+            output_tokens: 10,
+            catalog_size: 50,
+            zipf_s: 1.1,
+            unique_frac: 0.0,
+        }
+    }
+}
+
+impl RepeatedMediaWorkload {
+    pub fn new(catalog_size: u64, zipf_s: f64) -> RepeatedMediaWorkload {
+        RepeatedMediaWorkload {
+            catalog_size: catalog_size.max(1),
+            zipf_s,
+            ..Default::default()
+        }
+    }
+
+    /// Content hash of catalog item `rank` (1-based Zipf rank).
+    pub fn item_hash(rank: u64) -> u64 {
+        content_hash_words(&[CATALOG_TAG, rank])
+    }
+}
+
+impl Workload for RepeatedMediaWorkload {
+    fn generate(&self, spec: &LmmSpec, n: usize, rate: f64, rng: &mut Rng) -> Vec<Request> {
+        let arrivals = super::arrival::poisson_arrivals(n, rate, rng);
+        let mut next_unique = 0u64;
+        arrivals
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let mut r = build_request(
+                    spec,
+                    i as u64,
+                    t,
+                    self.prompt_tokens,
+                    self.images_per_request,
+                    self.resolution,
+                    self.output_tokens.max(1),
+                );
+                let hash = if self.unique_frac > 0.0 && rng.bool(self.unique_frac) {
+                    next_unique += 1;
+                    // One-off media: unique hash, tagged separately from
+                    // the catalog so it can never alias a hot item.
+                    content_hash_words(&[CATALOG_TAG ^ u64::MAX, next_unique])
+                } else {
+                    Self::item_hash(rng.zipf(self.catalog_size, self.zipf_s))
+                };
+                if r.images > 0 {
+                    r.media_hash = Some(hash);
+                }
+                r
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "repeated-media"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelId;
+    use std::collections::HashMap;
+
+    #[test]
+    fn popularity_is_zipf_skewed() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut rng = Rng::new(5);
+        let w = RepeatedMediaWorkload::new(20, 1.2);
+        let reqs = w.generate(&spec, 4000, 1.0, &mut rng);
+        let mut counts: HashMap<u64, usize> = HashMap::new();
+        for r in &reqs {
+            *counts.entry(r.media_hash.unwrap()).or_default() += 1;
+        }
+        assert!(counts.len() <= 20, "bounded by the catalog");
+        let hottest = *counts.get(&RepeatedMediaWorkload::item_hash(1)).unwrap_or(&0);
+        let coldest = *counts.get(&RepeatedMediaWorkload::item_hash(20)).unwrap_or(&0);
+        assert!(
+            hottest > 5 * coldest.max(1),
+            "rank 1 ({hottest}) must dominate rank 20 ({coldest})"
+        );
+    }
+
+    #[test]
+    fn unique_frac_injects_cold_traffic() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut rng = Rng::new(6);
+        let mut w = RepeatedMediaWorkload::new(5, 1.0);
+        w.unique_frac = 0.5;
+        let reqs = w.generate(&spec, 1000, 1.0, &mut rng);
+        let mut counts: HashMap<u64, usize> = HashMap::new();
+        for r in &reqs {
+            *counts.entry(r.media_hash.unwrap()).or_default() += 1;
+        }
+        let singletons = counts.values().filter(|&&c| c == 1).count();
+        assert!(
+            (350..=650).contains(&singletons),
+            "~half the requests are one-off media ({singletons})"
+        );
+    }
+
+    #[test]
+    fn deterministic_and_shaped_like_synthetic() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let w = RepeatedMediaWorkload::default();
+        let a = w.generate(&spec, 50, 1.0, &mut Rng::new(9));
+        let b = w.generate(&spec, 50, 1.0, &mut Rng::new(9));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.media_hash, y.media_hash);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.prompt_tokens, 22);
+            assert_eq!(x.images, 2);
+            assert!(x.media_hash.is_some());
+        }
+        assert_eq!(w.name(), "repeated-media");
+    }
+}

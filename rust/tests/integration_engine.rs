@@ -77,6 +77,31 @@ fn identical_seeds_reproduce_tokens() {
 }
 
 #[test]
+fn encoder_cache_reuses_identical_media() {
+    if !artifacts() {
+        return;
+    }
+    let epd = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
+    let engine = EpdEngine::start(EngineConfig::new("artifacts", epd)).unwrap();
+    // Same (seed, images) ⇒ same media content ⇒ second request must hit
+    // the cross-request encoder cache, skip encode, and still produce the
+    // exact tokens of the miss-path request.
+    let a = engine.generate(2, "cache check", 10).unwrap();
+    let b = engine.generate(2, "cache check", 10).unwrap();
+    assert_eq!(a.tokens, b.tokens, "hit path reproduces miss-path tokens");
+    assert_eq!(engine.metrics.encoder_cache_hits(), 1);
+    assert_eq!(engine.metrics.encoder_cache_misses(), 1);
+    // Only the miss migrated MM bytes across the EP edge.
+    let ep = engine
+        .queues()
+        .transfers
+        .ep_count
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(ep, 1, "cache hit skips the EP migration");
+    engine.shutdown();
+}
+
+#[test]
 fn distserve_and_aggregated_modes_serve() {
     if !artifacts() {
         return;

@@ -3,6 +3,7 @@
 //! built-in quickcheck framework with deterministic seeds.
 
 use epdserve::cache::block::BlockPool;
+use epdserve::cache::encoder_cache::EncoderCache;
 use epdserve::cache::kv_block_manager::KvBlockManager;
 use epdserve::cache::mm_block_manager::MmBlockManager;
 use epdserve::util::quickcheck::{forall_cfg, vec_of, usize_in, Config};
@@ -178,6 +179,133 @@ fn pool_alloc_n_atomicity() {
             let held_total: u32 = held.iter().map(|b| b.len() as u32).sum();
             if pool.allocated_blocks() != held_total {
                 return Err("accounting mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Cross-request encoder cache: under arbitrary interleavings of
+/// lookup/insert/unpin/churn, (a) block conservation holds, (b) a pinned
+/// entry is NEVER evicted — its hash stays resident until its last pin is
+/// released — and (c) stats stay consistent with observed outcomes.
+#[test]
+fn encoder_cache_pinned_never_evicted() {
+    forall_cfg(
+        Config { cases: 60, seed: 77, max_shrink_steps: 0 },
+        vec_of(usize_in(0, 99), 300),
+        |ops| {
+            let mut c = EncoderCache::new(48, 64);
+            let mut rng = Rng::new(21);
+            // hash -> pins we hold (mirrors what the cache must preserve).
+            let mut pinned: Vec<(u64, u32)> = Vec::new();
+            for &op in ops {
+                match op % 4 {
+                    0 | 1 => {
+                        // A request arrives for a (small) media catalog.
+                        let h = rng.below(40);
+                        if c.lookup_pin(h).is_some() {
+                            match pinned.iter_mut().find(|(ph, _)| *ph == h) {
+                                Some((_, n)) => *n += 1,
+                                None => pinned.push((h, 1)),
+                            }
+                        } else {
+                            // Miss path: encode finished, populate pinned.
+                            let tokens = 64 * (1 + rng.below(6));
+                            if c.insert_pinned(h, tokens, None) {
+                                match pinned.iter_mut().find(|(ph, _)| *ph == h) {
+                                    Some((_, n)) => *n += 1,
+                                    None => pinned.push((h, 1)),
+                                }
+                            }
+                        }
+                    }
+                    2 => {
+                        // Transfer confirmed (or request aborted): unpin.
+                        if !pinned.is_empty() {
+                            let i = rng.below(pinned.len() as u64) as usize;
+                            c.unpin(pinned[i].0);
+                            pinned[i].1 -= 1;
+                            if pinned[i].1 == 0 {
+                                pinned.swap_remove(i);
+                            }
+                        }
+                    }
+                    _ => {
+                        // Cold churn pressuring the LRU into evictions.
+                        let h = 1_000_000 + rng.below(1_000_000);
+                        if c.insert_pinned(h, 64, None) {
+                            c.unpin(h);
+                        }
+                    }
+                }
+                // (a) conservation after every op.
+                let pool = c.pool();
+                if pool.free_blocks() + pool.allocated_blocks() != 48 {
+                    return Err("block conservation violated".into());
+                }
+                // (b) every pinned hash is still resident with >= our pins.
+                for &(h, n) in &pinned {
+                    match c.pins_of(h) {
+                        Some(p) if p >= n => {}
+                        other => {
+                            return Err(format!(
+                                "pinned hash {h} lost: pins_of = {other:?}, held {n}"
+                            ))
+                        }
+                    }
+                }
+            }
+            // (c) drain: release every pin; full eviction must now succeed.
+            for (h, n) in pinned.drain(..) {
+                for _ in 0..n {
+                    c.unpin(h);
+                }
+            }
+            c.clear_unpinned();
+            if c.pool().free_blocks() != 48 {
+                return Err(format!("leaked after drain: {} free of 48", c.pool().free_blocks()));
+            }
+            if c.len() != 0 {
+                return Err("entries survived clear_unpinned with zero pins".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Abort-path property: a request that pins an entry and aborts (unpin
+/// without consuming) always leaves the cache able to reclaim the entry,
+/// for any number of concurrent pinners.
+#[test]
+fn encoder_cache_abort_releases_refcounts() {
+    forall_cfg(
+        Config { cases: 120, seed: 123, max_shrink_steps: 0 },
+        usize_in(1, 16),
+        |&pinners| {
+            let mut c = EncoderCache::new(2, 64);
+            if !c.insert_pinned(7, 128, None) {
+                return Err("initial insert failed".into());
+            }
+            c.unpin(7);
+            for _ in 0..pinners {
+                if c.lookup_pin(7).is_none() {
+                    return Err("resident entry must hit".into());
+                }
+            }
+            // All pinners abort.
+            for _ in 0..pinners {
+                c.unpin(7);
+            }
+            if c.pins_of(7) != Some(0) {
+                return Err(format!("pins not drained: {:?}", c.pins_of(7)));
+            }
+            // The full-capacity insert must now be able to evict it.
+            if !c.insert_pinned(99, 128, None) {
+                return Err("aborted entry still blocks eviction".into());
+            }
+            if c.contains(7) {
+                return Err("victim survived eviction".into());
             }
             Ok(())
         },

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Repo-wide lint/doc/test gate — run before every PR (also wired as
+# `make check`). Mirrors what a CI job would run; every step treats
+# warnings as errors so drift is caught at the source.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "==> cargo fmt --check"
+cargo fmt --all -- --check
+
+echo "==> cargo clippy (-D warnings)"
+cargo clippy --all-targets -- -D warnings
+
+echo "==> cargo doc --no-deps (-D warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "==> cargo build --release"
+cargo build --release --quiet
+
+echo "==> cargo test"
+cargo test -q
+
+echo "All checks passed."

@@ -1,6 +1,6 @@
 # Convenience targets; see README.md.
 
-.PHONY: artifacts build test bench check
+.PHONY: artifacts build test bench check ci
 
 artifacts:
 	cd python && python -m compile.aot --out ../artifacts
@@ -16,3 +16,7 @@ bench:
 
 check:
 	scripts/check.sh
+
+# The exact steps .github/workflows/ci.yml runs, locally — check.sh is
+# the single source of truth the workflow mirrors.
+ci: check

@@ -46,6 +46,44 @@ pub fn plan_shards(total_tiles: u32, max_fanout: u32, irp_enabled: bool) -> Shar
     ShardPlan { tiles_per_shard }
 }
 
+/// Like [`plan_shards`], but with shard boundaries aligned to multiples of
+/// `align_tiles` so IRP composes with chunked EP streaming: when encoder
+/// shards emit fixed-size token chunks, alignment guarantees every chunk's
+/// tiles live on one shard — no chunk straddles two encode instances.
+/// Every shard except possibly the last is a whole number of alignment
+/// units; the last absorbs the remainder. `align_tiles <= 1` degrades to
+/// [`plan_shards`].
+pub fn plan_shards_aligned(
+    total_tiles: u32,
+    max_fanout: u32,
+    irp_enabled: bool,
+    align_tiles: u32,
+) -> ShardPlan {
+    if align_tiles <= 1 {
+        return plan_shards(total_tiles, max_fanout, irp_enabled);
+    }
+    if total_tiles == 0 {
+        return ShardPlan { tiles_per_shard: vec![] };
+    }
+    if !irp_enabled || max_fanout <= 1 {
+        return ShardPlan { tiles_per_shard: vec![total_tiles] };
+    }
+    // Distribute whole alignment units across the fan-out, then trim the
+    // final shard back to the true tile count.
+    let units = total_tiles.div_ceil(align_tiles);
+    let fanout = max_fanout.min(units).max(1);
+    let base = units / fanout;
+    let rem = units % fanout;
+    let mut tiles_per_shard: Vec<u32> = (0..fanout)
+        .map(|i| (base + if i < rem { 1 } else { 0 }) * align_tiles)
+        .collect();
+    let overshoot = units * align_tiles - total_tiles;
+    let last = tiles_per_shard.len() - 1;
+    debug_assert!(overshoot < align_tiles && tiles_per_shard[last] > overshoot);
+    tiles_per_shard[last] -= overshoot;
+    ShardPlan { tiles_per_shard }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,6 +131,65 @@ mod tests {
         let par5 = plan_shards(40, 5, true).max_shard_tiles();
         assert_eq!(serial, 40);
         assert_eq!(par5, 8);
+    }
+
+    #[test]
+    fn aligned_split_keeps_chunk_boundaries() {
+        // 60 tiles, fan-out 5, chunks of 8 tiles: 8 units over 5 workers,
+        // tail shard trimmed by the 4-tile overshoot.
+        let p = plan_shards_aligned(60, 5, true, 8);
+        assert_eq!(p.tiles_per_shard, vec![16, 16, 16, 8, 4]);
+        assert_eq!(p.total_tiles(), 60);
+        for &t in &p.tiles_per_shard[..p.tiles_per_shard.len() - 1] {
+            assert_eq!(t % 8, 0, "non-final shard off chunk boundary");
+        }
+    }
+
+    #[test]
+    fn aligned_degrades_to_plain_plan() {
+        assert_eq!(plan_shards_aligned(40, 5, true, 1), plan_shards(40, 5, true));
+        assert_eq!(plan_shards_aligned(40, 5, true, 0), plan_shards(40, 5, true));
+        assert_eq!(plan_shards_aligned(40, 5, false, 8).tiles_per_shard, vec![40]);
+        assert_eq!(plan_shards_aligned(0, 5, true, 8).num_shards(), 0);
+    }
+
+    #[test]
+    fn aligned_caps_fanout_at_units() {
+        // 10 tiles in 8-tile units = 2 units: at most 2 shards even with
+        // fan-out 5, and the tail shard carries the 2-tile remainder.
+        let p = plan_shards_aligned(10, 5, true, 8);
+        assert_eq!(p.tiles_per_shard, vec![8, 2]);
+    }
+
+    /// Property: aligned plans partition the tiles with no empty shard and
+    /// every non-final shard a whole number of alignment units.
+    #[test]
+    fn aligned_partition_property() {
+        use crate::util::quickcheck::{forall, pair, usize_in};
+        forall(
+            pair(pair(usize_in(1, 500), usize_in(1, 16)), usize_in(1, 64)),
+            |&((tiles, fanout), align)| {
+                let p = plan_shards_aligned(tiles as u32, fanout as u32, true, align as u32);
+                if p.total_tiles() != tiles as u32 {
+                    return Err(format!("lost tiles: {p:?}"));
+                }
+                if p.num_shards() > fanout as u32 {
+                    return Err(format!("fan-out exceeded: {p:?}"));
+                }
+                if p.tiles_per_shard.iter().any(|&t| t == 0) {
+                    return Err(format!("empty shard: {p:?}"));
+                }
+                if align > 1 {
+                    let n = p.tiles_per_shard.len();
+                    for &t in &p.tiles_per_shard[..n - 1] {
+                        if t % align as u32 != 0 {
+                            return Err(format!("misaligned shard: {p:?}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     /// Property: shards always partition the tiles, no shard empty.

@@ -8,7 +8,7 @@ pub mod migration;
 pub mod monitor;
 pub mod role_switch;
 
-pub use irp::{plan_shards, ShardPlan};
+pub use irp::{plan_shards, plan_shards_aligned, ShardPlan};
 pub use migration::{MigrationKind, TransferModel};
 pub use monitor::{QueueMonitor, StageLoad};
 pub use role_switch::{RoleSwitchController, SwitchDecision, SwitchPolicy};

@@ -122,6 +122,23 @@ pub struct EpdConfig {
     /// workload assigns a `media_hash` participate, so enabling it leaves
     /// unique-media workloads bit-identical.
     pub encoder_cache_tokens: u64,
+    /// Chunk size in MM tokens for the streamed encode→prefill handoff:
+    /// encoded tokens are transferred and admitted to the prefill queue
+    /// as they complete, so prefill computes over the prompt prefix and
+    /// early media chunks while later shards are still encoding
+    /// (RServe-style EP overlap). IRP shard boundaries are aligned to
+    /// chunk boundaries so intra-request parallelism composes with
+    /// streaming. The simulator models intra-shard emission at exactly
+    /// this granularity, including partial prefill passes over streamed
+    /// prefixes. The real engine streams the *transfer* at shard
+    /// granularity — each shard (sized to a whole number of chunks by the
+    /// aligned plan) is emitted as one partial payload the moment it
+    /// encodes and reassembled at the prefill side — but its prefill
+    /// compute still starts once reassembly completes (the tiny runtime
+    /// has no incremental prefill), so with IRP disabled the engine
+    /// handoff stays effectively monolithic. 0 (the default) keeps the
+    /// paper's all-at-once handoff.
+    pub ep_chunk_tokens: u64,
 }
 
 impl EpdConfig {
@@ -147,6 +164,7 @@ impl EpdConfig {
             kv_frac: 0.5,
             mm_cache_entries: 3000,
             encoder_cache_tokens: 1 << 20,
+            ep_chunk_tokens: 0,
         }
     }
 
@@ -202,6 +220,7 @@ impl EpdConfig {
     /// batch_prefill = 1
     /// batch_decode = 128
     /// encoder_cache_tokens = 1048576
+    /// ep_chunk_tokens = 512   # 0 = monolithic EP handoff
     /// [sched]
     /// queue = "fcfs"          # fcfs | sjf | slo-aware
     /// assign = "least-loaded" # round-robin | least-loaded
@@ -222,6 +241,9 @@ impl EpdConfig {
         cfg.kv_frac = doc.get_f64("", "kv_frac").unwrap_or(0.5);
         if let Some(t) = doc.get_i64("", "encoder_cache_tokens") {
             cfg.encoder_cache_tokens = t.max(0) as u64;
+        }
+        if let Some(t) = doc.get_i64("", "ep_chunk_tokens") {
+            cfg.ep_chunk_tokens = t.max(0) as u64;
         }
         if let Some(q) = doc.get_str("sched", "queue") {
             let q = QueuePolicy::parse(q).context("bad sched.queue")?;
@@ -250,6 +272,7 @@ mod tests {
         assert_eq!(cfg.topology(), Topology::new(5, 2, 1));
         assert_eq!(cfg.total_gpus(), 8);
         assert!(cfg.irp);
+        assert_eq!(cfg.ep_chunk_tokens, 0, "streaming is opt-in");
 
         let ds = EpdConfig::distserve(7, 1, 1, 128);
         assert_eq!(ds.mode, DeploymentMode::PdDisagg);
@@ -270,6 +293,7 @@ irp = true
 kv_frac = 0.8
 batch_decode = 64
 encoder_cache_tokens = 4096
+ep_chunk_tokens = 512
 [sched]
 queue = "sjf"
 assign = "round-robin"
@@ -280,6 +304,7 @@ assign = "round-robin"
         assert_eq!(cfg.topology(), Topology::new(5, 2, 1));
         assert_eq!(cfg.kv_frac, 0.8);
         assert_eq!(cfg.encoder_cache_tokens, 4096);
+        assert_eq!(cfg.ep_chunk_tokens, 512);
         assert_eq!(cfg.sched_decode.queue, QueuePolicy::Sjf);
         assert_eq!(cfg.sched_encode.assign, AssignPolicy::RoundRobin);
         let d = cfg.instances.iter().find(|i| i.role == Stage::Decode).unwrap();

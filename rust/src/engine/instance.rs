@@ -145,38 +145,47 @@ fn handle_ep_job(
     mode: DeploymentMode,
 ) {
     match job {
-        Job::Encode { ctx, shard, patches, tiles } => {
+        Job::Encode { ctx, shard, patches, tiles, stream } => {
             match rt.encode(&patches, tiles) {
                 Ok(mm) => {
-                    let bytes = mm.len() * 4;
-                    if ctx.shard_done(shard, mm) {
+                    if stream {
+                        // Chunked handoff: emit this shard's tokens to the
+                        // prefill side the moment they exist — no waiting
+                        // for sibling shards. The queue push *is* the EP
+                        // transfer; reassembly happens on a prefill worker.
+                        queues.account_ep(mm.len() * 4);
+                        metrics.on_ep_chunk();
+                        queues.push(Stage::Prefill, Job::PrefillChunk { ctx, shard, mm });
+                    } else if ctx.shard_done(shard, mm) {
                         // Last shard: EP migration of the merged tokens,
                         // shared between the prefill job and the cache.
                         let merged = std::sync::Arc::new(ctx.merged_mm());
-                        // Miss-path population of the cross-request
-                        // encoder cache: instead of the tokens dying with
-                        // the request, later requests carrying the same
-                        // media skip encode entirely. The pin is released
-                        // immediately — the queue push below *is* the
-                        // confirmed intra-process "transfer". Capacity is
-                        // charged in MM tokens (merged holds llm_hidden
-                        // floats per token), matching the simulator.
-                        if let Some(h) = ctx.media_hash {
-                            let mm_tokens =
-                                merged.len() as u64 / rt.config().llm_hidden.max(1) as u64;
-                            let payload = std::sync::Arc::clone(&merged);
-                            let mut cache = queues.encoder_cache.lock().unwrap();
-                            if cache.insert_pinned(h, mm_tokens, Some(payload)) {
-                                cache.unpin(h);
-                            }
-                        }
+                        populate_encoder_cache(rt, &ctx, &merged, queues);
                         queues.account_ep(merged.len() * 4);
                         queues.push(Stage::Prefill, Job::Prefill { ctx, mm: merged });
-                    } else {
-                        let _ = bytes;
                     }
                 }
-                Err(e) => warn!("encode failed for req {}: {e:#}", ctx.id),
+                Err(e) => {
+                    warn!("encode failed for req {}: {e:#}", ctx.id);
+                    if stream {
+                        // The request can never complete reassembly: drop
+                        // its partial state (sibling shards' payloads)
+                        // instead of leaking it in the global buffer.
+                        queues.reassembly.abort(ctx.id);
+                    }
+                }
+            }
+        }
+        Job::PrefillChunk { ctx, shard, mm } => {
+            // Ordered reassembly at the prefill side: out-of-order shard
+            // completion still yields an in-order, byte-identical payload
+            // (see `ReassemblyBuffer`). The worker that slots the final
+            // chunk runs the request's prefill immediately.
+            if let Some(merged) = queues.reassembly.insert(ctx.id, shard, mm) {
+                let merged = std::sync::Arc::new(merged);
+                populate_encoder_cache(rt, &ctx, &merged, queues);
+                metrics.on_ep_reassembled();
+                handle_ep_job(rt, Job::Prefill { ctx, mm: merged }, queues, metrics, mode);
             }
         }
         Job::Prefill { ctx, mm } => {
@@ -223,6 +232,31 @@ fn handle_ep_job(
             }
         }
         Job::Decode { .. } => unreachable!("decode jobs go through run_decode_batch"),
+    }
+}
+
+/// Miss-path population of the cross-request encoder cache at EP-merge
+/// time: instead of the tokens dying with the request, later requests
+/// carrying the same media skip encode entirely. The pin is released
+/// immediately — the enclosing queue push / prefill run *is* the confirmed
+/// intra-process "transfer". Capacity is charged in MM tokens (the payload
+/// holds `llm_hidden` floats per token), matching the simulator. A decline
+/// (capacity held by pinned entries) changes nothing: the payload is
+/// `Arc`-shared, so ownership stays with the prefill job either way — the
+/// cache never becomes the payload's only owner while a request needs it.
+fn populate_encoder_cache(
+    rt: &TinyLmmRuntime,
+    ctx: &Arc<ReqCtx>,
+    merged: &std::sync::Arc<Vec<f32>>,
+    queues: &Arc<StageQueues>,
+) {
+    if let Some(h) = ctx.media_hash {
+        let mm_tokens = merged.len() as u64 / rt.config().llm_hidden.max(1) as u64;
+        let payload = std::sync::Arc::clone(merged);
+        let mut cache = queues.encoder_cache.lock().unwrap();
+        if cache.insert_pinned(h, mm_tokens, Some(payload)) {
+            cache.unpin(h);
+        }
     }
 }
 

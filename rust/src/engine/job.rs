@@ -105,6 +105,11 @@ pub enum Job {
         /// Flattened `[tiles, num_patches, patch_dim]`.
         patches: Vec<f32>,
         tiles: u32,
+        /// Chunked EP streaming (`EpdConfig::ep_chunk_tokens > 0`): emit
+        /// this shard's tokens to the prefill side as soon as they exist
+        /// instead of merging on the last shard; reassembly happens in
+        /// [`super::queues::ReassemblyBuffer`] at the prefill side.
+        stream: bool,
     },
     /// A request whose MM tokens arrived at the prefill side. The tokens
     /// are shared (`Arc`) so an encoder-cache entry and any number of
@@ -112,6 +117,14 @@ pub enum Job {
     Prefill {
         ctx: std::sync::Arc<ReqCtx>,
         mm: std::sync::Arc<Vec<f32>>,
+    },
+    /// A partial EP payload: one streamed shard's MM tokens, headed for
+    /// the prefill-side reassembly buffer. The prefill worker that
+    /// completes a request's reassembly runs its prefill immediately.
+    PrefillChunk {
+        ctx: std::sync::Arc<ReqCtx>,
+        shard: usize,
+        mm: Vec<f32>,
     },
     /// A prefilled request migrating to decode.
     Decode {

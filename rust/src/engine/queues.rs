@@ -3,12 +3,13 @@
 //! process-wide cross-request encoder cache (shared here because both the
 //! submit path and the instance threads touch it).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 use crate::cache::EncoderCache;
+use crate::core::request::RequestId;
 use crate::core::stage::Stage;
 
 use super::job::Job;
@@ -27,6 +28,90 @@ pub struct TransferStats {
     pub pd_count: AtomicU64,
 }
 
+/// Prefill-side ordered reassembly of streamed EP chunks (chunked
+/// handoff, `EpdConfig::ep_chunk_tokens > 0`). Encoder shards complete in
+/// arbitrary order across instances; the buffer slots each partial
+/// payload by shard index and releases the request only when every part
+/// has landed — concatenated **in shard order**, so the merged payload is
+/// byte-identical to the monolithic last-shard merge regardless of
+/// arrival order (property-tested in `rust/tests/property_streaming.rs`).
+#[derive(Debug, Default)]
+pub struct ReassemblyBuffer {
+    inner: Mutex<HashMap<RequestId, Reassembly>>,
+}
+
+#[derive(Debug)]
+struct Reassembly {
+    parts: Vec<Option<Vec<f32>>>,
+    arrived: usize,
+}
+
+impl ReassemblyBuffer {
+    pub fn new() -> ReassemblyBuffer {
+        ReassemblyBuffer::default()
+    }
+
+    /// Register a request expecting `parts` streamed shards. Must be
+    /// called before the first chunk can arrive (i.e. before the encode
+    /// jobs are enqueued). Idempotent for the same part count.
+    pub fn expect(&self, id: RequestId, parts: usize) {
+        assert!(parts > 0, "reassembly needs at least one part");
+        let mut g = self.inner.lock().unwrap();
+        let e = g
+            .entry(id)
+            .or_insert_with(|| Reassembly { parts: vec![None; parts], arrived: 0 });
+        assert_eq!(e.parts.len(), parts, "conflicting part count for req {id}");
+    }
+
+    /// Slot one shard's tokens. Returns the in-order merged payload when
+    /// this was the final outstanding part (the request's reassembly state
+    /// is dropped), `None` while parts are still missing.
+    ///
+    /// A chunk for an id with no registered reassembly is dropped with
+    /// `None`: a sibling shard's encode failure aborts the request
+    /// ([`Self::abort`]) while this shard's chunk may already sit in — or
+    /// still be headed for — the prefill queue, in either order.
+    ///
+    /// # Panics
+    /// On duplicate shard indices for a registered request — a caller bug
+    /// that must not be absorbed silently.
+    pub fn insert(&self, id: RequestId, shard: usize, mm: Vec<f32>) -> Option<Vec<f32>> {
+        // Hold the lock only for the slotting; the O(payload) merge of the
+        // final chunk happens outside it so concurrent workers' inserts
+        // for other requests never serialize behind a large memcpy.
+        let complete = {
+            let mut g = self.inner.lock().unwrap();
+            let Some(e) = g.get_mut(&id) else {
+                return None; // aborted request: drop the orphan chunk
+            };
+            assert!(e.parts[shard].is_none(), "duplicate shard {shard} for req {id}");
+            e.parts[shard] = Some(mm);
+            e.arrived += 1;
+            if e.arrived < e.parts.len() {
+                return None;
+            }
+            g.remove(&id).unwrap()
+        };
+        let mut merged =
+            Vec::with_capacity(complete.parts.iter().map(|p| p.as_ref().unwrap().len()).sum());
+        for p in complete.parts {
+            merged.extend_from_slice(&p.unwrap());
+        }
+        Some(merged)
+    }
+
+    /// Drop a request's partial state (abort/cancel path). Returns whether
+    /// anything was pending.
+    pub fn abort(&self, id: RequestId) -> bool {
+        self.inner.lock().unwrap().remove(&id).is_some()
+    }
+
+    /// Requests with outstanding parts.
+    pub fn pending(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+}
+
 /// The shared queue fabric.
 pub struct StageQueues {
     encode: Mutex<VecDeque<Job>>,
@@ -41,8 +126,11 @@ pub struct StageQueues {
     pub roles: Mutex<Vec<Stage>>,
     /// Cross-request content-addressed encoder cache: submit consults it
     /// (hit → straight to prefill), instance threads populate it when the
-    /// last IRP shard merges.
+    /// last IRP shard merges (or, under streaming, when reassembly
+    /// completes at the prefill side).
     pub encoder_cache: Mutex<EncoderCache>,
+    /// Prefill-side reassembly of streamed EP chunks.
+    pub reassembly: ReassemblyBuffer,
 }
 
 impl StageQueues {
@@ -69,6 +157,7 @@ impl StageQueues {
                 cache_tokens,
                 ENCODER_CACHE_BLOCK_TOKENS,
             )),
+            reassembly: ReassemblyBuffer::new(),
         }
     }
 
@@ -215,6 +304,50 @@ mod tests {
         assert_eq!(c.lookup_pin(42), Some(64));
         assert_eq!(c.payload(42).unwrap().len(), 64);
         c.unpin(42);
+    }
+
+    #[test]
+    fn reassembly_out_of_order_merges_in_order() {
+        let rb = ReassemblyBuffer::new();
+        rb.expect(7, 3);
+        assert_eq!(rb.pending(), 1);
+        assert!(rb.insert(7, 2, vec![5.0, 6.0]).is_none());
+        assert!(rb.insert(7, 0, vec![1.0, 2.0]).is_none());
+        let merged = rb.insert(7, 1, vec![3.0, 4.0]).unwrap();
+        assert_eq!(merged, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(rb.pending(), 0, "completed request dropped");
+    }
+
+    #[test]
+    fn reassembly_abort_clears_partial_state() {
+        let rb = ReassemblyBuffer::new();
+        rb.expect(1, 2);
+        assert!(rb.insert(1, 0, vec![1.0]).is_none());
+        assert!(rb.abort(1));
+        assert!(!rb.abort(1));
+        assert_eq!(rb.pending(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate shard")]
+    fn reassembly_duplicate_chunk_panics() {
+        let rb = ReassemblyBuffer::new();
+        rb.expect(1, 2);
+        rb.insert(1, 0, vec![1.0]);
+        rb.insert(1, 0, vec![1.0]);
+    }
+
+    #[test]
+    fn reassembly_orphan_chunk_after_abort_is_dropped() {
+        // A sibling shard's encode failure aborts the request; this
+        // shard's already-queued chunk must be dropped, not panic the
+        // prefill worker — in either abort/insert order.
+        let rb = ReassemblyBuffer::new();
+        rb.expect(3, 2);
+        rb.abort(3);
+        assert!(rb.insert(3, 1, vec![1.0]).is_none());
+        assert!(rb.insert(99, 0, vec![1.0]).is_none(), "never-registered id");
+        assert_eq!(rb.pending(), 0);
     }
 
     #[test]

@@ -174,7 +174,20 @@ impl EpdEngine {
         } else {
             1
         };
-        let plan = crate::coordinator::irp::plan_shards(tiles, fanout, self.cfg.epd.irp);
+        // Chunked EP streaming: shards emit their tokens to the prefill
+        // side as they complete instead of merging on the last shard.
+        // Shard boundaries align to chunk boundaries (tiny-lmm emits
+        // `ENCODER_CACHE_BLOCK_TOKENS` MM tokens per tile).
+        let chunk_tokens = self.cfg.epd.ep_chunk_tokens;
+        let stream = chunk_tokens > 0 && tiles > 0;
+        let plan = if stream {
+            let align = (chunk_tokens
+                / super::queues::ENCODER_CACHE_BLOCK_TOKENS as u64)
+                .clamp(1, u32::MAX as u64) as u32;
+            crate::coordinator::irp::plan_shards_aligned(tiles, fanout, self.cfg.epd.irp, align)
+        } else {
+            crate::coordinator::irp::plan_shards(tiles, fanout, self.cfg.epd.irp)
+        };
         let shards_total = plan.num_shards().max(1);
 
         let ctx = Arc::new(ReqCtx::new(
@@ -214,6 +227,13 @@ impl EpdEngine {
             }
         }
 
+        // Miss under streaming: register the reassembly slots before any
+        // encode job can complete, and count the request as streamed.
+        if stream {
+            self.queues.reassembly.expect(id, shards_total as usize);
+            self.metrics.on_ep_streamed();
+        }
+
         // Generate synthetic patch data per tile (the "image"): content is
         // a pure function of the caller-provided seed, so identical
         // requests reproduce identical tokens regardless of request id.
@@ -235,6 +255,7 @@ impl EpdEngine {
                     shard,
                     patches,
                     tiles: shard_tiles,
+                    stream,
                 },
             );
         }

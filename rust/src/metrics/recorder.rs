@@ -27,6 +27,12 @@ pub struct MetricsRecorder {
     enc_cache_hits: AtomicU64,
     /// Lookups that went through the full encode path.
     enc_cache_misses: AtomicU64,
+    /// Streamed EP chunks emitted by encode shards (chunked handoff).
+    ep_chunks: AtomicU64,
+    /// Requests admitted through the streamed EP pipeline.
+    ep_streamed: AtomicU64,
+    /// Streamed requests whose chunks finished reassembly at prefill.
+    ep_reassembled: AtomicU64,
 }
 
 impl MetricsRecorder {
@@ -59,6 +65,35 @@ impl MetricsRecorder {
             return 0.0;
         }
         h as f64 / (h + m) as f64
+    }
+
+    /// Record one streamed EP chunk leaving an encode shard (the TTFT-
+    /// overlap signal: chunks landing before the last shard merges are
+    /// prefill-side work the monolithic handoff would have serialized).
+    pub fn on_ep_chunk(&self) {
+        self.ep_chunks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a request entering the streamed EP pipeline at submit.
+    pub fn on_ep_streamed(&self) {
+        self.ep_streamed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a streamed request completing prefill-side reassembly.
+    pub fn on_ep_reassembled(&self) {
+        self.ep_reassembled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn ep_chunks(&self) -> u64 {
+        self.ep_chunks.load(Ordering::Relaxed)
+    }
+
+    pub fn ep_streamed_requests(&self) -> u64 {
+        self.ep_streamed.load(Ordering::Relaxed)
+    }
+
+    pub fn ep_reassembled_requests(&self) -> u64 {
+        self.ep_reassembled.load(Ordering::Relaxed)
     }
 
     pub fn on_arrival(&self, id: RequestId) {
@@ -165,6 +200,17 @@ impl MetricsRecorder {
                     ("hit_rate", Json::num(self.encoder_cache_hit_rate())),
                 ]),
             ),
+            (
+                "ep_streaming",
+                Json::obj(vec![
+                    ("chunks", Json::num(self.ep_chunks() as f64)),
+                    ("streamed_requests", Json::num(self.ep_streamed_requests() as f64)),
+                    (
+                        "reassembled_requests",
+                        Json::num(self.ep_reassembled_requests() as f64),
+                    ),
+                ]),
+            ),
         ])
     }
 }
@@ -221,6 +267,19 @@ mod tests {
         assert_eq!(j.get("finished").unwrap().as_u64(), Some(1));
         assert!(j.get("ttft").unwrap().get("mean").is_some());
         assert!(j.get("encoder_cache").unwrap().get("hit_rate").is_some());
+        assert!(j.get("ep_streaming").unwrap().get("chunks").is_some());
+    }
+
+    #[test]
+    fn ep_streaming_counters() {
+        let m = MetricsRecorder::new();
+        m.on_ep_streamed();
+        m.on_ep_chunk();
+        m.on_ep_chunk();
+        m.on_ep_reassembled();
+        assert_eq!(m.ep_streamed_requests(), 1);
+        assert_eq!(m.ep_chunks(), 2);
+        assert_eq!(m.ep_reassembled_requests(), 1);
     }
 
     #[test]

@@ -144,6 +144,22 @@ impl CostModel {
             + (linear + quad) / (self.device.peak_flops * self.device.mfu_prefill)
     }
 
+    /// Incremental prefill cost of extending an already-computed prefix of
+    /// `prev` context tokens by `new` tokens — one pass of the chunked EP
+    /// streaming pipeline. Summed over a request's passes this equals the
+    /// full-context compute plus one per-invocation overhead per pass:
+    /// chunking never gets FLOPs for free, it only overlaps them with
+    /// encoding and transfer.
+    pub fn prefill_extend_time(&self, prev: u64, new: u64) -> f64 {
+        if new == 0 {
+            return 0.0;
+        }
+        if prev == 0 {
+            return self.prefill_time(new);
+        }
+        self.overheads.prefill_step + self.prefill_time(prev + new) - self.prefill_time(prev)
+    }
+
     /// One decode step for a batch of `batch` sequences with mean context
     /// `avg_ctx`. Bandwidth-bound: every step reads the weights once and
     /// each sequence's KV cache.
@@ -293,6 +309,40 @@ mod tests {
             + c26.encode_time(11)
             + c26.prefill_time(13_334);
         assert!(epd26 < 7.05, "EPD with IRP under SLO: {epd26}");
+    }
+
+    #[test]
+    fn extend_passes_sum_to_full_prefill_plus_overheads() {
+        let c = cm(ModelId::InternVl2_8b);
+        let total = 13_334u64;
+        let chunk = 1024u64;
+        let mut done = 0u64;
+        let mut passes = 0u32;
+        let mut sum = 0.0;
+        while done < total {
+            let new = chunk.min(total - done);
+            sum += c.prefill_extend_time(done, new);
+            done += new;
+            passes += 1;
+        }
+        let full = c.prefill_time(total);
+        let expected = full + (passes as f64 - 1.0) * c.overheads.prefill_step;
+        assert!(
+            (sum - expected).abs() < 1e-9,
+            "sum {sum} vs full-plus-overheads {expected}"
+        );
+        assert!(sum > full, "chunking pays extra invocation overhead");
+    }
+
+    #[test]
+    fn extend_degenerate_cases() {
+        let c = cm(ModelId::MiniCpmV26);
+        assert_eq!(c.prefill_extend_time(1000, 0), 0.0);
+        assert_eq!(c.prefill_extend_time(0, 512), c.prefill_time(512));
+        // Later passes cost more per token (quadratic attention tail).
+        let early = c.prefill_extend_time(0, 1024);
+        let late = c.prefill_extend_time(12_000, 1024);
+        assert!(late > early, "late {late} vs early {early}");
     }
 
     #[test]

@@ -19,7 +19,7 @@ use std::collections::HashMap;
 use crate::cache::encoder_cache::EncoderCache;
 use crate::cache::kv_block_manager::KvBlockManager;
 use crate::cache::mm_block_manager::MmBlockManager;
-use crate::coordinator::irp::plan_shards;
+use crate::coordinator::irp::{plan_shards, plan_shards_aligned};
 use crate::coordinator::migration::{MigrationKind, TransferModel};
 use crate::coordinator::monitor::QueueMonitor;
 use crate::coordinator::role_switch::{RoleSwitchController, SwitchPolicy};
@@ -35,7 +35,7 @@ use crate::sched::queue::{QueuedRequest, StageQueue};
 
 use super::cost::CostModel;
 use super::event::{Event, EventQueue};
-use super::outcome::SimOutcome;
+use super::outcome::{EpOverlapStats, SimOutcome};
 
 /// Simulator configuration.
 #[derive(Debug, Clone)]
@@ -124,6 +124,23 @@ struct ReqState {
     /// This request holds a pin on its encoder-cache entry (released at
     /// EP-transfer confirmation / fused-step completion).
     cache_pinned: bool,
+    // ---- chunked EP streaming state (ep_chunk_tokens > 0 only) ----
+    /// Tiles whose MM tokens have had chunk transfers scheduled.
+    tiles_emitted: u32,
+    /// MM tokens whose chunk transfers have been scheduled (exact
+    /// cumulative split: per-shard counts always sum to the total).
+    mm_tokens_emitted: u64,
+    /// MM tokens that have landed at the prefill side.
+    mm_tokens_arrived: u64,
+    /// Prefill tokens already computed by partial passes.
+    prefill_done_tokens: u64,
+    /// Tokens claimed by the pass currently in flight.
+    prefill_inflight_tokens: u64,
+    /// Sticky prefill instance — keeps a request's passes (and therefore
+    /// its growing KV prefix) on one instance.
+    prefill_inst: Option<usize>,
+    /// The request sits in a prefill queue or in a running pass.
+    prefill_queued: bool,
 }
 
 impl ReqState {
@@ -137,7 +154,20 @@ impl ReqState {
             rejected: false,
             encode_cached: false,
             cache_pinned: false,
+            tiles_emitted: 0,
+            mm_tokens_emitted: 0,
+            mm_tokens_arrived: 0,
+            prefill_done_tokens: 0,
+            prefill_inflight_tokens: 0,
+            prefill_inst: None,
+            prefill_queued: false,
         }
+    }
+
+    /// Prefill tokens currently available to a partial pass: the prompt
+    /// prefix plus every streamed MM chunk that has landed.
+    fn available_prefill_tokens(&self) -> u64 {
+        self.req.prompt_tokens as u64 + self.mm_tokens_arrived
     }
 }
 
@@ -160,6 +190,7 @@ pub struct Simulator<'a> {
     switch_ctl: RoleSwitchController,
     monitor: QueueMonitor,
     busy_acc: [f64; 3],
+    ep_overlap: EpOverlapStats,
     role_switches: u32,
     rejected: u32,
     pending_arrivals: HashMap<RequestId, Request>,
@@ -230,6 +261,7 @@ impl<'a> Simulator<'a> {
             switch_ctl: RoleSwitchController::new(cfg.switch_policy),
             monitor: QueueMonitor::new(0.3),
             busy_acc: [0.0; 3],
+            ep_overlap: EpOverlapStats::default(),
             role_switches: 0,
             rejected: 0,
             pending_arrivals: pending,
@@ -245,6 +277,9 @@ impl<'a> Simulator<'a> {
                 Event::Arrival(id) => self.on_arrival(id),
                 Event::EncodeDone { instance } => self.on_encode_done(instance),
                 Event::EpTransferDone { req } => self.on_ep_transfer_done(req),
+                Event::EpChunkTransferDone { req, tokens } => {
+                    self.on_ep_chunk_transfer_done(req, tokens)
+                }
                 Event::PrefillDone { instance } => self.on_prefill_done(instance),
                 Event::PdTransferDone { req } => self.on_pd_transfer_done(req),
                 Event::DecodeStepDone { instance } => self.on_decode_step_done(instance),
@@ -284,7 +319,16 @@ impl<'a> Simulator<'a> {
             busy: self.busy_acc,
             rejected: self.rejected,
             encoder_cache: self.enc_cache.stats(),
+            ep_overlap: self.ep_overlap,
         }
+    }
+
+    /// Chunked EP streaming is active: EPD mode with a non-zero chunk
+    /// size. The fused baselines have no EP edge to stream over — there
+    /// `ep_chunk_tokens` only enables host/device pipelining in
+    /// [`Self::start_fused`].
+    fn chunked(&self) -> bool {
+        self.cfg.epd.ep_chunk_tokens > 0 && self.cfg.epd.mode == DeploymentMode::Epd
     }
 
     // ---- instance selection ----
@@ -343,7 +387,22 @@ impl<'a> Simulator<'a> {
         match self.cfg.epd.mode {
             DeploymentMode::Epd => {
                 let fanout = entry.len() as u32;
-                let plan = plan_shards(total_tiles, fanout, self.cfg.epd.irp);
+                let chunked = self.chunked();
+                // Streaming aligns IRP shard boundaries to chunk boundaries
+                // so no chunk straddles two encode instances.
+                let plan = if chunked {
+                    let tokens_per_tile =
+                        (req.mm_tokens_per_image / req.tiles_per_image.max(1)).max(1);
+                    let align = (self.cfg.epd.ep_chunk_tokens / tokens_per_tile as u64).max(1);
+                    plan_shards_aligned(
+                        total_tiles,
+                        fanout,
+                        self.cfg.epd.irp,
+                        align.min(u32::MAX as u64) as u32,
+                    )
+                } else {
+                    plan_shards(total_tiles, fanout, self.cfg.epd.irp)
+                };
                 let shards_total = plan.num_shards().max(1);
                 self.reqs.insert(id, ReqState::new(req.clone(), tl, shards_total));
 
@@ -352,28 +411,67 @@ impl<'a> Simulator<'a> {
                     let r = self.reqs.get_mut(&id).unwrap();
                     r.tl.encode_start = self.now;
                     r.tl.encode_end = self.now;
-                    self.enqueue_prefill(id);
+                    if chunked {
+                        self.maybe_enqueue_prefill_chunked(id);
+                    } else {
+                        self.enqueue_prefill(id);
+                    }
                     return;
                 }
                 if cache_hit {
                     // Hit: pay the lookup, then go straight to the EP
                     // transfer of the cached tokens — no encode queueing,
                     // no encoder occupancy.
-                    let r = self.reqs.get_mut(&id).unwrap();
-                    r.encode_cached = true;
-                    r.cache_pinned = true;
-                    r.shards_total = 0;
-                    r.tl.encode_start = self.now;
-                    r.tl.encode_end = self.now + self.cost.cache_hit_time();
-                    let t = self.transfer.migration_time(
-                        MigrationKind::EncodeToPrefill,
-                        &self.cfg.spec,
-                        req.total_mm_tokens(),
-                        0,
-                    );
-                    let done = r.tl.encode_end + t;
-                    self.events.push(done, Event::EpTransferDone { req: id });
+                    let encode_end = {
+                        let r = self.reqs.get_mut(&id).unwrap();
+                        r.encode_cached = true;
+                        r.cache_pinned = true;
+                        r.shards_total = 0;
+                        r.tl.encode_start = self.now;
+                        r.tl.encode_end = self.now + self.cost.cache_hit_time();
+                        r.tl.encode_end
+                    };
+                    if chunked {
+                        // Cached chunks stream at transfer cost only,
+                        // serialized on the cache holder's link; prefill
+                        // starts on the first chunk.
+                        self.ep_overlap.streamed_requests += 1;
+                        let total_mm = req.total_mm_tokens();
+                        let chunk = self.cfg.epd.ep_chunk_tokens;
+                        let mut sent = 0u64;
+                        let mut t = encode_end;
+                        while sent < total_mm {
+                            let c = chunk.min(total_mm - sent);
+                            sent += c;
+                            t += self.transfer.migration_time(
+                                MigrationKind::EncodeToPrefill,
+                                &self.cfg.spec,
+                                c,
+                                0,
+                            );
+                            self.events
+                                .push(t, Event::EpChunkTransferDone { req: id, tokens: c });
+                        }
+                        if total_mm == 0 {
+                            self.events.push(
+                                encode_end,
+                                Event::EpChunkTransferDone { req: id, tokens: 0 },
+                            );
+                        }
+                    } else {
+                        let t = self.transfer.migration_time(
+                            MigrationKind::EncodeToPrefill,
+                            &self.cfg.spec,
+                            req.total_mm_tokens(),
+                            0,
+                        );
+                        self.events
+                            .push(encode_end + t, Event::EpTransferDone { req: id });
+                    }
                     return;
+                }
+                if chunked {
+                    self.ep_overlap.streamed_requests += 1;
                 }
                 // Spread shards over distinct least-loaded encode
                 // instances. A single-shard request with a media hash —
@@ -488,11 +586,69 @@ impl<'a> Simulator<'a> {
         // Batched execution pays the per-invocation overhead once; each
         // item's est_cost included it, so refund the duplicates.
         duration -= self.cost.overheads.encode_step * (batch.len() as f64 - 1.0);
+        if self.chunked() {
+            // Streamed handoff: each shard's tokens leave the encoder in
+            // fixed-size chunks *while it encodes* (the CPU preprocesses
+            // the next tile group as the device encodes the current one,
+            // so tokens flow roughly linearly over the shard's service
+            // time). Items run back-to-back within the batch; scale their
+            // individual costs so the last emission lands exactly at the
+            // batch's EncodeDone.
+            let raw: f64 = batch.items.iter().map(|i| i.est_cost).sum();
+            let scale = if raw > 0.0 { duration / raw } else { 1.0 };
+            let mut offset = 0.0;
+            for item in &batch.items {
+                let d = item.est_cost * scale;
+                self.schedule_shard_chunks(item.id, item.shard, self.now + offset, d);
+                offset += d;
+            }
+        }
         let inst = &mut self.insts[idx];
         inst.busy = true;
         inst.in_flight = batch.items;
         self.busy_acc[0] += duration;
         self.events.push(self.now + duration, Event::EncodeDone { instance: idx });
+    }
+
+    /// Schedule the chunk-transfer arrivals for one encode shard of
+    /// `shard_tiles` tiles serviced over `[start, start + dur]`. Token
+    /// counts use an exact cumulative split so per-shard emissions always
+    /// sum to the request's total MM tokens regardless of shard order.
+    fn schedule_shard_chunks(&mut self, id: RequestId, shard_tiles: u32, start: f64, dur: f64) {
+        let shard_tokens = {
+            let r = self.reqs.get_mut(&id).unwrap();
+            let total_tiles = r.req.total_tiles() as u64;
+            let total_mm = r.req.total_mm_tokens();
+            r.tiles_emitted += shard_tiles;
+            let cum = total_mm * r.tiles_emitted as u64 / total_tiles.max(1);
+            let s = cum - r.mm_tokens_emitted;
+            r.mm_tokens_emitted = cum;
+            s
+        };
+        if shard_tokens == 0 {
+            // Degenerate shard (fewer MM tokens than tiles): still nudge
+            // admission once the shard's encode completes, so a request
+            // whose final shard emits nothing cannot stall.
+            self.events
+                .push(start + dur, Event::EpChunkTransferDone { req: id, tokens: 0 });
+            return;
+        }
+        let chunk = self.cfg.epd.ep_chunk_tokens;
+        let mut sent = 0u64;
+        while sent < shard_tokens {
+            let c = chunk.min(shard_tokens - sent);
+            sent += c;
+            let emit = start + dur * sent as f64 / shard_tokens as f64;
+            let arrive = emit
+                + self.transfer.migration_time(
+                    MigrationKind::EncodeToPrefill,
+                    &self.cfg.spec,
+                    c,
+                    0,
+                );
+            self.events
+                .push(arrive, Event::EpChunkTransferDone { req: id, tokens: c });
+        }
     }
 
     fn on_encode_done(&mut self, idx: usize) {
@@ -512,29 +668,65 @@ impl<'a> Simulator<'a> {
                 };
                 // Miss path population: instead of freeing the MM tokens
                 // after transfer, admit them to the cross-request cache
-                // (pinned until the transfer is confirmed).
+                // (pinned until the transfer is confirmed). When the cache
+                // declines (capacity held by pinned entries mid-eviction),
+                // `cache_pinned` stays false and `confirm_ep_transfer`
+                // releases nothing for this request — the payload is only
+                // freed along the path that owns it; see the
+                // `declined_cache_admission_*` regression tests.
+                // (Chunked mode additionally requires a non-empty payload:
+                // a zero-token request confirms at its shard-end nudge,
+                // which can precede this insert — pinning here would leak.)
                 if let Some(h) = media_hash {
-                    let inserted = self.enc_cache.insert_pinned(h, mm_tokens, None);
-                    self.reqs.get_mut(&item.id).unwrap().cache_pinned = inserted;
+                    if !self.chunked() || mm_tokens > 0 {
+                        let inserted = self.enc_cache.insert_pinned(h, mm_tokens, None);
+                        // With batch_encode >= 2 a shard's chunk emissions
+                        // are scaled into its sub-interval of the batch,
+                        // so the request's final chunk can land — and
+                        // confirm — before this batch-end insert. Pinning
+                        // then would leak (no later event unpins): release
+                        // immediately instead.
+                        let already_confirmed = self.chunked()
+                            && self.reqs[&item.id].mm_tokens_arrived >= mm_tokens;
+                        if inserted && already_confirmed {
+                            self.enc_cache.unpin(h);
+                        } else {
+                            self.reqs.get_mut(&item.id).unwrap().cache_pinned = inserted;
+                        }
+                    }
                 }
-                // Asynchronous EP transfer (§3.2.1) — does not occupy the
-                // encode instance.
-                let t = self.transfer.migration_time(
-                    MigrationKind::EncodeToPrefill,
-                    &self.cfg.spec,
-                    mm_tokens,
-                    0,
-                );
-                self.events.push(self.now + t, Event::EpTransferDone { req: item.id });
+                if !self.chunked() {
+                    // Asynchronous EP transfer (§3.2.1) — does not occupy
+                    // the encode instance. Under chunked streaming the
+                    // per-chunk transfers were already scheduled when the
+                    // shard started encoding.
+                    let t = self.transfer.migration_time(
+                        MigrationKind::EncodeToPrefill,
+                        &self.cfg.spec,
+                        mm_tokens,
+                        0,
+                    );
+                    self.events.push(self.now + t, Event::EpTransferDone { req: item.id });
+                }
             }
         }
         self.kick_instance(idx);
     }
 
     fn on_ep_transfer_done(&mut self, id: RequestId) {
-        // Transfer confirmed: release this request's pin on its encoder-
-        // cache entry (the entry itself stays cached — that is the whole
-        // point). Idempotent under the retry re-push in `enqueue_prefill`.
+        self.confirm_ep_transfer(id);
+        self.enqueue_prefill(id);
+    }
+
+    /// EP transfer confirmed: release this request's pin on its encoder-
+    /// cache entry (the entry itself stays cached — that is the whole
+    /// point). This is the *single* release point for the EP payload, and
+    /// it is idempotent: the monolithic path can re-enter via the retry
+    /// re-push in `enqueue_prefill`, the chunked path via zero-token
+    /// re-admission nudges, and a request whose cache admission was
+    /// declined mid-eviction never pinned anything — `cache_pinned` gates
+    /// all three so nothing is released twice or released unowned.
+    fn confirm_ep_transfer(&mut self, id: RequestId) {
         let unpin = {
             let r = self.reqs.get_mut(&id).unwrap();
             let hash = r.req.media_hash;
@@ -548,7 +740,76 @@ impl<'a> Simulator<'a> {
         if let Some(h) = unpin {
             self.enc_cache.unpin(h);
         }
-        self.enqueue_prefill(id);
+    }
+
+    /// A streamed EP chunk landed at the prefill side (or a zero-token
+    /// re-admission nudge fired). Updates arrival accounting, confirms the
+    /// transfer once the final chunk lands, and (re-)admits the request to
+    /// its prefill instance if new tokens are computable.
+    fn on_ep_chunk_transfer_done(&mut self, id: RequestId, tokens: u64) {
+        let confirm = {
+            let r = self.reqs.get_mut(&id).unwrap();
+            if tokens > 0 {
+                r.mm_tokens_arrived += tokens;
+                debug_assert!(r.mm_tokens_arrived <= r.req.total_mm_tokens());
+            }
+            r.mm_tokens_arrived >= r.req.total_mm_tokens()
+        };
+        if tokens > 0 {
+            self.ep_overlap.chunks += 1;
+        }
+        if confirm {
+            self.confirm_ep_transfer(id);
+        }
+        self.maybe_enqueue_prefill_chunked(id);
+    }
+
+    /// Admit a streamed request to a prefill queue when it has arrived
+    /// tokens that no pass has claimed yet. Passes stick to one instance;
+    /// if that instance switched roles the request re-picks, and if every
+    /// prefill instance is mid-switch the admission retries shortly via a
+    /// zero-token chunk event.
+    fn maybe_enqueue_prefill_chunked(&mut self, id: RequestId) {
+        let est = {
+            let r = &self.reqs[&id];
+            if r.prefill_queued {
+                return;
+            }
+            let avail = r.available_prefill_tokens();
+            // Nothing new to compute — except the zero-token degenerate
+            // (no prompt, no media), which still needs its one empty
+            // admission pass to emit a first token, exactly like the
+            // monolithic path's unconditional enqueue.
+            let zero_token_pending = r.req.prefill_tokens() == 0 && r.tl.prefill_end.is_nan();
+            if avail <= r.prefill_done_tokens && !zero_token_pending {
+                return;
+            }
+            self.cost
+                .prefill_extend_time(r.prefill_done_tokens, avail - r.prefill_done_tokens)
+        };
+        let prefills = self.instances_with_kind(WorkKind::Prefill);
+        if prefills.is_empty() {
+            self.events
+                .push(self.now + 0.01, Event::EpChunkTransferDone { req: id, tokens: 0 });
+            return;
+        }
+        let idx = match self.reqs[&id].prefill_inst {
+            Some(i) if prefills.contains(&i) => i,
+            _ => self.least_loaded(&prefills).unwrap(),
+        };
+        {
+            let r = self.reqs.get_mut(&id).unwrap();
+            r.prefill_inst = Some(idx);
+            r.prefill_queued = true;
+        }
+        self.insts[idx].queue.push(QueuedRequest {
+            id,
+            shard: 0,
+            enqueue_time: self.now,
+            est_cost: est,
+            deadline: f64::INFINITY,
+        });
+        self.kick_instance(idx);
     }
 
     fn enqueue_prefill(&mut self, id: RequestId) {
@@ -574,6 +835,10 @@ impl<'a> Simulator<'a> {
     }
 
     fn start_prefill(&mut self, idx: usize) {
+        if self.chunked() {
+            self.start_prefill_chunked(idx);
+            return;
+        }
         let max_batch = self.insts[idx].max_batch;
         let batcher = Batcher::new(max_batch, self.cfg.max_batch_tokens);
         let reqs = &self.reqs;
@@ -606,23 +871,99 @@ impl<'a> Simulator<'a> {
         self.events.push(self.now + duration, Event::PrefillDone { instance: idx });
     }
 
+    /// Streamed-prefill batch formation: each queue entry is a *partial*
+    /// pass over the tokens that have arrived but not yet been computed
+    /// (prompt prefix + landed MM chunks). A pass whose request still has
+    /// chunks in flight re-queues when the next chunk lands; the final
+    /// pass (all tokens computed) emits the first token as usual.
+    fn start_prefill_chunked(&mut self, idx: usize) {
+        let max_batch = self.insts[idx].max_batch;
+        let batcher = Batcher::new(max_batch, self.cfg.max_batch_tokens);
+        let reqs = &self.reqs;
+        let batch = {
+            let inst = &mut self.insts[idx];
+            batcher.form(
+                &mut inst.queue,
+                |_| true,
+                |q| {
+                    let r = &reqs[&q.id];
+                    (r.available_prefill_tokens() - r.prefill_done_tokens).max(1)
+                },
+            )
+        };
+        if batch.is_empty() {
+            return;
+        }
+        let mut duration = 0.0;
+        for item in &batch.items {
+            let (done, delta) = {
+                let r = self.reqs.get_mut(&item.id).unwrap();
+                let avail = r.available_prefill_tokens();
+                let delta = avail - r.prefill_done_tokens;
+                r.prefill_inflight_tokens = delta;
+                if r.tl.prefill_start.is_nan() {
+                    r.tl.prefill_start = self.now;
+                }
+                (r.prefill_done_tokens, delta)
+            };
+            duration += self.cost.prefill_extend_time(done, delta)
+                + self.cost.overheads.prefill_per_request;
+            self.ep_overlap.prefill_passes += 1;
+        }
+        let inst = &mut self.insts[idx];
+        inst.busy = true;
+        inst.in_flight = batch.items;
+        self.busy_acc[1] += duration;
+        self.events.push(self.now + duration, Event::PrefillDone { instance: idx });
+    }
+
     fn on_prefill_done(&mut self, idx: usize) {
         let items = std::mem::take(&mut self.insts[idx].in_flight);
         self.insts[idx].busy = false;
-        for item in items {
-            self.finish_prefill_for(item.id);
+        if self.chunked() {
+            for item in items {
+                let finished = {
+                    let r = self.reqs.get_mut(&item.id).unwrap();
+                    r.prefill_done_tokens += r.prefill_inflight_tokens;
+                    r.prefill_inflight_tokens = 0;
+                    r.prefill_queued = false;
+                    r.prefill_done_tokens >= r.req.prefill_tokens()
+                };
+                if finished {
+                    self.finish_prefill_for(item.id);
+                } else {
+                    // Chunks may have landed during this pass.
+                    self.maybe_enqueue_prefill_chunked(item.id);
+                }
+            }
+        } else {
+            for item in items {
+                self.finish_prefill_for(item.id);
+            }
         }
         self.kick_instance(idx);
     }
 
     /// Common post-prefill path: first token out; route to decode.
     fn finish_prefill_for(&mut self, id: RequestId) {
+        let chunked = self.chunked();
         let (out_tokens, kv_tokens) = {
             let r = self.reqs.get_mut(&id).unwrap();
             r.tl.prefill_end = self.now;
             r.tl.first_token = self.now;
             (r.req.output_tokens, r.req.prefill_tokens())
         };
+        if chunked {
+            // TTFT-overlap accounting: prefill compute that ran while this
+            // request's media was still encoding.
+            let r = &self.reqs[&id];
+            if !r.tl.encode_end.is_nan()
+                && !r.tl.prefill_start.is_nan()
+                && r.tl.prefill_start < r.tl.encode_end
+            {
+                self.ep_overlap.overlap_seconds += r.tl.encode_end - r.tl.prefill_start;
+            }
+        }
         if out_tokens <= 1 {
             self.finish_request(id);
             return;
@@ -766,7 +1107,9 @@ impl<'a> Simulator<'a> {
         if batch.is_empty() {
             return;
         }
+        let chunk = self.cfg.epd.ep_chunk_tokens;
         let mut duration = 0.0;
+        let mut overlappable = 0.0;
         let mut total_tokens = 0u64;
         for item in &batch.items {
             let r = self.reqs.get_mut(&item.id).unwrap();
@@ -775,11 +1118,24 @@ impl<'a> Simulator<'a> {
             }
             // Encoder-cache hits pay a lookup instead of preprocessing
             // (and contribute no tiles to the encode forward below).
-            duration += if r.encode_cached {
-                self.cost.cache_hit_time()
+            if r.encode_cached {
+                duration += self.cost.cache_hit_time();
             } else {
-                self.cost.preprocess_time(r.req.images, r.req.resolution)
-            };
+                let preproc = self.cost.preprocess_time(r.req.images, r.req.resolution);
+                if chunk > 0 {
+                    // Fused modes have no EP edge to stream over, but a
+                    // chunked pipeline still overlaps *host* preprocessing
+                    // with device compute: only the first chunk's
+                    // preprocessing is exposed, the rest hides behind the
+                    // encode+prefill forward below.
+                    let mm = r.req.total_mm_tokens().max(1);
+                    let frac = (chunk as f64 / mm as f64).min(1.0);
+                    duration += preproc * frac;
+                    overlappable += preproc * (1.0 - frac);
+                } else {
+                    duration += preproc;
+                }
+            }
             total_tokens += r.req.prefill_tokens();
         }
         let tiles: u32 = batch
@@ -788,9 +1144,15 @@ impl<'a> Simulator<'a> {
             .filter(|q| !self.reqs[&q.id].encode_cached)
             .map(|q| self.reqs[&q.id].req.total_tiles())
             .sum();
-        duration += self.cost.encode_time(tiles)
+        let device = self.cost.encode_time(tiles)
             + self.cost.prefill_time(total_tokens)
             + self.cost.overheads.prefill_per_request * batch.items.len() as f64;
+        if chunk > 0 {
+            self.ep_overlap.overlap_seconds += overlappable.min(device);
+            duration += overlappable.max(device);
+        } else {
+            duration += device;
+        }
         let inst = &mut self.insts[idx];
         inst.busy = true;
         inst.in_flight = batch.items;
@@ -994,9 +1356,16 @@ mod tests {
     use crate::model::spec::ModelId;
     use crate::model::vision::{mm_tokens_for_image, tiles_for_image, Resolution};
 
-    fn mk_requests(n: u64, rate: f64, images: u32, out: u32, spec: &LmmSpec) -> Vec<Request> {
+    fn mk_requests_seeded(
+        spec: &LmmSpec,
+        n: u64,
+        rate: f64,
+        images: u32,
+        out: u32,
+        seed: u64,
+    ) -> Vec<Request> {
         let res = Resolution::four_k();
-        let mut rng = crate::util::rng::Rng::new(7);
+        let mut rng = crate::util::rng::Rng::new(seed);
         let mut t = 0.0;
         (0..n)
             .map(|id| {
@@ -1014,6 +1383,10 @@ mod tests {
                 }
             })
             .collect()
+    }
+
+    fn mk_requests(n: u64, rate: f64, images: u32, out: u32, spec: &LmmSpec) -> Vec<Request> {
+        mk_requests_seeded(spec, n, rate, images, out, 7)
     }
 
     fn epd_cfg(spec: &LmmSpec) -> SimConfig {
@@ -1221,6 +1594,192 @@ mod tests {
         let b = Simulator::run(&epd_cfg(&spec), &reqs);
         assert_eq!(a.mean_ttft(), b.mean_ttft());
         assert_eq!(a.encoder_cache, b.encoder_cache);
+    }
+
+    #[test]
+    fn chunked_streaming_cuts_ttft_for_many_image_requests() {
+        // The tentpole claim: overlapping prefill with encoding via chunked
+        // EP streaming recovers a large share of many-image TTFT on an
+        // encode-constrained slice (prefill-heavy InternVL2-8B, 6 images).
+        let spec = LmmSpec::get(ModelId::InternVl2_8b);
+        let reqs = mk_requests_seeded(&spec, 12, 0.15, 6, 8, 23);
+        let mk = |chunk: u64| {
+            let mut epd = EpdConfig::epd(Topology::new(2, 2, 1), 1, 1, 128);
+            epd.ep_chunk_tokens = chunk;
+            SimConfig::new(spec.clone(), DeviceSpec::a100(), epd)
+        };
+        let mono = Simulator::run(&mk(0), &reqs);
+        let chunked = Simulator::run(&mk(1024), &reqs);
+        assert_eq!(mono.finished().count(), 12);
+        assert_eq!(chunked.finished().count(), 12);
+        assert!(
+            chunked.mean_ttft() < 0.8 * mono.mean_ttft(),
+            "chunked {} vs monolithic {}",
+            chunked.mean_ttft(),
+            mono.mean_ttft()
+        );
+        assert!(chunked.ep_overlap.chunks > 0);
+        assert_eq!(chunked.ep_overlap.streamed_requests, 12);
+        assert!(chunked.ep_overlap.prefill_passes >= 12, "at least one pass per request");
+        assert!(chunked.ep_overlap.overlap_seconds > 0.0);
+        // Chunking only reorders when compute happens; it must not lose
+        // tokens — every request still decodes to completion.
+        for (a, b) in mono.finished().zip(chunked.finished()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output_tokens, b.output_tokens);
+        }
+    }
+
+    #[test]
+    fn chunk_zero_keeps_streaming_machinery_dormant() {
+        // ep_chunk_tokens = 0 must reproduce the monolithic handoff
+        // bit-for-bit: identical timelines and all-zero overlap counters.
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(25, 0.4, 3, 10, &spec);
+        let default_cfg = epd_cfg(&spec);
+        let mut explicit = epd_cfg(&spec);
+        explicit.epd.ep_chunk_tokens = 0;
+        let a = Simulator::run(&default_cfg, &reqs);
+        let b = Simulator::run(&explicit, &reqs);
+        assert_eq!(a.ep_overlap, crate::sim::outcome::EpOverlapStats::default());
+        assert_eq!(a.timelines.len(), b.timelines.len());
+        for (x, y) in a.timelines.iter().zip(b.timelines.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.encode_start.to_bits(), y.encode_start.to_bits());
+            assert_eq!(x.encode_end.to_bits(), y.encode_end.to_bits());
+            assert_eq!(x.prefill_start.to_bits(), y.prefill_start.to_bits());
+            assert_eq!(x.first_token.to_bits(), y.first_token.to_bits());
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+        }
+    }
+
+    #[test]
+    fn chunked_runs_are_deterministic() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests_seeded(&spec, 15, 0.4, 4, 6, 23);
+        let mut cfg = epd_cfg(&spec);
+        cfg.epd.ep_chunk_tokens = 256;
+        let a = Simulator::run(&cfg, &reqs);
+        let b = Simulator::run(&cfg, &reqs);
+        assert_eq!(a.mean_ttft(), b.mean_ttft());
+        assert_eq!(a.mean_tpot(), b.mean_tpot());
+        assert_eq!(a.ep_overlap, b.ep_overlap);
+    }
+
+    #[test]
+    fn chunked_cache_hits_stream_cached_chunks() {
+        // A hit under streaming pays per-chunk transfer only — no encode
+        // occupancy — and still finishes every request.
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut reqs = mk_requests(30, 0.5, 2, 10, &spec);
+        for r in &mut reqs {
+            r.media_hash = Some(0xCAFE);
+        }
+        let mut cfg = epd_cfg(&spec);
+        cfg.epd.ep_chunk_tokens = 256;
+        let out = Simulator::run(&cfg, &reqs);
+        assert_eq!(out.finished().count(), 30);
+        assert!(out.encoder_cache.hits >= 25, "hit-dominated: {:?}", out.encoder_cache);
+        assert!(out.ep_overlap.chunks > 0, "hits stream chunked too");
+        // Encode busy time collapses to the misses, exactly as monolithic.
+        let cold = Simulator::run(&cfg, &mk_requests(30, 0.5, 2, 10, &spec));
+        assert!(out.busy[0] < 0.2 * cold.busy[0]);
+    }
+
+    #[test]
+    fn chunked_zero_token_requests_still_finish() {
+        // Degenerate request with no prompt and no media: the streamed
+        // admission path must still run its one empty pass and emit a
+        // first token, matching the monolithic path's behavior.
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut reqs = mk_requests(5, 1.0, 0, 1, &spec);
+        for r in &mut reqs {
+            r.images = 0;
+            r.prompt_tokens = 0;
+        }
+        let mut cfg = epd_cfg(&spec);
+        cfg.epd.ep_chunk_tokens = 256;
+        let out = Simulator::run(&cfg, &reqs);
+        assert_eq!(out.finished().count(), 5);
+        let mono = Simulator::run(&epd_cfg(&spec), &reqs);
+        assert_eq!(mono.finished().count(), 5);
+    }
+
+    #[test]
+    fn chunked_survives_role_switching_and_text_only() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut reqs = mk_requests_seeded(&spec, 30, 2.0, 2, 40, 23);
+        // Mix in text-only requests: they admit through the streamed path
+        // with zero chunks.
+        for r in reqs.iter_mut().step_by(5) {
+            r.images = 0;
+        }
+        let mut cfg = epd_cfg(&spec);
+        cfg.epd.ep_chunk_tokens = 128;
+        cfg.epd.role_switching = true;
+        cfg.switch_policy.cooldown = 2.0;
+        let out = Simulator::run(&cfg, &reqs);
+        assert_eq!(out.finished().count() as u32 + out.rejected, 30);
+        for t in out.finished() {
+            assert!(t.first_token >= t.arrival && t.finish >= t.first_token);
+        }
+    }
+
+    /// Regression for the populate-vs-free race on the EP edge: when the
+    /// encoder cache *declines* admission mid-eviction (capacity pinned or
+    /// too small), transfer confirmation must not release an unowned pin,
+    /// and racing same-hash misses must leave refcounts balanced so the
+    /// entry stays evictable afterwards. An unbalanced release panics in
+    /// `EncoderCache::unpin`; a leaked pin would make the wave-2 insert
+    /// below impossible.
+    #[test]
+    fn declined_cache_admission_never_double_frees() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let probe = mk_requests(1, 1.0, 2, 4, &spec);
+        let entry_tokens = probe[0].total_mm_tokens();
+        for chunk in [0u64, 256] {
+            // Wave 1: a burst of identical-media requests racing through
+            // the miss path (inserts land on an already-pinned entry).
+            // Wave 2: fresh media that must evict wave 1's entry.
+            let mut reqs = mk_requests(16, 8.0, 2, 4, &spec);
+            for (i, r) in reqs.iter_mut().enumerate() {
+                if i < 8 {
+                    r.media_hash = Some(0xA11CE);
+                } else {
+                    r.arrival += 60.0;
+                    r.media_hash = Some(0xB0B + i as u64);
+                }
+            }
+            // batch_encode = 2 additionally exercises the mid-batch
+            // populate: a shard's final chunk can land (and confirm)
+            // before the batch-end insert, which must then release its
+            // pin immediately rather than leak it.
+            for batch_e in [1u32, 2] {
+                let mut cfg = epd_cfg(&spec);
+                cfg.epd = EpdConfig::epd(Topology::new(5, 2, 1), batch_e, 1, 128);
+                // Exactly one entry fits: every other admission must
+                // evict or decline.
+                cfg.epd.encoder_cache_tokens = entry_tokens;
+                cfg.epd.ep_chunk_tokens = chunk;
+                let out = Simulator::run(&cfg, &reqs);
+                assert_eq!(out.finished().count(), 16, "chunk={chunk} batch_e={batch_e}");
+                assert!(
+                    out.encoder_cache.insertions >= 2,
+                    "wave-2 insert requires wave-1 pins fully released: {:?}",
+                    out.encoder_cache
+                );
+                assert!(out.encoder_cache.evictions >= 1, "chunk={chunk} batch_e={batch_e}");
+            }
+            // And with a cache too small for even one entry, every
+            // admission is declined — confirmation must stay a no-op.
+            let mut tiny = epd_cfg(&spec);
+            tiny.epd.encoder_cache_tokens = 1;
+            tiny.epd.ep_chunk_tokens = chunk;
+            let out = Simulator::run(&tiny, &reqs);
+            assert_eq!(out.finished().count(), 16, "chunk={chunk}");
+            assert_eq!(out.encoder_cache.insertions, 0);
+            assert!(out.encoder_cache.rejected >= 8, "{:?}", out.encoder_cache);
+        }
     }
 
     #[test]

@@ -16,6 +16,11 @@ pub enum Event {
     EncodeDone { instance: usize },
     /// An EP transfer for (request, shard) landed at the prefill side.
     EpTransferDone { req: RequestId },
+    /// One streamed EP chunk of `tokens` MM tokens landed at the prefill
+    /// side (chunked handoff, `EpdConfig::ep_chunk_tokens > 0`). A
+    /// `tokens == 0` event is a pure re-admission nudge (retry while all
+    /// prefill instances are switching, or a zero-token shard tail).
+    EpChunkTransferDone { req: RequestId, tokens: u64 },
     /// A prefill instance finished its batch.
     PrefillDone { instance: usize },
     /// A PD transfer landed at the decode side.

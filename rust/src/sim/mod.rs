@@ -16,4 +16,4 @@ pub mod outcome;
 
 pub use cost::CostModel;
 pub use engine::{SimConfig, Simulator};
-pub use outcome::SimOutcome;
+pub use outcome::{EpOverlapStats, SimOutcome};

@@ -5,6 +5,26 @@ use crate::core::request::RequestTimeline;
 use crate::core::slo::Slo;
 use crate::util::stats::{self, Summary};
 
+/// Counters for the chunked encode→prefill streaming pipeline
+/// (`EpdConfig::ep_chunk_tokens > 0`). All zero under the monolithic
+/// handoff — asserting that is how the regression tests prove the
+/// streaming machinery stays fully dormant at chunk size 0.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EpOverlapStats {
+    /// Streamed EP chunk transfers that landed at the prefill side.
+    pub chunks: u64,
+    /// Requests that entered the streaming pipeline (media requests in
+    /// EPD mode, including encoder-cache hits streaming cached chunks).
+    pub streamed_requests: u64,
+    /// Partial prefill passes executed over streamed prefixes.
+    pub prefill_passes: u64,
+    /// Seconds of prefill compute that ran before the owning request's
+    /// encode finished (per request: `encode_end - prefill_start` when
+    /// positive) — the TTFT the overlap recovered. For fused EP modes this
+    /// accumulates the host-preprocess time hidden behind device compute.
+    pub overlap_seconds: f64,
+}
+
 /// The result of one simulation run.
 #[derive(Debug, Clone)]
 pub struct SimOutcome {
@@ -22,6 +42,8 @@ pub struct SimOutcome {
     /// `hits`/`insertions` stay zero but lookups still count as `misses`
     /// and population attempts as `rejected`.
     pub encoder_cache: EncoderCacheStats,
+    /// Chunked EP streaming counters (`ep_chunk_tokens > 0` only).
+    pub ep_overlap: EpOverlapStats,
 }
 
 impl SimOutcome {
@@ -106,6 +128,7 @@ mod tests {
             busy: [1.0, 1.0, 1.0],
             rejected: 1,
             encoder_cache: EncoderCacheStats::default(),
+            ep_overlap: EpOverlapStats::default(),
         }
     }
 

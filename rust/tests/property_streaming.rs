@@ -1,0 +1,196 @@
+//! Property tests for the chunked encode→prefill streaming pipeline:
+//! out-of-order shard completion must always yield in-order prefill
+//! admission with byte-identical payloads vs the monolithic merge, and
+//! `ep_chunk_tokens = 0` must reproduce the monolithic handoff
+//! bit-for-bit with the streaming machinery fully dormant.
+
+use epdserve::core::config::EpdConfig;
+use epdserve::core::request::Request;
+use epdserve::core::topology::Topology;
+use epdserve::coordinator::irp::{plan_shards, plan_shards_aligned};
+use epdserve::engine::queues::ReassemblyBuffer;
+use epdserve::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use epdserve::model::vision::{mm_tokens_for_image, tiles_for_image, Resolution};
+use epdserve::sim::engine::{SimConfig, Simulator};
+use epdserve::util::quickcheck::{forall_cfg, pair, usize_in, Config};
+use epdserve::util::rng::Rng;
+
+fn mk_requests(spec: &LmmSpec, n: u64, rate: f64, images: u32, out: u32, seed: u64) -> Vec<Request> {
+    let res = Resolution::four_k();
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|id| {
+            t += rng.exp(rate);
+            Request {
+                id,
+                arrival: t,
+                prompt_tokens: 22,
+                images,
+                resolution: res,
+                output_tokens: out,
+                tiles_per_image: tiles_for_image(spec, res),
+                mm_tokens_per_image: mm_tokens_for_image(spec, res) as u32,
+                media_hash: None,
+            }
+        })
+        .collect()
+}
+
+/// Shards inserted in a random order always reassemble to the payload the
+/// monolithic path would have merged: the in-shard-order concatenation.
+/// Completion (prefill admission) happens exactly at the final part.
+#[test]
+fn out_of_order_chunks_reassemble_byte_identical() {
+    forall_cfg(
+        Config { cases: 120, seed: 77, max_shrink_steps: 0 },
+        pair(usize_in(1, 12), usize_in(1, 9999)),
+        |&(parts, seed)| {
+            let mut rng = Rng::new(seed as u64);
+            // Random per-shard payloads (random sizes, random contents).
+            let shards: Vec<Vec<f32>> = (0..parts)
+                .map(|_| {
+                    let len = rng.range(0, 64);
+                    (0..len).map(|_| rng.f64() as f32).collect()
+                })
+                .collect();
+            let monolithic: Vec<f32> = shards.iter().flatten().copied().collect();
+
+            // Random arrival permutation (Fisher–Yates over indices).
+            let mut order: Vec<usize> = (0..parts).collect();
+            for i in (1..parts).rev() {
+                let j = rng.below((i + 1) as u64) as usize;
+                order.swap(i, j);
+            }
+
+            let rb = ReassemblyBuffer::new();
+            rb.expect(1, parts);
+            let mut merged = None;
+            for (k, &shard) in order.iter().enumerate() {
+                let out = rb.insert(1, shard, shards[shard].clone());
+                if k + 1 < parts {
+                    if out.is_some() {
+                        return Err(format!("admitted early at part {k}"));
+                    }
+                } else {
+                    merged = out;
+                }
+            }
+            let merged = merged.ok_or("final part did not complete reassembly")?;
+            if merged != monolithic {
+                return Err(format!(
+                    "payload mismatch: {} vs {} floats (order {order:?})",
+                    merged.len(),
+                    monolithic.len()
+                ));
+            }
+            if rb.pending() != 0 {
+                return Err("completed request not dropped".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Chunk-aligned IRP plans cover exactly the same tiles as plain plans:
+/// streaming changes *where* shard boundaries fall, never what is encoded.
+#[test]
+fn aligned_plans_conserve_tiles() {
+    forall_cfg(
+        Config { cases: 200, seed: 31, max_shrink_steps: 0 },
+        pair(pair(usize_in(1, 400), usize_in(1, 12)), usize_in(1, 32)),
+        |&((tiles, fanout), align)| {
+            let plain = plan_shards(tiles as u32, fanout as u32, true);
+            let aligned = plan_shards_aligned(tiles as u32, fanout as u32, true, align as u32);
+            if plain.total_tiles() != aligned.total_tiles() {
+                return Err(format!("tile mismatch: {plain:?} vs {aligned:?}"));
+            }
+            if aligned.num_shards() > fanout as u32 {
+                return Err(format!("fan-out exceeded: {aligned:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `ep_chunk_tokens = 0` is bit-for-bit the monolithic handoff: identical
+/// timelines to an untouched default config across random workload shapes,
+/// with every streaming counter at zero.
+#[test]
+fn chunk_zero_is_bit_identical_to_default() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    forall_cfg(
+        Config { cases: 12, seed: 555, max_shrink_steps: 0 },
+        pair(usize_in(0, 5), usize_in(1, 30)),
+        |&(images, out)| {
+            let reqs = mk_requests(&spec, 15, 0.8, images as u32, out as u32, 42 + images as u64);
+            let default_epd = EpdConfig::epd(Topology::new(3, 2, 1), 1, 1, 64);
+            let mut zero_epd = default_epd.clone();
+            zero_epd.ep_chunk_tokens = 0;
+            let a = Simulator::run(
+                &SimConfig::new(spec.clone(), DeviceSpec::a100(), default_epd),
+                &reqs,
+            );
+            let b = Simulator::run(
+                &SimConfig::new(spec.clone(), DeviceSpec::a100(), zero_epd),
+                &reqs,
+            );
+            if a.ep_overlap != epdserve::sim::EpOverlapStats::default() {
+                return Err(format!("streaming not dormant: {:?}", a.ep_overlap));
+            }
+            if a.timelines.len() != b.timelines.len() {
+                return Err("timeline count mismatch".into());
+            }
+            for (x, y) in a.timelines.iter().zip(b.timelines.iter()) {
+                let same = x.id == y.id
+                    && x.encode_start.to_bits() == y.encode_start.to_bits()
+                    && x.encode_end.to_bits() == y.encode_end.to_bits()
+                    && x.prefill_start.to_bits() == y.prefill_start.to_bits()
+                    && x.first_token.to_bits() == y.first_token.to_bits()
+                    && x.finish.to_bits() == y.finish.to_bits();
+                if !same {
+                    return Err(format!("timelines diverge: {x:?} vs {y:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Streaming conserves requests across random chunk sizes and workload
+/// shapes: every injected request finishes (or is explicitly rejected)
+/// with a consistent timeline, and media requests account their chunks
+/// exactly once.
+#[test]
+fn chunked_streaming_conserves_requests() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    forall_cfg(
+        Config { cases: 18, seed: 909, max_shrink_steps: 0 },
+        pair(pair(usize_in(0, 6), usize_in(1, 40)), usize_in(16, 2048)),
+        |&((images, out), chunk)| {
+            let reqs = mk_requests(&spec, 20, 1.0, images as u32, out as u32, 7 + chunk as u64);
+            let mut epd = EpdConfig::epd(Topology::new(3, 2, 1), 1, 1, 64);
+            epd.ep_chunk_tokens = chunk as u64;
+            let cfg = SimConfig::new(spec.clone(), DeviceSpec::a100(), epd);
+            let outc = Simulator::run(&cfg, &reqs);
+            let done = outc.finished().count() as u32 + outc.rejected;
+            if done != 20 {
+                return Err(format!(
+                    "{done}/20 accounted (images={images} out={out} chunk={chunk})"
+                ));
+            }
+            for t in outc.finished() {
+                if !(t.first_token >= t.arrival && t.finish >= t.first_token) {
+                    return Err(format!("inconsistent timeline {t:?}"));
+                }
+            }
+            if images > 0 && outc.ep_overlap.chunks == 0 {
+                return Err("media workload streamed no chunks".into());
+            }
+            if images == 0 && outc.ep_overlap.chunks != 0 {
+                return Err("text-only workload must stream nothing".into());
+            }
+            Ok(())
+        },
+    );
+}

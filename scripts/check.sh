@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Repo-wide lint/doc/test gate — run before every PR (also wired as
-# `make check`). Mirrors what a CI job would run; every step treats
-# warnings as errors so drift is caught at the source.
+# `make check` / `make ci`). Mirrors .github/workflows/ci.yml exactly so
+# local and hosted gates stay identical; every step treats warnings as
+# errors so drift is caught at the source.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,6 +17,9 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "==> cargo build --release"
 cargo build --release --quiet
+
+echo "==> cargo bench --no-run (bench bit-rot gate)"
+cargo bench --no-run --quiet
 
 echo "==> cargo test"
 cargo test -q

@@ -1,6 +1,6 @@
 # Convenience targets; see README.md.
 
-.PHONY: artifacts build test bench check ci
+.PHONY: artifacts build test bench bench-json check ci
 
 artifacts:
 	cd python && python -m compile.aot --out ../artifacts
@@ -13,6 +13,11 @@ test:
 
 bench:
 	cargo bench
+
+# Gated perf benches with machine-readable results/BENCH_*.json summaries
+# (gate name, baseline, measured, pass) — the repo's perf trajectory.
+bench-json:
+	scripts/bench_json.sh
 
 check:
 	scripts/check.sh

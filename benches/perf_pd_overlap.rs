@@ -1,0 +1,156 @@
+//! Layer-wise vs monolithic prefill→decode KV handoff on a long-context
+//! many-image workload (the regime where the full-KV transfer dominates
+//! the gap between prefill end and the second token).
+//!
+//! One claim, three layers: with `pd_layer_groups > 0` the decode target
+//! is selected at *prefill start*, KV for completed layer groups streams
+//! while later layers compute, and the pre-reserved request joins the
+//! decode batch the moment the tail group lands — so the post-prefill
+//! handoff collapses from the full `kv_tokens × kv_bytes / link_bw`
+//! transfer (plus decode-slot queueing) to one group's transfer plus
+//! link latency. Link contention is **enabled** in every run so the
+//! overlap win is honest: group transfers pay for the links they share.
+//!
+//! 1. Loaded A/B: a Poisson stream of {4,6,8}-image 4K requests on a
+//!    2E2P1D InternVL2-8B slice. **Gate: ≥ 30% reduction in mean
+//!    prefill-end→decode-start latency** (`SimOutcome::pd_overlap`).
+//! 2. Unloaded pipeline math: one 8-image request, no queueing — the
+//!    handoff is pure transfer, same gate.
+//! 3. Invariants: streamed and monolithic runs move identical PD bytes,
+//!    and `pd_layer_groups = 0` keeps the machinery dormant (the full
+//!    bit-for-bit assertion lives in `rust/tests/property_pd_streaming.rs`).
+//!
+//! Emits `results/BENCH_pd_overlap.json` (via `GateReport`) for
+//! `scripts/bench_json.sh` / `make bench-json`.
+
+use epdserve::core::config::EpdConfig;
+use epdserve::core::request::Request;
+use epdserve::core::topology::Topology;
+use epdserve::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use epdserve::model::vision::{mm_tokens_for_image, tiles_for_image, Resolution};
+use epdserve::sim::engine::{SimConfig, Simulator};
+use epdserve::util::bench::{fmt, GateReport, TableReport};
+use epdserve::util::rng::Rng;
+
+/// 8 layer groups: the tail transfer is 1/8th of the full KV.
+const GROUPS: u32 = 8;
+const IMAGE_MIX: [u32; 3] = [4, 6, 8];
+const GATE: f64 = 0.30;
+
+fn mixed_requests(spec: &LmmSpec, n: u64, rate: f64) -> Vec<Request> {
+    let res = Resolution::four_k();
+    let mut rng = Rng::new(0xD15C);
+    let mut t = 0.0;
+    (0..n)
+        .map(|id| {
+            t += rng.exp(rate);
+            let images = IMAGE_MIX[(id % IMAGE_MIX.len() as u64) as usize];
+            Request {
+                id,
+                arrival: t,
+                prompt_tokens: 22,
+                images,
+                resolution: res,
+                output_tokens: 32,
+                tiles_per_image: tiles_for_image(spec, res),
+                mm_tokens_per_image: mm_tokens_for_image(spec, res) as u32,
+                media_hash: None,
+            }
+        })
+        .collect()
+}
+
+fn mk_cfg(spec: &LmmSpec, groups: u32) -> SimConfig {
+    let mut epd = EpdConfig::epd(Topology::new(2, 2, 1), 1, 1, 128);
+    epd.pd_layer_groups = groups;
+    // Fidelity: concurrent EP and PD transfers sharing a link serialize.
+    epd.link_contention = true;
+    SimConfig::new(spec.clone(), DeviceSpec::a100(), epd)
+}
+
+fn main() {
+    let spec = LmmSpec::get(ModelId::InternVl2_8b);
+
+    // ---- 1. loaded A/B on the mixed long-context stream ----
+    let reqs = mixed_requests(&spec, 24, 0.2);
+    let mono = Simulator::run(&mk_cfg(&spec, 0), &reqs);
+    let streamed = Simulator::run(&mk_cfg(&spec, GROUPS), &reqs);
+    assert_eq!(mono.finished().count(), reqs.len());
+    assert_eq!(streamed.finished().count(), reqs.len());
+
+    let m = mono.pd_overlap.mean_handoff();
+    let s = streamed.pd_overlap.mean_handoff();
+    let loaded_gain = 1.0 - s / m;
+
+    let mut t = TableReport::new(
+        "perf_pd_overlap",
+        "Layer-wise PD KV streaming vs monolithic handoff (InternVL2-8B, 4K, 2E2P1D, contended links)",
+        &["setup", "mono handoff (s)", "streamed handoff (s)", "reduction", "gate"],
+    );
+    t.row(vec![
+        format!("loaded, {} reqs, rate 0.2", reqs.len()),
+        fmt(m, 4),
+        fmt(s, 4),
+        format!("{:.1}%", loaded_gain * 100.0),
+        ">=30%".into(),
+    ]);
+    assert!(
+        loaded_gain >= GATE,
+        "loaded handoff reduction {:.1}% under the 30% gate (mono {m:.4}s vs streamed {s:.4}s)",
+        loaded_gain * 100.0
+    );
+
+    // ---- 2. unloaded pipeline math: one request, no queueing ----
+    let mut one = mixed_requests(&spec, 1, 1.0);
+    one[0].images = 8;
+    let um = Simulator::run(&mk_cfg(&spec, 0), &one).pd_overlap.mean_handoff();
+    let us = Simulator::run(&mk_cfg(&spec, GROUPS), &one).pd_overlap.mean_handoff();
+    let unloaded_gain = 1.0 - us / um;
+    t.row(vec![
+        "unloaded, 1x 8-image req".into(),
+        fmt(um, 4),
+        fmt(us, 4),
+        format!("{:.1}%", unloaded_gain * 100.0),
+        ">=30%".into(),
+    ]);
+    assert!(
+        unloaded_gain >= GATE,
+        "unloaded handoff reduction {:.1}% under the 30% gate",
+        unloaded_gain * 100.0
+    );
+
+    // ---- 3. invariants ----
+    assert_eq!(
+        mono.pd_overlap.kv_bytes, streamed.pd_overlap.kv_bytes,
+        "streaming must not change total PD bytes moved"
+    );
+    assert_eq!(streamed.pd_overlap.streamed_requests, reqs.len() as u64);
+    assert!(streamed.pd_overlap.chunks >= reqs.len() as u64);
+    assert_eq!(mono.pd_overlap.streamed_requests, 0);
+    assert_eq!(mono.pd_overlap.chunks, 0);
+    assert!(
+        streamed.link_queue_seconds() >= 0.0 && mono.link_busy_seconds() > 0.0,
+        "link accounting live in both runs"
+    );
+    t.note(format!(
+        "streamed {} requests / {} layer-group transfers; {} fallbacks, {} re-targets; \
+         link queueing mono {:.4}s vs streamed {:.4}s",
+        streamed.pd_overlap.streamed_requests,
+        streamed.pd_overlap.chunks,
+        streamed.pd_overlap.fallbacks,
+        streamed.pd_overlap.retargets,
+        mono.link_queue_seconds(),
+        streamed.link_queue_seconds(),
+    ));
+    t.note("pd_layer_groups = 0 is bit-for-bit monolithic (property in rust/tests/property_pd_streaming.rs)");
+    t.emit();
+
+    // Machine-readable gate summary for the perf trajectory.
+    GateReport::at_least(
+        "pd_overlap",
+        "prefill-end->decode-start latency reduction >= 30% (2E2P1D, contended links)",
+        GATE,
+        loaded_gain.min(unloaded_gain),
+    )
+    .emit();
+}

@@ -139,6 +139,30 @@ pub struct EpdConfig {
     /// handoff stays effectively monolithic. 0 (the default) keeps the
     /// paper's all-at-once handoff.
     pub ep_chunk_tokens: u64,
+    /// Layer groups for the streamed prefill→decode KV handoff (the
+    /// §3.2.1 disaggregated-transfer mechanism applied to the PD edge,
+    /// Mooncake-style): when > 0 the decode target is selected at
+    /// *prefill start* — not at transfer completion — and each layer
+    /// group's KV streams to it as soon as its layers finish computing,
+    /// so only the tail group's transfer (plus link latency) remains on
+    /// the critical path after prefill, and the request joins the
+    /// pre-reserving decoder's continuous batch the moment the tail
+    /// group lands. The simulator models group emission across each
+    /// prefill pass with early KV-block reservation and a re-target
+    /// path for mid-stream role switches; the real engine splits the
+    /// prefilled KV into contiguous groups that transfer as individual
+    /// `Job::KvChunk`s and reassemble byte-identically at the decode
+    /// side. 0 (the default) keeps the paper's monolithic post-prefill
+    /// transfer, bit-for-bit.
+    pub pd_layer_groups: u32,
+    /// Model link contention in the simulator: serialize concurrent EP
+    /// and PD transfers sharing a source egress or destination ingress
+    /// channel (one full-duplex NIC per instance) instead of letting
+    /// them overlap for free, and account per-link busy/queueing time in
+    /// `SimOutcome::links`. Off by default — transfers overlap freely,
+    /// the idealized model this repo historically used — so enabling it
+    /// only ever delays transfers, never speeds them up.
+    pub link_contention: bool,
 }
 
 impl EpdConfig {
@@ -165,6 +189,8 @@ impl EpdConfig {
             mm_cache_entries: 3000,
             encoder_cache_tokens: 1 << 20,
             ep_chunk_tokens: 0,
+            pd_layer_groups: 0,
+            link_contention: false,
         }
     }
 
@@ -221,6 +247,8 @@ impl EpdConfig {
     /// batch_decode = 128
     /// encoder_cache_tokens = 1048576
     /// ep_chunk_tokens = 512   # 0 = monolithic EP handoff
+    /// pd_layer_groups = 8     # 0 = monolithic PD (KV) handoff
+    /// link_contention = false # serialize transfers sharing a link
     /// [sched]
     /// queue = "fcfs"          # fcfs | sjf | slo-aware
     /// assign = "least-loaded" # round-robin | least-loaded
@@ -245,6 +273,10 @@ impl EpdConfig {
         if let Some(t) = doc.get_i64("", "ep_chunk_tokens") {
             cfg.ep_chunk_tokens = t.max(0) as u64;
         }
+        if let Some(g) = doc.get_i64("", "pd_layer_groups") {
+            cfg.pd_layer_groups = g.max(0) as u32;
+        }
+        cfg.link_contention = doc.get_bool("", "link_contention").unwrap_or(false);
         if let Some(q) = doc.get_str("sched", "queue") {
             let q = QueuePolicy::parse(q).context("bad sched.queue")?;
             cfg.sched_encode.queue = q;
@@ -273,6 +305,8 @@ mod tests {
         assert_eq!(cfg.total_gpus(), 8);
         assert!(cfg.irp);
         assert_eq!(cfg.ep_chunk_tokens, 0, "streaming is opt-in");
+        assert_eq!(cfg.pd_layer_groups, 0, "PD streaming is opt-in");
+        assert!(!cfg.link_contention, "contention modelling is opt-in");
 
         let ds = EpdConfig::distserve(7, 1, 1, 128);
         assert_eq!(ds.mode, DeploymentMode::PdDisagg);
@@ -294,6 +328,8 @@ kv_frac = 0.8
 batch_decode = 64
 encoder_cache_tokens = 4096
 ep_chunk_tokens = 512
+pd_layer_groups = 8
+link_contention = true
 [sched]
 queue = "sjf"
 assign = "round-robin"
@@ -305,6 +341,8 @@ assign = "round-robin"
         assert_eq!(cfg.kv_frac, 0.8);
         assert_eq!(cfg.encoder_cache_tokens, 4096);
         assert_eq!(cfg.ep_chunk_tokens, 512);
+        assert_eq!(cfg.pd_layer_groups, 8);
+        assert!(cfg.link_contention);
         assert_eq!(cfg.sched_decode.queue, QueuePolicy::Sjf);
         assert_eq!(cfg.sched_encode.assign, AssignPolicy::RoundRobin);
         let d = cfg.instances.iter().find(|i| i.role == Stage::Decode).unwrap();

@@ -38,6 +38,11 @@ pub struct InstanceParams {
     /// Steps between queue re-checks inside a decode loop (monolith
     /// preemption granularity).
     pub decode_recheck_steps: u32,
+    /// Layer groups for the streamed PD handoff: > 0 splits each
+    /// prefilled KV into this many contiguous groups that transfer as
+    /// individual [`Job::KvChunk`]s and reassemble decode-side; 0 ships
+    /// the KV whole (monolithic handoff).
+    pub pd_layer_groups: u32,
 }
 
 /// Stage-pull priority for a role under a deployment mode.
@@ -103,7 +108,7 @@ pub fn instance_main(
             stages.iter().copied().filter(|s| *s != Stage::Decode).collect();
 
         if let Some(job) = queues.try_pop(&non_decode) {
-            handle_ep_job(&mut rt, job, &queues, &metrics, params.mode);
+            handle_ep_job(&mut rt, job, &queues, &metrics, params.mode, params.pd_layer_groups);
             continue;
         }
         if stages.contains(&Stage::Decode) {
@@ -116,7 +121,9 @@ pub fn instance_main(
         // Nothing to do: block briefly.
         if queues
             .pop_timeout(&non_decode, Duration::from_millis(5))
-            .map(|job| handle_ep_job(&mut rt, job, &queues, &metrics, params.mode))
+            .map(|job| {
+                handle_ep_job(&mut rt, job, &queues, &metrics, params.mode, params.pd_layer_groups)
+            })
             .is_none()
         {
             // Timed out; loop to re-check control/decode.
@@ -136,13 +143,15 @@ fn warm_for(rt: &mut TinyLmmRuntime, mode: DeploymentMode, role: Stage) -> anyho
     Ok(())
 }
 
-/// Encode or prefill one job.
+/// Encode or prefill one job. `pd_groups > 0` streams prefilled KV to the
+/// decode side in layer groups instead of one monolithic `Job::Decode`.
 fn handle_ep_job(
     rt: &mut TinyLmmRuntime,
     job: Job,
     queues: &Arc<StageQueues>,
     metrics: &Arc<MetricsRecorder>,
     mode: DeploymentMode,
+    pd_groups: u32,
 ) {
     match job {
         Job::Encode { ctx, shard, patches, tiles, stream } => {
@@ -185,7 +194,8 @@ fn handle_ep_job(
                 let merged = std::sync::Arc::new(merged);
                 populate_encoder_cache(rt, &ctx, &merged, queues);
                 metrics.on_ep_reassembled();
-                handle_ep_job(rt, Job::Prefill { ctx, mm: merged }, queues, metrics, mode);
+                let job = Job::Prefill { ctx, mm: merged };
+                handle_ep_job(rt, job, queues, metrics, mode, pd_groups);
             }
         }
         Job::Prefill { ctx, mm } => {
@@ -215,23 +225,60 @@ fn handle_ep_job(
                         finish(&ctx, vec![first], metrics);
                         return;
                     }
-                    queues.account_pd(pf.kv.len() * 4);
                     let _ = mode;
-                    queues.push(
-                        Stage::Decode,
-                        Job::Decode {
-                            ctx,
-                            kv: pf.kv,
-                            len,
-                            next_token: first,
-                            generated: vec![first],
-                        },
-                    );
+                    if pd_groups > 0 {
+                        // Streamed PD handoff: the KV leaves in contiguous
+                        // layer groups (exact cumulative split — parts
+                        // always concatenate back to the monolithic
+                        // buffer), each an independent transfer; the
+                        // decode worker that completes reassembly admits
+                        // the request. Same total bytes as the monolithic
+                        // path, counted per chunk.
+                        let groups = pd_groups as usize;
+                        queues.kv_reassembly.expect(ctx.id, groups);
+                        metrics.on_pd_streamed();
+                        let sizes = crate::util::bytes::cumulative_split(
+                            pf.kv.len() as u64,
+                            pd_groups as u64,
+                        );
+                        let mut lo = 0usize;
+                        for (g, sz) in sizes.into_iter().enumerate() {
+                            let hi = lo + sz as usize;
+                            let part = pf.kv[lo..hi].to_vec();
+                            lo = hi;
+                            queues.account_pd(part.len() * 4);
+                            metrics.on_pd_chunk();
+                            queues.push(
+                                Stage::Decode,
+                                Job::KvChunk {
+                                    ctx: std::sync::Arc::clone(&ctx),
+                                    group: g,
+                                    kv: part,
+                                    len,
+                                    next_token: first,
+                                },
+                            );
+                        }
+                    } else {
+                        queues.account_pd(pf.kv.len() * 4);
+                        queues.push(
+                            Stage::Decode,
+                            Job::Decode {
+                                ctx,
+                                kv: pf.kv,
+                                len,
+                                next_token: first,
+                                generated: vec![first],
+                            },
+                        );
+                    }
                 }
                 Err(e) => warn!("prefill failed for req {}: {e:#}", ctx.id),
             }
         }
-        Job::Decode { .. } => unreachable!("decode jobs go through run_decode_batch"),
+        Job::Decode { .. } | Job::KvChunk { .. } => {
+            unreachable!("decode-side jobs go through run_decode_batch")
+        }
     }
 }
 
@@ -267,6 +314,41 @@ struct Slot {
     done: bool,
 }
 
+/// Turn one popped decode-stage job into a batch slot. A monolithic
+/// `Job::Decode` admits directly; a streamed `Job::KvChunk` slots into
+/// the global reassembly buffer and admits only when it completes the
+/// request's KV — whichever decode worker lands the final group runs it.
+fn admit_decode_job(
+    job: Job,
+    slots: &mut Vec<Slot>,
+    kvs: &mut Vec<Vec<f32>>,
+    lens: &mut Vec<i32>,
+    queues: &Arc<StageQueues>,
+    metrics: &Arc<MetricsRecorder>,
+) {
+    match job {
+        Job::Decode { ctx, kv, len, next_token, generated } => {
+            slots.push(Slot { ctx, generated, cur: next_token, done: false });
+            kvs.push(kv);
+            lens.push(len);
+        }
+        Job::KvChunk { ctx, group, kv, len, next_token } => {
+            if let Some(merged) = queues.kv_reassembly.insert(ctx.id, group, kv) {
+                metrics.on_pd_reassembled();
+                slots.push(Slot {
+                    ctx,
+                    generated: vec![next_token],
+                    cur: next_token,
+                    done: false,
+                });
+                kvs.push(merged);
+                lens.push(len);
+            }
+        }
+        _ => unreachable!("non-decode job in the decode queue"),
+    }
+}
+
 /// Continuous-batching decode loop with periodic queue re-checks (the
 /// monolith preemption point, and the join point for waiting requests).
 fn run_decode_batch(
@@ -281,12 +363,12 @@ fn run_decode_batch(
     let mut kvs: Vec<Vec<f32>> = Vec::new();
     let mut lens: Vec<i32> = Vec::new();
     for job in jobs {
-        let Job::Decode { ctx, kv, len, next_token, generated } = job else {
-            unreachable!()
-        };
-        slots.push(Slot { ctx, generated, cur: next_token, done: false });
-        kvs.push(kv);
-        lens.push(len);
+        admit_decode_job(job, &mut slots, &mut kvs, &mut lens, queues, metrics);
+    }
+    if slots.is_empty() {
+        // Only partial KV groups arrived (reassembly still pending on
+        // other chunks): nothing to decode yet.
+        return;
     }
 
     'outer: loop {
@@ -378,18 +460,27 @@ fn run_decode_batch(
                             .filter(|s| *s != Stage::Decode)
                             .collect();
                         while let Some(job) = queues.try_pop(&non_decode) {
-                            handle_ep_job(rt, job, queues, metrics, params.mode);
+                            handle_ep_job(
+                                rt,
+                                job,
+                                queues,
+                                metrics,
+                                params.mode,
+                                params.pd_layer_groups,
+                            );
                         }
                     }
                     // Admit waiting decode jobs into the freed capacity.
                     let room = params.max_decode_batch as usize - new_slots.len();
                     for job in queues.pop_decode_batch(room) {
-                        let Job::Decode { ctx, kv, len, next_token, generated } = job else {
-                            unreachable!()
-                        };
-                        new_slots.push(Slot { ctx, generated, cur: next_token, done: false });
-                        new_kvs.push(kv);
-                        new_lens.push(len);
+                        admit_decode_job(
+                            job,
+                            &mut new_slots,
+                            &mut new_kvs,
+                            &mut new_lens,
+                            queues,
+                            metrics,
+                        );
                     }
                     if new_slots.is_empty() {
                         return;

@@ -135,6 +135,21 @@ pub enum Job {
         next_token: i32,
         generated: Vec<i32>,
     },
+    /// One layer group of a prefilled request's KV cache, streamed to the
+    /// decode side (`EpdConfig::pd_layer_groups > 0`). Groups are
+    /// contiguous spans of the flat KV buffer (layer-aligned when the
+    /// group count divides the layer count) and reassemble in
+    /// [`super::queues::StageQueues::kv_reassembly`]; the decode worker
+    /// that slots the final group admits the request to its continuous
+    /// batch with the byte-identical reconstructed KV.
+    KvChunk {
+        ctx: std::sync::Arc<ReqCtx>,
+        group: usize,
+        kv: Vec<f32>,
+        len: i32,
+        /// Next input token (the first generated token).
+        next_token: i32,
+    },
 }
 
 #[cfg(test)]

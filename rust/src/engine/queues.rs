@@ -28,13 +28,18 @@ pub struct TransferStats {
     pub pd_count: AtomicU64,
 }
 
-/// Prefill-side ordered reassembly of streamed EP chunks (chunked
-/// handoff, `EpdConfig::ep_chunk_tokens > 0`). Encoder shards complete in
-/// arbitrary order across instances; the buffer slots each partial
-/// payload by shard index and releases the request only when every part
-/// has landed — concatenated **in shard order**, so the merged payload is
-/// byte-identical to the monolithic last-shard merge regardless of
-/// arrival order (property-tested in `rust/tests/property_streaming.rs`).
+/// Ordered reassembly of a streamed payload split into indexed parts.
+/// Used on *both* streamed edges: the prefill side reassembles EP chunks
+/// (chunked handoff, `EpdConfig::ep_chunk_tokens > 0`,
+/// [`StageQueues::reassembly`]) and the decode side reassembles PD KV
+/// layer groups (`EpdConfig::pd_layer_groups > 0`,
+/// [`StageQueues::kv_reassembly`]). Parts complete in arbitrary order
+/// across instances; the buffer slots each partial payload by part index
+/// and releases the request only when every part has landed —
+/// concatenated **in part order**, so the merged payload is
+/// byte-identical to the monolithic payload regardless of arrival order
+/// (property-tested in `rust/tests/property_streaming.rs` and
+/// `rust/tests/property_pd_streaming.rs`).
 #[derive(Debug, Default)]
 pub struct ReassemblyBuffer {
     inner: Mutex<HashMap<RequestId, Reassembly>>,
@@ -131,6 +136,11 @@ pub struct StageQueues {
     pub encoder_cache: Mutex<EncoderCache>,
     /// Prefill-side reassembly of streamed EP chunks.
     pub reassembly: ReassemblyBuffer,
+    /// Decode-side reassembly of streamed PD KV layer groups. A separate
+    /// buffer (not another use of `reassembly`) because a request id can
+    /// in principle have both edges streaming, and the two payloads must
+    /// never mix.
+    pub kv_reassembly: ReassemblyBuffer,
 }
 
 impl StageQueues {
@@ -158,6 +168,7 @@ impl StageQueues {
                 ENCODER_CACHE_BLOCK_TOKENS,
             )),
             reassembly: ReassemblyBuffer::new(),
+            kv_reassembly: ReassemblyBuffer::new(),
         }
     }
 

@@ -105,6 +105,7 @@ impl EpdEngine {
                 artifacts_dir: cfg.artifacts_dir.clone(),
                 max_decode_batch: cfg.max_decode_batch,
                 decode_recheck_steps: cfg.decode_recheck_steps,
+                pd_layer_groups: cfg.epd.pd_layer_groups,
             };
             let q = Arc::clone(&queues);
             let m = Arc::clone(&metrics);

@@ -33,6 +33,12 @@ pub struct MetricsRecorder {
     ep_streamed: AtomicU64,
     /// Streamed requests whose chunks finished reassembly at prefill.
     ep_reassembled: AtomicU64,
+    /// KV layer groups emitted by prefill (streamed PD handoff).
+    pd_chunks: AtomicU64,
+    /// Requests whose KV left prefill as layer groups.
+    pd_streamed: AtomicU64,
+    /// Streamed requests whose KV finished reassembly at decode.
+    pd_reassembled: AtomicU64,
 }
 
 impl MetricsRecorder {
@@ -94,6 +100,34 @@ impl MetricsRecorder {
 
     pub fn ep_reassembled_requests(&self) -> u64 {
         self.ep_reassembled.load(Ordering::Relaxed)
+    }
+
+    /// Record one KV layer group leaving prefill (streamed PD handoff,
+    /// `EpdConfig::pd_layer_groups > 0`).
+    pub fn on_pd_chunk(&self) {
+        self.pd_chunks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a request whose prefilled KV left as layer groups.
+    pub fn on_pd_streamed(&self) {
+        self.pd_streamed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a streamed request completing decode-side KV reassembly.
+    pub fn on_pd_reassembled(&self) {
+        self.pd_reassembled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn pd_chunks(&self) -> u64 {
+        self.pd_chunks.load(Ordering::Relaxed)
+    }
+
+    pub fn pd_streamed_requests(&self) -> u64 {
+        self.pd_streamed.load(Ordering::Relaxed)
+    }
+
+    pub fn pd_reassembled_requests(&self) -> u64 {
+        self.pd_reassembled.load(Ordering::Relaxed)
     }
 
     pub fn on_arrival(&self, id: RequestId) {
@@ -211,6 +245,17 @@ impl MetricsRecorder {
                     ),
                 ]),
             ),
+            (
+                "pd_streaming",
+                Json::obj(vec![
+                    ("chunks", Json::num(self.pd_chunks() as f64)),
+                    ("streamed_requests", Json::num(self.pd_streamed_requests() as f64)),
+                    (
+                        "reassembled_requests",
+                        Json::num(self.pd_reassembled_requests() as f64),
+                    ),
+                ]),
+            ),
         ])
     }
 }
@@ -268,6 +313,7 @@ mod tests {
         assert!(j.get("ttft").unwrap().get("mean").is_some());
         assert!(j.get("encoder_cache").unwrap().get("hit_rate").is_some());
         assert!(j.get("ep_streaming").unwrap().get("chunks").is_some());
+        assert!(j.get("pd_streaming").unwrap().get("chunks").is_some());
     }
 
     #[test]
@@ -280,6 +326,19 @@ mod tests {
         assert_eq!(m.ep_streamed_requests(), 1);
         assert_eq!(m.ep_chunks(), 2);
         assert_eq!(m.ep_reassembled_requests(), 1);
+    }
+
+    #[test]
+    fn pd_streaming_counters() {
+        let m = MetricsRecorder::new();
+        m.on_pd_streamed();
+        for _ in 0..4 {
+            m.on_pd_chunk();
+        }
+        m.on_pd_reassembled();
+        assert_eq!(m.pd_streamed_requests(), 1);
+        assert_eq!(m.pd_chunks(), 4);
+        assert_eq!(m.pd_reassembled_requests(), 1);
     }
 
     #[test]

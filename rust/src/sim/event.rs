@@ -25,6 +25,11 @@ pub enum Event {
     PrefillDone { instance: usize },
     /// A PD transfer landed at the decode side.
     PdTransferDone { req: RequestId },
+    /// One streamed layer group of `tokens` KV tokens landed at the
+    /// request's pre-selected decode target (layer-wise PD streaming,
+    /// `EpdConfig::pd_layer_groups > 0`). The tail group's arrival admits
+    /// the request to the target's continuous batch.
+    PdChunkTransferDone { req: RequestId, tokens: u64 },
     /// A decode instance finished one autoregressive step.
     DecodeStepDone { instance: usize },
     /// An aggregated/PD instance finished its current (fused) work item.

@@ -1,0 +1,302 @@
+//! Per-instance link scheduling for inter-stage transfers.
+//!
+//! Every instance owns one full-duplex NIC modelled as two independent
+//! channels: an **egress** channel for outbound payloads and an
+//! **ingress** channel for inbound ones. A transfer from instance `src`
+//! to instance `dst` occupies `src`'s egress and `dst`'s ingress for
+//! `bytes / bandwidth` seconds and is delivered one latency floor after
+//! its last byte leaves the wire.
+//!
+//! Two modes, selected by [`EpdConfig::link_contention`]:
+//!
+//! - **Free overlap** (default, the repo's historical model): every
+//!   transfer starts the instant it is ready, regardless of what else is
+//!   on the link. Arrival times are *bit-for-bit identical* to calling
+//!   [`TransferModel::migration_time`] directly, so flipping the flag off
+//!   reproduces old runs exactly; the scheduler still accounts per-link
+//!   busy time (with zero queueing).
+//! - **Contended**: each channel keeps a calendar of reserved busy
+//!   intervals, and a transfer claims the earliest slot at or after its
+//!   ready time that is free on *both* endpoint channels. Because the
+//!   calendar fills gaps, a transfer that becomes ready early is never
+//!   blocked by a reservation parked further in the future (layer-wise
+//!   PD streaming reserves whole passes ahead of time); it only waits for
+//!   bytes that genuinely occupy the wire when it wants it, and that wait
+//!   lands in [`LinkStats::queue_seconds`]. This is the fidelity fix that
+//!   keeps layer-wise PD streaming honest — the overlapped group
+//!   transfers must pay for the links they share with EP traffic and
+//!   with each other.
+//!
+//! Endpoints are optional because not every transfer has a modelled NIC
+//! on both sides: the EP edge resolves its destination instance only at
+//! prefill admission (so EP transfers contend on the encoder's egress
+//! alone), and encoder-cache hits serve chunks from the cache holder
+//! rather than a live encode instance.
+//!
+//! [`EpdConfig::link_contention`]: crate::core::config::EpdConfig::link_contention
+//! [`TransferModel::migration_time`]: crate::coordinator::migration::TransferModel::migration_time
+
+use crate::coordinator::migration::TransferModel;
+
+/// Per-link (per-instance NIC) transfer counters, reported in
+/// [`SimOutcome::links`](crate::sim::SimOutcome::links). A transfer is
+/// counted at every modelled endpoint, so one `src → dst` move shows up
+/// on both instances' rows.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LinkStats {
+    /// Seconds the egress channel spent moving bytes out.
+    pub egress_busy_seconds: f64,
+    /// Seconds the ingress channel spent moving bytes in.
+    pub ingress_busy_seconds: f64,
+    /// Seconds transfers waited for this link's channels to free up
+    /// (always zero under free overlap). Attributed to the source
+    /// endpoint when one is modelled, else to the destination.
+    pub queue_seconds: f64,
+    /// Transfers that touched this link (as source or destination).
+    pub transfers: u64,
+}
+
+/// One channel's calendar: non-overlapping reserved `[start, end)`
+/// intervals, sorted by start (and therefore by end).
+#[derive(Debug, Clone, Default)]
+struct Channel {
+    busy: Vec<(f64, f64)>,
+}
+
+impl Channel {
+    /// End of the first reserved interval overlapping `[s, e)`, if any.
+    fn conflict(&self, s: f64, e: f64) -> Option<f64> {
+        let i = self.busy.partition_point(|iv| iv.1 <= s);
+        match self.busy.get(i) {
+            Some(&(bs, be)) if bs < e => Some(be),
+            _ => None,
+        }
+    }
+
+    fn reserve(&mut self, s: f64, e: f64) {
+        let i = self.busy.partition_point(|iv| iv.0 < s);
+        self.busy.insert(i, (s, e));
+    }
+
+    /// Drop reservations that ended at or before `now`: every future
+    /// transfer is scheduled with `ready >= now` (simulation time only
+    /// moves forward), so they can never conflict again. Keeps the
+    /// calendar bounded by the in-flight window instead of the whole run.
+    fn prune(&mut self, now: f64) {
+        let k = self.busy.partition_point(|iv| iv.1 <= now);
+        if k > 0 {
+            self.busy.drain(..k);
+        }
+    }
+}
+
+/// Serializes transfers over the per-instance links (see module docs).
+#[derive(Debug, Clone)]
+pub struct LinkScheduler {
+    contended: bool,
+    egress: Vec<Channel>,
+    ingress: Vec<Channel>,
+    stats: Vec<LinkStats>,
+}
+
+impl LinkScheduler {
+    pub fn new(num_links: usize, contended: bool) -> LinkScheduler {
+        LinkScheduler {
+            contended,
+            egress: vec![Channel::default(); num_links],
+            ingress: vec![Channel::default(); num_links],
+            stats: vec![LinkStats::default(); num_links],
+        }
+    }
+
+    pub fn contended(&self) -> bool {
+        self.contended
+    }
+
+    /// Schedule a transfer of `bytes` that becomes ready at `ready`
+    /// (`ready >= now`, the caller's current simulation time — `now`
+    /// anchors calendar pruning), from `src`'s egress to `dst`'s ingress
+    /// (either endpoint may be unmodelled). Returns the delivery time at
+    /// the destination: `start + latency + bytes/bandwidth`, where
+    /// `start == ready` under free overlap and is the earliest instant
+    /// with `bytes/bandwidth` of simultaneous free time on both channels
+    /// under contention.
+    pub fn schedule(
+        &mut self,
+        tm: &TransferModel,
+        now: f64,
+        ready: f64,
+        src: Option<usize>,
+        dst: Option<usize>,
+        bytes: u64,
+    ) -> f64 {
+        debug_assert!(ready >= now, "transfers cannot be ready in the past");
+        let duration = bytes as f64 / tm.bandwidth;
+        let mut start = ready;
+        if self.contended && duration > 0.0 {
+            if let Some(i) = src {
+                self.egress[i].prune(now);
+            }
+            if let Some(i) = dst {
+                self.ingress[i].prune(now);
+            }
+            // First-fit over both calendars: bump past whichever
+            // reservation overlaps the candidate window until none does.
+            loop {
+                let c_src = src.and_then(|i| self.egress[i].conflict(start, start + duration));
+                let c_dst = dst.and_then(|i| self.ingress[i].conflict(start, start + duration));
+                match (c_src, c_dst) {
+                    (None, None) => break,
+                    (a, b) => start = a.unwrap_or(f64::MIN).max(b.unwrap_or(f64::MIN)),
+                }
+            }
+            if let Some(i) = src {
+                self.egress[i].reserve(start, start + duration);
+            }
+            if let Some(i) = dst {
+                self.ingress[i].reserve(start, start + duration);
+            }
+        }
+        let wait = start - ready;
+        if let Some(i) = src {
+            let s = &mut self.stats[i];
+            s.egress_busy_seconds += duration;
+            s.queue_seconds += wait;
+            s.transfers += 1;
+        }
+        if let Some(i) = dst {
+            let s = &mut self.stats[i];
+            s.ingress_busy_seconds += duration;
+            if src.is_none() {
+                s.queue_seconds += wait;
+            }
+            s.transfers += 1;
+        }
+        start + tm.time(bytes)
+    }
+
+    pub fn stats(&self) -> &[LinkStats] {
+        &self.stats
+    }
+
+    pub fn into_stats(self) -> Vec<LinkStats> {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tm() -> TransferModel {
+        TransferModel { bandwidth: 100.0, latency: 0.5 }
+    }
+
+    #[test]
+    fn free_overlap_matches_migration_time_arithmetic() {
+        let t = tm();
+        let mut l = LinkScheduler::new(2, false);
+        // Two transfers ready at the same instant on the same link must
+        // both be delivered at ready + time(bytes) — no serialization.
+        let a = l.schedule(&t, 0.0, 1.0, Some(0), Some(1), 200);
+        let b = l.schedule(&t, 0.0, 1.0, Some(0), Some(1), 200);
+        assert_eq!(a.to_bits(), (1.0 + t.time(200)).to_bits());
+        assert_eq!(a.to_bits(), b.to_bits());
+        // Busy time still accounted; queueing stays zero.
+        assert!((l.stats()[0].egress_busy_seconds - 4.0).abs() < 1e-12);
+        assert_eq!(l.stats()[0].queue_seconds, 0.0);
+        assert_eq!(l.stats()[0].transfers, 2);
+        assert_eq!(l.stats()[1].transfers, 2);
+    }
+
+    #[test]
+    fn contended_serializes_shared_egress() {
+        let t = tm();
+        let mut l = LinkScheduler::new(3, true);
+        // 200 B at 100 B/s = 2 s on the wire, +0.5 s latency.
+        let a = l.schedule(&t, 0.0, 0.0, Some(0), Some(1), 200);
+        assert!((a - 2.5).abs() < 1e-12);
+        // Same egress, different ingress: waits for the wire, not the peer.
+        let b = l.schedule(&t, 0.0, 0.0, Some(0), Some(2), 200);
+        assert!((b - 4.5).abs() < 1e-12, "b = {b}");
+        assert!((l.stats()[0].queue_seconds - 2.0).abs() < 1e-12);
+        // Disjoint channels never serialize (1's egress and 0's ingress
+        // are both untouched above).
+        let c = l.schedule(&t, 0.0, 0.0, Some(1), Some(0), 100);
+        assert!((c - t.time(100)).abs() < 1e-12, "disjoint link starts immediately: {c}");
+    }
+
+    #[test]
+    fn contended_serializes_shared_ingress() {
+        let t = tm();
+        let mut l = LinkScheduler::new(3, true);
+        let a = l.schedule(&t, 0.0, 0.0, Some(0), Some(2), 200);
+        let b = l.schedule(&t, 0.0, 0.0, Some(1), Some(2), 200);
+        assert!((b - a - 2.0).abs() < 1e-12, "ingress serializes: {a} {b}");
+        // The wait is attributed to the source endpoint.
+        assert!((l.stats()[1].queue_seconds - 2.0).abs() < 1e-12);
+        assert_eq!(l.stats()[2].queue_seconds, 0.0);
+    }
+
+    #[test]
+    fn future_reservations_do_not_block_earlier_ready_transfers() {
+        // Layer-wise PD streaming reserves windows across a whole prefill
+        // pass up front; a transfer ready before those windows must fill
+        // the gap, not queue behind the future reservation.
+        let t = tm();
+        let mut l = LinkScheduler::new(2, true);
+        let far = l.schedule(&t, 0.0, 10.0, Some(0), Some(1), 200); // [10, 12)
+        assert!((far - 12.5).abs() < 1e-12);
+        let early = l.schedule(&t, 0.0, 0.0, Some(0), Some(1), 200); // fits [0, 2)
+        assert!((early - 2.5).abs() < 1e-12, "gap before the reservation is usable: {early}");
+        assert_eq!(l.stats()[0].queue_seconds, 0.0);
+        // A transfer overlapping the future window bumps past it.
+        // [9, 11) hits [10, 12) and bumps to [12, 14).
+        let bumped = l.schedule(&t, 0.0, 9.0, Some(0), Some(1), 200);
+        assert!((bumped - 14.5).abs() < 1e-12, "bumped = {bumped}");
+        assert!((l.stats()[0].queue_seconds - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unmodelled_endpoints_skip_accounting() {
+        let t = tm();
+        let mut l = LinkScheduler::new(1, true);
+        let a = l.schedule(&t, 0.0, 0.0, None, None, 1000);
+        assert_eq!(a.to_bits(), t.time(1000).to_bits());
+        assert_eq!(l.stats()[0].transfers, 0);
+        // Destination-only transfer attributes its wait to the ingress.
+        l.schedule(&t, 0.0, 0.0, None, Some(0), 100);
+        let b = l.schedule(&t, 0.0, 0.0, None, Some(0), 100);
+        assert!((b - (1.0 + t.time(100))).abs() < 1e-12);
+        assert!((l.stats()[0].queue_seconds - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calendar_prunes_expired_reservations() {
+        // A long run must not accumulate every reservation ever made:
+        // intervals ending at or before the caller's `now` are dropped.
+        let t = tm();
+        let mut l = LinkScheduler::new(1, true);
+        for k in 0..100u32 {
+            let r = k as f64 * 10.0;
+            l.schedule(&t, r, r, Some(0), None, 100); // 1 s on the wire each
+        }
+        assert!(
+            l.egress[0].busy.len() <= 2,
+            "expired intervals pruned: {}",
+            l.egress[0].busy.len()
+        );
+        assert_eq!(l.stats()[0].transfers, 100);
+        assert_eq!(l.stats()[0].queue_seconds, 0.0);
+    }
+
+    #[test]
+    fn zero_byte_transfers_never_occupy_the_wire() {
+        let t = tm();
+        let mut l = LinkScheduler::new(1, true);
+        l.schedule(&t, 0.0, 0.0, Some(0), None, 200); // [0, 2)
+        let z = l.schedule(&t, 0.0, 1.0, Some(0), None, 0);
+        assert_eq!(z.to_bits(), (1.0 + t.latency).to_bits(), "latency only, no queueing");
+        assert_eq!(l.stats()[0].transfers, 2);
+    }
+}

@@ -12,8 +12,10 @@
 pub mod cost;
 pub mod event;
 pub mod engine;
+pub mod link;
 pub mod outcome;
 
 pub use cost::CostModel;
 pub use engine::{SimConfig, Simulator};
-pub use outcome::{EpOverlapStats, SimOutcome};
+pub use link::{LinkScheduler, LinkStats};
+pub use outcome::{EpOverlapStats, PdOverlapStats, SimOutcome};

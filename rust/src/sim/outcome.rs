@@ -3,6 +3,7 @@
 use crate::cache::EncoderCacheStats;
 use crate::core::request::RequestTimeline;
 use crate::core::slo::Slo;
+use crate::sim::link::LinkStats;
 use crate::util::stats::{self, Summary};
 
 /// Counters for the chunked encode→prefill streaming pipeline
@@ -25,6 +26,56 @@ pub struct EpOverlapStats {
     pub overlap_seconds: f64,
 }
 
+/// Counters for the prefill→decode handoff. The `handoff_*`,
+/// `monolithic_transfers`, `parked` and `kv_bytes` fields accumulate in
+/// *every* mode (they are how the streamed-vs-monolithic A/B is
+/// measured); the streaming-specific fields (`streamed_requests`,
+/// `chunks`, `retargets`, `fallbacks`) stay zero under the monolithic
+/// handoff (`pd_layer_groups = 0`) — asserting that is how the
+/// regression tests prove the machinery stays dormant.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PdOverlapStats {
+    /// Requests that entered the layer-wise streaming pipeline (decode
+    /// target selected and KV blocks reserved at prefill start).
+    pub streamed_requests: u64,
+    /// Streamed layer-group transfers that landed at a decode target.
+    pub chunks: u64,
+    /// Mid-stream re-targets: the chosen decoder stopped serving decode
+    /// (role switch) before the tail group landed, so already-landed KV
+    /// was re-sent to a fresh target.
+    pub retargets: u64,
+    /// Requests whose early decode selection found no decoder able to
+    /// host their context — they fell back to the monolithic handoff.
+    pub fallbacks: u64,
+    /// Requests parked at the PD edge because *no* instance served
+    /// decode (all mid-switch); woken event-driven by the next
+    /// `SwitchDone` that restores the role — never polled.
+    pub parked: u64,
+    /// Monolithic full-KV transfers completed (exactly one per
+    /// non-streamed multi-token request; a polling retry loop would
+    /// inflate this, which is what the regression test pins).
+    pub monolithic_transfers: u64,
+    /// Bytes moved over the PD edge (monolithic + streamed + re-sent).
+    /// Invariant between `pd_layer_groups = 0` and `> 0` when no
+    /// re-targets occur — streaming never moves KV it didn't have to.
+    pub kv_bytes: u64,
+    /// Σ over decode admissions of `join_time − prefill_end`: the
+    /// prefill-end→decode-start latency the streamed handoff collapses.
+    pub handoff_seconds: f64,
+    /// Decode admissions measured into `handoff_seconds`.
+    pub handoff_count: u64,
+}
+
+impl PdOverlapStats {
+    /// Mean prefill-end→decode-start latency, seconds.
+    pub fn mean_handoff(&self) -> f64 {
+        if self.handoff_count == 0 {
+            return 0.0;
+        }
+        self.handoff_seconds / self.handoff_count as f64
+    }
+}
+
 /// The result of one simulation run.
 #[derive(Debug, Clone)]
 pub struct SimOutcome {
@@ -44,6 +95,12 @@ pub struct SimOutcome {
     pub encoder_cache: EncoderCacheStats,
     /// Chunked EP streaming counters (`ep_chunk_tokens > 0` only).
     pub ep_overlap: EpOverlapStats,
+    /// Prefill→decode handoff counters (layer-wise KV streaming when
+    /// `pd_layer_groups > 0`; handoff-latency accounting always).
+    pub pd_overlap: PdOverlapStats,
+    /// Per-instance link counters (egress/ingress busy time, queueing
+    /// delay). Queueing is non-zero only with `link_contention` enabled.
+    pub links: Vec<LinkStats>,
 }
 
 impl SimOutcome {
@@ -93,6 +150,20 @@ impl SimOutcome {
         ok as f64 / total as f64
     }
 
+    /// Total seconds transfers spent queued behind busy links (zero
+    /// unless `link_contention` is enabled).
+    pub fn link_queue_seconds(&self) -> f64 {
+        self.links.iter().map(|l| l.queue_seconds).sum()
+    }
+
+    /// Total link occupancy across instances (egress + ingress), seconds.
+    pub fn link_busy_seconds(&self) -> f64 {
+        self.links
+            .iter()
+            .map(|l| l.egress_busy_seconds + l.ingress_busy_seconds)
+            .sum()
+    }
+
     /// Completed requests per second of makespan (offline throughput).
     pub fn throughput(&self) -> f64 {
         let n = self.finished().count();
@@ -129,6 +200,8 @@ mod tests {
             rejected: 1,
             encoder_cache: EncoderCacheStats::default(),
             ep_overlap: EpOverlapStats::default(),
+            pd_overlap: PdOverlapStats::default(),
+            links: Vec::new(),
         }
     }
 
@@ -151,5 +224,14 @@ mod tests {
     fn throughput() {
         let o = outcome();
         assert!((o.throughput() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_handoff_guards_empty() {
+        let mut s = PdOverlapStats::default();
+        assert_eq!(s.mean_handoff(), 0.0);
+        s.handoff_seconds = 3.0;
+        s.handoff_count = 2;
+        assert!((s.mean_handoff() - 1.5).abs() < 1e-12);
     }
 }

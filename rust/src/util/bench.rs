@@ -198,6 +198,64 @@ impl TableReport {
     }
 }
 
+/// Machine-readable perf-gate summary, written as
+/// `results/BENCH_<id>.json` alongside the table artifacts and consumed
+/// by `scripts/bench_json.sh` / `make bench-json` — the perf-trajectory
+/// record of what each gated bench requires vs. what it measured.
+#[derive(Debug, Clone)]
+pub struct GateReport {
+    /// Artifact id (`BENCH_<id>.json`).
+    pub id: String,
+    /// Human-readable gate statement, e.g. "handoff reduction >= 30%".
+    pub gate: String,
+    /// The gate threshold the measurement must meet.
+    pub baseline: f64,
+    /// What the bench measured.
+    pub measured: f64,
+    /// Whether the gate held.
+    pub pass: bool,
+}
+
+impl GateReport {
+    /// A ">= threshold" gate: passes when `measured >= baseline`.
+    pub fn at_least(id: &str, gate: &str, baseline: f64, measured: f64) -> GateReport {
+        GateReport {
+            id: id.to_string(),
+            gate: gate.to_string(),
+            baseline,
+            measured,
+            pass: measured >= baseline,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("gate", Json::str(self.gate.clone())),
+            ("baseline", Json::num(self.baseline)),
+            ("measured", Json::num(self.measured)),
+            ("pass", Json::Bool(self.pass)),
+        ])
+    }
+
+    /// Print to stdout and persist under `results/BENCH_<id>.json`.
+    pub fn emit(&self) {
+        println!(
+            "[gate] {}: {} (baseline {:.4}, measured {:.4}) -> {}",
+            self.id,
+            self.gate,
+            self.baseline,
+            self.measured,
+            if self.pass { "PASS" } else { "FAIL" }
+        );
+        let _ = std::fs::create_dir_all("results");
+        let _ = std::fs::write(
+            format!("results/BENCH_{}.json", self.id),
+            self.to_json().pretty(),
+        );
+    }
+}
+
 /// Entry point used by the table/figure benches: runs `f` and emits every
 /// produced table. `cargo bench` passes `--bench`; ignore argv entirely.
 pub fn table<F: FnOnce() -> Vec<TableReport>>(f: F) {
@@ -250,5 +308,16 @@ mod tests {
         t.row(vec!["1".into()]);
         let j = t.to_json();
         assert_eq!(j.get("id").unwrap().as_str(), Some("t2"));
+    }
+
+    #[test]
+    fn gate_report_threshold_and_json() {
+        let g = GateReport::at_least("x", "gain >= 30%", 0.30, 0.42);
+        assert!(g.pass);
+        let j = g.to_json();
+        assert_eq!(j.get("pass").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("baseline").unwrap().as_f64(), Some(0.30));
+        let g = GateReport::at_least("x", "gain >= 30%", 0.30, 0.12);
+        assert!(!g.pass);
     }
 }

@@ -41,6 +41,25 @@ pub fn ceil_div(a: u64, b: u64) -> u64 {
     a.div_ceil(b)
 }
 
+/// Exact cumulative split of `total` units into `parts` contiguous spans:
+/// part `i` covers `[total*i/parts, total*(i+1)/parts)`, so the sizes
+/// always sum to `total` exactly (possibly with empty parts when
+/// `total < parts`). This is THE split used on both streamed handoff
+/// edges — sim PD layer groups, the engine's `Job::KvChunk` slicing, and
+/// their property tests — so the streamed payload is provably the
+/// monolithic payload re-chunked.
+pub fn cumulative_split(total: u64, parts: u64) -> Vec<u64> {
+    assert!(parts > 0);
+    let mut out = Vec::with_capacity(parts as usize);
+    let mut sent = 0u64;
+    for i in 1..=parts {
+        let cum = total * i / parts;
+        out.push(cum - sent);
+        sent = cum;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,5 +84,15 @@ mod tests {
         assert_eq!(ceil_div(1, 16), 1);
         assert_eq!(ceil_div(16, 16), 1);
         assert_eq!(ceil_div(17, 16), 2);
+    }
+
+    #[test]
+    fn cumulative_split_sums_exactly() {
+        for (total, parts) in [(0u64, 3u64), (7, 3), (8, 8), (26646, 8), (5, 12)] {
+            let s = cumulative_split(total, parts);
+            assert_eq!(s.len(), parts as usize);
+            assert_eq!(s.iter().sum::<u64>(), total, "total={total} parts={parts}");
+        }
+        assert_eq!(cumulative_split(10, 3), vec![3, 3, 4]);
     }
 }

@@ -119,6 +119,50 @@ fn distserve_and_aggregated_modes_serve() {
 }
 
 #[test]
+fn pd_layer_groups_reproduce_monolithic_tokens() {
+    if !artifacts() {
+        return;
+    }
+    // Same request through the monolithic and the streamed PD handoff:
+    // layer-group transfer + decode-side reassembly must be invisible to
+    // the generated tokens (byte-identical KV), and the streamed run
+    // must actually move its KV as `pd_layer_groups` chunks.
+    let groups = 4u32;
+    let mono_epd = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
+    let mut stream_epd = mono_epd.clone();
+    stream_epd.pd_layer_groups = groups;
+
+    let mono = EpdEngine::start(EngineConfig::new("artifacts", mono_epd)).unwrap();
+    let a = mono.generate(2, "kv streaming check", 10).unwrap();
+    let mono_pd_bytes = mono
+        .queues()
+        .transfers
+        .pd_bytes
+        .load(std::sync::atomic::Ordering::Relaxed);
+    mono.shutdown();
+
+    let streamed = EpdEngine::start(EngineConfig::new("artifacts", stream_epd)).unwrap();
+    let b = streamed.generate(2, "kv streaming check", 10).unwrap();
+    assert_eq!(a.tokens, b.tokens, "streamed KV must decode identically");
+    assert_eq!(streamed.metrics.pd_streamed_requests(), 1);
+    assert_eq!(streamed.metrics.pd_chunks(), groups as u64);
+    assert_eq!(streamed.metrics.pd_reassembled_requests(), 1);
+    let q = streamed.queues();
+    assert_eq!(
+        q.transfers.pd_count.load(std::sync::atomic::Ordering::Relaxed),
+        groups as u64,
+        "one PD migration per layer group"
+    );
+    assert_eq!(
+        q.transfers.pd_bytes.load(std::sync::atomic::Ordering::Relaxed),
+        mono_pd_bytes,
+        "streaming must not change total PD bytes"
+    );
+    assert_eq!(q.kv_reassembly.pending(), 0, "no leaked partial KV state");
+    streamed.shutdown();
+}
+
+#[test]
 fn http_frontend_serves_and_reports_metrics() {
     if !artifacts() {
         return;

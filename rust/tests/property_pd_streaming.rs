@@ -1,0 +1,197 @@
+//! Property tests for the layer-wise prefill→decode KV streaming
+//! pipeline (`EpdConfig::pd_layer_groups`): out-of-order layer-group
+//! arrival must always reassemble the byte-identical monolithic KV
+//! payload, the simulator must move the same PD bytes streamed as
+//! monolithic, and `pd_layer_groups = 0` must be bit-for-bit the
+//! monolithic handoff with the streaming machinery fully dormant.
+
+use epdserve::core::config::EpdConfig;
+use epdserve::core::request::Request;
+use epdserve::core::topology::Topology;
+use epdserve::engine::queues::ReassemblyBuffer;
+use epdserve::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use epdserve::model::vision::{mm_tokens_for_image, tiles_for_image, Resolution};
+use epdserve::sim::engine::{SimConfig, Simulator};
+use epdserve::util::quickcheck::{forall_cfg, pair, usize_in, Config};
+use epdserve::util::rng::Rng;
+
+fn mk_requests(spec: &LmmSpec, n: u64, rate: f64, images: u32, out: u32, seed: u64) -> Vec<Request> {
+    let res = Resolution::four_k();
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|id| {
+            t += rng.exp(rate);
+            Request {
+                id,
+                arrival: t,
+                prompt_tokens: 22,
+                images,
+                resolution: res,
+                output_tokens: out,
+                tiles_per_image: tiles_for_image(spec, res),
+                mm_tokens_per_image: mm_tokens_for_image(spec, res) as u32,
+                media_hash: None,
+            }
+        })
+        .collect()
+}
+
+/// The engine's split-and-reassemble round trip: a flat KV buffer cut
+/// into `groups` contiguous spans by the exact cumulative split (the same
+/// arithmetic `engine/instance.rs` uses for `Job::KvChunk`), inserted in
+/// a random order, always merges back byte-identical — and admits the
+/// request exactly at the final group.
+#[test]
+fn kv_layer_groups_reassemble_byte_identical() {
+    forall_cfg(
+        Config { cases: 120, seed: 99, max_shrink_steps: 0 },
+        pair(usize_in(1, 12), usize_in(1, 9999)),
+        |&(groups, seed)| {
+            let mut rng = Rng::new(seed as u64);
+            // Random flat KV buffer — possibly smaller than the group
+            // count, so some groups are legitimately empty spans.
+            let len = rng.range(0, 4096);
+            let kv: Vec<f32> = (0..len).map(|_| rng.f64() as f32).collect();
+
+            // Exact cumulative split into contiguous layer groups — the
+            // shared helper both the sim and the engine split with.
+            let sizes = epdserve::util::bytes::cumulative_split(len as u64, groups as u64);
+            let mut parts: Vec<Vec<f32>> = Vec::with_capacity(groups);
+            let mut lo = 0usize;
+            for sz in sizes {
+                let hi = lo + sz as usize;
+                parts.push(kv[lo..hi].to_vec());
+                lo = hi;
+            }
+            if lo != len {
+                return Err(format!("split covers {lo} of {len} floats"));
+            }
+
+            // Random arrival permutation (Fisher–Yates over indices).
+            let mut order: Vec<usize> = (0..groups).collect();
+            for i in (1..groups).rev() {
+                let j = rng.below((i + 1) as u64) as usize;
+                order.swap(i, j);
+            }
+
+            let rb = ReassemblyBuffer::new();
+            rb.expect(7, groups);
+            let mut merged = None;
+            for (k, &g) in order.iter().enumerate() {
+                let out = rb.insert(7, g, parts[g].clone());
+                if k + 1 < groups {
+                    if out.is_some() {
+                        return Err(format!("admitted early at group {k}"));
+                    }
+                } else {
+                    merged = out;
+                }
+            }
+            let merged = merged.ok_or("final group did not complete reassembly")?;
+            if merged != kv {
+                return Err(format!(
+                    "payload mismatch: {} vs {} floats (order {order:?})",
+                    merged.len(),
+                    kv.len()
+                ));
+            }
+            if rb.pending() != 0 {
+                return Err("completed request not dropped".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Total bytes moved over the PD edge are invariant between the
+/// monolithic handoff and any layer-group count: streaming re-times the
+/// transfer, it never moves KV it didn't have to (absent re-targets,
+/// which require role switching).
+#[test]
+fn sim_pd_bytes_invariant_across_group_counts() {
+    let spec = LmmSpec::get(ModelId::InternVl2_8b);
+    let reqs = mk_requests(&spec, 12, 0.4, 4, 8, 77);
+    let run = |groups: u32| {
+        let mut epd = EpdConfig::epd(Topology::new(2, 2, 1), 1, 1, 128);
+        epd.pd_layer_groups = groups;
+        Simulator::run(&SimConfig::new(spec.clone(), DeviceSpec::a100(), epd), &reqs)
+    };
+    let mono = run(0);
+    assert_eq!(mono.finished().count(), reqs.len());
+    assert!(mono.pd_overlap.kv_bytes > 0);
+    for groups in [1u32, 3, 8] {
+        let streamed = run(groups);
+        assert_eq!(streamed.finished().count(), reqs.len(), "groups={groups}");
+        assert_eq!(
+            streamed.pd_overlap.kv_bytes, mono.pd_overlap.kv_bytes,
+            "bytes must be invariant at groups={groups}"
+        );
+        assert_eq!(streamed.pd_overlap.retargets, 0);
+        for (a, b) in mono.finished().zip(streamed.finished()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output_tokens, b.output_tokens);
+        }
+    }
+}
+
+/// `pd_layer_groups = 0` keeps the streaming machinery fully dormant
+/// across random workload shapes, and an explicitly zeroed config stays
+/// outcome-identical to the untouched default. (Equivalence to the
+/// *pre-change* monolithic code is carried by the legacy timing-sensitive
+/// sim tests still passing over the refactored transfer path.)
+#[test]
+fn pd_groups_zero_is_bit_identical_to_default() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    forall_cfg(
+        Config { cases: 10, seed: 321, max_shrink_steps: 0 },
+        pair(usize_in(0, 5), usize_in(1, 30)),
+        |&(images, out)| {
+            let reqs = mk_requests(&spec, 12, 0.8, images as u32, out as u32, 7 + images as u64);
+            let default_epd = EpdConfig::epd(Topology::new(3, 2, 1), 1, 1, 64);
+            let mut zero_epd = default_epd.clone();
+            zero_epd.pd_layer_groups = 0;
+            zero_epd.link_contention = false;
+            let a = Simulator::run(
+                &SimConfig::new(spec.clone(), DeviceSpec::a100(), default_epd),
+                &reqs,
+            );
+            let b = Simulator::run(
+                &SimConfig::new(spec.clone(), DeviceSpec::a100(), zero_epd),
+                &reqs,
+            );
+            if a.pd_overlap.streamed_requests != 0
+                || a.pd_overlap.chunks != 0
+                || a.pd_overlap.retargets != 0
+                || a.pd_overlap.fallbacks != 0
+            {
+                return Err(format!("streaming not dormant: {:?}", a.pd_overlap));
+            }
+            if a.link_queue_seconds() != 0.0 {
+                return Err("link queueing with contention off".into());
+            }
+            if a.pd_overlap != b.pd_overlap {
+                return Err(format!(
+                    "pd counters diverge: {:?} vs {:?}",
+                    a.pd_overlap, b.pd_overlap
+                ));
+            }
+            if a.timelines.len() != b.timelines.len() {
+                return Err("timeline count diverges".into());
+            }
+            for (x, y) in a.timelines.iter().zip(b.timelines.iter()) {
+                let same = x.id == y.id
+                    && x.encode_start.to_bits() == y.encode_start.to_bits()
+                    && x.encode_end.to_bits() == y.encode_end.to_bits()
+                    && x.prefill_start.to_bits() == y.prefill_start.to_bits()
+                    && x.prefill_end.to_bits() == y.prefill_end.to_bits()
+                    && x.first_token.to_bits() == y.first_token.to_bits()
+                    && x.finish.to_bits() == y.finish.to_bits();
+                if !same {
+                    return Err(format!("timeline diverges for request {}", x.id));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,147 @@
+//! Online reallocation A/B on a phase-shifting workload: predictive
+//! planner vs the legacy greedy controller vs a static topology.
+//!
+//! The workload (`workload/phase_shift.rs`) opens with an encode-heavy
+//! many-image 4K burst and flips into a long-decode chat tail on a
+//! 2E2P1D MiniCPM-V 2.6 slice with shallow decode batches — so the
+//! starting topology is right for the burst and badly decode-starved for
+//! the tail. A static cluster lets the decode queue grow without bound;
+//! the greedy controller reacts one instance at a time behind its
+//! pressure hysteresis and cool-down; the predictive planner re-scores
+//! the topology neighborhood against the profiled shift and executes a
+//! multi-step plan within a few monitor ticks.
+//!
+//! **Gate: ≥ 20% higher SLO attainment for `planner = "predictive"` than
+//! for the greedy controller** on this phase shift. Emits
+//! `results/BENCH_reallocation.json` (via `GateReport`) for
+//! `scripts/bench_json.sh` / `make bench-json`.
+
+use epdserve::core::config::{EpdConfig, PlannerPolicy};
+use epdserve::core::slo::Slo;
+use epdserve::core::topology::Topology;
+use epdserve::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use epdserve::sim::engine::{SimConfig, Simulator};
+use epdserve::sim::outcome::SimOutcome;
+use epdserve::util::bench::{fmt, GateReport, TableReport};
+use epdserve::util::rng::Rng;
+use epdserve::workload::{PhaseShiftWorkload, Workload};
+
+const GATE: f64 = 0.20;
+const N_REQUESTS: usize = 150;
+const TAIL_RATE: f64 = 2.5;
+
+enum System {
+    Static,
+    Greedy,
+    Predictive,
+}
+
+fn mk_cfg(spec: &LmmSpec, system: &System) -> SimConfig {
+    // Shallow decode batches: one decoder sustains ~2 sequences per step,
+    // so the long-decode tail genuinely needs reallocated instances.
+    let mut epd = EpdConfig::epd(Topology::new(2, 2, 1), 1, 1, 2);
+    match system {
+        System::Static => epd.role_switching = false,
+        System::Greedy => {
+            epd.role_switching = true;
+            epd.planner = PlannerPolicy::Greedy; // legacy default, explicit
+        }
+        System::Predictive => {
+            epd.role_switching = true;
+            epd.planner = PlannerPolicy::Predictive;
+            epd.plan_interval = 0.5;
+        }
+    }
+    SimConfig::new(spec.clone(), DeviceSpec::a100(), epd)
+}
+
+fn run(spec: &LmmSpec, system: &System) -> SimOutcome {
+    let w = PhaseShiftWorkload::default();
+    let mut rng = Rng::new(0x5EA7);
+    let reqs = w.generate(spec, N_REQUESTS, TAIL_RATE, &mut rng);
+    Simulator::run(&mk_cfg(spec, system), &reqs)
+}
+
+fn main() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    // TTFT admits the burst's sharded preprocess+prefill path; TPOT
+    // admits steady decode but not the queue waits of an under-provisioned
+    // tail — the signal the reallocation speed determines.
+    let slo = Slo::new(6.0, 0.035);
+
+    let stat = run(&spec, &System::Static);
+    let greedy = run(&spec, &System::Greedy);
+    let pred = run(&spec, &System::Predictive);
+
+    let att_static = stat.slo_attainment(slo);
+    let att_greedy = greedy.slo_attainment(slo);
+    let att_pred = pred.slo_attainment(slo);
+
+    let mut t = TableReport::new(
+        "perf_reallocation",
+        "Online reallocation on a phase shift (MiniCPM-V 2.6, 2E2P1D start, burst -> long-decode tail)",
+        &["system", "SLO attainment", "mean TPOT (s)", "switches", "plans (steps)"],
+    );
+    for (name, out, att) in [
+        ("static", &stat, att_static),
+        ("greedy", &greedy, att_greedy),
+        ("predictive", &pred, att_pred),
+    ] {
+        t.row(vec![
+            name.into(),
+            fmt(att, 3),
+            fmt(out.mean_tpot(), 4),
+            out.role_switches.to_string(),
+            format!("{} ({})", out.reallocation.plans, out.reallocation.planned_steps),
+        ]);
+    }
+
+    // Sanity: every request completes (or is explicitly rejected) in all
+    // three systems, and reallocation counters stay dormant when off.
+    for (name, out) in [("static", &stat), ("greedy", &greedy), ("predictive", &pred)] {
+        assert_eq!(
+            out.finished().count() as u32 + out.rejected,
+            N_REQUESTS as u32,
+            "{name} lost requests"
+        );
+    }
+    assert_eq!(stat.role_switches, 0);
+    assert_eq!(stat.reallocation.plans, 0);
+    assert!(pred.reallocation.plans >= 1, "predictive planner never fired");
+    assert!(pred.role_switches > 0, "predictive plan steps must execute");
+
+    // Direction: reallocation must beat standing still, and the planned
+    // multi-step response must beat the one-at-a-time greedy reaction.
+    assert!(
+        att_pred > att_static,
+        "predictive {att_pred:.3} vs static {att_static:.3}"
+    );
+    let gain = if att_greedy > 0.0 { att_pred / att_greedy - 1.0 } else { f64::INFINITY };
+    t.note(format!(
+        "predictive vs greedy attainment gain: {:.1}% (gate >= {:.0}%)",
+        gain * 100.0,
+        GATE * 100.0
+    ));
+    t.note(format!(
+        "phase shift: {}x 4-image burst then {}x 160-token chat tail at {} req/s",
+        (N_REQUESTS as f64 * 0.25) as u64,
+        (N_REQUESTS as f64 * 0.75) as u64,
+        TAIL_RATE
+    ));
+    t.emit();
+
+    assert!(
+        gain >= GATE,
+        "predictive attainment {att_pred:.3} only {:.1}% over greedy {att_greedy:.3} (gate {:.0}%)",
+        gain * 100.0,
+        GATE * 100.0
+    );
+
+    GateReport::at_least(
+        "reallocation",
+        "predictive planner SLO attainment >= 20% over greedy on the phase-shifting workload",
+        GATE,
+        gain,
+    )
+    .emit();
+}

@@ -213,7 +213,10 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                 println!("mean TTFT:  {:.3}s", out.mean_ttft());
                 println!("mean TPOT:  {:.4}s", out.mean_tpot());
                 println!("SLO attain: {:.3}", out.slo_attainment(slo));
-                println!("switches:   {}", out.role_switches);
+                println!(
+                    "switches:   {} ({} plans / {} steps)",
+                    out.role_switches, out.reallocation.plans, out.reallocation.planned_steps
+                );
             }
             Ok(())
         }

@@ -1,14 +1,20 @@
 //! The paper's coordination layer: intra-request parallelism (§3.2.2),
-//! EP/PD migration accounting (§3.2.1), and dynamic role switching
-//! (§3.2.4). These are pure policy components consumed by both the
-//! discrete-event simulator and the real engine.
+//! EP/PD migration accounting (§3.2.1), dynamic role switching (§3.2.4),
+//! and the online reallocation planner that unifies role switching with
+//! the §3.2.3 allocation optimizer (workload profiler → topology planner
+//! → shared plan executor). These are pure policy components consumed by
+//! both the discrete-event simulator and the real engine.
 
 pub mod irp;
 pub mod migration;
 pub mod monitor;
+pub mod planner;
+pub mod profiler;
 pub mod role_switch;
 
 pub use irp::{plan_shards, plan_shards_aligned, ShardPlan};
 pub use migration::{MigrationKind, TransferModel};
 pub use monitor::{QueueMonitor, StageLoad};
+pub use planner::{PlannerConfig, ReallocationPlanner, ReallocationStats, SwitchPlan};
+pub use profiler::{WorkloadProfile, WorkloadProfiler};
 pub use role_switch::{RoleSwitchController, SwitchDecision, SwitchPolicy};

@@ -51,14 +51,6 @@ impl QueueMonitor {
         }
     }
 
-    fn idx(stage: Stage) -> usize {
-        match stage {
-            Stage::Encode => 0,
-            Stage::Prefill => 1,
-            Stage::Decode => 2,
-        }
-    }
-
     /// Feed one observation for a stage.
     pub fn observe(
         &mut self,
@@ -69,7 +61,7 @@ impl QueueMonitor {
         instances: u32,
     ) {
         let a = self.alpha;
-        let l = &mut self.loads[Self::idx(stage)];
+        let l = &mut self.loads[stage.index()];
         l.queue_len = (1.0 - a) * l.queue_len + a * queue_len as f64;
         l.backlog = (1.0 - a) * l.backlog + a * backlog;
         l.utilization = (1.0 - a) * l.utilization + a * utilization.clamp(0.0, 1.0);
@@ -77,7 +69,7 @@ impl QueueMonitor {
     }
 
     pub fn load(&self, stage: Stage) -> StageLoad {
-        self.loads[Self::idx(stage)]
+        self.loads[stage.index()]
     }
 
     /// The most and least pressured stages right now.

@@ -1,0 +1,509 @@
+//! The online reallocation planner: §3.2.3's allocation optimizer and
+//! §3.2.4's role switching unified into one control loop.
+//!
+//! The planner periodically scores candidate topologies — the
+//! [`topology_neighborhood`] of the current instance counts, the same
+//! move structure the offline optimizer's `ConfigPoint` space explores —
+//! against the live [`WorkloadProfile`], and emits a multi-step
+//! [`SwitchPlan`]: an ordered list of single-instance moves whose every
+//! intermediate state respects the `min_instances` floor and never
+//! strands queued work on an instance-less stage. A shared executor state
+//! machine (the `pending` queue plus the per-tick release gate in
+//! [`ReallocationPlanner::tick`]) drives both the simulator's
+//! `begin_switch` and the real engine's `Ctrl::Switch` path, so the two
+//! engines no longer fork the monitor glue.
+//!
+//! The legacy [`RoleSwitchController`] survives as the planner's
+//! single-step fallback policy ([`PlannerPolicy::Greedy`], the default):
+//! its decisions pass through the same executor, one per tick, and are
+//! bit-for-bit identical to the pre-planner behavior (property-tested in
+//! `rust/tests/property_planner.rs`).
+
+use std::collections::VecDeque;
+
+use crate::core::config::{EpdConfig, PlannerPolicy};
+use crate::core::stage::Stage;
+use crate::core::topology::Topology;
+use crate::optimizer::space::topology_neighborhood;
+
+use super::profiler::{WorkloadProfile, WorkloadProfiler};
+use super::role_switch::{RoleSwitchController, SwitchDecision, SwitchPolicy};
+
+/// An ordered multi-step reallocation: executed front to back, one step
+/// per monitor tick, each step re-gated against live instance counts.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SwitchPlan {
+    pub steps: Vec<SwitchDecision>,
+}
+
+impl SwitchPlan {
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+}
+
+/// Tunables for the planner (wraps the legacy greedy policy — its
+/// `min_instances` floor and migration times are shared by both
+/// policies).
+#[derive(Debug, Clone, Copy)]
+pub struct PlannerConfig {
+    pub policy: PlannerPolicy,
+    /// Seconds between planning passes (0 = every tick, legacy cadence).
+    pub plan_interval: f64,
+    /// The greedy controller's tunables; `min_instances` and the two
+    /// migration times also govern predictive plans.
+    pub switch: SwitchPolicy,
+    /// Horizon (seconds) over which predicted backlog growth of an
+    /// overloaded stage is charged in the topology score.
+    pub horizon: f64,
+    /// Neighborhood radius: candidate topologies within this many
+    /// single-instance moves of the current one.
+    pub radius: u32,
+}
+
+impl PlannerConfig {
+    pub fn new(policy: PlannerPolicy, plan_interval: f64, switch: SwitchPolicy) -> PlannerConfig {
+        PlannerConfig { policy, plan_interval, switch, horizon: 10.0, radius: 2 }
+    }
+
+    /// The planner configuration an [`EpdConfig`] implies (shared by the
+    /// simulator and the real engine).
+    pub fn from_epd(epd: &EpdConfig, switch: SwitchPolicy) -> PlannerConfig {
+        PlannerConfig::new(epd.planner, epd.plan_interval, switch)
+    }
+}
+
+/// Plan/step counters, exported as `SimOutcome::reallocation` and via the
+/// real engine's `/metrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReallocationStats {
+    /// Plans adopted (greedy decisions count as single-step plans).
+    pub plans: u64,
+    /// Steps across all adopted plans.
+    pub planned_steps: u64,
+    /// Steps released to the executing engine.
+    pub released_steps: u64,
+    /// Release attempts deferred by the safety gate.
+    pub blocked_steps: u64,
+    /// Pending plans dropped because the cluster drifted away from their
+    /// preconditions.
+    pub aborted_plans: u64,
+}
+
+/// The planner + shared plan-executor state machine.
+#[derive(Debug, Clone)]
+pub struct ReallocationPlanner {
+    cfg: PlannerConfig,
+    greedy: RoleSwitchController,
+    pending: VecDeque<SwitchDecision>,
+    blocked_streak: u32,
+    last_plan: f64,
+    stats: ReallocationStats,
+}
+
+/// Ticks a pending step may stay gate-blocked before the whole plan is
+/// declared stale and dropped (≈ 10 s at the simulator's 0.25 s tick).
+const MAX_BLOCKED_TICKS: u32 = 40;
+
+impl ReallocationPlanner {
+    pub fn new(cfg: PlannerConfig) -> ReallocationPlanner {
+        ReallocationPlanner {
+            cfg,
+            greedy: RoleSwitchController::new(cfg.switch),
+            pending: VecDeque::new(),
+            blocked_streak: 0,
+            last_plan: f64::NEG_INFINITY,
+            stats: ReallocationStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> ReallocationStats {
+        self.stats
+    }
+
+    /// Steps still awaiting release.
+    pub fn pending_steps(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// One control tick: maybe adopt a fresh plan, then release at most
+    /// one step for the caller to execute (sim `begin_switch` / engine
+    /// `Ctrl::Switch`). `counts` are live non-migrating instance counts
+    /// per stage; `queued[i]` flags stages with waiting work.
+    pub fn tick(
+        &mut self,
+        now: f64,
+        profiler: &WorkloadProfiler,
+        counts: [u32; 3],
+        queued: [bool; 3],
+    ) -> Option<SwitchDecision> {
+        if self.pending.is_empty() && now - self.last_plan >= self.cfg.plan_interval {
+            self.last_plan = now;
+            let plan = match self.cfg.policy {
+                PlannerPolicy::Greedy => self
+                    .greedy
+                    .evaluate(now, profiler.monitor(), counts)
+                    .map(|d| SwitchPlan { steps: vec![d] }),
+                PlannerPolicy::Predictive => {
+                    Self::plan_predictive(&self.cfg, &profiler.profile(), counts)
+                }
+            };
+            if let Some(p) = plan {
+                self.stats.plans += 1;
+                self.stats.planned_steps += p.steps.len() as u64;
+                self.pending = p.steps.into();
+            }
+        }
+        self.release(counts, queued)
+    }
+
+    /// The executor's per-tick release gate: the front step executes only
+    /// if the donor stage can spare an instance *right now* — above the
+    /// `min_instances` floor, and (for predictive plans) never leaving
+    /// queued work on a stage with zero instances. Greedy steps are gated
+    /// by exactly the floor check the controller itself already made with
+    /// these same counts — a provable no-op, so the legacy policy stays
+    /// bit-for-bit even at `min_instances = 0`. A persistently blocked
+    /// plan is stale (the cluster drifted from its precondition) and is
+    /// dropped whole.
+    fn release(&mut self, counts: [u32; 3], queued: [bool; 3]) -> Option<SwitchDecision> {
+        let step = *self.pending.front()?;
+        let fi = step.from.index();
+        let above_floor = counts[fi] > self.cfg.switch.min_instances;
+        let safe = match self.cfg.policy {
+            PlannerPolicy::Greedy => above_floor,
+            PlannerPolicy::Predictive => above_floor && !(queued[fi] && counts[fi] <= 1),
+        };
+        if safe {
+            self.pending.pop_front();
+            self.blocked_streak = 0;
+            self.stats.released_steps += 1;
+            return Some(step);
+        }
+        self.stats.blocked_steps += 1;
+        self.blocked_streak += 1;
+        if self.blocked_streak > MAX_BLOCKED_TICKS {
+            self.pending.clear();
+            self.blocked_streak = 0;
+            self.stats.aborted_plans += 1;
+        }
+        None
+    }
+
+    /// The caller could not apply a released step (no eligible donor
+    /// instance at this instant — e.g. every candidate holds an active
+    /// decode batch): hand it back so the plan retries next tick instead
+    /// of silently advancing past an unperformed move. Counts as a
+    /// blocked release, so a permanently unplaceable plan still goes
+    /// stale and is dropped. Greedy steps are *not* requeued — the legacy
+    /// controller dropped unplaceable decisions (their cooldown already
+    /// spent), and the bit-for-bit guarantee preserves that.
+    pub fn requeue(&mut self, step: SwitchDecision) {
+        if self.cfg.policy == PlannerPolicy::Greedy {
+            return;
+        }
+        self.stats.released_steps -= 1;
+        self.stats.blocked_steps += 1;
+        self.blocked_streak += 1;
+        self.pending.push_front(step);
+        if self.blocked_streak > MAX_BLOCKED_TICKS {
+            self.pending.clear();
+            self.blocked_streak = 0;
+            self.stats.aborted_plans += 1;
+        }
+    }
+
+    /// Pure planning pass (no adoption state): score the topology
+    /// neighborhood against the profile and return the best plan when it
+    /// beats the current topology by more than the migration downtime it
+    /// spends. Public so plan safety can be property-tested directly.
+    pub fn plan_predictive(
+        cfg: &PlannerConfig,
+        profile: &WorkloadProfile,
+        counts: [u32; 3],
+    ) -> Option<SwitchPlan> {
+        let cur = Topology::new(counts[0], counts[1], counts[2]);
+        let floor = cfg.switch.min_instances;
+        let cur_score = score_topology(profile, counts, cur, cfg.horizon);
+        let mut best = cur;
+        let mut best_score = cur_score;
+        for cand in topology_neighborhood(cur, cfg.radius, floor) {
+            let s = score_topology(profile, counts, cand, cfg.horizon);
+            if s < best_score {
+                best_score = s;
+                best = cand;
+            }
+        }
+        if best == cur {
+            return None;
+        }
+        let plan = diff_to_steps(cur, best, profile, &cfg.switch);
+        // Adoption hysteresis: the predicted pressure relief must outweigh
+        // the migration downtime the plan spends (plus a fixed margin that
+        // suppresses churn on near-ties).
+        let cost: f64 = plan.steps.iter().map(|s| s.migration_time).sum();
+        if cur_score - best_score <= cost + 0.25 {
+            return None;
+        }
+        Some(plan)
+    }
+}
+
+/// Analytic pressure estimate of running the profiled workload on
+/// candidate counts: per stage, the time to drain the current backlog at
+/// the candidate's capacity, plus predicted backlog growth over `horizon`
+/// when the rescaled busy-rate exceeds capacity. The busy-rate is
+/// measured against the *current* instance counts and rescaled — moving
+/// instances toward a stage divides its utilization and drain, exactly
+/// the analytic per-stage throughput/backlog estimate the offline
+/// optimizer's simulator measures the slow way. A candidate that leaves a
+/// stage with work and zero instances scores infinite.
+pub fn score_topology(
+    profile: &WorkloadProfile,
+    counts: [u32; 3],
+    cand: Topology,
+    horizon: f64,
+) -> f64 {
+    let mut worst = 0.0f64;
+    for s in Stage::ALL {
+        let i = s.index();
+        let n = cand.count(s) as f64;
+        let has_work = profile.backlog[i] > 1e-9
+            || profile.queue_len[i] > 1e-9
+            || profile.utilization[i] > 1e-9;
+        if n == 0.0 {
+            if has_work {
+                return f64::INFINITY;
+            }
+            continue;
+        }
+        let rho = profile.utilization[i] * counts[i] as f64 / n;
+        let drain = profile.backlog[i] / n;
+        let growth = (rho - 1.0).max(0.0) * horizon;
+        // The small ρ term breaks ties toward headroom without ever
+        // outweighing real backlog.
+        worst = worst.max(drain + growth + 0.05 * rho);
+    }
+    worst
+}
+
+/// Order the moves from `cur` to `target`: the most-backlogged deficit
+/// stage receives first, the least-backlogged surplus stage donates
+/// first. Donor counts only ever descend toward their targets and
+/// receiver counts only ascend, so every intermediate state stays within
+/// the per-stage envelope `[min(cur, target), max(cur, target)]` — the
+/// structural half of the plan-safety property.
+fn diff_to_steps(
+    cur: Topology,
+    target: Topology,
+    profile: &WorkloadProfile,
+    policy: &SwitchPolicy,
+) -> SwitchPlan {
+    let mut c = cur;
+    let mut steps = Vec::new();
+    loop {
+        let to = Stage::ALL
+            .into_iter()
+            .filter(|&s| c.count(s) < target.count(s))
+            .max_by(|a, b| {
+                profile.backlog[a.index()]
+                    .partial_cmp(&profile.backlog[b.index()])
+                    .unwrap()
+            });
+        let Some(to) = to else { break };
+        let from = Stage::ALL
+            .into_iter()
+            .filter(|&s| c.count(s) > target.count(s))
+            .min_by(|a, b| {
+                profile.backlog[a.index()]
+                    .partial_cmp(&profile.backlog[b.index()])
+                    .unwrap()
+            });
+        let Some(from) = from else { break };
+        let migration_time = policy.migration_time(from, to);
+        steps.push(SwitchDecision { from, to, migration_time });
+        c.set_count(from, c.count(from) - 1);
+        c.set_count(to, c.count(to) + 1);
+    }
+    SwitchPlan { steps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idle_profile() -> WorkloadProfile {
+        WorkloadProfile {
+            arrival_rate: 0.0,
+            images_per_request: 0.0,
+            prompt_tokens: 0.0,
+            output_tokens: 0.0,
+            mm_tokens: 0.0,
+            service: [0.0; 3],
+            queue_len: [0.0; 3],
+            backlog: [0.0; 3],
+            utilization: [0.0; 3],
+            instances: [2, 2, 1],
+        }
+    }
+
+    fn decode_pressured() -> WorkloadProfile {
+        WorkloadProfile {
+            utilization: [0.05, 0.2, 1.0],
+            backlog: [0.0, 0.3, 30.0],
+            queue_len: [0.0, 0.5, 12.0],
+            ..idle_profile()
+        }
+    }
+
+    fn cfg(policy: PlannerPolicy) -> PlannerConfig {
+        PlannerConfig::new(policy, 0.0, SwitchPolicy::default())
+    }
+
+    #[test]
+    fn idle_cluster_never_plans() {
+        let c = cfg(PlannerPolicy::Predictive);
+        assert_eq!(
+            ReallocationPlanner::plan_predictive(&c, &idle_profile(), [2, 2, 1]),
+            None
+        );
+    }
+
+    #[test]
+    fn decode_pressure_yields_multi_step_plan_toward_decode() {
+        let c = cfg(PlannerPolicy::Predictive);
+        let plan = ReallocationPlanner::plan_predictive(&c, &decode_pressured(), [2, 2, 1])
+            .expect("should reallocate");
+        assert!(!plan.is_empty() && plan.len() <= 2, "radius-2 plan: {plan:?}");
+        for s in &plan.steps {
+            assert_eq!(s.to, Stage::Decode, "all moves feed the bottleneck");
+            assert_ne!(s.from, Stage::Decode);
+        }
+        // The idle encode stage donates before the mildly busy prefill.
+        assert_eq!(plan.steps[0].from, Stage::Encode);
+    }
+
+    #[test]
+    fn plans_never_violate_the_floor() {
+        let c = cfg(PlannerPolicy::Predictive);
+        let plan = ReallocationPlanner::plan_predictive(&c, &decode_pressured(), [2, 2, 1])
+            .unwrap_or_default();
+        let mut counts = [2u32, 2, 1];
+        for s in &plan.steps {
+            counts[s.from.index()] -= 1;
+            counts[s.to.index()] += 1;
+            for &n in &counts {
+                assert!(n >= c.switch.min_instances);
+            }
+        }
+    }
+
+    #[test]
+    fn executor_releases_one_step_per_tick_and_gates_on_live_counts() {
+        let mut p = ReallocationPlanner::new(cfg(PlannerPolicy::Predictive));
+        let prof = {
+            let mut w = WorkloadProfiler::new(0.3);
+            let d = decode_pressured();
+            for s in Stage::ALL {
+                let i = s.index();
+                let counts: [u32; 3] = [2, 2, 1];
+                w.observe_stage(
+                    s,
+                    d.queue_len[i] as usize,
+                    d.backlog[i],
+                    d.utilization[i],
+                    counts[i],
+                );
+            }
+            w
+        };
+        let queued = [false, false, true];
+        let mut counts = [2u32, 2, 1];
+        let s1 = p.tick(0.0, &prof, counts, queued).expect("first step");
+        counts[s1.from.index()] -= 1;
+        counts[s1.to.index()] += 1;
+        let stats = p.stats();
+        assert_eq!(stats.plans, 1);
+        assert!(stats.planned_steps >= 1);
+        // Remaining steps release on later ticks, never two at once.
+        let mut released = 1;
+        for k in 1..10 {
+            if let Some(s) = p.tick(k as f64 * 0.25, &prof, counts, queued) {
+                counts[s.from.index()] -= 1;
+                counts[s.to.index()] += 1;
+                released += 1;
+            }
+            for &n in &counts {
+                assert!(n >= 1);
+            }
+        }
+        assert_eq!(released as u64, p.stats().released_steps);
+    }
+
+    #[test]
+    fn blocked_plan_is_eventually_dropped() {
+        let mut p = ReallocationPlanner::new(cfg(PlannerPolicy::Predictive));
+        p.pending.push_back(SwitchDecision {
+            from: Stage::Encode,
+            to: Stage::Decode,
+            migration_time: 0.7,
+        });
+        // Donor already at the floor: the gate must hold the step, then
+        // drop the stale plan.
+        for k in 0..=MAX_BLOCKED_TICKS {
+            assert_eq!(p.release([1, 2, 1], [false; 3]), None, "tick {k}");
+        }
+        assert_eq!(p.pending_steps(), 0);
+        assert_eq!(p.stats().aborted_plans, 1);
+        assert!(p.stats().blocked_steps > 0);
+    }
+
+    #[test]
+    fn unplaceable_predictive_step_is_requeued_and_greedy_is_dropped() {
+        let mut p = ReallocationPlanner::new(cfg(PlannerPolicy::Predictive));
+        let step = SwitchDecision { from: Stage::Encode, to: Stage::Decode, migration_time: 0.7 };
+        p.pending.push_back(step);
+        let released = p.release([2, 2, 1], [false; 3]).expect("gate passes");
+        assert_eq!(p.stats().released_steps, 1);
+        p.requeue(released);
+        assert_eq!(p.stats().released_steps, 0, "release undone");
+        assert_eq!(p.pending_steps(), 1, "step back at the front");
+        // Greedy keeps the legacy drop semantics (cooldown already spent).
+        let mut g = ReallocationPlanner::new(cfg(PlannerPolicy::Greedy));
+        g.requeue(step);
+        assert_eq!(g.pending_steps(), 0);
+        assert_eq!(g.stats(), ReallocationStats::default());
+    }
+
+    #[test]
+    fn zero_instance_stage_with_queued_work_is_never_created() {
+        // min_instances = 0 allows draining a stage — but not one that
+        // still has queued work.
+        let pol = SwitchPolicy { min_instances: 0, ..SwitchPolicy::default() };
+        let mut p =
+            ReallocationPlanner::new(PlannerConfig::new(PlannerPolicy::Predictive, 0.0, pol));
+        p.pending.push_back(SwitchDecision {
+            from: Stage::Prefill,
+            to: Stage::Decode,
+            migration_time: 0.1,
+        });
+        assert_eq!(p.release([2, 1, 1], [false, true, false]), None, "queued work blocks");
+        assert!(p.release([2, 1, 1], [false, false, false]).is_some(), "idle stage may drain");
+    }
+
+    #[test]
+    fn score_rescales_with_candidate_capacity() {
+        let prof = decode_pressured();
+        let counts = [2, 2, 1];
+        let cur = score_topology(&prof, counts, Topology::new(2, 2, 1), 10.0);
+        let shifted = score_topology(&prof, counts, Topology::new(1, 1, 3), 10.0);
+        assert!(shifted < cur, "moving capacity to decode must relieve pressure");
+        // A stage with work and no instances is never acceptable.
+        let starved = score_topology(&prof, counts, Topology::new(2, 0, 3), 10.0);
+        assert!(starved.is_infinite());
+    }
+}

@@ -1,0 +1,257 @@
+//! Online workload profiler: the shared statistics substrate behind the
+//! reallocation planner (§3.2.3 + §3.2.4 unified).
+//!
+//! One profiler instance lives next to each control loop — the simulator
+//! feeds it from simulated completions at every monitor tick, the real
+//! engine's monitor thread feeds it from the worker-side counters in
+//! `metrics/recorder.rs` — and both hand the same snapshot type
+//! ([`WorkloadProfile`]) to the [`ReallocationPlanner`]. It maintains:
+//!
+//! - the per-stage queueing EWMAs the legacy controller consumed (the
+//!   embedded [`QueueMonitor`], exposed unchanged so the greedy policy
+//!   stays bit-for-bit),
+//! - arrival-rate and request-shape EWMAs (images per request, prompt /
+//!   output token means, MM tokens), and
+//! - per-stage service-time EWMAs (seconds of stage work per job).
+//!
+//! [`ReallocationPlanner`]: super::planner::ReallocationPlanner
+
+use crate::core::stage::Stage;
+
+use super::monitor::QueueMonitor;
+
+/// A point-in-time snapshot of the profiled workload, consumed by the
+/// planner's topology scoring. All per-stage arrays are indexed by
+/// [`Stage::index`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadProfile {
+    /// Smoothed arrival rate, requests/second (0 until two arrivals).
+    pub arrival_rate: f64,
+    /// EWMA images per request.
+    pub images_per_request: f64,
+    /// EWMA prompt tokens per request.
+    pub prompt_tokens: f64,
+    /// EWMA requested output tokens per request.
+    pub output_tokens: f64,
+    /// EWMA MM tokens per request.
+    pub mm_tokens: f64,
+    /// EWMA seconds of stage work per job (NaN-free; 0 until observed).
+    pub service: [f64; 3],
+    /// EWMA queue length per stage (from the embedded monitor).
+    pub queue_len: [f64; 3],
+    /// EWMA backlog seconds per stage (from the embedded monitor).
+    pub backlog: [f64; 3],
+    /// EWMA busy fraction per stage (from the embedded monitor).
+    pub utilization: [f64; 3],
+    /// Live instance count per stage at the last observation.
+    pub instances: [u32; 3],
+}
+
+/// The online profiler. `alpha` ∈ (0, 1] is the weight of the newest
+/// observation for every EWMA it maintains (the embedded queue monitor
+/// uses the same weight, so the greedy policy sees exactly the signal the
+/// legacy controller saw).
+#[derive(Debug, Clone)]
+pub struct WorkloadProfiler {
+    alpha: f64,
+    monitor: QueueMonitor,
+    last_arrival: Option<f64>,
+    /// EWMA inter-arrival gap, seconds (0 = unknown).
+    interarrival: f64,
+    arrivals: u64,
+    images: f64,
+    prompt_tokens: f64,
+    output_tokens: f64,
+    mm_tokens: f64,
+    shape_obs: u64,
+    service: [f64; 3],
+    service_obs: [u64; 3],
+}
+
+impl WorkloadProfiler {
+    pub fn new(alpha: f64) -> WorkloadProfiler {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        WorkloadProfiler {
+            alpha,
+            monitor: QueueMonitor::new(alpha),
+            last_arrival: None,
+            interarrival: 0.0,
+            arrivals: 0,
+            images: 0.0,
+            prompt_tokens: 0.0,
+            output_tokens: 0.0,
+            mm_tokens: 0.0,
+            shape_obs: 0,
+            service: [0.0; 3],
+            service_obs: [0; 3],
+        }
+    }
+
+    /// The embedded per-stage queueing monitor — handed verbatim to the
+    /// greedy controller so its decisions stay bit-for-bit.
+    pub fn monitor(&self) -> &QueueMonitor {
+        &self.monitor
+    }
+
+    /// Feed one per-stage queueing observation (delegates to the embedded
+    /// monitor with identical semantics to the pre-planner code).
+    pub fn observe_stage(
+        &mut self,
+        stage: Stage,
+        queue_len: usize,
+        backlog: f64,
+        utilization: f64,
+        instances: u32,
+    ) {
+        self.monitor.observe(stage, queue_len, backlog, utilization, instances);
+    }
+
+    /// Record `n` arrivals whose latest landed at `now` (the simulator
+    /// calls this per request; the engine's monitor thread calls it with
+    /// the submitted-count delta of each sample window).
+    pub fn note_arrivals(&mut self, n: u64, now: f64) {
+        if n == 0 {
+            return;
+        }
+        if let Some(last) = self.last_arrival {
+            let gap = ((now - last) / n as f64).max(0.0);
+            self.interarrival = if self.interarrival == 0.0 {
+                gap // first measured gap seeds the EWMA
+            } else {
+                (1.0 - self.alpha) * self.interarrival + self.alpha * gap
+            };
+        }
+        self.last_arrival = Some(now);
+        self.arrivals += n;
+    }
+
+    /// Feed the shape of one request (or a window's per-request means).
+    pub fn observe_request(
+        &mut self,
+        images: f64,
+        prompt_tokens: f64,
+        output_tokens: f64,
+        mm_tokens: f64,
+    ) {
+        let a = if self.shape_obs == 0 { 1.0 } else { self.alpha };
+        self.images = (1.0 - a) * self.images + a * images;
+        self.prompt_tokens = (1.0 - a) * self.prompt_tokens + a * prompt_tokens;
+        self.output_tokens = (1.0 - a) * self.output_tokens + a * output_tokens;
+        self.mm_tokens = (1.0 - a) * self.mm_tokens + a * mm_tokens;
+        self.shape_obs += 1;
+    }
+
+    /// Feed one stage-service observation: `seconds` of stage work per
+    /// job (the simulator prices jobs with its cost model; the engine
+    /// measures worker wall time).
+    pub fn observe_service(&mut self, stage: Stage, seconds: f64) {
+        let i = stage.index();
+        let a = if self.service_obs[i] == 0 { 1.0 } else { self.alpha };
+        self.service[i] = (1.0 - a) * self.service[i] + a * seconds.max(0.0);
+        self.service_obs[i] += 1;
+    }
+
+    /// Smoothed seconds of stage work per job, if any observation landed.
+    pub fn service_estimate(&self, stage: Stage) -> Option<f64> {
+        if self.service_obs[stage.index()] == 0 {
+            None
+        } else {
+            Some(self.service[stage.index()])
+        }
+    }
+
+    /// Smoothed arrival rate, requests/second (0 until two arrivals).
+    pub fn arrival_rate(&self) -> f64 {
+        if self.interarrival <= 0.0 {
+            0.0
+        } else {
+            1.0 / self.interarrival
+        }
+    }
+
+    pub fn arrivals(&self) -> u64 {
+        self.arrivals
+    }
+
+    /// Snapshot for the planner.
+    pub fn profile(&self) -> WorkloadProfile {
+        let mut queue_len = [0.0; 3];
+        let mut backlog = [0.0; 3];
+        let mut utilization = [0.0; 3];
+        let mut instances = [0u32; 3];
+        for s in Stage::ALL {
+            let l = self.monitor.load(s);
+            let i = s.index();
+            queue_len[i] = l.queue_len;
+            backlog[i] = l.backlog;
+            utilization[i] = l.utilization;
+            instances[i] = l.instances;
+        }
+        WorkloadProfile {
+            arrival_rate: self.arrival_rate(),
+            images_per_request: self.images,
+            prompt_tokens: self.prompt_tokens,
+            output_tokens: self.output_tokens,
+            mm_tokens: self.mm_tokens,
+            service: self.service,
+            queue_len,
+            backlog,
+            utilization,
+            instances,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_rate_converges() {
+        let mut p = WorkloadProfiler::new(0.5);
+        for k in 0..50 {
+            p.note_arrivals(1, k as f64 * 0.25);
+        }
+        assert!((p.arrival_rate() - 4.0).abs() < 0.1, "rate {}", p.arrival_rate());
+        assert_eq!(p.arrivals(), 50);
+    }
+
+    #[test]
+    fn bulk_arrivals_split_the_window() {
+        let mut p = WorkloadProfiler::new(1.0);
+        p.note_arrivals(1, 0.0);
+        p.note_arrivals(4, 1.0); // 4 arrivals over 1 s → 0.25 s gaps
+        assert!((p.arrival_rate() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shape_and_service_ewmas() {
+        let mut p = WorkloadProfiler::new(0.5);
+        assert!(p.service_estimate(Stage::Decode).is_none());
+        p.observe_request(4.0, 22.0, 10.0, 2560.0);
+        p.observe_service(Stage::Decode, 0.4);
+        p.observe_service(Stage::Decode, 0.4);
+        let prof = p.profile();
+        assert_eq!(prof.images_per_request, 4.0, "first observation seeds the mean");
+        assert!((p.service_estimate(Stage::Decode).unwrap() - 0.4).abs() < 1e-12);
+        assert_eq!(p.service_estimate(Stage::Encode), None);
+        assert_eq!(prof.service[Stage::Encode.index()], 0.0);
+    }
+
+    #[test]
+    fn stage_observations_reach_the_monitor_unchanged() {
+        // The greedy-equivalence guarantee hinges on the profiler being a
+        // pure pass-through to the monitor.
+        let mut p = WorkloadProfiler::new(0.3);
+        let mut m = QueueMonitor::new(0.3);
+        for k in 0..10 {
+            let backlog = k as f64;
+            p.observe_stage(Stage::Prefill, k, backlog, 0.5, 2);
+            m.observe(Stage::Prefill, k, backlog, 0.5, 2);
+        }
+        assert_eq!(p.monitor().load(Stage::Prefill), m.load(Stage::Prefill));
+        let prof = p.profile();
+        assert_eq!(prof.backlog[1], m.load(Stage::Prefill).backlog);
+        assert_eq!(prof.instances[1], 2);
+    }
+}

@@ -44,6 +44,20 @@ impl Default for SwitchPolicy {
     }
 }
 
+impl SwitchPolicy {
+    /// Migration time for a `from → to` switch (§3.2.4: edges touching
+    /// the encode stage change model weights and cache type and cost
+    /// ≲ 0.7 s; P↔D reuses both). The single pricing rule shared by the
+    /// greedy controller and the predictive planner's plans.
+    pub fn migration_time(&self, from: Stage, to: Stage) -> f64 {
+        if from == Stage::Encode || to == Stage::Encode {
+            self.switch_time_with_e
+        } else {
+            self.switch_time_pd
+        }
+    }
+}
+
 /// A proposed role switch.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SwitchDecision {
@@ -74,13 +88,9 @@ impl RoleSwitchController {
         self.switches
     }
 
-    /// Migration time for a given edge.
+    /// Migration time for a given edge (delegates to the policy's rule).
     pub fn migration_time(&self, from: Stage, to: Stage) -> f64 {
-        if from == Stage::Encode || to == Stage::Encode {
-            self.policy.switch_time_with_e
-        } else {
-            self.policy.switch_time_pd
-        }
+        self.policy.migration_time(from, to)
     }
 
     /// Evaluate the monitor at time `now`; maybe propose a switch.

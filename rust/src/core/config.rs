@@ -58,6 +58,34 @@ impl AssignPolicy {
     }
 }
 
+/// Which reallocation policy drives role switching when
+/// `EpdConfig::role_switching` is on (§3.2.3 + §3.2.4 unified).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlannerPolicy {
+    /// The legacy one-instance-at-a-time `RoleSwitchController`
+    /// heuristic — bit-for-bit with pre-planner behavior.
+    Greedy,
+    /// The online reallocation planner: scores topology neighborhoods
+    /// against the profiled workload and emits multi-step switch plans.
+    Predictive,
+}
+
+impl PlannerPolicy {
+    pub fn parse(s: &str) -> Option<PlannerPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "greedy" => Some(PlannerPolicy::Greedy),
+            "predictive" | "planner" => Some(PlannerPolicy::Predictive),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlannerPolicy::Greedy => "greedy",
+            PlannerPolicy::Predictive => "predictive",
+        }
+    }
+}
+
 /// Per-stage scheduling configuration (all instances within a stage share
 /// one strategy, as Appendix D constrains).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -163,6 +191,24 @@ pub struct EpdConfig {
     /// the idealized model this repo historically used — so enabling it
     /// only ever delays transfers, never speeds them up.
     pub link_contention: bool,
+    /// Reallocation policy used when `role_switching` is on. `greedy`
+    /// (the default) keeps the legacy one-instance-at-a-time controller
+    /// bit-for-bit; `predictive` runs the online reallocation planner
+    /// (`coordinator/planner.rs`): it scores topology neighborhoods
+    /// against the profiled workload and emits ordered multi-step
+    /// `SwitchPlan`s executed one step per monitor tick.
+    pub planner: PlannerPolicy,
+    /// Seconds between planning passes. 0 (the default) plans at every
+    /// monitor tick — the legacy greedy cadence (the greedy controller's
+    /// own cooldown remains the real rate limiter there).
+    pub plan_interval: f64,
+    /// Real-engine monitor thread sample period, seconds. Default 0.1
+    /// (the previously hard-coded 100 ms). The simulator's tick period
+    /// stays `SimConfig::monitor_interval`.
+    pub sample_interval: f64,
+    /// Real-engine monitor EWMA weight in (0, 1]. Default 0.4 (the
+    /// previously hard-coded value). The simulator keeps its own 0.3.
+    pub monitor_alpha: f64,
 }
 
 impl EpdConfig {
@@ -191,6 +237,10 @@ impl EpdConfig {
             ep_chunk_tokens: 0,
             pd_layer_groups: 0,
             link_contention: false,
+            planner: PlannerPolicy::Greedy,
+            plan_interval: 0.0,
+            sample_interval: 0.1,
+            monitor_alpha: 0.4,
         }
     }
 
@@ -249,6 +299,10 @@ impl EpdConfig {
     /// ep_chunk_tokens = 512   # 0 = monolithic EP handoff
     /// pd_layer_groups = 8     # 0 = monolithic PD (KV) handoff
     /// link_contention = false # serialize transfers sharing a link
+    /// planner = "greedy"      # greedy | predictive (reallocation policy)
+    /// plan_interval = 0.0     # seconds between planning passes; 0 = every tick
+    /// sample_interval = 0.1   # engine monitor sample period, seconds
+    /// monitor_alpha = 0.4     # engine monitor EWMA weight
     /// [sched]
     /// queue = "fcfs"          # fcfs | sjf | slo-aware
     /// assign = "least-loaded" # round-robin | least-loaded
@@ -277,6 +331,18 @@ impl EpdConfig {
             cfg.pd_layer_groups = g.max(0) as u32;
         }
         cfg.link_contention = doc.get_bool("", "link_contention").unwrap_or(false);
+        if let Some(p) = doc.get_str("", "planner") {
+            cfg.planner = PlannerPolicy::parse(p).context("bad 'planner'")?;
+        }
+        if let Some(v) = doc.get_f64("", "plan_interval") {
+            cfg.plan_interval = v.max(0.0);
+        }
+        if let Some(v) = doc.get_f64("", "sample_interval") {
+            cfg.sample_interval = v.max(0.001);
+        }
+        if let Some(v) = doc.get_f64("", "monitor_alpha") {
+            cfg.monitor_alpha = v.clamp(0.01, 1.0);
+        }
         if let Some(q) = doc.get_str("sched", "queue") {
             let q = QueuePolicy::parse(q).context("bad sched.queue")?;
             cfg.sched_encode.queue = q;
@@ -307,6 +373,10 @@ mod tests {
         assert_eq!(cfg.ep_chunk_tokens, 0, "streaming is opt-in");
         assert_eq!(cfg.pd_layer_groups, 0, "PD streaming is opt-in");
         assert!(!cfg.link_contention, "contention modelling is opt-in");
+        assert_eq!(cfg.planner, PlannerPolicy::Greedy, "legacy policy is the default");
+        assert_eq!(cfg.plan_interval, 0.0, "legacy cadence is the default");
+        assert_eq!(cfg.sample_interval, 0.1);
+        assert_eq!(cfg.monitor_alpha, 0.4);
 
         let ds = EpdConfig::distserve(7, 1, 1, 128);
         assert_eq!(ds.mode, DeploymentMode::PdDisagg);
@@ -330,6 +400,10 @@ encoder_cache_tokens = 4096
 ep_chunk_tokens = 512
 pd_layer_groups = 8
 link_contention = true
+planner = "predictive"
+plan_interval = 2.5
+sample_interval = 0.05
+monitor_alpha = 0.25
 [sched]
 queue = "sjf"
 assign = "round-robin"
@@ -343,6 +417,10 @@ assign = "round-robin"
         assert_eq!(cfg.ep_chunk_tokens, 512);
         assert_eq!(cfg.pd_layer_groups, 8);
         assert!(cfg.link_contention);
+        assert_eq!(cfg.planner, PlannerPolicy::Predictive);
+        assert_eq!(cfg.plan_interval, 2.5);
+        assert_eq!(cfg.sample_interval, 0.05);
+        assert_eq!(cfg.monitor_alpha, 0.25);
         assert_eq!(cfg.sched_decode.queue, QueuePolicy::Sjf);
         assert_eq!(cfg.sched_encode.assign, AssignPolicy::RoundRobin);
         let d = cfg.instances.iter().find(|i| i.role == Stage::Decode).unwrap();
@@ -360,5 +438,14 @@ assign = "round-robin"
         assert_eq!(QueuePolicy::parse("FCFS"), Some(QueuePolicy::Fcfs));
         assert_eq!(AssignPolicy::parse("least-loaded"), Some(AssignPolicy::LeastLoaded));
         assert_eq!(QueuePolicy::parse("??"), None);
+        assert_eq!(PlannerPolicy::parse("Predictive"), Some(PlannerPolicy::Predictive));
+        assert_eq!(PlannerPolicy::parse("greedy"), Some(PlannerPolicy::Greedy));
+        assert_eq!(PlannerPolicy::parse("??"), None);
+    }
+
+    #[test]
+    fn from_toml_rejects_bad_planner() {
+        let doc = TomlDoc::parse("planner = \"oracle\"").unwrap();
+        assert!(EpdConfig::from_toml(&doc).is_err());
     }
 }

@@ -7,7 +7,7 @@ pub mod topology;
 pub mod slo;
 pub mod config;
 
-pub use config::{EpdConfig, InstanceConfig, SchedulingConfig};
+pub use config::{EpdConfig, InstanceConfig, PlannerPolicy, SchedulingConfig};
 pub use request::{Request, RequestId, RequestPhase, RequestTimeline};
 pub use slo::{Slo, SloTable};
 pub use stage::Stage;

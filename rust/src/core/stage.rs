@@ -14,6 +14,17 @@ pub enum Stage {
 impl Stage {
     pub const ALL: [Stage; 3] = [Stage::Encode, Stage::Prefill, Stage::Decode];
 
+    /// The canonical array index of this stage (E = 0, P = 1, D = 2) —
+    /// the single stage→index mapping shared by the queue monitor, the
+    /// reallocation planner and both engines' per-stage arrays.
+    pub const fn index(self) -> usize {
+        match self {
+            Stage::Encode => 0,
+            Stage::Prefill => 1,
+            Stage::Decode => 2,
+        }
+    }
+
     /// One-letter code used in configuration strings like "5E2P1D".
     pub fn code(&self) -> char {
         match self {
@@ -64,6 +75,13 @@ mod tests {
         }
         assert_eq!(Stage::from_code('x'), None);
         assert_eq!(Stage::from_code('e'), Some(Stage::Encode));
+    }
+
+    #[test]
+    fn index_is_canonical_order() {
+        for (i, s) in Stage::ALL.into_iter().enumerate() {
+            assert_eq!(s.index(), i);
+        }
     }
 
     #[test]

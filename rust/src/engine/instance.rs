@@ -45,6 +45,16 @@ pub struct InstanceParams {
     pub pd_layer_groups: u32,
 }
 
+/// The stage a popped job's work is accounted to — the worker-side
+/// busy/service counters the monitor's load signals are built from.
+fn job_stage(job: &Job) -> Stage {
+    match job {
+        Job::Encode { .. } => Stage::Encode,
+        Job::PrefillChunk { .. } | Job::Prefill { .. } => Stage::Prefill,
+        Job::Decode { .. } | Job::KvChunk { .. } => Stage::Decode,
+    }
+}
+
 /// Stage-pull priority for a role under a deployment mode.
 pub fn pull_stages(mode: DeploymentMode, role: Stage) -> Vec<Stage> {
     match mode {
@@ -108,25 +118,30 @@ pub fn instance_main(
             stages.iter().copied().filter(|s| *s != Stage::Decode).collect();
 
         if let Some(job) = queues.try_pop(&non_decode) {
-            handle_ep_job(&mut rt, job, &queues, &metrics, params.mode, params.pd_layer_groups);
+            let stage = job_stage(&job);
+            let t0 = std::time::Instant::now();
+            let units =
+                handle_ep_job(&mut rt, job, &queues, &metrics, params.mode, params.pd_layer_groups);
+            metrics.on_stage_work(stage, t0.elapsed().as_secs_f64(), units);
             continue;
         }
         if stages.contains(&Stage::Decode) {
             let jobs = queues.pop_decode_batch(params.max_decode_batch as usize);
             if !jobs.is_empty() {
-                run_decode_batch(&mut rt, jobs, &params, &queues, &metrics, role);
+                let t0 = std::time::Instant::now();
+                let served = run_decode_batch(&mut rt, jobs, &params, &queues, &metrics, role);
+                metrics.on_stage_work(Stage::Decode, t0.elapsed().as_secs_f64(), served);
                 continue;
             }
         }
-        // Nothing to do: block briefly.
-        if queues
-            .pop_timeout(&non_decode, Duration::from_millis(5))
-            .map(|job| {
-                handle_ep_job(&mut rt, job, &queues, &metrics, params.mode, params.pd_layer_groups)
-            })
-            .is_none()
-        {
-            // Timed out; loop to re-check control/decode.
+        // Nothing to do: block briefly; timing out just loops to re-check
+        // control/decode.
+        if let Some(job) = queues.pop_timeout(&non_decode, Duration::from_millis(5)) {
+            let stage = job_stage(&job);
+            let t0 = std::time::Instant::now();
+            let units =
+                handle_ep_job(&mut rt, job, &queues, &metrics, params.mode, params.pd_layer_groups);
+            metrics.on_stage_work(stage, t0.elapsed().as_secs_f64(), units);
         }
     }
     debug!("instance {} down", params.idx);
@@ -145,6 +160,11 @@ fn warm_for(rt: &mut TinyLmmRuntime, mode: DeploymentMode, role: Stage) -> anyho
 
 /// Encode or prefill one job. `pd_groups > 0` streams prefilled KV to the
 /// decode side in layer groups instead of one monolithic `Job::Decode`.
+///
+/// Returns the number of completed stage jobs this call performed (the
+/// monitor's service-time unit): an executed encode or prefill counts 1;
+/// a streamed chunk that only slots into a reassembly buffer counts 0,
+/// so bookkeeping never dilutes the per-job service EWMA.
 fn handle_ep_job(
     rt: &mut TinyLmmRuntime,
     job: Job,
@@ -152,7 +172,7 @@ fn handle_ep_job(
     metrics: &Arc<MetricsRecorder>,
     mode: DeploymentMode,
     pd_groups: u32,
-) {
+) -> u64 {
     match job {
         Job::Encode { ctx, shard, patches, tiles, stream } => {
             match rt.encode(&patches, tiles) {
@@ -173,6 +193,7 @@ fn handle_ep_job(
                         queues.account_ep(merged.len() * 4);
                         queues.push(Stage::Prefill, Job::Prefill { ctx, mm: merged });
                     }
+                    1
                 }
                 Err(e) => {
                     warn!("encode failed for req {}: {e:#}", ctx.id);
@@ -182,6 +203,7 @@ fn handle_ep_job(
                         // instead of leaking it in the global buffer.
                         queues.reassembly.abort(ctx.id);
                     }
+                    0
                 }
             }
         }
@@ -195,7 +217,9 @@ fn handle_ep_job(
                 populate_encoder_cache(rt, &ctx, &merged, queues);
                 metrics.on_ep_reassembled();
                 let job = Job::Prefill { ctx, mm: merged };
-                handle_ep_job(rt, job, queues, metrics, mode, pd_groups);
+                handle_ep_job(rt, job, queues, metrics, mode, pd_groups)
+            } else {
+                0
             }
         }
         Job::Prefill { ctx, mm } => {
@@ -204,7 +228,7 @@ fn handle_ep_job(
                 Ok(x) => x,
                 Err(e) => {
                     warn!("no prefill bucket for req {}: {e:#}", ctx.id);
-                    return;
+                    return 0;
                 }
             };
             // Token layout: [BOS, M placeholders, text..., PAD...].
@@ -223,7 +247,7 @@ fn handle_ep_job(
                     metrics.on_first_token(ctx.id);
                     if ctx.max_tokens <= 1 {
                         finish(&ctx, vec![first], metrics);
-                        return;
+                        return 1;
                     }
                     let _ = mode;
                     if pd_groups > 0 {
@@ -272,8 +296,12 @@ fn handle_ep_job(
                             },
                         );
                     }
+                    1
                 }
-                Err(e) => warn!("prefill failed for req {}: {e:#}", ctx.id),
+                Err(e) => {
+                    warn!("prefill failed for req {}: {e:#}", ctx.id);
+                    0
+                }
             }
         }
         Job::Decode { .. } | Job::KvChunk { .. } => {
@@ -351,6 +379,12 @@ fn admit_decode_job(
 
 /// Continuous-batching decode loop with periodic queue re-checks (the
 /// monolith preemption point, and the join point for waiting requests).
+///
+/// Returns the number of requests admitted to the batch over the run —
+/// the monitor's decode service-time unit. Streamed `Job::KvChunk`s that
+/// only slot a partial KV group count 0 (their wall time is negligible
+/// bookkeeping; counting them would dilute the per-job service EWMA by
+/// the group count).
 fn run_decode_batch(
     rt: &mut TinyLmmRuntime,
     jobs: Vec<Job>,
@@ -358,17 +392,18 @@ fn run_decode_batch(
     queues: &Arc<StageQueues>,
     metrics: &Arc<MetricsRecorder>,
     role: Stage,
-) {
+) -> u64 {
     let mut slots: Vec<Slot> = Vec::new();
     let mut kvs: Vec<Vec<f32>> = Vec::new();
     let mut lens: Vec<i32> = Vec::new();
     for job in jobs {
         admit_decode_job(job, &mut slots, &mut kvs, &mut lens, queues, metrics);
     }
+    let mut served = slots.len() as u64;
     if slots.is_empty() {
         // Only partial KV groups arrived (reassembly still pending on
         // other chunks): nothing to decode yet.
-        return;
+        return 0;
     }
 
     'outer: loop {
@@ -377,7 +412,7 @@ fn run_decode_batch(
             Ok(s) => s,
             Err(e) => {
                 warn!("decode_start failed: {e:#}");
-                return;
+                return served;
             }
         };
         let bucket = state.batch as usize;
@@ -395,7 +430,7 @@ fn run_decode_batch(
                 Ok(l) => l,
                 Err(e) => {
                     warn!("decode_step failed: {e:#}");
-                    return;
+                    return served;
                 }
             };
             let vocab = rt.config().llm_vocab as usize;
@@ -417,7 +452,7 @@ fn run_decode_batch(
                 }
             }
             if slots.iter().all(|s| s.done) {
-                return;
+                return served;
             }
             steps_since_recheck += 1;
             if steps_since_recheck >= params.decode_recheck_steps {
@@ -436,7 +471,7 @@ fn run_decode_batch(
                         Ok(x) => x,
                         Err(e) => {
                             warn!("decode_extract failed: {e:#}");
-                            return;
+                            return served;
                         }
                     };
                     let mut new_slots = Vec::new();
@@ -453,14 +488,17 @@ fn run_decode_batch(
 
                     if has_ep_work {
                         // Preemption (the Figure 1 interference): serve the
-                        // EP queue before decoding resumes.
+                        // EP queue before decoding resumes. Units are
+                        // deliberately not recorded — this wall time sits
+                        // inside the caller's decode window, so counting
+                        // the jobs elsewhere would double-account.
                         let non_decode: Vec<Stage> = stages
                             .iter()
                             .copied()
                             .filter(|s| *s != Stage::Decode)
                             .collect();
                         while let Some(job) = queues.try_pop(&non_decode) {
-                            handle_ep_job(
+                            let _ = handle_ep_job(
                                 rt,
                                 job,
                                 queues,
@@ -472,6 +510,7 @@ fn run_decode_batch(
                     }
                     // Admit waiting decode jobs into the freed capacity.
                     let room = params.max_decode_batch as usize - new_slots.len();
+                    let before = new_slots.len();
                     for job in queues.pop_decode_batch(room) {
                         admit_decode_job(
                             job,
@@ -482,8 +521,9 @@ fn run_decode_batch(
                             metrics,
                         );
                     }
+                    served += (new_slots.len() - before) as u64;
                     if new_slots.is_empty() {
-                        return;
+                        return served;
                     }
                     slots = new_slots;
                     kvs = new_kvs;

@@ -11,8 +11,9 @@ use std::time::Duration;
 use anyhow::Result;
 use log::info;
 
-use crate::coordinator::monitor::QueueMonitor;
-use crate::coordinator::role_switch::{RoleSwitchController, SwitchPolicy};
+use crate::coordinator::planner::{PlannerConfig, ReallocationPlanner};
+use crate::coordinator::profiler::WorkloadProfiler;
+use crate::coordinator::role_switch::SwitchPolicy;
 use crate::core::config::EpdConfig;
 use crate::core::stage::Stage;
 use crate::metrics::recorder::MetricsRecorder;
@@ -120,7 +121,9 @@ impl EpdEngine {
             let q = Arc::clone(&queues);
             let ctrls2 = ctrls.clone();
             let policy = cfg.switch_policy;
-            Some(std::thread::spawn(move || monitor_main(q, ctrls2, policy)))
+            let epd = cfg.epd.clone();
+            let m = Arc::clone(&metrics);
+            Some(std::thread::spawn(move || monitor_main(q, ctrls2, policy, epd, m)))
         } else {
             None
         };
@@ -157,6 +160,10 @@ impl EpdEngine {
             .iter()
             .map(|&t| t as i32)
             .collect();
+        // Request-shape accumulators: the monitor thread's profiler turns
+        // the per-window deltas into images/prompt/output EWMAs.
+        self.metrics
+            .on_request_shape(req.images, text_tokens.len() as u32, req.max_tokens);
 
         let tiles = req.images; // tiny-lmm: one tile per image
         // Content address of the media payload. Tiny-lmm's synthetic
@@ -300,46 +307,104 @@ impl EpdEngine {
     }
 }
 
-/// Role-switch monitor thread (§3.2.4): samples queue depths, feeds the
-/// EWMA monitor, and instructs the least-loaded donor instance to switch
-/// when the controller fires.
-fn monitor_main(queues: Arc<StageQueues>, ctrls: Vec<Sender<Ctrl>>, policy: SwitchPolicy) {
-    let mut monitor = QueueMonitor::new(0.4);
-    let mut controller = RoleSwitchController::new(policy);
+/// Reallocation monitor thread (§3.2.3 + §3.2.4): samples the worker-side
+/// counters in [`MetricsRecorder`] into the shared [`WorkloadProfiler`] —
+/// measured per-stage busy fractions and per-job service-time EWMAs, not
+/// the old `qlen`-as-backlog proxy with hard-coded zero utilization — and
+/// drives the same [`ReallocationPlanner`] executor the simulator uses,
+/// applying released steps through the instances' `Ctrl::Switch` channel.
+///
+/// Sample period and EWMA weight come from `EpdConfig::{sample_interval,
+/// monitor_alpha}` (defaults: the previously hard-coded 100 ms / 0.4).
+fn monitor_main(
+    queues: Arc<StageQueues>,
+    ctrls: Vec<Sender<Ctrl>>,
+    policy: SwitchPolicy,
+    epd: EpdConfig,
+    metrics: Arc<MetricsRecorder>,
+) {
+    let sample = Duration::from_secs_f64(epd.sample_interval.max(0.001));
+    let mut profiler = WorkloadProfiler::new(epd.monitor_alpha.clamp(0.01, 1.0));
+    let mut planner = ReallocationPlanner::new(PlannerConfig::from_epd(&epd, policy));
     let t0 = std::time::Instant::now();
+    let mut prev_busy = [0.0f64; 3];
+    let mut prev_jobs = [0u64; 3];
+    let mut prev_submitted = 0u64;
+    let mut prev_shape = (0u64, 0u64, 0u64);
     while !queues.is_shutdown() {
-        std::thread::sleep(Duration::from_millis(100));
+        std::thread::sleep(sample);
         let now = t0.elapsed().as_secs_f64();
         let counts = [
             queues.role_count(Stage::Encode),
             queues.role_count(Stage::Prefill),
             queues.role_count(Stage::Decode),
         ];
-        for s in Stage::ALL {
-            let qlen = queues.len(s);
-            // Backlog proxy: queue length (the engine has no cost model —
-            // deliberately; it measures rather than predicts).
-            monitor.observe(s, qlen, qlen as f64, 0.0, counts[stage_idx(s)]);
+        // Arrival-rate and request-shape EWMAs from the recorder's
+        // submission counters.
+        let submitted = metrics.submitted() as u64;
+        if submitted > prev_submitted {
+            let n = submitted - prev_submitted;
+            let shape = metrics.request_shape_totals();
+            let d = (
+                shape.0 - prev_shape.0,
+                shape.1 - prev_shape.1,
+                shape.2 - prev_shape.2,
+            );
+            profiler.note_arrivals(n, now);
+            profiler.observe_request(
+                d.0 as f64 / n as f64,
+                d.1 as f64 / n as f64,
+                d.2 as f64 / n as f64,
+                0.0, // MM tokens are not known at submit in the engine
+            );
+            prev_submitted = submitted;
+            prev_shape = shape;
         }
-        if let Some(dec) = controller.evaluate(now, &monitor, counts) {
-            // Donor: any instance currently in `dec.from`.
+        let window = sample.as_secs_f64();
+        let mut queued = [false; 3];
+        for s in Stage::ALL {
+            let i = s.index();
+            let qlen = queues.len(s);
+            queued[i] = qlen > 0;
+            let busy = metrics.stage_busy_seconds(s);
+            let jobs = metrics.stage_jobs(s);
+            let d_busy = (busy - prev_busy[i]).max(0.0);
+            let d_jobs = jobs.saturating_sub(prev_jobs[i]);
+            prev_busy[i] = busy;
+            prev_jobs[i] = jobs;
+            if d_jobs > 0 {
+                profiler.observe_service(s, d_busy / d_jobs as f64);
+            }
+            // Busy fraction of this stage's instances over the window.
+            let util = if counts[i] == 0 {
+                0.0
+            } else {
+                (d_busy / (window * counts[i] as f64)).clamp(0.0, 1.0)
+            };
+            // Backlog: queued jobs priced at the measured per-job service
+            // time. Until the first job completes, 1 s/job reproduces the
+            // old qlen-proxy magnitude.
+            let backlog = qlen as f64 * profiler.service_estimate(s).unwrap_or(1.0);
+            profiler.observe_stage(s, qlen, backlog, util, counts[i]);
+        }
+        if let Some(step) = planner.tick(now, &profiler, counts, queued) {
+            // Donor: any instance currently in `step.from`.
             let roles = queues.roles.lock().unwrap().clone();
-            if let Some(idx) = roles.iter().position(|&r| r == dec.from) {
-                queues.set_role(idx, dec.to);
+            if let Some(idx) = roles.iter().position(|&r| r == step.from) {
+                queues.set_role(idx, step.to);
                 let _ = ctrls[idx].send(Ctrl::Switch {
-                    to: dec.to,
-                    pause: Duration::from_secs_f64(dec.migration_time),
+                    to: step.to,
+                    pause: Duration::from_secs_f64(step.migration_time),
                 });
-                info!("monitor: switching instance {idx} {} -> {}", dec.from, dec.to);
+                metrics.on_role_switch();
+                info!("monitor: switching instance {idx} {} -> {}", step.from, step.to);
+            } else {
+                // No instance currently holds the donor role: hand a
+                // predictive step back so the plan retries instead of
+                // silently skipping the move.
+                planner.requeue(step);
             }
         }
-    }
-}
-
-fn stage_idx(s: Stage) -> usize {
-    match s {
-        Stage::Encode => 0,
-        Stage::Prefill => 1,
-        Stage::Decode => 2,
+        metrics.record_reallocation(planner.stats());
     }
 }

@@ -18,7 +18,9 @@
 //!   assignment strategies (Appendix D).
 //! - [`coordinator`] — the paper's system contribution: EP/PD migration,
 //!   intra-request parallelism (§3.2.2), dynamic role switching (§3.2.4),
-//!   and the queue monitor that drives it.
+//!   and the online reallocation planner (workload profiler → topology
+//!   planner → shared plan executor) that unifies role switching with
+//!   the §3.2.3 allocation optimizer.
 //! - [`sim`] — the DistServe-style discrete-event cluster simulator used by
 //!   the optimizer and by every table/figure bench.
 //! - [`workload`] — synthetic, NextQA-like, Video-MME-like, audio and

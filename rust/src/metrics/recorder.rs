@@ -6,8 +6,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::coordinator::planner::ReallocationStats;
 use crate::core::request::RequestId;
 use crate::core::slo::Slo;
+use crate::core::stage::Stage;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -39,6 +41,25 @@ pub struct MetricsRecorder {
     pd_streamed: AtomicU64,
     /// Streamed requests whose KV finished reassembly at decode.
     pd_reassembled: AtomicU64,
+    /// Worker-side per-stage busy time (nanoseconds, indexed by
+    /// `Stage::index`) — the monitor thread's busy-fraction signal.
+    stage_busy_ns: [AtomicU64; 3],
+    /// Worker-side per-stage completed jobs — with `stage_busy_ns`, the
+    /// monitor's per-job service-time EWMA source.
+    stage_jobs: [AtomicU64; 3],
+    /// Request-shape accumulators (images / prompt tokens / requested
+    /// output tokens over all submissions) the profiler turns into EWMAs.
+    arrived_images: AtomicU64,
+    arrived_prompt_tokens: AtomicU64,
+    arrived_output_tokens: AtomicU64,
+    /// Reallocation counters: executed role switches plus the planner's
+    /// plan/step snapshot (mirrored from the monitor thread).
+    role_switches: AtomicU64,
+    plans: AtomicU64,
+    planned_steps: AtomicU64,
+    released_steps: AtomicU64,
+    blocked_steps: AtomicU64,
+    aborted_plans: AtomicU64,
 }
 
 impl MetricsRecorder {
@@ -128,6 +149,73 @@ impl MetricsRecorder {
 
     pub fn pd_reassembled_requests(&self) -> u64 {
         self.pd_reassembled.load(Ordering::Relaxed)
+    }
+
+    /// Record `seconds` of stage work covering `jobs` completed jobs on a
+    /// worker thread (the handle/decode-batch call sites in
+    /// `engine/instance.rs`). These counters replace the monitor's old
+    /// `qlen`-as-backlog proxy and hard-coded zero utilization.
+    pub fn on_stage_work(&self, stage: Stage, seconds: f64, jobs: u64) {
+        let ns = (seconds.max(0.0) * 1e9) as u64;
+        self.stage_busy_ns[stage.index()].fetch_add(ns, Ordering::Relaxed);
+        self.stage_jobs[stage.index()].fetch_add(jobs, Ordering::Relaxed);
+    }
+
+    /// Cumulative worker busy time for a stage, seconds.
+    pub fn stage_busy_seconds(&self, stage: Stage) -> f64 {
+        self.stage_busy_ns[stage.index()].load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Cumulative jobs completed for a stage.
+    pub fn stage_jobs(&self, stage: Stage) -> u64 {
+        self.stage_jobs[stage.index()].load(Ordering::Relaxed)
+    }
+
+    /// Record a submitted request's shape (profiler EWMA source).
+    pub fn on_request_shape(&self, images: u32, prompt_tokens: u32, output_tokens: u32) {
+        self.arrived_images.fetch_add(images as u64, Ordering::Relaxed);
+        self.arrived_prompt_tokens
+            .fetch_add(prompt_tokens as u64, Ordering::Relaxed);
+        self.arrived_output_tokens
+            .fetch_add(output_tokens as u64, Ordering::Relaxed);
+    }
+
+    /// Cumulative (images, prompt tokens, output tokens) over submissions.
+    pub fn request_shape_totals(&self) -> (u64, u64, u64) {
+        (
+            self.arrived_images.load(Ordering::Relaxed),
+            self.arrived_prompt_tokens.load(Ordering::Relaxed),
+            self.arrived_output_tokens.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Record one executed role switch (monitor thread).
+    pub fn on_role_switch(&self) {
+        self.role_switches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn role_switches(&self) -> u64 {
+        self.role_switches.load(Ordering::Relaxed)
+    }
+
+    /// Mirror the planner's counters (monitor thread, once per tick).
+    pub fn record_reallocation(&self, stats: ReallocationStats) {
+        self.plans.store(stats.plans, Ordering::Relaxed);
+        self.planned_steps.store(stats.planned_steps, Ordering::Relaxed);
+        self.released_steps.store(stats.released_steps, Ordering::Relaxed);
+        self.blocked_steps.store(stats.blocked_steps, Ordering::Relaxed);
+        self.aborted_plans.store(stats.aborted_plans, Ordering::Relaxed);
+    }
+
+    /// The last mirrored planner snapshot.
+    pub fn reallocation(&self) -> ReallocationStats {
+        ReallocationStats {
+            plans: self.plans.load(Ordering::Relaxed),
+            planned_steps: self.planned_steps.load(Ordering::Relaxed),
+            released_steps: self.released_steps.load(Ordering::Relaxed),
+            blocked_steps: self.blocked_steps.load(Ordering::Relaxed),
+            aborted_plans: self.aborted_plans.load(Ordering::Relaxed),
+        }
     }
 
     pub fn on_arrival(&self, id: RequestId) {
@@ -256,6 +344,25 @@ impl MetricsRecorder {
                     ),
                 ]),
             ),
+            (
+                "stage_busy_seconds",
+                Json::obj(vec![
+                    ("encode", Json::num(self.stage_busy_seconds(Stage::Encode))),
+                    ("prefill", Json::num(self.stage_busy_seconds(Stage::Prefill))),
+                    ("decode", Json::num(self.stage_busy_seconds(Stage::Decode))),
+                ]),
+            ),
+            ("reallocation", {
+                let r = self.reallocation();
+                Json::obj(vec![
+                    ("switches", Json::num(self.role_switches() as f64)),
+                    ("plans", Json::num(r.plans as f64)),
+                    ("planned_steps", Json::num(r.planned_steps as f64)),
+                    ("released_steps", Json::num(r.released_steps as f64)),
+                    ("blocked_steps", Json::num(r.blocked_steps as f64)),
+                    ("aborted_plans", Json::num(r.aborted_plans as f64)),
+                ])
+            }),
         ])
     }
 }
@@ -339,6 +446,40 @@ mod tests {
         assert_eq!(m.pd_streamed_requests(), 1);
         assert_eq!(m.pd_chunks(), 4);
         assert_eq!(m.pd_reassembled_requests(), 1);
+    }
+
+    #[test]
+    fn stage_work_and_shape_counters() {
+        let m = MetricsRecorder::new();
+        m.on_stage_work(Stage::Decode, 0.5, 4);
+        m.on_stage_work(Stage::Decode, 0.25, 2);
+        m.on_stage_work(Stage::Encode, 1.0, 1);
+        assert!((m.stage_busy_seconds(Stage::Decode) - 0.75).abs() < 1e-6);
+        assert_eq!(m.stage_jobs(Stage::Decode), 6);
+        assert_eq!(m.stage_jobs(Stage::Prefill), 0);
+        m.on_request_shape(4, 22, 10);
+        m.on_request_shape(0, 64, 200);
+        assert_eq!(m.request_shape_totals(), (4, 86, 210));
+    }
+
+    #[test]
+    fn reallocation_snapshot_roundtrips() {
+        let m = MetricsRecorder::new();
+        assert_eq!(m.reallocation(), ReallocationStats::default());
+        let s = ReallocationStats {
+            plans: 3,
+            planned_steps: 5,
+            released_steps: 4,
+            blocked_steps: 2,
+            aborted_plans: 1,
+        };
+        m.record_reallocation(s);
+        m.on_role_switch();
+        assert_eq!(m.reallocation(), s);
+        assert_eq!(m.role_switches(), 1);
+        let j = m.report();
+        assert_eq!(j.get("reallocation").unwrap().get("plans").unwrap().as_u64(), Some(3));
+        assert!(j.get("stage_busy_seconds").unwrap().get("decode").is_some());
     }
 
     #[test]

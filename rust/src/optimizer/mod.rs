@@ -14,4 +14,4 @@ pub mod objective;
 
 pub use bayes::{BayesOpt, BayesOptConfig};
 pub use objective::{ConfigEvaluator, Objective};
-pub use space::{ConfigPoint, SearchSpace};
+pub use space::{topology_neighborhood, ConfigPoint, SearchSpace};

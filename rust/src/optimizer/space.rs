@@ -7,8 +7,45 @@
 //! enforces the total-GPU constraint exactly as described.
 
 use crate::core::config::{AssignPolicy, EpdConfig, QueuePolicy};
+use crate::core::stage::Stage;
 use crate::core::topology::Topology;
 use crate::util::rng::Rng;
+
+/// All topologies reachable from `t` by at most `radius` single-instance
+/// moves, with every stage kept at `floor` or more instances. Excludes
+/// `t` itself. This is the move structure of the Appendix D space
+/// restricted to the fixed cluster — the candidate set the online
+/// reallocation planner scores, and the local neighborhood a hill-climb
+/// over [`ConfigPoint`] topologies explores.
+pub fn topology_neighborhood(t: Topology, radius: u32, floor: u32) -> Vec<Topology> {
+    let mut seen = vec![t];
+    let mut frontier = vec![t];
+    for _ in 0..radius {
+        let mut next = Vec::new();
+        for &cur in &frontier {
+            for from in Stage::ALL {
+                if cur.count(from) <= floor {
+                    continue;
+                }
+                for to in Stage::ALL {
+                    if from == to {
+                        continue;
+                    }
+                    let mut n = cur;
+                    n.set_count(from, n.count(from) - 1);
+                    n.set_count(to, n.count(to) + 1);
+                    if !seen.contains(&n) {
+                        seen.push(n);
+                        next.push(n);
+                    }
+                }
+            }
+        }
+        frontier = next;
+    }
+    seen.retain(|&x| x != t);
+    seen
+}
 
 /// One candidate configuration.
 #[derive(Debug, Clone, PartialEq)]
@@ -160,6 +197,29 @@ mod tests {
         let b = space.sample(&mut rng).features();
         assert_eq!(a.len(), b.len());
         assert_eq!(a.len(), 9);
+    }
+
+    #[test]
+    fn neighborhood_conserves_total_and_floor() {
+        let t = Topology::new(2, 2, 1);
+        let n1 = topology_neighborhood(t, 1, 1);
+        // Radius 1 from (2,2,1) with floor 1: donors E and P (D is at the
+        // floor), two destinations each = 4 distinct candidates.
+        assert_eq!(n1.len(), 4);
+        for c in &n1 {
+            assert_eq!(c.total(), t.total());
+            for s in Stage::ALL {
+                assert!(c.count(s) >= 1);
+            }
+            assert_ne!(*c, t);
+        }
+        let n2 = topology_neighborhood(t, 2, 1);
+        assert!(n2.len() > n1.len(), "radius grows the candidate set");
+        assert!(n2.contains(&Topology::new(1, 1, 3)), "two moves reach 1E1P3D");
+        // Floor 0 additionally allows draining a stage entirely; floor 1
+        // never does.
+        assert!(topology_neighborhood(t, 1, 0).contains(&Topology::new(3, 2, 0)));
+        assert!(!n1.contains(&Topology::new(3, 2, 0)));
     }
 
     #[test]

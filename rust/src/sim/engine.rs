@@ -21,8 +21,9 @@ use crate::cache::kv_block_manager::KvBlockManager;
 use crate::cache::mm_block_manager::MmBlockManager;
 use crate::coordinator::irp::{plan_shards, plan_shards_aligned};
 use crate::coordinator::migration::{MigrationKind, TransferModel};
-use crate::coordinator::monitor::QueueMonitor;
-use crate::coordinator::role_switch::{RoleSwitchController, SwitchPolicy};
+use crate::coordinator::planner::{PlannerConfig, ReallocationPlanner};
+use crate::coordinator::profiler::WorkloadProfiler;
+use crate::coordinator::role_switch::SwitchPolicy;
 use crate::core::config::EpdConfig;
 use crate::core::request::{Request, RequestId, RequestTimeline};
 use crate::core::stage::Stage;
@@ -226,8 +227,12 @@ pub struct Simulator<'a> {
     enc_cache: EncoderCache,
     /// Content-affinity assigner for encode entry (rendezvous hashing).
     encode_assigner: Assigner,
-    switch_ctl: RoleSwitchController,
-    monitor: QueueMonitor,
+    /// Online workload statistics (arrival rate, request shape, per-stage
+    /// service/queueing EWMAs) fed from simulated completions.
+    profiler: WorkloadProfiler,
+    /// The reallocation planner + shared plan executor (§3.2.3 + §3.2.4);
+    /// `planner = "greedy"` reduces to the legacy controller bit-for-bit.
+    planner: ReallocationPlanner,
     busy_acc: [f64; 3],
     ep_overlap: EpOverlapStats,
     pd_overlap: PdOverlapStats,
@@ -306,8 +311,11 @@ impl<'a> Simulator<'a> {
                 cfg.spec.vision.tokens_per_tile.max(1),
             ),
             encode_assigner: Assigner::new(cfg.epd.sched_encode.assign),
-            switch_ctl: RoleSwitchController::new(cfg.switch_policy),
-            monitor: QueueMonitor::new(0.3),
+            // The sim's historical EWMA weight (0.3) is kept so greedy
+            // runs stay bit-for-bit; the engine-side default lives in
+            // `EpdConfig::monitor_alpha`.
+            profiler: WorkloadProfiler::new(0.3),
+            planner: ReallocationPlanner::new(PlannerConfig::from_epd(&cfg.epd, cfg.switch_policy)),
             busy_acc: [0.0; 3],
             ep_overlap: EpOverlapStats::default(),
             pd_overlap: PdOverlapStats::default(),
@@ -378,6 +386,7 @@ impl<'a> Simulator<'a> {
             timelines,
             makespan,
             role_switches: self.role_switches,
+            reallocation: self.planner.stats(),
             busy: self.busy_acc,
             rejected: self.rejected,
             encoder_cache: self.enc_cache.stats(),
@@ -468,6 +477,16 @@ impl<'a> Simulator<'a> {
             self.events.push(self.now + 0.01, Event::Arrival(id));
             return;
         }
+
+        // Profiler feeds (pure statistics — no effect on event timing).
+        // After the retry branch so a re-fired arrival counts once.
+        self.profiler.note_arrivals(1, self.now);
+        self.profiler.observe_request(
+            req.images as f64,
+            req.prompt_tokens as f64,
+            req.output_tokens as f64,
+            req.total_mm_tokens() as f64,
+        );
 
         // Cross-request encoder cache: a content-addressed hit skips the
         // encode stage entirely (preprocess + encoder forward), pinning
@@ -697,10 +716,12 @@ impl<'a> Simulator<'a> {
                 offset += d;
             }
         }
+        let jobs = batch.len().max(1) as f64;
         let inst = &mut self.insts[idx];
         inst.busy = true;
         inst.in_flight = batch.items;
         self.busy_acc[0] += duration;
+        self.profiler.observe_service(Stage::Encode, duration / jobs);
         self.events.push(self.now + duration, Event::EncodeDone { instance: idx });
     }
 
@@ -976,6 +997,8 @@ impl<'a> Simulator<'a> {
         inst.busy = true;
         inst.in_flight = batch.items;
         self.busy_acc[1] += duration;
+        self.profiler
+            .observe_service(Stage::Prefill, duration / ids.len().max(1) as f64);
         self.events.push(self.now + duration, Event::PrefillDone { instance: idx });
         if self.pd_streamed() {
             for id in ids {
@@ -1030,6 +1053,8 @@ impl<'a> Simulator<'a> {
         inst.busy = true;
         inst.in_flight = batch.items;
         self.busy_acc[1] += duration;
+        self.profiler
+            .observe_service(Stage::Prefill, duration / deltas.len().max(1) as f64);
         self.events.push(self.now + duration, Event::PrefillDone { instance: idx });
         if self.pd_streamed() {
             // Each pass's freshly computed KV streams out layer-group by
@@ -1439,6 +1464,7 @@ impl<'a> Simulator<'a> {
         let duration = self.cost.decode_step_time(batch, avg_ctx);
         self.insts[idx].busy = true;
         self.busy_acc[2] += duration;
+        self.profiler.observe_service(Stage::Decode, duration);
         self.events.push(self.now + duration, Event::DecodeStepDone { instance: idx });
     }
 
@@ -1534,6 +1560,8 @@ impl<'a> Simulator<'a> {
         inst.busy = true;
         inst.in_flight = batch.items;
         self.busy_acc[0] += duration; // fused work accounted to E+P jointly
+        self.profiler
+            .observe_service(Stage::Encode, duration / ids.len().max(1) as f64);
         self.events.push(self.now + duration, Event::FusedStepDone { instance: idx });
         if self.pd_streamed() {
             // DistServe-style PD disaggregation streams the KV out of the
@@ -1581,10 +1609,12 @@ impl<'a> Simulator<'a> {
         self.finished_count += 1;
     }
 
-    // ---- role switching ----
+    // ---- online reallocation (profiler → planner → executor) ----
 
     fn on_monitor_tick(&mut self) {
-        // Feed per-stage signals.
+        // Feed per-stage signals into the profiler (identical observation
+        // math to the pre-planner monitor, so `planner = "greedy"` stays
+        // bit-for-bit).
         let mut counts = [0u32; 3];
         let mut qlen = [0usize; 3];
         let mut backlog = [0.0f64; 3];
@@ -1593,7 +1623,7 @@ impl<'a> Simulator<'a> {
             if inst.switching {
                 continue;
             }
-            let sidx = stage_index(inst.role);
+            let sidx = inst.role.index();
             counts[sidx] += 1;
             qlen[sidx] += inst.queue.len() + inst.decode_queue.len() + inst.active.len();
             // Remaining decode work of the active set: steps left × step
@@ -1616,33 +1646,45 @@ impl<'a> Simulator<'a> {
             }
         }
         for s in Stage::ALL {
-            let i = stage_index(s);
+            let i = s.index();
             let util = if counts[i] == 0 { 0.0 } else { busy[i] as f64 / counts[i] as f64 };
-            self.monitor.observe(s, qlen[i], backlog[i], util, counts[i]);
+            self.profiler.observe_stage(s, qlen[i], backlog[i], util, counts[i]);
         }
 
         if std::env::var("EPD_SIM_DEBUG").is_ok() {
+            let m = self.profiler.monitor();
             eprintln!(
                 "tick t={:.2} counts={counts:?} qlen={qlen:?} backlog=[{:.2},{:.2},{:.2}] pressures=[{:.2},{:.2},{:.2}]",
                 self.now,
                 backlog[0], backlog[1], backlog[2],
-                self.monitor.load(Stage::Encode).pressure(),
-                self.monitor.load(Stage::Prefill).pressure(),
-                self.monitor.load(Stage::Decode).pressure(),
+                m.load(Stage::Encode).pressure(),
+                m.load(Stage::Prefill).pressure(),
+                m.load(Stage::Decode).pressure(),
             );
         }
-        if let Some(dec) = self.switch_ctl.evaluate(self.now, &self.monitor, counts) {
-            // Pick a donor: an instance of `dec.from` with no active decode
-            // batch (drain-free switch), preferring the least loaded.
+        // One shared control loop for both policies: the planner may
+        // adopt a fresh plan and releases at most one gated step, which
+        // this engine applies through `begin_switch` — the same executor
+        // the real engine drives through `Ctrl::Switch`.
+        let queued = [qlen[0] > 0, qlen[1] > 0, qlen[2] > 0];
+        if let Some(step) = self.planner.tick(self.now, &self.profiler, counts, queued) {
+            // Pick a donor: an instance of `step.from` with no active
+            // decode batch (drain-free switch), preferring the least
+            // loaded.
             let donors: Vec<usize> = self
                 .insts
                 .iter()
                 .enumerate()
-                .filter(|(_, i)| i.role == dec.from && !i.switching && i.active.is_empty())
+                .filter(|(_, i)| i.role == step.from && !i.switching && i.active.is_empty())
                 .map(|(idx, _)| idx)
                 .collect();
             if let Some(donor) = self.least_loaded(&donors) {
-                self.begin_switch(donor, dec.to, dec.migration_time);
+                self.begin_switch(donor, step.to, step.migration_time);
+            } else {
+                // No drain-free donor this tick: hand a predictive step
+                // back so the plan retries instead of silently skipping
+                // the move (greedy steps drop, matching legacy).
+                self.planner.requeue(step);
             }
         }
         // Backstop for streamed requests whose mid-switch re-target found
@@ -1759,14 +1801,6 @@ impl<'a> Simulator<'a> {
                 self.pd_admit(id);
             }
         }
-    }
-}
-
-fn stage_index(s: Stage) -> usize {
-    match s {
-        Stage::Encode => 0,
-        Stage::Prefill => 1,
-        Stage::Decode => 2,
     }
 }
 
@@ -2562,4 +2596,78 @@ mod tests {
         );
     }
 
+    #[test]
+    fn reallocation_counters_dormant_without_role_switching() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(10, 0.5, 2, 10, &spec);
+        let out = Simulator::run(&epd_cfg(&spec), &reqs);
+        assert_eq!(out.reallocation, crate::coordinator::planner::ReallocationStats::default());
+        assert_eq!(out.role_switches, 0);
+    }
+
+    #[test]
+    fn greedy_planner_counts_one_step_plans() {
+        // Same Table 6 scenario as `role_switching_triggers_under_decode_
+        // pressure`, now also pinning the executor accounting: under the
+        // default greedy policy every decision is a single-step plan, and
+        // executed switches never exceed released steps.
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut reqs = mk_requests(40, 3.0, 1, 50, &spec);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.output_tokens = if i < 4 { 50 } else { 400 };
+        }
+        let mut cfg = epd_cfg(&spec);
+        cfg.epd.role_switching = true;
+        cfg.switch_policy.cooldown = 2.0;
+        let out = Simulator::run(&cfg, &reqs);
+        assert!(out.role_switches > 0);
+        let r = out.reallocation;
+        assert_eq!(r.plans, r.planned_steps, "greedy plans are single-step");
+        assert!(r.released_steps <= r.planned_steps);
+        assert!(
+            out.role_switches as u64 <= r.released_steps,
+            "switches {} vs released {}",
+            out.role_switches,
+            r.released_steps
+        );
+    }
+
+    #[test]
+    fn predictive_planner_reallocates_under_decode_shift() {
+        // The same decode-heavy shift, driven by the predictive policy:
+        // the planner must adopt at least one plan and move instances
+        // toward decode, and every request must still complete.
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut reqs = mk_requests(40, 3.0, 1, 50, &spec);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.output_tokens = if i < 4 { 50 } else { 400 };
+        }
+        let mut cfg = epd_cfg(&spec);
+        cfg.epd.role_switching = true;
+        cfg.epd.planner = crate::core::config::PlannerPolicy::Predictive;
+        cfg.epd.plan_interval = 0.5;
+        let out = Simulator::run(&cfg, &reqs);
+        assert_eq!(out.finished().count() as u32 + out.rejected, 40);
+        let r = out.reallocation;
+        assert!(r.plans >= 1, "planner never fired: {r:?}");
+        assert!(r.planned_steps >= r.released_steps);
+        assert!(out.role_switches > 0, "released steps must execute: {r:?}");
+    }
+
+    #[test]
+    fn predictive_planner_is_deterministic() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut reqs = mk_requests(30, 2.0, 1, 60, &spec);
+        for r in reqs.iter_mut().skip(10) {
+            r.output_tokens = 300;
+        }
+        let mut cfg = epd_cfg(&spec);
+        cfg.epd.role_switching = true;
+        cfg.epd.planner = crate::core::config::PlannerPolicy::Predictive;
+        let a = Simulator::run(&cfg, &reqs);
+        let b = Simulator::run(&cfg, &reqs);
+        assert_eq!(a.mean_ttft(), b.mean_ttft());
+        assert_eq!(a.role_switches, b.role_switches);
+        assert_eq!(a.reallocation, b.reallocation);
+    }
 }

@@ -3,9 +3,9 @@
 //! metrics efficiently").
 //!
 //! The simulator drives the same policy components as the real engine
-//! (queues, batchers, block managers, IRP planner, role-switch controller)
-//! over virtual time, with stage latencies from the analytic [`cost`]
-//! model. It simulates all three deployment modes — EPD, PD-disaggregated
+//! (queues, batchers, block managers, IRP planner, the online
+//! reallocation planner and its greedy role-switch fallback) over
+//! virtual time, with stage latencies from the analytic [`cost`] model. It simulates all three deployment modes — EPD, PD-disaggregated
 //! (DistServe) and aggregated (vLLM) — on A100 or Ascend-910B3 device
 //! profiles.
 

@@ -1,6 +1,7 @@
 //! Simulation results: per-request timelines plus system-level counters.
 
 use crate::cache::EncoderCacheStats;
+use crate::coordinator::planner::ReallocationStats;
 use crate::core::request::RequestTimeline;
 use crate::core::slo::Slo;
 use crate::sim::link::LinkStats;
@@ -84,6 +85,11 @@ pub struct SimOutcome {
     pub makespan: f64,
     /// Role switches performed (§3.2.4).
     pub role_switches: u32,
+    /// Reallocation-planner counters: plans adopted, steps planned /
+    /// released / gate-blocked, stale plans dropped. All zero when
+    /// `role_switching` is off; under the default `planner = "greedy"`
+    /// every executed switch is a one-step plan.
+    pub reallocation: ReallocationStats,
     /// Per-stage busy time across instances (E, P, D), seconds.
     pub busy: [f64; 3],
     /// Requests rejected at admission (cache exhaustion with no recovery).
@@ -196,6 +202,7 @@ mod tests {
             ],
             makespan: 4.0,
             role_switches: 0,
+            reallocation: ReallocationStats::default(),
             busy: [1.0, 1.0, 1.0],
             rejected: 1,
             encoder_cache: EncoderCacheStats::default(),

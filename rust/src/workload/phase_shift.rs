@@ -1,0 +1,126 @@
+//! Phase-shifting workload: an encode-heavy many-image burst followed by
+//! a long-decode chat tail — the regime where online reallocation
+//! (§3.2.3 + §3.2.4) wins or loses SLO attainment. The burst saturates
+//! the encode stage with multi-image 4K requests and short outputs; the
+//! tail flips the bottleneck to decode with text-only prompts and long
+//! outputs, so a topology provisioned for either phase starves in the
+//! other.
+
+use super::{build_request, synthetic::SyntheticWorkload, Workload};
+use crate::core::request::Request;
+use crate::model::spec::LmmSpec;
+use crate::model::vision::Resolution;
+use crate::util::rng::Rng;
+
+/// Two [`SyntheticWorkload`] phases back to back.
+#[derive(Debug, Clone)]
+pub struct PhaseShiftWorkload {
+    /// Phase 1: encode-heavy many-image burst.
+    pub burst: SyntheticWorkload,
+    /// Phase 2: long-decode chat tail.
+    pub tail: SyntheticWorkload,
+    /// Fraction of requests in the burst phase, in [0, 1].
+    pub burst_fraction: f64,
+    /// Burst arrivals run at `rate × burst_rate_factor` (many-image
+    /// requests carry far more encode work per request, so a sustainable
+    /// burst arrives slower than the text tail).
+    pub burst_rate_factor: f64,
+}
+
+impl Default for PhaseShiftWorkload {
+    fn default() -> Self {
+        PhaseShiftWorkload {
+            burst: SyntheticWorkload {
+                prompt_tokens: 22,
+                images_per_request: 4,
+                resolution: Resolution::four_k(),
+                output_tokens: 8,
+                output_jitter: 0,
+            },
+            tail: SyntheticWorkload {
+                prompt_tokens: 64,
+                images_per_request: 0,
+                resolution: Resolution::four_k(),
+                output_tokens: 160,
+                output_jitter: 0,
+            },
+            burst_fraction: 0.25,
+            burst_rate_factor: 0.2,
+        }
+    }
+}
+
+impl Workload for PhaseShiftWorkload {
+    fn generate(&self, spec: &LmmSpec, n: usize, rate: f64, rng: &mut Rng) -> Vec<Request> {
+        let n_burst = ((n as f64) * self.burst_fraction.clamp(0.0, 1.0)).round() as usize;
+        let n_burst = n_burst.min(n);
+        let burst_rate = (rate * self.burst_rate_factor).max(1e-9);
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let (phase, r) = if i < n_burst {
+                (&self.burst, burst_rate)
+            } else {
+                (&self.tail, rate)
+            };
+            t += rng.exp(r);
+            out.push(build_request(
+                spec,
+                i as u64,
+                t,
+                phase.prompt_tokens,
+                phase.images_per_request,
+                phase.resolution,
+                phase.output_tokens.max(1),
+            ));
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "phase-shift"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelId;
+
+    #[test]
+    fn two_phases_with_monotone_arrivals() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut rng = Rng::new(5);
+        let w = PhaseShiftWorkload::default();
+        let reqs = w.generate(&spec, 100, 2.0, &mut rng);
+        assert_eq!(reqs.len(), 100);
+        let n_burst = reqs.iter().filter(|r| r.images > 0).count();
+        assert_eq!(n_burst, 25, "burst_fraction 0.25 of 100");
+        // The burst comes first, then the text tail.
+        assert!(reqs[..25].iter().all(|r| r.images == 4 && r.output_tokens == 8));
+        assert!(reqs[25..].iter().all(|r| r.images == 0 && r.output_tokens == 160));
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        // The burst arrives slower than the tail (rate factor 0.2).
+        let burst_span = reqs[24].arrival - reqs[0].arrival;
+        let tail_span = reqs[99].arrival - reqs[25].arrival;
+        assert!(burst_span / 24.0 > tail_span / 74.0, "burst gaps are longer");
+    }
+
+    #[test]
+    fn degenerate_fractions() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut rng = Rng::new(6);
+        let all_tail = PhaseShiftWorkload { burst_fraction: 0.0, ..Default::default() };
+        assert!(all_tail
+            .generate(&spec, 10, 1.0, &mut rng)
+            .iter()
+            .all(|r| r.images == 0));
+        let all_burst = PhaseShiftWorkload { burst_fraction: 1.0, ..Default::default() };
+        assert!(all_burst
+            .generate(&spec, 10, 1.0, &mut rng)
+            .iter()
+            .all(|r| r.images == 4));
+    }
+}

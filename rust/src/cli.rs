@@ -64,7 +64,16 @@ fn cli() -> Cli {
                 opt("images", Some("2"), "images per request"),
                 opt("output-tokens", Some("10"), "output length"),
                 opt("device", Some("a100"), "a100 | npu"),
+                opt(
+                    "workload",
+                    Some("synthetic"),
+                    "synthetic | cluster-scale (mixed chat + many-image on the 64-instance reference cluster; ignores --mode/--topology/--images/--output-tokens)",
+                ),
                 flag("no-irp", "disable intra-request parallelism"),
+                flag(
+                    "no-timelines",
+                    "skip per-request timelines; report sketch-derived percentiles in O(1) memory",
+                ),
                 flag("goodput", "search for goodput instead of one run"),
                 opt("slo-ttft", Some("2.6"), "TTFT SLO (s)"),
                 opt("slo-tpot", Some("0.04"), "TPOT SLO (s)"),
@@ -80,7 +89,9 @@ fn cli() -> Cli {
                 opt("budget", Some("16"), "evaluation budget"),
                 opt("images", Some("6"), "images per request"),
                 opt("requests", Some("50"), "requests per evaluation"),
+                opt("threads", Some("0"), "parallel sim evaluations for --sweep (0 = all cores)"),
                 flag("random", "random search instead of Bayesian"),
+                flag("sweep", "exhaustive parallel sweep over every topology (uses --threads)"),
             ],
             positional: vec![],
         })
@@ -184,11 +195,33 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                 "npu" => DeviceSpec::npu_910b3(),
                 _ => DeviceSpec::a100(),
             };
-            let mut epd = epd_config(args.str("mode"), args.str("topology"))?;
+            let (w, mut epd): (Box<dyn Workload>, EpdConfig) = match args.str("workload") {
+                "cluster-scale" => {
+                    // The cluster-scale workload targets the 64-instance
+                    // reference topology; --mode/--topology are ignored
+                    // (like --images/--output-tokens).
+                    use crate::workload::cluster_scale::ClusterScaleWorkload;
+                    (
+                        Box::new(ClusterScaleWorkload::default()),
+                        EpdConfig::epd(ClusterScaleWorkload::topology64(), 1, 1, 128),
+                    )
+                }
+                "synthetic" => (
+                    Box::new(SyntheticWorkload::new(
+                        args.u64("images") as u32,
+                        args.u64("output-tokens") as u32,
+                    )),
+                    epd_config(args.str("mode"), args.str("topology"))?,
+                ),
+                other => anyhow::bail!("unknown workload '{other}'"),
+            };
             epd.irp = !args.flag("no-irp");
-            let cfg = SimConfig::new(spec.clone(), device, epd);
-            let w = SyntheticWorkload::new(args.u64("images") as u32, args.u64("output-tokens") as u32);
+            let mut cfg = SimConfig::new(spec.clone(), device, epd);
             let slo = Slo::new(args.f64("slo-ttft"), args.f64("slo-tpot"));
+            if args.flag("no-timelines") {
+                cfg.record_timelines = false;
+                cfg.streamed_slo = Some(slo);
+            }
             if args.flag("goodput") {
                 let n = args.usize("requests");
                 let result = find_goodput(
@@ -209,7 +242,7 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                 let mut rng = Rng::new(42);
                 let reqs = w.generate(&spec, args.usize("requests"), args.f64("rate"), &mut rng);
                 let out = Simulator::run(&cfg, &reqs);
-                println!("finished:   {}/{}", out.finished().count(), reqs.len());
+                println!("finished:   {}/{}", out.finished_requests(), reqs.len());
                 println!("mean TTFT:  {:.3}s", out.mean_ttft());
                 println!("mean TPOT:  {:.4}s", out.mean_tpot());
                 println!("SLO attain: {:.3}", out.slo_attainment(slo));
@@ -217,6 +250,24 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                     "switches:   {} ({} plans / {} steps)",
                     out.role_switches, out.reallocation.plans, out.reallocation.planned_steps
                 );
+                if !out.timelines_recorded {
+                    let s = &out.streamed;
+                    println!(
+                        "TTFT p50/p90/p99: {:.3}/{:.3}/{:.3}s  TPOT p99: {:.4}s",
+                        s.ttft.quantile(0.5),
+                        s.ttft.quantile(0.9),
+                        s.ttft.quantile(0.99),
+                        s.tpot.quantile(0.99),
+                    );
+                    println!(
+                        "percentiles are sketch-derived (±{:.0}% relative error; timelines off)",
+                        s.ttft.relative_accuracy() * 100.0
+                    );
+                    println!(
+                        "events: {}  peak live requests: {}",
+                        out.events_processed, out.peak_live_requests
+                    );
+                }
             }
             Ok(())
         }
@@ -237,6 +288,34 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                 seed: 42,
             };
             let space = SearchSpace::paper_default(args.u64("gpus") as u32);
+            if args.flag("sweep") {
+                // Exhaustive topology sweep, fanned out across scoped
+                // worker threads (results are bit-identical at any
+                // thread count — each sim is deterministic per seed).
+                let threads = match args.usize("threads") {
+                    0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+                    t => t,
+                };
+                let points = space.topology_grid();
+                let values = ev.goodput_many(&points, threads);
+                let best = values
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                for (p, v) in points.iter().zip(values.iter()) {
+                    println!("  {}  goodput {:.3} req/s", p.topology, v);
+                }
+                println!(
+                    "best topology: {} at {:.3} req/s ({} candidates, {} threads)",
+                    points[best].topology,
+                    values[best],
+                    points.len(),
+                    threads
+                );
+                return Ok(());
+            }
             let opt = BayesOpt::new(
                 space,
                 BayesOptConfig { budget: args.usize("budget"), ..Default::default() },

@@ -27,10 +27,15 @@ pub struct Objective {
 }
 
 /// Evaluates configurations through the simulator (the black-box `f`).
+///
+/// Evaluations are pure functions of `(point, seed)` — the simulator is
+/// deterministic — so candidate sets can be fanned out across threads
+/// ([`ConfigEvaluator::goodput_many`]) with bit-identical results at any
+/// thread count.
 pub struct ConfigEvaluator<'w> {
     pub spec: LmmSpec,
     pub device: DeviceSpec,
-    pub workload: &'w dyn Workload,
+    pub workload: &'w (dyn Workload + Sync),
     pub objective: Objective,
     /// Requests per evaluation run (the paper samples 100-request trials).
     pub n_requests: usize,
@@ -55,11 +60,53 @@ impl<'w> ConfigEvaluator<'w> {
         result.goodput
     }
 
+    /// Eq. 1's `β·cost(p)` penalty — shared by the sequential and
+    /// parallel evaluators so they can never diverge on the cost model.
+    fn cost_penalty(&self, point: &ConfigPoint) -> f64 {
+        let cost = self.objective.gpu_cost * point.topology.total() as f64;
+        self.objective.beta * cost
+    }
+
     /// Full objective value (Eq. 1).
     pub fn objective_value(&self, point: &ConfigPoint) -> f64 {
-        let f = self.goodput(point);
-        let cost = self.objective.gpu_cost * point.topology.total() as f64;
-        f - self.objective.beta * cost
+        self.goodput(point) - self.cost_penalty(point)
+    }
+
+    /// Evaluate goodput for a whole candidate set in parallel across
+    /// `threads` scoped workers (each simulation is independent and
+    /// deterministic per seed), preserving input order. `threads <= 1`
+    /// degenerates to the sequential sweep; results are bit-identical at
+    /// every thread count — the allocation sweep scales with cores
+    /// without perturbing a single decision.
+    pub fn goodput_many(&self, points: &[ConfigPoint], threads: usize) -> Vec<f64> {
+        let threads = threads.max(1).min(points.len().max(1));
+        if threads <= 1 {
+            return points.iter().map(|p| self.goodput(p)).collect();
+        }
+        let chunk = points.len().div_ceil(threads);
+        let mut results: Vec<Vec<f64>> = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = points
+                .chunks(chunk)
+                .map(|ch| s.spawn(move || ch.iter().map(|p| self.goodput(p)).collect::<Vec<f64>>()))
+                .collect();
+            results = handles
+                .into_iter()
+                .map(|h| h.join().expect("sweep worker panicked"))
+                .collect();
+        });
+        results.into_iter().flatten().collect()
+    }
+
+    /// Parallel variant of [`ConfigEvaluator::objective_value`] over a
+    /// candidate set (same ordering/determinism guarantees as
+    /// [`ConfigEvaluator::goodput_many`]).
+    pub fn objective_many(&self, points: &[ConfigPoint], threads: usize) -> Vec<f64> {
+        self.goodput_many(points, threads)
+            .into_iter()
+            .zip(points)
+            .map(|(f, p)| f - self.cost_penalty(p))
+            .collect()
     }
 
     /// Mean TTFT/TPOT at a fixed rate (for the Table 5 comparison, which
@@ -127,6 +174,34 @@ mod tests {
             balanced > starved,
             "balanced {balanced} vs encode-starved {starved}"
         );
+    }
+
+    #[test]
+    fn parallel_sweep_is_thread_count_invariant() {
+        // The golden-determinism requirement for the allocation sweep:
+        // bit-identical goodputs at every thread count, in input order.
+        let w = SyntheticWorkload::new(2, 8);
+        let mut ev = evaluator(&w);
+        ev.n_requests = 15;
+        let points = vec![
+            point(Topology::new(5, 2, 1)),
+            point(Topology::new(4, 3, 1)),
+            point(Topology::new(2, 2, 4)),
+        ];
+        let seq = ev.goodput_many(&points, 1);
+        let par = ev.goodput_many(&points, 4);
+        assert_eq!(seq.len(), 3);
+        for (a, b) in seq.iter().zip(par.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "thread count changed a result");
+        }
+        // And the sweep matches one-at-a-time evaluation exactly.
+        for (p, v) in points.iter().zip(seq.iter()) {
+            assert_eq!(ev.goodput(p).to_bits(), v.to_bits());
+        }
+        let obj = ev.objective_many(&points, 2);
+        for (p, v) in points.iter().zip(obj.iter()) {
+            assert_eq!(ev.objective_value(p).to_bits(), v.to_bits());
+        }
     }
 
     #[test]

@@ -145,6 +145,25 @@ impl SearchSpace {
         }
     }
 
+    /// The exhaustive-sweep grid: one default-policy candidate per
+    /// topology (batch E1/P1/D128, FCFS, least-loaded, IRP on — the EPD
+    /// defaults). This is the candidate set `optimize --sweep` fans out
+    /// across threads via `ConfigEvaluator::goodput_many`.
+    pub fn topology_grid(&self) -> Vec<ConfigPoint> {
+        self.topologies()
+            .into_iter()
+            .map(|topology| ConfigPoint {
+                topology,
+                batch_e: 1,
+                batch_p: 1,
+                batch_d: 128,
+                queue: QueuePolicy::Fcfs,
+                assign: AssignPolicy::LeastLoaded,
+                irp: true,
+            })
+            .collect()
+    }
+
     /// Enumerate all topologies summing to the GPU budget (used by the
     /// exhaustive mode of small sweeps, e.g. Figure 10-left).
     pub fn topologies(&self) -> Vec<Topology> {
@@ -220,6 +239,18 @@ mod tests {
         // never does.
         assert!(topology_neighborhood(t, 1, 0).contains(&Topology::new(3, 2, 0)));
         assert!(!n1.contains(&Topology::new(3, 2, 0)));
+    }
+
+    #[test]
+    fn topology_grid_covers_every_topology_with_defaults() {
+        let space = SearchSpace::paper_default(8);
+        let grid = space.topology_grid();
+        assert_eq!(grid.len(), space.topologies().len());
+        for p in &grid {
+            assert_eq!(p.topology.total(), 8);
+            assert_eq!((p.batch_e, p.batch_p, p.batch_d), (1, 1, 128));
+            assert!(p.irp);
+        }
     }
 
     #[test]

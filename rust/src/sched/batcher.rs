@@ -37,12 +37,30 @@ impl Batcher {
     /// room, (b) the per-item `admit` predicate accepts (given tokens the
     /// item adds), and (c) the token budget holds. `tokens_of` maps an item
     /// to its token contribution. The first rejected item is pushed back.
-    pub fn form<FA, FT>(&self, queue: &mut StageQueue, mut admit: FA, tokens_of: FT) -> Batch
+    pub fn form<FA, FT>(&self, queue: &mut StageQueue, admit: FA, tokens_of: FT) -> Batch
     where
         FA: FnMut(&QueuedRequest) -> bool,
         FT: Fn(&QueuedRequest) -> u64,
     {
         let mut items = Vec::new();
+        self.form_into(queue, admit, tokens_of, &mut items);
+        Batch { items }
+    }
+
+    /// Like [`Batcher::form`], but fills a caller-supplied (recycled)
+    /// vector — the simulator's hot path forms thousands of batches per
+    /// second and reuses its buffers instead of allocating per batch.
+    pub fn form_into<FA, FT>(
+        &self,
+        queue: &mut StageQueue,
+        mut admit: FA,
+        tokens_of: FT,
+        items: &mut Vec<QueuedRequest>,
+    ) where
+        FA: FnMut(&QueuedRequest) -> bool,
+        FT: Fn(&QueuedRequest) -> u64,
+    {
+        items.clear();
         let mut tokens = 0u64;
         while (items.len() as u32) < self.max_batch {
             let Some(candidate) = queue.peek() else { break };
@@ -57,7 +75,6 @@ impl Batcher {
             tokens += t;
             items.push(item);
         }
-        Batch { items }
     }
 }
 

@@ -1,0 +1,190 @@
+//! Dense slab arena for per-request simulator state.
+//!
+//! The engine's hot path touches request state on every event; a
+//! `HashMap<RequestId, ReqState>` pays a hash + probe per touch and keeps
+//! every request ever admitted resident until the run ends. The slab
+//! replaces both costs: requests live in a dense `Vec` indexed by a
+//! sequentially assigned `u32` slot (one bounds-checked load per touch),
+//! and a slot is recycled through a free list the moment its request
+//! finishes — so live memory is bounded by *in-flight* requests, not by
+//! workload size. [`Slab::peak_live`] is the peak-RSS proxy the
+//! `perf_sim_throughput` bench gates.
+//!
+//! Slot numbering is deterministic (LIFO free-list reuse), and nothing in
+//! the engine orders decisions by slot value, so replacing the map is
+//! outcome-preserving.
+
+/// A dense slab with `u32` keys and free-slot reuse.
+#[derive(Debug, Clone)]
+pub struct Slab<T> {
+    slots: Vec<Option<T>>,
+    free: Vec<u32>,
+    live: usize,
+    peak_live: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Slab::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Slab<T> {
+        Slab { slots: Vec::new(), free: Vec::new(), live: 0, peak_live: 0 }
+    }
+
+    /// Insert a value, returning its slot.
+    pub fn insert(&mut self, value: T) -> u32 {
+        self.live += 1;
+        if self.live > self.peak_live {
+            self.peak_live = self.live;
+        }
+        match self.free.pop() {
+            Some(idx) => {
+                debug_assert!(self.slots[idx as usize].is_none());
+                self.slots[idx as usize] = Some(value);
+                idx
+            }
+            None => {
+                let idx = u32::try_from(self.slots.len()).expect("slab overflow");
+                self.slots.push(Some(value));
+                idx
+            }
+        }
+    }
+
+    /// Remove and return a slot's value; the slot is recycled. Panics on
+    /// a vacant slot — a stale handle is a bug, never silent.
+    pub fn remove(&mut self, idx: u64) -> T {
+        let v = self.slots[idx as usize].take().expect("slab remove of vacant slot");
+        self.live -= 1;
+        self.free.push(idx as u32);
+        v
+    }
+
+    pub fn get(&self, idx: u64) -> Option<&T> {
+        self.slots.get(idx as usize).and_then(|s| s.as_ref())
+    }
+
+    pub fn get_mut(&mut self, idx: u64) -> Option<&mut T> {
+        self.slots.get_mut(idx as usize).and_then(|s| s.as_mut())
+    }
+
+    pub fn contains(&self, idx: u64) -> bool {
+        self.get(idx).is_some()
+    }
+
+    /// Occupied slots right now.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// High-water mark of simultaneously occupied slots — the live
+    /// request-state bound the throughput bench gates.
+    pub fn peak_live(&self) -> usize {
+        self.peak_live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Iterate occupied slots in slot order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &T)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|v| (i as u32, v)))
+    }
+
+    /// Consume the slab, yielding remaining values in slot order.
+    pub fn into_values(self) -> impl Iterator<Item = T> {
+        self.slots.into_iter().flatten()
+    }
+}
+
+impl<T> std::ops::Index<u64> for Slab<T> {
+    type Output = T;
+    #[inline]
+    fn index(&self, idx: u64) -> &T {
+        self.slots[idx as usize].as_ref().expect("slab index of vacant slot")
+    }
+}
+
+impl<T> std::ops::IndexMut<u64> for Slab<T> {
+    #[inline]
+    fn index_mut(&mut self, idx: u64) -> &mut T {
+        self.slots[idx as usize].as_mut().expect("slab index of vacant slot")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s: Slab<String> = Slab::new();
+        let a = s.insert("a".into());
+        let b = s.insert("b".into());
+        assert_eq!(a, 0);
+        assert_eq!(b, 1);
+        assert_eq!(s[a as u64], "a");
+        assert_eq!(s.live(), 2);
+        assert_eq!(s.remove(a as u64), "a");
+        assert_eq!(s.live(), 1);
+        assert!(!s.contains(a as u64));
+        assert!(s.contains(b as u64));
+    }
+
+    #[test]
+    fn slots_are_recycled_and_peak_tracks_high_water() {
+        let mut s: Slab<u64> = Slab::new();
+        for i in 0..4 {
+            s.insert(i);
+        }
+        assert_eq!(s.peak_live(), 4);
+        s.remove(3);
+        s.remove(1);
+        // LIFO reuse: last freed first.
+        assert_eq!(s.insert(10), 1);
+        assert_eq!(s.insert(11), 3);
+        assert_eq!(s.insert(12), 4, "fresh slot only when free list empty");
+        assert_eq!(s.peak_live(), 5);
+        assert_eq!(s.live(), 5);
+    }
+
+    #[test]
+    fn live_stays_bounded_under_churn() {
+        let mut s: Slab<u64> = Slab::new();
+        for i in 0..10_000u64 {
+            let idx = s.insert(i);
+            assert_eq!(s.remove(idx as u64), i);
+        }
+        assert_eq!(s.live(), 0);
+        assert_eq!(s.peak_live(), 1, "sequential churn never grows the slab");
+    }
+
+    #[test]
+    #[should_panic(expected = "vacant")]
+    fn stale_handle_panics() {
+        let mut s: Slab<u64> = Slab::new();
+        let idx = s.insert(7);
+        s.remove(idx as u64);
+        let _ = s[idx as u64];
+    }
+
+    #[test]
+    fn iterates_in_slot_order() {
+        let mut s: Slab<u64> = Slab::new();
+        let a = s.insert(10);
+        let b = s.insert(20);
+        let c = s.insert(30);
+        s.remove(b as u64);
+        let got: Vec<(u32, u64)> = s.iter().map(|(i, &v)| (i, v)).collect();
+        assert_eq!(got, vec![(a, 10), (c, 30)]);
+        let vals: Vec<u64> = s.into_values().collect();
+        assert_eq!(vals, vec![10, 30]);
+    }
+}

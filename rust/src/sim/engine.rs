@@ -13,8 +13,29 @@
 //! - **Aggregated (vLLM)**: every instance runs fused encode+prefill *and*
 //!   decode, with fused work preempting decode steps — reproducing the
 //!   interference of Figure 1.
-
-use std::collections::HashMap;
+//!
+//! # Cluster-scale fast path
+//!
+//! The engine is the optimizer's inner loop, so it is built to sustain
+//! million-request, 64-instance workloads:
+//!
+//! - Request state lives in a dense [`Slab`] arena indexed by `u32`
+//!   slots; slots are recycled at completion, so live memory is bounded
+//!   by *in-flight* requests ([`SimOutcome::peak_live_requests`]).
+//! - Arrivals stream into the event heap lazily — the heap holds only
+//!   the next pending arrival plus in-flight events — with reserved
+//!   sequence numbers reproducing the legacy eager pre-push's FIFO order
+//!   bit-for-bit (`SimConfig::eager_arrivals` keeps the old behavior as
+//!   an equivalence-test knob).
+//! - With `SimConfig::record_timelines = false`, per-request timelines
+//!   are dropped at completion and metrics accumulate in O(1) memory
+//!   through [`StreamedMetrics`] quantile sketches.
+//! - Batch formation and candidate selection reuse scratch buffers
+//!   instead of allocating per event.
+//!
+//! Every one of these is outcome-preserving: same seed + config ⇒
+//! bit-for-bit identical `SimOutcome`, pinned by the golden-determinism
+//! and equivalence tests in `rust/tests/property_fastpath.rs`.
 
 use crate::cache::encoder_cache::EncoderCache;
 use crate::cache::kv_block_manager::KvBlockManager;
@@ -26,6 +47,7 @@ use crate::coordinator::profiler::WorkloadProfiler;
 use crate::coordinator::role_switch::SwitchPolicy;
 use crate::core::config::EpdConfig;
 use crate::core::request::{Request, RequestId, RequestTimeline};
+use crate::core::slo::Slo;
 use crate::core::stage::Stage;
 use crate::core::topology::DeploymentMode;
 use crate::model::memory::{MemoryModel, NodeKind};
@@ -34,10 +56,11 @@ use crate::sched::assign::Assigner;
 use crate::sched::batcher::Batcher;
 use crate::sched::queue::{QueuedRequest, StageQueue};
 
+use super::arena::Slab;
 use super::cost::CostModel;
 use super::event::{Event, EventQueue};
 use super::link::LinkScheduler;
-use super::outcome::{EpOverlapStats, PdOverlapStats, SimOutcome};
+use super::outcome::{AdmissionStats, EpOverlapStats, PdOverlapStats, SimOutcome, StreamedMetrics};
 
 /// Simulator configuration.
 #[derive(Debug, Clone)]
@@ -50,6 +73,19 @@ pub struct SimConfig {
     /// Monitor tick period for role switching, seconds.
     pub monitor_interval: f64,
     pub switch_policy: SwitchPolicy,
+    /// Record per-request timelines in the outcome (default). Off, the
+    /// run reports through [`StreamedMetrics`] quantile sketches instead
+    /// and live memory is bounded by in-flight requests — the
+    /// cluster-scale mode (`simulate --no-timelines`).
+    pub record_timelines: bool,
+    /// SLO the online attainment counter measures against when timelines
+    /// are off ([`SimOutcome::slo_attainment`] reads it back).
+    pub streamed_slo: Option<Slo>,
+    /// Equivalence-test knob: pre-push every arrival into the event heap
+    /// at t = 0 (the legacy behavior) instead of streaming them lazily.
+    /// Outcome-identical by construction; the fast-path property tests
+    /// pin it bit-for-bit.
+    pub eager_arrivals: bool,
 }
 
 impl SimConfig {
@@ -61,6 +97,9 @@ impl SimConfig {
             max_batch_tokens: 49_152,
             monitor_interval: 0.25,
             switch_policy: SwitchPolicy::default(),
+            record_timelines: true,
+            streamed_slo: None,
+            eager_arrivals: false,
         }
     }
 }
@@ -133,7 +172,6 @@ struct ReqState {
     shards_total: u32,
     shards_done: u32,
     decoded: u32,
-    rejected: bool,
     /// Encoder-cache hit: encode stage skipped entirely.
     encode_cached: bool,
     /// This request holds a pin on its encoder-cache entry (released at
@@ -147,6 +185,15 @@ struct ReqState {
     mm_tokens_emitted: u64,
     /// MM tokens that have landed at the prefill side.
     mm_tokens_arrived: u64,
+    /// Zero-token re-admission nudges still in the event heap. These are
+    /// the only request events that can outlive a finished request
+    /// (degenerate zero-token shards), so the slab slot's free is
+    /// deferred until they drain — a recycled slot can never be touched
+    /// by a stale event.
+    pending_nudges: u32,
+    /// Finished (metrics recorded) but kept in the arena until
+    /// `pending_nudges` drains; skipped by `into_outcome`.
+    zombie: bool,
     /// Prefill tokens already computed by partial passes.
     prefill_done_tokens: u64,
     /// Tokens claimed by the pass currently in flight.
@@ -184,12 +231,13 @@ impl ReqState {
             shards_total,
             shards_done: 0,
             decoded: 0,
-            rejected: false,
             encode_cached: false,
             cache_pinned: false,
             tiles_emitted: 0,
             mm_tokens_emitted: 0,
             mm_tokens_arrived: 0,
+            pending_nudges: 0,
+            zombie: false,
             prefill_done_tokens: 0,
             prefill_inflight_tokens: 0,
             prefill_inst: None,
@@ -220,7 +268,40 @@ pub struct Simulator<'a> {
     events: EventQueue,
     now: f64,
     insts: Vec<Inst>,
-    reqs: HashMap<RequestId, ReqState>,
+    /// Dense request-state arena; slots recycle at completion so live
+    /// state is bounded by in-flight requests. Event payloads carry slot
+    /// indices (widened to `u64` engine-side, matching `RequestId`).
+    reqs: Slab<ReqState>,
+    /// The workload being replayed (arrivals stream from it lazily).
+    requests: &'a [Request],
+    /// Arrival order when the input is not already sorted by arrival
+    /// time (`None` for the sorted common case — no index copy).
+    arrival_order: Option<Vec<u32>>,
+    /// Cursor into the arrival order: next workload index to push.
+    next_arrival: usize,
+    /// Finished timelines (only populated when `record_timelines`).
+    done_timelines: Vec<RequestTimeline>,
+    /// O(1)-memory metric accumulators (always maintained).
+    streamed: StreamedMetrics,
+    /// Latest finish time seen (the makespan, timeline-free).
+    max_finish: f64,
+    events_processed: u64,
+    admission: AdmissionStats,
+    /// Arrivals (workload indices) parked because every entry-stage
+    /// instance was mid-switch; woken by the restoring `SwitchDone`.
+    entry_parked: Vec<u32>,
+    /// Requests parked at the EP→prefill edge (all prefill instances
+    /// switching); woken by the restoring `SwitchDone`.
+    prefill_parked: Vec<RequestId>,
+    // ---- scratch buffers (allocation-free steady state) ----
+    scratch_insts: Vec<usize>,
+    scratch_order: Vec<usize>,
+    scratch_loads: Vec<f64>,
+    scratch_ids: Vec<RequestId>,
+    scratch_deltas: Vec<(RequestId, u64)>,
+    scratch_active: Vec<RequestId>,
+    /// Recycled batch vectors for `Batcher::form_into` / `in_flight`.
+    vec_pool: Vec<Vec<QueuedRequest>>,
     /// Cluster-wide, cross-request content-addressed encoder cache. Unlike
     /// the per-instance `Inst::mm` caches it survives role switching: its
     /// entries are keyed by content, not by request or instance.
@@ -244,20 +325,19 @@ pub struct Simulator<'a> {
     pd_parked: Vec<RequestId>,
     role_switches: u32,
     rejected: u32,
-    pending_arrivals: HashMap<RequestId, Request>,
     finished_count: usize,
     total_count: usize,
 }
 
 impl<'a> Simulator<'a> {
     /// Run a workload to completion and return the outcome.
-    pub fn run(cfg: &'a SimConfig, requests: &[Request]) -> SimOutcome {
+    pub fn run(cfg: &'a SimConfig, requests: &'a [Request]) -> SimOutcome {
         let mut sim = Simulator::new(cfg, requests);
         sim.main_loop();
         sim.into_outcome()
     }
 
-    fn new(cfg: &'a SimConfig, requests: &[Request]) -> Simulator<'a> {
+    fn new(cfg: &'a SimConfig, requests: &'a [Request]) -> Simulator<'a> {
         let cost = CostModel::new(cfg.spec.clone(), cfg.device);
         let transfer = TransferModel::from_device(&cfg.device);
         let mem = MemoryModel::new(cfg.spec.clone(), cfg.device);
@@ -287,17 +367,28 @@ impl<'a> Simulator<'a> {
             });
         }
 
+        // Arrivals stream lazily from the workload in arrival order. The
+        // sequence numbers 1..=n are reserved so a streamed arrival
+        // carries exactly the seq the legacy eager pre-push (input order)
+        // would have assigned — the heap's pop order, including FIFO
+        // ties, is bit-for-bit identical.
+        let sorted = requests.windows(2).all(|w| w[0].arrival <= w[1].arrival);
+        let arrival_order: Option<Vec<u32>> = if sorted {
+            None
+        } else {
+            let mut order: Vec<u32> = (0..requests.len() as u32).collect();
+            order.sort_by(|&a, &b| {
+                requests[a as usize]
+                    .arrival
+                    .partial_cmp(&requests[b as usize].arrival)
+                    .expect("non-finite arrival time")
+            });
+            Some(order)
+        };
         let mut events = EventQueue::new();
-        let mut pending = HashMap::new();
-        for r in requests {
-            events.push(r.arrival, Event::Arrival(r.id));
-            pending.insert(r.id, r.clone());
-        }
-        if cfg.epd.role_switching {
-            events.push(cfg.monitor_interval, Event::MonitorTick);
-        }
+        events.reserve_seqs(requests.len() as u64);
 
-        Simulator {
+        let mut sim = Simulator {
             cfg,
             cost,
             transfer,
@@ -305,7 +396,28 @@ impl<'a> Simulator<'a> {
             events,
             now: 0.0,
             insts,
-            reqs: HashMap::new(),
+            reqs: Slab::new(),
+            requests,
+            arrival_order,
+            next_arrival: 0,
+            done_timelines: if cfg.record_timelines {
+                Vec::with_capacity(requests.len())
+            } else {
+                Vec::new()
+            },
+            streamed: StreamedMetrics { slo: cfg.streamed_slo, ..StreamedMetrics::default() },
+            max_finish: 0.0,
+            events_processed: 0,
+            admission: AdmissionStats::default(),
+            entry_parked: Vec::new(),
+            prefill_parked: Vec::new(),
+            scratch_insts: Vec::new(),
+            scratch_order: Vec::new(),
+            scratch_loads: Vec::new(),
+            scratch_ids: Vec::new(),
+            scratch_deltas: Vec::new(),
+            scratch_active: Vec::new(),
+            vec_pool: Vec::new(),
             enc_cache: EncoderCache::with_capacity_tokens(
                 cfg.epd.encoder_cache_tokens,
                 cfg.spec.vision.tokens_per_tile.max(1),
@@ -323,15 +435,47 @@ impl<'a> Simulator<'a> {
             pd_parked: Vec::new(),
             role_switches: 0,
             rejected: 0,
-            pending_arrivals: pending,
             finished_count: 0,
             total_count: requests.len(),
+        };
+        if cfg.eager_arrivals {
+            while sim.next_arrival < sim.total_count {
+                sim.push_next_arrival();
+            }
+        } else {
+            sim.push_next_arrival();
         }
+        // Auto-assigned seq = n + 1, exactly the legacy post-arrival slot.
+        if cfg.epd.role_switching {
+            sim.events.push(cfg.monitor_interval, Event::MonitorTick);
+        }
+        sim
+    }
+
+    /// Push the next pending arrival (if any) into the event heap with
+    /// its reserved, input-order sequence number. Called once at
+    /// construction and then each time an arrival pops, so the heap
+    /// holds at most one future arrival at a time.
+    fn push_next_arrival(&mut self) {
+        if self.next_arrival >= self.total_count {
+            return;
+        }
+        let widx = match &self.arrival_order {
+            Some(order) => order[self.next_arrival] as usize,
+            None => self.next_arrival,
+        };
+        self.next_arrival += 1;
+        self.events.push_seq(
+            self.requests[widx].arrival,
+            widx as u64 + 1,
+            Event::Arrival(widx as u32),
+        );
     }
 
     fn main_loop(&mut self) {
         while let Some((t, ev)) = self.events.pop() {
             self.now = t;
+            self.events_processed += 1;
             self.dispatch(ev);
             if self.finished_count >= self.total_count && self.all_idle() {
                 break;
@@ -341,21 +485,27 @@ impl<'a> Simulator<'a> {
 
     fn dispatch(&mut self, ev: Event) {
         match ev {
-            Event::Arrival(id) => self.on_arrival(id),
-            Event::EncodeDone { instance } => self.on_encode_done(instance),
-            Event::EpTransferDone { req } => self.on_ep_transfer_done(req),
+            Event::Arrival(widx) => {
+                // Stream the next arrival in *before* dispatching this
+                // one: anything this dispatch schedules gets a higher
+                // seq, preserving the legacy FIFO tie order.
+                self.push_next_arrival();
+                self.on_arrival(widx);
+            }
+            Event::EncodeDone { instance } => self.on_encode_done(instance as usize),
+            Event::EpTransferDone { req } => self.on_ep_transfer_done(req as u64),
             Event::EpChunkTransferDone { req, tokens } => {
-                self.on_ep_chunk_transfer_done(req, tokens)
+                self.on_ep_chunk_transfer_done(req as u64, tokens)
             }
-            Event::PrefillDone { instance } => self.on_prefill_done(instance),
-            Event::PdTransferDone { req } => self.on_pd_transfer_done(req),
+            Event::PrefillDone { instance } => self.on_prefill_done(instance as usize),
+            Event::PdTransferDone { req } => self.on_pd_transfer_done(req as u64),
             Event::PdChunkTransferDone { req, tokens } => {
-                self.on_pd_chunk_transfer_done(req, tokens)
+                self.on_pd_chunk_transfer_done(req as u64, tokens)
             }
-            Event::DecodeStepDone { instance } => self.on_decode_step_done(instance),
-            Event::FusedStepDone { instance } => self.on_fused_step_done(instance),
+            Event::DecodeStepDone { instance } => self.on_decode_step_done(instance as usize),
+            Event::FusedStepDone { instance } => self.on_fused_step_done(instance as usize),
             Event::MonitorTick => self.on_monitor_tick(),
-            Event::SwitchDone { instance } => self.on_switch_done(instance),
+            Event::SwitchDone { instance } => self.on_switch_done(instance as usize),
         }
     }
 
@@ -370,21 +520,29 @@ impl<'a> Simulator<'a> {
     }
 
     fn into_outcome(self) -> SimOutcome {
-        let mut timelines: Vec<RequestTimeline> = self
-            .reqs
-            .into_values()
-            .filter(|r| !r.rejected)
-            .map(|r| r.tl)
-            .collect();
+        let peak_live = self.reqs.peak_live();
+        let mut timelines = self.done_timelines;
+        if self.cfg.record_timelines {
+            // Unfinished stragglers (terminated runs) report their
+            // partial timelines exactly as before. Zombies — finished
+            // states kept alive for an in-flight nudge — were already
+            // reported at finish time.
+            for st in self.reqs.into_values() {
+                if !st.zombie {
+                    timelines.push(st.tl);
+                }
+            }
+        }
         timelines.sort_by_key(|t| t.id);
-        let makespan = timelines
-            .iter()
-            .filter(|t| t.is_finished())
-            .map(|t| t.finish)
-            .fold(0.0f64, f64::max);
         SimOutcome {
             timelines,
-            makespan,
+            timelines_recorded: self.cfg.record_timelines,
+            submitted: self.total_count,
+            streamed: self.streamed,
+            events_processed: self.events_processed,
+            peak_live_requests: peak_live,
+            admission: self.admission,
+            makespan: self.max_finish,
             role_switches: self.role_switches,
             reallocation: self.planner.stats(),
             busy: self.busy_acc,
@@ -413,22 +571,40 @@ impl<'a> Simulator<'a> {
 
     // ---- instance selection ----
 
-    fn instances_with_kind(&self, kind: WorkKind) -> Vec<usize> {
-        self.insts
-            .iter()
-            .enumerate()
-            .filter(|(_, i)| i.kind == kind && !i.switching)
-            .map(|(idx, _)| idx)
-            .collect()
+    /// Fill `out` with the non-switching instances of `kind`, in index
+    /// order. Fill-style so the hot paths reuse scratch buffers instead
+    /// of allocating a candidate `Vec` per event.
+    fn fill_with_kind(&self, kind: WorkKind, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(
+            self.insts
+                .iter()
+                .enumerate()
+                .filter(|(_, i)| i.kind == kind && !i.switching)
+                .map(|(idx, _)| idx),
+        );
     }
 
-    /// Instances accepting entry-stage work (encode shards in EPD, fused
+    /// Is any non-switching instance of `kind` available?
+    fn has_kind(&self, kind: WorkKind) -> bool {
+        self.insts.iter().any(|i| i.kind == kind && !i.switching)
+    }
+
+    /// The kind accepting entry-stage work (encode shards in EPD, fused
     /// requests in PD/aggregated).
-    fn entry_instances(&self) -> Vec<usize> {
+    fn entry_kind(&self) -> WorkKind {
         match self.cfg.epd.mode {
-            DeploymentMode::Epd => self.instances_with_kind(WorkKind::Encode),
-            DeploymentMode::PdDisagg => self.instances_with_kind(WorkKind::FusedEp),
-            DeploymentMode::Aggregated => self.instances_with_kind(WorkKind::Monolith),
+            DeploymentMode::Epd => WorkKind::Encode,
+            DeploymentMode::PdDisagg => WorkKind::FusedEp,
+            DeploymentMode::Aggregated => WorkKind::Monolith,
+        }
+    }
+
+    /// The kind hosting decode work for this mode.
+    fn decode_kind(&self) -> WorkKind {
+        match self.cfg.epd.mode {
+            DeploymentMode::Aggregated => WorkKind::Monolith,
+            _ => WorkKind::Decode,
         }
     }
 
@@ -437,14 +613,6 @@ impl<'a> Simulator<'a> {
             .iter()
             .copied()
             .min_by(|&a, &b| self.insts[a].load().partial_cmp(&self.insts[b].load()).unwrap())
-    }
-
-    /// Instances currently able to host decode work for this mode.
-    fn decode_instances(&self) -> Vec<usize> {
-        match self.cfg.epd.mode {
-            DeploymentMode::Aggregated => self.instances_with_kind(WorkKind::Monolith),
-            _ => self.instances_with_kind(WorkKind::Decode),
-        }
     }
 
     /// Remaining-decode cost estimate used for decode-queue backlog and
@@ -464,17 +632,27 @@ impl<'a> Simulator<'a> {
 
     // ---- arrival ----
 
-    fn on_arrival(&mut self, id: RequestId) {
-        let req = self.pending_arrivals.remove(&id).expect("unknown arrival");
-        let tl = RequestTimeline::new(id, self.now);
+    fn on_arrival(&mut self, widx: u32) {
+        let req = self.requests[widx as usize].clone();
+        // The timeline's arrival is the request's *true* arrival time.
+        // For the normal path this equals `self.now` bit-for-bit (the
+        // arrival event fires at exactly that time); for an arrival that
+        // parked behind an all-switching window it keeps TTFT honest —
+        // the blocked wait counts against the SLO. (The legacy 10 ms
+        // poll re-stamped the retry time, silently forgiving the wait.)
+        let tl = RequestTimeline::new(req.id, req.arrival);
         let total_tiles = req.total_tiles();
 
-        let entry = self.entry_instances();
+        let mut entry = std::mem::take(&mut self.scratch_insts);
+        self.fill_with_kind(self.entry_kind(), &mut entry);
         if entry.is_empty() {
-            // No instance can take entry work right now (all switching) —
-            // retry shortly rather than dropping.
-            self.pending_arrivals.insert(id, req);
-            self.events.push(self.now + 0.01, Event::Arrival(id));
+            // No instance can take entry work right now (all switching):
+            // park and wake at the `SwitchDone` that restores the role —
+            // event-driven, never polled (the legacy engine re-fired the
+            // arrival every 10 ms).
+            self.scratch_insts = entry;
+            self.admission.parked_arrivals += 1;
+            self.entry_parked.push(widx);
             return;
         }
 
@@ -517,11 +695,12 @@ impl<'a> Simulator<'a> {
                     plan_shards(total_tiles, fanout, self.cfg.epd.irp)
                 };
                 let shards_total = plan.num_shards().max(1);
-                self.reqs.insert(id, ReqState::new(req.clone(), tl, shards_total));
+                let id = self.reqs.insert(ReqState::new(req.clone(), tl, shards_total)) as u64;
 
                 if total_tiles == 0 {
                     // Text-only request: skip encode entirely.
-                    let r = self.reqs.get_mut(&id).unwrap();
+                    self.scratch_insts = entry;
+                    let r = &mut self.reqs[id];
                     r.tl.encode_start = self.now;
                     r.tl.encode_end = self.now;
                     if chunked {
@@ -535,8 +714,9 @@ impl<'a> Simulator<'a> {
                     // Hit: pay the lookup, then go straight to the EP
                     // transfer of the cached tokens — no encode queueing,
                     // no encoder occupancy.
+                    self.scratch_insts = entry;
                     let encode_end = {
-                        let r = self.reqs.get_mut(&id).unwrap();
+                        let r = &mut self.reqs[id];
                         r.encode_cached = true;
                         r.cache_pinned = true;
                         r.shards_total = 0;
@@ -562,13 +742,16 @@ impl<'a> Simulator<'a> {
                                 c,
                                 0,
                             );
-                            self.events
-                                .push(t, Event::EpChunkTransferDone { req: id, tokens: c });
+                            self.events.push(
+                                t,
+                                Event::EpChunkTransferDone { req: id as u32, tokens: c },
+                            );
                         }
                         if total_mm == 0 {
+                            self.reqs[id].pending_nudges += 1;
                             self.events.push(
                                 encode_end,
-                                Event::EpChunkTransferDone { req: id, tokens: 0 },
+                                Event::EpChunkTransferDone { req: id as u32, tokens: 0 },
                             );
                         }
                     } else {
@@ -579,7 +762,7 @@ impl<'a> Simulator<'a> {
                             0,
                         );
                         self.events
-                            .push(encode_end + t, Event::EpTransferDone { req: id });
+                            .push(encode_end + t, Event::EpTransferDone { req: id as u32 });
                     }
                     return;
                 }
@@ -593,21 +776,27 @@ impl<'a> Simulator<'a> {
                 // keeps repeated media on one instance (the assignment a
                 // per-instance encoder cache needs; the modelled cache is
                 // cluster-global, so here it shapes load placement only).
-                let mut order: Vec<usize> = entry.clone();
+                let mut order = std::mem::take(&mut self.scratch_order);
+                order.clear();
+                order.extend_from_slice(&entry);
                 order.sort_by(|&a, &b| {
                     self.insts[a].load().partial_cmp(&self.insts[b].load()).unwrap()
                 });
                 let shard_fanout = plan.num_shards();
                 if shard_fanout == 1 {
                     if let Some(h) = req.media_hash {
-                        let loads: Vec<f64> =
-                            entry.iter().map(|&i| self.insts[i].load()).collect();
+                        let mut loads = std::mem::take(&mut self.scratch_loads);
+                        loads.clear();
+                        loads.extend(entry.iter().map(|&i| self.insts[i].load()));
                         if let Some(pick) = self.encode_assigner.pick_affinity(&entry, &loads, h)
                         {
-                            order = vec![pick];
+                            order.clear();
+                            order.push(pick);
                         }
+                        self.scratch_loads = loads;
                     }
                 }
+                self.scratch_insts = entry;
                 for (k, &tiles) in plan.tiles_per_shard.iter().enumerate() {
                     let inst_idx = order[k % order.len()];
                     let est = self.cost.shard_preprocess_time(
@@ -627,15 +816,17 @@ impl<'a> Simulator<'a> {
                     });
                     self.kick_instance(inst_idx);
                 }
+                self.scratch_order = order;
             }
             DeploymentMode::PdDisagg | DeploymentMode::Aggregated => {
-                self.reqs.insert(id, ReqState::new(req.clone(), tl, 1));
+                let id = self.reqs.insert(ReqState::new(req.clone(), tl, 1)) as u64;
                 if cache_hit {
-                    let r = self.reqs.get_mut(&id).unwrap();
+                    let r = &mut self.reqs[id];
                     r.encode_cached = true;
                     r.cache_pinned = true;
                 }
                 let inst_idx = self.least_loaded(&entry).unwrap();
+                self.scratch_insts = entry;
                 let encode_est = if cache_hit {
                     self.cost.cache_hit_time()
                 } else {
@@ -678,27 +869,50 @@ impl<'a> Simulator<'a> {
         }
     }
 
+    /// Pull a recycled batch vector (scratch-buffer reuse: the hot batch
+    /// paths allocate nothing in steady state).
+    fn take_batch_vec(&mut self) -> Vec<QueuedRequest> {
+        self.vec_pool.pop().unwrap_or_default()
+    }
+
+    /// Return a drained batch vector to the pool.
+    fn recycle_batch_vec(&mut self, mut v: Vec<QueuedRequest>) {
+        if v.capacity() > 0 && self.vec_pool.len() <= self.insts.len() {
+            v.clear();
+            self.vec_pool.push(v);
+        }
+    }
+
+    /// Install a formed batch as the instance's in-flight set, recycling
+    /// whatever vector was there.
+    fn set_in_flight(&mut self, idx: usize, items: Vec<QueuedRequest>) {
+        let old = std::mem::replace(&mut self.insts[idx].in_flight, items);
+        self.recycle_batch_vec(old);
+    }
+
     fn start_encode(&mut self, idx: usize) {
         let max_batch = self.insts[idx].max_batch;
         let batcher = Batcher::new(max_batch, u64::MAX);
-        let batch = {
+        let mut items = self.take_batch_vec();
+        {
             let inst = &mut self.insts[idx];
-            batcher.form(&mut inst.queue, |_| true, |q| q.shard as u64)
-        };
-        if batch.is_empty() {
+            batcher.form_into(&mut inst.queue, |_| true, |q| q.shard as u64, &mut items);
+        }
+        if items.is_empty() {
+            self.recycle_batch_vec(items);
             return;
         }
         let mut duration = 0.0;
-        for item in &batch.items {
+        for item in &items {
             duration += item.est_cost; // preproc + encode per shard
-            let r = self.reqs.get_mut(&item.id).unwrap();
+            let r = &mut self.reqs[item.id];
             if r.tl.encode_start.is_nan() {
                 r.tl.encode_start = self.now;
             }
         }
         // Batched execution pays the per-invocation overhead once; each
         // item's est_cost included it, so refund the duplicates.
-        duration -= self.cost.overheads.encode_step * (batch.len() as f64 - 1.0);
+        duration -= self.cost.overheads.encode_step * (items.len() as f64 - 1.0);
         if self.chunked() {
             // Streamed handoff: each shard's tokens leave the encoder in
             // fixed-size chunks *while it encodes* (the CPU preprocesses
@@ -707,22 +921,21 @@ impl<'a> Simulator<'a> {
             // time). Items run back-to-back within the batch; scale their
             // individual costs so the last emission lands exactly at the
             // batch's EncodeDone.
-            let raw: f64 = batch.items.iter().map(|i| i.est_cost).sum();
+            let raw: f64 = items.iter().map(|i| i.est_cost).sum();
             let scale = if raw > 0.0 { duration / raw } else { 1.0 };
             let mut offset = 0.0;
-            for item in &batch.items {
+            for item in &items {
                 let d = item.est_cost * scale;
                 self.schedule_shard_chunks(item.id, item.shard, idx, self.now + offset, d);
                 offset += d;
             }
         }
-        let jobs = batch.len().max(1) as f64;
-        let inst = &mut self.insts[idx];
-        inst.busy = true;
-        inst.in_flight = batch.items;
+        let jobs = items.len().max(1) as f64;
+        self.insts[idx].busy = true;
+        self.set_in_flight(idx, items);
         self.busy_acc[0] += duration;
         self.profiler.observe_service(Stage::Encode, duration / jobs);
-        self.events.push(self.now + duration, Event::EncodeDone { instance: idx });
+        self.events.push(self.now + duration, Event::EncodeDone { instance: idx as u32 });
     }
 
     /// Schedule the chunk-transfer arrivals for one encode shard of
@@ -740,7 +953,7 @@ impl<'a> Simulator<'a> {
         dur: f64,
     ) {
         let shard_tokens = {
-            let r = self.reqs.get_mut(&id).unwrap();
+            let r = &mut self.reqs[id];
             let total_tiles = r.req.total_tiles() as u64;
             let total_mm = r.req.total_mm_tokens();
             r.tiles_emitted += shard_tiles;
@@ -753,8 +966,9 @@ impl<'a> Simulator<'a> {
             // Degenerate shard (fewer MM tokens than tiles): still nudge
             // admission once the shard's encode completes, so a request
             // whose final shard emits nothing cannot stall.
+            self.reqs[id].pending_nudges += 1;
             self.events
-                .push(start + dur, Event::EpChunkTransferDone { req: id, tokens: 0 });
+                .push(start + dur, Event::EpChunkTransferDone { req: id as u32, tokens: 0 });
             return;
         }
         let chunk = self.cfg.epd.ep_chunk_tokens;
@@ -772,22 +986,22 @@ impl<'a> Simulator<'a> {
                 self.links
                     .schedule(&self.transfer, self.now, emit, Some(src), None, bytes);
             self.events
-                .push(arrive, Event::EpChunkTransferDone { req: id, tokens: c });
+                .push(arrive, Event::EpChunkTransferDone { req: id as u32, tokens: c });
         }
     }
 
     fn on_encode_done(&mut self, idx: usize) {
-        let items = std::mem::take(&mut self.insts[idx].in_flight);
+        let mut items = std::mem::take(&mut self.insts[idx].in_flight);
         self.insts[idx].busy = false;
-        for item in items {
+        for item in items.drain(..) {
             let (all_done, mm_tokens) = {
-                let r = self.reqs.get_mut(&item.id).unwrap();
+                let r = &mut self.reqs[item.id];
                 r.shards_done += 1;
                 (r.shards_done >= r.shards_total, r.req.total_mm_tokens())
             };
             if all_done {
                 let media_hash = {
-                    let r = self.reqs.get_mut(&item.id).unwrap();
+                    let r = &mut self.reqs[item.id];
                     r.tl.encode_end = self.now;
                     r.req.media_hash
                 };
@@ -812,11 +1026,11 @@ impl<'a> Simulator<'a> {
                         // then would leak (no later event unpins): release
                         // immediately instead.
                         let already_confirmed = self.chunked()
-                            && self.reqs[&item.id].mm_tokens_arrived >= mm_tokens;
+                            && self.reqs[item.id].mm_tokens_arrived >= mm_tokens;
                         if inserted && already_confirmed {
                             self.enc_cache.unpin(h);
                         } else {
-                            self.reqs.get_mut(&item.id).unwrap().cache_pinned = inserted;
+                            self.reqs[item.id].cache_pinned = inserted;
                         }
                     }
                 }
@@ -834,10 +1048,11 @@ impl<'a> Simulator<'a> {
                     let arrive =
                         self.links
                             .schedule(&self.transfer, self.now, self.now, Some(idx), None, bytes);
-                    self.events.push(arrive, Event::EpTransferDone { req: item.id });
+                    self.events.push(arrive, Event::EpTransferDone { req: item.id as u32 });
                 }
             }
         }
+        self.recycle_batch_vec(items);
         self.kick_instance(idx);
     }
 
@@ -849,14 +1064,13 @@ impl<'a> Simulator<'a> {
     /// EP transfer confirmed: release this request's pin on its encoder-
     /// cache entry (the entry itself stays cached — that is the whole
     /// point). This is the *single* release point for the EP payload, and
-    /// it is idempotent: the monolithic path can re-enter via the retry
-    /// re-push in `enqueue_prefill`, the chunked path via zero-token
-    /// re-admission nudges, and a request whose cache admission was
-    /// declined mid-eviction never pinned anything — `cache_pinned` gates
-    /// all three so nothing is released twice or released unowned.
+    /// it is idempotent: the chunked path can re-enter via zero-token
+    /// shard-tail nudges, and a request whose cache admission was
+    /// declined mid-eviction never pinned anything — `cache_pinned`
+    /// gates both so nothing is released twice or released unowned.
     fn confirm_ep_transfer(&mut self, id: RequestId) {
         let unpin = {
-            let r = self.reqs.get_mut(&id).unwrap();
+            let r = &mut self.reqs[id];
             let hash = r.req.media_hash;
             if r.cache_pinned {
                 r.cache_pinned = false;
@@ -875,8 +1089,21 @@ impl<'a> Simulator<'a> {
     /// transfer once the final chunk lands, and (re-)admits the request to
     /// its prefill instance if new tokens are computable.
     fn on_ep_chunk_transfer_done(&mut self, id: RequestId, tokens: u64) {
+        if tokens == 0 {
+            // Nudge bookkeeping: a request can finish (via another
+            // shard's tokens) while a degenerate shard's nudge is still
+            // in flight; its slot was kept alive for exactly this event.
+            let r = &mut self.reqs[id];
+            r.pending_nudges -= 1;
+            if r.zombie {
+                if r.pending_nudges == 0 {
+                    self.reqs.remove(id);
+                }
+                return;
+            }
+        }
         let confirm = {
-            let r = self.reqs.get_mut(&id).unwrap();
+            let r = &mut self.reqs[id];
             if tokens > 0 {
                 r.mm_tokens_arrived += tokens;
                 debug_assert!(r.mm_tokens_arrived <= r.req.total_mm_tokens());
@@ -895,11 +1122,11 @@ impl<'a> Simulator<'a> {
     /// Admit a streamed request to a prefill queue when it has arrived
     /// tokens that no pass has claimed yet. Passes stick to one instance;
     /// if that instance switched roles the request re-picks, and if every
-    /// prefill instance is mid-switch the admission retries shortly via a
-    /// zero-token chunk event.
+    /// prefill instance is mid-switch the request parks for the
+    /// `SwitchDone` restoring the role (event-driven, never polled).
     fn maybe_enqueue_prefill_chunked(&mut self, id: RequestId) {
         let est = {
-            let r = &self.reqs[&id];
+            let r = &self.reqs[id];
             if r.prefill_queued {
                 return;
             }
@@ -915,18 +1142,20 @@ impl<'a> Simulator<'a> {
             self.cost
                 .prefill_extend_time(r.prefill_done_tokens, avail - r.prefill_done_tokens)
         };
-        let prefills = self.instances_with_kind(WorkKind::Prefill);
+        let mut prefills = std::mem::take(&mut self.scratch_insts);
+        self.fill_with_kind(WorkKind::Prefill, &mut prefills);
         if prefills.is_empty() {
-            self.events
-                .push(self.now + 0.01, Event::EpChunkTransferDone { req: id, tokens: 0 });
+            self.scratch_insts = prefills;
+            self.prefill_park(id);
             return;
         }
-        let idx = match self.reqs[&id].prefill_inst {
+        let idx = match self.reqs[id].prefill_inst {
             Some(i) if prefills.contains(&i) => i,
             _ => self.least_loaded(&prefills).unwrap(),
         };
+        self.scratch_insts = prefills;
         {
-            let r = self.reqs.get_mut(&id).unwrap();
+            let r = &mut self.reqs[id];
             r.prefill_inst = Some(idx);
             r.prefill_queued = true;
         }
@@ -941,17 +1170,20 @@ impl<'a> Simulator<'a> {
     }
 
     fn enqueue_prefill(&mut self, id: RequestId) {
-        let prefills = self.instances_with_kind(WorkKind::Prefill);
+        let mut prefills = std::mem::take(&mut self.scratch_insts);
+        self.fill_with_kind(WorkKind::Prefill, &mut prefills);
         if prefills.is_empty() {
-            // All prefill instances switching — retry.
-            self.events.push(self.now + 0.01, Event::EpTransferDone { req: id });
+            // All prefill instances switching — park until one returns.
+            self.scratch_insts = prefills;
+            self.prefill_park(id);
             return;
         }
         let est = {
-            let r = &self.reqs[&id];
+            let r = &self.reqs[id];
             self.cost.prefill_time(r.req.prefill_tokens())
         };
         let idx = self.least_loaded(&prefills).unwrap();
+        self.scratch_insts = prefills;
         self.insts[idx].queue.push(QueuedRequest {
             id,
             shard: 0,
@@ -962,6 +1194,45 @@ impl<'a> Simulator<'a> {
         self.kick_instance(idx);
     }
 
+    /// Park a request at the EP→prefill edge until an instance (re)gains
+    /// the prefill role. Idempotent — a streamed request can hit this
+    /// from several in-flight chunk arrivals.
+    fn prefill_park(&mut self, id: RequestId) {
+        if !self.prefill_parked.contains(&id) {
+            self.admission.parked_prefill += 1;
+            self.prefill_parked.push(id);
+        }
+    }
+
+    /// Re-attempt prefill admission for every parked request (a request
+    /// that still cannot be placed re-parks).
+    fn wake_prefill_parked(&mut self) {
+        if self.prefill_parked.is_empty() {
+            return;
+        }
+        let parked = std::mem::take(&mut self.prefill_parked);
+        if self.chunked() {
+            for id in parked {
+                self.maybe_enqueue_prefill_chunked(id);
+            }
+        } else {
+            for id in parked {
+                self.enqueue_prefill(id);
+            }
+        }
+    }
+
+    /// Replay parked arrivals once an entry-capable instance returns.
+    fn wake_entry_parked(&mut self) {
+        if self.entry_parked.is_empty() {
+            return;
+        }
+        let parked = std::mem::take(&mut self.entry_parked);
+        for widx in parked {
+            self.on_arrival(widx);
+        }
+    }
+
     fn start_prefill(&mut self, idx: usize) {
         if self.chunked() {
             self.start_prefill_chunked(idx);
@@ -969,43 +1240,44 @@ impl<'a> Simulator<'a> {
         }
         let max_batch = self.insts[idx].max_batch;
         let batcher = Batcher::new(max_batch, self.cfg.max_batch_tokens);
-        let reqs = &self.reqs;
-        let batch = {
+        let mut items = self.take_batch_vec();
+        {
+            let reqs = &self.reqs;
             let inst = &mut self.insts[idx];
-            batcher.form(
+            batcher.form_into(
                 &mut inst.queue,
                 |_| true,
-                |q| reqs[&q.id].req.prefill_tokens(),
-            )
-        };
-        if batch.is_empty() {
+                |q| reqs[q.id].req.prefill_tokens(),
+                &mut items,
+            );
+        }
+        if items.is_empty() {
+            self.recycle_batch_vec(items);
             return;
         }
-        let total_tokens: u64 = batch
-            .items
-            .iter()
-            .map(|q| self.reqs[&q.id].req.prefill_tokens())
-            .sum();
-        for item in &batch.items {
-            let r = self.reqs.get_mut(&item.id).unwrap();
+        let total_tokens: u64 = items.iter().map(|q| self.reqs[q.id].req.prefill_tokens()).sum();
+        for item in &items {
+            let r = &mut self.reqs[item.id];
             r.tl.prefill_start = self.now;
         }
         let duration = self.cost.prefill_time(total_tokens)
-            + self.cost.overheads.prefill_per_request * batch.items.len() as f64;
-        let ids: Vec<RequestId> = batch.items.iter().map(|q| q.id).collect();
-        let inst = &mut self.insts[idx];
-        inst.busy = true;
-        inst.in_flight = batch.items;
+            + self.cost.overheads.prefill_per_request * items.len() as f64;
+        let jobs = items.len().max(1) as f64;
+        let mut ids = std::mem::take(&mut self.scratch_ids);
+        ids.clear();
+        ids.extend(items.iter().map(|q| q.id));
+        self.insts[idx].busy = true;
+        self.set_in_flight(idx, items);
         self.busy_acc[1] += duration;
-        self.profiler
-            .observe_service(Stage::Prefill, duration / ids.len().max(1) as f64);
-        self.events.push(self.now + duration, Event::PrefillDone { instance: idx });
+        self.profiler.observe_service(Stage::Prefill, duration / jobs);
+        self.events.push(self.now + duration, Event::PrefillDone { instance: idx as u32 });
         if self.pd_streamed() {
-            for id in ids {
-                let delta = self.reqs[&id].req.prefill_tokens();
+            for id in ids.drain(..) {
+                let delta = self.reqs[id].req.prefill_tokens();
                 self.pd_stream_begin(id, idx, self.now, duration, delta);
             }
         }
+        self.scratch_ids = ids;
     }
 
     /// Streamed-prefill batch formation: each queue entry is a *partial*
@@ -1016,26 +1288,30 @@ impl<'a> Simulator<'a> {
     fn start_prefill_chunked(&mut self, idx: usize) {
         let max_batch = self.insts[idx].max_batch;
         let batcher = Batcher::new(max_batch, self.cfg.max_batch_tokens);
-        let reqs = &self.reqs;
-        let batch = {
+        let mut items = self.take_batch_vec();
+        {
+            let reqs = &self.reqs;
             let inst = &mut self.insts[idx];
-            batcher.form(
+            batcher.form_into(
                 &mut inst.queue,
                 |_| true,
                 |q| {
-                    let r = &reqs[&q.id];
+                    let r = &reqs[q.id];
                     (r.available_prefill_tokens() - r.prefill_done_tokens).max(1)
                 },
-            )
-        };
-        if batch.is_empty() {
+                &mut items,
+            );
+        }
+        if items.is_empty() {
+            self.recycle_batch_vec(items);
             return;
         }
         let mut duration = 0.0;
-        let mut deltas: Vec<(RequestId, u64)> = Vec::with_capacity(batch.items.len());
-        for item in &batch.items {
+        let mut deltas = std::mem::take(&mut self.scratch_deltas);
+        deltas.clear();
+        for item in &items {
             let (done, delta) = {
-                let r = self.reqs.get_mut(&item.id).unwrap();
+                let r = &mut self.reqs[item.id];
                 let avail = r.available_prefill_tokens();
                 let delta = avail - r.prefill_done_tokens;
                 r.prefill_inflight_tokens = delta;
@@ -1049,29 +1325,29 @@ impl<'a> Simulator<'a> {
             self.ep_overlap.prefill_passes += 1;
             deltas.push((item.id, delta));
         }
-        let inst = &mut self.insts[idx];
-        inst.busy = true;
-        inst.in_flight = batch.items;
+        let jobs = deltas.len().max(1) as f64;
+        self.insts[idx].busy = true;
+        self.set_in_flight(idx, items);
         self.busy_acc[1] += duration;
-        self.profiler
-            .observe_service(Stage::Prefill, duration / deltas.len().max(1) as f64);
-        self.events.push(self.now + duration, Event::PrefillDone { instance: idx });
+        self.profiler.observe_service(Stage::Prefill, duration / jobs);
+        self.events.push(self.now + duration, Event::PrefillDone { instance: idx as u32 });
         if self.pd_streamed() {
             // Each pass's freshly computed KV streams out layer-group by
             // layer-group while later passes (and later layers) compute.
-            for (id, delta) in deltas {
+            for (id, delta) in deltas.drain(..) {
                 self.pd_stream_begin(id, idx, self.now, duration, delta);
             }
         }
+        self.scratch_deltas = deltas;
     }
 
     fn on_prefill_done(&mut self, idx: usize) {
-        let items = std::mem::take(&mut self.insts[idx].in_flight);
+        let mut items = std::mem::take(&mut self.insts[idx].in_flight);
         self.insts[idx].busy = false;
         if self.chunked() {
-            for item in items {
+            for item in items.drain(..) {
                 let finished = {
-                    let r = self.reqs.get_mut(&item.id).unwrap();
+                    let r = &mut self.reqs[item.id];
                     r.prefill_done_tokens += r.prefill_inflight_tokens;
                     r.prefill_inflight_tokens = 0;
                     r.prefill_queued = false;
@@ -1085,10 +1361,11 @@ impl<'a> Simulator<'a> {
                 }
             }
         } else {
-            for item in items {
+            for item in items.drain(..) {
                 self.finish_prefill_for(item.id, idx);
             }
         }
+        self.recycle_batch_vec(items);
         self.kick_instance(idx);
     }
 
@@ -1097,7 +1374,7 @@ impl<'a> Simulator<'a> {
     fn finish_prefill_for(&mut self, id: RequestId, src: usize) {
         let chunked = self.chunked();
         let (out_tokens, kv_tokens) = {
-            let r = self.reqs.get_mut(&id).unwrap();
+            let r = &mut self.reqs[id];
             r.tl.prefill_end = self.now;
             r.tl.first_token = self.now;
             (r.req.output_tokens, r.req.prefill_tokens())
@@ -1105,7 +1382,7 @@ impl<'a> Simulator<'a> {
         if chunked {
             // TTFT-overlap accounting: prefill compute that ran while this
             // request's media was still encoding.
-            let r = &self.reqs[&id];
+            let r = &self.reqs[id];
             if !r.tl.encode_end.is_nan()
                 && !r.tl.prefill_start.is_nan()
                 && r.tl.prefill_start < r.tl.encode_end
@@ -1120,10 +1397,10 @@ impl<'a> Simulator<'a> {
         match self.cfg.epd.mode {
             DeploymentMode::Aggregated => {
                 // Decode continues on the same instance — no transfer.
-                self.events.push(self.now, Event::PdTransferDone { req: id });
+                self.events.push(self.now, Event::PdTransferDone { req: id as u32 });
             }
             _ => {
-                if self.reqs[&id].pd_target.is_some() && !self.reqs[&id].pd_fallback {
+                if self.reqs[id].pd_target.is_some() && !self.reqs[id].pd_fallback {
                     // Layer-wise streaming: every group's transfer was
                     // scheduled as its layers completed; only the tail
                     // group remains in flight, and its arrival admits
@@ -1142,7 +1419,7 @@ impl<'a> Simulator<'a> {
                 let arrive =
                     self.links
                         .schedule(&self.transfer, self.now, self.now, Some(src), None, bytes);
-                self.events.push(arrive, Event::PdTransferDone { req: id });
+                self.events.push(arrive, Event::PdTransferDone { req: id as u32 });
             }
         }
     }
@@ -1157,29 +1434,42 @@ impl<'a> Simulator<'a> {
     /// is woken by the `SwitchDone` that restores the role — event-driven,
     /// never polled.
     fn pd_admit(&mut self, id: RequestId) {
-        let decoders = self.decode_instances();
+        let mut decoders = std::mem::take(&mut self.scratch_insts);
+        self.fill_with_kind(self.decode_kind(), &mut decoders);
         if decoders.is_empty() {
+            self.scratch_insts = decoders;
             self.pd_park(id);
             return;
         }
         // Reject a request whose context can never fit this cluster's KV.
-        let ctx = self.reqs[&id].req.prefill_tokens();
+        let ctx = self.reqs[id].req.prefill_tokens();
         let fits_somewhere = decoders.iter().any(|&d| {
             let pool = self.insts[d].kv.pool();
             pool.blocks_for_tokens(ctx + 1) <= pool.num_blocks()
         });
         if !fits_somewhere {
-            let r = self.reqs.get_mut(&id).unwrap();
-            r.rejected = true;
+            // Rejected: the slot frees (no timeline is reported for
+            // rejected requests, exactly as before) — deferred only if a
+            // degenerate zero-token nudge is still in flight.
+            self.scratch_insts = decoders;
             self.rejected += 1;
             self.finished_count += 1;
+            let defer = {
+                let r = &mut self.reqs[id];
+                r.zombie = true;
+                r.pending_nudges > 0
+            };
+            if !defer {
+                self.reqs.remove(id);
+            }
             return;
         }
         // Estimated cost = full remaining decode time amortized by the
         // chosen decoder's batch (drives least-loaded assignment and the
         // §3.2.4 monitor's backlog signal).
-        let out = self.reqs[&id].req.output_tokens;
+        let out = self.reqs[id].req.output_tokens;
         let idx = self.least_loaded(&decoders).unwrap();
+        self.scratch_insts = decoders;
         let est = self.decode_est_cost(idx, out, ctx);
         self.insts[idx].decode_queue.push(QueuedRequest {
             id,
@@ -1196,7 +1486,7 @@ impl<'a> Simulator<'a> {
     /// handoff collapses; measured identically in both modes so the A/B
     /// is apples-to-apples).
     fn account_decode_join(&mut self, id: RequestId) {
-        let prefill_end = self.reqs[&id].tl.prefill_end;
+        let prefill_end = self.reqs[id].tl.prefill_end;
         if !prefill_end.is_nan() {
             self.pd_overlap.handoff_seconds += self.now - prefill_end;
             self.pd_overlap.handoff_count += 1;
@@ -1224,7 +1514,7 @@ impl<'a> Simulator<'a> {
     /// computing (group g at the g/G point of the pass).
     fn pd_stream_begin(&mut self, id: RequestId, src: usize, start: f64, dur: f64, delta_kv: u64) {
         let (ctx, out, first) = {
-            let r = &self.reqs[&id];
+            let r = &self.reqs[id];
             (
                 r.req.prefill_tokens(),
                 r.req.output_tokens,
@@ -1233,19 +1523,22 @@ impl<'a> Simulator<'a> {
         };
         // Single-token requests never decode; zero-context requests have
         // no KV to move — both keep the monolithic path.
-        if out <= 1 || ctx == 0 || self.reqs[&id].pd_fallback {
+        if out <= 1 || ctx == 0 || self.reqs[id].pd_fallback {
             return;
         }
         if first {
-            let mut cands = self.decode_instances();
+            let mut cands = std::mem::take(&mut self.scratch_insts);
+            self.fill_with_kind(self.decode_kind(), &mut cands);
             cands.retain(|&d| self.insts[d].kv.can_admit(ctx + 1));
-            match self.least_loaded(&cands) {
+            let pick = self.least_loaded(&cands);
+            self.scratch_insts = cands;
+            match pick {
                 Some(t) => {
                     let ok = self.insts[t].kv.admit(id, ctx + 1);
                     debug_assert!(ok);
                     let est = self.decode_est_cost(t, out, ctx);
                     self.insts[t].reserved_cost += est;
-                    let r = self.reqs.get_mut(&id).unwrap();
+                    let r = &mut self.reqs[id];
                     r.pd_target = Some(t);
                     r.pd_reserved = true;
                     self.pd_overlap.streamed_requests += 1;
@@ -1253,7 +1546,7 @@ impl<'a> Simulator<'a> {
                 None => {
                     // No decoder can host this context right now: fall
                     // back to the monolithic post-prefill handoff.
-                    self.reqs.get_mut(&id).unwrap().pd_fallback = true;
+                    self.reqs[id].pd_fallback = true;
                     self.pd_overlap.fallbacks += 1;
                     return;
                 }
@@ -1262,7 +1555,7 @@ impl<'a> Simulator<'a> {
         if delta_kv == 0 {
             return;
         }
-        let target = self.reqs[&id].pd_target.expect("streaming without a target");
+        let target = self.reqs[id].pd_target.expect("streaming without a target");
         // Exact cumulative split of this pass's KV across the layer
         // groups, so streamed bytes always sum to the monolithic payload.
         let groups = self.cfg.epd.pd_layer_groups as u64;
@@ -1282,10 +1575,10 @@ impl<'a> Simulator<'a> {
                 self.links
                     .schedule(&self.transfer, start, ready, Some(src), Some(target), bytes);
             self.events
-                .push(arrive, Event::PdChunkTransferDone { req: id, tokens });
+                .push(arrive, Event::PdChunkTransferDone { req: id as u32, tokens });
         }
         {
-            let r = self.reqs.get_mut(&id).unwrap();
+            let r = &mut self.reqs[id];
             r.pd_src = Some(src);
             r.pd_kv_sent += delta_kv;
         }
@@ -1294,7 +1587,7 @@ impl<'a> Simulator<'a> {
     /// Is the request's chosen decode target still able to receive its
     /// stream (serving decode, not mid-switch, reservation intact)?
     fn pd_target_valid(&self, id: RequestId) -> bool {
-        let r = &self.reqs[&id];
+        let r = &self.reqs[id];
         match r.pd_target {
             Some(t) => {
                 r.pd_reserved
@@ -1313,7 +1606,7 @@ impl<'a> Simulator<'a> {
     /// when no decoder can host the request right now — it parks.
     fn pd_retarget(&mut self, id: RequestId) -> bool {
         let (ctx, out, old, src) = {
-            let r = &self.reqs[&id];
+            let r = &self.reqs[id];
             (r.req.prefill_tokens(), r.req.output_tokens, r.pd_target, r.pd_src)
         };
         if let Some(t) = old {
@@ -1326,10 +1619,13 @@ impl<'a> Simulator<'a> {
                 self.insts[t].reserved_cost -= est;
             }
         }
-        let mut cands = self.decode_instances();
+        let mut cands = std::mem::take(&mut self.scratch_insts);
+        self.fill_with_kind(self.decode_kind(), &mut cands);
         cands.retain(|&d| self.insts[d].kv.can_admit(ctx + 1));
-        let Some(t) = self.least_loaded(&cands) else {
-            self.reqs.get_mut(&id).unwrap().pd_reserved = false;
+        let pick = self.least_loaded(&cands);
+        self.scratch_insts = cands;
+        let Some(t) = pick else {
+            self.reqs[id].pd_reserved = false;
             self.pd_park(id);
             return false;
         };
@@ -1345,7 +1641,7 @@ impl<'a> Simulator<'a> {
             self.pd_parked.remove(pos);
         }
         let resend = {
-            let r = self.reqs.get_mut(&id).unwrap();
+            let r = &mut self.reqs[id];
             r.pd_target = Some(t);
             r.pd_reserved = true;
             std::mem::take(&mut r.pd_kv_arrived)
@@ -1363,30 +1659,30 @@ impl<'a> Simulator<'a> {
                 self.links
                     .schedule(&self.transfer, self.now, self.now, src, Some(t), bytes);
             self.events
-                .push(arrive, Event::PdChunkTransferDone { req: id, tokens: resend });
+                .push(arrive, Event::PdChunkTransferDone { req: id as u32, tokens: resend });
         }
         true
     }
 
     /// A streamed layer group landed at the decode side.
     fn on_pd_chunk_transfer_done(&mut self, id: RequestId, tokens: u64) {
-        debug_assert!(!self.reqs[&id].pd_joined, "no group can land after the join");
+        debug_assert!(!self.reqs[id].pd_joined, "no group can land after the join");
         self.pd_overlap.chunks += 1;
         if !self.pd_target_valid(id) && !self.pd_retarget(id) {
             // Parked (no decoder anywhere): bank the landed tokens — the
             // wake-time re-target re-sends them to the fresh target.
-            self.reqs.get_mut(&id).unwrap().pd_kv_arrived += tokens;
+            self.reqs[id].pd_kv_arrived += tokens;
             return;
         }
         let done = {
-            let r = self.reqs.get_mut(&id).unwrap();
+            let r = &mut self.reqs[id];
             r.pd_kv_arrived += tokens;
             debug_assert!(r.pd_kv_arrived <= r.pd_kv_sent, "arrivals cannot outrun emissions");
             r.pd_kv_arrived >= r.req.prefill_tokens()
         };
         if done {
             debug_assert!(
-                !self.reqs[&id].tl.prefill_end.is_nan(),
+                !self.reqs[id].tl.prefill_end.is_nan(),
                 "tail group cannot land before its prefill pass ends"
             );
             self.pd_join(id);
@@ -1400,7 +1696,7 @@ impl<'a> Simulator<'a> {
     /// waiting for those very KV blocks.
     fn pd_join(&mut self, id: RequestId) {
         let t = {
-            let r = self.reqs.get_mut(&id).unwrap();
+            let r = &mut self.reqs[id];
             r.pd_joined = true;
             r.pd_target.expect("join without a target")
         };
@@ -1420,7 +1716,7 @@ impl<'a> Simulator<'a> {
             // The reservation's load contribution ends here — the request
             // now counts through `active` like any other sequence.
             let (out, ctx) = {
-                let r = &self.reqs[&id];
+                let r = &self.reqs[id];
                 (r.req.output_tokens, r.req.prefill_tokens())
             };
             let est = self.decode_est_cost(idx, out, ctx);
@@ -1435,7 +1731,7 @@ impl<'a> Simulator<'a> {
             }
             let Some(peek) = self.insts[idx].decode_queue.peek().cloned() else { break };
             let ctx = {
-                let r = &self.reqs[&peek.id];
+                let r = &self.reqs[peek.id];
                 r.req.prefill_tokens() + r.decoded as u64
             };
             let admitted = self.insts[idx].kv.can_admit(ctx + 1);
@@ -1456,7 +1752,7 @@ impl<'a> Simulator<'a> {
             .active
             .iter()
             .map(|id| {
-                let r = &self.reqs[id];
+                let r = &self.reqs[*id];
                 r.req.prefill_tokens() + r.decoded as u64
             })
             .sum::<u64>()
@@ -1465,16 +1761,19 @@ impl<'a> Simulator<'a> {
         self.insts[idx].busy = true;
         self.busy_acc[2] += duration;
         self.profiler.observe_service(Stage::Decode, duration);
-        self.events.push(self.now + duration, Event::DecodeStepDone { instance: idx });
+        self.events.push(self.now + duration, Event::DecodeStepDone { instance: idx as u32 });
     }
 
     fn on_decode_step_done(&mut self, idx: usize) {
         self.insts[idx].busy = false;
-        let active = std::mem::take(&mut self.insts[idx].active);
-        let mut still_active = Vec::with_capacity(active.len());
-        for id in active {
+        // Two recycled vectors swap roles each step: the old active set
+        // drains into the survivor buffer, allocation-free.
+        let mut active = std::mem::take(&mut self.insts[idx].active);
+        let mut keep = std::mem::take(&mut self.scratch_active);
+        keep.clear();
+        for id in active.drain(..) {
             let done = {
-                let r = self.reqs.get_mut(&id).unwrap();
+                let r = &mut self.reqs[id];
                 r.decoded += 1;
                 // First token came from prefill; decode produces the rest.
                 r.decoded + 1 >= r.req.output_tokens
@@ -1484,10 +1783,11 @@ impl<'a> Simulator<'a> {
                 self.insts[idx].kv.release(id);
                 self.finish_request(id);
             } else {
-                still_active.push(id);
+                keep.push(id);
             }
         }
-        self.insts[idx].active = still_active;
+        self.insts[idx].active = keep;
+        self.scratch_active = active;
         self.kick_instance(idx);
     }
 
@@ -1497,24 +1797,27 @@ impl<'a> Simulator<'a> {
         // the configured max_batch.
         let max_batch = self.insts[idx].max_batch;
         let batcher = Batcher::new(max_batch, self.cfg.max_batch_tokens);
-        let reqs = &self.reqs;
-        let batch = {
+        let mut items = self.take_batch_vec();
+        {
+            let reqs = &self.reqs;
             let inst = &mut self.insts[idx];
-            batcher.form(
+            batcher.form_into(
                 &mut inst.queue,
                 |_| true,
-                |q| reqs[&q.id].req.prefill_tokens(),
-            )
-        };
-        if batch.is_empty() {
+                |q| reqs[q.id].req.prefill_tokens(),
+                &mut items,
+            );
+        }
+        if items.is_empty() {
+            self.recycle_batch_vec(items);
             return;
         }
         let chunk = self.cfg.epd.ep_chunk_tokens;
         let mut duration = 0.0;
         let mut overlappable = 0.0;
         let mut total_tokens = 0u64;
-        for item in &batch.items {
-            let r = self.reqs.get_mut(&item.id).unwrap();
+        for item in &items {
+            let r = &mut self.reqs[item.id];
             if r.tl.encode_start.is_nan() {
                 r.tl.encode_start = self.now;
             }
@@ -1540,47 +1843,48 @@ impl<'a> Simulator<'a> {
             }
             total_tokens += r.req.prefill_tokens();
         }
-        let tiles: u32 = batch
-            .items
+        let tiles: u32 = items
             .iter()
-            .filter(|q| !self.reqs[&q.id].encode_cached)
-            .map(|q| self.reqs[&q.id].req.total_tiles())
+            .filter(|q| !self.reqs[q.id].encode_cached)
+            .map(|q| self.reqs[q.id].req.total_tiles())
             .sum();
         let device = self.cost.encode_time(tiles)
             + self.cost.prefill_time(total_tokens)
-            + self.cost.overheads.prefill_per_request * batch.items.len() as f64;
+            + self.cost.overheads.prefill_per_request * items.len() as f64;
         if chunk > 0 {
             self.ep_overlap.overlap_seconds += overlappable.min(device);
             duration += overlappable.max(device);
         } else {
             duration += device;
         }
-        let ids: Vec<RequestId> = batch.items.iter().map(|q| q.id).collect();
-        let inst = &mut self.insts[idx];
-        inst.busy = true;
-        inst.in_flight = batch.items;
+        let jobs = items.len().max(1) as f64;
+        let mut ids = std::mem::take(&mut self.scratch_ids);
+        ids.clear();
+        ids.extend(items.iter().map(|q| q.id));
+        self.insts[idx].busy = true;
+        self.set_in_flight(idx, items);
         self.busy_acc[0] += duration; // fused work accounted to E+P jointly
-        self.profiler
-            .observe_service(Stage::Encode, duration / ids.len().max(1) as f64);
-        self.events.push(self.now + duration, Event::FusedStepDone { instance: idx });
+        self.profiler.observe_service(Stage::Encode, duration / jobs);
+        self.events.push(self.now + duration, Event::FusedStepDone { instance: idx as u32 });
         if self.pd_streamed() {
             // DistServe-style PD disaggregation streams the KV out of the
             // fused encode+prefill step the same way (groups spread over
             // the whole fused window — the KV-producing prefill portion
             // is not separable in this model).
-            for id in ids {
-                let delta = self.reqs[&id].req.prefill_tokens();
+            for id in ids.drain(..) {
+                let delta = self.reqs[id].req.prefill_tokens();
                 self.pd_stream_begin(id, idx, self.now, duration, delta);
             }
         }
+        self.scratch_ids = ids;
     }
 
     fn on_fused_step_done(&mut self, idx: usize) {
-        let items = std::mem::take(&mut self.insts[idx].in_flight);
+        let mut items = std::mem::take(&mut self.insts[idx].in_flight);
         self.insts[idx].busy = false;
-        for item in items {
+        for item in items.drain(..) {
             let (media_hash, was_pinned, mm_tokens) = {
-                let r = self.reqs.get_mut(&item.id).unwrap();
+                let r = &mut self.reqs[item.id];
                 r.tl.encode_end = self.now;
                 r.tl.prefill_start = self.now;
                 let pinned = r.cache_pinned;
@@ -1599,14 +1903,50 @@ impl<'a> Simulator<'a> {
             }
             self.finish_prefill_for(item.id, idx);
         }
+        self.recycle_batch_vec(items);
         self.kick_instance(idx);
     }
 
+    /// Complete a request: stamp its timeline, fold it into the
+    /// streaming metrics, and free its arena slot — live state shrinks
+    /// the moment a request leaves the system. The free is deferred (the
+    /// state "zombifies") only while zero-token nudge events are still
+    /// in the heap, so no stale event can ever touch a recycled slot.
     fn finish_request(&mut self, id: RequestId) {
-        let r = self.reqs.get_mut(&id).unwrap();
-        r.tl.finish = self.now;
-        r.tl.output_tokens = r.req.output_tokens;
         self.finished_count += 1;
+        if self.now > self.max_finish {
+            self.max_finish = self.now;
+        }
+        let (tl, defer) = {
+            let r = &mut self.reqs[id];
+            r.tl.finish = self.now;
+            r.tl.output_tokens = r.req.output_tokens;
+            r.zombie = true;
+            (r.tl.clone(), r.pending_nudges > 0)
+        };
+        let (ttft, tpot, latency) = (tl.ttft(), tl.tpot(), tl.latency());
+        self.streamed.ttft.record(ttft);
+        self.streamed.tpot.record(tpot);
+        self.streamed.latency.record(latency);
+        self.streamed.finished += 1;
+        if let Some(slo) = self.cfg.streamed_slo {
+            if slo.attained(ttft, tpot) {
+                self.streamed.slo_attained += 1;
+            }
+        }
+        if self.cfg.record_timelines {
+            self.done_timelines.push(tl);
+        }
+        // A rescued-then-finished request must never linger in the parked
+        // list: its slot is free for reuse the moment it completes.
+        if !self.pd_parked.is_empty() {
+            if let Some(pos) = self.pd_parked.iter().position(|&p| p == id) {
+                self.pd_parked.remove(pos);
+            }
+        }
+        if !defer {
+            self.reqs.remove(id);
+        }
     }
 
     // ---- online reallocation (profiler → planner → executor) ----
@@ -1632,7 +1972,7 @@ impl<'a> Simulator<'a> {
                 .active
                 .iter()
                 .map(|id| {
-                    let r = &self.reqs[id];
+                    let r = &self.reqs[*id];
                     r.req.output_tokens.saturating_sub(1 + r.decoded)
                 })
                 .max()
@@ -1752,11 +2092,11 @@ impl<'a> Simulator<'a> {
         // instance can't be re-picked.
         let evacuated = std::mem::take(&mut self.insts[idx].reserved_ready);
         for id in evacuated {
-            self.reqs.get_mut(&id).unwrap().pd_joined = false;
+            self.reqs[id].pd_joined = false;
             self.pd_retarget(id);
         }
         self.events
-            .push(self.now + migration_time, Event::SwitchDone { instance: idx });
+            .push(self.now + migration_time, Event::SwitchDone { instance: idx as u32 });
     }
 
     fn on_switch_done(&mut self, idx: usize) {
@@ -1768,26 +2108,38 @@ impl<'a> Simulator<'a> {
             // polling retry loop).
             self.pd_wake_parked();
         }
+        if self.insts[idx].kind == WorkKind::Prefill {
+            // Same fix for the EP→prefill edge: requests whose transfer
+            // landed while every prefill instance was switching parked
+            // instead of polling; this instance restores the role.
+            self.wake_prefill_parked();
+        }
+        if self.insts[idx].kind == self.entry_kind() {
+            // And for arrivals blocked at admission.
+            self.wake_entry_parked();
+        }
         self.kick_instance(idx);
     }
 
     /// Re-attempt admission for every parked request. A request that
     /// still cannot be placed re-parks (and re-counts as a new episode).
     fn pd_wake_parked(&mut self) {
-        if self.pd_parked.is_empty() || self.decode_instances().is_empty() {
+        if self.pd_parked.is_empty() || !self.has_kind(self.decode_kind()) {
             return;
         }
         let parked = std::mem::take(&mut self.pd_parked);
         for id in parked {
             let (streamed, stale) = {
-                let r = &self.reqs[&id];
+                let r = &self.reqs[id];
                 (
                     r.pd_target.is_some() && !r.pd_fallback,
                     // Defense in depth: a request that was already placed
-                    // (rescued by a later chunk arrival), joined, or
-                    // finished must not be re-targeted — that would
-                    // double-reserve KV and re-run its decode.
-                    r.pd_joined || r.tl.is_finished(),
+                    // (rescued by a later chunk arrival) or joined must
+                    // not be re-targeted — that would double-reserve KV
+                    // and re-run its decode. (A finished request cannot
+                    // appear here: `finish_request` purges the parked
+                    // list before freeing the slot.)
+                    r.pd_joined,
                 )
             };
             if stale || self.pd_target_valid(id) {
@@ -2431,10 +2783,11 @@ mod tests {
             // The lone decoder spends the whole request lifetime
             // mid-switch; the role returns only at t = 50.
             sim.insts[d].switching = true;
-            sim.events.push(50.0, Event::SwitchDone { instance: d });
+            sim.events.push(50.0, Event::SwitchDone { instance: d as u32 });
             sim.main_loop();
             assert_eq!(sim.finished_count, 1, "groups={groups}");
-            let tl = &sim.reqs.values().next().unwrap().tl;
+            assert!(sim.reqs.is_empty(), "finished slots are freed");
+            let tl = &sim.done_timelines[0];
             assert!(tl.finish > 50.0, "decode starts only after the wake: {}", tl.finish);
             assert_eq!(sim.pd_overlap.parked, 1, "exactly one park episode");
             assert_eq!(
@@ -2466,10 +2819,10 @@ mod tests {
                     // chosen target mid-stream, wiping its KV (and with it
                     // our reservation) exactly as `begin_switch` does.
                     diverted = true;
-                    let target = sim.reqs[req].pd_target.unwrap();
+                    let target = sim.reqs[*req as u64].pd_target.unwrap();
                     sim.insts[target].kv.clear();
                     sim.insts[target].switching = true;
-                    sim.events.push(t + 0.25, Event::SwitchDone { instance: target });
+                    sim.events.push(t + 0.25, Event::SwitchDone { instance: target as u32 });
                 }
             }
             sim.dispatch(ev);
@@ -2479,7 +2832,157 @@ mod tests {
         }
         assert_eq!(sim.finished_count, 1);
         assert!(sim.pd_overlap.retargets >= 1, "mid-stream switch must re-target");
-        assert!(sim.reqs.values().next().unwrap().tl.is_finished());
+        assert!(sim.done_timelines[0].is_finished());
+    }
+
+    /// Satellite regression: an arrival landing while every entry-stage
+    /// instance is mid-switch parks and wakes event-driven — zero 10 ms
+    /// polling re-fires. The old code re-pushed the `Arrival` every 10 ms
+    /// for the whole 50 s window (~5,000 events); the bound on
+    /// `events_processed` pins that loop gone.
+    #[test]
+    fn arrivals_park_event_driven_when_entry_switching() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(1, 1.0, 1, 4, &spec);
+        let mut cfg = epd_cfg(&spec);
+        cfg.epd = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
+        let mut sim = Simulator::new(&cfg, &reqs);
+        let e = sim.insts.iter().position(|i| i.kind == WorkKind::Encode).unwrap();
+        sim.insts[e].switching = true;
+        sim.events.push(50.0, Event::SwitchDone { instance: e as u32 });
+        sim.main_loop();
+        assert_eq!(sim.finished_count, 1);
+        assert_eq!(sim.admission.parked_arrivals, 1, "exactly one park episode");
+        let tl = &sim.done_timelines[0];
+        assert!(tl.arrival < 50.0, "true arrival time is kept: {}", tl.arrival);
+        assert!(
+            tl.first_token >= 50.0,
+            "service starts only after the wake: {}",
+            tl.first_token
+        );
+        assert!(tl.ttft() >= 50.0 - tl.arrival, "TTFT counts the blocked wait");
+        assert!(
+            sim.events_processed < 40,
+            "poll-free run must stay tiny: {} events",
+            sim.events_processed
+        );
+    }
+
+    /// Same fix at the EP→prefill edge, in both the monolithic and the
+    /// chunked streaming paths: the transfer lands while the only prefill
+    /// instance is switching, the request parks, and the `SwitchDone`
+    /// wakes it — no `EpTransferDone` / zero-token-nudge re-fires.
+    #[test]
+    fn prefill_blocked_requests_park_event_driven() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(1, 1.0, 2, 4, &spec);
+        for chunk in [0u64, 256] {
+            let mut cfg = epd_cfg(&spec);
+            cfg.epd = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
+            cfg.epd.ep_chunk_tokens = chunk;
+            let mut sim = Simulator::new(&cfg, &reqs);
+            let p = sim.insts.iter().position(|i| i.kind == WorkKind::Prefill).unwrap();
+            sim.insts[p].switching = true;
+            sim.events.push(50.0, Event::SwitchDone { instance: p as u32 });
+            sim.main_loop();
+            assert_eq!(sim.finished_count, 1, "chunk={chunk}");
+            assert_eq!(sim.admission.parked_prefill, 1, "one episode (chunk={chunk})");
+            let tl = &sim.done_timelines[0];
+            assert!(tl.prefill_start >= 50.0, "chunk={chunk}: {}", tl.prefill_start);
+            assert!(
+                sim.events_processed < 100,
+                "poll-free run must stay tiny (chunk={chunk}): {} events",
+                sim.events_processed
+            );
+        }
+    }
+
+    /// Tentpole equivalence: `record_timelines = false` must not change a
+    /// single modelled outcome — identical makespan/busy bits and
+    /// counters, exact means, attainment from the online counter — while
+    /// bounding live request state by in-flight instead of total.
+    #[test]
+    fn record_timelines_off_is_outcome_identical() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(40, 1.0, 2, 10, &spec);
+        let slo = crate::core::slo::Slo::new(2.6, 0.04);
+        for epd in [
+            EpdConfig::epd(Topology::new(5, 2, 1), 1, 1, 128),
+            EpdConfig::distserve(7, 1, 1, 128),
+            EpdConfig::aggregated(8, 64),
+        ] {
+            let mut on = SimConfig::new(spec.clone(), DeviceSpec::a100(), epd);
+            on.streamed_slo = Some(slo);
+            let mut off = on.clone();
+            off.record_timelines = false;
+            let a = Simulator::run(&on, &reqs);
+            let b = Simulator::run(&off, &reqs);
+            assert!(a.timelines_recorded && !b.timelines_recorded);
+            assert!(b.timelines.is_empty());
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{:?}", on.epd.mode);
+            for i in 0..3 {
+                assert_eq!(a.busy[i].to_bits(), b.busy[i].to_bits());
+            }
+            assert_eq!(a.events_processed, b.events_processed);
+            assert_eq!(a.streamed.finished, b.streamed.finished);
+            assert_eq!(a.finished().count() as u64, b.streamed.finished);
+            // Means are exact in both paths (same sums, same order).
+            assert_eq!(a.streamed.ttft.mean().to_bits(), b.mean_ttft().to_bits());
+            assert_eq!(a.slo_attainment(slo), b.slo_attainment(slo));
+            // Sketch percentiles respect the 1% relative-error bound
+            // against the exact distribution.
+            let mut exact = a.ttfts();
+            exact.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            let rank = ((0.9 * exact.len() as f64).ceil() as usize).max(1);
+            let x90 = exact[rank - 1];
+            let p90 = b.streamed.ttft.quantile(0.9);
+            assert!(
+                (p90 - x90).abs() <= 0.01 * x90 + 1e-12,
+                "{:?}: sketch p90 {p90} vs exact {x90}",
+                on.epd.mode
+            );
+        }
+    }
+
+    /// Tentpole equivalence: lazy arrival streaming is bit-for-bit
+    /// identical to the legacy eager pre-push (the broad property sweep
+    /// lives in `rust/tests/property_fastpath.rs`).
+    #[test]
+    fn lazy_arrivals_match_eager_bit_for_bit() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(30, 1.5, 2, 12, &spec);
+        let lazy_cfg = epd_cfg(&spec);
+        let mut eager_cfg = epd_cfg(&spec);
+        eager_cfg.eager_arrivals = true;
+        let lazy = Simulator::run(&lazy_cfg, &reqs);
+        let eager = Simulator::run(&eager_cfg, &reqs);
+        assert_eq!(lazy.events_processed, eager.events_processed);
+        assert_eq!(lazy.timelines.len(), eager.timelines.len());
+        for (x, y) in lazy.timelines.iter().zip(eager.timelines.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.first_token.to_bits(), y.first_token.to_bits());
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+        }
+        assert_eq!(lazy.to_json().pretty(), eager.to_json().pretty());
+    }
+
+    /// The peak-RSS proxy: live request state tracks in-flight, not
+    /// total, requests — a long run at moderate load must never hold
+    /// more than a small fraction of the workload live at once.
+    #[test]
+    fn live_request_state_bounded_by_inflight() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(300, 0.8, 1, 6, &spec);
+        let mut cfg = epd_cfg(&spec);
+        cfg.record_timelines = false;
+        let out = Simulator::run(&cfg, &reqs);
+        assert_eq!(out.streamed.finished + out.rejected as u64, 300);
+        assert!(
+            out.peak_live_requests <= 60,
+            "peak live {} should be far below the 300 submitted",
+            out.peak_live_requests
+        );
+        assert!(out.events_processed > 300);
     }
 
     /// Satellite regression: decode `est_cost` amortizes by the *chosen*

@@ -1,44 +1,71 @@
 //! Event queue for the discrete-event simulator: a time-ordered heap with
 //! FIFO tie-breaking (events at equal timestamps fire in schedule order,
 //! keeping runs deterministic).
+//!
+//! Two fast-path properties matter at cluster scale:
+//!
+//! - **Compact events.** Request handles are `u32` slab slots (see
+//!   [`crate::sim::arena`]) and instance indices are `u32`, so [`Event`]
+//!   fits in 16 bytes and a [`Scheduled`] heap entry in 32 — the heap
+//!   stays cache-resident even with tens of thousands of in-flight
+//!   events.
+//! - **Reserved sequence ranges.** The engine streams arrivals into the
+//!   heap lazily (one pending arrival at a time instead of O(total
+//!   requests) up front). [`EventQueue::reserve_seqs`] +
+//!   [`EventQueue::push_seq`] let those late pushes carry the sequence
+//!   numbers the legacy eager pre-push would have assigned, so the pop
+//!   order — and therefore every modelled outcome — is bit-for-bit
+//!   identical.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use crate::core::request::RequestId;
+/// Compact request handle carried by events: the request's slot in the
+/// simulator's slab arena — or, for [`Event::Arrival`], the request's
+/// index into the workload slice (the arena slot is only allocated at
+/// admission).
+pub type EvReq = u32;
+
+/// Compact instance index carried by events.
+pub type EvInst = u32;
 
 /// Simulator events.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
-    /// A request arrives at the frontend.
-    Arrival(RequestId),
+    /// A request arrives at the frontend (payload: workload index).
+    Arrival(EvReq),
     /// An encode instance finished the shard batch it was running.
-    EncodeDone { instance: usize },
+    EncodeDone { instance: EvInst },
     /// An EP transfer for (request, shard) landed at the prefill side.
-    EpTransferDone { req: RequestId },
+    EpTransferDone { req: EvReq },
     /// One streamed EP chunk of `tokens` MM tokens landed at the prefill
     /// side (chunked handoff, `EpdConfig::ep_chunk_tokens > 0`). A
-    /// `tokens == 0` event is a pure re-admission nudge (retry while all
-    /// prefill instances are switching, or a zero-token shard tail).
-    EpChunkTransferDone { req: RequestId, tokens: u64 },
+    /// `tokens == 0` event is a pure re-admission nudge (a zero-token
+    /// shard tail or a cached zero-payload stream).
+    EpChunkTransferDone { req: EvReq, tokens: u64 },
     /// A prefill instance finished its batch.
-    PrefillDone { instance: usize },
+    PrefillDone { instance: EvInst },
     /// A PD transfer landed at the decode side.
-    PdTransferDone { req: RequestId },
+    PdTransferDone { req: EvReq },
     /// One streamed layer group of `tokens` KV tokens landed at the
     /// request's pre-selected decode target (layer-wise PD streaming,
     /// `EpdConfig::pd_layer_groups > 0`). The tail group's arrival admits
     /// the request to the target's continuous batch.
-    PdChunkTransferDone { req: RequestId, tokens: u64 },
+    PdChunkTransferDone { req: EvReq, tokens: u64 },
     /// A decode instance finished one autoregressive step.
-    DecodeStepDone { instance: usize },
+    DecodeStepDone { instance: EvInst },
     /// An aggregated/PD instance finished its current (fused) work item.
-    FusedStepDone { instance: usize },
+    FusedStepDone { instance: EvInst },
     /// Periodic monitor tick (role switching, §3.2.4).
     MonitorTick,
     /// A role-switching migration completed; the instance onloads.
-    SwitchDone { instance: usize },
+    SwitchDone { instance: EvInst },
 }
+
+// The whole point of the compact payloads: a heap entry is two cache
+// lines per four entries, not one entry per line.
+const _: () = assert!(std::mem::size_of::<Event>() <= 16);
+const _: () = assert!(std::mem::size_of::<Scheduled>() <= 32);
 
 #[derive(Debug, Clone)]
 struct Scheduled {
@@ -83,10 +110,28 @@ impl EventQueue {
         EventQueue { heap: BinaryHeap::new(), seq: 0 }
     }
 
+    /// Reserve the sequence numbers `1..=n` for explicitly numbered
+    /// pushes ([`Self::push_seq`]): every subsequent [`Self::push`] gets a
+    /// sequence number above `n`, so reserved-range events win FIFO ties
+    /// against anything scheduled later — exactly as if they had been
+    /// pushed first.
+    pub fn reserve_seqs(&mut self, n: u64) {
+        self.seq = self.seq.max(n);
+    }
+
     pub fn push(&mut self, time: f64, event: Event) {
         assert!(time.is_finite(), "non-finite event time for {event:?}");
         self.seq += 1;
         self.heap.push(Scheduled { time, seq: self.seq, event });
+    }
+
+    /// Push with an explicit sequence number from a reserved range. The
+    /// lazily streamed arrivals use this to reproduce the legacy eager
+    /// pre-push's tie-breaking bit-for-bit while keeping the heap small.
+    pub fn push_seq(&mut self, time: f64, seq: u64, event: Event) {
+        assert!(time.is_finite(), "non-finite event time for {event:?}");
+        debug_assert!(seq <= self.seq, "explicit seq must come from a reserved range");
+        self.heap.push(Scheduled { time, seq, event });
     }
 
     pub fn pop(&mut self) -> Option<(f64, Event)> {
@@ -131,6 +176,19 @@ mod tests {
             })
             .collect();
         assert_eq!(ids, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn reserved_seqs_win_ties_against_later_pushes() {
+        // An arrival streamed in *after* a completion event was scheduled
+        // must still beat it at an equal timestamp, because its reserved
+        // seq is lower — the legacy eager pre-push order.
+        let mut q = EventQueue::new();
+        q.reserve_seqs(4);
+        q.push(10.0, Event::EncodeDone { instance: 0 }); // seq 5
+        q.push_seq(10.0, 2, Event::Arrival(1)); // reserved seq 2
+        assert_eq!(q.pop().unwrap().1, Event::Arrival(1));
+        assert_eq!(q.pop().unwrap().1, Event::EncodeDone { instance: 0 });
     }
 
     #[test]

@@ -9,13 +9,15 @@
 //! (DistServe) and aggregated (vLLM) — on A100 or Ascend-910B3 device
 //! profiles.
 
+pub mod arena;
 pub mod cost;
 pub mod event;
 pub mod engine;
 pub mod link;
 pub mod outcome;
 
+pub use arena::Slab;
 pub use cost::CostModel;
 pub use engine::{SimConfig, Simulator};
 pub use link::{LinkScheduler, LinkStats};
-pub use outcome::{EpOverlapStats, PdOverlapStats, SimOutcome};
+pub use outcome::{AdmissionStats, EpOverlapStats, PdOverlapStats, SimOutcome, StreamedMetrics};

@@ -5,7 +5,8 @@ use crate::coordinator::planner::ReallocationStats;
 use crate::core::request::RequestTimeline;
 use crate::core::slo::Slo;
 use crate::sim::link::LinkStats;
-use crate::util::stats::{self, Summary};
+use crate::util::json::Json;
+use crate::util::stats::{self, QuantileSketch, Summary};
 
 /// Counters for the chunked encode→prefill streaming pipeline
 /// (`EpdConfig::ep_chunk_tokens > 0`). All zero under the monolithic
@@ -77,10 +78,68 @@ impl PdOverlapStats {
     }
 }
 
+/// Streaming metrics accumulated at request completion, in O(1) memory.
+///
+/// Always populated (the sketches cost nanoseconds per finish); they are
+/// the *only* metric source when `SimConfig::record_timelines = false`,
+/// where per-request timelines are dropped the moment a request finishes
+/// and live state stays bounded by in-flight requests. Sketch means are
+/// exact; percentiles carry the sketch's relative-error bound (default
+/// 1%, see [`QuantileSketch`]).
+#[derive(Debug, Clone, Default)]
+pub struct StreamedMetrics {
+    /// TTFT sketch over finished requests.
+    pub ttft: QuantileSketch,
+    /// TPOT sketch over finished requests.
+    pub tpot: QuantileSketch,
+    /// End-to-end latency sketch over finished requests.
+    pub latency: QuantileSketch,
+    /// Requests that finished (excludes rejections).
+    pub finished: u64,
+    /// Finished requests meeting `slo` — counted online so attainment is
+    /// available without timelines. Zero unless `slo` was configured.
+    pub slo_attained: u64,
+    /// The SLO the online counter was measured against
+    /// (`SimConfig::streamed_slo`).
+    pub slo: Option<Slo>,
+}
+
+/// Admission-parking counters: requests that found every instance of
+/// their next stage mid-switch and parked for an event-driven wake at the
+/// `SwitchDone` restoring the role. The legacy engine retried these on a
+/// 10 ms poll; these counters (and the regression tests pinning small
+/// event totals) prove the polling is gone.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AdmissionStats {
+    /// Arrivals parked because no instance accepted entry-stage work.
+    pub parked_arrivals: u64,
+    /// Requests parked at the EP→prefill edge (every prefill instance
+    /// switching).
+    pub parked_prefill: u64,
+}
+
 /// The result of one simulation run.
 #[derive(Debug, Clone)]
 pub struct SimOutcome {
+    /// Per-request timelines, sorted by request id. Empty when
+    /// `timelines_recorded` is false — use [`SimOutcome::streamed`] then.
     pub timelines: Vec<RequestTimeline>,
+    /// Whether per-request timelines were recorded
+    /// (`SimConfig::record_timelines`).
+    pub timelines_recorded: bool,
+    /// Requests submitted (finished + unfinished + rejected).
+    pub submitted: usize,
+    /// O(1)-memory streaming metrics (sketch percentiles, exact means).
+    pub streamed: StreamedMetrics,
+    /// Events dispatched over the run — the throughput bench's
+    /// numerator.
+    pub events_processed: u64,
+    /// Peak simultaneously live request states (the slab arena's
+    /// high-water mark): the peak-RSS proxy, bounded by in-flight — not
+    /// total — requests.
+    pub peak_live_requests: usize,
+    /// Event-driven admission-parking counters (poll-free blocking).
+    pub admission: AdmissionStats,
     /// Virtual time at which the last request finished.
     pub makespan: f64,
     /// Role switches performed (§3.2.4).
@@ -126,16 +185,35 @@ impl SimOutcome {
         self.finished().map(|t| t.latency()).collect()
     }
 
+    /// Finished requests, available in both metric modes.
+    pub fn finished_requests(&self) -> u64 {
+        self.streamed.finished
+    }
+
+    /// Mean TTFT: exact from timelines when recorded, exact from the
+    /// streaming sum otherwise (sketch means are not approximate).
     pub fn mean_ttft(&self) -> f64 {
-        stats::mean(&self.ttfts())
+        if self.timelines_recorded {
+            stats::mean(&self.ttfts())
+        } else {
+            self.streamed.ttft.mean()
+        }
     }
 
     pub fn mean_tpot(&self) -> f64 {
-        stats::mean(&self.tpots())
+        if self.timelines_recorded {
+            stats::mean(&self.tpots())
+        } else {
+            self.streamed.tpot.mean()
+        }
     }
 
     pub fn mean_latency(&self) -> f64 {
-        stats::mean(&self.latencies())
+        if self.timelines_recorded {
+            stats::mean(&self.latencies())
+        } else {
+            self.streamed.latency.mean()
+        }
     }
 
     pub fn ttft_summary(&self) -> Summary {
@@ -144,16 +222,33 @@ impl SimOutcome {
 
     /// Fraction of submitted requests meeting both TTFT and TPOT SLOs
     /// (unfinished/rejected requests count as misses — §4's definition).
+    /// Without timelines this reads the online counter, which requires
+    /// `SimConfig::streamed_slo` to have been set to the same SLO.
     pub fn slo_attainment(&self, slo: Slo) -> f64 {
-        let total = self.timelines.len() + self.rejected as usize;
-        if total == 0 {
-            return 0.0;
+        if self.timelines_recorded {
+            let total = self.timelines.len() + self.rejected as usize;
+            if total == 0 {
+                return 0.0;
+            }
+            let ok = self
+                .finished()
+                .filter(|t| slo.attained(t.ttft(), t.tpot()))
+                .count();
+            ok as f64 / total as f64
+        } else {
+            // Loud on misuse: the online counter was measured against
+            // `SimConfig::streamed_slo`; answering for any other SLO
+            // would return a plausible-looking wrong number.
+            assert_eq!(
+                self.streamed.slo,
+                Some(slo),
+                "timeline-free attainment requires SimConfig::streamed_slo == slo"
+            );
+            if self.submitted == 0 {
+                return 0.0;
+            }
+            self.streamed.slo_attained as f64 / self.submitted as f64
         }
-        let ok = self
-            .finished()
-            .filter(|t| slo.attained(t.ttft(), t.tpot()))
-            .count();
-        ok as f64 / total as f64
     }
 
     /// Total seconds transfers spent queued behind busy links (zero
@@ -172,11 +267,134 @@ impl SimOutcome {
 
     /// Completed requests per second of makespan (offline throughput).
     pub fn throughput(&self) -> f64 {
-        let n = self.finished().count();
         if self.makespan <= 0.0 {
             return 0.0;
         }
-        n as f64 / self.makespan
+        self.streamed.finished as f64 / self.makespan
+    }
+
+    /// Full machine-readable dump. Deterministic (BTreeMap-ordered keys,
+    /// fixed field set), so byte-identical runs serialize byte-identically
+    /// — the golden-determinism tests compare these strings.
+    pub fn to_json(&self) -> Json {
+        fn sketch(s: &QuantileSketch) -> Json {
+            Json::obj(vec![
+                ("count", Json::num(s.count() as f64)),
+                ("mean", Json::num(s.mean())),
+                ("p50", Json::num(s.quantile(0.5))),
+                ("p90", Json::num(s.quantile(0.9))),
+                ("p99", Json::num(s.quantile(0.99))),
+                ("min", Json::num(s.min())),
+                ("max", Json::num(s.max())),
+            ])
+        }
+        let mut fields = vec![
+            ("makespan", Json::num(self.makespan)),
+            ("submitted", Json::num(self.submitted as f64)),
+            ("finished", Json::num(self.streamed.finished as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("role_switches", Json::num(self.role_switches as f64)),
+            ("events_processed", Json::num(self.events_processed as f64)),
+            ("peak_live_requests", Json::num(self.peak_live_requests as f64)),
+            ("timelines_recorded", Json::Bool(self.timelines_recorded)),
+            ("busy", Json::arr(self.busy.iter().map(|&b| Json::num(b)))),
+            (
+                "reallocation",
+                Json::obj(vec![
+                    ("plans", Json::num(self.reallocation.plans as f64)),
+                    ("planned_steps", Json::num(self.reallocation.planned_steps as f64)),
+                    ("released_steps", Json::num(self.reallocation.released_steps as f64)),
+                    ("blocked_steps", Json::num(self.reallocation.blocked_steps as f64)),
+                    ("aborted_plans", Json::num(self.reallocation.aborted_plans as f64)),
+                ]),
+            ),
+            (
+                "encoder_cache",
+                Json::obj(vec![
+                    ("hits", Json::num(self.encoder_cache.hits as f64)),
+                    ("misses", Json::num(self.encoder_cache.misses as f64)),
+                    ("insertions", Json::num(self.encoder_cache.insertions as f64)),
+                    ("evictions", Json::num(self.encoder_cache.evictions as f64)),
+                    ("rejected", Json::num(self.encoder_cache.rejected as f64)),
+                ]),
+            ),
+            (
+                "ep_overlap",
+                Json::obj(vec![
+                    ("chunks", Json::num(self.ep_overlap.chunks as f64)),
+                    ("streamed_requests", Json::num(self.ep_overlap.streamed_requests as f64)),
+                    ("prefill_passes", Json::num(self.ep_overlap.prefill_passes as f64)),
+                    ("overlap_seconds", Json::num(self.ep_overlap.overlap_seconds)),
+                ]),
+            ),
+            (
+                "pd_overlap",
+                Json::obj(vec![
+                    ("streamed_requests", Json::num(self.pd_overlap.streamed_requests as f64)),
+                    ("chunks", Json::num(self.pd_overlap.chunks as f64)),
+                    ("retargets", Json::num(self.pd_overlap.retargets as f64)),
+                    ("fallbacks", Json::num(self.pd_overlap.fallbacks as f64)),
+                    ("parked", Json::num(self.pd_overlap.parked as f64)),
+                    (
+                        "monolithic_transfers",
+                        Json::num(self.pd_overlap.monolithic_transfers as f64),
+                    ),
+                    ("kv_bytes", Json::num(self.pd_overlap.kv_bytes as f64)),
+                    ("handoff_seconds", Json::num(self.pd_overlap.handoff_seconds)),
+                    ("handoff_count", Json::num(self.pd_overlap.handoff_count as f64)),
+                ]),
+            ),
+            (
+                "admission",
+                Json::obj(vec![
+                    ("parked_arrivals", Json::num(self.admission.parked_arrivals as f64)),
+                    ("parked_prefill", Json::num(self.admission.parked_prefill as f64)),
+                ]),
+            ),
+            (
+                "links",
+                Json::obj(vec![
+                    ("busy_seconds", Json::num(self.link_busy_seconds())),
+                    ("queue_seconds", Json::num(self.link_queue_seconds())),
+                    (
+                        "transfers",
+                        Json::num(self.links.iter().map(|l| l.transfers).sum::<u64>() as f64),
+                    ),
+                ]),
+            ),
+            (
+                "streamed",
+                Json::obj(vec![
+                    ("ttft", sketch(&self.streamed.ttft)),
+                    ("tpot", sketch(&self.streamed.tpot)),
+                    ("latency", sketch(&self.streamed.latency)),
+                    ("slo_attained", Json::num(self.streamed.slo_attained as f64)),
+                ]),
+            ),
+        ];
+        if self.timelines_recorded {
+            fields.push((
+                "timelines",
+                Json::arr(self.timelines.iter().map(|t| {
+                    Json::arr(
+                        [
+                            t.id as f64,
+                            t.arrival,
+                            t.encode_start,
+                            t.encode_end,
+                            t.prefill_start,
+                            t.prefill_end,
+                            t.first_token,
+                            t.finish,
+                            t.output_tokens as f64,
+                        ]
+                        .into_iter()
+                        .map(Json::num),
+                    )
+                })),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -194,12 +412,26 @@ mod tests {
     }
 
     fn outcome() -> SimOutcome {
+        let timelines = vec![
+            tl(1, 0.0, 1.0, 2.0, 10),  // ttft 1.0, tpot ~0.111
+            tl(2, 0.0, 3.0, 4.0, 10),  // ttft 3.0
+            RequestTimeline::new(3, 0.0), // never finished
+        ];
+        let mut streamed = StreamedMetrics::default();
+        for t in timelines.iter().filter(|t| t.is_finished()) {
+            streamed.ttft.record(t.ttft());
+            streamed.tpot.record(t.tpot());
+            streamed.latency.record(t.latency());
+            streamed.finished += 1;
+        }
         SimOutcome {
-            timelines: vec![
-                tl(1, 0.0, 1.0, 2.0, 10),  // ttft 1.0, tpot ~0.111
-                tl(2, 0.0, 3.0, 4.0, 10),  // ttft 3.0
-                RequestTimeline::new(3, 0.0), // never finished
-            ],
+            timelines,
+            timelines_recorded: true,
+            submitted: 4,
+            streamed,
+            events_processed: 0,
+            peak_live_requests: 0,
+            admission: AdmissionStats::default(),
             makespan: 4.0,
             role_switches: 0,
             reallocation: ReallocationStats::default(),
@@ -231,6 +463,43 @@ mod tests {
     fn throughput() {
         let o = outcome();
         assert!((o.throughput() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streamed_fallback_when_timelines_off() {
+        let mut o = outcome();
+        o.timelines_recorded = false;
+        o.timelines.clear();
+        let slo = Slo::new(2.0, 0.2);
+        o.streamed.slo = Some(slo);
+        o.streamed.slo_attained = 1;
+        assert!((o.mean_ttft() - 2.0).abs() < 1e-12, "exact mean from the sum");
+        assert!((o.slo_attainment(slo) - 0.25).abs() < 1e-12);
+        assert!((o.throughput() - 0.5).abs() < 1e-12);
+        assert_eq!(o.finished_requests(), 2);
+        // p99 carries the sketch bound (1% relative) around the exact 3.0.
+        let p99 = o.streamed.ttft.quantile(0.99);
+        assert!((p99 - 3.0).abs() <= 0.03 + 1e-12, "p99 {p99}");
+    }
+
+    #[test]
+    fn json_dump_is_deterministic_and_complete() {
+        let o = outcome();
+        let a = o.to_json().pretty();
+        let b = o.to_json().pretty();
+        assert_eq!(a, b);
+        let parsed = crate::util::json::Json::parse(&a).unwrap();
+        assert_eq!(parsed.get("submitted").and_then(|j| j.as_u64()), Some(4));
+        assert_eq!(parsed.get("finished").and_then(|j| j.as_u64()), Some(2));
+        assert_eq!(
+            parsed.get("timelines").and_then(|j| j.as_arr()).map(|a| a.len()),
+            Some(3)
+        );
+        let mut off = o.clone();
+        off.timelines_recorded = false;
+        off.timelines.clear();
+        let j = off.to_json();
+        assert!(j.get("timelines").is_none(), "no per-request payload without timelines");
     }
 
     #[test]

@@ -174,6 +174,167 @@ impl Histogram {
     }
 }
 
+/// Streaming quantile sketch with a fixed *relative* error bound — the
+/// O(1)-memory summary behind the simulator's timeline-free fast path
+/// (`SimConfig::record_timelines = false`).
+///
+/// The design is the DDSketch log-bucketed summary: a positive sample `x`
+/// lands in bucket `k = ceil(ln x / ln γ)` with `γ = (1 + α) / (1 − α)`,
+/// so bucket `k` covers `(γ^(k−1), γ^k]` and the bucket midpoint
+/// `2γ^k / (γ + 1)` is within relative error `α` of every sample in it.
+/// [`QuantileSketch::quantile`] therefore returns a value `x̃` with
+/// `|x̃ − x_q| ≤ α · x_q` where `x_q` is the exact nearest-rank
+/// `q`-quantile. Zero samples (e.g. the defined-zero TPOT of single-token
+/// requests) are counted exactly in a dedicated bucket; mean/min/max/sum
+/// are exact.
+///
+/// Memory is independent of the sample count: the bucket map holds at
+/// most `ln(max/min) / ln γ + 2` entries — ≈ 1,400 buckets for latencies
+/// spanning 1 µs to 10⁶ s at the default α = 1% — versus one `f64` per
+/// request for the exact path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantileSketch {
+    alpha: f64,
+    ln_gamma: f64,
+    buckets: std::collections::BTreeMap<i32, u64>,
+    zero: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for QuantileSketch {
+    /// The default 1%-relative-error sketch.
+    fn default() -> Self {
+        QuantileSketch::new(0.01)
+    }
+}
+
+impl QuantileSketch {
+    /// A sketch with relative accuracy `alpha` in (0, 1).
+    pub fn new(alpha: f64) -> QuantileSketch {
+        assert!(alpha > 0.0 && alpha < 1.0, "alpha must be in (0, 1)");
+        let gamma = (1.0 + alpha) / (1.0 - alpha);
+        QuantileSketch {
+            alpha,
+            ln_gamma: gamma.ln(),
+            buckets: std::collections::BTreeMap::new(),
+            zero: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one sample. Non-positive samples count in the exact zero
+    /// bucket (latencies are never negative; TPOT is defined 0 for
+    /// single-token requests).
+    #[inline]
+    pub fn record(&mut self, x: f64) {
+        debug_assert!(x.is_finite(), "non-finite sample");
+        self.count += 1;
+        self.sum += x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        if x <= 0.0 {
+            self.zero += 1;
+            return;
+        }
+        let key = (x.ln() / self.ln_gamma).ceil() as i32;
+        *self.buckets.entry(key).or_insert(0) += 1;
+    }
+
+    /// Approximate `q`-quantile (`q` in [0, 1]): within relative error
+    /// `alpha` of the exact nearest-rank quantile. 0 for an empty sketch.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut acc = self.zero;
+        if acc >= rank {
+            return 0.0;
+        }
+        let gamma = self.ln_gamma.exp();
+        for (&k, &c) in &self.buckets {
+            acc += c;
+            if acc >= rank {
+                return 2.0 * gamma.powi(k) / (gamma + 1.0);
+            }
+        }
+        self.max
+    }
+
+    /// Exact mean (0 for an empty sketch).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// The configured relative accuracy bound α.
+    pub fn relative_accuracy(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Occupied buckets — the sketch's actual memory footprint.
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Merge another sketch of the same accuracy (parallel shards).
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        assert_eq!(
+            self.alpha.to_bits(),
+            other.alpha.to_bits(),
+            "cannot merge sketches of different accuracy"
+        );
+        for (&k, &c) in &other.buckets {
+            *self.buckets.entry(k).or_insert(0) += c;
+        }
+        self.zero += other.zero;
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.count > 0 {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+    }
+}
+
 /// Online mean/variance accumulator (Welford). Constant memory — used in the
 /// engine's hot path where storing every sample would allocate.
 #[derive(Debug, Clone, Default)]
@@ -311,6 +472,82 @@ mod tests {
         let m = mean(&xs);
         assert!((w.mean() - m).abs() < 1e-9);
         assert!((w.std() - std_dev(&xs, m)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sketch_quantiles_within_relative_error_bound() {
+        // The documented guarantee: |q̃ − x_q| ≤ α·x_q against the exact
+        // nearest-rank quantile, across a heavy-tailed sample.
+        let mut rng = crate::util::rng::Rng::new(17);
+        let xs: Vec<f64> = (0..20_000).map(|_| rng.lognormal(-1.0, 1.5)).collect();
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for alpha in [0.01, 0.05] {
+            let mut sk = QuantileSketch::new(alpha);
+            for &x in &xs {
+                sk.record(x);
+            }
+            for q in [0.01, 0.25, 0.5, 0.9, 0.95, 0.99, 0.999] {
+                let rank = ((q * xs.len() as f64).ceil() as usize).max(1);
+                let exact = sorted[rank - 1];
+                let approx = sk.quantile(q);
+                assert!(
+                    (approx - exact).abs() <= alpha * exact + 1e-12,
+                    "alpha={alpha} q={q}: approx {approx} vs exact {exact}"
+                );
+            }
+            assert!((sk.mean() - mean(&xs)).abs() < 1e-9, "mean is exact");
+            assert_eq!(sk.count(), xs.len() as u64);
+            assert_eq!(sk.min(), sorted[0]);
+            assert_eq!(sk.max(), *sorted.last().unwrap());
+        }
+    }
+
+    #[test]
+    fn sketch_memory_is_bounded_by_dynamic_range_not_samples() {
+        let mut sk = QuantileSketch::new(0.01);
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..200_000 {
+            sk.record(rng.uniform(1e-6, 1e6).max(1e-6));
+        }
+        // ln(1e12)/ln(γ) ≈ 1,382 buckets at α = 1%.
+        assert!(sk.bucket_count() <= 1_400, "buckets {}", sk.bucket_count());
+    }
+
+    #[test]
+    fn sketch_zero_and_empty_edge_cases() {
+        let empty = QuantileSketch::default();
+        assert_eq!(empty.quantile(0.5), 0.0);
+        assert_eq!(empty.mean(), 0.0);
+        assert_eq!(empty.min(), 0.0);
+        let mut sk = QuantileSketch::default();
+        sk.record(0.0);
+        sk.record(0.0);
+        sk.record(4.0);
+        assert_eq!(sk.quantile(0.5), 0.0, "zeros are exact");
+        let p99 = sk.quantile(0.99);
+        assert!((p99 - 4.0).abs() <= 0.01 * 4.0 + 1e-12);
+    }
+
+    #[test]
+    fn sketch_merge_matches_single_pass() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let xs: Vec<f64> = (0..5_000).map(|_| rng.lognormal(0.0, 1.0)).collect();
+        let mut whole = QuantileSketch::default();
+        let mut a = QuantileSketch::default();
+        let mut b = QuantileSketch::default();
+        for (i, &x) in xs.iter().enumerate() {
+            whole.record(x);
+            if i % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.quantile(0.9), whole.quantile(0.9));
+        assert!((a.sum() - whole.sum()).abs() < 1e-9);
     }
 
     #[test]

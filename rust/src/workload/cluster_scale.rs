@@ -1,0 +1,159 @@
+//! Cluster-scale mixed workload: the traffic shape the ROADMAP's
+//! "millions of users" north star implies — a chat-dominated stream with
+//! a many-image vision minority — replayed against a 64-instance EPD
+//! topology. This is the workload `benches/perf_sim_throughput.rs` gates
+//! the simulator fast path on (≥1M requests, live request state bounded
+//! by in-flight, events/sec vs the pre-refactor baseline) and the one
+//! `simulate --workload cluster-scale --no-timelines` exposes on the CLI.
+//!
+//! Two request classes, mixed per-arrival by a Bernoulli draw:
+//!
+//! - **Chat**: text-only, longer prompt, long-ish output — decode-bound.
+//! - **Vision**: several 4K images, short prompt/output — encode-bound.
+//!
+//! The default 64-GPU topology keeps the paper's encode-heavy 5:2:1
+//! shape (40E/16P/8D); at the default mix the cluster sustains roughly
+//! 60–100 req/s, so benchmark rates are chosen below saturation to keep
+//! in-flight — and therefore live simulator state — bounded.
+
+use super::{build_request, Workload};
+use crate::core::config::EpdConfig;
+use crate::core::request::Request;
+use crate::core::topology::Topology;
+use crate::model::spec::{DeviceSpec, LmmSpec};
+use crate::model::vision::Resolution;
+use crate::sim::engine::SimConfig;
+use crate::util::rng::Rng;
+
+/// Mixed chat + many-image traffic for cluster-scale runs.
+#[derive(Debug, Clone)]
+pub struct ClusterScaleWorkload {
+    /// Fraction of requests carrying images, in [0, 1].
+    pub vision_fraction: f64,
+    /// Images per vision request.
+    pub vision_images: u32,
+    pub vision_prompt_tokens: u32,
+    pub vision_output_tokens: u32,
+    pub chat_prompt_tokens: u32,
+    pub chat_output_tokens: u32,
+    pub resolution: Resolution,
+}
+
+impl Default for ClusterScaleWorkload {
+    fn default() -> Self {
+        ClusterScaleWorkload {
+            vision_fraction: 0.3,
+            vision_images: 4,
+            vision_prompt_tokens: 22,
+            vision_output_tokens: 8,
+            chat_prompt_tokens: 64,
+            chat_output_tokens: 96,
+            resolution: Resolution::four_k(),
+        }
+    }
+}
+
+impl ClusterScaleWorkload {
+    /// The 64-instance reference topology (paper-shaped 5:2:1 ratio).
+    pub fn topology64() -> Topology {
+        Topology::new(40, 16, 8)
+    }
+
+    /// The reference simulator configuration for this workload: the
+    /// 64-instance EPD cluster with the default batch/policy knobs.
+    pub fn sim_config(spec: &LmmSpec, device: DeviceSpec) -> SimConfig {
+        SimConfig::new(
+            spec.clone(),
+            device,
+            EpdConfig::epd(Self::topology64(), 1, 1, 128),
+        )
+    }
+}
+
+impl Workload for ClusterScaleWorkload {
+    fn generate(&self, spec: &LmmSpec, n: usize, rate: f64, rng: &mut Rng) -> Vec<Request> {
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            t += rng.exp(rate.max(1e-9));
+            let vision = rng.bool(self.vision_fraction.clamp(0.0, 1.0));
+            let (prompt, images, output) = if vision {
+                (self.vision_prompt_tokens, self.vision_images, self.vision_output_tokens)
+            } else {
+                (self.chat_prompt_tokens, 0, self.chat_output_tokens)
+            };
+            out.push(build_request(
+                spec,
+                i as u64,
+                t,
+                prompt,
+                images,
+                self.resolution,
+                output.max(1),
+            ));
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "cluster-scale"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelId;
+
+    #[test]
+    fn mixes_chat_and_vision_deterministically() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let w = ClusterScaleWorkload::default();
+        let mut rng = Rng::new(7);
+        let reqs = w.generate(&spec, 10_000, 50.0, &mut rng);
+        assert_eq!(reqs.len(), 10_000);
+        let vision = reqs.iter().filter(|r| r.images > 0).count();
+        let frac = vision as f64 / reqs.len() as f64;
+        assert!((frac - 0.3).abs() < 0.02, "vision fraction {frac}");
+        for pair in reqs.windows(2) {
+            assert!(pair[1].arrival >= pair[0].arrival, "arrivals monotone");
+        }
+        for r in &reqs {
+            if r.images > 0 {
+                assert_eq!(r.images, 4);
+                assert_eq!(r.output_tokens, 8);
+            } else {
+                assert_eq!(r.prompt_tokens, 64);
+                assert_eq!(r.output_tokens, 96);
+            }
+        }
+        // Same seed ⇒ identical stream.
+        let mut rng2 = Rng::new(7);
+        let again = w.generate(&spec, 10_000, 50.0, &mut rng2);
+        for (a, b) in reqs.iter().zip(again.iter()) {
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!(a.images, b.images);
+        }
+    }
+
+    #[test]
+    fn reference_cluster_is_64_instances() {
+        let t = ClusterScaleWorkload::topology64();
+        assert_eq!(t.total(), 64);
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let cfg = ClusterScaleWorkload::sim_config(&spec, DeviceSpec::a100());
+        assert_eq!(cfg.epd.instances.len(), 64);
+    }
+
+    #[test]
+    fn degenerate_fractions() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut rng = Rng::new(3);
+        let all_chat =
+            ClusterScaleWorkload { vision_fraction: 0.0, ..Default::default() };
+        assert!(all_chat.generate(&spec, 50, 10.0, &mut rng).iter().all(|r| r.images == 0));
+        let all_vision =
+            ClusterScaleWorkload { vision_fraction: 1.0, ..Default::default() };
+        assert!(all_vision.generate(&spec, 50, 10.0, &mut rng).iter().all(|r| r.images == 4));
+    }
+}

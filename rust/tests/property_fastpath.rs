@@ -1,0 +1,214 @@
+//! Golden determinism + fast-path equivalence for the cluster-scale
+//! simulator refactor (slab arena, lazy arrival streaming, streamed
+//! quantile sketches, parallel allocation sweeps).
+//!
+//! The refactor's contract is "same seed + config ⇒ bit-for-bit
+//! identical `SimOutcome`". These tests pin it three ways:
+//!
+//! - **Golden determinism**: two runs of the same seed serialize to
+//!   byte-identical JSON, in all three deployment modes.
+//! - **Pre/post equivalence**: the lazy arrival stream is bit-identical
+//!   to the legacy eager pre-push (`SimConfig::eager_arrivals`, kept
+//!   exactly for this proof), and `record_timelines = false` changes no
+//!   modelled outcome — over randomized small workloads in all modes.
+//! - **Thread invariance**: the parallel allocation sweep returns
+//!   bit-identical goodputs at every thread count.
+
+use epdserve::core::config::EpdConfig;
+use epdserve::core::slo::Slo;
+use epdserve::core::topology::Topology;
+use epdserve::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use epdserve::optimizer::objective::{ConfigEvaluator, Objective};
+use epdserve::sim::engine::{SimConfig, Simulator};
+use epdserve::util::quickcheck::{forall_cfg, pair, usize_in, Config};
+use epdserve::util::rng::Rng;
+use epdserve::workload::synthetic::SyntheticWorkload;
+use epdserve::workload::Workload;
+
+fn mode_configs(spec: &LmmSpec) -> Vec<SimConfig> {
+    vec![
+        SimConfig::new(
+            spec.clone(),
+            DeviceSpec::a100(),
+            EpdConfig::epd(Topology::new(2, 1, 1), 1, 1, 64),
+        ),
+        SimConfig::new(spec.clone(), DeviceSpec::a100(), EpdConfig::distserve(3, 1, 1, 64)),
+        SimConfig::new(spec.clone(), DeviceSpec::a100(), EpdConfig::aggregated(4, 32)),
+    ]
+}
+
+/// Lazy arrival streaming reproduces the legacy eager pre-push
+/// bit-for-bit across randomized workload shapes and all three modes —
+/// the pre/post-refactor equivalence property for the heap change.
+#[test]
+fn lazy_arrivals_bit_identical_to_eager_across_modes() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    forall_cfg(
+        Config { cases: 20, seed: 424_242, max_shrink_steps: 0 },
+        pair(usize_in(1, 6), usize_in(1, 40)),
+        |&(images, out)| {
+            let w = SyntheticWorkload::new(images as u32, out as u32);
+            let mut rng = Rng::new(images as u64 * 77 + out as u64);
+            let reqs = w.generate(&spec, 20, 1.2, &mut rng);
+            for lazy_cfg in mode_configs(&spec) {
+                let mut eager_cfg = lazy_cfg.clone();
+                eager_cfg.eager_arrivals = true;
+                let a = Simulator::run(&lazy_cfg, &reqs);
+                let b = Simulator::run(&eager_cfg, &reqs);
+                if a.events_processed != b.events_processed {
+                    return Err(format!(
+                        "{:?}: event counts diverged ({} vs {})",
+                        lazy_cfg.epd.mode, a.events_processed, b.events_processed
+                    ));
+                }
+                let (ja, jb) = (a.to_json().pretty(), b.to_json().pretty());
+                if ja != jb {
+                    return Err(format!(
+                        "{:?}: lazy vs eager outcome diverged (images={images} out={out})",
+                        lazy_cfg.epd.mode
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `record_timelines = false` is outcome-preserving: identical event
+/// counts, bitwise makespan/busy, exact means, identical attainment —
+/// with sketch percentiles inside their documented 1% relative bound.
+#[test]
+fn timeline_free_metrics_match_exact_across_modes() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    let slo = Slo::new(2.6, 0.05);
+    forall_cfg(
+        Config { cases: 15, seed: 909_090, max_shrink_steps: 0 },
+        pair(usize_in(0, 5), usize_in(1, 50)),
+        |&(images, out)| {
+            let w = SyntheticWorkload::new(images as u32, out as u32);
+            let mut rng = Rng::new(images as u64 * 131 + out as u64 + 7);
+            let reqs = w.generate(&spec, 25, 1.0, &mut rng);
+            for mut on in mode_configs(&spec) {
+                on.streamed_slo = Some(slo);
+                let mut off = on.clone();
+                off.record_timelines = false;
+                let a = Simulator::run(&on, &reqs);
+                let b = Simulator::run(&off, &reqs);
+                if a.events_processed != b.events_processed
+                    || a.makespan.to_bits() != b.makespan.to_bits()
+                    || a.streamed.finished != b.streamed.finished
+                {
+                    return Err(format!("{:?}: modelled outcome changed", on.epd.mode));
+                }
+                for i in 0..3 {
+                    if a.busy[i].to_bits() != b.busy[i].to_bits() {
+                        return Err(format!("{:?}: busy[{i}] changed", on.epd.mode));
+                    }
+                }
+                if a.slo_attainment(slo) != b.slo_attainment(slo) {
+                    return Err(format!("{:?}: attainment diverged", on.epd.mode));
+                }
+                if a.mean_ttft().to_bits() != b.mean_ttft().to_bits() {
+                    return Err(format!("{:?}: mean TTFT diverged", on.epd.mode));
+                }
+                let mut exact = a.ttfts();
+                if !exact.is_empty() {
+                    exact.sort_by(|x, y| x.partial_cmp(y).unwrap());
+                    for q in [0.5, 0.9, 0.99] {
+                        let rank = ((q * exact.len() as f64).ceil() as usize).max(1);
+                        let xq = exact[rank - 1];
+                        let approx = b.streamed.ttft.quantile(q);
+                        if (approx - xq).abs() > 0.01 * xq + 1e-12 {
+                            return Err(format!(
+                                "{:?}: sketch q={q} {approx} vs exact {xq}",
+                                on.epd.mode
+                            ));
+                        }
+                    }
+                }
+                // The whole point: no per-request state survives the run.
+                if b.peak_live_requests > reqs.len() || !b.timelines.is_empty() {
+                    return Err("timeline-free run leaked state".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Golden determinism: same seed ⇒ byte-identical `SimOutcome` JSON
+/// across independent runs, in every mode, with both metric paths.
+#[test]
+fn same_seed_serializes_byte_identical() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    let w = SyntheticWorkload::new(3, 12);
+    let mut rng = Rng::new(5150);
+    let reqs = w.generate(&spec, 30, 1.5, &mut rng);
+    for base in mode_configs(&spec) {
+        for timelines in [true, false] {
+            let mut cfg = base.clone();
+            cfg.record_timelines = timelines;
+            cfg.streamed_slo = Some(Slo::new(2.0, 0.05));
+            let a = Simulator::run(&cfg, &reqs).to_json().pretty();
+            let b = Simulator::run(&cfg, &reqs).to_json().pretty();
+            assert_eq!(a, b, "{:?} timelines={timelines}", cfg.epd.mode);
+        }
+    }
+}
+
+/// Role switching composes with the fast path: lazy vs eager stays
+/// bit-identical through switches, parking and wakes.
+#[test]
+fn lazy_matches_eager_under_role_switching() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    let w = SyntheticWorkload::new(1, 50);
+    let mut rng = Rng::new(31);
+    // The proven decode-pressure shift (long tails force E→D switches).
+    let mut reqs = w.generate(&spec, 40, 3.0, &mut rng);
+    for r in reqs.iter_mut().skip(4) {
+        r.output_tokens = 400;
+    }
+    let mut lazy_cfg = SimConfig::new(
+        spec.clone(),
+        DeviceSpec::a100(),
+        EpdConfig::epd(Topology::new(5, 2, 1), 1, 1, 128),
+    );
+    lazy_cfg.epd.role_switching = true;
+    lazy_cfg.switch_policy.cooldown = 2.0;
+    let mut eager_cfg = lazy_cfg.clone();
+    eager_cfg.eager_arrivals = true;
+    let a = Simulator::run(&lazy_cfg, &reqs);
+    let b = Simulator::run(&eager_cfg, &reqs);
+    assert!(a.role_switches > 0, "scenario must actually switch roles");
+    assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+}
+
+/// The parallel allocation sweep is bit-invariant across thread counts
+/// end-to-end (the same property `optimizer::objective` unit-tests, here
+/// over the real goodput search loop at integration scale).
+#[test]
+fn parallel_sweep_bit_invariant_across_thread_counts() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    let w = SyntheticWorkload::new(4, 10);
+    let ev = ConfigEvaluator {
+        spec: spec.clone(),
+        device: DeviceSpec::a100(),
+        workload: &w,
+        objective: Objective {
+            beta: 0.0,
+            gpu_cost: 1.0,
+            slo: Slo::new(2.6, 0.04),
+            threshold: 0.9,
+        },
+        n_requests: 20,
+        seed: 7,
+    };
+    let points = epdserve::optimizer::space::SearchSpace::paper_default(6).topology_grid();
+    let one = ev.goodput_many(&points, 1);
+    let four = ev.goodput_many(&points, 4);
+    let eight = ev.goodput_many(&points, 8);
+    for ((a, b), c) in one.iter().zip(four.iter()).zip(eight.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert_eq!(a.to_bits(), c.to_bits());
+    }
+}

@@ -1,5 +1,5 @@
 //! `cargo bench --bench fig10_offline_throughput` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("fig10").expect("repro fig10"));
+    epdserve::repro::bench_main("fig10");
 }

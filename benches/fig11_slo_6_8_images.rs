@@ -1,5 +1,5 @@
 //! `cargo bench --bench fig11_slo_6_8_images` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("fig11").expect("repro fig11"));
+    epdserve::repro::bench_main("fig11");
 }

@@ -1,5 +1,5 @@
 //! `cargo bench --bench fig12_npu_breakdown` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("fig12").expect("repro fig12"));
+    epdserve::repro::bench_main("fig12");
 }

@@ -1,5 +1,5 @@
 //! `cargo bench --bench fig2_capacity` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("fig2").expect("repro fig2"));
+    epdserve::repro::bench_main("fig2");
 }

@@ -1,5 +1,5 @@
 //! `cargo bench --bench fig5_slo_synthetic` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("fig5").expect("repro fig5"));
+    epdserve::repro::bench_main("fig5");
 }

@@ -1,5 +1,5 @@
 //! `cargo bench --bench fig6_ttft_dist` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("fig6").expect("repro fig6"));
+    epdserve::repro::bench_main("fig6");
 }

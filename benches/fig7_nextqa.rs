@@ -1,5 +1,5 @@
 //! `cargo bench --bench fig7_nextqa` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("fig7").expect("repro fig7"));
+    epdserve::repro::bench_main("fig7");
 }

@@ -1,5 +1,5 @@
 //! `cargo bench --bench fig8_videomme` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("fig8").expect("repro fig8"));
+    epdserve::repro::bench_main("fig8");
 }

@@ -1,5 +1,5 @@
 //! `cargo bench --bench fig9_npu_slo` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("fig9").expect("repro fig9"));
+    epdserve::repro::bench_main("fig9");
 }

@@ -1,5 +1,5 @@
 //! `cargo bench --bench table1_ttft_frames` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("table1").expect("repro table1"));
+    epdserve::repro::bench_main("table1");
 }

@@ -1,5 +1,5 @@
 //! `cargo bench --bench table2_images_per_req` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("table2").expect("repro table2"));
+    epdserve::repro::bench_main("table2");
 }

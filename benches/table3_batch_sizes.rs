@@ -1,5 +1,5 @@
 //! `cargo bench --bench table3_batch_sizes` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("table3").expect("repro table3"));
+    epdserve::repro::bench_main("table3");
 }

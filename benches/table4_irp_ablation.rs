@@ -1,5 +1,5 @@
 //! `cargo bench --bench table4_irp_ablation` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("table4").expect("repro table4"));
+    epdserve::repro::bench_main("table4");
 }

@@ -1,5 +1,5 @@
 //! `cargo bench --bench table5_optimizer_ablation` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("table5").expect("repro table5"));
+    epdserve::repro::bench_main("table5");
 }

@@ -1,5 +1,5 @@
 //! `cargo bench --bench table6_role_switch` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("table6").expect("repro table6"));
+    epdserve::repro::bench_main("table6");
 }

@@ -1,5 +1,5 @@
 //! `cargo bench --bench table7_audio` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("table7").expect("repro table7"));
+    epdserve::repro::bench_main("table7");
 }

@@ -1,5 +1,5 @@
 //! `cargo bench --bench table8_kvcache` — regenerates the paper artifact via
 //! `epdserve::repro`; results land in results/*.{txt,json}.
 fn main() {
-    epdserve::util::bench::table(|| epdserve::repro::run("table8").expect("repro table8"));
+    epdserve::repro::bench_main("table8");
 }

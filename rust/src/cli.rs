@@ -67,7 +67,12 @@ fn cli() -> Cli {
                 opt(
                     "workload",
                     Some("synthetic"),
-                    "synthetic | cluster-scale (mixed chat + many-image on the 64-instance reference cluster; ignores --mode/--topology/--images/--output-tokens)",
+                    "synthetic | cluster-scale | diurnal (cluster-scale/diurnal run on the 64-instance reference cluster; ignore --mode/--topology/--images/--output-tokens)",
+                ),
+                opt(
+                    "faults",
+                    Some("off"),
+                    "chaos injection: off | wave | wave:<seed> (seeded crash/link-degrade/straggler/OOM wave; replays bit-for-bit per seed)",
                 ),
                 flag("no-irp", "disable intra-request parallelism"),
                 flag(
@@ -206,6 +211,16 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                         EpdConfig::epd(ClusterScaleWorkload::topology64(), 1, 1, 128),
                     )
                 }
+                "diurnal" => {
+                    // Multi-day diurnal trace with flash crowds, over the
+                    // cluster-scale mix (same reference topology).
+                    use crate::workload::cluster_scale::ClusterScaleWorkload;
+                    use crate::workload::diurnal::DiurnalWorkload;
+                    (
+                        Box::new(DiurnalWorkload::default()),
+                        EpdConfig::epd(ClusterScaleWorkload::topology64(), 1, 1, 128),
+                    )
+                }
                 "synthetic" => (
                     Box::new(SyntheticWorkload::new(
                         args.u64("images") as u32,
@@ -216,6 +231,24 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                 other => anyhow::bail!("unknown workload '{other}'"),
             };
             epd.irp = !args.flag("no-irp");
+            match args.str("faults") {
+                "off" => {}
+                s if s == "wave" || s.starts_with("wave:") => {
+                    // A zero seed means "off" in the config schema, so the
+                    // bare form picks a fixed non-zero default.
+                    let seed = match s.strip_prefix("wave:") {
+                        Some(v) => v
+                            .parse::<u64>()
+                            .map_err(|_| anyhow::anyhow!("--faults wave:<seed> needs a number"))?,
+                        None => 0xC4A05,
+                    };
+                    if seed == 0 {
+                        anyhow::bail!("--faults wave:<seed> needs a non-zero seed (0 means off)");
+                    }
+                    epd.fault_seed = seed;
+                }
+                other => anyhow::bail!("unknown --faults '{other}' (off | wave | wave:<seed>)"),
+            }
             let mut cfg = SimConfig::new(spec.clone(), device, epd);
             let slo = Slo::new(args.f64("slo-ttft"), args.f64("slo-tpot"));
             if args.flag("no-timelines") {
@@ -250,6 +283,21 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                     "switches:   {} ({} plans / {} steps)",
                     out.role_switches, out.reallocation.plans, out.reallocation.planned_steps
                 );
+                if !cfg.faults.is_empty() {
+                    let r = &out.resilience;
+                    println!(
+                        "faults:     {} crashes / {} link degradations / {} ooms / {} stragglers",
+                        r.crashes, r.link_degradations, r.encoder_ooms, r.straggler_instances
+                    );
+                    println!(
+                        "resilience: lost {} retried {} retargeted {}  recovery {:.1}s  SLO dip {:.3}",
+                        r.requests_lost,
+                        r.requests_retried,
+                        r.requests_retargeted,
+                        r.recovery_seconds,
+                        r.slo_dip
+                    );
+                }
                 if !out.timelines_recorded {
                     let s = &out.streamed;
                     println!(

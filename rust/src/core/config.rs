@@ -209,6 +209,24 @@ pub struct EpdConfig {
     /// Real-engine monitor EWMA weight in (0, 1]. Default 0.4 (the
     /// previously hard-coded value). The simulator keeps its own 0.3.
     pub monitor_alpha: f64,
+    /// Fault-injection seed. 0 (the default) disables the chaos layer
+    /// entirely — the simulator's fault plan stays empty and every run is
+    /// bit-for-bit identical to a build without fault injection. Any
+    /// non-zero value seeds a deterministic fault wave (see
+    /// `sim::fault::FaultPlan::wave`) shaped by the `fault_*` knobs below.
+    pub fault_seed: u64,
+    /// Virtual time (seconds) the fault wave starts at.
+    pub fault_wave_at: f64,
+    /// Number of distinct instances the wave crashes (staggered).
+    pub fault_crashes: u32,
+    /// Seconds a crashed instance stays down before restarting.
+    pub fault_downtime: f64,
+    /// Link service-time multiplier during the wave (<= 1 disables link
+    /// degradation).
+    pub fault_link_factor: f64,
+    /// Permanent service-time multiplier for straggler instances (<= 1
+    /// disables stragglers).
+    pub fault_straggler_factor: f64,
 }
 
 impl EpdConfig {
@@ -241,6 +259,12 @@ impl EpdConfig {
             plan_interval: 0.0,
             sample_interval: 0.1,
             monitor_alpha: 0.4,
+            fault_seed: 0,
+            fault_wave_at: 5.0,
+            fault_crashes: 1,
+            fault_downtime: 5.0,
+            fault_link_factor: 1.0,
+            fault_straggler_factor: 1.0,
         }
     }
 
@@ -303,6 +327,12 @@ impl EpdConfig {
     /// plan_interval = 0.0     # seconds between planning passes; 0 = every tick
     /// sample_interval = 0.1   # engine monitor sample period, seconds
     /// monitor_alpha = 0.4     # engine monitor EWMA weight
+    /// fault_seed = 0          # 0 = chaos off; non-zero seeds a fault wave
+    /// fault_wave_at = 5.0     # virtual seconds the wave starts at
+    /// fault_crashes = 1       # instances crashed by the wave
+    /// fault_downtime = 5.0    # seconds a crashed instance stays down
+    /// fault_link_factor = 1.0 # link slow-down during the wave (1 = off)
+    /// fault_straggler_factor = 1.0 # permanent straggler slow-down (1 = off)
     /// [sched]
     /// queue = "fcfs"          # fcfs | sjf | slo-aware
     /// assign = "least-loaded" # round-robin | least-loaded
@@ -343,6 +373,24 @@ impl EpdConfig {
         if let Some(v) = doc.get_f64("", "monitor_alpha") {
             cfg.monitor_alpha = v.clamp(0.01, 1.0);
         }
+        if let Some(v) = doc.get_i64("", "fault_seed") {
+            cfg.fault_seed = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_f64("", "fault_wave_at") {
+            cfg.fault_wave_at = v.max(0.0);
+        }
+        if let Some(v) = doc.get_i64("", "fault_crashes") {
+            cfg.fault_crashes = v.max(0) as u32;
+        }
+        if let Some(v) = doc.get_f64("", "fault_downtime") {
+            cfg.fault_downtime = v.max(0.001);
+        }
+        if let Some(v) = doc.get_f64("", "fault_link_factor") {
+            cfg.fault_link_factor = v.max(0.0);
+        }
+        if let Some(v) = doc.get_f64("", "fault_straggler_factor") {
+            cfg.fault_straggler_factor = v.max(0.0);
+        }
         if let Some(q) = doc.get_str("sched", "queue") {
             let q = QueuePolicy::parse(q).context("bad sched.queue")?;
             cfg.sched_encode.queue = q;
@@ -377,6 +425,9 @@ mod tests {
         assert_eq!(cfg.plan_interval, 0.0, "legacy cadence is the default");
         assert_eq!(cfg.sample_interval, 0.1);
         assert_eq!(cfg.monitor_alpha, 0.4);
+        assert_eq!(cfg.fault_seed, 0, "chaos is opt-in");
+        assert_eq!(cfg.fault_link_factor, 1.0);
+        assert_eq!(cfg.fault_straggler_factor, 1.0);
 
         let ds = EpdConfig::distserve(7, 1, 1, 128);
         assert_eq!(ds.mode, DeploymentMode::PdDisagg);
@@ -404,6 +455,12 @@ planner = "predictive"
 plan_interval = 2.5
 sample_interval = 0.05
 monitor_alpha = 0.25
+fault_seed = 7
+fault_wave_at = 12.0
+fault_crashes = 2
+fault_downtime = 3.5
+fault_link_factor = 4.0
+fault_straggler_factor = 1.5
 [sched]
 queue = "sjf"
 assign = "round-robin"
@@ -421,6 +478,12 @@ assign = "round-robin"
         assert_eq!(cfg.plan_interval, 2.5);
         assert_eq!(cfg.sample_interval, 0.05);
         assert_eq!(cfg.monitor_alpha, 0.25);
+        assert_eq!(cfg.fault_seed, 7);
+        assert_eq!(cfg.fault_wave_at, 12.0);
+        assert_eq!(cfg.fault_crashes, 2);
+        assert_eq!(cfg.fault_downtime, 3.5);
+        assert_eq!(cfg.fault_link_factor, 4.0);
+        assert_eq!(cfg.fault_straggler_factor, 1.5);
         assert_eq!(cfg.sched_decode.queue, QueuePolicy::Sjf);
         assert_eq!(cfg.sched_encode.assign, AssignPolicy::RoundRobin);
         let d = cfg.instances.iter().find(|i| i.role == Stage::Decode).unwrap();

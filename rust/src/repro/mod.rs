@@ -56,3 +56,33 @@ pub fn run(id: &str) -> anyhow::Result<Vec<TableReport>> {
     };
     Ok(out)
 }
+
+/// Shared entry point for the `benches/` wrapper binaries: run one
+/// experiment under the bench harness, reporting the failing id instead
+/// of a context-free unwrap when an experiment errors.
+pub fn bench_main(id: &str) {
+    crate::util::bench::table(|| match run(id) {
+        Ok(tables) => tables,
+        Err(e) => panic!("repro '{id}' failed: {e:#}"),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_ids_error_with_the_id() {
+        let err = run("fig99").unwrap_err().to_string();
+        assert!(err.contains("fig99"), "error names the id: {err}");
+    }
+
+    #[test]
+    fn all_ids_are_unique_and_in_paper_order() {
+        let mut seen = std::collections::HashSet::new();
+        for id in ALL_IDS {
+            assert!(seen.insert(*id), "duplicate id {id}");
+        }
+        assert_eq!(ALL_IDS.len(), 17);
+    }
+}

@@ -218,6 +218,51 @@ impl CostModel {
     }
 }
 
+/// Fault-injection seam: per-instance service-time multipliers layered on
+/// top of the cost model. A straggling instance takes `factor`× as long
+/// for every stage step it runs; the all-ones map is the exact identity
+/// (`stretch` returns its input untouched, bit for bit), so a run with no
+/// stragglers is indistinguishable from one without the seam.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StragglerMap {
+    factors: Vec<f64>,
+}
+
+impl StragglerMap {
+    /// All instances healthy (factor 1.0).
+    pub fn uniform(n: usize) -> StragglerMap {
+        StragglerMap { factors: vec![1.0; n] }
+    }
+
+    /// Set `instance`'s multiplier; out-of-range indices are ignored.
+    pub fn set(&mut self, instance: usize, factor: f64) {
+        if instance < self.factors.len() {
+            self.factors[instance] = factor.max(1e-9);
+        }
+    }
+
+    /// Current multiplier for `instance` (1.0 when unknown).
+    pub fn factor(&self, instance: usize) -> f64 {
+        self.factors.get(instance).copied().unwrap_or(1.0)
+    }
+
+    /// Stretch a stage duration by `instance`'s multiplier. Healthy
+    /// instances return `duration` unchanged (no arithmetic applied).
+    pub fn stretch(&self, instance: usize, duration: f64) -> f64 {
+        let f = self.factor(instance);
+        if f == 1.0 {
+            duration
+        } else {
+            duration * f
+        }
+    }
+
+    /// Number of instances with a non-unit multiplier.
+    pub fn slowed(&self) -> u64 {
+        self.factors.iter().filter(|&&f| f != 1.0).count() as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -365,5 +410,23 @@ mod tests {
         assert_eq!(c.encode_time(0), 0.0);
         assert_eq!(c.prefill_time(0), 0.0);
         assert_eq!(c.decode_step_time(0, 100), 0.0);
+    }
+
+    #[test]
+    fn straggler_map_identity_and_stretch() {
+        let mut m = StragglerMap::uniform(3);
+        assert_eq!(m.slowed(), 0);
+        // Healthy path is the exact identity, bit for bit.
+        let d = 0.123_456_789_f64;
+        assert_eq!(m.stretch(0, d).to_bits(), d.to_bits());
+        assert_eq!(m.stretch(99, d).to_bits(), d.to_bits(), "unknown instance is healthy");
+        m.set(1, 1.5);
+        assert_eq!(m.slowed(), 1);
+        assert!((m.stretch(1, 2.0) - 3.0).abs() < 1e-12);
+        assert_eq!(m.stretch(0, d).to_bits(), d.to_bits(), "others untouched");
+        m.set(99, 2.0); // ignored, no panic
+        assert_eq!(m.factor(99), 1.0);
+        m.set(1, 1.0);
+        assert_eq!(m.slowed(), 0);
     }
 }

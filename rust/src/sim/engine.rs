@@ -57,8 +57,9 @@ use crate::sched::batcher::Batcher;
 use crate::sched::queue::{QueuedRequest, StageQueue};
 
 use super::arena::Slab;
-use super::cost::CostModel;
+use super::cost::{CostModel, StragglerMap};
 use super::event::{Event, EventQueue};
+use super::fault::{FaultAction, FaultKind, FaultPlan, ResilienceStats};
 use super::link::LinkScheduler;
 use super::outcome::{AdmissionStats, EpOverlapStats, PdOverlapStats, SimOutcome, StreamedMetrics};
 
@@ -86,10 +87,17 @@ pub struct SimConfig {
     /// Outcome-identical by construction; the fast-path property tests
     /// pin it bit-for-bit.
     pub eager_arrivals: bool,
+    /// Deterministic chaos schedule (crashes, link degradation,
+    /// stragglers, encoder OOMs). Defaults to [`FaultPlan::none()`] —
+    /// the empty plan pushes no events and is bit-for-bit dormant.
+    /// Populated from the `fault_*` config keys by
+    /// [`FaultPlan::from_epd`]; tests and benches set it directly.
+    pub faults: FaultPlan,
 }
 
 impl SimConfig {
     pub fn new(spec: LmmSpec, device: DeviceSpec, epd: EpdConfig) -> SimConfig {
+        let faults = FaultPlan::from_epd(&epd);
         SimConfig {
             spec,
             device,
@@ -100,6 +108,7 @@ impl SimConfig {
             record_timelines: true,
             streamed_slo: None,
             eager_arrivals: false,
+            faults,
         }
     }
 }
@@ -150,6 +159,10 @@ struct Inst {
     mm: MmBlockManager,
     /// Items being processed right now (completion event will land).
     in_flight: Vec<QueuedRequest>,
+    /// An injected encoder OOM threw away the in-flight batch: the
+    /// already-scheduled completion event is a no-op that just frees the
+    /// device (the shards were re-queued at the abort).
+    oom_abort: bool,
 }
 
 impl Inst {
@@ -327,6 +340,20 @@ pub struct Simulator<'a> {
     rejected: u32,
     finished_count: usize,
     total_count: usize,
+    // ---- fault injection (dormant when the plan is empty) ----
+    /// Per-instance service-time multipliers from the fault plan's
+    /// stragglers; the all-ones identity returns every duration untouched.
+    stragglers: StragglerMap,
+    /// The clamped plan flattened into a time-sorted action list;
+    /// [`Event::Fault`] payloads index into it. Empty plans push no
+    /// events at all, keeping the heap (and every seq) bit-identical.
+    fault_schedule: Vec<FaultAction>,
+    /// Per-SLO-window (terminated, attained) counters feeding the
+    /// recovery metrics; only maintained while faults are scheduled.
+    fault_windows: Vec<(u64, u64)>,
+    /// Earliest timed fault (+inf when none) — the recovery anchor.
+    first_fault_at: f64,
+    resilience: ResilienceStats,
 }
 
 impl<'a> Simulator<'a> {
@@ -364,7 +391,20 @@ impl<'a> Simulator<'a> {
                 kv,
                 mm,
                 in_flight: Vec::new(),
+                oom_abort: false,
             });
+        }
+
+        // Fault plan: clamp to the real topology, flatten to a schedule,
+        // and bake the (static) stragglers into the multiplier map. All
+        // of this is pure bookkeeping for an empty plan.
+        let mut plan = cfg.faults.clone();
+        plan.clamp_instances(insts.len());
+        let fault_schedule = plan.schedule();
+        let first_fault_at = plan.first_fault_at();
+        let mut stragglers = StragglerMap::uniform(insts.len());
+        for s in &plan.stragglers {
+            stragglers.set(s.instance, s.factor);
         }
 
         // Arrivals stream lazily from the workload in arrival order. The
@@ -437,6 +477,11 @@ impl<'a> Simulator<'a> {
             rejected: 0,
             finished_count: 0,
             total_count: requests.len(),
+            stragglers,
+            fault_schedule,
+            fault_windows: Vec::new(),
+            first_fault_at,
+            resilience: ResilienceStats::default(),
         };
         if cfg.eager_arrivals {
             while sim.next_arrival < sim.total_count {
@@ -448,6 +493,13 @@ impl<'a> Simulator<'a> {
         // Auto-assigned seq = n + 1, exactly the legacy post-arrival slot.
         if cfg.epd.role_switching {
             sim.events.push(cfg.monitor_interval, Event::MonitorTick);
+        }
+        // Fault events enter the heap only for a non-empty plan, so an
+        // empty plan leaves the heap — times, payloads and every seq —
+        // bit-for-bit identical to a build without the fault layer.
+        for i in 0..sim.fault_schedule.len() {
+            let at = sim.fault_schedule[i].at;
+            sim.events.push(at, Event::Fault { action: i as u32 });
         }
         sim
     }
@@ -506,6 +558,7 @@ impl<'a> Simulator<'a> {
             Event::FusedStepDone { instance } => self.on_fused_step_done(instance as usize),
             Event::MonitorTick => self.on_monitor_tick(),
             Event::SwitchDone { instance } => self.on_switch_done(instance as usize),
+            Event::Fault { action } => self.on_fault(action as usize),
         }
     }
 
@@ -534,6 +587,16 @@ impl<'a> Simulator<'a> {
             }
         }
         timelines.sort_by_key(|t| t.id);
+        let mut resilience = self.resilience;
+        resilience.straggler_instances = self.stragglers.slowed();
+        let (recovery_seconds, slo_dip) = super::fault::recovery_metrics(
+            &self.fault_windows,
+            self.cfg.faults.slo_window,
+            self.first_fault_at,
+            self.max_finish,
+        );
+        resilience.recovery_seconds = recovery_seconds;
+        resilience.slo_dip = slo_dip;
         SimOutcome {
             timelines,
             timelines_recorded: self.cfg.record_timelines,
@@ -551,6 +614,7 @@ impl<'a> Simulator<'a> {
             ep_overlap: self.ep_overlap,
             pd_overlap: self.pd_overlap,
             links: self.links.into_stats(),
+            resilience,
         }
     }
 
@@ -913,6 +977,9 @@ impl<'a> Simulator<'a> {
         // Batched execution pays the per-invocation overhead once; each
         // item's est_cost included it, so refund the duplicates.
         duration -= self.cost.overheads.encode_step * (items.len() as f64 - 1.0);
+        // Straggler stretch before the chunk emissions below, so a slow
+        // encoder's token stream spreads over its real service window.
+        let duration = self.stragglers.stretch(idx, duration);
         if self.chunked() {
             // Streamed handoff: each shard's tokens leave the encoder in
             // fixed-size chunks *while it encodes* (the CPU preprocesses
@@ -991,6 +1058,17 @@ impl<'a> Simulator<'a> {
     }
 
     fn on_encode_done(&mut self, idx: usize) {
+        if self.insts[idx].oom_abort {
+            // Completion event of a batch an injected OOM threw away: the
+            // shards were re-queued at the abort and nothing completed.
+            // The device stays busy until this boundary (the OOM'd step
+            // still occupied it), then pulls the next batch.
+            debug_assert!(self.insts[idx].in_flight.is_empty());
+            self.insts[idx].oom_abort = false;
+            self.insts[idx].busy = false;
+            self.kick_instance(idx);
+            return;
+        }
         let mut items = std::mem::take(&mut self.insts[idx].in_flight);
         self.insts[idx].busy = false;
         for item in items.drain(..) {
@@ -1260,8 +1338,11 @@ impl<'a> Simulator<'a> {
             let r = &mut self.reqs[item.id];
             r.tl.prefill_start = self.now;
         }
-        let duration = self.cost.prefill_time(total_tokens)
-            + self.cost.overheads.prefill_per_request * items.len() as f64;
+        let duration = self.stragglers.stretch(
+            idx,
+            self.cost.prefill_time(total_tokens)
+                + self.cost.overheads.prefill_per_request * items.len() as f64,
+        );
         let jobs = items.len().max(1) as f64;
         let mut ids = std::mem::take(&mut self.scratch_ids);
         ids.clear();
@@ -1325,6 +1406,7 @@ impl<'a> Simulator<'a> {
             self.ep_overlap.prefill_passes += 1;
             deltas.push((item.id, delta));
         }
+        let duration = self.stragglers.stretch(idx, duration);
         let jobs = deltas.len().max(1) as f64;
         self.insts[idx].busy = true;
         self.set_in_flight(idx, items);
@@ -1757,7 +1839,7 @@ impl<'a> Simulator<'a> {
             })
             .sum::<u64>()
             / batch as u64;
-        let duration = self.cost.decode_step_time(batch, avg_ctx);
+        let duration = self.stragglers.stretch(idx, self.cost.decode_step_time(batch, avg_ctx));
         self.insts[idx].busy = true;
         self.busy_acc[2] += duration;
         self.profiler.observe_service(Stage::Decode, duration);
@@ -1857,6 +1939,9 @@ impl<'a> Simulator<'a> {
         } else {
             duration += device;
         }
+        // Straggler stretch before the PD streaming below, so a slow
+        // fused instance's layer groups spread over its real window.
+        let duration = self.stragglers.stretch(idx, duration);
         let jobs = items.len().max(1) as f64;
         let mut ids = std::mem::take(&mut self.scratch_ids);
         ids.clear();
@@ -1929,11 +2014,14 @@ impl<'a> Simulator<'a> {
         self.streamed.tpot.record(tpot);
         self.streamed.latency.record(latency);
         self.streamed.finished += 1;
+        let mut attained = true;
         if let Some(slo) = self.cfg.streamed_slo {
-            if slo.attained(ttft, tpot) {
+            attained = slo.attained(ttft, tpot);
+            if attained {
                 self.streamed.slo_attained += 1;
             }
         }
+        self.record_fault_window(attained);
         if self.cfg.record_timelines {
             self.done_timelines.push(tl);
         }
@@ -2154,6 +2242,170 @@ impl<'a> Simulator<'a> {
             }
         }
     }
+
+    // ---- fault injection (only reachable with a non-empty FaultPlan) ----
+
+    fn on_fault(&mut self, i: usize) {
+        let action = self.fault_schedule[i].clone();
+        match action.kind {
+            FaultKind::Crash { downtime } => self.crash_instance(action.instance, downtime),
+            FaultKind::LinkDegrade { factor } => {
+                self.links.set_degradation(action.instance, factor);
+                self.resilience.link_degradations += 1;
+            }
+            FaultKind::LinkRestore => self.links.set_degradation(action.instance, 1.0),
+            FaultKind::EncoderOom => self.encoder_oom(action.instance),
+        }
+    }
+
+    /// Fail-stop crash with restart: the instance loses its queued work
+    /// (re-homed to same-kind siblings), its KV/MM state (active decode
+    /// requests are *lost* — their KV died with the device and the model
+    /// has no recompute path for decoded tokens) and its streamed-PD
+    /// reservations (evacuated requests re-target through the same seam
+    /// a role switch uses). The batch the device was running completes at
+    /// its already-scheduled boundary — exactly one completion event per
+    /// busy instance is a heap invariant the crash must not break — so
+    /// the crash takes effect from that boundary on. Restart reuses the
+    /// switch machinery: `switching` marks the instance down and a
+    /// `SwitchDone` at `now + downtime` brings it back in the same role.
+    fn crash_instance(&mut self, idx: usize, downtime: f64) {
+        if self.insts[idx].switching {
+            return; // already down (mid-switch or an earlier crash)
+        }
+        self.resilience.crashes += 1;
+        let kind = self.insts[idx].kind;
+        // Queued (not-yet-started) work survives the crash — it only
+        // lived in the scheduler: re-home it round-robin onto live
+        // same-kind siblings; with none it waits out the downtime here.
+        let mut drained = self.insts[idx].queue.drain_all();
+        let drained_decode = self.insts[idx].decode_queue.drain_all();
+        self.resilience.requests_retried += (drained.len() + drained_decode.len()) as u64;
+        let siblings: Vec<usize> = self
+            .insts
+            .iter()
+            .enumerate()
+            .filter(|(i, inst)| *i != idx && inst.kind == kind && !inst.switching)
+            .map(|(i, _)| i)
+            .collect();
+        if siblings.is_empty() {
+            for item in drained.drain(..) {
+                self.insts[idx].queue.push(item);
+            }
+            for item in drained_decode {
+                self.insts[idx].decode_queue.push(item);
+            }
+        } else {
+            for (k, item) in drained.drain(..).enumerate() {
+                let target = siblings[k % siblings.len()];
+                self.insts[target].queue.push(item);
+                self.kick_instance(target);
+            }
+            for (k, item) in drained_decode.into_iter().enumerate() {
+                let target = siblings[k % siblings.len()];
+                self.insts[target].decode_queue.push(item);
+                self.kick_instance(target);
+            }
+        }
+        // Active decode requests die with the device's KV. Each
+        // terminates exactly once here — counted lost, never re-run — so
+        // the conservation invariant (submitted = completed + rejected +
+        // lost) holds under any crash schedule.
+        let active = std::mem::take(&mut self.insts[idx].active);
+        for id in active {
+            self.lose_request(id);
+        }
+        // Mark the instance down *before* evacuating reservations so
+        // re-target candidate selection can never pick it, then wipe its
+        // device state (role and KV sizing are unchanged — the restart
+        // comes back cold but identical).
+        self.insts[idx].switching = true;
+        self.insts[idx].kv.clear();
+        self.insts[idx].mm.clear();
+        self.insts[idx].reserved_cost = 0.0;
+        let evacuated = std::mem::take(&mut self.insts[idx].reserved_ready);
+        self.resilience.requests_retargeted += evacuated.len() as u64;
+        for id in evacuated {
+            self.reqs[id].pd_joined = false;
+            self.pd_retarget(id);
+        }
+        // Still-streaming requests bound to the dead target self-heal:
+        // their next chunk arrival sees the wiped reservation
+        // (`pd_target_valid` checks `kv.tokens_of`) and re-targets. Count
+        // them now so the resilience block reflects every displacement.
+        let mut streaming = 0u64;
+        for (_slot, r) in self.reqs.iter() {
+            if r.pd_target == Some(idx) && r.pd_reserved && !r.pd_joined && !r.zombie {
+                streaming += 1;
+            }
+        }
+        self.resilience.requests_retargeted += streaming;
+        self.events.push(self.now + downtime, Event::SwitchDone { instance: idx as u32 });
+    }
+
+    /// Terminate a request killed by a crash: accounted like a rejection
+    /// (no timeline, no latency samples) but counted separately as lost.
+    fn lose_request(&mut self, id: RequestId) {
+        self.resilience.requests_lost += 1;
+        self.finished_count += 1;
+        self.record_fault_window(false);
+        if !self.pd_parked.is_empty() {
+            if let Some(pos) = self.pd_parked.iter().position(|&p| p == id) {
+                self.pd_parked.remove(pos);
+            }
+        }
+        let defer = {
+            let r = &mut self.reqs[id];
+            r.zombie = true;
+            r.pending_nudges > 0
+        };
+        if !defer {
+            self.reqs.remove(id);
+        }
+    }
+
+    /// An encoder OOM aborts the in-flight shard batch: the work is
+    /// thrown away (its completion event no-ops via [`Inst::oom_abort`])
+    /// and the shards re-queue on the same instance, re-running after the
+    /// failed step's window. Chunked-streaming mode is exempt: its chunk
+    /// emissions were committed to the wire at batch start and a partial
+    /// re-emission would double-count tokens — there the encoder is
+    /// modelled as checkpointing per chunk, and the OOM is a no-op.
+    fn encoder_oom(&mut self, idx: usize) {
+        let inst = &self.insts[idx];
+        if inst.kind != WorkKind::Encode || !inst.busy || inst.switching || self.chunked() {
+            return;
+        }
+        self.resilience.encoder_ooms += 1;
+        let mut items = std::mem::take(&mut self.insts[idx].in_flight);
+        self.resilience.requests_retried += items.len() as u64;
+        self.insts[idx].oom_abort = true;
+        for item in items.drain(..) {
+            self.insts[idx].queue.push(item);
+        }
+        self.recycle_batch_vec(items);
+    }
+
+    /// Fold one terminated request into its SLO window's counters — the
+    /// series the recovery metrics read. Only maintained while faults are
+    /// scheduled, so fault-free runs pay nothing.
+    fn record_fault_window(&mut self, attained: bool) {
+        if self.fault_schedule.is_empty() {
+            return;
+        }
+        let w = self.cfg.faults.slo_window;
+        if !(w > 0.0) || !self.now.is_finite() {
+            return;
+        }
+        let i = (self.now / w) as usize;
+        if self.fault_windows.len() <= i {
+            self.fault_windows.resize(i + 1, (0, 0));
+        }
+        self.fault_windows[i].0 += 1;
+        if attained {
+            self.fault_windows[i].1 += 1;
+        }
+    }
 }
 
 fn work_kind(mode: DeploymentMode, role: Stage) -> WorkKind {
@@ -2248,6 +2500,113 @@ mod tests {
         ] {
             let out = Simulator::run(&cfg, &reqs);
             assert_eq!(out.finished().count(), 20, "{:?}", cfg.epd.mode);
+        }
+    }
+
+    fn conserved(out: &SimOutcome) -> usize {
+        out.streamed.finished as usize
+            + out.rejected as usize
+            + out.resilience.requests_lost as usize
+    }
+
+    #[test]
+    fn decode_crash_conserves_requests_and_replays_deterministically() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(30, 1.0, 2, 24, &spec);
+        // 2E1P2D: instances [E, E, P, D, D] — crash decode idx 3 mid-run.
+        let epd = EpdConfig::epd(Topology::new(2, 1, 2), 1, 1, 128);
+        let mut cfg = SimConfig::new(spec.clone(), DeviceSpec::a100(), epd);
+        cfg.faults = FaultPlan::none().with_crash(3.0, 3, 2.0);
+        let out = Simulator::run(&cfg, &reqs);
+        assert_eq!(out.resilience.crashes, 1);
+        assert_eq!(conserved(&out), out.submitted, "every request terminates exactly once");
+        let again = Simulator::run(&cfg, &reqs);
+        assert_eq!(
+            out.to_json().pretty(),
+            again.to_json().pretty(),
+            "same seed + plan replays byte-identically"
+        );
+    }
+
+    #[test]
+    fn encode_crash_loses_nothing_and_rehomes_queued_shards() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(25, 2.0, 2, 8, &spec);
+        let mut cfg = epd_cfg(&spec); // 5E2P1D: encode instances 0..5
+        cfg.faults = FaultPlan::none().with_crash(0.5, 0, 3.0);
+        let out = Simulator::run(&cfg, &reqs);
+        assert_eq!(out.resilience.crashes, 1);
+        // Encode instances hold no decode state: nothing is lost, the
+        // queued shards re-home to the four live encoder siblings.
+        assert_eq!(out.resilience.requests_lost, 0);
+        assert_eq!(out.streamed.finished, 25);
+        assert_eq!(out.rejected, 0);
+    }
+
+    #[test]
+    fn encoder_oom_aborts_and_reruns_the_batch() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(25, 3.0, 4, 8, &spec);
+        let base = epd_cfg(&spec);
+        let fault_free = Simulator::run(&base, &reqs);
+        // Mid-way through some request's encode window every encoder gets
+        // an OOM; whichever are busy abort (deterministically).
+        let tl = fault_free.finished().next().expect("a finished request");
+        let mid = 0.5 * (tl.encode_start + tl.encode_end);
+        let mut cfg = epd_cfg(&spec);
+        let mut plan = FaultPlan::none();
+        for e in 0..5 {
+            plan = plan.with_encoder_oom(mid, e);
+        }
+        cfg.faults = plan;
+        let out = Simulator::run(&cfg, &reqs);
+        assert!(out.resilience.encoder_ooms >= 1, "at least one busy encoder aborted");
+        assert!(out.resilience.requests_retried >= 1);
+        assert_eq!(conserved(&out), out.submitted);
+        assert_eq!(out.resilience.requests_lost, 0, "OOM retries, never loses");
+        assert!(
+            out.makespan >= fault_free.makespan,
+            "thrown-away encode work cannot speed the run up"
+        );
+    }
+
+    #[test]
+    fn stragglers_stretch_the_makespan() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(20, 1.0, 2, 24, &spec);
+        let base = epd_cfg(&spec);
+        let fault_free = Simulator::run(&base, &reqs);
+        let mut cfg = epd_cfg(&spec);
+        cfg.faults = FaultPlan::none().with_straggler(7, 2.0); // the lone decoder
+        let out = Simulator::run(&cfg, &reqs);
+        assert_eq!(out.resilience.straggler_instances, 1);
+        assert!(
+            out.makespan > fault_free.makespan,
+            "2x slower decode steps must finish later: {} vs {}",
+            out.makespan,
+            fault_free.makespan
+        );
+        assert_eq!(out.streamed.finished, 20);
+    }
+
+    #[test]
+    fn neutral_fault_plan_leaves_modelled_quantities_identical() {
+        // Factor-1.0 link windows and stragglers fire events but change
+        // no duration: every modelled metric must match the fault-free
+        // run bit-for-bit (only event counts may differ).
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = mk_requests(20, 1.0, 2, 12, &spec);
+        let base = Simulator::run(&epd_cfg(&spec), &reqs);
+        let mut cfg = epd_cfg(&spec);
+        cfg.faults =
+            FaultPlan::none().with_link_degrade(1.0, 0, 1.0, 2.0).with_straggler(7, 1.0);
+        let out = Simulator::run(&cfg, &reqs);
+        assert_eq!(out.makespan.to_bits(), base.makespan.to_bits());
+        assert_eq!(out.streamed.finished, base.streamed.finished);
+        assert_eq!(out.resilience.straggler_instances, 0, "factor 1.0 is not a straggler");
+        for (a, b) in out.timelines.iter().zip(base.timelines.iter()) {
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+            assert_eq!(a.first_token.to_bits(), b.first_token.to_bits());
         }
     }
 

@@ -60,6 +60,10 @@ pub enum Event {
     MonitorTick,
     /// A role-switching migration completed; the instance onloads.
     SwitchDone { instance: EvInst },
+    /// A scheduled fault fires (payload: index into the engine's
+    /// flattened [`FaultPlan`](crate::sim::fault::FaultPlan) schedule).
+    /// Never scheduled when the plan is empty.
+    Fault { action: EvReq },
 }
 
 // The whole point of the compact payloads: a heap entry is two cache

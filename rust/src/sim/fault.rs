@@ -1,0 +1,477 @@
+//! Deterministic fault injection for the simulator: seeded chaos plans
+//! replayed bit-for-bit against the discrete-event engine.
+//!
+//! A [`FaultPlan`] is a *schedule*, fixed before the run starts: instance
+//! crashes (fail-stop with a restart after `downtime`), link
+//! degradation/flapping windows fed into
+//! [`LinkScheduler`](crate::sim::link::LinkScheduler), per-instance
+//! straggler multipliers applied through [`StragglerMap`]
+//! (see [`cost`](crate::sim::cost)), and encoder OOMs that abort the
+//! in-flight shard batch. The engine executes the plan through the same
+//! seams role switching already uses (`begin_switch` / `pd_retarget`):
+//! a crashed instance drains, its queued work re-homes to same-kind
+//! siblings, streamed-PD reservations on the dead target are released and
+//! re-reserved, and parked requests wake when the instance restarts.
+//!
+//! Everything defaults off: [`FaultPlan::none()`] schedules nothing, adds
+//! no events, and leaves every simulated quantity bit-for-bit identical
+//! to a run without the fault layer. With a non-empty plan, the same seed
+//! and the same plan replay byte-identically (`SimOutcome::to_json()`),
+//! so chaos scenarios are regression-testable rather than flaky.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// A scheduled fail-stop crash: the instance loses all queued work,
+/// active decode state and reservations at `at`, drains through the
+/// switch seam, and restarts in the same role after `downtime`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CrashFault {
+    /// Virtual time of the crash (seconds).
+    pub at: f64,
+    /// Instance index into `EpdConfig::instances`.
+    pub instance: usize,
+    /// Seconds until the instance restarts (same role, cold caches).
+    pub downtime: f64,
+}
+
+/// A link-degradation window: transfers touching `instance` take
+/// `factor`× as long during `[at, at + duration)`. Scheduling two
+/// overlapping windows on the same instance is a flap; the last event to
+/// fire wins.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkFault {
+    pub at: f64,
+    pub instance: usize,
+    /// Service-time multiplier while degraded (>= 1 slows the link).
+    pub factor: f64,
+    /// Window length in seconds; the link restores to 1.0 at the end.
+    pub duration: f64,
+}
+
+/// A permanent per-instance straggler: every stage duration on
+/// `instance` is multiplied by `factor` for the whole run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StragglerFault {
+    pub instance: usize,
+    /// Service-time multiplier (>= 1 slows the instance).
+    pub factor: f64,
+}
+
+/// An encoder OOM: if `instance` is an encode-kind instance with an
+/// in-flight shard batch at `at`, the batch aborts and its shards re-run
+/// after the failed step's window (chunked EP emission is already on the
+/// wire and is not recalled; see ARCHITECTURE.md).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OomFault {
+    pub at: f64,
+    pub instance: usize,
+}
+
+/// A deterministic chaos schedule. The default ([`FaultPlan::none()`])
+/// is empty and bit-for-bit dormant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub crashes: Vec<CrashFault>,
+    pub links: Vec<LinkFault>,
+    pub stragglers: Vec<StragglerFault>,
+    pub ooms: Vec<OomFault>,
+    /// Window length (seconds) for the post-fault SLO recovery metrics in
+    /// [`ResilienceStats`]. Only read when the plan schedules timed
+    /// faults.
+    pub slo_window: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The empty plan: injects nothing, bit-for-bit identical behavior.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            crashes: Vec::new(),
+            links: Vec::new(),
+            stragglers: Vec::new(),
+            ooms: Vec::new(),
+            slo_window: 2.0,
+        }
+    }
+
+    /// True when the plan schedules nothing at all.
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty()
+            && self.links.is_empty()
+            && self.stragglers.is_empty()
+            && self.ooms.is_empty()
+    }
+
+    /// Builder: schedule a crash.
+    pub fn with_crash(mut self, at: f64, instance: usize, downtime: f64) -> FaultPlan {
+        assert!(at.is_finite() && downtime > 0.0, "crash needs finite at and downtime > 0");
+        self.crashes.push(CrashFault { at, instance, downtime });
+        self
+    }
+
+    /// Builder: schedule a link-degradation window.
+    pub fn with_link_degrade(
+        mut self,
+        at: f64,
+        instance: usize,
+        factor: f64,
+        duration: f64,
+    ) -> FaultPlan {
+        assert!(at.is_finite() && factor > 0.0 && duration > 0.0);
+        self.links.push(LinkFault { at, instance, factor, duration });
+        self
+    }
+
+    /// Builder: a permanent straggler.
+    pub fn with_straggler(mut self, instance: usize, factor: f64) -> FaultPlan {
+        assert!(factor > 0.0, "straggler factor must be positive");
+        self.stragglers.push(StragglerFault { instance, factor });
+        self
+    }
+
+    /// Builder: schedule an encoder OOM.
+    pub fn with_encoder_oom(mut self, at: f64, instance: usize) -> FaultPlan {
+        assert!(at.is_finite());
+        self.ooms.push(OomFault { at, instance });
+        self
+    }
+
+    /// A seeded fault wave against an `n_instances` cluster: around time
+    /// `at`, crash `crashes` distinct instances for `downtime` seconds
+    /// each (staggered), degrade ~a quarter of the links by `link_factor`
+    /// for the wave, slow ~an eighth of the instances by
+    /// `straggler_factor` for the whole run, and inject one encoder OOM.
+    /// Pure function of its arguments: same inputs, same plan.
+    pub fn wave(
+        seed: u64,
+        n_instances: usize,
+        at: f64,
+        crashes: usize,
+        downtime: f64,
+        link_factor: f64,
+        straggler_factor: f64,
+    ) -> FaultPlan {
+        let mut plan = FaultPlan::none();
+        if n_instances == 0 {
+            return plan;
+        }
+        let mut rng = Rng::new(seed ^ 0xFA17_0000_0000_0001);
+        let mut order: Vec<usize> = (0..n_instances).collect();
+        rng.shuffle(&mut order);
+        let crashes = crashes.min(n_instances);
+        for (k, &inst) in order.iter().take(crashes).enumerate() {
+            let jitter = rng.uniform(0.0, 0.25 * downtime.max(1e-9));
+            plan = plan.with_crash(at + k as f64 * 0.5 + jitter, inst, downtime.max(1e-3));
+        }
+        if link_factor > 1.0 {
+            let n_links = n_instances.div_ceil(4);
+            for &inst in order.iter().rev().take(n_links) {
+                plan = plan.with_link_degrade(at, inst, link_factor, downtime.max(1e-3));
+            }
+        }
+        if straggler_factor > 1.0 {
+            let n_slow = n_instances.div_ceil(8);
+            for &inst in order.iter().skip(crashes).take(n_slow) {
+                plan = plan.with_straggler(inst, straggler_factor);
+            }
+        }
+        plan = plan.with_encoder_oom(at, order[rng.below(n_instances as u64) as usize]);
+        plan
+    }
+
+    /// Build the plan the `fault_*` config keys describe: empty when
+    /// `fault_seed == 0` (the default — chaos stays off and dormant),
+    /// otherwise a seeded [`FaultPlan::wave`] against the config's own
+    /// instance count.
+    pub fn from_epd(epd: &crate::core::config::EpdConfig) -> FaultPlan {
+        if epd.fault_seed == 0 {
+            return FaultPlan::none();
+        }
+        FaultPlan::wave(
+            epd.fault_seed,
+            epd.instances.len(),
+            epd.fault_wave_at,
+            epd.fault_crashes as usize,
+            epd.fault_downtime,
+            epd.fault_link_factor,
+            epd.fault_straggler_factor,
+        )
+    }
+
+    /// Drop every entry that names an instance outside `0..n`; keeps the
+    /// plan well-formed against an arbitrary topology.
+    pub fn clamp_instances(&mut self, n: usize) {
+        self.crashes.retain(|c| c.instance < n);
+        self.links.retain(|l| l.instance < n);
+        self.stragglers.retain(|s| s.instance < n);
+        self.ooms.retain(|o| o.instance < n);
+    }
+
+    /// Flatten the plan into a time-sorted action schedule for the
+    /// engine. Stragglers are static (applied at construction) and do
+    /// not appear; each link window contributes a degrade and a restore
+    /// action. Ties break by insertion order (stable sort), so the
+    /// schedule — and therefore the replay — is deterministic.
+    pub fn schedule(&self) -> Vec<FaultAction> {
+        let mut out = Vec::new();
+        for c in &self.crashes {
+            out.push(FaultAction {
+                at: c.at,
+                instance: c.instance,
+                kind: FaultKind::Crash { downtime: c.downtime },
+            });
+        }
+        for l in &self.links {
+            out.push(FaultAction {
+                at: l.at,
+                instance: l.instance,
+                kind: FaultKind::LinkDegrade { factor: l.factor },
+            });
+            out.push(FaultAction {
+                at: l.at + l.duration,
+                instance: l.instance,
+                kind: FaultKind::LinkRestore,
+            });
+        }
+        for o in &self.ooms {
+            out.push(FaultAction { at: o.at, instance: o.instance, kind: FaultKind::EncoderOom });
+        }
+        out.sort_by(|a, b| a.at.partial_cmp(&b.at).expect("finite fault times"));
+        out
+    }
+
+    /// Earliest timed fault, or +inf for plans with only stragglers (or
+    /// nothing): the anchor for the recovery-time metrics.
+    pub fn first_fault_at(&self) -> f64 {
+        let mut t = f64::INFINITY;
+        for c in &self.crashes {
+            t = t.min(c.at);
+        }
+        for l in &self.links {
+            t = t.min(l.at);
+        }
+        for o in &self.ooms {
+            t = t.min(o.at);
+        }
+        t
+    }
+}
+
+/// One executable step of a flattened [`FaultPlan`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultAction {
+    pub at: f64,
+    pub instance: usize,
+    pub kind: FaultKind,
+}
+
+/// What a [`FaultAction`] does when it fires.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Fail-stop; the instance restarts in the same role after `downtime`.
+    Crash { downtime: f64 },
+    /// Multiply transfer times touching the instance by `factor`.
+    LinkDegrade { factor: f64 },
+    /// Restore the instance's link factor to 1.0.
+    LinkRestore,
+    /// Abort the in-flight encode shard batch, if any.
+    EncoderOom,
+}
+
+/// Resilience accounting attached to
+/// [`SimOutcome`](crate::sim::outcome::SimOutcome) — all zeros when the
+/// plan is empty.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResilienceStats {
+    /// Crashes executed (a crash landing on an already-down instance is
+    /// skipped and not counted).
+    pub crashes: u64,
+    /// Link-degradation windows that began.
+    pub link_degradations: u64,
+    /// Encoder OOMs that actually aborted an in-flight batch.
+    pub encoder_ooms: u64,
+    /// Instances running with a straggler multiplier != 1.
+    pub straggler_instances: u64,
+    /// Requests terminated by a crash (active decode state died with the
+    /// instance). Lost requests still count toward `finished_count` so
+    /// conservation holds: submitted = completed + rejected + lost.
+    pub requests_lost: u64,
+    /// Work items re-queued after a crash drain or an OOM abort.
+    pub requests_retried: u64,
+    /// Streamed-PD reservations released from a dead decode target and
+    /// re-reserved elsewhere (crash-time evacuations).
+    pub requests_retargeted: u64,
+    /// Seconds from the first timed fault until windowed SLO attainment
+    /// is back at its pre-fault level (0 when never degraded; capped at
+    /// the end of the run when it never recovers).
+    pub recovery_seconds: f64,
+    /// Worst post-fault drop in windowed SLO attainment relative to the
+    /// pre-fault level, in [0, 1].
+    pub slo_dip: f64,
+}
+
+impl ResilienceStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("crashes", Json::num(self.crashes as f64)),
+            ("link_degradations", Json::num(self.link_degradations as f64)),
+            ("encoder_ooms", Json::num(self.encoder_ooms as f64)),
+            ("straggler_instances", Json::num(self.straggler_instances as f64)),
+            ("requests_lost", Json::num(self.requests_lost as f64)),
+            ("requests_retried", Json::num(self.requests_retried as f64)),
+            ("requests_retargeted", Json::num(self.requests_retargeted as f64)),
+            ("recovery_seconds", Json::num(self.recovery_seconds)),
+            ("slo_dip", Json::num(self.slo_dip)),
+        ])
+    }
+}
+
+/// Post-fault SLO recovery metrics from windowed attainment counters.
+///
+/// `windows[i]` counts `(terminated, slo_attained)` requests in
+/// `[i*window, (i+1)*window)`. The pre-fault level is attainment over the
+/// windows that end before `first_fault_at`; the dip is the worst
+/// shortfall of any non-empty post-fault window below that level; the
+/// recovery time is the gap from `first_fault_at` to the start of the
+/// first non-empty post-fault window back at the pre-fault level (capped
+/// at `makespan - first_fault_at` when it never recovers).
+pub fn recovery_metrics(
+    windows: &[(u64, u64)],
+    window: f64,
+    first_fault_at: f64,
+    makespan: f64,
+) -> (f64, f64) {
+    if windows.is_empty() || !first_fault_at.is_finite() || window <= 0.0 {
+        return (0.0, 0.0);
+    }
+    let first_idx = (first_fault_at / window) as usize;
+    let (mut pre_fin, mut pre_att) = (0u64, 0u64);
+    for &(fin, att) in windows.iter().take(first_idx) {
+        pre_fin += fin;
+        pre_att += att;
+    }
+    let pre = if pre_fin > 0 { pre_att as f64 / pre_fin as f64 } else { 1.0 };
+    let mut dip = 0.0f64;
+    let mut recovery = None;
+    for (i, &(fin, att)) in windows.iter().enumerate().skip(first_idx) {
+        if fin == 0 {
+            continue;
+        }
+        let a = att as f64 / fin as f64;
+        dip = dip.max(pre - a);
+        if recovery.is_none() && a >= pre {
+            recovery = Some(((i as f64) * window - first_fault_at).max(0.0));
+        }
+    }
+    let recovery = recovery.unwrap_or_else(|| (makespan - first_fault_at).max(0.0));
+    (recovery, dip.clamp(0.0, 1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_empty_and_schedules_nothing() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        assert!(p.schedule().is_empty());
+        assert_eq!(p.first_fault_at(), f64::INFINITY);
+        assert_eq!(p, FaultPlan::default());
+    }
+
+    #[test]
+    fn builders_populate_and_flatten_sorted() {
+        let p = FaultPlan::none()
+            .with_crash(5.0, 1, 2.0)
+            .with_link_degrade(1.0, 0, 4.0, 3.0)
+            .with_straggler(2, 1.5)
+            .with_encoder_oom(2.0, 0);
+        assert!(!p.is_empty());
+        let s = p.schedule();
+        // crash@5, degrade@1, restore@4, oom@2 -> sorted by time.
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0].kind, FaultKind::LinkDegrade { factor: 4.0 });
+        assert_eq!(s[1].kind, FaultKind::EncoderOom);
+        assert_eq!(s[2].kind, FaultKind::LinkRestore);
+        assert_eq!(s[3].kind, FaultKind::Crash { downtime: 2.0 });
+        for w in s.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert_eq!(p.first_fault_at(), 1.0);
+    }
+
+    #[test]
+    fn wave_is_deterministic_and_in_range() {
+        let a = FaultPlan::wave(9, 8, 10.0, 2, 5.0, 4.0, 1.5);
+        let b = FaultPlan::wave(9, 8, 10.0, 2, 5.0, 4.0, 1.5);
+        assert_eq!(a, b, "same seed, same plan");
+        assert_eq!(a.crashes.len(), 2);
+        assert!(!a.links.is_empty() && !a.stragglers.is_empty());
+        for c in &a.crashes {
+            assert!(c.instance < 8 && c.at >= 10.0);
+        }
+        let c = FaultPlan::wave(10, 8, 10.0, 2, 5.0, 4.0, 1.5);
+        assert_ne!(a, c, "different seed, different plan");
+        // Distinct crash targets.
+        assert_ne!(a.crashes[0].instance, a.crashes[1].instance);
+    }
+
+    #[test]
+    fn from_epd_is_off_by_default_and_seeded_on() {
+        use crate::core::config::EpdConfig;
+        use crate::core::topology::Topology;
+        let epd = EpdConfig::epd(Topology::new(2, 1, 1), 1, 1, 128);
+        assert!(FaultPlan::from_epd(&epd).is_empty(), "seed 0 = chaos off");
+        let mut on = epd.clone();
+        on.fault_seed = 42;
+        on.fault_crashes = 2;
+        let p = FaultPlan::from_epd(&on);
+        assert_eq!(p.crashes.len(), 2);
+        assert_eq!(p, FaultPlan::from_epd(&on), "same config, same plan");
+    }
+
+    #[test]
+    fn clamp_drops_out_of_range_instances() {
+        let mut p = FaultPlan::none()
+            .with_crash(1.0, 9, 1.0)
+            .with_crash(1.0, 0, 1.0)
+            .with_link_degrade(1.0, 9, 2.0, 1.0)
+            .with_straggler(9, 2.0)
+            .with_encoder_oom(1.0, 9);
+        p.clamp_instances(2);
+        assert_eq!(p.crashes.len(), 1);
+        assert!(p.links.is_empty() && p.stragglers.is_empty() && p.ooms.is_empty());
+    }
+
+    #[test]
+    fn recovery_metrics_shapes() {
+        // No windows / no fault: zeros.
+        assert_eq!(recovery_metrics(&[], 2.0, 1.0, 10.0), (0.0, 0.0));
+        assert_eq!(recovery_metrics(&[(4, 4)], 2.0, f64::INFINITY, 10.0), (0.0, 0.0));
+        // Pre-fault 100%, one bad window, then recovered.
+        // windows: [0,2) full, [2,4) half, [4,6) full; fault at 2.0.
+        let w = [(10, 10), (10, 5), (10, 10)];
+        let (rec, dip) = recovery_metrics(&w, 2.0, 2.0, 6.0);
+        assert!((dip - 0.5).abs() < 1e-12, "dip {dip}");
+        assert!((rec - 2.0).abs() < 1e-12, "recovered at window 2 start (t=4): {rec}");
+        // Never recovers: capped at makespan - fault time.
+        let w = [(10, 10), (10, 5), (10, 6)];
+        let (rec, _) = recovery_metrics(&w, 2.0, 2.0, 9.0);
+        assert!((rec - 7.0).abs() < 1e-12, "rec {rec}");
+    }
+
+    #[test]
+    fn resilience_json_has_all_fields() {
+        let j = ResilienceStats { crashes: 2, requests_lost: 1, ..Default::default() }.to_json();
+        assert_eq!(j.get("crashes").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("requests_lost").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("slo_dip").unwrap().as_f64(), Some(0.0));
+    }
+}

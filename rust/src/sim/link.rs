@@ -97,6 +97,12 @@ pub struct LinkScheduler {
     egress: Vec<Channel>,
     ingress: Vec<Channel>,
     stats: Vec<LinkStats>,
+    /// Fault-injection seam: per-instance service-time multiplier
+    /// (1.0 = healthy). A transfer takes `max(degrade[src],
+    /// degrade[dst])` times as long on the wire. All-ones is the exact
+    /// identity: the `slow == 1.0` path reproduces the historical
+    /// arithmetic bit for bit.
+    degrade: Vec<f64>,
 }
 
 impl LinkScheduler {
@@ -106,11 +112,26 @@ impl LinkScheduler {
             egress: vec![Channel::default(); num_links],
             ingress: vec![Channel::default(); num_links],
             stats: vec![LinkStats::default(); num_links],
+            degrade: vec![1.0; num_links],
         }
     }
 
     pub fn contended(&self) -> bool {
         self.contended
+    }
+
+    /// Degrade (factor > 1) or restore (factor = 1) `instance`'s link.
+    /// Applies to transfers scheduled from now on; in-flight transfers
+    /// keep their original delivery times (the bytes already left).
+    pub fn set_degradation(&mut self, instance: usize, factor: f64) {
+        if instance < self.degrade.len() {
+            self.degrade[instance] = factor.max(1e-9);
+        }
+    }
+
+    /// Current degradation factor for `instance` (1.0 = healthy).
+    pub fn degradation(&self, instance: usize) -> f64 {
+        self.degrade.get(instance).copied().unwrap_or(1.0)
     }
 
     /// Schedule a transfer of `bytes` that becomes ready at `ready`
@@ -131,7 +152,16 @@ impl LinkScheduler {
         bytes: u64,
     ) -> f64 {
         debug_assert!(ready >= now, "transfers cannot be ready in the past");
-        let duration = bytes as f64 / tm.bandwidth;
+        let slow = {
+            let a = src.map_or(1.0, |i| self.degrade[i]);
+            let b = dst.map_or(1.0, |i| self.degrade[i]);
+            a.max(b)
+        };
+        let duration = if slow == 1.0 {
+            bytes as f64 / tm.bandwidth
+        } else {
+            bytes as f64 * slow / tm.bandwidth
+        };
         let mut start = ready;
         if self.contended && duration > 0.0 {
             if let Some(i) = src {
@@ -172,7 +202,11 @@ impl LinkScheduler {
             }
             s.transfers += 1;
         }
-        start + tm.time(bytes)
+        if slow == 1.0 {
+            start + tm.time(bytes)
+        } else {
+            start + tm.latency + duration
+        }
     }
 
     pub fn stats(&self) -> &[LinkStats] {
@@ -288,6 +322,39 @@ mod tests {
         );
         assert_eq!(l.stats()[0].transfers, 100);
         assert_eq!(l.stats()[0].queue_seconds, 0.0);
+    }
+
+    #[test]
+    fn degradation_slows_and_restores_exactly() {
+        let t = tm();
+        let mut l = LinkScheduler::new(2, false);
+        let healthy = l.schedule(&t, 0.0, 0.0, Some(0), Some(1), 200);
+        assert_eq!(healthy.to_bits(), t.time(200).to_bits());
+        // 3x degradation on either endpoint stretches the wire time only.
+        l.set_degradation(1, 3.0);
+        assert_eq!(l.degradation(1), 3.0);
+        let slow = l.schedule(&t, 0.0, 0.0, Some(0), Some(1), 200);
+        assert!((slow - (t.latency + 3.0 * 200.0 / t.bandwidth)).abs() < 1e-12, "slow {slow}");
+        // Restoring is bit-exact with the healthy path.
+        l.set_degradation(1, 1.0);
+        let again = l.schedule(&t, 0.0, 0.0, Some(0), Some(1), 200);
+        assert_eq!(again.to_bits(), healthy.to_bits());
+        // Out-of-range instance is ignored, not a panic.
+        l.set_degradation(99, 2.0);
+        assert_eq!(l.degradation(99), 1.0);
+    }
+
+    #[test]
+    fn degraded_transfers_occupy_the_contended_wire_longer() {
+        let t = tm();
+        let mut l = LinkScheduler::new(2, true);
+        l.set_degradation(0, 2.0);
+        // 200 B at 100 B/s x2 = 4 s on the wire.
+        let a = l.schedule(&t, 0.0, 0.0, Some(0), Some(1), 200);
+        assert!((a - 4.5).abs() < 1e-12, "a {a}");
+        let b = l.schedule(&t, 0.0, 0.0, Some(0), Some(1), 200);
+        assert!((b - 8.5).abs() < 1e-12, "serialized behind the slow transfer: {b}");
+        assert!((l.stats()[0].egress_busy_seconds - 8.0).abs() < 1e-12);
     }
 
     #[test]

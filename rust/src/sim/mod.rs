@@ -8,16 +8,22 @@
 //! virtual time, with stage latencies from the analytic [`cost`] model. It simulates all three deployment modes — EPD, PD-disaggregated
 //! (DistServe) and aggregated (vLLM) — on A100 or Ascend-910B3 device
 //! profiles.
+//!
+//! [`fault`] layers deterministic chaos injection on top: seeded
+//! [`FaultPlan`]s of instance crashes, link degradation, stragglers and
+//! encoder OOMs, bit-for-bit dormant when the plan is empty.
 
 pub mod arena;
 pub mod cost;
 pub mod event;
 pub mod engine;
+pub mod fault;
 pub mod link;
 pub mod outcome;
 
 pub use arena::Slab;
-pub use cost::CostModel;
+pub use cost::{CostModel, StragglerMap};
 pub use engine::{SimConfig, Simulator};
+pub use fault::{FaultPlan, ResilienceStats};
 pub use link::{LinkScheduler, LinkStats};
 pub use outcome::{AdmissionStats, EpOverlapStats, PdOverlapStats, SimOutcome, StreamedMetrics};

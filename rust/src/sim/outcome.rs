@@ -4,6 +4,7 @@ use crate::cache::EncoderCacheStats;
 use crate::coordinator::planner::ReallocationStats;
 use crate::core::request::RequestTimeline;
 use crate::core::slo::Slo;
+use crate::sim::fault::ResilienceStats;
 use crate::sim::link::LinkStats;
 use crate::util::json::Json;
 use crate::util::stats::{self, QuantileSketch, Summary};
@@ -166,6 +167,10 @@ pub struct SimOutcome {
     /// Per-instance link counters (egress/ingress busy time, queueing
     /// delay). Queueing is non-zero only with `link_contention` enabled.
     pub links: Vec<LinkStats>,
+    /// Fault-injection accounting (crashes executed, requests
+    /// lost/retried/re-targeted, SLO recovery time and dip). All zeros
+    /// when `SimConfig::faults` is the empty plan.
+    pub resilience: ResilienceStats,
 }
 
 impl SimOutcome {
@@ -362,6 +367,7 @@ impl SimOutcome {
                     ),
                 ]),
             ),
+            ("resilience", self.resilience.to_json()),
             (
                 "streamed",
                 Json::obj(vec![
@@ -441,6 +447,7 @@ mod tests {
             ep_overlap: EpOverlapStats::default(),
             pd_overlap: PdOverlapStats::default(),
             links: Vec::new(),
+            resilience: ResilienceStats::default(),
         }
     }
 
@@ -495,6 +502,8 @@ mod tests {
             parsed.get("timelines").and_then(|j| j.as_arr()).map(|a| a.len()),
             Some(3)
         );
+        let res = parsed.get("resilience").expect("resilience block always present");
+        assert_eq!(res.get("requests_lost").and_then(|j| j.as_f64()), Some(0.0));
         let mut off = o.clone();
         off.timelines_recorded = false;
         off.timelines.clear();

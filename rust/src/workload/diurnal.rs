@@ -1,0 +1,215 @@
+//! Multi-day diurnal traffic with flash crowds: the arrival shape the
+//! chaos/resilience benches replay at cluster scale. The request *mix* is
+//! delegated to [`ClusterScaleWorkload`] (chat-dominated with a
+//! many-image vision minority); this module only modulates the arrival
+//! rate:
+//!
+//! - a smooth day/night cycle (`trough_factor` × the nominal rate at
+//!   midnight, the full rate at midday, raised-cosine in between),
+//! - plus `flash_crowds` seeded burst windows where the rate multiplies
+//!   by `flash_factor` — the "viral moment" the reallocation planner has
+//!   to absorb while a fault wave is in flight.
+//!
+//! Everything is a pure function of the struct's fields: the flash
+//! windows come from their own seed (not the arrival RNG), so
+//! [`DiurnalWorkload::rate_factor`] is inspectable and the same seed
+//! replays the same trace bit-for-bit.
+
+use super::{ClusterScaleWorkload, Workload};
+use crate::core::request::Request;
+use crate::model::spec::LmmSpec;
+use crate::util::rng::Rng;
+
+/// Diurnal (day/night) arrival modulation with seeded flash crowds over
+/// the cluster-scale request mix.
+#[derive(Debug, Clone)]
+pub struct DiurnalWorkload {
+    /// Request shape (chat/vision mix, token counts, resolution).
+    pub base: ClusterScaleWorkload,
+    /// Number of simulated days in the trace.
+    pub days: u32,
+    /// Seconds per (compressed) day.
+    pub day_seconds: f64,
+    /// Midnight rate as a fraction of the nominal rate, in (0, 1].
+    pub trough_factor: f64,
+    /// Flash-crowd windows scattered over the whole trace.
+    pub flash_crowds: u32,
+    /// Rate multiplier inside a flash window.
+    pub flash_factor: f64,
+    /// Flash window length, seconds.
+    pub flash_duration: f64,
+    /// Seed for flash-window placement (independent of the arrival RNG,
+    /// so the windows are inspectable before generating anything).
+    pub flash_seed: u64,
+}
+
+impl Default for DiurnalWorkload {
+    fn default() -> Self {
+        DiurnalWorkload {
+            base: ClusterScaleWorkload::default(),
+            days: 3,
+            day_seconds: 120.0,
+            trough_factor: 0.25,
+            flash_crowds: 2,
+            flash_factor: 4.0,
+            flash_duration: 6.0,
+            flash_seed: 0xD1A7,
+        }
+    }
+}
+
+impl DiurnalWorkload {
+    /// Total trace span in seconds (`days × day_seconds`).
+    pub fn span(&self) -> f64 {
+        self.days as f64 * self.day_seconds
+    }
+
+    /// The seeded flash windows as `(start, end)` pairs, sorted by start.
+    /// Pure function of `flash_seed`/`flash_crowds`/geometry.
+    pub fn flash_windows(&self) -> Vec<(f64, f64)> {
+        let span = self.span();
+        let dur = self.flash_duration.max(0.0).min(span);
+        let mut rng = Rng::new(self.flash_seed ^ 0xF1A5_4C40_3D00_0001);
+        let mut out: Vec<(f64, f64)> = (0..self.flash_crowds)
+            .map(|_| {
+                let start = rng.uniform(0.0, (span - dur).max(0.0));
+                (start, start + dur)
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        out
+    }
+
+    /// Instantaneous rate multiplier at virtual time `t`: the raised-
+    /// cosine day cycle (trough at t ≡ 0 mod day, peak at midday) times
+    /// the flash factor inside any flash window. Times past the last day
+    /// keep cycling, so overshooting arrivals stay well-defined.
+    pub fn rate_factor(&self, t: f64) -> f64 {
+        let day = self.day_seconds.max(1e-9);
+        let phase = (t.rem_euclid(day)) / day;
+        let trough = self.trough_factor.clamp(0.0, 1.0);
+        let mut f = trough
+            + (1.0 - trough) * 0.5 * (1.0 - (2.0 * std::f64::consts::PI * phase).cos());
+        for (s, e) in self.flash_windows() {
+            if t >= s && t < e {
+                f *= self.flash_factor.max(1.0);
+            }
+        }
+        f
+    }
+}
+
+impl Workload for DiurnalWorkload {
+    fn generate(&self, spec: &LmmSpec, n: usize, rate: f64, rng: &mut Rng) -> Vec<Request> {
+        // Rate-modulated arrival process: each gap is exponential at the
+        // *current* modulated rate. (A stepwise approximation of the
+        // non-homogeneous process — exact enough for traces whose gaps
+        // are far shorter than the day cycle, and fully deterministic.)
+        let windows = self.flash_windows();
+        let day = self.day_seconds.max(1e-9);
+        let trough = self.trough_factor.clamp(0.0, 1.0);
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let phase = (t.rem_euclid(day)) / day;
+            let mut f = trough
+                + (1.0 - trough) * 0.5 * (1.0 - (2.0 * std::f64::consts::PI * phase).cos());
+            for &(s, e) in &windows {
+                if t >= s && t < e {
+                    f *= self.flash_factor.max(1.0);
+                }
+            }
+            t += rng.exp((rate * f).max(1e-9));
+            let vision = rng.bool(self.base.vision_fraction.clamp(0.0, 1.0));
+            let (prompt, images, output) = if vision {
+                (
+                    self.base.vision_prompt_tokens,
+                    self.base.vision_images,
+                    self.base.vision_output_tokens,
+                )
+            } else {
+                (self.base.chat_prompt_tokens, 0, self.base.chat_output_tokens)
+            };
+            out.push(super::build_request(
+                spec,
+                i as u64,
+                t,
+                prompt,
+                images,
+                self.base.resolution,
+                output.max(1),
+            ));
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "diurnal"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelId;
+
+    #[test]
+    fn same_seed_replays_bit_for_bit() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let w = DiurnalWorkload::default();
+        let a = w.generate(&spec, 2_000, 20.0, &mut Rng::new(11));
+        let b = w.generate(&spec, 2_000, 20.0, &mut Rng::new(11));
+        assert_eq!(a.len(), 2_000);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(x.images, y.images);
+            assert_eq!(x.output_tokens, y.output_tokens);
+        }
+        for pair in a.windows(2) {
+            assert!(pair[1].arrival >= pair[0].arrival, "arrivals monotone");
+        }
+    }
+
+    #[test]
+    fn day_cycle_peaks_at_midday() {
+        let w = DiurnalWorkload { flash_crowds: 0, ..Default::default() };
+        let day = w.day_seconds;
+        assert!((w.rate_factor(0.0) - w.trough_factor).abs() < 1e-9, "midnight = trough");
+        assert!((w.rate_factor(0.5 * day) - 1.0).abs() < 1e-9, "midday = full rate");
+        assert!(w.rate_factor(0.25 * day) > w.trough_factor);
+        assert!(w.rate_factor(0.25 * day) < 1.0);
+        // Cycles across days.
+        assert!((w.rate_factor(2.5 * day) - 1.0).abs() < 1e-9);
+        // Arrivals cluster at midday: the middle fifth of day one holds
+        // more than the (trough-rate) first fifth.
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let reqs = w.generate(&spec, 5_000, 60.0, &mut Rng::new(5));
+        let in_band = |lo: f64, hi: f64| {
+            reqs.iter().filter(|r| r.arrival >= lo && r.arrival < hi).count()
+        };
+        let first = in_band(0.0, 0.2 * day);
+        let mid = in_band(0.4 * day, 0.6 * day);
+        assert!(mid > first, "midday band {mid} should out-arrive the trough band {first}");
+    }
+
+    #[test]
+    fn flash_windows_are_seeded_and_in_span() {
+        let w = DiurnalWorkload::default();
+        let a = w.flash_windows();
+        let b = w.flash_windows();
+        assert_eq!(a, b, "pure function of the seed");
+        assert_eq!(a.len(), 2);
+        for &(s, e) in &a {
+            assert!(s >= 0.0 && e <= w.span() + 1e-9);
+            assert!((e - s - w.flash_duration).abs() < 1e-9);
+        }
+        // Inside a window the factor multiplies by flash_factor.
+        let (s, e) = a[0];
+        let t = 0.5 * (s + e);
+        let calm = DiurnalWorkload { flash_crowds: 0, ..DiurnalWorkload::default() };
+        let boosted = w.rate_factor(t) / calm.rate_factor(t);
+        assert!(boosted >= w.flash_factor - 1e-9, "boost {boosted}");
+        let seeded = DiurnalWorkload { flash_seed: 99, ..DiurnalWorkload::default() };
+        assert_ne!(seeded.flash_windows(), a, "different seed, different windows");
+    }
+}

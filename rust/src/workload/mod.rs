@@ -12,11 +12,13 @@ pub mod videomme;
 pub mod audio;
 pub mod arrival;
 pub mod cluster_scale;
+pub mod diurnal;
 pub mod phase_shift;
 pub mod repeated_media;
 
 pub use arrival::poisson_arrivals;
 pub use cluster_scale::ClusterScaleWorkload;
+pub use diurnal::DiurnalWorkload;
 pub use phase_shift::PhaseShiftWorkload;
 pub use repeated_media::RepeatedMediaWorkload;
 pub use synthetic::SyntheticWorkload;

@@ -1,0 +1,212 @@
+//! Chaos-layer properties: the fault-injection machinery must be
+//! bit-for-bit dormant when the plan is empty, byte-identical on replay
+//! for any seeded wave, and must conserve requests — every submitted
+//! request terminates exactly once (finished, rejected, or counted lost)
+//! no matter what crashes mid-flight. Plus the reserved-decode-target
+//! crash regression: a streamed PD request whose reserved decoder dies
+//! mid-stream re-targets exactly once and still finishes.
+
+use epdserve::core::config::EpdConfig;
+use epdserve::core::topology::Topology;
+use epdserve::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use epdserve::sim::engine::{SimConfig, Simulator};
+use epdserve::sim::fault::{FaultPlan, ResilienceStats};
+use epdserve::sim::outcome::SimOutcome;
+use epdserve::util::quickcheck::{forall_cfg, pair, usize_in, Config};
+use epdserve::util::rng::Rng;
+use epdserve::workload::synthetic::SyntheticWorkload;
+use epdserve::workload::{DiurnalWorkload, Workload};
+
+fn spec() -> LmmSpec {
+    LmmSpec::get(ModelId::MiniCpmV26)
+}
+
+fn run_with(epd: EpdConfig, faults: FaultPlan, images: u32, out: u32, n: usize) -> SimOutcome {
+    let sp = spec();
+    let mut cfg = SimConfig::new(sp.clone(), DeviceSpec::a100(), epd);
+    cfg.faults = faults;
+    let w = SyntheticWorkload::new(images, out);
+    let mut rng = Rng::new(0xFA_0175);
+    let reqs = w.generate(&sp, n, 1.5, &mut rng);
+    Simulator::run(&cfg, &reqs)
+}
+
+fn modes() -> [EpdConfig; 3] {
+    [
+        EpdConfig::epd(Topology::new(2, 1, 1), 1, 1, 32),
+        EpdConfig::distserve(3, 1, 1, 32),
+        EpdConfig::aggregated(4, 32),
+    ]
+}
+
+/// Every submitted request terminates exactly once.
+fn conserved(out: &SimOutcome) {
+    let terminated = out.streamed.finished as usize
+        + out.rejected as usize
+        + out.resilience.requests_lost as usize;
+    assert_eq!(
+        terminated, out.submitted,
+        "finished {} + rejected {} + lost {} != submitted {}",
+        out.streamed.finished, out.rejected, out.resilience.requests_lost, out.submitted
+    );
+}
+
+/// Dormancy: with the empty plan (the default), the chaos layer records
+/// nothing and the run replays byte-for-byte in every deployment mode.
+#[test]
+fn empty_plan_is_dormant_and_deterministic() {
+    forall_cfg(
+        Config { cases: 12, seed: 0xD0_12, max_shrink_steps: 0 },
+        pair(usize_in(1, 6), usize_in(1, 40)),
+        |&(images, out)| {
+            for epd in modes() {
+                let a = run_with(epd.clone(), FaultPlan::none(), images as u32, out as u32, 20);
+                let b = run_with(epd, FaultPlan::none(), images as u32, out as u32, 20);
+                assert_eq!(a.resilience, ResilienceStats::default(), "dormant plan left tracks");
+                assert_eq!(
+                    a.to_json().pretty(),
+                    b.to_json().pretty(),
+                    "baseline replay must be byte-identical"
+                );
+                conserved(&a);
+            }
+        },
+    );
+}
+
+/// Replay: any seeded wave produces a byte-identical outcome when run
+/// twice with the same seed and plan.
+#[test]
+fn fault_waves_replay_bit_for_bit() {
+    forall_cfg(
+        Config { cases: 10, seed: 0xD0_13, max_shrink_steps: 0 },
+        pair(usize_in(1, 10_000), usize_in(1, 6)),
+        |&(wave_seed, images)| {
+            let epd = EpdConfig::epd(Topology::new(2, 2, 2), 1, 1, 16);
+            let plan = FaultPlan::wave(wave_seed as u64, 6, 4.0, 2, 3.0, 2.0, 1.5);
+            let a = run_with(epd.clone(), plan.clone(), images as u32, 16, 25);
+            let b = run_with(epd, plan, images as u32, 16, 25);
+            assert_eq!(a.to_json().pretty(), b.to_json().pretty(), "wave replay diverged");
+            conserved(&a);
+        },
+    );
+}
+
+/// Conservation: random crash schedules (random victims, times and
+/// downtimes) never lose track of a request — the run terminates and the
+/// termination ledger balances in every mode.
+#[test]
+fn requests_terminate_exactly_once_under_crash_schedules() {
+    forall_cfg(
+        Config { cases: 16, seed: 0xD0_14, max_shrink_steps: 0 },
+        pair(usize_in(1, 100_000), usize_in(1, 5)),
+        |&(seed, images)| {
+            let mut rng = Rng::new(seed as u64);
+            for epd in modes() {
+                let n_inst = epd.instances.len();
+                let mut plan = FaultPlan::none();
+                for _ in 0..rng.range(1, 4) {
+                    plan = plan.with_crash(
+                        rng.uniform(0.1, 12.0),
+                        rng.below(n_inst as u64) as usize,
+                        rng.uniform(0.5, 4.0),
+                    );
+                }
+                let out = run_with(epd, plan, images as u32, 12, 20);
+                assert!(out.resilience.crashes >= 1, "at least one crash must execute");
+                conserved(&out);
+            }
+        },
+    );
+}
+
+/// A diurnal trace under a full wave: the richest workload/chaos combo
+/// still balances the ledger and replays deterministically.
+#[test]
+fn diurnal_trace_under_wave_conserves_and_replays() {
+    let sp = spec();
+    let w = DiurnalWorkload::default();
+    let run = || {
+        let mut cfg = SimConfig::new(
+            sp.clone(),
+            DeviceSpec::a100(),
+            EpdConfig::epd(Topology::new(2, 2, 2), 1, 1, 8),
+        );
+        cfg.faults = FaultPlan::wave(0xBEEF, 6, 30.0, 2, 10.0, 2.0, 1.5);
+        let mut rng = Rng::new(0xD1A7_2);
+        let reqs = w.generate(&sp, 80, 1.0, &mut rng);
+        Simulator::run(&cfg, &reqs)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+    conserved(&a);
+    assert_eq!(a.resilience.crashes, 2);
+}
+
+/// Satellite regression: a streamed PD request whose *reserved decode
+/// target* crashes mid-stream must release the dead reservation and
+/// re-target exactly once to the surviving decoder — no double-reserve,
+/// no loss. The target decoder is picked deterministically by the
+/// engine, so exactly one of the two candidate crashes hits it; the
+/// other run must see no re-targets at all.
+#[test]
+fn reserved_decode_target_crash_retargets_exactly_once() {
+    let sp = spec();
+    let mk_cfg = |faults: FaultPlan| {
+        let mut epd = EpdConfig::epd(Topology::new(1, 1, 2), 1, 1, 8);
+        epd.pd_layer_groups = 2; // layer-wise PD streaming on
+        let mut cfg = SimConfig::new(sp.clone(), DeviceSpec::a100(), epd);
+        cfg.faults = faults;
+        cfg
+    };
+    let reqs = {
+        let w = SyntheticWorkload::new(2, 24);
+        let mut rng = Rng::new(0x9E7A);
+        w.generate(&sp, 1, 1.0, &mut rng)
+    };
+
+    // Phase 1 (faultless): confirm the request streams, and read its
+    // prefill window so the crash can land mid-stream.
+    let calm = Simulator::run(&mk_cfg(FaultPlan::none()), &reqs);
+    assert_eq!(calm.streamed.finished, 1);
+    assert_eq!(calm.pd_overlap.streamed_requests, 1, "request must take the streamed PD path");
+    assert_eq!(calm.pd_overlap.retargets, 0);
+    let tl = &calm.timelines[0];
+    let mid = 0.5 * (tl.prefill_start + tl.prefill_end);
+    assert!(mid.is_finite() && mid > 0.0, "prefill window must be recorded");
+
+    // Phase 2: crash each decoder candidate (instances [E, P, D, D] →
+    // indices 2 and 3) at mid-prefill. Exactly one is the reserved
+    // target.
+    let mut hits = Vec::new();
+    for decoder in [2usize, 3] {
+        let out = Simulator::run(
+            &mk_cfg(FaultPlan::none().with_crash(mid, decoder, 5.0)),
+            &reqs,
+        );
+        assert_eq!(out.resilience.crashes, 1);
+        // The prefill-resident request never dies with the decoder: its
+        // KV lives on the prefill instance, only the reservation does.
+        assert_eq!(out.resilience.requests_lost, 0, "decoder {decoder}: request lost");
+        assert_eq!(out.streamed.finished, 1, "decoder {decoder}: request must finish");
+        assert_eq!(out.rejected, 0);
+        assert_eq!(
+            out.resilience.requests_retargeted, out.pd_overlap.retargets,
+            "decoder {decoder}: chaos ledger and PD ledger must agree"
+        );
+        // Replay determinism of the faulted run.
+        let again = Simulator::run(
+            &mk_cfg(FaultPlan::none().with_crash(mid, decoder, 5.0)),
+            &reqs,
+        );
+        assert_eq!(out.to_json().pretty(), again.to_json().pretty());
+        hits.push(out.pd_overlap.retargets);
+    }
+    hits.sort_unstable();
+    assert_eq!(
+        hits,
+        vec![0, 1],
+        "exactly one candidate crash hits the reserved target, and it re-targets exactly once"
+    );
+}

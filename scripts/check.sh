@@ -24,4 +24,13 @@ cargo bench --no-run --quiet
 echo "==> cargo test"
 cargo test -q
 
+echo "==> chaos fault-wave smoke (seeded wave through the real CLI)"
+cargo run --release --quiet -- \
+  simulate --faults wave --topology 2E2P2D \
+  --requests 400 --rate 2.0 --images 2
+
+# CI additionally runs a line-coverage floor (cargo llvm-cov
+# --fail-under-lines 55); skipped here because cargo-llvm-cov is not a
+# baseline toolchain component. Run it manually before raising the bar.
+
 echo "All checks passed."

@@ -1,0 +1,149 @@
+//! Front-door router A/B: SLO-aware multi-path admission vs the legacy
+//! single path on a mixed text+multimodal multi-tenant overload.
+//!
+//! The scenario (`workload/mixed_tenant.rs` over a 2E2P2D MiniCPM-V 2.6
+//! slice): 60% short text chat turns interleaved with 4-image
+//! multimodal requests from a Zipf-skewed tenant population, submitted
+//! well past the slice's capacity. The baseline funnels everything down
+//! the single legacy path and queues through the overload; the router
+//! bypasses encode for text, spreads multimodal work least-loaded,
+//! holds excess arrivals in per-tenant weighted fair queues, degrades
+//! mild interactive overload and sheds what provably cannot meet SLO.
+//!
+//! **Gate: router-on SLO attainment >= router-off on the identical
+//! trace** (measured = attainment margin). A second text-only run
+//! asserts the encoder-bypass invariant: zero encoder-busy seconds.
+//! Emits `results/BENCH_router.json` (via `GateReport`) for
+//! `scripts/bench_json.sh` / `make bench-json`.
+
+use epdserve::core::config::{EpdConfig, RouterPolicy};
+use epdserve::core::slo::Slo;
+use epdserve::core::topology::Topology;
+use epdserve::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use epdserve::sim::engine::{SimConfig, Simulator};
+use epdserve::sim::outcome::SimOutcome;
+use epdserve::util::bench::{fmt, GateReport, TableReport};
+use epdserve::util::rng::Rng;
+use epdserve::workload::{MixedTenantWorkload, SyntheticWorkload, Workload};
+
+const N_REQUESTS: usize = 400;
+const RATE: f64 = 6.0; // req/s — well past the 2E2P2D slice's capacity
+const SLO: Slo = Slo::new(2.5, 0.05);
+
+fn mk_cfg(spec: &LmmSpec, router: RouterPolicy) -> SimConfig {
+    let mut epd = EpdConfig::epd(Topology::new(2, 2, 2), 1, 1, 8);
+    epd.router = router;
+    if router == RouterPolicy::On {
+        epd.router_slo_ttft = SLO.ttft;
+        epd.router_slo_tpot = SLO.tpot;
+        epd.router_headroom = 0.9;
+        epd.router_degrade = true;
+        epd.router_degrade_tokens = 8;
+    }
+    SimConfig::new(spec.clone(), DeviceSpec::a100(), epd)
+}
+
+fn run(spec: &LmmSpec, router: RouterPolicy) -> SimOutcome {
+    let w = MixedTenantWorkload::default();
+    let mut rng = Rng::new(0x207_7E2);
+    let reqs = w.generate(spec, N_REQUESTS, RATE, &mut rng);
+    Simulator::run(&mk_cfg(spec, router), &reqs)
+}
+
+fn main() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+
+    let off = run(&spec, RouterPolicy::Off);
+    let on = run(&spec, RouterPolicy::On);
+
+    let att_off = off.slo_attainment(SLO);
+    let att_on = on.slo_attainment(SLO);
+
+    let mut t = TableReport::new(
+        "perf_router_slo",
+        "Front-door router on a mixed text+MM multi-tenant overload (MiniCPM-V 2.6, 2E2P2D, 6 req/s)",
+        &[
+            "path",
+            "SLO attainment",
+            "finished",
+            "shed",
+            "degraded",
+            "text bypass",
+            "mean TTFT (s)",
+        ],
+    );
+    for (name, out, att) in [("single-path", &off, att_off), ("router", &on, att_on)] {
+        t.row(vec![
+            name.into(),
+            fmt(att, 3),
+            out.streamed.finished.to_string(),
+            out.router.shed.to_string(),
+            out.router.degraded.to_string(),
+            out.router.text_bypass.to_string(),
+            fmt(out.mean_ttft(), 3),
+        ]);
+    }
+
+    // The baseline must be genuinely dormant.
+    assert_eq!(off.router.shed + off.router.degraded + off.router.text_bypass, 0);
+    assert_eq!(off.rejected, 0, "single path admits everything");
+
+    // The router must be doing real admission work under this overload,
+    // without degenerating into a deny-all policy.
+    assert!(on.router.shed > 0, "overload must shed: {:?}", on.router);
+    assert!(
+        (on.router.shed as usize) < N_REQUESTS / 2,
+        "router shed the majority of the trace: {:?}",
+        on.router
+    );
+    assert!(on.router.text_bypass > 0, "text requests must take the bypass");
+
+    // Request conservation on both arms.
+    for (name, out) in [("single-path", &off), ("router", &on)] {
+        let terminated = out.streamed.finished as usize
+            + out.rejected as usize
+            + out.resilience.requests_lost as usize;
+        assert_eq!(terminated, N_REQUESTS, "{name} violates request conservation");
+    }
+
+    // Encoder-bypass invariant, isolated: a pure-text workload through
+    // the EPD front door must never warm an encoder.
+    let text_only = {
+        let w = SyntheticWorkload::new(0, 24);
+        let mut rng = Rng::new(0x7E_27);
+        let reqs = w.generate(&spec, 80, 4.0, &mut rng);
+        let mut cfg = mk_cfg(&spec, RouterPolicy::On);
+        cfg.epd.router_slo_ttft = f64::INFINITY; // bypass path only, no shedding
+        cfg.epd.router_slo_tpot = f64::INFINITY;
+        Simulator::run(&cfg, &reqs)
+    };
+    assert_eq!(text_only.router.text_bypass, 80, "every text request bypasses");
+    assert_eq!(
+        text_only.busy[0], 0.0,
+        "text-only trace must leave encoders cold: busy = {:?}",
+        text_only.busy
+    );
+
+    let margin = att_on - att_off;
+    t.note(format!(
+        "router held {} arrivals (peak {}), degraded {}, shed {} of {N_REQUESTS}",
+        on.router.held, on.router.peak_held, on.router.degraded, on.router.shed
+    ));
+    t.note(format!(
+        "router vs single-path attainment margin on the identical trace: {margin:.3} (gate >= 0)"
+    ));
+    t.emit();
+
+    assert!(
+        margin >= 0.0,
+        "router {att_on:.3} must beat or match the single path {att_off:.3} under overload"
+    );
+
+    GateReport::at_least(
+        "router",
+        "router-on SLO attainment >= single-path on the identical mixed-tenant overload",
+        0.0,
+        margin,
+    )
+    .emit();
+}

@@ -2,6 +2,7 @@
 //! formation.
 
 use epdserve::core::config::QueuePolicy;
+use epdserve::core::request::Priority;
 use epdserve::sched::batcher::Batcher;
 use epdserve::sched::queue::{QueuedRequest, StageQueue};
 use epdserve::util::bench::BenchRunner;
@@ -14,13 +15,16 @@ fn item(rng: &mut Rng, id: u64) -> QueuedRequest {
         enqueue_time: rng.f64(),
         est_cost: rng.f64(),
         deadline: rng.f64() * 100.0,
+        class: if rng.bool(0.5) { Priority::Interactive } else { Priority::Batch },
     }
 }
 
 fn main() {
     let runner = BenchRunner::default();
     let mut results = Vec::new();
-    for policy in [QueuePolicy::Fcfs, QueuePolicy::Sjf, QueuePolicy::SloAware] {
+    for policy in
+        [QueuePolicy::Fcfs, QueuePolicy::Sjf, QueuePolicy::SloAware, QueuePolicy::Priority]
+    {
         let mut rng = Rng::new(1);
         let mut q = StageQueue::new(policy);
         for i in 0..256 {

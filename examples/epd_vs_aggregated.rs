@@ -10,9 +10,9 @@
 
 use std::time::{Duration, Instant};
 
+use epdserve::api::SubmitRequest;
 use epdserve::core::config::EpdConfig;
 use epdserve::core::topology::Topology;
-use epdserve::engine::job::GenRequest;
 use epdserve::engine::serve::{EngineConfig, EpdEngine};
 use epdserve::util::rng::Rng;
 use epdserve::util::stats::Summary;
@@ -29,17 +29,16 @@ fn run_mode(name: &str, epd: EpdConfig) -> anyhow::Result<(Summary, Summary, f64
     let mut rng = Rng::new(42);
     let mut rxs = Vec::new();
     let t0 = Instant::now();
-    for i in 0..N_REQUESTS {
+    for _ in 0..N_REQUESTS {
         let gap = rng.exp(RATE);
         std::thread::sleep(Duration::from_secs_f64(gap));
-        rxs.push(engine.submit(GenRequest {
-            id: i as u64 + 1,
-            images: IMAGES,
-            // (prompt content is irrelevant to the timing)
-            prompt: "describe the attached frames".to_string(),
-            max_tokens: MAX_TOKENS,
-            seed: 7,
-        }));
+        // (prompt content is irrelevant to the timing)
+        let req = SubmitRequest::new("describe the attached frames")
+            .images(IMAGES)
+            .max_tokens(MAX_TOKENS)
+            .seed(7);
+        let (_, rx) = engine.submit_request(req)?;
+        rxs.push(rx);
     }
     let mut completed = 0;
     for rx in rxs {

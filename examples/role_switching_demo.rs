@@ -11,8 +11,8 @@ use std::time::Duration;
 use epdserve::core::config::EpdConfig;
 
 use epdserve::core::topology::Topology;
+use epdserve::api::SubmitRequest;
 use epdserve::coordinator::role_switch::SwitchPolicy;
-use epdserve::engine::job::GenRequest;
 use epdserve::engine::serve::{EngineConfig, EpdEngine};
 
 fn main() -> anyhow::Result<()> {
@@ -42,14 +42,10 @@ fn main() -> anyhow::Result<()> {
 
     // Phase 1: encode-heavy, short outputs.
     let mut rxs = Vec::new();
-    for i in 0..8u64 {
-        rxs.push(engine.submit(GenRequest {
-            id: i + 1,
-            images: 4,
-            prompt: "short".into(),
-            max_tokens: 4,
-            seed: 1,
-        }));
+    for _ in 0..8u64 {
+        let req = SubmitRequest::new("short").images(4).max_tokens(4).seed(1);
+        let (_, rx) = engine.submit_request(req)?;
+        rxs.push(rx);
     }
     for rx in rxs.drain(..) {
         rx.recv_timeout(Duration::from_secs(120))?;
@@ -57,14 +53,10 @@ fn main() -> anyhow::Result<()> {
     println!("after short-output phase: {}", roles_snapshot(&engine));
 
     // Phase 2: decode-heavy (long outputs) — pressure shifts to D.
-    for i in 100..124u64 {
-        rxs.push(engine.submit(GenRequest {
-            id: i,
-            images: 1,
-            prompt: "long".into(),
-            max_tokens: 200,
-            seed: 2,
-        }));
+    for _ in 0..24u64 {
+        let req = SubmitRequest::new("long").images(1).max_tokens(200).seed(2);
+        let (_, rx) = engine.submit_request(req)?;
+        rxs.push(rx);
     }
     // Watch roles while the burst drains.
     for _ in 0..10 {

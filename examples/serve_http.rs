@@ -49,9 +49,14 @@ fn main() -> anyhow::Result<()> {
     let resp = http_post(
         &server.addr,
         "/v1/completions",
-        r#"{"prompt":"what do you see?","images":2,"max_tokens":12}"#,
+        r#"{"prompt":"what do you see?","images":2,"max_tokens":12,"tenant":1,"priority":"interactive"}"#,
     )?;
     println!("\nPOST /v1/completions →\n{resp}");
+
+    // Typed errors: out-of-range max_tokens is a field-level 400, not a
+    // silent clamp.
+    let bad = http_post(&server.addr, "/v1/completions", r#"{"max_tokens":99999}"#)?;
+    println!("\nPOST /v1/completions (bad max_tokens) →\n{bad}");
 
     let metrics = http_get(&server.addr, "/metrics")?;
     println!("\nGET /metrics →\n{metrics}");

@@ -1,34 +1,322 @@
-//! HTTP API types: OpenAI-flavoured request/response JSON (App. E: "the
-//! API interface adheres to OpenAI's multimodal specifications").
+//! The typed submit API (App. E: "the API interface adheres to OpenAI's
+//! multimodal specifications"), redesigned around one request type.
+//!
+//! [`SubmitRequest`] is the single hand-off used by the HTTP frontend,
+//! the CLI, the sim workloads and the benches: a builder-style struct
+//! carrying the prompt, a media payload descriptor, `tenant`,
+//! `priority` and `deadline_ms` — everything the front-door router
+//! (`crate::router`) needs. It lowers to the engine's `GenRequest`
+//! ([`SubmitRequest::into_gen`]) or to a simulator `Request`
+//! ([`SubmitRequest::to_sim_request`]), so both halves of the repo
+//! consume exactly the same front-door surface.
+//!
+//! Parsing is versioned and *typed*: a malformed or out-of-range field
+//! is a structured [`ApiError`] (machine-readable `code`, the offending
+//! `field`, an HTTP status) — never a silent `unwrap_or` default. In
+//! particular `max_tokens` outside `1..=MAX_TOKENS_LIMIT` is a 400, not
+//! a silent clamp, and a shed request surfaces as a 429 carrying a
+//! `retry_after_ms` hint.
 
+use crate::core::request::{Priority, Request};
+use crate::engine::job::GenRequest;
+use crate::model::spec::LmmSpec;
+use crate::model::vision::{mm_tokens_for_image, tiles_for_image, Resolution};
 use crate::util::json::Json;
 
-/// Parsed body of `POST /v1/completions`.
+/// Hard ceiling on `max_tokens` (the tiny-LMM artifacts are compiled
+/// for short generations; the old parser silently clamped to this).
+pub const MAX_TOKENS_LIMIT: u32 = 256;
+
+/// The wire-format version this parser accepts (`"version"` field;
+/// absent means current).
+pub const API_VERSION: u64 = 1;
+
+/// A structured, machine-readable API error.
 #[derive(Debug, Clone, PartialEq)]
-pub struct CompletionRequest {
-    pub prompt: String,
-    /// Number of synthetic images attached (stand-in for image payloads).
+pub struct ApiError {
+    /// HTTP status the error maps to (400, 404, 429, 500).
+    pub status: u16,
+    /// Stable machine-readable code (`invalid_max_tokens`,
+    /// `unsupported_version`, `shed`, ...).
+    pub code: &'static str,
+    /// The offending field for field-scoped errors.
+    pub field: Option<&'static str>,
+    pub message: String,
+    /// Backoff hint, milliseconds — set on `shed` (429) errors.
+    pub retry_after_ms: Option<u64>,
+}
+
+impl ApiError {
+    pub fn bad_request(code: &'static str, field: &'static str, message: String) -> ApiError {
+        ApiError { status: 400, code, field: Some(field), message, retry_after_ms: None }
+    }
+
+    /// Admission refused the request (HTTP 429 Too Many Requests).
+    pub fn shed(retry_after_ms: u64) -> ApiError {
+        ApiError {
+            status: 429,
+            code: "shed",
+            field: None,
+            message: format!(
+                "admission control shed this request; retry after {retry_after_ms} ms"
+            ),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    pub fn not_found() -> ApiError {
+        ApiError {
+            status: 404,
+            code: "not_found",
+            field: None,
+            message: "not found".to_string(),
+            retry_after_ms: None,
+        }
+    }
+
+    pub fn internal(message: String) -> ApiError {
+        ApiError { status: 500, code: "internal", field: None, message, retry_after_ms: None }
+    }
+
+    /// The error body: `{"error": {"code", "message", "field"?,
+    /// "retry_after_ms"?}}`.
+    pub fn to_json(&self) -> Json {
+        let mut inner = vec![
+            ("code", Json::str(self.code)),
+            ("message", Json::str(self.message.as_str())),
+        ];
+        if let Some(f) = self.field {
+            inner.push(("field", Json::str(f)));
+        }
+        if let Some(ms) = self.retry_after_ms {
+            inner.push(("retry_after_ms", Json::num(ms as f64)));
+        }
+        Json::obj(vec![("error", Json::obj(inner))])
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} ({})", self.message, self.code)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// The media payload descriptor: how many synthetic images ride along,
+/// at what resolution, generated from which content seed. (Stand-in
+/// for real image payloads; the seed doubles as the content address.)
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MediaDescriptor {
     pub images: u32,
-    pub max_tokens: u32,
+    pub resolution: Resolution,
+    /// Seed for the synthetic image content (the engine's media hash
+    /// derives from it, so equal seeds hit the encoder cache).
     pub seed: u64,
 }
 
-impl CompletionRequest {
-    pub fn from_json(j: &Json) -> anyhow::Result<CompletionRequest> {
-        Ok(CompletionRequest {
-            prompt: j
-                .get("prompt")
-                .and_then(|v| v.as_str())
-                .unwrap_or("")
+impl MediaDescriptor {
+    pub fn none() -> MediaDescriptor {
+        MediaDescriptor { images: 0, resolution: Resolution::four_k(), seed: 0 }
+    }
+}
+
+/// One typed submission: the single front-door hand-off shared by
+/// HTTP, CLI, sim workloads and benches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitRequest {
+    pub prompt: String,
+    pub media: MediaDescriptor,
+    pub max_tokens: u32,
+    /// Tenant id for per-tenant weighted fairness (0 = default tenant).
+    pub tenant: u32,
+    pub priority: Priority,
+    /// Relative first-token deadline, milliseconds (0 = none).
+    pub deadline_ms: u64,
+    /// Synthetic prompt length for the simulator lowering
+    /// ([`SubmitRequest::to_sim_request`]); 0 derives a whitespace-token
+    /// count from `prompt`. The real engine always tokenizes `prompt`.
+    pub prompt_tokens: u32,
+}
+
+impl SubmitRequest {
+    pub fn new(prompt: impl Into<String>) -> SubmitRequest {
+        SubmitRequest {
+            prompt: prompt.into(),
+            media: MediaDescriptor::none(),
+            max_tokens: 16,
+            tenant: 0,
+            priority: Priority::Interactive,
+            deadline_ms: 0,
+            prompt_tokens: 0,
+        }
+    }
+
+    pub fn images(mut self, images: u32) -> SubmitRequest {
+        self.media.images = images;
+        self
+    }
+
+    pub fn resolution(mut self, resolution: Resolution) -> SubmitRequest {
+        self.media.resolution = resolution;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> SubmitRequest {
+        self.media.seed = seed;
+        self
+    }
+
+    pub fn max_tokens(mut self, max_tokens: u32) -> SubmitRequest {
+        self.max_tokens = max_tokens;
+        self
+    }
+
+    pub fn tenant(mut self, tenant: u32) -> SubmitRequest {
+        self.tenant = tenant;
+        self
+    }
+
+    pub fn priority(mut self, priority: Priority) -> SubmitRequest {
+        self.priority = priority;
+        self
+    }
+
+    pub fn deadline_ms(mut self, deadline_ms: u64) -> SubmitRequest {
+        self.deadline_ms = deadline_ms;
+        self
+    }
+
+    pub fn prompt_tokens(mut self, prompt_tokens: u32) -> SubmitRequest {
+        self.prompt_tokens = prompt_tokens;
+        self
+    }
+
+    /// Versioned, typed parse of a `POST /v1/completions` body.
+    pub fn from_json(j: &Json) -> Result<SubmitRequest, ApiError> {
+        let version = opt_u64(j, "version")?.unwrap_or(API_VERSION);
+        if version != API_VERSION {
+            return Err(ApiError::bad_request(
+                "unsupported_version",
+                "version",
+                format!("unsupported API version {version}; this server speaks {API_VERSION}"),
+            ));
+        }
+        let prompt = match j.get("prompt") {
+            None => String::new(),
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| {
+                    ApiError::bad_request(
+                        "invalid_prompt",
+                        "prompt",
+                        "'prompt' must be a string".to_string(),
+                    )
+                })?
                 .to_string(),
-            images: j.get("images").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
-            max_tokens: j
-                .get("max_tokens")
-                .and_then(|v| v.as_u64())
-                .unwrap_or(16)
-                .clamp(1, 256) as u32,
-            seed: j.get("seed").and_then(|v| v.as_u64()).unwrap_or(0),
+        };
+        let max_tokens = match opt_u64(j, "max_tokens")? {
+            None => 16,
+            Some(v) if (1..=MAX_TOKENS_LIMIT as u64).contains(&v) => v as u32,
+            Some(v) => {
+                return Err(ApiError::bad_request(
+                    "invalid_max_tokens",
+                    "max_tokens",
+                    format!("'max_tokens' must be in 1..={MAX_TOKENS_LIMIT}, got {v}"),
+                ))
+            }
+        };
+        let images = match opt_u64(j, "images")?.unwrap_or(0) {
+            v if v <= 4096 => v as u32,
+            v => {
+                return Err(ApiError::bad_request(
+                    "invalid_images",
+                    "images",
+                    format!("'images' must be <= 4096, got {v}"),
+                ))
+            }
+        };
+        let priority = match j.get("priority") {
+            None => Priority::Interactive,
+            Some(v) => v.as_str().and_then(Priority::parse).ok_or_else(|| {
+                ApiError::bad_request(
+                    "invalid_priority",
+                    "priority",
+                    "'priority' must be \"interactive\" or \"batch\"".to_string(),
+                )
+            })?,
+        };
+        Ok(SubmitRequest {
+            prompt,
+            media: MediaDescriptor {
+                images,
+                resolution: Resolution::four_k(),
+                seed: opt_u64(j, "seed")?.unwrap_or(0),
+            },
+            max_tokens,
+            tenant: opt_u64(j, "tenant")?.unwrap_or(0) as u32,
+            priority,
+            deadline_ms: opt_u64(j, "deadline_ms")?.unwrap_or(0),
+            prompt_tokens: 0,
         })
+    }
+
+    /// Lower to the engine's job type under a fresh id.
+    pub fn into_gen(self, id: u64) -> GenRequest {
+        GenRequest {
+            id,
+            images: self.media.images,
+            prompt: self.prompt,
+            max_tokens: self.max_tokens,
+            seed: self.media.seed,
+            tenant: self.tenant,
+            class: self.priority,
+        }
+    }
+
+    /// Materialize a simulator request arriving at `arrival` seconds
+    /// (tiling math cached per spec, like `workload::build_request`).
+    /// `max_tokens` becomes the generation length; a relative
+    /// `deadline_ms` becomes an absolute deadline.
+    pub fn to_sim_request(&self, spec: &LmmSpec, id: u64, arrival: f64) -> Request {
+        let prompt_tokens = if self.prompt_tokens > 0 {
+            self.prompt_tokens
+        } else {
+            self.prompt.split_whitespace().count().max(1) as u32
+        };
+        Request {
+            id,
+            arrival,
+            prompt_tokens,
+            images: self.media.images,
+            resolution: self.media.resolution,
+            output_tokens: self.max_tokens,
+            tiles_per_image: tiles_for_image(spec, self.media.resolution),
+            mm_tokens_per_image: mm_tokens_for_image(spec, self.media.resolution) as u32,
+            media_hash: None,
+            tenant: self.tenant,
+            class: self.priority,
+            deadline: if self.deadline_ms == 0 {
+                f64::INFINITY
+            } else {
+                arrival + self.deadline_ms as f64 / 1000.0
+            },
+        }
+    }
+}
+
+/// Typed optional-u64 field: absent is `None`; present but not a
+/// non-negative integer is a structured 400.
+fn opt_u64(j: &Json, field: &'static str) -> Result<Option<u64>, ApiError> {
+    match j.get(field) {
+        None => Ok(None),
+        Some(v) => v.as_u64().map(Some).ok_or_else(|| {
+            ApiError::bad_request(
+                "invalid_field",
+                field,
+                format!("'{field}' must be a non-negative integer"),
+            )
+        }),
     }
 }
 
@@ -44,11 +332,12 @@ pub fn completion_response(id: u64, text: &str, tokens: usize, ttft: f64, latenc
     ])
 }
 
-/// Error body.
-pub fn error_response(msg: &str) -> Json {
+/// Ad-hoc error body with a machine-readable code (for errors that are
+/// not full [`ApiError`]s, e.g. malformed JSON).
+pub fn error_response(code: &str, msg: &str) -> Json {
     Json::obj(vec![(
         "error",
-        Json::obj(vec![("message", Json::str(msg))]),
+        Json::obj(vec![("code", Json::str(code)), ("message", Json::str(msg))]),
     )])
 }
 
@@ -58,26 +347,115 @@ mod tests {
 
     #[test]
     fn parse_full_request() {
-        let j = Json::parse(r#"{"prompt":"hi","images":4,"max_tokens":32,"seed":7}"#).unwrap();
-        let r = CompletionRequest::from_json(&j).unwrap();
+        let j = Json::parse(
+            r#"{"version":1,"prompt":"hi","images":4,"max_tokens":32,"seed":7,
+                "tenant":3,"priority":"batch","deadline_ms":1500}"#,
+        )
+        .unwrap();
+        let r = SubmitRequest::from_json(&j).unwrap();
         assert_eq!(r.prompt, "hi");
-        assert_eq!(r.images, 4);
+        assert_eq!(r.media.images, 4);
+        assert_eq!(r.media.seed, 7);
         assert_eq!(r.max_tokens, 32);
-        assert_eq!(r.seed, 7);
+        assert_eq!(r.tenant, 3);
+        assert_eq!(r.priority, Priority::Batch);
+        assert_eq!(r.deadline_ms, 1500);
     }
 
     #[test]
     fn defaults_apply() {
         let j = Json::parse("{}").unwrap();
-        let r = CompletionRequest::from_json(&j).unwrap();
-        assert_eq!(r.images, 0);
+        let r = SubmitRequest::from_json(&j).unwrap();
+        assert_eq!(r.media.images, 0);
         assert_eq!(r.max_tokens, 16);
+        assert_eq!(r.tenant, 0);
+        assert_eq!(r.priority, Priority::Interactive);
+        assert_eq!(r.deadline_ms, 0);
     }
 
     #[test]
-    fn max_tokens_clamped() {
+    fn max_tokens_out_of_range_is_typed_400() {
+        // The old parser silently clamped 100000 -> 256; now it's a
+        // field-level structured error.
         let j = Json::parse(r#"{"max_tokens":100000}"#).unwrap();
-        assert_eq!(CompletionRequest::from_json(&j).unwrap().max_tokens, 256);
+        let e = SubmitRequest::from_json(&j).unwrap_err();
+        assert_eq!(e.status, 400);
+        assert_eq!(e.code, "invalid_max_tokens");
+        assert_eq!(e.field, Some("max_tokens"));
+        let j = Json::parse(r#"{"max_tokens":0}"#).unwrap();
+        assert_eq!(SubmitRequest::from_json(&j).unwrap_err().code, "invalid_max_tokens");
+    }
+
+    #[test]
+    fn wrong_types_are_typed_errors() {
+        let j = Json::parse(r#"{"images":"four"}"#).unwrap();
+        let e = SubmitRequest::from_json(&j).unwrap_err();
+        assert_eq!((e.status, e.code, e.field), (400, "invalid_field", Some("images")));
+        let j = Json::parse(r#"{"priority":"urgent"}"#).unwrap();
+        assert_eq!(SubmitRequest::from_json(&j).unwrap_err().code, "invalid_priority");
+        let j = Json::parse(r#"{"prompt":7}"#).unwrap();
+        assert_eq!(SubmitRequest::from_json(&j).unwrap_err().code, "invalid_prompt");
+    }
+
+    #[test]
+    fn unknown_version_rejected() {
+        let j = Json::parse(r#"{"version":2}"#).unwrap();
+        let e = SubmitRequest::from_json(&j).unwrap_err();
+        assert_eq!(e.code, "unsupported_version");
+        assert_eq!(e.status, 400);
+    }
+
+    #[test]
+    fn builder_chain() {
+        let r = SubmitRequest::new("describe")
+            .images(2)
+            .seed(0xABC)
+            .max_tokens(64)
+            .tenant(5)
+            .priority(Priority::Batch)
+            .deadline_ms(2000)
+            .prompt_tokens(22);
+        assert_eq!(r.media.images, 2);
+        assert_eq!(r.media.seed, 0xABC);
+        assert_eq!(r.tenant, 5);
+        let g = r.clone().into_gen(9);
+        assert_eq!(g.id, 9);
+        assert_eq!(g.class, Priority::Batch);
+        assert_eq!(g.tenant, 5);
+        assert_eq!(g.seed, 0xABC);
+        assert_eq!(g.max_tokens, 64);
+    }
+
+    #[test]
+    fn sim_lowering() {
+        let spec = LmmSpec::get(crate::model::spec::ModelId::MiniCpmV26);
+        let r = SubmitRequest::new("a b c")
+            .images(2)
+            .max_tokens(8)
+            .tenant(1)
+            .priority(Priority::Batch)
+            .deadline_ms(500);
+        let sim = r.to_sim_request(&spec, 4, 10.0);
+        assert_eq!(sim.id, 4);
+        assert_eq!(sim.prompt_tokens, 3, "whitespace tokens when no override");
+        assert_eq!(sim.images, 2);
+        assert_eq!(sim.output_tokens, 8);
+        assert_eq!(sim.tenant, 1);
+        assert_eq!(sim.class, Priority::Batch);
+        assert!((sim.deadline - 10.5).abs() < 1e-9);
+        let sim2 = r.prompt_tokens(40).to_sim_request(&spec, 5, 0.0);
+        assert_eq!(sim2.prompt_tokens, 40, "explicit override wins");
+        assert!((sim2.deadline - 0.5).abs() < 1e-9, "deadline_ms relative to arrival");
+        let no_deadline = SubmitRequest::new("x").to_sim_request(&spec, 6, 0.0);
+        assert_eq!(no_deadline.deadline, f64::INFINITY);
+    }
+
+    #[test]
+    fn shed_error_shape() {
+        let j = ApiError::shed(750).to_json();
+        let err = j.get("error").unwrap();
+        assert_eq!(err.get("code").unwrap().as_str(), Some("shed"));
+        assert_eq!(err.get("retry_after_ms").unwrap().as_f64(), Some(750.0));
     }
 
     #[test]
@@ -85,5 +463,7 @@ mod tests {
         let j = completion_response(3, "out", 5, 0.1, 0.5);
         assert_eq!(j.get("text").unwrap().as_str(), Some("out"));
         assert!(j.get("usage").unwrap().get("completion_tokens").is_some());
+        let e = error_response("bad_json", "oops");
+        assert_eq!(e.get("error").unwrap().get("code").unwrap().as_str(), Some("bad_json"));
     }
 }

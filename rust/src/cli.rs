@@ -10,7 +10,9 @@
 
 use std::sync::Arc;
 
-use crate::core::config::EpdConfig;
+use crate::api::SubmitRequest;
+use crate::core::config::{EpdConfig, RouterPolicy};
+use crate::core::request::Priority;
 use crate::core::slo::Slo;
 use crate::core::topology::{DeploymentMode, Topology};
 use crate::metrics::goodput::find_goodput;
@@ -37,6 +39,13 @@ fn cli() -> Cli {
                 opt("topology", Some("2E1P1D"), "instance topology, e.g. 5E2P1D"),
                 opt("addr", Some("127.0.0.1:8072"), "listen address"),
                 flag("role-switching", "enable dynamic role switching"),
+                opt(
+                    "router",
+                    Some("off"),
+                    "front-door admission: off | on (on sheds with 429 when the projected TTFT/TPOT misses --slo-ttft/--slo-tpot)",
+                ),
+                opt("slo-ttft", Some("inf"), "router TTFT target (s)"),
+                opt("slo-tpot", Some("inf"), "router TPOT target (s)"),
             ],
             positional: vec![],
         })
@@ -49,6 +58,8 @@ fn cli() -> Cli {
                 opt("images", Some("2"), "synthetic images to attach"),
                 opt("max-tokens", Some("16"), "tokens to generate"),
                 opt("topology", Some("2E1P1D"), "instance topology"),
+                opt("tenant", Some("0"), "tenant id stamped on the request"),
+                opt("priority", Some("interactive"), "interactive | batch"),
             ],
             positional: vec![],
         })
@@ -67,7 +78,12 @@ fn cli() -> Cli {
                 opt(
                     "workload",
                     Some("synthetic"),
-                    "synthetic | cluster-scale | diurnal (cluster-scale/diurnal run on the 64-instance reference cluster; ignore --mode/--topology/--images/--output-tokens)",
+                    "synthetic | mixed-tenant | cluster-scale | diurnal (cluster-scale/diurnal run on the 64-instance reference cluster; ignore --mode/--topology/--images/--output-tokens)",
+                ),
+                opt(
+                    "router",
+                    Some("off"),
+                    "front-door admission: off | on (on sheds/degrades against --slo-ttft/--slo-tpot)",
                 ),
                 opt(
                     "faults",
@@ -150,6 +166,10 @@ fn parse_resolution(s: &str) -> anyhow::Result<Resolution> {
     Ok(Resolution::new(w.parse()?, h.parse()?))
 }
 
+fn parse_router(s: &str) -> anyhow::Result<RouterPolicy> {
+    RouterPolicy::parse(s).ok_or_else(|| anyhow::anyhow!("--router must be off | on"))
+}
+
 fn epd_config(mode: &str, topology: &str) -> anyhow::Result<EpdConfig> {
     let mode = DeploymentMode::parse(mode).ok_or_else(|| anyhow::anyhow!("bad mode"))?;
     let topo = Topology::parse(topology).ok_or_else(|| anyhow::anyhow!("bad topology"))?;
@@ -169,6 +189,9 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
         "serve" => {
             let mut cfg = epd_config(args.str("mode"), args.str("topology"))?;
             cfg.role_switching = args.flag("role-switching");
+            cfg.router = parse_router(args.str("router"))?;
+            cfg.router_slo_ttft = args.f64("slo-ttft");
+            cfg.router_slo_tpot = args.f64("slo-tpot");
             let engine = Arc::new(crate::engine::serve::EpdEngine::start(
                 crate::engine::serve::EngineConfig::new(args.str("artifacts"), cfg),
             )?);
@@ -183,11 +206,16 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
             let engine = crate::engine::serve::EpdEngine::start(
                 crate::engine::serve::EngineConfig::new(args.str("artifacts"), cfg),
             )?;
-            let resp = engine.generate(
-                args.u64("images") as u32,
-                args.str("prompt"),
-                args.u64("max-tokens") as u32,
-            )?;
+            let priority = Priority::parse(args.str("priority"))
+                .ok_or_else(|| anyhow::anyhow!("--priority must be interactive | batch"))?;
+            let req = SubmitRequest::new(args.str("prompt"))
+                .images(args.u64("images") as u32)
+                .max_tokens(args.u64("max-tokens") as u32)
+                .tenant(args.u64("tenant") as u32)
+                .priority(priority)
+                .seed(0x5EED);
+            let (_, rx) = engine.submit_request(req)?;
+            let resp = rx.recv()?;
             println!("tokens: {:?}", resp.tokens);
             println!("text:   {:?}", resp.text);
             println!("latency: {:.3}s", resp.latency);
@@ -221,6 +249,10 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                         EpdConfig::epd(ClusterScaleWorkload::topology64(), 1, 1, 128),
                     )
                 }
+                "mixed-tenant" => (
+                    Box::new(crate::workload::MixedTenantWorkload::default()),
+                    epd_config(args.str("mode"), args.str("topology"))?,
+                ),
                 "synthetic" => (
                     Box::new(SyntheticWorkload::new(
                         args.u64("images") as u32,
@@ -231,6 +263,14 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                 other => anyhow::bail!("unknown workload '{other}'"),
             };
             epd.irp = !args.flag("no-irp");
+            epd.router = parse_router(args.str("router"))?;
+            let router_on = epd.router == RouterPolicy::On;
+            if router_on {
+                // The router projects against the same targets the report
+                // scores (--slo-ttft/--slo-tpot).
+                epd.router_slo_ttft = args.f64("slo-ttft");
+                epd.router_slo_tpot = args.f64("slo-tpot");
+            }
             match args.str("faults") {
                 "off" => {}
                 s if s == "wave" || s.starts_with("wave:") => {
@@ -283,6 +323,13 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                     "switches:   {} ({} plans / {} steps)",
                     out.role_switches, out.reallocation.plans, out.reallocation.planned_steps
                 );
+                if router_on {
+                    let r = &out.router;
+                    println!(
+                        "router:     text-bypass {} mm {} shed {} degraded {} held {} (peak {})",
+                        r.text_bypass, r.mm_routed, r.shed, r.degraded, r.held, r.peak_held
+                    );
+                }
                 if !cfg.faults.is_empty() {
                     let r = &out.resilience;
                     println!(

@@ -15,6 +15,9 @@ pub enum QueuePolicy {
     Sjf,
     /// Earliest-SLO-deadline-first.
     SloAware,
+    /// Class-band order (interactive before batch), FCFS within a band —
+    /// the per-instance companion of the front-door priority queues.
+    Priority,
 }
 
 impl QueuePolicy {
@@ -23,6 +26,7 @@ impl QueuePolicy {
             "fcfs" => Some(QueuePolicy::Fcfs),
             "sjf" => Some(QueuePolicy::Sjf),
             "slo" | "slo-aware" => Some(QueuePolicy::SloAware),
+            "priority" => Some(QueuePolicy::Priority),
             _ => None,
         }
     }
@@ -31,6 +35,32 @@ impl QueuePolicy {
             QueuePolicy::Fcfs => "fcfs",
             QueuePolicy::Sjf => "sjf",
             QueuePolicy::SloAware => "slo-aware",
+            QueuePolicy::Priority => "priority",
+        }
+    }
+}
+
+/// Whether the SLO-aware multi-path front door (`router/`) fronts the
+/// submit path. `Off` (the default) keeps the legacy single path
+/// bit-for-bit: no fair queues, no admission projection, no shedding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RouterPolicy {
+    Off,
+    On,
+}
+
+impl RouterPolicy {
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" => Some(RouterPolicy::Off),
+            "on" => Some(RouterPolicy::On),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::Off => "off",
+            RouterPolicy::On => "on",
         }
     }
 }
@@ -227,6 +257,35 @@ pub struct EpdConfig {
     /// Permanent service-time multiplier for straggler instances (<= 1
     /// disables stragglers).
     pub fault_straggler_factor: f64,
+    /// The SLO-aware multi-path front door (`router/`). `Off` (the
+    /// default) keeps the legacy single submit path bit-for-bit.
+    pub router: RouterPolicy,
+    /// TTFT target (seconds) the admission projection sheds against.
+    /// `f64::INFINITY` (the default) never sheds on TTFT.
+    pub router_slo_ttft: f64,
+    /// TPOT target (seconds/token) for admission. `f64::INFINITY`
+    /// (the default) never sheds on TPOT.
+    pub router_slo_tpot: f64,
+    /// Multiplier on both SLO targets before comparing the projection:
+    /// < 1 sheds early (conservative), > 1 tolerates projected misses.
+    pub router_headroom: f64,
+    /// Per-instance queue-depth window the front door dispatches into;
+    /// arrivals beyond it are held in the fair queues.
+    pub router_depth: u32,
+    /// Degrade mildly-over-SLO interactive requests (cap `max_tokens`
+    /// to `router_degrade_tokens`, drop to the batch class) instead of
+    /// shedding them outright.
+    pub router_degrade: bool,
+    /// `max_tokens` cap applied to degraded requests.
+    pub router_degrade_tokens: u32,
+    /// Floor for the `retry_after_ms` hint returned with a shed
+    /// (HTTP 429) response.
+    pub router_retry_after_ms: u64,
+    /// Deficit weight for tenants not listed in `router_tenant_weights`.
+    pub router_default_weight: u32,
+    /// Per-tenant deficit weights, `"tenant:weight,..."` (e.g. `"0:4,7:2"`).
+    /// Empty = every tenant at `router_default_weight`.
+    pub router_tenant_weights: String,
 }
 
 impl EpdConfig {
@@ -265,6 +324,16 @@ impl EpdConfig {
             fault_downtime: 5.0,
             fault_link_factor: 1.0,
             fault_straggler_factor: 1.0,
+            router: RouterPolicy::Off,
+            router_slo_ttft: f64::INFINITY,
+            router_slo_tpot: f64::INFINITY,
+            router_headroom: 1.0,
+            router_depth: 4,
+            router_degrade: false,
+            router_degrade_tokens: 32,
+            router_retry_after_ms: 250,
+            router_default_weight: 1,
+            router_tenant_weights: String::new(),
         }
     }
 
@@ -333,6 +402,16 @@ impl EpdConfig {
     /// fault_downtime = 5.0    # seconds a crashed instance stays down
     /// fault_link_factor = 1.0 # link slow-down during the wave (1 = off)
     /// fault_straggler_factor = 1.0 # permanent straggler slow-down (1 = off)
+    /// router = "off"          # off | on — SLO-aware multi-path front door
+    /// router_slo_ttft = 2.6   # TTFT target, seconds (omit = never shed on TTFT)
+    /// router_slo_tpot = 0.04  # TPOT target, seconds/token (omit = never shed)
+    /// router_headroom = 1.0   # SLO multiplier; < 1 sheds early
+    /// router_depth = 4        # per-instance dispatch window
+    /// router_degrade = false  # cap + downgrade mild overload instead of shedding
+    /// router_degrade_tokens = 32
+    /// router_retry_after_ms = 250
+    /// router_default_weight = 1
+    /// router_tenant_weights = "0:4,7:2" # per-tenant deficit weights
     /// [sched]
     /// queue = "fcfs"          # fcfs | sjf | slo-aware
     /// assign = "least-loaded" # round-robin | least-loaded
@@ -391,6 +470,38 @@ impl EpdConfig {
         if let Some(v) = doc.get_f64("", "fault_straggler_factor") {
             cfg.fault_straggler_factor = v.max(0.0);
         }
+        if let Some(r) = doc.get_str("", "router") {
+            cfg.router = RouterPolicy::parse(r).context("bad 'router'")?;
+        }
+        if let Some(v) = doc.get_f64("", "router_slo_ttft") {
+            anyhow::ensure!(v > 0.0, "bad 'router_slo_ttft': must be > 0");
+            cfg.router_slo_ttft = v;
+        }
+        if let Some(v) = doc.get_f64("", "router_slo_tpot") {
+            anyhow::ensure!(v > 0.0, "bad 'router_slo_tpot': must be > 0");
+            cfg.router_slo_tpot = v;
+        }
+        if let Some(v) = doc.get_f64("", "router_headroom") {
+            anyhow::ensure!(v > 0.0, "bad 'router_headroom': must be > 0");
+            cfg.router_headroom = v;
+        }
+        if let Some(v) = doc.get_i64("", "router_depth") {
+            cfg.router_depth = v.max(1) as u32;
+        }
+        cfg.router_degrade = doc.get_bool("", "router_degrade").unwrap_or(false);
+        if let Some(v) = doc.get_i64("", "router_degrade_tokens") {
+            cfg.router_degrade_tokens = v.max(1) as u32;
+        }
+        if let Some(v) = doc.get_i64("", "router_retry_after_ms") {
+            cfg.router_retry_after_ms = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_i64("", "router_default_weight") {
+            cfg.router_default_weight = v.max(1) as u32;
+        }
+        if let Some(w) = doc.get_str("", "router_tenant_weights") {
+            crate::router::parse_tenant_weights(w).context("bad 'router_tenant_weights'")?;
+            cfg.router_tenant_weights = w.to_string();
+        }
         if let Some(q) = doc.get_str("sched", "queue") {
             let q = QueuePolicy::parse(q).context("bad sched.queue")?;
             cfg.sched_encode.queue = q;
@@ -428,6 +539,14 @@ mod tests {
         assert_eq!(cfg.fault_seed, 0, "chaos is opt-in");
         assert_eq!(cfg.fault_link_factor, 1.0);
         assert_eq!(cfg.fault_straggler_factor, 1.0);
+        assert_eq!(cfg.router, RouterPolicy::Off, "the front door is opt-in");
+        assert_eq!(cfg.router_slo_ttft, f64::INFINITY, "no TTFT shedding by default");
+        assert_eq!(cfg.router_slo_tpot, f64::INFINITY, "no TPOT shedding by default");
+        assert_eq!(cfg.router_headroom, 1.0);
+        assert_eq!(cfg.router_depth, 4);
+        assert!(!cfg.router_degrade);
+        assert_eq!(cfg.router_default_weight, 1);
+        assert!(cfg.router_tenant_weights.is_empty());
 
         let ds = EpdConfig::distserve(7, 1, 1, 128);
         assert_eq!(ds.mode, DeploymentMode::PdDisagg);
@@ -461,6 +580,16 @@ fault_crashes = 2
 fault_downtime = 3.5
 fault_link_factor = 4.0
 fault_straggler_factor = 1.5
+router = "on"
+router_slo_ttft = 2.6
+router_slo_tpot = 0.04
+router_headroom = 0.9
+router_depth = 8
+router_degrade = true
+router_degrade_tokens = 16
+router_retry_after_ms = 500
+router_default_weight = 2
+router_tenant_weights = "0:4,7:2"
 [sched]
 queue = "sjf"
 assign = "round-robin"
@@ -484,6 +613,16 @@ assign = "round-robin"
         assert_eq!(cfg.fault_downtime, 3.5);
         assert_eq!(cfg.fault_link_factor, 4.0);
         assert_eq!(cfg.fault_straggler_factor, 1.5);
+        assert_eq!(cfg.router, RouterPolicy::On);
+        assert_eq!(cfg.router_slo_ttft, 2.6);
+        assert_eq!(cfg.router_slo_tpot, 0.04);
+        assert_eq!(cfg.router_headroom, 0.9);
+        assert_eq!(cfg.router_depth, 8);
+        assert!(cfg.router_degrade);
+        assert_eq!(cfg.router_degrade_tokens, 16);
+        assert_eq!(cfg.router_retry_after_ms, 500);
+        assert_eq!(cfg.router_default_weight, 2);
+        assert_eq!(cfg.router_tenant_weights, "0:4,7:2");
         assert_eq!(cfg.sched_decode.queue, QueuePolicy::Sjf);
         assert_eq!(cfg.sched_encode.assign, AssignPolicy::RoundRobin);
         let d = cfg.instances.iter().find(|i| i.role == Stage::Decode).unwrap();
@@ -510,5 +649,25 @@ assign = "round-robin"
     fn from_toml_rejects_bad_planner() {
         let doc = TomlDoc::parse("planner = \"oracle\"").unwrap();
         assert!(EpdConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn from_toml_rejects_bad_router() {
+        let doc = TomlDoc::parse("router = \"auto\"").unwrap();
+        assert!(EpdConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("router_tenant_weights = \"0;4\"").unwrap();
+        assert!(EpdConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("router_slo_ttft = -1.0").unwrap();
+        assert!(EpdConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn router_policy_parsing() {
+        assert_eq!(RouterPolicy::parse("ON"), Some(RouterPolicy::On));
+        assert_eq!(RouterPolicy::parse("off"), Some(RouterPolicy::Off));
+        assert_eq!(RouterPolicy::parse("??"), None);
+        assert_eq!(RouterPolicy::On.name(), "on");
+        assert_eq!(QueuePolicy::parse("priority"), Some(QueuePolicy::Priority));
+        assert_eq!(QueuePolicy::Priority.name(), "priority");
     }
 }

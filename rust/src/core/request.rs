@@ -22,8 +22,45 @@ pub enum RequestPhase {
     Finished,
 }
 
+/// Priority class carried by every request and consumed by the
+/// front-door router (`router = "on"`): interactive traffic drains
+/// before batch at every fair-queue band.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Priority {
+    /// Latency-sensitive traffic, served first.
+    #[default]
+    Interactive,
+    /// Throughput traffic, drained only when no interactive work waits.
+    Batch,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Band index used by per-class queues (interactive drains first).
+    pub fn band(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+}
+
 /// A serving request: prompt + multimodal payload + generation length.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub id: RequestId,
     /// Arrival time, seconds since experiment start.
@@ -47,6 +84,15 @@ pub struct Request {
     /// hash share encoder output. `None` (the default for workloads
     /// without repeated media) opts the request out of caching.
     pub media_hash: Option<u64>,
+    /// Tenant id for per-tenant weighted fairness at the front door
+    /// (0 = the default tenant; inert while `router = "off"`).
+    pub tenant: u32,
+    /// Priority class; `Interactive` everywhere the router is off.
+    pub class: Priority,
+    /// Absolute first-token deadline, seconds since experiment start
+    /// (`f64::INFINITY` = none). Consumed by SLO-aware queueing and the
+    /// router's admission projection.
+    pub deadline: f64,
 }
 
 impl Request {
@@ -142,7 +188,20 @@ mod tests {
             tiles_per_image: 10,
             mm_tokens_per_image: 640,
             media_hash: None,
+            tenant: 0,
+            class: Priority::Interactive,
+            deadline: f64::INFINITY,
         }
+    }
+
+    #[test]
+    fn priority_parse_roundtrip() {
+        for p in [Priority::Interactive, Priority::Batch] {
+            assert_eq!(Priority::parse(p.name()), Some(p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+        assert!(Priority::Interactive.band() < Priority::Batch.band());
+        assert_eq!(Priority::default(), Priority::Interactive);
     }
 
     #[test]

@@ -1,7 +1,12 @@
 //! Minimal HTTP/1.1 frontend over `std::net` (no hyper/axum offline):
 //! thread-per-connection, enough of the protocol for the API surface:
 //!
-//! - `POST /v1/completions` — generate (blocking until completion)
+//! - `POST /v1/completions` — generate (blocking until completion).
+//!   The body is a versioned [`SubmitRequest`]; `X-Tenant` and
+//!   `X-Priority` headers override the body's `tenant`/`priority`
+//!   fields (so a gateway can stamp identity without rewriting JSON).
+//!   Malformed fields are field-level 400s with machine-readable codes;
+//!   an admission shed is a 429 carrying `retry_after_ms`.
 //! - `GET  /metrics`        — live TTFT/TPOT/latency report (JSON)
 //! - `GET  /healthz`        — liveness
 
@@ -13,10 +18,18 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 use log::{info, warn};
 
-use crate::api::{completion_response, error_response, CompletionRequest};
-use crate::engine::job::GenRequest;
+use crate::api::{completion_response, error_response, ApiError, SubmitRequest};
+use crate::core::request::Priority;
 use crate::engine::serve::EpdEngine;
 use crate::util::json::Json;
+
+/// Request-scoped header overrides captured by the connection reader.
+#[derive(Debug, Default)]
+struct Headers {
+    content_length: usize,
+    tenant: Option<u32>,
+    priority: Option<Priority>,
+}
 
 /// A running HTTP server.
 pub struct HttpServer {
@@ -76,7 +89,7 @@ fn handle_conn(stream: TcpStream, engine: &Arc<EpdEngine>) -> Result<()> {
     let path = parts.next().unwrap_or("/").to_string();
 
     // Headers.
-    let mut content_length = 0usize;
+    let mut headers = Headers::default();
     loop {
         let mut line = String::new();
         reader.read_line(&mut line)?;
@@ -84,50 +97,63 @@ fn handle_conn(stream: TcpStream, engine: &Arc<EpdEngine>) -> Result<()> {
         if line.is_empty() {
             break;
         }
-        if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
-            content_length = v.trim().parse().unwrap_or(0);
+        let lower = line.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            headers.content_length = v.trim().parse().unwrap_or(0);
+        } else if let Some(v) = lower.strip_prefix("x-tenant:") {
+            headers.tenant = v.trim().parse().ok();
+        } else if let Some(v) = lower.strip_prefix("x-priority:") {
+            headers.priority = Priority::parse(v.trim());
         }
     }
-    let mut body = vec![0u8; content_length.min(1 << 20)];
-    if content_length > 0 {
+    let mut body = vec![0u8; headers.content_length.min(1 << 20)];
+    if headers.content_length > 0 {
         reader.read_exact(&mut body)?;
     }
     let body = String::from_utf8_lossy(&body).into_owned();
 
-    let (status, payload) = route(&method, &path, &body, engine);
+    let (status, payload) = route(&method, &path, &body, &headers, engine);
     respond(stream, status, &payload.to_string())
 }
 
-fn route(method: &str, path: &str, body: &str, engine: &Arc<EpdEngine>) -> (u16, Json) {
+fn route(
+    method: &str,
+    path: &str,
+    body: &str,
+    headers: &Headers,
+    engine: &Arc<EpdEngine>,
+) -> (u16, Json) {
     match (method, path) {
         ("GET", "/healthz") => (200, Json::obj(vec![("ok", Json::Bool(true))])),
         ("GET", "/metrics") => (200, engine.metrics.report()),
         ("POST", "/v1/completions") => {
             let parsed = match Json::parse(body) {
                 Ok(j) => j,
-                Err(e) => return (400, error_response(&format!("bad json: {e}"))),
+                Err(e) => return (400, error_response("bad_json", &format!("bad json: {e}"))),
             };
-            let req = match CompletionRequest::from_json(&parsed) {
+            let mut req = match SubmitRequest::from_json(&parsed) {
                 Ok(r) => r,
-                Err(e) => return (400, error_response(&format!("bad request: {e}"))),
+                Err(e) => return (e.status, e.to_json()),
             };
-            let id = engine.fresh_id();
-            let rx = engine.submit(GenRequest {
-                id,
-                images: req.images,
-                prompt: req.prompt,
-                max_tokens: req.max_tokens,
-                seed: req.seed,
-            });
+            if let Some(t) = headers.tenant {
+                req.tenant = t;
+            }
+            if let Some(p) = headers.priority {
+                req.priority = p;
+            }
+            let (id, rx) = match engine.submit_request(req) {
+                Ok(pair) => pair,
+                Err(e) => return (e.status, e.to_json()),
+            };
             match rx.recv() {
                 Ok(resp) => (
                     200,
                     completion_response(id, &resp.text, resp.tokens.len(), resp.ttft, resp.latency),
                 ),
-                Err(_) => (500, error_response("engine dropped the request")),
+                Err(_) => (500, error_response("dropped", "engine dropped the request")),
             }
         }
-        _ => (404, error_response("not found")),
+        _ => (404, ApiError::not_found().to_json()),
     }
 }
 
@@ -136,6 +162,7 @@ fn respond(mut stream: TcpStream, status: u16, body: &str) -> Result<()> {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        429 => "Too Many Requests",
         _ => "Internal Server Error",
     };
     let head = format!(

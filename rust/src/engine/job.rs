@@ -5,7 +5,7 @@ use std::sync::mpsc::SyncSender;
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::core::request::RequestId;
+use crate::core::request::{Priority, RequestId};
 
 /// A generation request submitted to the engine.
 #[derive(Debug, Clone)]
@@ -17,6 +17,10 @@ pub struct GenRequest {
     pub max_tokens: u32,
     /// Seed for the synthetic image content.
     pub seed: u64,
+    /// Tenant id for front-door fairness accounting (0 = default).
+    pub tenant: u32,
+    /// Priority class, consulted by front-door admission.
+    pub class: Priority,
 }
 
 /// The completed response.

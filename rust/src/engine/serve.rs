@@ -11,13 +11,16 @@ use std::time::Duration;
 use anyhow::Result;
 use log::info;
 
+use crate::api::{ApiError, SubmitRequest};
 use crate::coordinator::planner::{PlannerConfig, ReallocationPlanner};
 use crate::coordinator::profiler::WorkloadProfiler;
 use crate::coordinator::role_switch::SwitchPolicy;
 use crate::core::config::EpdConfig;
+use crate::core::request::Priority;
 use crate::core::stage::Stage;
 use crate::metrics::recorder::MetricsRecorder;
 use crate::model::tokenizer;
+use crate::router::{decide, AdmissionDecision, AdmissionOutlook, RouterConfig};
 use crate::util::rng::Rng;
 
 use super::instance::{instance_main, Ctrl, InstanceParams};
@@ -82,6 +85,9 @@ pub struct EpdEngine {
     monitor_handle: Option<JoinHandle<()>>,
     pub metrics: Arc<MetricsRecorder>,
     next_id: AtomicU64,
+    /// Front-door admission config; `None` when `router = "off"` — the
+    /// typed submit path then behaves exactly like the legacy one.
+    router: Option<RouterConfig>,
 }
 
 impl EpdEngine {
@@ -133,6 +139,7 @@ impl EpdEngine {
             cfg.epd.mode.name(),
             cfg.epd.topology()
         );
+        let router = RouterConfig::from_epd(&cfg.epd);
         Ok(EpdEngine {
             cfg,
             queues,
@@ -141,7 +148,75 @@ impl EpdEngine {
             monitor_handle,
             metrics,
             next_id: AtomicU64::new(1),
+            router,
         })
+    }
+
+    /// The typed front-door submit: runs SLO-aware admission (when
+    /// `router = "on"`) before lowering to [`EpdEngine::submit`].
+    ///
+    /// Returns the assigned request id plus the response receiver, or a
+    /// structured [`ApiError`] — a shed decision surfaces as 429 with a
+    /// `retry_after_ms` hint; a degrade decision caps `max_tokens` and
+    /// drops the request to the batch class but still serves it.
+    pub fn submit_request(
+        &self,
+        mut req: SubmitRequest,
+    ) -> Result<(u64, Receiver<GenResponse>), ApiError> {
+        if let Some(rc) = &self.router {
+            let outlook = self.router_outlook(req.media.images);
+            let budget = if req.deadline_ms == 0 {
+                f64::INFINITY
+            } else {
+                req.deadline_ms as f64 / 1000.0
+            };
+            match decide(rc, &outlook, req.priority, budget) {
+                AdmissionDecision::Admit => {}
+                AdmissionDecision::Degrade { max_tokens } => {
+                    req.max_tokens = req.max_tokens.min(max_tokens);
+                    req.priority = Priority::Batch;
+                    self.metrics.on_router_degraded();
+                }
+                AdmissionDecision::Shed { retry_after_ms } => {
+                    self.metrics.on_router_shed();
+                    return Err(ApiError::shed(retry_after_ms));
+                }
+            }
+        }
+        let id = self.fresh_id();
+        let rx = self.submit(req.into_gen(id));
+        Ok((id, rx))
+    }
+
+    /// Admission projection from live queue depths priced at the
+    /// worker-measured mean service times (the engine-side analogue of
+    /// the simulator's profiler-EWMA outlook). Before the first job of a
+    /// stage completes its mean is 0 — warm-up admits by construction.
+    fn router_outlook(&self, images: u32) -> AdmissionOutlook {
+        let svc = |s: Stage| -> f64 {
+            let jobs = self.metrics.stage_jobs(s);
+            if jobs == 0 {
+                0.0
+            } else {
+                self.metrics.stage_busy_seconds(s) / jobs as f64
+            }
+        };
+        let wait = |s: Stage| -> f64 {
+            self.queues.len(s) as f64 * svc(s) / self.queues.role_count(s).max(1) as f64
+        };
+        let mut outlook = AdmissionOutlook {
+            prefill_wait: wait(Stage::Prefill),
+            prefill_cost: svc(Stage::Prefill),
+            decode_step: svc(Stage::Decode),
+            ..Default::default()
+        };
+        if images > 0 {
+            // Multimodal path: wait behind the encode queue, plus one
+            // shard's own encode service (IRP shards run in parallel).
+            outlook.entry_wait = wait(Stage::Encode);
+            outlook.encode_cost = svc(Stage::Encode);
+        }
+        outlook
     }
 
     /// Submit a request; returns a receiver for the response.
@@ -271,16 +346,13 @@ impl EpdEngine {
         rx
     }
 
-    /// Convenience: submit and wait.
+    /// Convenience: submit and wait (through the typed front door).
     pub fn generate(&self, images: u32, prompt: &str, max_tokens: u32) -> Result<GenResponse> {
-        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let rx = self.submit(GenRequest {
-            id,
-            images,
-            prompt: prompt.to_string(),
-            max_tokens,
-            seed: 0x5EED,
-        });
+        let req = SubmitRequest::new(prompt)
+            .images(images)
+            .max_tokens(max_tokens)
+            .seed(0x5EED);
+        let (_, rx) = self.submit_request(req)?;
         Ok(rx.recv()?)
     }
 

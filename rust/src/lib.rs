@@ -16,6 +16,9 @@
 //!   before skip the encode stage entirely.
 //! - [`sched`] — per-stage queueing/batching policies and instance
 //!   assignment strategies (Appendix D).
+//! - [`router`] — the SLO-aware multi-path front door shared by sim and
+//!   engine: text-only encoder bypass, per-tenant weighted-fair priority
+//!   queues, and projection-based admission control (shed/degrade).
 //! - [`coordinator`] — the paper's system contribution: EP/PD migration,
 //!   intra-request parallelism (§3.2.2), dynamic role switching (§3.2.4),
 //!   and the online reallocation planner (workload profiler → topology
@@ -40,6 +43,7 @@ pub mod model;
 pub mod core;
 pub mod cache;
 pub mod sched;
+pub mod router;
 pub mod coordinator;
 pub mod sim;
 pub mod workload;

@@ -52,6 +52,11 @@ pub struct MetricsRecorder {
     arrived_images: AtomicU64,
     arrived_prompt_tokens: AtomicU64,
     arrived_output_tokens: AtomicU64,
+    /// Front-door admission counters (`EpdEngine::submit_request` with
+    /// `router = "on"`): requests refused with 429, requests served
+    /// degraded (capped tokens, batch class).
+    router_shed: AtomicU64,
+    router_degraded: AtomicU64,
     /// Reallocation counters: executed role switches plus the planner's
     /// plan/step snapshot (mirrored from the monitor thread).
     role_switches: AtomicU64,
@@ -187,6 +192,24 @@ impl MetricsRecorder {
             self.arrived_prompt_tokens.load(Ordering::Relaxed),
             self.arrived_output_tokens.load(Ordering::Relaxed),
         )
+    }
+
+    /// Record one shed (429) submission.
+    pub fn on_router_shed(&self) {
+        self.router_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one degraded admission.
+    pub fn on_router_degraded(&self) {
+        self.router_degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn router_shed(&self) -> u64 {
+        self.router_shed.load(Ordering::Relaxed)
+    }
+
+    pub fn router_degraded(&self) -> u64 {
+        self.router_degraded.load(Ordering::Relaxed)
     }
 
     /// Record one executed role switch (monitor thread).
@@ -350,6 +373,13 @@ impl MetricsRecorder {
                     ("encode", Json::num(self.stage_busy_seconds(Stage::Encode))),
                     ("prefill", Json::num(self.stage_busy_seconds(Stage::Prefill))),
                     ("decode", Json::num(self.stage_busy_seconds(Stage::Decode))),
+                ]),
+            ),
+            (
+                "router",
+                Json::obj(vec![
+                    ("shed", Json::num(self.router_shed() as f64)),
+                    ("degraded", Json::num(self.router_degraded() as f64)),
                 ]),
             ),
             ("reallocation", {

@@ -88,6 +88,7 @@ impl ConfigPoint {
                 QueuePolicy::Fcfs => 0.0,
                 QueuePolicy::Sjf => 1.0,
                 QueuePolicy::SloAware => 2.0,
+                QueuePolicy::Priority => 3.0,
             },
             match self.assign {
                 AssignPolicy::RoundRobin => 0.0,

@@ -1,0 +1,179 @@
+//! SLO-aware admission control: project TTFT/TPOT for an arriving
+//! request from live backlogs plus profiled service EWMAs, then admit,
+//! degrade, or shed.
+//!
+//! The projection (documented in ARCHITECTURE.md "Front door &
+//! admission"):
+//!
+//! ```text
+//! TTFT ≈ entry_wait + encode_cost + prefill_wait + prefill_cost
+//! TPOT ≈ decode_step                (profiled per-token service EWMA)
+//! ```
+//!
+//! Text-only requests carry `entry_wait = encode_cost = 0` on the EPD
+//! path — the encoder bypass, quantified. Both the simulator and the
+//! real engine build an [`AdmissionOutlook`] from their own measured
+//! state and share [`decide`], so the policy cannot drift between them.
+
+use crate::core::request::Priority;
+
+use super::RouterConfig;
+
+/// Projected-overload ratio up to which a request is degraded (capped
+/// tokens, batch class) rather than shed, when degrading is enabled.
+pub const DEGRADE_OVER: f64 = 2.0;
+
+/// Inputs to the admission projection, in seconds. Queue waits are
+/// amortized per live instance of the relevant stage.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AdmissionOutlook {
+    /// Queued work ahead of the request at its entry stage (encode for
+    /// multimodal requests; 0 for text-only on the EPD path).
+    pub entry_wait: f64,
+    /// The request's own encode cost (0 for text-only).
+    pub encode_cost: f64,
+    /// Queued prefill-side work the request will wait behind.
+    pub prefill_wait: f64,
+    /// The request's own prefill cost.
+    pub prefill_cost: f64,
+    /// Profiled per-output-token decode service time.
+    pub decode_step: f64,
+}
+
+impl AdmissionOutlook {
+    /// The TTFT projection: every queue the request waits in, plus its
+    /// own pre-first-token service.
+    pub fn projected_ttft(&self) -> f64 {
+        self.entry_wait + self.encode_cost + self.prefill_wait + self.prefill_cost
+    }
+
+    /// The TPOT projection.
+    pub fn projected_tpot(&self) -> f64 {
+        self.decode_step
+    }
+}
+
+/// What the front door does with an arriving request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionDecision {
+    Admit,
+    /// Serve degraded: cap generation at `max_tokens` and drop to the
+    /// batch class, relieving decode pressure instead of refusing.
+    Degrade { max_tokens: u32 },
+    /// Refuse (HTTP 429 in the engine, `rejected` in the sim), with a
+    /// backoff hint derived from the projected excess.
+    Shed { retry_after_ms: u64 },
+}
+
+/// The stateless decision kernel shared by sim and engine.
+///
+/// `ttft_budget` is the request's own remaining deadline slack
+/// (`INFINITY` when it carries none); the effective TTFT bound is the
+/// tighter of the SLO target (scaled by headroom) and that budget.
+pub fn decide(
+    cfg: &RouterConfig,
+    outlook: &AdmissionOutlook,
+    class: Priority,
+    ttft_budget: f64,
+) -> AdmissionDecision {
+    let ttft = outlook.projected_ttft();
+    let tpot = outlook.projected_tpot();
+    let ttft_bound = (cfg.slo.ttft * cfg.headroom).min(ttft_budget);
+    let tpot_bound = cfg.slo.tpot * cfg.headroom;
+    if ttft <= ttft_bound && tpot <= tpot_bound {
+        return AdmissionDecision::Admit;
+    }
+    let over = (ttft / ttft_bound).max(tpot / tpot_bound);
+    if cfg.degrade && class == Priority::Interactive && over <= DEGRADE_OVER {
+        return AdmissionDecision::Degrade { max_tokens: cfg.degrade_tokens };
+    }
+    let excess_ms = ((ttft - ttft_bound).max(0.0) * 1000.0) as u64;
+    AdmissionDecision::Shed { retry_after_ms: excess_ms.max(cfg.retry_after_ms) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::slo::Slo;
+
+    fn cfg(ttft: f64, tpot: f64, degrade: bool) -> RouterConfig {
+        RouterConfig {
+            slo: Slo::new(ttft, tpot),
+            headroom: 1.0,
+            depth: 4,
+            degrade,
+            degrade_tokens: 8,
+            retry_after_ms: 250,
+            default_weight: 1,
+            weights: vec![],
+        }
+    }
+
+    fn outlook(ttft: f64, tpot: f64) -> AdmissionOutlook {
+        AdmissionOutlook { prefill_cost: ttft, decode_step: tpot, ..Default::default() }
+    }
+
+    #[test]
+    fn infinite_targets_always_admit() {
+        let c = cfg(f64::INFINITY, f64::INFINITY, false);
+        let d = decide(&c, &outlook(1e9, 1e9), Priority::Interactive, f64::INFINITY);
+        assert_eq!(d, AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn within_slo_admits() {
+        let c = cfg(2.0, 0.05, true);
+        let d = decide(&c, &outlook(1.5, 0.04), Priority::Interactive, f64::INFINITY);
+        assert_eq!(d, AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn mild_overload_degrades_interactive() {
+        let c = cfg(2.0, 0.05, true);
+        let d = decide(&c, &outlook(3.0, 0.04), Priority::Interactive, f64::INFINITY);
+        assert_eq!(d, AdmissionDecision::Degrade { max_tokens: 8 });
+    }
+
+    #[test]
+    fn batch_and_heavy_overload_shed() {
+        let c = cfg(2.0, 0.05, true);
+        // Batch never degrades — it is already the degraded class.
+        match decide(&c, &outlook(3.0, 0.04), Priority::Batch, f64::INFINITY) {
+            AdmissionDecision::Shed { retry_after_ms } => assert!(retry_after_ms >= 250),
+            other => panic!("expected shed, got {other:?}"),
+        }
+        // Heavy overload sheds even interactive, with a proportional hint.
+        match decide(&c, &outlook(10.0, 0.04), Priority::Interactive, f64::INFINITY) {
+            AdmissionDecision::Shed { retry_after_ms } => assert_eq!(retry_after_ms, 8000),
+            other => panic!("expected shed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn degrade_off_sheds_instead() {
+        let c = cfg(2.0, 0.05, false);
+        match decide(&c, &outlook(3.0, 0.04), Priority::Interactive, f64::INFINITY) {
+            AdmissionDecision::Shed { .. } => {}
+            other => panic!("expected shed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_tightens_the_bound() {
+        let c = cfg(f64::INFINITY, f64::INFINITY, false);
+        // No SLO target, but the request's own deadline budget gates it.
+        match decide(&c, &outlook(2.0, 0.0), Priority::Interactive, 1.0) {
+            AdmissionDecision::Shed { retry_after_ms } => assert_eq!(retry_after_ms, 1000),
+            other => panic!("expected shed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tpot_overload_sheds() {
+        let c = cfg(10.0, 0.02, false);
+        match decide(&c, &outlook(0.5, 0.09), Priority::Interactive, f64::INFINITY) {
+            AdmissionDecision::Shed { retry_after_ms } => assert_eq!(retry_after_ms, 250),
+            other => panic!("expected shed, got {other:?}"),
+        }
+    }
+}

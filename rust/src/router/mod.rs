@@ -1,0 +1,174 @@
+//! The SLO-aware multi-path front door (ROADMAP item 1): a
+//! router/admission tier shared by the simulator and the real engine.
+//!
+//! Three mechanisms, modelled on the vllm-ascend "EPD Load Balance
+//! Proxy" design:
+//!
+//! - **Multi-path routing** — text-only requests bypass the encoder
+//!   stage entirely and dispatch straight toward prefill; multimodal
+//!   requests go least-loaded across encoder instances.
+//! - **Per-tenant weighted fairness + priority classes** — every
+//!   request carries a tenant id and an `interactive | batch` class;
+//!   [`fair::FairQueue`] runs weighted deficit round robin per tenant
+//!   inside per-class priority bands.
+//! - **SLO-aware admission** — [`admission::decide`] projects TTFT/TPOT
+//!   for an arriving request from live backlogs plus profiled service
+//!   EWMAs and sheds (HTTP 429 in the engine, `rejected` in the sim) or
+//!   degrades when the projection misses SLO.
+//!
+//! Everything defaults off (`router = "off"` in TOML): with the router
+//! off the submit path is bit-for-bit the legacy single path
+//! (property-tested in `rust/tests/property_router.rs`).
+
+pub mod admission;
+pub mod fair;
+
+pub use admission::{decide, AdmissionDecision, AdmissionOutlook};
+pub use fair::FairQueue;
+
+use crate::core::config::{EpdConfig, RouterPolicy};
+use crate::core::slo::Slo;
+use crate::util::json::Json;
+
+/// Parse a `"tenant:weight,..."` spec (the `router_tenant_weights` TOML
+/// key) into `(tenant, weight)` pairs. Weights are clamped to >= 1;
+/// an empty string is the empty list.
+pub fn parse_tenant_weights(s: &str) -> anyhow::Result<Vec<(u32, u32)>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (t, w) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("expected 'tenant:weight', got '{part}'"))?;
+        let t: u32 = t.trim().parse().map_err(|_| anyhow::anyhow!("bad tenant id '{t}'"))?;
+        let w: u32 = w.trim().parse().map_err(|_| anyhow::anyhow!("bad weight '{w}'"))?;
+        out.push((t, w.max(1)));
+    }
+    out.sort_unstable();
+    Ok(out)
+}
+
+/// Runtime router configuration distilled from the `router_*` keys of
+/// [`EpdConfig`] (the same pattern `sim::fault::FaultPlan::from_epd`
+/// uses for the chaos keys). `None` means the router is off and the
+/// front door must not exist at all.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouterConfig {
+    /// Projection targets; `INFINITY` on an axis disables shedding there.
+    pub slo: Slo,
+    /// Multiplier on both targets before comparing the projection.
+    pub headroom: f64,
+    /// Per-instance queue-depth window the door dispatches into.
+    pub depth: u32,
+    /// Degrade mild interactive overload instead of shedding it.
+    pub degrade: bool,
+    /// `max_tokens` cap applied to degraded requests.
+    pub degrade_tokens: u32,
+    /// Floor for the shed `retry_after_ms` hint.
+    pub retry_after_ms: u64,
+    /// Deficit weight for unlisted tenants.
+    pub default_weight: u32,
+    /// Per-tenant deficit weights, sorted by tenant id.
+    pub weights: Vec<(u32, u32)>,
+}
+
+impl RouterConfig {
+    /// Build from the flat config; `None` when `router = "off"`.
+    /// An unparseable weight spec degrades to the default weight for
+    /// everyone (`EpdConfig::from_toml` already rejects it loudly).
+    pub fn from_epd(epd: &EpdConfig) -> Option<RouterConfig> {
+        if epd.router == RouterPolicy::Off {
+            return None;
+        }
+        Some(RouterConfig {
+            slo: Slo::new(epd.router_slo_ttft, epd.router_slo_tpot),
+            headroom: epd.router_headroom,
+            depth: epd.router_depth.max(1),
+            degrade: epd.router_degrade,
+            degrade_tokens: epd.router_degrade_tokens.max(1),
+            retry_after_ms: epd.router_retry_after_ms,
+            default_weight: epd.router_default_weight.max(1),
+            weights: parse_tenant_weights(&epd.router_tenant_weights).unwrap_or_default(),
+        })
+    }
+
+    /// Deficit weight for `tenant`.
+    pub fn weight_of(&self, tenant: u32) -> u32 {
+        match self.weights.binary_search_by_key(&tenant, |&(t, _)| t) {
+            Ok(i) => self.weights[i].1,
+            Err(_) => self.default_weight,
+        }
+    }
+}
+
+/// Front-door counters, reported in `SimOutcome::router` (all zero when
+/// `router = "off"` — the dormancy property tests assert exactly that)
+/// and in the engine's `/metrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RouterStats {
+    /// Text-only requests that skipped the encode stage.
+    pub text_bypass: u64,
+    /// Multimodal requests routed through the encoder path.
+    pub mm_routed: u64,
+    /// Requests shed by admission control.
+    pub shed: u64,
+    /// Requests served degraded (capped tokens, batch class).
+    pub degraded: u64,
+    /// Dispatches that had waited in the front-door fair queues.
+    pub held: u64,
+    /// Peak simultaneous occupancy of the fair queues.
+    pub peak_held: u64,
+}
+
+impl RouterStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("text_bypass", Json::num(self.text_bypass as f64)),
+            ("mm_routed", Json::num(self.mm_routed as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("degraded", Json::num(self.degraded as f64)),
+            ("held", Json::num(self.held as f64)),
+            ("peak_held", Json::num(self.peak_held as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::topology::Topology;
+
+    #[test]
+    fn weight_spec_parses_and_sorts() {
+        let w = parse_tenant_weights("7:2, 0:4").unwrap();
+        assert_eq!(w, vec![(0, 4), (7, 2)]);
+        assert!(parse_tenant_weights("").unwrap().is_empty());
+        assert!(parse_tenant_weights("0;4").is_err());
+        assert!(parse_tenant_weights("x:1").is_err());
+        // Zero weights clamp to 1 (a zero-weight tenant would starve).
+        assert_eq!(parse_tenant_weights("3:0").unwrap(), vec![(3, 1)]);
+    }
+
+    #[test]
+    fn from_epd_gates_on_policy() {
+        let mut epd = EpdConfig::epd(Topology::new(2, 1, 1), 1, 1, 8);
+        assert!(RouterConfig::from_epd(&epd).is_none(), "off => no front door");
+        epd.router = RouterPolicy::On;
+        epd.router_tenant_weights = "1:3".to_string();
+        let rc = RouterConfig::from_epd(&epd).unwrap();
+        assert_eq!(rc.weight_of(1), 3);
+        assert_eq!(rc.weight_of(9), 1, "unlisted tenants get the default");
+        assert_eq!(rc.slo.ttft, f64::INFINITY);
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let s = RouterStats { shed: 3, ..RouterStats::default() };
+        let j = s.to_json();
+        assert_eq!(j.get("shed").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(j.get("text_bypass").and_then(|v| v.as_f64()), Some(0.0));
+    }
+}

@@ -82,6 +82,7 @@ impl Batcher {
 mod tests {
     use super::*;
     use crate::core::config::QueuePolicy;
+    use crate::core::request::Priority;
 
     fn q(id: u64, cost: f64) -> QueuedRequest {
         QueuedRequest {
@@ -90,6 +91,7 @@ mod tests {
             enqueue_time: 0.0,
             est_cost: cost,
             deadline: f64::INFINITY,
+            class: Priority::Interactive,
         }
     }
 

@@ -4,7 +4,7 @@
 use std::collections::VecDeque;
 
 use crate::core::config::QueuePolicy;
-use crate::core::request::RequestId;
+use crate::core::request::{Priority, RequestId};
 
 /// A queued unit of work: a request (or, under IRP, one shard of one) with
 /// the attributes the ordering policies need.
@@ -18,6 +18,8 @@ pub struct QueuedRequest {
     pub est_cost: f64,
     /// Absolute deadline for SLO-aware ordering, seconds.
     pub deadline: f64,
+    /// Priority class for class-band ordering (`QueuePolicy::Priority`).
+    pub class: Priority,
 }
 
 /// A stage queue for one instance.
@@ -64,6 +66,13 @@ impl StageQueue {
                 .min_by(|a, b| a.1.deadline.partial_cmp(&b.1.deadline).unwrap())
                 .map(|(i, _)| i)
                 .unwrap(),
+            QueuePolicy::Priority => self
+                .items
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, q)| (q.class.band(), *i))
+                .map(|(i, _)| i)
+                .unwrap(),
         };
         self.items.remove(idx)
     }
@@ -80,6 +89,12 @@ impl StageQueue {
                 .items
                 .iter()
                 .min_by(|a, b| a.deadline.partial_cmp(&b.deadline).unwrap()),
+            QueuePolicy::Priority => self
+                .items
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, q)| (q.class.band(), *i))
+                .map(|(_, q)| q),
         }
     }
 
@@ -118,6 +133,7 @@ mod tests {
             enqueue_time: t,
             est_cost: cost,
             deadline,
+            class: Priority::Interactive,
         }
     }
 
@@ -149,6 +165,21 @@ mod tests {
         sq.push(q(2, 1.0, 1.0, 10.0));
         assert_eq!(sq.peek().unwrap().id, 2);
         assert_eq!(sq.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn priority_bands_fcfs_within() {
+        let mut sq = StageQueue::new(QueuePolicy::Priority);
+        let mut batch = q(1, 0.0, 1.0, 1.0);
+        batch.class = Priority::Batch;
+        sq.push(batch);
+        sq.push(q(2, 1.0, 9.0, 9.0));
+        sq.push(q(3, 2.0, 1.0, 1.0));
+        // Interactive drains first (FCFS within the band), then batch.
+        assert_eq!(sq.peek().unwrap().id, 2);
+        assert_eq!(sq.pop().unwrap().id, 2);
+        assert_eq!(sq.pop().unwrap().id, 3);
+        assert_eq!(sq.pop().unwrap().id, 1);
     }
 
     #[test]

@@ -46,12 +46,13 @@ use crate::coordinator::planner::{PlannerConfig, ReallocationPlanner};
 use crate::coordinator::profiler::WorkloadProfiler;
 use crate::coordinator::role_switch::SwitchPolicy;
 use crate::core::config::EpdConfig;
-use crate::core::request::{Request, RequestId, RequestTimeline};
+use crate::core::request::{Priority, Request, RequestId, RequestTimeline};
 use crate::core::slo::Slo;
 use crate::core::stage::Stage;
 use crate::core::topology::DeploymentMode;
 use crate::model::memory::{MemoryModel, NodeKind};
 use crate::model::spec::{DeviceSpec, LmmSpec};
+use crate::router::{decide, AdmissionDecision, AdmissionOutlook, FairQueue, RouterConfig, RouterStats};
 use crate::sched::assign::Assigner;
 use crate::sched::batcher::Batcher;
 use crate::sched::queue::{QueuedRequest, StageQueue};
@@ -273,6 +274,20 @@ impl ReqState {
 }
 
 /// The simulator.
+/// The simulator-side front door (`router = "on"`): the shared router
+/// primitives applied to sim [`Request`]s. Text and multimodal traffic
+/// hold separate fair queues because they dispatch against different
+/// stages (the multi-path split); both run per-tenant weighted DRR
+/// inside interactive/batch bands.
+struct FrontDoor {
+    cfg: RouterConfig,
+    /// Text-only requests bound for the prefill path.
+    text: FairQueue<Request>,
+    /// Multimodal requests bound for the encoder path.
+    mm: FairQueue<Request>,
+    stats: RouterStats,
+}
+
 pub struct Simulator<'a> {
     cfg: &'a SimConfig,
     cost: CostModel,
@@ -340,6 +355,9 @@ pub struct Simulator<'a> {
     rejected: u32,
     finished_count: usize,
     total_count: usize,
+    /// The SLO-aware front door; `None` ⇔ `router = "off"`, in which
+    /// case every arrival takes the legacy single path bit-for-bit.
+    front_door: Option<FrontDoor>,
     // ---- fault injection (dormant when the plan is empty) ----
     /// Per-instance service-time multipliers from the fault plan's
     /// stragglers; the all-ones identity returns every duration untouched.
@@ -477,6 +495,12 @@ impl<'a> Simulator<'a> {
             rejected: 0,
             finished_count: 0,
             total_count: requests.len(),
+            front_door: RouterConfig::from_epd(&cfg.epd).map(|rc| FrontDoor {
+                text: FairQueue::new(rc.default_weight, rc.weights.clone()),
+                mm: FairQueue::new(rc.default_weight, rc.weights.clone()),
+                cfg: rc,
+                stats: RouterStats::default(),
+            }),
             stragglers,
             fault_schedule,
             fault_windows: Vec::new(),
@@ -560,6 +584,13 @@ impl<'a> Simulator<'a> {
             Event::SwitchDone { instance } => self.on_switch_done(instance as usize),
             Event::Fault { action } => self.on_fault(action as usize),
         }
+        // Front-door drain: any event that freed queue room (a batch
+        // starting, a switch completing) lets held requests through.
+        // With the router off this is a single `None` check — no events,
+        // no RNG, no heap traffic — keeping dormant runs bit-for-bit.
+        if self.front_door.is_some() {
+            self.pump_front_door();
+        }
     }
 
     fn all_idle(&self) -> bool {
@@ -597,6 +628,7 @@ impl<'a> Simulator<'a> {
         );
         resilience.recovery_seconds = recovery_seconds;
         resilience.slo_dip = slo_dip;
+        let router = self.front_door.as_ref().map(|fd| fd.stats).unwrap_or_default();
         SimOutcome {
             timelines,
             timelines_recorded: self.cfg.record_timelines,
@@ -615,6 +647,7 @@ impl<'a> Simulator<'a> {
             pd_overlap: self.pd_overlap,
             links: self.links.into_stats(),
             resilience,
+            router,
         }
     }
 
@@ -697,6 +730,10 @@ impl<'a> Simulator<'a> {
     // ---- arrival ----
 
     fn on_arrival(&mut self, widx: u32) {
+        if self.front_door.is_some() {
+            self.router_arrival(widx);
+            return;
+        }
         let req = self.requests[widx as usize].clone();
         // The timeline's arrival is the request's *true* arrival time.
         // For the normal path this equals `self.now` bit-for-bit (the
@@ -705,7 +742,6 @@ impl<'a> Simulator<'a> {
         // the blocked wait counts against the SLO. (The legacy 10 ms
         // poll re-stamped the retry time, silently forgiving the wait.)
         let tl = RequestTimeline::new(req.id, req.arrival);
-        let total_tiles = req.total_tiles();
 
         let mut entry = std::mem::take(&mut self.scratch_insts);
         self.fill_with_kind(self.entry_kind(), &mut entry);
@@ -729,6 +765,15 @@ impl<'a> Simulator<'a> {
             req.output_tokens as f64,
             req.total_mm_tokens() as f64,
         );
+        self.route_request(req, tl, entry);
+    }
+
+    /// Place an admitted request onto the pipeline — the legacy
+    /// single-path dispatch body, shared verbatim by the off path and
+    /// the front door. `entry` is the non-empty entry-candidate scratch
+    /// buffer; every branch returns it to `scratch_insts`.
+    fn route_request(&mut self, req: Request, tl: RequestTimeline, entry: Vec<usize>) {
+        let total_tiles = req.total_tiles();
 
         // Cross-request encoder cache: a content-addressed hit skips the
         // encode stage entirely (preprocess + encoder forward), pinning
@@ -876,7 +921,8 @@ impl<'a> Simulator<'a> {
                         shard: tiles, // carry the shard's tile count
                         enqueue_time: self.now,
                         est_cost: est,
-                        deadline: f64::INFINITY,
+                        deadline: req.deadline,
+                        class: req.class,
                     });
                     self.kick_instance(inst_idx);
                 }
@@ -903,11 +949,196 @@ impl<'a> Simulator<'a> {
                     shard: total_tiles,
                     enqueue_time: self.now,
                     est_cost: est,
-                    deadline: f64::INFINITY,
+                    deadline: req.deadline,
+                    class: req.class,
                 });
                 self.kick_instance(inst_idx);
             }
         }
+    }
+
+    // ---- the front door (router = "on") ----
+
+    /// Arrival with the front door up: feed the profiler with the
+    /// *offered* load, run the admission projection, then either shed,
+    /// degrade-and-hold, or hold the request in the fair queues. The
+    /// pump dispatches it the moment its target stage has room — for an
+    /// uncongested system that is immediately, at the same virtual time.
+    fn router_arrival(&mut self, widx: u32) {
+        let mut req = self.requests[widx as usize].clone();
+        self.profiler.note_arrivals(1, self.now);
+        self.profiler.observe_request(
+            req.images as f64,
+            req.prompt_tokens as f64,
+            req.output_tokens as f64,
+            req.total_mm_tokens() as f64,
+        );
+        let text = req.total_tiles() == 0;
+        let outlook = self.router_outlook(&req, text);
+        let budget = req.deadline - self.now;
+        let fd = self.front_door.as_ref().unwrap();
+        match decide(&fd.cfg, &outlook, req.class, budget) {
+            AdmissionDecision::Admit => {}
+            AdmissionDecision::Degrade { max_tokens } => {
+                // Serve degraded: cap generation, drop to the batch band.
+                req.output_tokens = req.output_tokens.min(max_tokens.max(1));
+                req.class = Priority::Batch;
+                self.front_door.as_mut().unwrap().stats.degraded += 1;
+            }
+            AdmissionDecision::Shed { .. } => {
+                // `rejected` admission: the request terminates here — no
+                // slab slot, no timeline — the same ledger slot the KV
+                // admission rejection uses, so conservation and the
+                // attainment denominator both hold.
+                let fd = self.front_door.as_mut().unwrap();
+                fd.stats.shed += 1;
+                self.rejected += 1;
+                self.finished_count += 1;
+                return;
+            }
+        }
+        let epd_mode = self.cfg.epd.mode == DeploymentMode::Epd;
+        let fd = self.front_door.as_mut().unwrap();
+        let (tenant, class) = (req.tenant, req.class);
+        if text && epd_mode {
+            fd.stats.text_bypass += 1;
+            fd.text.push(tenant, class, req);
+        } else {
+            fd.stats.mm_routed += 1;
+            fd.mm.push(tenant, class, req);
+        }
+        let held = (fd.text.len() + fd.mm.len()) as u64;
+        if held > fd.stats.peak_held {
+            fd.stats.peak_held = held;
+        }
+        self.pump_front_door();
+    }
+
+    /// Build the admission projection from live queue backlogs plus the
+    /// profiler's service EWMAs (ARCHITECTURE.md "Front door &
+    /// admission"): TTFT ≈ entry wait + own encode + prefill wait + own
+    /// prefill, TPOT ≈ profiled decode step. Text-only EPD traffic pays
+    /// neither encoder term — the multi-path bypass, quantified.
+    fn router_outlook(&self, req: &Request, text: bool) -> AdmissionOutlook {
+        let fd = self.front_door.as_ref().unwrap();
+        let mut o = AdmissionOutlook {
+            prefill_cost: self.cost.prefill_time(req.prefill_tokens()),
+            // Per-token decode estimate: the profiled step EWMA once
+            // decode has been observed (it widens as batches deepen
+            // under load), the cost model's unit step before that.
+            decode_step: self
+                .profiler
+                .service_estimate(Stage::Decode)
+                .unwrap_or_else(|| self.cost.decode_step_time(1, req.prefill_tokens())),
+            ..AdmissionOutlook::default()
+        };
+        let own_encode = self.cost.preprocess_time(req.images, req.resolution)
+            + self.cost.encode_time(req.total_tiles());
+        if self.cfg.epd.mode == DeploymentMode::Epd {
+            let (p_backlog, p_n) = self.kind_backlog(WorkKind::Prefill);
+            let p_n = p_n.max(1) as f64;
+            // Requests held in the door are backlog too — instance
+            // queues are capped at `router_depth`, so most of an
+            // overload's queueing lives in the fair queues. Price them
+            // at the profiled per-stage service EWMA.
+            let svc_p = self.profiler.service_estimate(Stage::Prefill).unwrap_or(o.prefill_cost);
+            o.prefill_wait = p_backlog / p_n + fd.text.len() as f64 * svc_p / p_n;
+            if !text {
+                let (e_backlog, e_n) = self.kind_backlog(WorkKind::Encode);
+                let e_n = e_n.max(1) as f64;
+                let svc_e = self.profiler.service_estimate(Stage::Encode).unwrap_or(own_encode);
+                o.entry_wait = e_backlog / e_n + fd.mm.len() as f64 * svc_e / e_n;
+                o.encode_cost = own_encode;
+            }
+        } else {
+            let entry = self.entry_kind();
+            let (backlog, n) = self.kind_backlog(entry);
+            let n = n.max(1) as f64;
+            let svc = self
+                .profiler
+                .service_estimate(Stage::Prefill)
+                .unwrap_or(o.prefill_cost + if text { 0.0 } else { own_encode });
+            o.entry_wait = backlog / n + fd.mm.len() as f64 * svc / n;
+            if !text {
+                o.encode_cost = own_encode;
+            }
+        }
+        o
+    }
+
+    /// (total queued work, instance count) over live instances of `kind`.
+    fn kind_backlog(&self, kind: WorkKind) -> (f64, u32) {
+        let mut backlog = 0.0;
+        let mut n = 0u32;
+        for i in &self.insts {
+            if i.kind == kind && !i.switching {
+                backlog += i.queue.backlog_cost() + i.decode_queue.backlog_cost();
+                n += 1;
+            }
+        }
+        (backlog, n)
+    }
+
+    /// Dispatch held requests while their target stage has queue room
+    /// (the `router_depth` window). Runs after every event dispatch, so
+    /// the door drains the moment room frees — event-driven, no polling.
+    fn pump_front_door(&mut self) {
+        if self.front_door.is_none() {
+            return;
+        }
+        loop {
+            let mut progressed = false;
+            if self.router_room(true) {
+                if let Some(req) = self.front_door.as_mut().unwrap().text.pop() {
+                    self.router_place(req);
+                    progressed = true;
+                }
+            }
+            if self.router_room(false) {
+                if let Some(req) = self.front_door.as_mut().unwrap().mm.pop() {
+                    self.router_place(req);
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+    }
+
+    /// Is there room to dispatch the next held request on the text
+    /// (prefill-direct) or multimodal (entry/encode) path? Requires a
+    /// live entry instance (shard planning needs one) and a live target
+    /// instance whose queue sits under the depth window.
+    fn router_room(&self, text: bool) -> bool {
+        let depth = self.front_door.as_ref().unwrap().cfg.depth as usize;
+        let entry = self.entry_kind();
+        if !self.has_kind(entry) {
+            return false;
+        }
+        let target = if text && self.cfg.epd.mode == DeploymentMode::Epd {
+            WorkKind::Prefill
+        } else {
+            entry
+        };
+        self.insts
+            .iter()
+            .any(|i| i.kind == target && !i.switching && i.queue.len() < depth)
+    }
+
+    /// Dispatch one admitted request out of the front door into the
+    /// shared placement path. The timeline is stamped with the *true*
+    /// arrival time, so time spent held in the fair queues counts
+    /// against TTFT — the front door can reorder work, not hide waits.
+    fn router_place(&mut self, req: Request) {
+        if req.arrival < self.now {
+            self.front_door.as_mut().unwrap().stats.held += 1;
+        }
+        let tl = RequestTimeline::new(req.id, req.arrival);
+        let mut entry = std::mem::take(&mut self.scratch_insts);
+        self.fill_with_kind(self.entry_kind(), &mut entry);
+        debug_assert!(!entry.is_empty(), "router_room checked a live entry instance");
+        self.route_request(req, tl, entry);
     }
 
     // ---- work dispatch ----
@@ -1237,12 +1468,17 @@ impl<'a> Simulator<'a> {
             r.prefill_inst = Some(idx);
             r.prefill_queued = true;
         }
+        let (deadline, class) = {
+            let r = &self.reqs[id].req;
+            (r.deadline, r.class)
+        };
         self.insts[idx].queue.push(QueuedRequest {
             id,
             shard: 0,
             enqueue_time: self.now,
             est_cost: est,
-            deadline: f64::INFINITY,
+            deadline,
+            class,
         });
         self.kick_instance(idx);
     }
@@ -1262,12 +1498,17 @@ impl<'a> Simulator<'a> {
         };
         let idx = self.least_loaded(&prefills).unwrap();
         self.scratch_insts = prefills;
+        let (deadline, class) = {
+            let r = &self.reqs[id].req;
+            (r.deadline, r.class)
+        };
         self.insts[idx].queue.push(QueuedRequest {
             id,
             shard: 0,
             enqueue_time: self.now,
             est_cost: est,
-            deadline: f64::INFINITY,
+            deadline,
+            class,
         });
         self.kick_instance(idx);
     }
@@ -1553,12 +1794,17 @@ impl<'a> Simulator<'a> {
         let idx = self.least_loaded(&decoders).unwrap();
         self.scratch_insts = decoders;
         let est = self.decode_est_cost(idx, out, ctx);
+        let (deadline, class) = {
+            let r = &self.reqs[id].req;
+            (r.deadline, r.class)
+        };
         self.insts[idx].decode_queue.push(QueuedRequest {
             id,
             shard: 0,
             enqueue_time: self.now,
             est_cost: est,
-            deadline: f64::INFINITY,
+            deadline,
+            class,
         });
         self.kick_instance(idx);
     }
@@ -2462,6 +2708,9 @@ mod tests {
                     tiles_per_image: tiles_for_image(spec, res),
                     mm_tokens_per_image: mm_tokens_for_image(spec, res) as u32,
                     media_hash: None,
+                    tenant: 0,
+                    class: Priority::Interactive,
+                    deadline: f64::INFINITY,
                 }
             })
             .collect()

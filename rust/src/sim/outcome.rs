@@ -4,6 +4,7 @@ use crate::cache::EncoderCacheStats;
 use crate::coordinator::planner::ReallocationStats;
 use crate::core::request::RequestTimeline;
 use crate::core::slo::Slo;
+use crate::router::RouterStats;
 use crate::sim::fault::ResilienceStats;
 use crate::sim::link::LinkStats;
 use crate::util::json::Json;
@@ -171,6 +172,10 @@ pub struct SimOutcome {
     /// lost/retried/re-targeted, SLO recovery time and dip). All zeros
     /// when `SimConfig::faults` is the empty plan.
     pub resilience: ResilienceStats,
+    /// Front-door counters (text bypass, shed, degraded, held). All
+    /// zeros when `router = "off"` — the dormancy property tests pin
+    /// exactly that.
+    pub router: RouterStats,
 }
 
 impl SimOutcome {
@@ -368,6 +373,7 @@ impl SimOutcome {
                 ]),
             ),
             ("resilience", self.resilience.to_json()),
+            ("router", self.router.to_json()),
             (
                 "streamed",
                 Json::obj(vec![
@@ -448,6 +454,7 @@ mod tests {
             pd_overlap: PdOverlapStats::default(),
             links: Vec::new(),
             resilience: ResilienceStats::default(),
+            router: RouterStats::default(),
         }
     }
 
@@ -503,6 +510,7 @@ mod tests {
             Some(3)
         );
         let res = parsed.get("resilience").expect("resilience block always present");
+        parsed.get("router").expect("router block always present");
         assert_eq!(res.get("requests_lost").and_then(|j| j.as_f64()), Some(0.0));
         let mut off = o.clone();
         off.timelines_recorded = false;

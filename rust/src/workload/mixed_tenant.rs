@@ -1,0 +1,145 @@
+//! Mixed text + multimodal multi-tenant workload — the front-door
+//! router's gate workload (`benches/perf_router_slo.rs`).
+//!
+//! The mix models a production LMM endpoint: a majority of short
+//! text-only chat turns (which an EPD front door can route straight to
+//! prefill, skipping encode entirely) interleaved with heavy multimodal
+//! requests, submitted by a Zipf-skewed tenant population with a
+//! batch-class fraction. Requests are authored as [`SubmitRequest`]
+//! descriptors and lowered with [`SubmitRequest::to_sim_request`] — the
+//! same typed front door the HTTP frontend uses, so the sim and the
+//! engine exercise one surface.
+
+use super::Workload;
+use crate::api::SubmitRequest;
+use crate::core::request::{Priority, Request};
+use crate::model::spec::LmmSpec;
+use crate::model::vision::Resolution;
+use crate::util::rng::Rng;
+
+/// Mixed text/MM multi-tenant workload.
+#[derive(Debug, Clone)]
+pub struct MixedTenantWorkload {
+    /// Fraction of requests that are text-only (no images).
+    pub text_fraction: f64,
+    /// Fraction of requests submitted at the batch class.
+    pub batch_fraction: f64,
+    /// Tenant population; tenant ids are drawn Zipf(`zipf_s`) so low ids
+    /// dominate (tenant 0 is the heaviest).
+    pub tenants: u32,
+    pub zipf_s: f64,
+    /// Images attached to each multimodal request.
+    pub images: u32,
+    pub resolution: Resolution,
+    /// Prompt length of multimodal requests (tokens).
+    pub mm_prompt_tokens: u32,
+    /// Extra prompt length of text-only requests (longer chat context).
+    pub text_prompt_tokens: u32,
+    /// Output lengths: text chat turns run longer than MM captioning.
+    pub text_output_tokens: u32,
+    pub mm_output_tokens: u32,
+}
+
+impl Default for MixedTenantWorkload {
+    fn default() -> Self {
+        MixedTenantWorkload {
+            text_fraction: 0.6,
+            batch_fraction: 0.25,
+            tenants: 8,
+            zipf_s: 1.1,
+            images: 4,
+            resolution: Resolution::four_k(),
+            mm_prompt_tokens: 22,
+            text_prompt_tokens: 96,
+            text_output_tokens: 64,
+            mm_output_tokens: 16,
+        }
+    }
+}
+
+impl Workload for MixedTenantWorkload {
+    fn generate(&self, spec: &LmmSpec, n: usize, rate: f64, rng: &mut Rng) -> Vec<Request> {
+        let arrivals = super::arrival::poisson_arrivals(n, rate, rng);
+        arrivals
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let tenant = (rng.zipf(self.tenants.max(1) as u64, self.zipf_s) - 1) as u32;
+                let class = if rng.bool(self.batch_fraction) {
+                    Priority::Batch
+                } else {
+                    Priority::Interactive
+                };
+                let text = rng.bool(self.text_fraction);
+                let sub = if text {
+                    SubmitRequest::new("")
+                        .prompt_tokens(self.text_prompt_tokens)
+                        .max_tokens(self.text_output_tokens)
+                } else {
+                    SubmitRequest::new("")
+                        .prompt_tokens(self.mm_prompt_tokens)
+                        .images(self.images)
+                        .resolution(self.resolution)
+                        .max_tokens(self.mm_output_tokens)
+                };
+                sub.tenant(tenant).priority(class).to_sim_request(spec, i as u64, t)
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "mixed-tenant"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelId;
+
+    #[test]
+    fn mix_matches_fractions() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut rng = Rng::new(7);
+        let w = MixedTenantWorkload::default();
+        let reqs = w.generate(&spec, 1000, 2.0, &mut rng);
+        assert_eq!(reqs.len(), 1000);
+        let text = reqs.iter().filter(|r| r.images == 0).count();
+        let batch = reqs.iter().filter(|r| r.class == Priority::Batch).count();
+        assert!((500..=700).contains(&text), "text fraction ~0.6, got {text}");
+        assert!((150..=350).contains(&batch), "batch fraction ~0.25, got {batch}");
+        for r in &reqs {
+            if r.images == 0 {
+                assert_eq!(r.prompt_tokens, 96);
+                assert_eq!(r.output_tokens, 64);
+            } else {
+                assert_eq!(r.images, 4);
+                assert_eq!(r.output_tokens, 16);
+            }
+            assert!(r.tenant < 8);
+        }
+    }
+
+    #[test]
+    fn tenants_are_zipf_skewed() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let mut rng = Rng::new(11);
+        let reqs = MixedTenantWorkload::default().generate(&spec, 2000, 2.0, &mut rng);
+        let mut counts = [0usize; 8];
+        for r in &reqs {
+            counts[r.tenant as usize] += 1;
+        }
+        assert!(
+            counts[0] > counts[7] * 2,
+            "tenant 0 should dominate: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = LmmSpec::get(ModelId::MiniCpmV26);
+        let a = MixedTenantWorkload::default().generate(&spec, 50, 1.0, &mut Rng::new(3));
+        let b = MixedTenantWorkload::default().generate(&spec, 50, 1.0, &mut Rng::new(3));
+        assert_eq!(a, b);
+    }
+}

@@ -13,17 +13,19 @@ pub mod audio;
 pub mod arrival;
 pub mod cluster_scale;
 pub mod diurnal;
+pub mod mixed_tenant;
 pub mod phase_shift;
 pub mod repeated_media;
 
 pub use arrival::poisson_arrivals;
 pub use cluster_scale::ClusterScaleWorkload;
 pub use diurnal::DiurnalWorkload;
+pub use mixed_tenant::MixedTenantWorkload;
 pub use phase_shift::PhaseShiftWorkload;
 pub use repeated_media::RepeatedMediaWorkload;
 pub use synthetic::SyntheticWorkload;
 
-use crate::core::request::Request;
+use crate::core::request::{Priority, Request};
 use crate::model::spec::LmmSpec;
 use crate::model::vision::{mm_tokens_for_image, tiles_for_image, Resolution};
 use crate::util::rng::Rng;
@@ -48,6 +50,9 @@ pub(crate) fn build_request(
         tiles_per_image: tiles_for_image(spec, resolution),
         mm_tokens_per_image: mm_tokens_for_image(spec, resolution) as u32,
         media_hash: None,
+        tenant: 0,
+        class: Priority::Interactive,
+        deadline: f64::INFINITY,
     }
 }
 

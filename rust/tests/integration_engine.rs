@@ -5,9 +5,9 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use epdserve::api::SubmitRequest;
 use epdserve::core::config::EpdConfig;
 use epdserve::core::topology::Topology;
-use epdserve::engine::job::GenRequest;
 use epdserve::engine::serve::{EngineConfig, EpdEngine};
 
 fn artifacts() -> bool {
@@ -29,17 +29,13 @@ fn epd_pipeline_end_to_end() {
     // Mixed batch: text-only, single-image, multi-image.
     let mut rxs = Vec::new();
     for (id, images, max_tokens) in [(1u64, 0u32, 6u32), (2, 1, 8), (3, 4, 12), (4, 3, 5)] {
-        rxs.push((
-            id,
-            max_tokens,
-            engine.submit(GenRequest {
-                id,
-                images,
-                prompt: "hello world".into(),
-                max_tokens,
-                seed: 3,
-            }),
-        ));
+        let req = SubmitRequest::new("hello world")
+            .images(images)
+            .max_tokens(max_tokens)
+            .seed(3);
+        let (got_id, rx) = engine.submit_request(req).expect("router off admits everything");
+        assert_eq!(got_id, id, "sequential ids from the front door");
+        rxs.push((id, max_tokens, rx));
     }
     for (id, max_tokens, rx) in rxs {
         let resp = rx.recv_timeout(Duration::from_secs(180)).expect("response");

@@ -1,0 +1,186 @@
+//! Front-door router properties: `router = "off"` must be bit-for-bit
+//! dormant, router-on runs must replay byte-identically, the weighted
+//! fair queue must honour the DRR proportional-share bound, shedding
+//! must conserve the request ledger, and text-only requests under the
+//! EPD front door must never touch an encoder.
+
+use epdserve::core::config::{EpdConfig, RouterPolicy};
+use epdserve::core::request::Priority;
+use epdserve::core::topology::Topology;
+use epdserve::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use epdserve::router::{FairQueue, RouterStats};
+use epdserve::sim::engine::{SimConfig, Simulator};
+use epdserve::sim::outcome::SimOutcome;
+use epdserve::util::quickcheck::{forall_cfg, pair, usize_in, Config};
+use epdserve::util::rng::Rng;
+use epdserve::workload::synthetic::SyntheticWorkload;
+use epdserve::workload::{MixedTenantWorkload, Workload};
+
+fn spec() -> LmmSpec {
+    LmmSpec::get(ModelId::MiniCpmV26)
+}
+
+fn modes() -> [EpdConfig; 3] {
+    [
+        EpdConfig::epd(Topology::new(2, 1, 1), 1, 1, 32),
+        EpdConfig::distserve(3, 1, 1, 32),
+        EpdConfig::aggregated(4, 32),
+    ]
+}
+
+fn run_mixed(epd: EpdConfig, n: usize, rate: f64, seed: u64) -> SimOutcome {
+    let sp = spec();
+    let cfg = SimConfig::new(sp.clone(), DeviceSpec::a100(), epd);
+    let w = MixedTenantWorkload::default();
+    let mut rng = Rng::new(seed);
+    let reqs = w.generate(&sp, n, rate, &mut rng);
+    Simulator::run(&cfg, &reqs)
+}
+
+/// Every submitted request terminates exactly once, shedding included.
+fn conserved(out: &SimOutcome) {
+    let terminated = out.streamed.finished as usize
+        + out.rejected as usize
+        + out.resilience.requests_lost as usize;
+    assert_eq!(
+        terminated, out.submitted,
+        "finished {} + rejected {} + lost {} != submitted {}",
+        out.streamed.finished, out.rejected, out.resilience.requests_lost, out.submitted
+    );
+}
+
+/// Dormancy: with `router = "off"` (the default) the front door does not
+/// exist — no counters move and the run replays byte-identically in
+/// every deployment mode, over both workload families.
+#[test]
+fn router_off_is_bit_for_bit_dormant() {
+    forall_cfg(
+        Config { cases: 8, seed: 0x20_77, max_shrink_steps: 0 },
+        pair(usize_in(1, 6), usize_in(1, 40)),
+        |&(images, out_tokens)| {
+            for epd in modes() {
+                assert_eq!(epd.router, RouterPolicy::Off, "off must be the default");
+                let sp = spec();
+                let run = || {
+                    let cfg = SimConfig::new(sp.clone(), DeviceSpec::a100(), epd.clone());
+                    let w = SyntheticWorkload::new(images as u32, out_tokens as u32);
+                    let mut rng = Rng::new(0x20_78);
+                    let reqs = w.generate(&sp, 20, 1.5, &mut rng);
+                    Simulator::run(&cfg, &reqs)
+                };
+                let a = run();
+                let b = run();
+                assert_eq!(a.router, RouterStats::default(), "dormant router left tracks");
+                assert_eq!(
+                    a.to_json().pretty(),
+                    b.to_json().pretty(),
+                    "router-off replay must be byte-identical"
+                );
+                conserved(&a);
+            }
+        },
+    );
+}
+
+/// Router-on runs are deterministic: same seed, same config → the same
+/// outcome byte-for-byte, including the shed/degrade/bypass counters.
+#[test]
+fn router_on_replays_bit_for_bit() {
+    forall_cfg(
+        Config { cases: 6, seed: 0x20_79, max_shrink_steps: 0 },
+        pair(usize_in(1, 100_000), usize_in(20, 60)),
+        |&(seed, n)| {
+            let mk = || {
+                let mut epd = EpdConfig::epd(Topology::new(2, 2, 1), 1, 1, 16);
+                epd.router = RouterPolicy::On;
+                epd.router_slo_ttft = 3.0;
+                epd.router_slo_tpot = 0.08;
+                epd
+            };
+            let a = run_mixed(mk(), n, 4.0, seed as u64);
+            let b = run_mixed(mk(), n, 4.0, seed as u64);
+            assert_eq!(a.to_json().pretty(), b.to_json().pretty(), "router-on replay diverged");
+            conserved(&a);
+            assert_eq!(
+                a.router.text_bypass + a.router.mm_routed + a.router.shed,
+                a.submitted as u64,
+                "every arrival is routed or shed exactly once"
+            );
+        },
+    );
+}
+
+/// DRR proportional-share bound: with every tenant saturated, any
+/// window of `sum(weights)` consecutive pops serves each tenant exactly
+/// its weight — no tenant can be starved or burst past its share.
+#[test]
+fn weighted_fairness_bound_holds() {
+    forall_cfg(
+        Config { cases: 24, seed: 0x20_80, max_shrink_steps: 0 },
+        pair(pair(usize_in(1, 5), usize_in(1, 5)), usize_in(1, 5)),
+        |&((w0, w1), w2)| {
+            let weights = [w0 as u32, w1 as u32, w2 as u32];
+            let total: usize = weights.iter().sum::<u32>() as usize;
+            let rounds = 6usize;
+            let mut fq: FairQueue<u32> =
+                FairQueue::new(1, vec![(0, weights[0]), (1, weights[1]), (2, weights[2])]);
+            for i in 0..(rounds * total) as u32 {
+                for t in 0..3u32 {
+                    fq.push(t, Priority::Interactive, t * 100_000 + i);
+                }
+            }
+            // Every aligned window of `total` pops serves exactly the
+            // weight vector (all tenants stay backlogged throughout).
+            for round in 0..rounds {
+                let mut got = [0u32; 3];
+                for _ in 0..total {
+                    let v = fq.pop().expect("queues stay backlogged");
+                    got[(v / 100_000) as usize] += 1;
+                }
+                assert_eq!(
+                    got, weights,
+                    "round {round}: window served {got:?}, weights {weights:?}"
+                );
+            }
+        },
+    );
+}
+
+/// Overload shedding balances the ledger: `finished + rejected + lost ==
+/// submitted` with a non-trivial shed count, and the sim's rejected
+/// counter is exactly the router's shed counter.
+#[test]
+fn shedding_conserves_the_request_ledger() {
+    let mut epd = EpdConfig::epd(Topology::new(2, 1, 1), 1, 1, 16);
+    epd.router = RouterPolicy::On;
+    epd.router_slo_ttft = 1.0;
+    epd.router_slo_tpot = 0.05;
+    let out = run_mixed(epd, 250, 8.0, 0x5ED_0);
+    assert!(out.router.shed > 0, "overload at rate 8 must shed: {:?}", out.router);
+    assert!(
+        (out.router.shed as usize) < out.submitted,
+        "tight-but-sane SLO must not shed everything"
+    );
+    assert_eq!(out.rejected as u64, out.router.shed, "sim ledger and router ledger agree");
+    conserved(&out);
+}
+
+/// The encoder bypass: under an EPD front door, a pure-text workload
+/// must finish without a single encoder-busy second, and every request
+/// must be counted as a bypass.
+#[test]
+fn text_only_requests_never_touch_an_encoder() {
+    let sp = spec();
+    let mut epd = EpdConfig::epd(Topology::new(2, 2, 2), 1, 1, 16);
+    epd.router = RouterPolicy::On; // no SLO targets -> admit everything
+    let cfg = SimConfig::new(sp.clone(), DeviceSpec::a100(), epd);
+    let mut w = SyntheticWorkload::new(0, 24);
+    w.prompt_tokens = 64;
+    let mut rng = Rng::new(0x7E_27);
+    let reqs = w.generate(&sp, 60, 3.0, &mut rng);
+    let out = Simulator::run(&cfg, &reqs);
+    assert_eq!(out.streamed.finished, 60, "all text requests finish");
+    assert_eq!(out.router.text_bypass, 60, "every request takes the bypass");
+    assert_eq!(out.router.shed, 0);
+    assert_eq!(out.busy[0], 0.0, "encoder must stay cold: busy = {:?}", out.busy);
+}

@@ -29,6 +29,16 @@ cargo run --release --quiet -- \
   simulate --faults wave --topology 2E2P2D \
   --requests 400 --rate 2.0 --images 2
 
+echo "==> router overload smoke (mixed-tenant trace, shedding must engage)"
+router_out=$(cargo run --release --quiet -- \
+  simulate --workload mixed-tenant --router on --topology 2E2P2D \
+  --requests 400 --rate 6.0 --slo-ttft 2.5 --slo-tpot 0.05)
+echo "$router_out"
+if ! echo "$router_out" | grep -E 'shed [1-9][0-9]*' >/dev/null; then
+  echo "router smoke: expected non-zero shed count under overload" >&2
+  exit 1
+fi
+
 # CI additionally runs a line-coverage floor (cargo llvm-cov
 # --fail-under-lines 55); skipped here because cargo-llvm-cov is not a
 # baseline toolchain component. Run it manually before raising the bar.

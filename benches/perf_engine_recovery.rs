@@ -1,0 +1,180 @@
+//! Recovery-cost gate for the REAL engine's supervision layer.
+//!
+//! Two identical request waves through the tiny_lmm 2E2P1D engine:
+//! a no-fault baseline, then a supervised run where the fault plan
+//! kills one encoder worker mid-wave (`with_kill(0, 2)` — instance 0
+//! is an encoder, so a same-kind sibling always survives). The
+//! supervisor must redispatch the stranded work, every request must
+//! still complete, and the price of recovery — mean-TTFT inflation
+//! over the whole wave — must stay under 2x the fault-free baseline.
+//!
+//! Emits `results/BENCH_engine_recovery.json` via `GateReport` for
+//! `scripts/bench_json.sh`. Skipped (with a passing gate noting the
+//! skip) when model artifacts are missing: run `make artifacts`.
+
+use epdserve::api::SubmitRequest;
+use epdserve::core::config::EpdConfig;
+use epdserve::core::topology::Topology;
+use epdserve::engine::serve::{EngineConfig, EpdEngine};
+use epdserve::engine::EngineFaultPlan;
+use epdserve::util::bench::{fmt, GateReport, TableReport};
+
+/// Enough requests that the kill lands mid-wave with stranded claims,
+/// small enough that the bench stays a smoke-speed artifact check.
+const N_REQUESTS: u64 = 12;
+/// Gate: recovered-wave mean TTFT / baseline mean TTFT <= 2.0.
+const MAX_INFLATION: f64 = 2.0;
+
+fn artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn base_epd() -> EpdConfig {
+    EpdConfig::epd(Topology::new(2, 2, 1), 1, 1, 128)
+}
+
+/// The supervised variant: recovery armed, deterministic single
+/// encoder kill after two jobs, brisk ticks so redispatch is prompt.
+fn faulted_cfg() -> EngineConfig {
+    let mut epd = base_epd();
+    epd.supervise = true;
+    epd.supervise_heartbeat_ms = 0; // panic detection only: no staleness flakes
+    epd.retry_limit = 3;
+    epd.retry_base_ms = 5;
+    epd.sample_interval = 0.02; // brisk supervise ticks
+    let mut cfg = EngineConfig::new("artifacts", epd);
+    cfg.fault_plan = EngineFaultPlan::none().with_kill(0, 2);
+    cfg
+}
+
+struct WaveStats {
+    mean_ttft: f64,
+    max_ttft: f64,
+    finished: u64,
+    failed: u64,
+    crashes: u64,
+    retried: u64,
+    retargeted: u64,
+}
+
+/// Drive one request wave and summarize its TTFT distribution from the
+/// recorder (arrival -> first token, backoff and redispatch included).
+fn run_wave(cfg: EngineConfig) -> WaveStats {
+    let engine = EpdEngine::start(cfg).expect("engine start");
+    let mut rxs = Vec::new();
+    for i in 0..N_REQUESTS {
+        let req = SubmitRequest::new("recovery cost probe")
+            .images(1 + (i % 3) as u32)
+            .max_tokens(6)
+            .seed(0xBEEF + i);
+        let (_, rx) = engine.submit_request(req).expect("router off admits everything");
+        rxs.push(rx);
+    }
+    let mut finished = 0u64;
+    let mut failed = 0u64;
+    for rx in rxs {
+        match engine.wait(&rx, 0) {
+            Ok(_) => finished += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    let (ttfts, _, _) = engine.metrics.series();
+    let mean_ttft = if ttfts.is_empty() {
+        f64::NAN
+    } else {
+        ttfts.iter().sum::<f64>() / ttfts.len() as f64
+    };
+    let max_ttft = ttfts.iter().copied().fold(0.0f64, f64::max);
+    let stats = WaveStats {
+        mean_ttft,
+        max_ttft,
+        finished,
+        failed,
+        crashes: engine.metrics.crashes(),
+        retried: engine.metrics.requests_retried(),
+        retargeted: engine.metrics.requests_retargeted(),
+    };
+    engine.shutdown();
+    stats
+}
+
+fn main() {
+    if !artifacts() {
+        eprintln!("skipping perf_engine_recovery: run `make artifacts`");
+        GateReport::at_least(
+            "engine_recovery",
+            "SKIPPED (no artifacts): recovered-wave mean TTFT inflation <= 2x no-fault baseline",
+            0.0,
+            0.0,
+        )
+        .emit();
+        return;
+    }
+
+    // Fault-free baseline: supervision machinery off, pre-PR behavior.
+    let calm = run_wave(EngineConfig::new("artifacts", base_epd()));
+    assert_eq!(calm.finished, N_REQUESTS, "baseline wave must fully complete");
+    assert_eq!(calm.crashes, 0, "baseline must be fault-free");
+
+    // Supervised run with one deterministic mid-wave encoder kill.
+    let faulted = run_wave(faulted_cfg());
+
+    // The kill must have actually fired and every request must still
+    // terminate — recovery, not silent loss, is what we are pricing.
+    assert!(faulted.crashes >= 1, "the seeded kill must register as a crash");
+    assert!(
+        faulted.retried + faulted.retargeted >= 1,
+        "at least one stranded request must be redispatched"
+    );
+    assert_eq!(
+        faulted.finished + faulted.failed,
+        N_REQUESTS,
+        "exactly-once: every receiver terminates"
+    );
+    assert_eq!(
+        faulted.failed, 0,
+        "with a surviving encoder sibling, every request must recover"
+    );
+
+    let inflation = faulted.mean_ttft / calm.mean_ttft;
+    let mut t = TableReport::new(
+        "perf_engine_recovery",
+        "Recovery cost of a mid-wave worker kill (tiny_lmm, 2E2P1D, 1 encoder killed, redispatch to sibling)",
+        &["wave", "mean TTFT (s)", "max TTFT (s)", "finished", "crashes", "redispatched"],
+    );
+    t.row(vec![
+        "no-fault baseline".into(),
+        fmt(calm.mean_ttft, 4),
+        fmt(calm.max_ttft, 4),
+        format!("{}/{N_REQUESTS}", calm.finished),
+        format!("{}", calm.crashes),
+        format!("{}", calm.retried + calm.retargeted),
+    ]);
+    t.row(vec![
+        "1-kill wave".into(),
+        fmt(faulted.mean_ttft, 4),
+        fmt(faulted.max_ttft, 4),
+        format!("{}/{N_REQUESTS}", faulted.finished),
+        format!("{}", faulted.crashes),
+        format!("{}", faulted.retried + faulted.retargeted),
+    ]);
+    t.note(format!(
+        "mean-TTFT inflation {:.2}x (gate <= {MAX_INFLATION}x); {} retried, {} retargeted",
+        inflation, faulted.retried, faulted.retargeted
+    ));
+    t.note("all-defaults dormancy is property-tested in rust/tests/property_engine_faults.rs");
+    t.emit();
+
+    assert!(
+        inflation <= MAX_INFLATION,
+        "recovered-wave mean TTFT inflation {inflation:.2}x over the {MAX_INFLATION}x gate"
+    );
+    // `at_least` gates: margin = 2.0 - inflation must stay >= 0.
+    GateReport::at_least(
+        "engine_recovery",
+        "recovered-wave mean TTFT inflation <= 2x no-fault baseline (tiny_lmm 2E2P1D, 1 encoder kill)",
+        0.0,
+        MAX_INFLATION - inflation,
+    )
+    .emit();
+}

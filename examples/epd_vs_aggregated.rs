@@ -42,7 +42,7 @@ fn run_mode(name: &str, epd: EpdConfig) -> anyhow::Result<(Summary, Summary, f64
     }
     let mut completed = 0;
     for rx in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(300))?;
+        let resp = rx.recv_timeout(Duration::from_secs(300))?.output()?;
         assert_eq!(resp.tokens.len(), MAX_TOKENS as usize);
         completed += 1;
     }

@@ -78,6 +78,45 @@ impl ApiError {
         ApiError { status: 500, code: "internal", field: None, message, retry_after_ms: None }
     }
 
+    /// 503: the worker owning this request died and recovery was
+    /// exhausted (or supervision is off and the sender was dropped).
+    /// Retryable — a sibling instance can serve the retry.
+    pub fn worker_lost(retry_after_ms: u64) -> ApiError {
+        ApiError {
+            status: 503,
+            code: "worker_lost",
+            field: None,
+            message: format!(
+                "worker serving this request was lost; retry after {retry_after_ms} ms"
+            ),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    /// 504: the request's `deadline_ms` elapsed before completion —
+    /// cancelled at a stage boundary or by the receiver watchdog.
+    pub fn deadline_exceeded(deadline_ms: u64, retry_after_ms: u64) -> ApiError {
+        ApiError {
+            status: 504,
+            code: "deadline_exceeded",
+            field: Some("deadline_ms"),
+            message: format!("request exceeded its {deadline_ms} ms deadline"),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    /// 503: the engine is draining for shutdown and not accepting (or no
+    /// longer able to finish) this request.
+    pub fn draining(retry_after_ms: u64) -> ApiError {
+        ApiError {
+            status: 503,
+            code: "draining",
+            field: None,
+            message: format!("engine is draining; retry after {retry_after_ms} ms"),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
     /// The error body: `{"error": {"code", "message", "field"?,
     /// "retry_after_ms"?}}`.
     pub fn to_json(&self) -> Json {
@@ -271,6 +310,7 @@ impl SubmitRequest {
             seed: self.media.seed,
             tenant: self.tenant,
             class: self.priority,
+            deadline_ms: self.deadline_ms,
         }
     }
 
@@ -456,6 +496,32 @@ mod tests {
         let err = j.get("error").unwrap();
         assert_eq!(err.get("code").unwrap().as_str(), Some("shed"));
         assert_eq!(err.get("retry_after_ms").unwrap().as_f64(), Some(750.0));
+    }
+
+    #[test]
+    fn resilience_error_shapes() {
+        let wl = ApiError::worker_lost(25);
+        assert_eq!((wl.status, wl.code), (503, "worker_lost"));
+        assert_eq!(wl.retry_after_ms, Some(25));
+
+        let dl = ApiError::deadline_exceeded(1500, 25);
+        assert_eq!((dl.status, dl.code), (504, "deadline_exceeded"));
+        assert_eq!(dl.field, Some("deadline_ms"));
+        let j = dl.to_json();
+        let err = j.get("error").unwrap();
+        assert_eq!(err.get("code").unwrap().as_str(), Some("deadline_exceeded"));
+        assert_eq!(err.get("retry_after_ms").unwrap().as_f64(), Some(25.0));
+
+        let dr = ApiError::draining(40);
+        assert_eq!((dr.status, dr.code), (503, "draining"));
+    }
+
+    #[test]
+    fn into_gen_carries_deadline() {
+        let req = SubmitRequest::new("hi").deadline_ms(1234);
+        let gen = req.into_gen(7);
+        assert_eq!(gen.deadline_ms, 1234);
+        assert_eq!(SubmitRequest::new("hi").into_gen(8).deadline_ms, 0);
     }
 
     #[test]

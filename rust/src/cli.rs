@@ -46,6 +46,20 @@ fn cli() -> Cli {
                 ),
                 opt("slo-ttft", Some("inf"), "router TTFT target (s)"),
                 opt("slo-tpot", Some("inf"), "router TPOT target (s)"),
+                flag(
+                    "supervise",
+                    "enable worker supervision: heartbeats, crash sweeps, exactly-once redispatch, deadline watchdog",
+                ),
+                opt(
+                    "drain-timeout-ms",
+                    Some("0"),
+                    "graceful-shutdown drain bound in ms (0 = immediate shutdown)",
+                ),
+                opt(
+                    "engine-faults",
+                    Some("off"),
+                    "engine chaos injection: off | wave | wave:<seed> (seeded worker-kill wave; implies supervised recovery paths are exercised)",
+                ),
             ],
             positional: vec![],
         })
@@ -192,6 +206,33 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
             cfg.router = parse_router(args.str("router"))?;
             cfg.router_slo_ttft = args.f64("slo-ttft");
             cfg.router_slo_tpot = args.f64("slo-tpot");
+            cfg.supervise = args.flag("supervise");
+            cfg.drain_timeout_ms = args.u64("drain-timeout-ms");
+            match args.str("engine-faults") {
+                "off" => {}
+                s if s == "wave" || s.starts_with("wave:") => {
+                    // Same schema as `simulate --faults`: zero means off,
+                    // so the bare form picks a fixed non-zero default.
+                    let seed = match s.strip_prefix("wave:") {
+                        Some(v) => v.parse::<u64>().map_err(|_| {
+                            anyhow::anyhow!("--engine-faults wave:<seed> needs a number")
+                        })?,
+                        None => 0xC4A05,
+                    };
+                    if seed == 0 {
+                        anyhow::bail!(
+                            "--engine-faults wave:<seed> needs a non-zero seed (0 means off)"
+                        );
+                    }
+                    cfg.engine_fault_seed = seed;
+                    // A kill wave without supervision just loses requests;
+                    // chaos serving implies the recovery paths.
+                    cfg.supervise = true;
+                }
+                other => {
+                    anyhow::bail!("unknown --engine-faults '{other}' (off | wave | wave:<seed>)")
+                }
+            }
             let engine = Arc::new(crate::engine::serve::EpdEngine::start(
                 crate::engine::serve::EngineConfig::new(args.str("artifacts"), cfg),
             )?);
@@ -215,7 +256,7 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                 .priority(priority)
                 .seed(0x5EED);
             let (_, rx) = engine.submit_request(req)?;
-            let resp = rx.recv()?;
+            let resp = engine.wait(&rx, 0)?;
             println!("tokens: {:?}", resp.tokens);
             println!("text:   {:?}", resp.text);
             println!("latency: {:.3}s", resp.latency);

@@ -286,6 +286,39 @@ pub struct EpdConfig {
     /// Per-tenant deficit weights, `"tenant:weight,..."` (e.g. `"0:4,7:2"`).
     /// Empty = every tenant at `router_default_weight`.
     pub router_tenant_weights: String,
+    /// Engine supervision: heartbeat tracking, crash sweeps, exactly-once
+    /// redispatch of in-flight work, deadline watchdog. Off by default —
+    /// the engine is then bit-for-bit identical to pre-supervision builds.
+    pub supervise: bool,
+    /// An instance with no heartbeat for this long is marked dead and its
+    /// in-flight work re-dispatched (0 disables staleness detection;
+    /// panics are still caught and swept).
+    pub supervise_heartbeat_ms: u64,
+    /// Watchdog slack past a request's `deadline_ms` before its receiver
+    /// is failed with a 504-style error.
+    pub supervise_grace_ms: u64,
+    /// Per-request redispatch budget after worker loss or stage errors.
+    pub retry_limit: u32,
+    /// Exponential-backoff base for redispatch (doubles per attempt,
+    /// plus a deterministic seeded jitter).
+    pub retry_base_ms: u64,
+    /// `shutdown()` drain bound: > 0 stops intake and finishes (or fails
+    /// with a structured error) in-flight requests within this window.
+    /// 0 keeps the legacy immediate shutdown.
+    pub drain_timeout_ms: u64,
+    /// Deterministic engine fault injection (chaos testing): 0 = dormant
+    /// (no faults, bit-for-bit identical behavior); nonzero seeds a
+    /// worker-kill wave shaped by the `engine_fault_*` knobs below.
+    pub engine_fault_seed: u64,
+    /// Workers killed by the seeded wave (clamped to instances - 1).
+    pub engine_fault_kills: u32,
+    /// Jobs a doomed worker completes before its injected kill.
+    pub engine_fault_after_jobs: u64,
+    /// Injected per-job delay on one seeded straggler instance (0 = none).
+    pub engine_fault_slow_ms: u64,
+    /// Injected streamed EP/PD handoff failures (each exercises the
+    /// per-request monolithic fallback).
+    pub engine_fault_handoff_errors: u32,
 }
 
 impl EpdConfig {
@@ -334,6 +367,17 @@ impl EpdConfig {
             router_retry_after_ms: 250,
             router_default_weight: 1,
             router_tenant_weights: String::new(),
+            supervise: false,
+            supervise_heartbeat_ms: 1000,
+            supervise_grace_ms: 250,
+            retry_limit: 2,
+            retry_base_ms: 25,
+            drain_timeout_ms: 0,
+            engine_fault_seed: 0,
+            engine_fault_kills: 1,
+            engine_fault_after_jobs: 4,
+            engine_fault_slow_ms: 0,
+            engine_fault_handoff_errors: 0,
         }
     }
 
@@ -412,6 +456,17 @@ impl EpdConfig {
     /// router_retry_after_ms = 250
     /// router_default_weight = 1
     /// router_tenant_weights = "0:4,7:2" # per-tenant deficit weights
+    /// supervise = false       # engine supervision: heartbeats, redispatch, watchdog
+    /// supervise_heartbeat_ms = 1000 # dead after this silence (0 = panics only)
+    /// supervise_grace_ms = 250 # watchdog slack past a request deadline
+    /// retry_limit = 2         # redispatch budget per request
+    /// retry_base_ms = 25      # backoff base (doubles per attempt, seeded jitter)
+    /// drain_timeout_ms = 0    # shutdown drain bound; 0 = immediate shutdown
+    /// engine_fault_seed = 0   # 0 = engine chaos off; non-zero seeds a kill wave
+    /// engine_fault_kills = 1  # workers killed by the wave
+    /// engine_fault_after_jobs = 4 # jobs a doomed worker completes first
+    /// engine_fault_slow_ms = 0 # injected straggler delay per job
+    /// engine_fault_handoff_errors = 0 # injected streamed-handoff failures
     /// [sched]
     /// queue = "fcfs"          # fcfs | sjf | slo-aware
     /// assign = "least-loaded" # round-robin | least-loaded
@@ -502,6 +557,37 @@ impl EpdConfig {
             crate::router::parse_tenant_weights(w).context("bad 'router_tenant_weights'")?;
             cfg.router_tenant_weights = w.to_string();
         }
+        cfg.supervise = doc.get_bool("", "supervise").unwrap_or(false);
+        if let Some(v) = doc.get_i64("", "supervise_heartbeat_ms") {
+            cfg.supervise_heartbeat_ms = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_i64("", "supervise_grace_ms") {
+            cfg.supervise_grace_ms = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_i64("", "retry_limit") {
+            cfg.retry_limit = v.max(0) as u32;
+        }
+        if let Some(v) = doc.get_i64("", "retry_base_ms") {
+            cfg.retry_base_ms = v.max(1) as u64;
+        }
+        if let Some(v) = doc.get_i64("", "drain_timeout_ms") {
+            cfg.drain_timeout_ms = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_i64("", "engine_fault_seed") {
+            cfg.engine_fault_seed = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_i64("", "engine_fault_kills") {
+            cfg.engine_fault_kills = v.max(0) as u32;
+        }
+        if let Some(v) = doc.get_i64("", "engine_fault_after_jobs") {
+            cfg.engine_fault_after_jobs = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_i64("", "engine_fault_slow_ms") {
+            cfg.engine_fault_slow_ms = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_i64("", "engine_fault_handoff_errors") {
+            cfg.engine_fault_handoff_errors = v.max(0) as u32;
+        }
         if let Some(q) = doc.get_str("sched", "queue") {
             let q = QueuePolicy::parse(q).context("bad sched.queue")?;
             cfg.sched_encode.queue = q;
@@ -547,6 +633,17 @@ mod tests {
         assert!(!cfg.router_degrade);
         assert_eq!(cfg.router_default_weight, 1);
         assert!(cfg.router_tenant_weights.is_empty());
+        assert!(!cfg.supervise, "supervision is opt-in");
+        assert_eq!(cfg.supervise_heartbeat_ms, 1000);
+        assert_eq!(cfg.supervise_grace_ms, 250);
+        assert_eq!(cfg.retry_limit, 2);
+        assert_eq!(cfg.retry_base_ms, 25);
+        assert_eq!(cfg.drain_timeout_ms, 0, "legacy shutdown is the default");
+        assert_eq!(cfg.engine_fault_seed, 0, "engine chaos is opt-in");
+        assert_eq!(cfg.engine_fault_kills, 1);
+        assert_eq!(cfg.engine_fault_after_jobs, 4);
+        assert_eq!(cfg.engine_fault_slow_ms, 0);
+        assert_eq!(cfg.engine_fault_handoff_errors, 0);
 
         let ds = EpdConfig::distserve(7, 1, 1, 128);
         assert_eq!(ds.mode, DeploymentMode::PdDisagg);
@@ -590,6 +687,17 @@ router_degrade_tokens = 16
 router_retry_after_ms = 500
 router_default_weight = 2
 router_tenant_weights = "0:4,7:2"
+supervise = true
+supervise_heartbeat_ms = 400
+supervise_grace_ms = 100
+retry_limit = 3
+retry_base_ms = 10
+drain_timeout_ms = 2000
+engine_fault_seed = 99
+engine_fault_kills = 2
+engine_fault_after_jobs = 6
+engine_fault_slow_ms = 15
+engine_fault_handoff_errors = 1
 [sched]
 queue = "sjf"
 assign = "round-robin"
@@ -623,6 +731,17 @@ assign = "round-robin"
         assert_eq!(cfg.router_retry_after_ms, 500);
         assert_eq!(cfg.router_default_weight, 2);
         assert_eq!(cfg.router_tenant_weights, "0:4,7:2");
+        assert!(cfg.supervise);
+        assert_eq!(cfg.supervise_heartbeat_ms, 400);
+        assert_eq!(cfg.supervise_grace_ms, 100);
+        assert_eq!(cfg.retry_limit, 3);
+        assert_eq!(cfg.retry_base_ms, 10);
+        assert_eq!(cfg.drain_timeout_ms, 2000);
+        assert_eq!(cfg.engine_fault_seed, 99);
+        assert_eq!(cfg.engine_fault_kills, 2);
+        assert_eq!(cfg.engine_fault_after_jobs, 6);
+        assert_eq!(cfg.engine_fault_slow_ms, 15);
+        assert_eq!(cfg.engine_fault_handoff_errors, 1);
         assert_eq!(cfg.sched_decode.queue, QueuePolicy::Sjf);
         assert_eq!(cfg.sched_encode.assign, AssignPolicy::RoundRobin);
         let d = cfg.instances.iter().find(|i| i.role == Stage::Decode).unwrap();

@@ -141,16 +141,22 @@ fn route(
             if let Some(p) = headers.priority {
                 req.priority = p;
             }
+            // Capture before submit consumes the request: the wait
+            // watchdog bounds the blocking recv by deadline + grace.
+            let deadline_ms = req.deadline_ms;
             let (id, rx) = match engine.submit_request(req) {
                 Ok(pair) => pair,
                 Err(e) => return (e.status, e.to_json()),
             };
-            match rx.recv() {
-                Ok(resp) => (
+            // Typed failure mapping: worker loss → 503 worker_lost,
+            // deadline → 504 deadline_exceeded, drain → 503 draining —
+            // all carrying retry_after_ms. Never a hung connection.
+            match engine.wait(&rx, deadline_ms) {
+                Ok(out) => (
                     200,
-                    completion_response(id, &resp.text, resp.tokens.len(), resp.ttft, resp.latency),
+                    completion_response(id, &out.text, out.tokens.len(), out.ttft, out.latency),
                 ),
-                Err(_) => (500, error_response("dropped", "engine dropped the request")),
+                Err(e) => (e.status, e.to_json()),
             }
         }
         _ => (404, ApiError::not_found().to_json()),
@@ -163,6 +169,8 @@ fn respond(mut stream: TcpStream, status: u16, body: &str) -> Result<()> {
         400 => "Bad Request",
         404 => "Not Found",
         429 => "Too Many Requests",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Internal Server Error",
     };
     let head = format!(

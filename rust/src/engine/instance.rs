@@ -4,6 +4,12 @@
 //! implicit — unprocessed work lives in the *global* queues, so a
 //! switching instance simply stops pulling; migration is modelled by the
 //! executable warm-up for the new role plus the configured pause).
+//!
+//! The thread body is wrapped in `catch_unwind`: a panic (real or
+//! injected by the [`super::supervise::EngineFaultPlan`]) becomes a
+//! structured crash event instead of a silent death, and every job the
+//! instance owned at the time is swept from the ownership ledger and
+//! re-dispatched by the supervisor.
 
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
@@ -17,8 +23,10 @@ use crate::metrics::recorder::MetricsRecorder;
 use crate::model::tokenizer;
 use crate::runtime::tiny_lmm::{argmax, TinyLmmRuntime};
 
-use super::job::{GenResponse, Job, ReqCtx};
+use super::job::{FailReason, GenOutput, GenResponse, Job, ReqCtx};
 use super::queues::StageQueues;
+use super::serve::synth_patches;
+use super::supervise::{fail_and_clean, lock_clean, recover_or_fail};
 
 /// Control messages to an instance.
 pub enum Ctrl {
@@ -43,15 +51,54 @@ pub struct InstanceParams {
     /// individual [`Job::KvChunk`]s and reassemble decode-side; 0 ships
     /// the KV whole (monolithic handoff).
     pub pd_layer_groups: u32,
+    /// Injected kill: panic when picking up work after this many
+    /// completed jobs (`EngineFaultPlan::kill_after`). `None` = never.
+    pub kill_after_jobs: Option<u64>,
+    /// Injected straggler: delay every popped job by this many ms.
+    pub fault_slow_ms: u64,
+    /// Injected handoff errors: job-count thresholds, one streamed
+    /// EP/PD emission failure each.
+    pub fault_handoff_after: Vec<u64>,
 }
 
-/// The stage a popped job's work is accounted to — the worker-side
-/// busy/service counters the monitor's load signals are built from.
-fn job_stage(job: &Job) -> Stage {
-    match job {
-        Job::Encode { .. } => Stage::Encode,
-        Job::PrefillChunk { .. } | Job::Prefill { .. } => Stage::Prefill,
-        Job::Decode { .. } | Job::KvChunk { .. } => Stage::Decode,
+/// Mutable per-thread fault-injection state, resolved from
+/// [`InstanceParams`] at thread start. Dormant (all no-ops) when the
+/// engine's fault plan is empty.
+struct FaultState {
+    kill_after: Option<u64>,
+    slow_ms: u64,
+    handoff_after: Vec<u64>,
+    jobs_done: u64,
+}
+
+impl FaultState {
+    fn from_params(p: &InstanceParams) -> FaultState {
+        FaultState {
+            kill_after: p.kill_after_jobs,
+            slow_ms: p.fault_slow_ms,
+            handoff_after: p.fault_handoff_after.clone(),
+            jobs_done: 0,
+        }
+    }
+
+    /// Injected worker kill: fires when picking up work past the
+    /// threshold — *after* the job is claimed in the ledger, so the
+    /// sweep always finds the stranded work.
+    fn maybe_kill(&self) {
+        if let Some(k) = self.kill_after {
+            if self.jobs_done > k {
+                panic!("injected worker kill (engine fault plan)");
+            }
+        }
+    }
+
+    /// Consume one injected handoff error if a threshold has passed.
+    fn take_handoff(&mut self) -> bool {
+        if let Some(pos) = self.handoff_after.iter().position(|&k| self.jobs_done > k) {
+            self.handoff_after.swap_remove(pos);
+            return true;
+        }
+        false
     }
 }
 
@@ -68,28 +115,61 @@ pub fn pull_stages(mode: DeploymentMode, role: Stage) -> Vec<Stage> {
     }
 }
 
-/// Thread body.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
+/// Thread body: the supervision boundary. Panics and initialization
+/// failures become structured crash events; the supervisor sweeps the
+/// dead instance's claimed work and re-dispatches it.
 pub fn instance_main(
     params: InstanceParams,
     queues: Arc<StageQueues>,
     ctrl: Receiver<Ctrl>,
     metrics: Arc<MetricsRecorder>,
 ) {
-    let mut rt = match TinyLmmRuntime::load(&params.artifacts_dir) {
-        Ok(rt) => rt,
-        Err(e) => {
-            warn!("instance {}: runtime load failed: {e:#}", params.idx);
-            return;
+    let idx = params.idx;
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        instance_run(params, &queues, &ctrl, &metrics)
+    }));
+    match outcome {
+        Ok(Ok(())) => debug!("instance {idx} down"),
+        Ok(Err(reason)) => {
+            if queues.supervision.on_crash(idx, &reason) {
+                metrics.on_crash();
+            }
         }
-    };
-    let mut role = params.role;
-    if let Err(e) = warm_for(&mut rt, params.mode, role) {
-        warn!("instance {}: warm-up failed: {e:#}", params.idx);
-        return;
+        Err(payload) => {
+            let reason = format!("panic: {}", panic_message(payload.as_ref()));
+            if queues.supervision.on_crash(idx, &reason) {
+                metrics.on_crash();
+            }
+        }
     }
+}
+
+fn instance_run(
+    params: InstanceParams,
+    queues: &Arc<StageQueues>,
+    ctrl: &Receiver<Ctrl>,
+    metrics: &Arc<MetricsRecorder>,
+) -> Result<(), String> {
+    queues.supervision.beat(params.idx);
+    let mut rt = TinyLmmRuntime::load(&params.artifacts_dir)
+        .map_err(|e| format!("runtime load failed: {e:#}"))?;
+    let mut role = params.role;
+    warm_for(&mut rt, params.mode, role).map_err(|e| format!("warm-up failed: {e:#}"))?;
     info!("instance {} up as {role}", params.idx);
+    let mut faults = FaultState::from_params(&params);
 
     loop {
+        queues.supervision.beat(params.idx);
         // Control first: switches and shutdown preempt new work.
         match ctrl.try_recv() {
             Ok(Ctrl::Shutdown) => break,
@@ -118,18 +198,20 @@ pub fn instance_main(
             stages.iter().copied().filter(|s| *s != Stage::Decode).collect();
 
         if let Some(job) = queues.try_pop(&non_decode) {
-            let stage = job_stage(&job);
+            faults.jobs_done += 1;
+            let stage = job.stage();
             let t0 = std::time::Instant::now();
-            let units =
-                handle_ep_job(&mut rt, job, &queues, &metrics, params.mode, params.pd_layer_groups);
+            let units = run_ep(&mut rt, job, &params, queues, metrics, &mut faults, true);
             metrics.on_stage_work(stage, t0.elapsed().as_secs_f64(), units);
             continue;
         }
         if stages.contains(&Stage::Decode) {
             let jobs = queues.pop_decode_batch(params.max_decode_batch as usize);
             if !jobs.is_empty() {
+                faults.jobs_done += jobs.len() as u64;
                 let t0 = std::time::Instant::now();
-                let served = run_decode_batch(&mut rt, jobs, &params, &queues, &metrics, role);
+                let served =
+                    run_decode_batch(&mut rt, jobs, &params, queues, metrics, role, &mut faults);
                 metrics.on_stage_work(Stage::Decode, t0.elapsed().as_secs_f64(), served);
                 continue;
             }
@@ -137,14 +219,14 @@ pub fn instance_main(
         // Nothing to do: block briefly; timing out just loops to re-check
         // control/decode.
         if let Some(job) = queues.pop_timeout(&non_decode, Duration::from_millis(5)) {
-            let stage = job_stage(&job);
+            faults.jobs_done += 1;
+            let stage = job.stage();
             let t0 = std::time::Instant::now();
-            let units =
-                handle_ep_job(&mut rt, job, &queues, &metrics, params.mode, params.pd_layer_groups);
+            let units = run_ep(&mut rt, job, &params, queues, metrics, &mut faults, true);
             metrics.on_stage_work(stage, t0.elapsed().as_secs_f64(), units);
         }
     }
-    debug!("instance {} down", params.idx);
+    Ok(())
 }
 
 fn warm_for(rt: &mut TinyLmmRuntime, mode: DeploymentMode, role: Stage) -> anyhow::Result<()> {
@@ -158,25 +240,82 @@ fn warm_for(rt: &mut TinyLmmRuntime, mode: DeploymentMode, role: Stage) -> anyho
     Ok(())
 }
 
-/// Encode or prefill one job. `pd_groups > 0` streams prefilled KV to the
-/// decode side in layer groups instead of one monolithic `Job::Decode`.
+/// Stage-boundary admission: cancelled jobs (superseded epochs, already
+/// failed requests) are skipped silently; expired deadlines fail the
+/// request with a structured 504-style error before any further work.
+/// Free for default runs: no deadline and no cancellation means two
+/// relaxed atomic loads.
+fn boundary_reject(job: &Job, queues: &Arc<StageQueues>, metrics: &Arc<MetricsRecorder>) -> bool {
+    let ctx = job.ctx();
+    if ctx.is_terminated() || ctx.is_cancelled() {
+        return true;
+    }
+    if ctx.past_deadline() {
+        fail_and_clean(queues, ctx, FailReason::DeadlineExceeded, metrics);
+        return true;
+    }
+    false
+}
+
+/// Pop-side wrapper for EP-stage jobs: stage-boundary admission, an
+/// ownership claim, fault injection, then execution. Returns the
+/// completed-job units for the monitor's service accounting.
+fn run_ep(
+    rt: &mut TinyLmmRuntime,
+    job: Job,
+    params: &InstanceParams,
+    queues: &Arc<StageQueues>,
+    metrics: &Arc<MetricsRecorder>,
+    faults: &mut FaultState,
+    kill_armed: bool,
+) -> u64 {
+    if boundary_reject(&job, queues, metrics) {
+        return 0;
+    }
+    let token = queues.supervision.claim(params.idx, &job);
+    if kill_armed {
+        faults.maybe_kill();
+    }
+    if faults.slow_ms > 0 {
+        std::thread::sleep(Duration::from_millis(faults.slow_ms));
+    }
+    handle_ep_job(rt, job, queues, metrics, params, faults, token)
+}
+
+/// Encode or prefill one job. `params.pd_layer_groups > 0` streams
+/// prefilled KV to the decode side in layer groups instead of one
+/// monolithic `Job::Decode`.
 ///
 /// Returns the number of completed stage jobs this call performed (the
 /// monitor's service-time unit): an executed encode or prefill counts 1;
 /// a streamed chunk that only slots into a reassembly buffer counts 0,
 /// so bookkeeping never dilutes the per-job service EWMA.
+///
+/// `token` is the job's ownership claim: released when the work hands
+/// off cleanly, consumed by [`recover_or_fail`] when it doesn't.
 fn handle_ep_job(
     rt: &mut TinyLmmRuntime,
     job: Job,
     queues: &Arc<StageQueues>,
     metrics: &Arc<MetricsRecorder>,
-    mode: DeploymentMode,
-    pd_groups: u32,
+    params: &InstanceParams,
+    faults: &mut FaultState,
+    token: Option<u64>,
 ) -> u64 {
+    let sup = &queues.supervision;
     match job {
         Job::Encode { ctx, shard, patches, tiles, stream } => {
             match rt.encode(&patches, tiles) {
                 Ok(mm) => {
+                    if stream && faults.take_handoff() {
+                        // Injected streamed-handoff error: degrade this
+                        // request to the monolithic path (fresh epoch,
+                        // single unstreamed shard) instead of failing it.
+                        warn!("injected EP handoff error for req {}: falling back", ctx.id);
+                        sup.release(token);
+                        fallback_monolithic(queues, metrics, &ctx);
+                        return 1;
+                    }
                     if stream {
                         // Chunked handoff: emit this shard's tokens to the
                         // prefill side the moment they exist — no waiting
@@ -188,21 +327,17 @@ fn handle_ep_job(
                     } else if ctx.shard_done(shard, mm) {
                         // Last shard: EP migration of the merged tokens,
                         // shared between the prefill job and the cache.
-                        let merged = std::sync::Arc::new(ctx.merged_mm());
+                        let merged = Arc::new(ctx.merged_mm());
                         populate_encoder_cache(rt, &ctx, &merged, queues);
                         queues.account_ep(merged.len() * 4);
                         queues.push(Stage::Prefill, Job::Prefill { ctx, mm: merged });
                     }
+                    sup.release(token);
                     1
                 }
                 Err(e) => {
                     warn!("encode failed for req {}: {e:#}", ctx.id);
-                    if stream {
-                        // The request can never complete reassembly: drop
-                        // its partial state (sibling shards' payloads)
-                        // instead of leaking it in the global buffer.
-                        queues.reassembly.abort(ctx.id);
-                    }
+                    recover_or_fail(queues, metrics, token, &ctx, "encode failed");
                     0
                 }
             }
@@ -213,12 +348,16 @@ fn handle_ep_job(
             // (see `ReassemblyBuffer`). The worker that slots the final
             // chunk runs the request's prefill immediately.
             if let Some(merged) = queues.reassembly.insert(ctx.id, shard, mm) {
-                let merged = std::sync::Arc::new(merged);
+                let merged = Arc::new(merged);
                 populate_encoder_cache(rt, &ctx, &merged, queues);
                 metrics.on_ep_reassembled();
+                // The claim now covers the promoted prefill: a crash
+                // replays the merged payload, not a consumed chunk.
                 let job = Job::Prefill { ctx, mm: merged };
-                handle_ep_job(rt, job, queues, metrics, mode, pd_groups)
+                sup.ledger.update(token, job.clone());
+                handle_ep_job(rt, job, queues, metrics, params, faults, token)
             } else {
+                sup.release(token);
                 0
             }
         }
@@ -228,6 +367,7 @@ fn handle_ep_job(
                 Ok(x) => x,
                 Err(e) => {
                     warn!("no prefill bucket for req {}: {e:#}", ctx.id);
+                    recover_or_fail(queues, metrics, token, &ctx, "no prefill bucket");
                     return 0;
                 }
             };
@@ -247,10 +387,21 @@ fn handle_ep_job(
                     metrics.on_first_token(ctx.id);
                     if ctx.max_tokens <= 1 {
                         finish(&ctx, vec![first], metrics);
+                        sup.release(token);
                         return 1;
                     }
-                    let _ = mode;
-                    if pd_groups > 0 {
+                    let pd_stream = params.pd_layer_groups > 0 && {
+                        if faults.take_handoff() {
+                            // Injected streamed PD handoff error: ship the
+                            // KV whole for this request instead.
+                            warn!("injected PD handoff error for req {}: monolithic KV", ctx.id);
+                            metrics.on_degraded_fallback();
+                            false
+                        } else {
+                            true
+                        }
+                    };
+                    if pd_stream {
                         // Streamed PD handoff: the KV leaves in contiguous
                         // layer groups (exact cumulative split — parts
                         // always concatenate back to the monolithic
@@ -258,12 +409,12 @@ fn handle_ep_job(
                         // decode worker that completes reassembly admits
                         // the request. Same total bytes as the monolithic
                         // path, counted per chunk.
-                        let groups = pd_groups as usize;
+                        let groups = params.pd_layer_groups as usize;
                         queues.kv_reassembly.expect(ctx.id, groups);
                         metrics.on_pd_streamed();
                         let sizes = crate::util::bytes::cumulative_split(
                             pf.kv.len() as u64,
-                            pd_groups as u64,
+                            params.pd_layer_groups as u64,
                         );
                         let mut lo = 0usize;
                         for (g, sz) in sizes.into_iter().enumerate() {
@@ -275,7 +426,7 @@ fn handle_ep_job(
                             queues.push(
                                 Stage::Decode,
                                 Job::KvChunk {
-                                    ctx: std::sync::Arc::clone(&ctx),
+                                    ctx: Arc::clone(&ctx),
                                     group: g,
                                     kv: part,
                                     len,
@@ -296,10 +447,12 @@ fn handle_ep_job(
                             },
                         );
                     }
+                    sup.release(token);
                     1
                 }
                 Err(e) => {
                     warn!("prefill failed for req {}: {e:#}", ctx.id);
+                    recover_or_fail(queues, metrics, token, &ctx, "prefill failed");
                     0
                 }
             }
@@ -308,6 +461,28 @@ fn handle_ep_job(
             unreachable!("decode-side jobs go through run_decode_batch")
         }
     }
+}
+
+/// Graceful degradation off a failed streamed EP handoff: abort the
+/// streamed epoch's partial reassembly, start a fresh single-shard epoch
+/// of the request, and re-encode the full payload (regenerated from the
+/// request seed — byte-identical to the original concatenation) down the
+/// monolithic path.
+fn fallback_monolithic(
+    queues: &Arc<StageQueues>,
+    metrics: &Arc<MetricsRecorder>,
+    ctx: &Arc<ReqCtx>,
+) {
+    queues.reassembly.abort(ctx.id);
+    let fresh = ctx.respawn(1);
+    queues.supervision.track(&fresh);
+    metrics.on_degraded_fallback();
+    let tiles = fresh.images;
+    let patches = synth_patches(fresh.seed, tiles);
+    queues.push(
+        Stage::Encode,
+        Job::Encode { ctx: fresh, shard: 0, patches, tiles, stream: false },
+    );
 }
 
 /// Miss-path population of the cross-request encoder cache at EP-merge
@@ -319,16 +494,18 @@ fn handle_ep_job(
 /// (capacity held by pinned entries) changes nothing: the payload is
 /// `Arc`-shared, so ownership stays with the prefill job either way — the
 /// cache never becomes the payload's only owner while a request needs it.
+/// Degradation is bypass by construction: any populate failure leaves the
+/// request on the uncached path it was already on.
 fn populate_encoder_cache(
     rt: &TinyLmmRuntime,
     ctx: &Arc<ReqCtx>,
-    merged: &std::sync::Arc<Vec<f32>>,
+    merged: &Arc<Vec<f32>>,
     queues: &Arc<StageQueues>,
 ) {
     if let Some(h) = ctx.media_hash {
         let mm_tokens = merged.len() as u64 / rt.config().llm_hidden.max(1) as u64;
-        let payload = std::sync::Arc::clone(merged);
-        let mut cache = queues.encoder_cache.lock().unwrap();
+        let payload = Arc::clone(merged);
+        let mut cache = lock_clean(&queues.encoder_cache);
         if cache.insert_pinned(h, mm_tokens, Some(payload)) {
             cache.unpin(h);
         }
@@ -337,6 +514,8 @@ fn populate_encoder_cache(
 
 struct Slot {
     ctx: Arc<ReqCtx>,
+    /// Ownership-ledger claim, released when the slot finishes.
+    token: Option<u64>,
     generated: Vec<i32>,
     cur: i32,
     done: bool,
@@ -348,6 +527,7 @@ struct Slot {
 /// request's KV — whichever decode worker lands the final group runs it.
 fn admit_decode_job(
     job: Job,
+    token: Option<u64>,
     slots: &mut Vec<Slot>,
     kvs: &mut Vec<Vec<f32>>,
     lens: &mut Vec<i32>,
@@ -356,24 +536,61 @@ fn admit_decode_job(
 ) {
     match job {
         Job::Decode { ctx, kv, len, next_token, generated } => {
-            slots.push(Slot { ctx, generated, cur: next_token, done: false });
+            slots.push(Slot { ctx, token, generated, cur: next_token, done: false });
             kvs.push(kv);
             lens.push(len);
         }
         Job::KvChunk { ctx, group, kv, len, next_token } => {
             if let Some(merged) = queues.kv_reassembly.insert(ctx.id, group, kv) {
                 metrics.on_pd_reassembled();
+                if token.is_some() {
+                    // Promote the claim to the fully-reassembled decode:
+                    // a crash replays the merged KV, not one chunk.
+                    queues.supervision.ledger.update(
+                        token,
+                        Job::Decode {
+                            ctx: Arc::clone(&ctx),
+                            kv: merged.clone(),
+                            len,
+                            next_token,
+                            generated: vec![next_token],
+                        },
+                    );
+                }
                 slots.push(Slot {
                     ctx,
+                    token,
                     generated: vec![next_token],
                     cur: next_token,
                     done: false,
                 });
                 kvs.push(merged);
                 lens.push(len);
+            } else {
+                // Partial group: the payload now lives in the global
+                // reassembly buffer, which survives this worker.
+                queues.supervision.release(token);
             }
         }
         _ => unreachable!("non-decode job in the decode queue"),
+    }
+}
+
+/// Failure path for a decode runtime error: every live slot either
+/// retries from its ledger snapshot or fails with a typed error — no
+/// receiver is left hanging on a dropped slot.
+fn fail_decode_slots(
+    slots: &mut [Slot],
+    queues: &Arc<StageQueues>,
+    metrics: &Arc<MetricsRecorder>,
+    what: &str,
+) {
+    for s in slots.iter_mut() {
+        if s.done {
+            continue;
+        }
+        s.done = true;
+        recover_or_fail(queues, metrics, s.token.take(), &s.ctx, what);
     }
 }
 
@@ -392,12 +609,23 @@ fn run_decode_batch(
     queues: &Arc<StageQueues>,
     metrics: &Arc<MetricsRecorder>,
     role: Stage,
+    faults: &mut FaultState,
 ) -> u64 {
     let mut slots: Vec<Slot> = Vec::new();
     let mut kvs: Vec<Vec<f32>> = Vec::new();
     let mut lens: Vec<i32> = Vec::new();
     for job in jobs {
-        admit_decode_job(job, &mut slots, &mut kvs, &mut lens, queues, metrics);
+        if boundary_reject(&job, queues, metrics) {
+            continue;
+        }
+        let token = queues.supervision.claim(params.idx, &job);
+        admit_decode_job(job, token, &mut slots, &mut kvs, &mut lens, queues, metrics);
+    }
+    // Claims are registered: an injected kill here strands work the
+    // supervisor can sweep, never work that silently vanishes.
+    faults.maybe_kill();
+    if faults.slow_ms > 0 {
+        std::thread::sleep(Duration::from_millis(faults.slow_ms));
     }
     let mut served = slots.len() as u64;
     if slots.is_empty() {
@@ -412,6 +640,7 @@ fn run_decode_batch(
             Ok(s) => s,
             Err(e) => {
                 warn!("decode_start failed: {e:#}");
+                fail_decode_slots(&mut slots, queues, metrics, "decode_start failed");
                 return served;
             }
         };
@@ -419,6 +648,7 @@ fn run_decode_batch(
 
         let mut steps_since_recheck = 0u32;
         loop {
+            queues.supervision.beat(params.idx);
             // Build the token vector (idle/finished slots feed PAD).
             let mut tokens = vec![tokenizer::PAD as i32; bucket];
             for (i, s) in slots.iter().enumerate() {
@@ -430,6 +660,7 @@ fn run_decode_batch(
                 Ok(l) => l,
                 Err(e) => {
                     warn!("decode_step failed: {e:#}");
+                    fail_decode_slots(&mut slots, queues, metrics, "decode_step failed");
                     return served;
                 }
             };
@@ -449,6 +680,7 @@ fn run_decode_batch(
                 {
                     s.done = true;
                     finish(&s.ctx, s.generated.clone(), metrics);
+                    queues.supervision.release(s.token.take());
                 }
             }
             if slots.iter().all(|s| s.done) {
@@ -471,6 +703,7 @@ fn run_decode_batch(
                         Ok(x) => x,
                         Err(e) => {
                             warn!("decode_extract failed: {e:#}");
+                            fail_decode_slots(&mut slots, queues, metrics, "decode_extract failed");
                             return served;
                         }
                     };
@@ -498,22 +731,20 @@ fn run_decode_batch(
                             .filter(|s| *s != Stage::Decode)
                             .collect();
                         while let Some(job) = queues.try_pop(&non_decode) {
-                            let _ = handle_ep_job(
-                                rt,
-                                job,
-                                queues,
-                                metrics,
-                                params.mode,
-                                params.pd_layer_groups,
-                            );
+                            let _ = run_ep(rt, job, params, queues, metrics, faults, false);
                         }
                     }
                     // Admit waiting decode jobs into the freed capacity.
                     let room = params.max_decode_batch as usize - new_slots.len();
                     let before = new_slots.len();
                     for job in queues.pop_decode_batch(room) {
+                        if boundary_reject(&job, queues, metrics) {
+                            continue;
+                        }
+                        let token = queues.supervision.claim(params.idx, &job);
                         admit_decode_job(
                             job,
+                            token,
                             &mut new_slots,
                             &mut new_kvs,
                             &mut new_lens,
@@ -535,20 +766,26 @@ fn run_decode_batch(
     }
 }
 
+/// Deliver a completion. Exactly-once by the terminated CAS: if the
+/// request already failed (deadline, drain, worker loss), the late
+/// completion is suppressed.
 fn finish(ctx: &Arc<ReqCtx>, tokens: Vec<i32>, metrics: &Arc<MetricsRecorder>) {
+    if !ctx.try_terminate() {
+        return;
+    }
     metrics.on_finish(ctx.id, tokens.len() as u32);
     let text = tokenizer::decode(
         &tokens.iter().map(|&t| t.max(0) as u32).collect::<Vec<u32>>(),
     );
     let now = std::time::Instant::now();
     let latency = now.duration_since(ctx.arrival).as_secs_f64();
-    let resp = GenResponse {
+    let resp = GenResponse::Done(GenOutput {
         id: ctx.id,
         tokens,
         text,
         ttft: f64::NAN, // filled by the engine from the recorder
         latency,
-    };
+    });
     // Receiver may have gone away (fire-and-forget submits) — ignore.
     let _ = ctx.done_tx.try_send(resp);
 }

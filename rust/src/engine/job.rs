@@ -1,11 +1,15 @@
 //! Engine job types and the per-request shared context.
 
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::mpsc::SyncSender;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::api::ApiError;
 use crate::core::request::{Priority, RequestId};
+use crate::core::stage::Stage;
+
+use super::supervise::lock_clean;
 
 /// A generation request submitted to the engine.
 #[derive(Debug, Clone)]
@@ -21,11 +25,14 @@ pub struct GenRequest {
     pub tenant: u32,
     /// Priority class, consulted by front-door admission.
     pub class: Priority,
+    /// End-to-end deadline in ms (0 = none). Enforced at every stage
+    /// boundary and by the supervisor's watchdog.
+    pub deadline_ms: u64,
 }
 
-/// The completed response.
+/// A completed generation.
 #[derive(Debug, Clone)]
-pub struct GenResponse {
+pub struct GenOutput {
     pub id: RequestId,
     pub tokens: Vec<i32>,
     pub text: String,
@@ -33,6 +40,105 @@ pub struct GenResponse {
     pub ttft: f64,
     /// Seconds from submit to completion.
     pub latency: f64,
+}
+
+/// Why a request failed terminally.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FailReason {
+    /// The owning worker died and recovery budget was exhausted (or no
+    /// same-kind sibling exists to re-dispatch to).
+    WorkerLost,
+    /// The request's `deadline_ms` elapsed before completion.
+    DeadlineExceeded,
+    /// The engine was draining at submit time, or the drain timeout
+    /// expired with the request still in flight.
+    Draining,
+    /// A runtime-level stage error (encode/prefill/decode) that retries
+    /// did not absorb.
+    Runtime(String),
+}
+
+impl FailReason {
+    /// Stable machine-readable code (matches `ApiError::code`).
+    pub fn code(&self) -> &'static str {
+        match self {
+            FailReason::WorkerLost => "worker_lost",
+            FailReason::DeadlineExceeded => "deadline_exceeded",
+            FailReason::Draining => "draining",
+            FailReason::Runtime(_) => "runtime_error",
+        }
+    }
+
+    /// HTTP status the failure maps to at the front door.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            FailReason::WorkerLost | FailReason::Draining => 503,
+            FailReason::DeadlineExceeded => 504,
+            FailReason::Runtime(_) => 500,
+        }
+    }
+}
+
+/// A typed terminal failure (the supervised alternative to a dropped
+/// sender: receivers always observe exactly one response).
+#[derive(Debug, Clone)]
+pub struct GenFailure {
+    pub id: RequestId,
+    pub reason: FailReason,
+    /// Redispatch attempts consumed before the request terminated.
+    pub retries: u32,
+    /// Seconds from submit to the failure.
+    pub latency: f64,
+}
+
+impl GenFailure {
+    /// Lower to the front-door error shape. `deadline_ms` fills the 504
+    /// message; `retry_after_ms` is the client backoff hint.
+    pub fn to_api_error(&self, deadline_ms: u64, retry_after_ms: u64) -> ApiError {
+        match &self.reason {
+            FailReason::WorkerLost => ApiError::worker_lost(retry_after_ms),
+            FailReason::DeadlineExceeded => ApiError::deadline_exceeded(deadline_ms, retry_after_ms),
+            FailReason::Draining => ApiError::draining(retry_after_ms),
+            FailReason::Runtime(msg) => ApiError::internal(msg.clone()),
+        }
+    }
+}
+
+impl std::fmt::Display for GenFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request {} failed: {} after {} retries", self.id, self.reason.code(), self.retries)
+    }
+}
+
+impl std::error::Error for GenFailure {}
+
+/// The response delivered on a request's channel: exactly one per
+/// request — a completion or a typed failure, never a silent drop.
+#[derive(Debug, Clone)]
+pub enum GenResponse {
+    Done(GenOutput),
+    Failed(GenFailure),
+}
+
+impl GenResponse {
+    pub fn id(&self) -> RequestId {
+        match self {
+            GenResponse::Done(o) => o.id,
+            GenResponse::Failed(f) => f.id,
+        }
+    }
+
+    pub fn is_failed(&self) -> bool {
+        matches!(self, GenResponse::Failed(_))
+    }
+
+    /// Unwrap into a result for callers that treat failure as an error.
+    pub fn output(self) -> Result<GenOutput, GenFailure> {
+        match self {
+            GenResponse::Done(o) => Ok(o),
+            GenResponse::Failed(f) => Err(f),
+        }
+    }
 }
 
 /// Shared per-request state, referenced by every job of the request.
@@ -52,6 +158,19 @@ pub struct ReqCtx {
     /// (§3.2.2's align-and-merge at the prefill side).
     pub mm_parts: Mutex<Vec<Option<Vec<f32>>>>,
     pub done_tx: SyncSender<GenResponse>,
+    /// Seed of the synthetic media payload — recovery re-encodes from it.
+    pub seed: u64,
+    /// End-to-end deadline in ms (0 = none).
+    pub deadline_ms: u64,
+    /// Exactly-once termination latch, shared across epochs
+    /// ([`ReqCtx::respawn`]): whichever of finish / fail wins the CAS
+    /// sends the single response.
+    terminated: Arc<AtomicBool>,
+    /// This epoch was superseded (monolithic fallback) or failed — stage
+    /// boundaries skip its queued jobs.
+    cancelled: AtomicBool,
+    /// Redispatch attempts, shared across epochs.
+    retries: Arc<AtomicU32>,
 }
 
 impl ReqCtx {
@@ -75,13 +194,30 @@ impl ReqCtx {
             shards_done: AtomicU32::new(0),
             mm_parts: Mutex::new(vec![None; shards_total as usize]),
             done_tx,
+            seed: 0,
+            deadline_ms: 0,
+            terminated: Arc::new(AtomicBool::new(false)),
+            cancelled: AtomicBool::new(false),
+            retries: Arc::new(AtomicU32::new(0)),
         }
+    }
+
+    /// Attach the media seed (recovery re-encodes from it).
+    pub fn with_seed(mut self, seed: u64) -> ReqCtx {
+        self.seed = seed;
+        self
+    }
+
+    /// Attach an end-to-end deadline in ms (0 = none).
+    pub fn with_deadline_ms(mut self, deadline_ms: u64) -> ReqCtx {
+        self.deadline_ms = deadline_ms;
+        self
     }
 
     /// Record one finished shard; returns true when this was the last.
     pub fn shard_done(&self, shard: usize, mm: Vec<f32>) -> bool {
         {
-            let mut parts = self.mm_parts.lock().unwrap();
+            let mut parts = lock_clean(&self.mm_parts);
             assert!(parts[shard].is_none(), "duplicate shard {shard}");
             parts[shard] = Some(mm);
         }
@@ -91,20 +227,91 @@ impl ReqCtx {
 
     /// Merge shards in order (call only after the last `shard_done`).
     pub fn merged_mm(&self) -> Vec<f32> {
-        let parts = self.mm_parts.lock().unwrap();
+        let parts = lock_clean(&self.mm_parts);
         let mut out = Vec::new();
         for p in parts.iter() {
-            out.extend_from_slice(p.as_ref().expect("missing shard"));
+            debug_assert!(p.is_some(), "missing shard");
+            if let Some(p) = p {
+                out.extend_from_slice(p);
+            }
         }
         out
     }
+
+    /// Win the exactly-once termination race: true for the single caller
+    /// allowed to send the request's response.
+    pub fn try_terminate(&self) -> bool {
+        !self.terminated.swap(true, Ordering::SeqCst)
+    }
+
+    pub fn is_terminated(&self) -> bool {
+        self.terminated.load(Ordering::SeqCst)
+    }
+
+    /// Mark this epoch superseded; stage boundaries skip its jobs.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+
+    /// Whether the request's deadline has elapsed (false when none set).
+    pub fn past_deadline(&self) -> bool {
+        self.deadline_ms > 0 && self.arrival.elapsed().as_millis() as u64 > self.deadline_ms
+    }
+
+    /// Whether `deadline + grace` has elapsed (the watchdog's bound).
+    pub fn past_deadline_with_grace(&self, grace_ms: u64) -> bool {
+        self.deadline_ms > 0
+            && self.arrival.elapsed().as_millis() as u64 > self.deadline_ms.saturating_add(grace_ms)
+    }
+
+    /// Count one redispatch attempt; returns the new (1-based) total.
+    pub fn note_retry(&self) -> u32 {
+        self.retries.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    pub fn retry_count(&self) -> u32 {
+        self.retries.load(Ordering::SeqCst)
+    }
+
+    /// Start a fresh epoch of this request (the monolithic-fallback
+    /// path): same id, channel, arrival clock, termination latch, and
+    /// retry budget — fresh shard accounting. The current epoch is
+    /// cancelled so its still-queued jobs are skipped at stage
+    /// boundaries.
+    pub fn respawn(&self, shards_total: u32) -> Arc<ReqCtx> {
+        self.cancel();
+        Arc::new(ReqCtx {
+            id: self.id,
+            images: self.images,
+            text_tokens: self.text_tokens.clone(),
+            max_tokens: self.max_tokens,
+            arrival: self.arrival,
+            media_hash: self.media_hash,
+            shards_total,
+            shards_done: AtomicU32::new(0),
+            mm_parts: Mutex::new(vec![None; shards_total as usize]),
+            done_tx: self.done_tx.clone(),
+            seed: self.seed,
+            deadline_ms: self.deadline_ms,
+            terminated: Arc::clone(&self.terminated),
+            cancelled: AtomicBool::new(false),
+            retries: Arc::clone(&self.retries),
+        })
+    }
 }
 
-/// Work items flowing through the stage queues.
+/// Work items flowing through the stage queues. `Clone` exists for the
+/// supervision ledger's snapshots (payload vectors copy; `ctx` is
+/// shared), not for general fan-out.
+#[derive(Clone)]
 pub enum Job {
     /// One IRP shard of a request's tiles.
     Encode {
-        ctx: std::sync::Arc<ReqCtx>,
+        ctx: Arc<ReqCtx>,
         shard: usize,
         /// Flattened `[tiles, num_patches, patch_dim]`.
         patches: Vec<f32>,
@@ -119,20 +326,20 @@ pub enum Job {
     /// are shared (`Arc`) so an encoder-cache entry and any number of
     /// hit-path prefill jobs reference one buffer without copying.
     Prefill {
-        ctx: std::sync::Arc<ReqCtx>,
-        mm: std::sync::Arc<Vec<f32>>,
+        ctx: Arc<ReqCtx>,
+        mm: Arc<Vec<f32>>,
     },
     /// A partial EP payload: one streamed shard's MM tokens, headed for
     /// the prefill-side reassembly buffer. The prefill worker that
     /// completes a request's reassembly runs its prefill immediately.
     PrefillChunk {
-        ctx: std::sync::Arc<ReqCtx>,
+        ctx: Arc<ReqCtx>,
         shard: usize,
         mm: Vec<f32>,
     },
     /// A prefilled request migrating to decode.
     Decode {
-        ctx: std::sync::Arc<ReqCtx>,
+        ctx: Arc<ReqCtx>,
         kv: Vec<f32>,
         len: i32,
         /// Next input token (the first generated token).
@@ -147,13 +354,37 @@ pub enum Job {
     /// that slots the final group admits the request to its continuous
     /// batch with the byte-identical reconstructed KV.
     KvChunk {
-        ctx: std::sync::Arc<ReqCtx>,
+        ctx: Arc<ReqCtx>,
         group: usize,
         kv: Vec<f32>,
         len: i32,
         /// Next input token (the first generated token).
         next_token: i32,
     },
+}
+
+impl Job {
+    /// The request this job belongs to.
+    pub fn ctx(&self) -> &Arc<ReqCtx> {
+        match self {
+            Job::Encode { ctx, .. }
+            | Job::Prefill { ctx, .. }
+            | Job::PrefillChunk { ctx, .. }
+            | Job::Decode { ctx, .. }
+            | Job::KvChunk { ctx, .. } => ctx,
+        }
+    }
+
+    /// The stage a popped job's work is accounted to — the worker-side
+    /// busy/service counters the monitor's load signals are built from,
+    /// and the queue a re-dispatched job is pushed back onto.
+    pub fn stage(&self) -> Stage {
+        match self {
+            Job::Encode { .. } => Stage::Encode,
+            Job::PrefillChunk { .. } | Job::Prefill { .. } => Stage::Prefill,
+            Job::Decode { .. } | Job::KvChunk { .. } => Stage::Decode,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -178,5 +409,97 @@ mod tests {
         let ctx = ReqCtx::new(1, 1, vec![], 1, None, 2, tx);
         ctx.shard_done(0, vec![]);
         ctx.shard_done(0, vec![]);
+    }
+
+    #[test]
+    fn termination_latch_is_exactly_once() {
+        let (tx, _rx) = sync_channel(1);
+        let ctx = ReqCtx::new(1, 0, vec![], 1, None, 1, tx);
+        assert!(!ctx.is_terminated());
+        assert!(ctx.try_terminate());
+        assert!(!ctx.try_terminate(), "second terminator loses the race");
+        assert!(ctx.is_terminated());
+    }
+
+    #[test]
+    fn respawn_shares_latch_and_budget() {
+        let (tx, _rx) = sync_channel(1);
+        let ctx = Arc::new(ReqCtx::new(7, 2, vec![3], 4, Some(9), 3, tx).with_seed(0xA).with_deadline_ms(500));
+        ctx.note_retry();
+        let fresh = ctx.respawn(1);
+        assert!(ctx.is_cancelled(), "old epoch superseded");
+        assert!(!fresh.is_cancelled());
+        assert_eq!(fresh.id, 7);
+        assert_eq!(fresh.shards_total, 1);
+        assert_eq!(fresh.seed, 0xA);
+        assert_eq!(fresh.deadline_ms, 500);
+        assert_eq!(fresh.retry_count(), 1, "retry budget shared");
+        assert!(fresh.try_terminate());
+        assert!(!ctx.try_terminate(), "latch shared across epochs");
+    }
+
+    #[test]
+    fn deadline_checks() {
+        let (tx, _rx) = sync_channel(1);
+        let ctx = ReqCtx::new(1, 0, vec![], 1, None, 1, tx);
+        assert!(!ctx.past_deadline(), "no deadline set");
+        let (tx, _rx) = sync_channel(1);
+        let ctx = ReqCtx::new(1, 0, vec![], 1, None, 1, tx).with_deadline_ms(5);
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        assert!(ctx.past_deadline());
+        assert!(ctx.past_deadline_with_grace(5));
+        assert!(!ctx.past_deadline_with_grace(10_000));
+    }
+
+    #[test]
+    fn fail_reason_codes_and_statuses() {
+        assert_eq!(FailReason::WorkerLost.code(), "worker_lost");
+        assert_eq!(FailReason::WorkerLost.http_status(), 503);
+        assert_eq!(FailReason::DeadlineExceeded.code(), "deadline_exceeded");
+        assert_eq!(FailReason::DeadlineExceeded.http_status(), 504);
+        assert_eq!(FailReason::Draining.http_status(), 503);
+        assert_eq!(FailReason::Runtime("x".into()).http_status(), 500);
+    }
+
+    #[test]
+    fn response_accessors() {
+        let done = GenResponse::Done(GenOutput {
+            id: 3,
+            tokens: vec![1],
+            text: "t".into(),
+            ttft: 0.1,
+            latency: 0.2,
+        });
+        assert_eq!(done.id(), 3);
+        assert!(!done.is_failed());
+        assert!(done.output().is_ok());
+        let failed = GenResponse::Failed(GenFailure {
+            id: 4,
+            reason: FailReason::WorkerLost,
+            retries: 2,
+            latency: 0.3,
+        });
+        assert_eq!(failed.id(), 4);
+        assert!(failed.is_failed());
+        let err = failed.output().unwrap_err();
+        assert_eq!(err.retries, 2);
+        let api = err.to_api_error(0, 25);
+        assert_eq!(api.status, 503);
+        assert_eq!(api.code, "worker_lost");
+    }
+
+    #[test]
+    fn job_ctx_and_stage() {
+        let (tx, _rx) = sync_channel(1);
+        let ctx = Arc::new(ReqCtx::new(11, 1, vec![], 4, None, 1, tx));
+        let job = Job::Encode { ctx: Arc::clone(&ctx), shard: 0, patches: vec![], tiles: 1, stream: false };
+        assert_eq!(job.ctx().id, 11);
+        assert_eq!(job.stage(), Stage::Encode);
+        let job2 = job.clone();
+        assert_eq!(job2.ctx().id, 11);
+        let pf = Job::Prefill { ctx: Arc::clone(&ctx), mm: Arc::new(vec![]) };
+        assert_eq!(pf.stage(), Stage::Prefill);
+        let kc = Job::KvChunk { ctx, group: 0, kv: vec![], len: 1, next_token: 2 };
+        assert_eq!(kc.stage(), Stage::Decode);
     }
 }

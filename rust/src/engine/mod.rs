@@ -7,18 +7,30 @@
 //! global queues are used, and each available engine pulls proactively").
 //! EP and PD migrations move the actual token/KV bytes between instance-
 //! owned runtimes; IRP shards a request's tiles across encode instances;
-//! a monitor thread drives dynamic role switching.
+//! a monitor thread drives dynamic role switching and — with
+//! `supervise = true` — worker supervision: heartbeat tracking,
+//! crash-event sweeps, exactly-once redispatch of in-flight work, and
+//! per-request deadline enforcement (see [`supervise`]).
 //!
 //! [`crate::runtime::TinyLmmRuntime`] is deliberately *not* `Send` (the
 //! `xla` client is `Rc`-based), so every runtime is created inside its
 //! instance thread and never crosses threads; queues carry plain `Vec<f32>`
 //! tensors.
+//!
+//! Fallibility discipline: the engine's hot paths never `unwrap`/`expect`
+//! (lint-enforced below) — runtime errors propagate into the supervision
+//! layer as typed recoveries or structured [`job::GenResponse::Failed`]
+//! responses, and poisoned locks are taken over via
+//! [`supervise::lock_clean`] instead of cascading the panic.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod job;
 pub mod queues;
 pub mod instance;
 pub mod serve;
 pub mod http;
+pub mod supervise;
 
-pub use job::{GenRequest, GenResponse};
+pub use job::{FailReason, GenFailure, GenOutput, GenRequest, GenResponse};
 pub use serve::{EngineConfig, EpdEngine};
+pub use supervise::EngineFaultPlan;

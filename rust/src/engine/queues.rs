@@ -13,6 +13,7 @@ use crate::core::request::RequestId;
 use crate::core::stage::Stage;
 
 use super::job::Job;
+use super::supervise::{lock_clean, Supervision};
 
 /// MM tokens per encoder-cache block on the engine side. Tiny-lmm's
 /// encoder emits 16 MM tokens per tile (`TinyConfig::vis_out_tokens`),
@@ -61,7 +62,7 @@ impl ReassemblyBuffer {
     /// jobs are enqueued). Idempotent for the same part count.
     pub fn expect(&self, id: RequestId, parts: usize) {
         assert!(parts > 0, "reassembly needs at least one part");
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         let e = g
             .entry(id)
             .or_insert_with(|| Reassembly { parts: vec![None; parts], arrived: 0 });
@@ -85,7 +86,7 @@ impl ReassemblyBuffer {
         // final chunk happens outside it so concurrent workers' inserts
         // for other requests never serialize behind a large memcpy.
         let complete = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = lock_clean(&self.inner);
             let Some(e) = g.get_mut(&id) else {
                 return None; // aborted request: drop the orphan chunk
             };
@@ -95,12 +96,13 @@ impl ReassemblyBuffer {
             if e.arrived < e.parts.len() {
                 return None;
             }
-            g.remove(&id).unwrap()
+            g.remove(&id)?
         };
-        let mut merged =
-            Vec::with_capacity(complete.parts.iter().map(|p| p.as_ref().unwrap().len()).sum());
-        for p in complete.parts {
-            merged.extend_from_slice(&p.unwrap());
+        let mut merged = Vec::with_capacity(
+            complete.parts.iter().map(|p| p.as_ref().map_or(0, Vec::len)).sum(),
+        );
+        for p in complete.parts.into_iter().flatten() {
+            merged.extend_from_slice(&p);
         }
         Some(merged)
     }
@@ -108,12 +110,12 @@ impl ReassemblyBuffer {
     /// Drop a request's partial state (abort/cancel path). Returns whether
     /// anything was pending.
     pub fn abort(&self, id: RequestId) -> bool {
-        self.inner.lock().unwrap().remove(&id).is_some()
+        lock_clean(&self.inner).remove(&id).is_some()
     }
 
     /// Requests with outstanding parts.
     pub fn pending(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        lock_clean(&self.inner).len()
     }
 }
 
@@ -141,6 +143,11 @@ pub struct StageQueues {
     /// in principle have both edges streaming, and the two payloads must
     /// never mix.
     pub kv_reassembly: ReassemblyBuffer,
+    /// Supervision state: heartbeats, liveness, the ownership ledger, the
+    /// retry queue, the deadline watchdog, and the drain flag. Disabled
+    /// (all no-ops) unless the engine was started with
+    /// `EpdConfig::supervise` or a drain timeout.
+    pub supervision: Supervision,
 }
 
 impl StageQueues {
@@ -154,6 +161,17 @@ impl StageQueues {
     /// Like [`StageQueues::new`] with an explicit encoder-cache capacity
     /// in MM tokens (0 disables cross-request reuse).
     pub fn with_encoder_cache(initial_roles: Vec<Stage>, cache_tokens: u64) -> StageQueues {
+        let n = initial_roles.len();
+        StageQueues::with_supervision(initial_roles, cache_tokens, Supervision::disabled(n))
+    }
+
+    /// Full constructor: explicit encoder-cache capacity and supervision
+    /// state (the engine resolves both from `EpdConfig`).
+    pub fn with_supervision(
+        initial_roles: Vec<Stage>,
+        cache_tokens: u64,
+        supervision: Supervision,
+    ) -> StageQueues {
         StageQueues {
             encode: Mutex::new(VecDeque::new()),
             prefill: Mutex::new(VecDeque::new()),
@@ -169,6 +187,7 @@ impl StageQueues {
             )),
             reassembly: ReassemblyBuffer::new(),
             kv_reassembly: ReassemblyBuffer::new(),
+            supervision,
         }
     }
 
@@ -182,7 +201,7 @@ impl StageQueues {
 
     /// Push a job to a stage queue and wake pollers.
     pub fn push(&self, stage: Stage, job: Job) {
-        self.queue(stage).lock().unwrap().push_back(job);
+        lock_clean(self.queue(stage)).push_back(job);
         self.cv.notify_all();
     }
 
@@ -202,7 +221,7 @@ impl StageQueues {
     /// order). Returns immediately.
     pub fn try_pop(&self, stages: &[Stage]) -> Option<Job> {
         for &s in stages {
-            if let Some(j) = self.queue(s).lock().unwrap().pop_front() {
+            if let Some(j) = lock_clean(self.queue(s)).pop_front() {
                 return Some(j);
             }
         }
@@ -211,7 +230,7 @@ impl StageQueues {
 
     /// Pop up to `n` decode jobs at once (batch forming).
     pub fn pop_decode_batch(&self, n: usize) -> Vec<Job> {
-        let mut q = self.decode.lock().unwrap();
+        let mut q = lock_clean(&self.decode);
         let take = n.min(q.len());
         q.drain(..take).collect()
     }
@@ -221,13 +240,16 @@ impl StageQueues {
         if let Some(j) = self.try_pop(stages) {
             return Some(j);
         }
-        let guard = self.wait_lock.lock().unwrap();
-        let _unused = self.cv.wait_timeout(guard, timeout).unwrap();
+        let guard = lock_clean(&self.wait_lock);
+        let _unused = self
+            .cv
+            .wait_timeout(guard, timeout)
+            .unwrap_or_else(|e| e.into_inner());
         self.try_pop(stages)
     }
 
     pub fn len(&self, stage: Stage) -> usize {
-        self.queue(stage).lock().unwrap().len()
+        lock_clean(self.queue(stage)).len()
     }
 
     pub fn begin_shutdown(&self) {
@@ -239,13 +261,25 @@ impl StageQueues {
         self.shutdown.load(Ordering::SeqCst)
     }
 
-    /// Instances currently serving `stage`.
+    /// *Alive* instances currently serving `stage`: crashed workers stop
+    /// counting toward IRP fan-out and the router's capacity outlook.
+    /// (With supervision off nothing marks instances dead, so this is
+    /// exactly the pre-supervision role count.)
     pub fn role_count(&self, stage: Stage) -> u32 {
-        self.roles.lock().unwrap().iter().filter(|&&r| r == stage).count() as u32
+        lock_clean(&self.roles)
+            .iter()
+            .enumerate()
+            .filter(|&(i, &r)| r == stage && self.supervision.is_alive(i))
+            .count() as u32
+    }
+
+    /// A point-in-time copy of the role registry.
+    pub fn roles_snapshot(&self) -> Vec<Stage> {
+        lock_clean(&self.roles).clone()
     }
 
     pub fn set_role(&self, idx: usize, role: Stage) {
-        self.roles.lock().unwrap()[idx] = role;
+        lock_clean(&self.roles)[idx] = role;
     }
 }
 

@@ -24,8 +24,11 @@ use crate::router::{decide, AdmissionDecision, AdmissionOutlook, RouterConfig};
 use crate::util::rng::Rng;
 
 use super::instance::{instance_main, Ctrl, InstanceParams};
-use super::job::{GenRequest, GenResponse, Job, ReqCtx};
+use super::job::{FailReason, GenFailure, GenOutput, GenRequest, GenResponse, Job, ReqCtx};
 use super::queues::StageQueues;
+use super::supervise::{
+    fail_and_clean, lock_clean, supervise_tick, EngineFaultPlan, Supervision,
+};
 
 /// Engine configuration.
 ///
@@ -62,6 +65,10 @@ pub struct EngineConfig {
     pub decode_recheck_steps: u32,
     /// Role-switch policy (used when `epd.role_switching`).
     pub switch_policy: SwitchPolicy,
+    /// Deterministic fault injection for chaos tests. Empty (the
+    /// default) resolves from `epd.engine_fault_seed` — which is itself
+    /// 0 (dormant) by default — so production runs inject nothing.
+    pub fault_plan: EngineFaultPlan,
 }
 
 impl EngineConfig {
@@ -72,6 +79,7 @@ impl EngineConfig {
             max_decode_batch: 8,
             decode_recheck_steps: 4,
             switch_policy: SwitchPolicy::default(),
+            fault_plan: EngineFaultPlan::none(),
         }
     }
 }
@@ -95,11 +103,21 @@ impl EpdEngine {
     /// a few seconds of warm-up for large topologies).
     pub fn start(cfg: EngineConfig) -> Result<EpdEngine> {
         let roles: Vec<Stage> = cfg.epd.instances.iter().map(|i| i.role).collect();
-        let queues = Arc::new(StageQueues::with_encoder_cache(
+        let supervision = Supervision::from_epd(&cfg.epd, roles.len());
+        let queues = Arc::new(StageQueues::with_supervision(
             roles.clone(),
             cfg.epd.encoder_cache_tokens,
+            supervision,
         ));
         let metrics = Arc::new(MetricsRecorder::new());
+        // Explicit plan wins; otherwise resolve from config (dormant at
+        // the default `engine_fault_seed = 0`).
+        let plan = if cfg.fault_plan.is_empty() {
+            EngineFaultPlan::from_epd(&cfg.epd)
+        } else {
+            cfg.fault_plan.clone()
+        }
+        .clamp_instances(roles.len());
         let mut ctrls = Vec::new();
         let mut handles = Vec::new();
         for (idx, role) in roles.iter().enumerate() {
@@ -113,6 +131,9 @@ impl EpdEngine {
                 max_decode_batch: cfg.max_decode_batch,
                 decode_recheck_steps: cfg.decode_recheck_steps,
                 pd_layer_groups: cfg.epd.pd_layer_groups,
+                kill_after_jobs: plan.kill_after(idx),
+                fault_slow_ms: plan.slow_ms(idx),
+                fault_handoff_after: plan.handoff_after(idx),
             };
             let q = Arc::clone(&queues);
             let m = Arc::clone(&metrics);
@@ -123,7 +144,9 @@ impl EpdEngine {
             );
         }
 
-        let monitor_handle = if cfg.epd.role_switching {
+        // The monitor doubles as the supervisor: it runs whenever role
+        // switching *or* supervision is on.
+        let monitor_handle = if cfg.epd.role_switching || cfg.epd.supervise {
             let q = Arc::clone(&queues);
             let ctrls2 = ctrls.clone();
             let policy = cfg.switch_policy;
@@ -163,6 +186,9 @@ impl EpdEngine {
         &self,
         mut req: SubmitRequest,
     ) -> Result<(u64, Receiver<GenResponse>), ApiError> {
+        if self.queues.supervision.is_draining() {
+            return Err(ApiError::draining(self.retry_hint_ms()));
+        }
         if let Some(rc) = &self.router {
             let outlook = self.router_outlook(req.media.images);
             let budget = if req.deadline_ms == 0 {
@@ -229,6 +255,18 @@ impl EpdEngine {
     pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
         let (tx, rx) = sync_channel(1);
         let id = req.id;
+        if self.queues.supervision.is_draining() {
+            // Drain: intake is closed. The request is rejected before it
+            // is counted as submitted, so the termination ledger
+            // (`finished + failed == submitted`) is unaffected.
+            let _ = tx.try_send(GenResponse::Failed(GenFailure {
+                id,
+                reason: FailReason::Draining,
+                retries: 0,
+                latency: 0.0,
+            }));
+            return rx;
+        }
         self.metrics.on_arrival(id);
 
         let text_tokens: Vec<i32> = tokenizer::encode(&req.prompt)[1..] // drop BOS (layout adds it)
@@ -273,15 +311,20 @@ impl EpdEngine {
         };
         let shards_total = plan.num_shards().max(1);
 
-        let ctx = Arc::new(ReqCtx::new(
-            id,
-            req.images,
-            text_tokens,
-            req.max_tokens,
-            media_hash,
-            shards_total,
-            tx,
-        ));
+        let ctx = Arc::new(
+            ReqCtx::new(
+                id,
+                req.images,
+                text_tokens,
+                req.max_tokens,
+                media_hash,
+                shards_total,
+                tx,
+            )
+            .with_seed(req.seed)
+            .with_deadline_ms(req.deadline_ms),
+        );
+        self.queues.supervision.track(&ctx);
 
         if tiles == 0 {
             // Text-only: straight to prefill with zero MM tokens.
@@ -291,7 +334,7 @@ impl EpdEngine {
 
         if let Some(h) = media_hash {
             let cached = {
-                let mut cache = self.queues.encoder_cache.lock().unwrap();
+                let mut cache = lock_clean(&self.queues.encoder_cache);
                 if cache.lookup_pin(h).is_some() {
                     let payload = cache.payload(h);
                     // The Arc clone keeps the tokens alive independently
@@ -319,17 +362,15 @@ impl EpdEngine {
 
         // Generate synthetic patch data per tile (the "image"): content is
         // a pure function of the caller-provided seed, so identical
-        // requests reproduce identical tokens regardless of request id.
-        let mut rng = Rng::new(req.seed);
-        let per_tile = 64 * 192; // num_patches × patch_dim
+        // requests reproduce identical tokens regardless of request id —
+        // and the monolithic degrade path can regenerate the exact bytes
+        // from (seed, tiles) alone.
+        let all = synth_patches(req.seed, tiles);
         let mut tile_cursor = 0u32;
         for (shard, &shard_tiles) in plan.tiles_per_shard.iter().enumerate() {
-            let mut patches = Vec::with_capacity((shard_tiles as usize) * per_tile);
-            for _ in 0..shard_tiles {
-                for _ in 0..per_tile {
-                    patches.push(rng.f64() as f32);
-                }
-            }
+            let lo = tile_cursor as usize * PATCHES_PER_TILE;
+            let hi = lo + shard_tiles as usize * PATCHES_PER_TILE;
+            let patches = all[lo..hi].to_vec();
             tile_cursor += shard_tiles;
             self.queues.push(
                 Stage::Encode,
@@ -347,13 +388,57 @@ impl EpdEngine {
     }
 
     /// Convenience: submit and wait (through the typed front door).
-    pub fn generate(&self, images: u32, prompt: &str, max_tokens: u32) -> Result<GenResponse> {
+    pub fn generate(&self, images: u32, prompt: &str, max_tokens: u32) -> Result<GenOutput> {
         let req = SubmitRequest::new(prompt)
             .images(images)
             .max_tokens(max_tokens)
             .seed(0x5EED);
         let (_, rx) = self.submit_request(req)?;
-        Ok(rx.recv()?)
+        self.wait(&rx, 0).map_err(anyhow::Error::from)
+    }
+
+    /// The `retry_after_ms` hint attached to retryable (503) errors.
+    fn retry_hint_ms(&self) -> u64 {
+        self.cfg.epd.retry_base_ms.max(1)
+    }
+
+    /// Wait for a submitted request's response, mapping every failure
+    /// mode to a structured [`ApiError`]:
+    ///
+    /// - a typed [`GenResponse::Failed`] maps by its [`FailReason`]
+    ///   (worker loss → 503, deadline → 504, drain → 503);
+    /// - a dropped sender (request lost with supervision off) → 503
+    ///   `worker_lost` instead of a bare channel error;
+    /// - the client-side watchdog: with `deadline_ms > 0` the wait is
+    ///   bounded by `deadline + supervise_grace_ms`, so no caller blocks
+    ///   past the deadline even if every worker wedges → 504.
+    pub fn wait(
+        &self,
+        rx: &Receiver<GenResponse>,
+        deadline_ms: u64,
+    ) -> Result<GenOutput, ApiError> {
+        let hint = self.retry_hint_ms();
+        let resp = if deadline_ms > 0 {
+            let grace = self.cfg.epd.supervise_grace_ms;
+            match rx.recv_timeout(Duration::from_millis(deadline_ms.saturating_add(grace))) {
+                Ok(r) => r,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    return Err(ApiError::deadline_exceeded(deadline_ms, hint));
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(ApiError::worker_lost(hint));
+                }
+            }
+        } else {
+            match rx.recv() {
+                Ok(r) => r,
+                Err(_) => return Err(ApiError::worker_lost(hint)),
+            }
+        };
+        match resp {
+            GenResponse::Done(out) => Ok(out),
+            GenResponse::Failed(f) => Err(f.to_api_error(deadline_ms, hint)),
+        }
     }
 
     pub fn fresh_id(&self) -> u64 {
@@ -364,8 +449,31 @@ impl EpdEngine {
         &self.queues
     }
 
-    /// Graceful shutdown: waits for instance threads.
+    /// Graceful shutdown: with `drain_timeout_ms > 0`, first drain —
+    /// close intake, keep supervising until every in-flight request
+    /// terminates (finishes or fails with a typed error), and past the
+    /// bound fail the stragglers with a structured `draining` error so
+    /// no receiver is silently dropped. Then stop instance threads.
     pub fn shutdown(mut self) {
+        let drain_ms = self.cfg.epd.drain_timeout_ms;
+        if drain_ms > 0 {
+            self.queues.supervision.begin_drain();
+            let t0 = std::time::Instant::now();
+            loop {
+                supervise_tick(&self.queues, &self.metrics, self.cfg.epd.mode);
+                let done = self.metrics.finished() as u64 + self.metrics.failed();
+                if done >= self.metrics.submitted() as u64 {
+                    break;
+                }
+                if t0.elapsed() >= Duration::from_millis(drain_ms) {
+                    for ctx in self.queues.supervision.live_requests() {
+                        fail_and_clean(&self.queues, &ctx, FailReason::Draining, &self.metrics);
+                    }
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
         self.queues.begin_shutdown();
         for c in &self.ctrls {
             let _ = c.send(Ctrl::Shutdown);
@@ -405,6 +513,13 @@ fn monitor_main(
     let mut prev_shape = (0u64, 0u64, 0u64);
     while !queues.is_shutdown() {
         std::thread::sleep(sample);
+        // Supervision pass: heartbeat staleness, crash sweeps, due
+        // retries, uncovered-stage evacuation, deadline watchdog. A
+        // no-op (five cheap checks) when supervision is off.
+        supervise_tick(&queues, &metrics, epd.mode);
+        if !epd.role_switching {
+            continue;
+        }
         let now = t0.elapsed().as_secs_f64();
         let counts = [
             queues.role_count(Stage::Encode),
@@ -461,7 +576,7 @@ fn monitor_main(
         }
         if let Some(step) = planner.tick(now, &profiler, counts, queued) {
             // Donor: any instance currently in `step.from`.
-            let roles = queues.roles.lock().unwrap().clone();
+            let roles = queues.roles_snapshot();
             if let Some(idx) = roles.iter().position(|&r| r == step.from) {
                 queues.set_role(idx, step.to);
                 let _ = ctrls[idx].send(Ctrl::Switch {
@@ -479,4 +594,21 @@ fn monitor_main(
         }
         metrics.record_reallocation(planner.stats());
     }
+}
+
+/// Patch floats per tile: num_patches × patch_dim of the tiny-lmm encoder.
+pub(crate) const PATCHES_PER_TILE: usize = 64 * 192;
+
+/// Synthetic patch payload for `tiles` tiles: a pure function of the
+/// request seed. Submit slices this buffer into IRP shards; the
+/// monolithic degrade path regenerates it whole — concatenating the
+/// shard slices always reproduces exactly these bytes.
+pub(crate) fn synth_patches(seed: u64, tiles: u32) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let n = tiles as usize * PATCHES_PER_TILE;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(rng.f64() as f32);
+    }
+    out
 }

@@ -1,0 +1,833 @@
+//! Engine supervision & recovery: deterministic fault injection
+//! ([`EngineFaultPlan`], mirroring `sim/fault.rs`'s plan/builder
+//! vocabulary), per-instance heartbeats and crash events, the per-request
+//! ownership ledger behind exactly-once redispatch, retry backoff, the
+//! deadline watchdog, and drain bookkeeping.
+//!
+//! Everything here is dormant by default: with `EpdConfig::supervise`
+//! off and no fault plan armed, claims are no-ops, the watchdog holds no
+//! requests, and the engine is bit-for-bit identical to the
+//! pre-supervision behavior (property-tested in
+//! `rust/tests/property_engine_faults.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, Weak};
+use std::time::{Duration, Instant};
+
+use log::warn;
+
+use crate::core::config::EpdConfig;
+use crate::core::stage::Stage;
+use crate::core::topology::DeploymentMode;
+use crate::metrics::recorder::MetricsRecorder;
+use crate::util::rng::Rng;
+
+use super::instance::pull_stages;
+use super::job::{FailReason, GenFailure, GenResponse, Job, ReqCtx};
+use super::queues::StageQueues;
+
+/// Jitter stream for retry backoff when no fault seed is armed.
+const DEFAULT_JITTER_SEED: u64 = 0x5EED_CAFE;
+
+/// Lock a mutex, recovering the guard from a poisoned lock. A panicking
+/// worker is a *crash event* under supervision, not a reason to cascade
+/// panics through every thread that shares the fabric.
+pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// A seeded worker kill: the instance panics when it picks up its next
+/// EP/decode work after completing `after_jobs` jobs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KillFault {
+    pub instance: usize,
+    pub after_jobs: u64,
+}
+
+/// A slow-worker (straggler) injection: every popped job on the instance
+/// is delayed by `delay_ms` before execution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlowFault {
+    pub instance: usize,
+    pub delay_ms: u64,
+}
+
+/// One injected streamed-handoff error: the instance's next streamed
+/// EP/PD emission after `after_jobs` jobs fails, degrading that request
+/// to the monolithic path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HandoffFault {
+    pub instance: usize,
+    pub after_jobs: u64,
+}
+
+/// Deterministic engine-side fault plan (the engine analogue of
+/// `sim::fault::FaultPlan`): seeded worker kills, handoff errors, and
+/// slow workers, resolved to per-instance injection points at engine
+/// start. Default is empty — bit-for-bit dormant.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct EngineFaultPlan {
+    pub seed: u64,
+    pub kills: Vec<KillFault>,
+    pub slows: Vec<SlowFault>,
+    pub handoffs: Vec<HandoffFault>,
+}
+
+impl EngineFaultPlan {
+    /// The empty (dormant) plan.
+    pub fn none() -> EngineFaultPlan {
+        EngineFaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty() && self.slows.is_empty() && self.handoffs.is_empty()
+    }
+
+    pub fn with_kill(mut self, instance: usize, after_jobs: u64) -> EngineFaultPlan {
+        self.kills.push(KillFault { instance, after_jobs });
+        self
+    }
+
+    pub fn with_slow(mut self, instance: usize, delay_ms: u64) -> EngineFaultPlan {
+        self.slows.push(SlowFault { instance, delay_ms });
+        self
+    }
+
+    pub fn with_handoff_error(mut self, instance: usize, after_jobs: u64) -> EngineFaultPlan {
+        self.handoffs.push(HandoffFault { instance, after_jobs });
+        self
+    }
+
+    /// Seeded kill wave over `instances` workers: a shuffled subset of
+    /// `kills` instances (never all of them — recovery needs at least one
+    /// survivor) dies, staggered one job apart starting at `after_jobs`.
+    /// Seed 0 disarms the wave.
+    pub fn wave(seed: u64, instances: usize, kills: u32, after_jobs: u64) -> EngineFaultPlan {
+        let mut plan = EngineFaultPlan { seed, ..EngineFaultPlan::default() };
+        if seed == 0 || instances == 0 {
+            return plan;
+        }
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..instances).collect();
+        rng.shuffle(&mut order);
+        let n_kills = (kills as usize).min(instances.saturating_sub(1));
+        for (k, &idx) in order.iter().take(n_kills).enumerate() {
+            plan = plan.with_kill(idx, after_jobs + k as u64);
+        }
+        plan
+    }
+
+    /// Resolve the plan from `EpdConfig::engine_fault_*`. Seed 0 (the
+    /// default) yields the empty plan; slow and handoff injections land
+    /// on the shuffled instances after the killed ones.
+    pub fn from_epd(epd: &EpdConfig) -> EngineFaultPlan {
+        let n = epd.instances.len();
+        if epd.engine_fault_seed == 0 || n == 0 {
+            return EngineFaultPlan::none();
+        }
+        let mut plan =
+            EngineFaultPlan::wave(epd.engine_fault_seed, n, epd.engine_fault_kills, epd.engine_fault_after_jobs);
+        let mut rng = Rng::new(epd.engine_fault_seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let killed = plan.kills.len();
+        if epd.engine_fault_slow_ms > 0 {
+            plan = plan.with_slow(order[killed % n], epd.engine_fault_slow_ms);
+        }
+        for h in 0..epd.engine_fault_handoff_errors as usize {
+            plan = plan.with_handoff_error(order[(killed + h) % n], epd.engine_fault_after_jobs);
+        }
+        plan
+    }
+
+    /// Drop faults aimed at instances that don't exist.
+    pub fn clamp_instances(mut self, n: usize) -> EngineFaultPlan {
+        self.kills.retain(|f| f.instance < n);
+        self.slows.retain(|f| f.instance < n);
+        self.handoffs.retain(|f| f.instance < n);
+        self
+    }
+
+    /// Job count after which `instance` is killed (min across entries).
+    pub fn kill_after(&self, instance: usize) -> Option<u64> {
+        self.kills.iter().filter(|f| f.instance == instance).map(|f| f.after_jobs).min()
+    }
+
+    /// Per-job delay for `instance` (max across entries; 0 = none).
+    pub fn slow_ms(&self, instance: usize) -> u64 {
+        self.slows.iter().filter(|f| f.instance == instance).map(|f| f.delay_ms).max().unwrap_or(0)
+    }
+
+    /// Handoff-error thresholds for `instance` (one injected error each).
+    pub fn handoff_after(&self, instance: usize) -> Vec<u64> {
+        self.handoffs.iter().filter(|f| f.instance == instance).map(|f| f.after_jobs).collect()
+    }
+}
+
+/// A structured crash event, produced when a worker thread panics, fails
+/// to initialize, or misses its heartbeat.
+#[derive(Debug, Clone)]
+pub struct CrashEvent {
+    pub instance: usize,
+    pub reason: String,
+}
+
+struct LedgerEntry {
+    instance: usize,
+    job: Job,
+}
+
+#[derive(Default)]
+struct LedgerInner {
+    next: u64,
+    entries: HashMap<u64, LedgerEntry>,
+}
+
+/// Per-request ownership ledger: every job an instance is executing is
+/// claimed here, so a dead instance's in-flight work can be swept and
+/// re-dispatched to a same-kind sibling exactly once. Tokens are
+/// process-unique; `None` tokens (supervision off) make every operation
+/// a no-op.
+#[derive(Default)]
+pub struct InflightLedger {
+    inner: Mutex<LedgerInner>,
+}
+
+impl InflightLedger {
+    /// Record that `instance` is executing `job`; returns the claim token.
+    pub fn claim(&self, instance: usize, job: Job) -> u64 {
+        let mut g = lock_clean(&self.inner);
+        g.next += 1;
+        let token = g.next;
+        g.entries.insert(token, LedgerEntry { instance, job });
+        token
+    }
+
+    /// Replace a claim's job snapshot (e.g. a reassembled chunk promoted
+    /// to its merged job) so a crash replays the *current* work, not a
+    /// stage the request already passed.
+    pub fn update(&self, token: Option<u64>, job: Job) {
+        if let Some(t) = token {
+            let mut g = lock_clean(&self.inner);
+            if let Some(e) = g.entries.get_mut(&t) {
+                e.job = job;
+            }
+        }
+    }
+
+    /// Drop a claim (the job completed or was handed off).
+    pub fn release(&self, token: Option<u64>) {
+        if let Some(t) = token {
+            lock_clean(&self.inner).entries.remove(&t);
+        }
+    }
+
+    /// Remove and return a claim's job snapshot (the failure path: the
+    /// caller decides between retry and terminal failure).
+    pub fn take(&self, token: Option<u64>) -> Option<Job> {
+        let t = token?;
+        lock_clean(&self.inner).entries.remove(&t).map(|e| e.job)
+    }
+
+    /// Remove and return every job claimed by a (dead) instance.
+    pub fn sweep_instance(&self, instance: usize) -> Vec<Job> {
+        let mut g = lock_clean(&self.inner);
+        let tokens: Vec<u64> = g
+            .entries
+            .iter()
+            .filter(|(_, e)| e.instance == instance)
+            .map(|(&t, _)| t)
+            .collect();
+        tokens.into_iter().filter_map(|t| g.entries.remove(&t)).map(|e| e.job).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        lock_clean(&self.inner).entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+struct RetryItem {
+    due: Instant,
+    job: Job,
+}
+
+/// The supervision state shared through [`StageQueues`]: heartbeats,
+/// liveness, crash events, the ownership ledger, the delayed-retry queue,
+/// the deadline watchdog registry, and the drain flag.
+pub struct Supervision {
+    enabled: bool,
+    pub heartbeat_ms: u64,
+    pub grace_ms: u64,
+    pub retry_limit: u32,
+    pub retry_base_ms: u64,
+    jitter_seed: u64,
+    track_requests: bool,
+    t0: Instant,
+    /// Last heartbeat per instance, ms since `t0`.
+    beats: Vec<AtomicU64>,
+    alive: Vec<AtomicBool>,
+    crashes: Mutex<Vec<CrashEvent>>,
+    pub ledger: InflightLedger,
+    retries: Mutex<Vec<RetryItem>>,
+    watch: Mutex<Vec<Weak<ReqCtx>>>,
+    draining: AtomicBool,
+}
+
+impl Supervision {
+    /// Supervision off: every claim/track/scan is a no-op. This is the
+    /// default wiring (`EpdConfig::supervise = false`).
+    pub fn disabled(instances: usize) -> Supervision {
+        Supervision {
+            enabled: false,
+            heartbeat_ms: 0,
+            grace_ms: 0,
+            retry_limit: 0,
+            retry_base_ms: 1,
+            jitter_seed: DEFAULT_JITTER_SEED,
+            track_requests: false,
+            t0: Instant::now(),
+            beats: (0..instances).map(|_| AtomicU64::new(0)).collect(),
+            alive: (0..instances).map(|_| AtomicBool::new(true)).collect(),
+            crashes: Mutex::new(Vec::new()),
+            ledger: InflightLedger::default(),
+            retries: Mutex::new(Vec::new()),
+            watch: Mutex::new(Vec::new()),
+            draining: AtomicBool::new(false),
+        }
+    }
+
+    /// Resolve from `EpdConfig::{supervise, supervise_heartbeat_ms,
+    /// supervise_grace_ms, retry_limit, retry_base_ms, drain_timeout_ms,
+    /// engine_fault_seed}`.
+    pub fn from_epd(epd: &EpdConfig, instances: usize) -> Supervision {
+        let mut s = Supervision::disabled(instances);
+        s.enabled = epd.supervise;
+        s.heartbeat_ms = epd.supervise_heartbeat_ms;
+        s.grace_ms = epd.supervise_grace_ms;
+        s.retry_limit = epd.retry_limit;
+        s.retry_base_ms = epd.retry_base_ms.max(1);
+        s.track_requests = epd.supervise || epd.drain_timeout_ms > 0;
+        if epd.engine_fault_seed != 0 {
+            s.jitter_seed = epd.engine_fault_seed;
+        }
+        s
+    }
+
+    /// Whether active recovery (claims, heartbeat scans, watchdog) is on.
+    pub fn active(&self) -> bool {
+        self.enabled
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.t0.elapsed().as_millis() as u64
+    }
+
+    /// Record a liveness heartbeat for `instance`.
+    pub fn beat(&self, instance: usize) {
+        if let Some(b) = self.beats.get(instance) {
+            b.store(self.now_ms(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn is_alive(&self, instance: usize) -> bool {
+        self.alive.get(instance).map_or(true, |a| a.load(Ordering::SeqCst))
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|a| a.load(Ordering::SeqCst)).count()
+    }
+
+    pub fn any_dead(&self) -> bool {
+        self.alive_count() < self.alive.len()
+    }
+
+    /// Mark `instance` dead; returns whether it was alive (first death).
+    pub fn mark_dead(&self, instance: usize) -> bool {
+        self.alive.get(instance).is_some_and(|a| a.swap(false, Ordering::SeqCst))
+    }
+
+    /// Convert a worker death into a structured crash event. Idempotent
+    /// per instance: only the first death produces an event (returns
+    /// true); a heartbeat timeout followed by the panic landing, or vice
+    /// versa, counts once.
+    pub fn on_crash(&self, instance: usize, reason: &str) -> bool {
+        if !self.mark_dead(instance) {
+            return false;
+        }
+        warn!("instance {instance} crashed: {reason}");
+        lock_clean(&self.crashes)
+            .push(CrashEvent { instance, reason: reason.to_string() });
+        true
+    }
+
+    /// Drain pending crash events (the supervisor tick owns recovery).
+    pub fn take_crashes(&self) -> Vec<CrashEvent> {
+        std::mem::take(&mut *lock_clean(&self.crashes))
+    }
+
+    /// Alive instances whose last heartbeat is older than
+    /// `supervise_heartbeat_ms` (empty when supervision is off).
+    pub fn stale_instances(&self) -> Vec<usize> {
+        if !self.enabled || self.heartbeat_ms == 0 {
+            return Vec::new();
+        }
+        let now = self.now_ms();
+        self.beats
+            .iter()
+            .enumerate()
+            .filter(|(i, b)| {
+                self.is_alive(*i) && now.saturating_sub(b.load(Ordering::Relaxed)) > self.heartbeat_ms
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Claim ownership of `job` for `instance`; `None` when supervision
+    /// is off (claims would be bookkeeping nobody sweeps).
+    pub fn claim(&self, instance: usize, job: &Job) -> Option<u64> {
+        if !self.enabled {
+            return None;
+        }
+        Some(self.ledger.claim(instance, job.clone()))
+    }
+
+    pub fn release(&self, token: Option<u64>) {
+        self.ledger.release(token);
+    }
+
+    /// Deterministic exponential backoff for attempt `attempt` (1-based)
+    /// of request `id`: `retry_base_ms << (attempt-1)` plus seeded jitter
+    /// below `retry_base_ms` — a pure function of (seed, id, attempt).
+    pub fn backoff_ms(&self, id: u64, attempt: u32) -> u64 {
+        let base = self.retry_base_ms.max(1);
+        let shift = attempt.saturating_sub(1).min(6);
+        let jitter =
+            Rng::new(self.jitter_seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ attempt as u64)
+                .below(base);
+        base.saturating_mul(1u64 << shift) + jitter
+    }
+
+    /// Queue `job` for redispatch after the attempt's backoff delay.
+    pub fn schedule_retry(&self, job: Job, attempt: u32) {
+        let delay = self.backoff_ms(job.ctx().id, attempt);
+        lock_clean(&self.retries)
+            .push(RetryItem { due: Instant::now() + Duration::from_millis(delay), job });
+    }
+
+    /// Take every retry whose backoff has elapsed.
+    pub fn due_retries(&self) -> Vec<Job> {
+        let mut q = lock_clean(&self.retries);
+        let now = Instant::now();
+        let mut due = Vec::new();
+        let mut i = 0;
+        while i < q.len() {
+            if q[i].due <= now {
+                due.push(q.swap_remove(i).job);
+            } else {
+                i += 1;
+            }
+        }
+        due
+    }
+
+    pub fn retries_pending(&self) -> usize {
+        lock_clean(&self.retries).len()
+    }
+
+    /// Register a request with the deadline watchdog / drain registry.
+    pub fn track(&self, ctx: &Arc<ReqCtx>) {
+        if self.track_requests {
+            lock_clean(&self.watch).push(Arc::downgrade(ctx));
+        }
+    }
+
+    /// Requests past `deadline + grace` that have not yet terminated.
+    /// Terminated and dropped entries are pruned as a side effect.
+    pub fn expired_watches(&self) -> Vec<Arc<ReqCtx>> {
+        let mut expired = Vec::new();
+        let mut w = lock_clean(&self.watch);
+        w.retain(|weak| match weak.upgrade() {
+            Some(ctx) => {
+                if ctx.is_terminated() {
+                    return false;
+                }
+                if ctx.past_deadline_with_grace(self.grace_ms) {
+                    expired.push(ctx);
+                    return false;
+                }
+                true
+            }
+            None => false,
+        });
+        expired
+    }
+
+    /// Every live (unterminated) tracked request — the drain fail-all set.
+    pub fn live_requests(&self) -> Vec<Arc<ReqCtx>> {
+        let mut live = Vec::new();
+        let mut w = lock_clean(&self.watch);
+        w.retain(|weak| match weak.upgrade() {
+            Some(ctx) => {
+                if ctx.is_terminated() {
+                    return false;
+                }
+                live.push(Arc::clone(&ctx));
+                true
+            }
+            None => false,
+        });
+        live
+    }
+
+    /// Stop intake: new submits are refused with a structured error.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+}
+
+/// Terminate a request with a typed failure. Exactly-once by the
+/// terminated CAS: if the request already finished or failed, this is a
+/// no-op (no double send, no double count).
+pub fn fail_request(ctx: &Arc<ReqCtx>, reason: FailReason, metrics: &MetricsRecorder) {
+    if !ctx.try_terminate() {
+        return;
+    }
+    match &reason {
+        FailReason::WorkerLost | FailReason::Runtime(_) => metrics.on_request_lost(),
+        FailReason::DeadlineExceeded => metrics.on_deadline_exceeded(),
+        FailReason::Draining => metrics.on_drain_failed(),
+    }
+    let failure = GenFailure {
+        id: ctx.id,
+        reason,
+        retries: ctx.retry_count(),
+        latency: ctx.arrival.elapsed().as_secs_f64(),
+    };
+    warn!("request {} failed: {}", ctx.id, failure.reason.code());
+    // Receiver may have gone away (fire-and-forget submits) — ignore.
+    let _ = ctx.done_tx.try_send(GenResponse::Failed(failure));
+}
+
+/// [`fail_request`] plus fabric cleanup: cancel the request's remaining
+/// queued jobs (stage boundaries skip cancelled work) and drop its
+/// partial reassembly state from both streamed edges.
+pub fn fail_and_clean(
+    queues: &StageQueues,
+    ctx: &Arc<ReqCtx>,
+    reason: FailReason,
+    metrics: &MetricsRecorder,
+) {
+    ctx.cancel();
+    queues.reassembly.abort(ctx.id);
+    queues.kv_reassembly.abort(ctx.id);
+    fail_request(ctx, reason, metrics);
+}
+
+/// Failure path for an owned job: retry from the ledger snapshot while
+/// the request has budget, otherwise fail it terminally. With
+/// supervision off the token is `None` and the request fails immediately
+/// (typed — never a silent drop).
+pub fn recover_or_fail(
+    queues: &StageQueues,
+    metrics: &MetricsRecorder,
+    token: Option<u64>,
+    ctx: &Arc<ReqCtx>,
+    what: &str,
+) {
+    let sup = &queues.supervision;
+    if let Some(job) = sup.ledger.take(token) {
+        if sup.active() && ctx.retry_count() < sup.retry_limit {
+            let attempt = ctx.note_retry();
+            metrics.on_request_retried();
+            sup.schedule_retry(job, attempt);
+            return;
+        }
+    }
+    fail_and_clean(queues, ctx, FailReason::Runtime(what.to_string()), metrics);
+}
+
+/// Whether any alive instance pulls `stage` under `mode` — a swept job
+/// only retries if a same-kind sibling exists to execute it.
+fn stage_covered(queues: &StageQueues, mode: DeploymentMode, stage: Stage) -> bool {
+    let roles = queues.roles_snapshot();
+    roles
+        .iter()
+        .enumerate()
+        .any(|(i, &r)| queues.supervision.is_alive(i) && pull_stages(mode, r).contains(&stage))
+}
+
+/// One supervisor pass, run from the monitor loop (and from the drain
+/// loop in `shutdown`): heartbeat scan → crash sweep & redispatch → due
+/// retries → orphaned-queue evacuation → deadline watchdog.
+pub fn supervise_tick(queues: &StageQueues, metrics: &MetricsRecorder, mode: DeploymentMode) {
+    let sup = &queues.supervision;
+
+    // 1. Heartbeat scan: silent workers become synthetic crash events.
+    for idx in sup.stale_instances() {
+        if sup.on_crash(idx, &format!("no heartbeat for {} ms", sup.heartbeat_ms)) {
+            metrics.on_crash();
+        }
+    }
+
+    // 2. Crash sweep: re-dispatch a dead instance's claimed work to a
+    // same-kind sibling (exactly once — sweeping removes the claim).
+    // Decode-side jobs count as re-targets (the engine analogue of the
+    // simulator's reserved-stream `pd_retarget`), encode/prefill as
+    // retries.
+    for ev in sup.take_crashes() {
+        for job in sup.ledger.sweep_instance(ev.instance) {
+            let ctx = Arc::clone(job.ctx());
+            if ctx.is_terminated() || ctx.is_cancelled() {
+                continue;
+            }
+            let stage = job.stage();
+            if !stage_covered(queues, mode, stage) {
+                fail_and_clean(queues, &ctx, FailReason::WorkerLost, metrics);
+                continue;
+            }
+            if sup.active() && ctx.retry_count() < sup.retry_limit {
+                let attempt = ctx.note_retry();
+                if matches!(stage, Stage::Decode) {
+                    metrics.on_request_retargeted();
+                } else {
+                    metrics.on_request_retried();
+                }
+                sup.schedule_retry(job, attempt);
+            } else {
+                fail_and_clean(queues, &ctx, FailReason::WorkerLost, metrics);
+            }
+        }
+    }
+
+    // 3. Push due retries back onto the fabric (a sibling pulls them).
+    for job in sup.due_retries() {
+        let ctx = Arc::clone(job.ctx());
+        if ctx.is_terminated() || ctx.is_cancelled() {
+            continue;
+        }
+        let stage = job.stage();
+        if stage_covered(queues, mode, stage) {
+            queues.push(stage, job);
+        } else {
+            fail_and_clean(queues, &ctx, FailReason::WorkerLost, metrics);
+        }
+    }
+
+    // 4. Evacuate queues no alive instance serves: unclaimed jobs headed
+    // for a dead stage would otherwise hang their receivers forever.
+    if sup.active() && sup.any_dead() {
+        for stage in Stage::ALL {
+            if !stage_covered(queues, mode, stage) {
+                while let Some(job) = queues.try_pop(&[stage]) {
+                    let ctx = Arc::clone(job.ctx());
+                    if !ctx.is_terminated() {
+                        fail_and_clean(queues, &ctx, FailReason::WorkerLost, metrics);
+                    }
+                }
+            }
+        }
+    }
+
+    // 5. Deadline watchdog: no receiver blocks past `deadline + grace`,
+    // even if every stage boundary was already passed.
+    for ctx in sup.expired_watches() {
+        fail_and_clean(queues, &ctx, FailReason::DeadlineExceeded, metrics);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::topology::Topology;
+    use std::sync::mpsc::sync_channel;
+
+    fn ctx(id: u64) -> Arc<ReqCtx> {
+        let (tx, _rx) = sync_channel(1);
+        Arc::new(ReqCtx::new(id, 0, vec![], 4, None, 1, tx))
+    }
+
+    fn job(id: u64) -> Job {
+        Job::Prefill { ctx: ctx(id), mm: Arc::new(vec![]) }
+    }
+
+    #[test]
+    fn wave_is_deterministic_and_bounded() {
+        let a = EngineFaultPlan::wave(7, 5, 2, 3);
+        let b = EngineFaultPlan::wave(7, 5, 2, 3);
+        assert_eq!(a, b);
+        assert_eq!(a.kills.len(), 2);
+        assert!(a.kills.iter().all(|k| k.instance < 5));
+        // Never kills every instance.
+        let all = EngineFaultPlan::wave(7, 3, 99, 0);
+        assert_eq!(all.kills.len(), 2);
+        // Seed 0 disarms.
+        assert!(EngineFaultPlan::wave(0, 5, 2, 3).is_empty());
+    }
+
+    #[test]
+    fn default_config_yields_dormant_plan() {
+        let epd = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
+        assert_eq!(epd.engine_fault_seed, 0);
+        assert!(EngineFaultPlan::from_epd(&epd).is_empty());
+    }
+
+    #[test]
+    fn plan_resolution_per_instance() {
+        let plan = EngineFaultPlan::none()
+            .with_kill(1, 4)
+            .with_kill(1, 2)
+            .with_slow(0, 9)
+            .with_handoff_error(2, 1)
+            .with_handoff_error(2, 5);
+        assert_eq!(plan.kill_after(1), Some(2));
+        assert_eq!(plan.kill_after(0), None);
+        assert_eq!(plan.slow_ms(0), 9);
+        assert_eq!(plan.slow_ms(1), 0);
+        assert_eq!(plan.handoff_after(2), vec![1, 5]);
+        let clamped = plan.clamp_instances(2);
+        assert!(clamped.handoffs.is_empty());
+        assert_eq!(clamped.kills.len(), 2);
+    }
+
+    #[test]
+    fn ledger_claim_release_take_sweep() {
+        let l = InflightLedger::default();
+        let t1 = l.claim(0, job(1));
+        let t2 = l.claim(0, job(2));
+        let t3 = l.claim(1, job(3));
+        assert_eq!(l.len(), 3);
+        l.release(Some(t1));
+        assert_eq!(l.len(), 2);
+        let taken = l.take(Some(t2)).expect("claimed job");
+        assert_eq!(taken.ctx().id, 2);
+        assert!(l.take(Some(t2)).is_none(), "take is exactly-once");
+        let swept = l.sweep_instance(0);
+        assert!(swept.is_empty(), "instance 0 has no claims left");
+        let swept = l.sweep_instance(1);
+        assert_eq!(swept.len(), 1);
+        assert_eq!(swept[0].ctx().id, 3);
+        assert_eq!(l.len(), 0);
+        let _ = t3;
+    }
+
+    #[test]
+    fn disabled_supervision_claims_nothing() {
+        let s = Supervision::disabled(2);
+        assert!(!s.active());
+        assert!(s.claim(0, &job(1)).is_none());
+        assert!(s.ledger.is_empty());
+        assert!(s.stale_instances().is_empty());
+        s.track(&ctx(1));
+        assert!(s.live_requests().is_empty(), "tracking off by default");
+    }
+
+    #[test]
+    fn crash_events_dedupe_per_instance() {
+        let s = Supervision::disabled(2);
+        assert!(s.on_crash(0, "panic"));
+        assert!(!s.on_crash(0, "heartbeat"), "second death is a no-op");
+        assert!(!s.is_alive(0));
+        assert!(s.is_alive(1));
+        assert_eq!(s.take_crashes().len(), 1);
+        assert!(s.take_crashes().is_empty());
+        assert_eq!(s.alive_count(), 1);
+        assert!(s.any_dead());
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_exponential() {
+        let epd = {
+            let mut e = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
+            e.supervise = true;
+            e.retry_base_ms = 8;
+            e
+        };
+        let s = Supervision::from_epd(&epd, 3);
+        assert!(s.active());
+        let a1 = s.backoff_ms(42, 1);
+        assert_eq!(a1, s.backoff_ms(42, 1), "pure function of (id, attempt)");
+        assert!((8..16).contains(&a1), "base + jitter below base: {a1}");
+        let a3 = s.backoff_ms(42, 3);
+        assert!((32..40).contains(&a3), "8 << 2 + jitter: {a3}");
+    }
+
+    #[test]
+    fn heartbeat_staleness_detection() {
+        let mut epd = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
+        epd.supervise = true;
+        epd.supervise_heartbeat_ms = 20;
+        let s = Supervision::from_epd(&epd, 2);
+        s.beat(0);
+        s.beat(1);
+        assert!(s.stale_instances().is_empty());
+        std::thread::sleep(Duration::from_millis(40));
+        s.beat(1);
+        assert_eq!(s.stale_instances(), vec![0]);
+    }
+
+    #[test]
+    fn retry_queue_respects_backoff() {
+        let mut epd = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
+        epd.supervise = true;
+        epd.retry_base_ms = 30;
+        let s = Supervision::from_epd(&epd, 1);
+        s.schedule_retry(job(1), 1);
+        assert_eq!(s.retries_pending(), 1);
+        assert!(s.due_retries().is_empty(), "backoff not yet elapsed");
+        std::thread::sleep(Duration::from_millis(70));
+        assert_eq!(s.due_retries().len(), 1);
+        assert_eq!(s.retries_pending(), 0);
+    }
+
+    #[test]
+    fn fail_request_is_exactly_once() {
+        let (tx, rx) = sync_channel(2);
+        let c = Arc::new(ReqCtx::new(9, 0, vec![], 4, None, 1, tx));
+        let m = MetricsRecorder::new();
+        fail_request(&c, FailReason::WorkerLost, &m);
+        fail_request(&c, FailReason::DeadlineExceeded, &m);
+        let first = rx.try_recv().expect("one failure response");
+        match first {
+            GenResponse::Failed(f) => assert!(matches!(f.reason, FailReason::WorkerLost)),
+            GenResponse::Done(_) => panic!("expected failure"),
+        }
+        assert!(rx.try_recv().is_err(), "second failure suppressed");
+        assert_eq!(m.failed(), 1);
+        assert_eq!(m.requests_lost(), 1);
+        assert_eq!(m.deadline_exceeded(), 0);
+    }
+
+    #[test]
+    fn watchdog_expires_past_deadline_plus_grace() {
+        let mut epd = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
+        epd.supervise = true;
+        epd.supervise_grace_ms = 10;
+        let s = Supervision::from_epd(&epd, 1);
+        let (tx, _rx) = sync_channel(1);
+        let c = Arc::new(ReqCtx::new(5, 0, vec![], 4, None, 1, tx).with_deadline_ms(15));
+        s.track(&c);
+        assert!(s.expired_watches().is_empty());
+        std::thread::sleep(Duration::from_millis(40));
+        let expired = s.expired_watches();
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].id, 5);
+        assert!(s.expired_watches().is_empty(), "expired entries pruned");
+    }
+
+    #[test]
+    fn drain_flag() {
+        let s = Supervision::disabled(1);
+        assert!(!s.is_draining());
+        s.begin_drain();
+        assert!(s.is_draining());
+    }
+}

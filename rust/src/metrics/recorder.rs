@@ -65,6 +65,23 @@ pub struct MetricsRecorder {
     released_steps: AtomicU64,
     blocked_steps: AtomicU64,
     aborted_plans: AtomicU64,
+    /// Supervision & recovery counters (named for parity with the
+    /// simulator's `ResilienceStats` so sim and engine dashboards line
+    /// up): worker crashes observed by the supervisor, requests
+    /// terminally lost to worker death, swept/errored work re-dispatched
+    /// to an encode/prefill sibling, decode-side work re-targeted after
+    /// a crash, deadline (504) cancellations, per-request degradations
+    /// to the monolithic path, requests failed by the drain bound, and
+    /// total typed failures (the `finished + failed == submitted`
+    /// ledger's failure side).
+    crashes: AtomicU64,
+    requests_lost: AtomicU64,
+    requests_retried: AtomicU64,
+    requests_retargeted: AtomicU64,
+    deadline_exceeded: AtomicU64,
+    degraded_fallbacks: AtomicU64,
+    drain_failed: AtomicU64,
+    failed: AtomicU64,
 }
 
 impl MetricsRecorder {
@@ -241,6 +258,83 @@ impl MetricsRecorder {
         }
     }
 
+    /// Record a worker crash (panic or heartbeat death) observed by the
+    /// supervisor. Deduplicated upstream: one per instance death.
+    pub fn on_crash(&self) {
+        self.crashes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a request terminally failed by worker loss (recovery
+    /// exhausted or no same-kind sibling left).
+    pub fn on_request_lost(&self) {
+        self.requests_lost.fetch_add(1, Ordering::Relaxed);
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one swept or errored work item re-dispatched to a sibling.
+    pub fn on_request_retried(&self) {
+        self.requests_retried.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one decode-side work item re-targeted after a crash (the
+    /// engine analogue of the simulator's streamed-PD re-reservation).
+    pub fn on_request_retargeted(&self) {
+        self.requests_retargeted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a request cancelled by its `deadline_ms` (504).
+    pub fn on_deadline_exceeded(&self) {
+        self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a per-request fall-back from a streamed handoff to the
+    /// monolithic path (graceful degradation, not a failure).
+    pub fn on_degraded_fallback(&self) {
+        self.degraded_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a request failed because the drain bound elapsed.
+    pub fn on_drain_failed(&self) {
+        self.drain_failed.fetch_add(1, Ordering::Relaxed);
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn crashes(&self) -> u64 {
+        self.crashes.load(Ordering::Relaxed)
+    }
+
+    pub fn requests_lost(&self) -> u64 {
+        self.requests_lost.load(Ordering::Relaxed)
+    }
+
+    pub fn requests_retried(&self) -> u64 {
+        self.requests_retried.load(Ordering::Relaxed)
+    }
+
+    pub fn requests_retargeted(&self) -> u64 {
+        self.requests_retargeted.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline_exceeded(&self) -> u64 {
+        self.deadline_exceeded.load(Ordering::Relaxed)
+    }
+
+    pub fn degraded_fallbacks(&self) -> u64 {
+        self.degraded_fallbacks.load(Ordering::Relaxed)
+    }
+
+    pub fn drain_failed(&self) -> u64 {
+        self.drain_failed.load(Ordering::Relaxed)
+    }
+
+    /// Requests that terminated with a typed failure. Together with
+    /// [`MetricsRecorder::finished`], the termination ledger:
+    /// `finished + failed == submitted` once the engine is idle.
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+
     pub fn on_arrival(&self, id: RequestId) {
         self.inner.lock().unwrap().push((
             id,
@@ -334,6 +428,7 @@ impl MetricsRecorder {
         Json::obj(vec![
             ("submitted", Json::num(self.submitted() as f64)),
             ("finished", Json::num(self.finished() as f64)),
+            ("failed", Json::num(self.failed() as f64)),
             ("ttft", s(&Summary::of(&ttfts))),
             ("tpot", s(&Summary::of(&tpots))),
             ("latency", s(&Summary::of(&lats))),
@@ -380,6 +475,21 @@ impl MetricsRecorder {
                 Json::obj(vec![
                     ("shed", Json::num(self.router_shed() as f64)),
                     ("degraded", Json::num(self.router_degraded() as f64)),
+                ]),
+            ),
+            (
+                "resilience",
+                Json::obj(vec![
+                    ("crashes", Json::num(self.crashes() as f64)),
+                    ("requests_lost", Json::num(self.requests_lost() as f64)),
+                    ("requests_retried", Json::num(self.requests_retried() as f64)),
+                    (
+                        "requests_retargeted",
+                        Json::num(self.requests_retargeted() as f64),
+                    ),
+                    ("deadline_exceeded", Json::num(self.deadline_exceeded() as f64)),
+                    ("degraded_fallbacks", Json::num(self.degraded_fallbacks() as f64)),
+                    ("drain_failed", Json::num(self.drain_failed() as f64)),
                 ]),
             ),
             ("reallocation", {
@@ -510,6 +620,38 @@ mod tests {
         let j = m.report();
         assert_eq!(j.get("reallocation").unwrap().get("plans").unwrap().as_u64(), Some(3));
         assert!(j.get("stage_busy_seconds").unwrap().get("decode").is_some());
+    }
+
+    #[test]
+    fn resilience_counters_and_report() {
+        let m = MetricsRecorder::new();
+        m.on_crash();
+        m.on_request_retried();
+        m.on_request_retried();
+        m.on_request_retargeted();
+        m.on_request_lost();
+        m.on_deadline_exceeded();
+        m.on_drain_failed();
+        m.on_degraded_fallback();
+        assert_eq!(m.crashes(), 1);
+        assert_eq!(m.requests_retried(), 2);
+        assert_eq!(m.requests_retargeted(), 1);
+        assert_eq!(m.requests_lost(), 1);
+        assert_eq!(m.deadline_exceeded(), 1);
+        assert_eq!(m.drain_failed(), 1);
+        assert_eq!(m.degraded_fallbacks(), 1);
+        // Each terminal failure kind bumps the ledger total once.
+        assert_eq!(m.failed(), 3);
+        let j = m.report();
+        assert_eq!(j.get("failed").unwrap().as_u64(), Some(3));
+        let r = j.get("resilience").unwrap();
+        assert_eq!(r.get("crashes").unwrap().as_u64(), Some(1));
+        assert_eq!(r.get("requests_retried").unwrap().as_u64(), Some(2));
+        assert_eq!(r.get("requests_retargeted").unwrap().as_u64(), Some(1));
+        assert_eq!(r.get("requests_lost").unwrap().as_u64(), Some(1));
+        assert_eq!(r.get("deadline_exceeded").unwrap().as_u64(), Some(1));
+        assert_eq!(r.get("degraded_fallbacks").unwrap().as_u64(), Some(1));
+        assert_eq!(r.get("drain_failed").unwrap().as_u64(), Some(1));
     }
 
     #[test]

@@ -38,7 +38,11 @@ fn epd_pipeline_end_to_end() {
         rxs.push((id, max_tokens, rx));
     }
     for (id, max_tokens, rx) in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(180)).expect("response");
+        let resp = rx
+            .recv_timeout(Duration::from_secs(180))
+            .expect("response")
+            .output()
+            .expect("completion, not a typed failure");
         assert_eq!(resp.id, id);
         assert_eq!(resp.tokens.len(), max_tokens as usize, "req {id}");
         assert!(resp.tokens.iter().all(|&t| (0..512).contains(&t)));
@@ -156,6 +160,41 @@ fn pd_layer_groups_reproduce_monolithic_tokens() {
     );
     assert_eq!(q.kv_reassembly.pending(), 0, "no leaked partial KV state");
     streamed.shutdown();
+}
+
+#[test]
+fn drain_shutdown_terminates_all_inflight() {
+    if !artifacts() {
+        return;
+    }
+    // Drain-mode shutdown: every in-flight request must terminate with a
+    // completion or a typed failure — no receiver is silently dropped.
+    let mut epd = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
+    epd.drain_timeout_ms = 120_000;
+    let engine = EpdEngine::start(EngineConfig::new("artifacts", epd)).unwrap();
+    let mut rxs = Vec::new();
+    for _ in 0..4 {
+        let req = SubmitRequest::new("drain me").images(1).max_tokens(6).seed(11);
+        let (_, rx) = engine.submit_request(req).unwrap();
+        rxs.push(rx);
+    }
+    let submitted = engine.metrics.submitted() as u64;
+    let metrics = Arc::clone(&engine.metrics);
+    engine.shutdown();
+    let mut terminated = 0u64;
+    for rx in rxs {
+        // Responses are buffered in the channel; after a drain they must
+        // all be present already.
+        rx.recv_timeout(Duration::from_secs(1))
+            .expect("drain resolves every receiver");
+        terminated += 1;
+    }
+    assert_eq!(terminated, 4);
+    assert_eq!(
+        metrics.finished() as u64 + metrics.failed(),
+        submitted,
+        "termination ledger holds across a drain"
+    );
 }
 
 #[test]

@@ -1,0 +1,284 @@
+//! Property tests for engine supervision & recovery (the real serving
+//! path's resilience semantics):
+//!
+//! - seeded `EngineFaultPlan` kill waves replay bit-for-bit per seed and
+//!   never kill every instance;
+//! - with all new config keys at defaults the supervision layer is
+//!   inert: no claims, no staleness, a dormant fault plan — and (under
+//!   artifacts) generated tokens are byte-identical to a supervised run
+//!   with a dormant plan;
+//! - under a seeded kill wave, every submitted request terminates
+//!   exactly once across all three deployment modes — a completion or a
+//!   typed failure, `finished + failed == submitted`, retries bounded by
+//!   `retry_limit`.
+//!
+//! Engine-executing tests are skipped when artifacts are missing
+//! (`make artifacts`); the plan/supervision properties always run.
+
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use epdserve::api::SubmitRequest;
+use epdserve::core::config::EpdConfig;
+use epdserve::core::topology::Topology;
+use epdserve::engine::job::{Job, ReqCtx};
+use epdserve::engine::serve::{EngineConfig, EpdEngine};
+use epdserve::engine::supervise::{EngineFaultPlan, Supervision};
+use epdserve::engine::GenResponse;
+
+fn artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping engine fault test: run `make artifacts`");
+    }
+    ok
+}
+
+#[test]
+fn fault_plan_is_dormant_by_default() {
+    let cfg = EpdConfig::epd(Topology::new(2, 2, 1), 1, 1, 128);
+    let plan = EngineFaultPlan::from_epd(&cfg);
+    assert!(plan.is_empty(), "default config must inject nothing");
+    for idx in 0..5 {
+        assert_eq!(plan.kill_after(idx), None);
+        assert_eq!(plan.slow_ms(idx), 0);
+        assert!(plan.handoff_after(idx).is_empty());
+    }
+}
+
+#[test]
+fn wave_plans_replay_per_seed_and_spare_a_survivor() {
+    for seed in [1u64, 7, 0xFA11, 0xC4A05, u64::MAX] {
+        for instances in 1..6usize {
+            for kills in 0..5u32 {
+                let a = EngineFaultPlan::wave(seed, instances, kills, 3);
+                let b = EngineFaultPlan::wave(seed, instances, kills, 3);
+                assert_eq!(a, b, "same seed must replay bit-for-bit");
+                let killed = (0..instances).filter(|&i| a.kill_after(i).is_some()).count();
+                assert!(
+                    killed < instances.max(1),
+                    "a wave must never kill every instance ({killed}/{instances})"
+                );
+                assert!(killed <= kills as usize);
+            }
+        }
+    }
+    // Seed zero is the documented "off" switch.
+    assert!(EngineFaultPlan::wave(0, 4, 2, 3).is_empty());
+}
+
+#[test]
+fn config_resolved_plans_follow_the_seed() {
+    let mut cfg = EpdConfig::epd(Topology::new(2, 2, 2), 1, 1, 128);
+    cfg.engine_fault_seed = 0x5EED;
+    cfg.engine_fault_kills = 2;
+    cfg.engine_fault_after_jobs = 3;
+    cfg.engine_fault_slow_ms = 9;
+    cfg.engine_fault_handoff_errors = 1;
+    let a = EngineFaultPlan::from_epd(&cfg);
+    let b = EngineFaultPlan::from_epd(&cfg);
+    assert_eq!(a, b);
+    assert!(!a.is_empty());
+    let n = cfg.instances.len();
+    let killed = (0..n).filter(|&i| a.kill_after(i).is_some()).count();
+    assert!(killed >= 1 && killed < n);
+    let slowed = (0..n).filter(|&i| a.slow_ms(i) > 0).count();
+    assert_eq!(slowed, 1, "one seeded straggler");
+    let handoffs: usize = (0..n).map(|i| a.handoff_after(i).len()).sum();
+    assert_eq!(handoffs, 1, "one seeded handoff error");
+}
+
+#[test]
+fn builder_faults_survive_instance_clamping() {
+    let plan = EngineFaultPlan::none()
+        .with_kill(5, 2)
+        .with_kill(1, 4)
+        .with_slow(6, 30)
+        .with_handoff_error(1, 0)
+        .clamp_instances(3);
+    assert_eq!(plan.kill_after(5), None, "out-of-range kill clamped away");
+    assert_eq!(plan.kill_after(1), Some(4));
+    assert_eq!(plan.slow_ms(6), 0);
+    assert_eq!(plan.handoff_after(1), vec![0]);
+}
+
+#[test]
+fn default_supervision_is_inert() {
+    let cfg = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
+    let sup = Supervision::from_epd(&cfg, 3);
+    assert!(!sup.active(), "supervision is opt-in");
+    assert!(sup.stale_instances().is_empty(), "no staleness scans when off");
+
+    // Claims are no-ops: the ledger stays empty, so the default engine
+    // does zero recovery bookkeeping per job.
+    let (tx, _rx) = sync_channel(1);
+    let ctx = Arc::new(ReqCtx::new(1, 0, vec![1, 2], 4, None, 1, tx));
+    let job = Job::Prefill { ctx, mm: Arc::new(vec![]) };
+    assert_eq!(sup.claim(0, &job), None);
+    assert!(sup.ledger.is_empty());
+}
+
+#[test]
+fn enabled_supervision_claims_and_sweeps_exactly_once() {
+    let mut cfg = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
+    cfg.supervise = true;
+    let sup = Supervision::from_epd(&cfg, 2);
+    let (tx, _rx) = sync_channel(1);
+    let ctx = Arc::new(ReqCtx::new(9, 0, vec![3], 4, None, 1, tx));
+    let job = Job::Prefill { ctx, mm: Arc::new(vec![]) };
+    let t1 = sup.claim(0, &job).expect("enabled supervision claims");
+    let t2 = sup.claim(0, &job).expect("second claim");
+    assert_ne!(t1, t2);
+    sup.release(Some(t1));
+    assert!(sup.on_crash(0, "test kill"), "first crash observed");
+    assert!(!sup.on_crash(0, "test kill"), "crash dedupe per instance");
+    let swept = sup.ledger.sweep_instance(0);
+    assert_eq!(swept.len(), 1, "released claims are not swept");
+    assert!(sup.ledger.is_empty(), "sweep drains the dead instance's work");
+}
+
+/// One engine run under a seeded kill wave; returns (submitted,
+/// finished, failed, max retries observed).
+fn run_kill_wave(mut epd: EpdConfig, n_requests: u64) -> (u64, u64, u64, u32) {
+    epd.supervise = true;
+    epd.supervise_heartbeat_ms = 0; // panics only: no false CI staleness
+    epd.retry_limit = 2;
+    epd.retry_base_ms = 5;
+    epd.sample_interval = 0.02; // brisk supervise ticks
+    epd.engine_fault_seed = 0xFA11;
+    epd.engine_fault_kills = 1;
+    epd.engine_fault_after_jobs = 2;
+    let mode = epd.mode;
+    let engine = EpdEngine::start(EngineConfig::new("artifacts", epd)).unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        let req = SubmitRequest::new("kill wave")
+            .images((i % 4) as u32)
+            .max_tokens(4 + (i % 3) as u32)
+            .seed(100 + i);
+        let (_, rx) = engine.submit_request(req).unwrap();
+        rxs.push(rx);
+    }
+    let mut finished = 0u64;
+    let mut failed = 0u64;
+    let mut max_retries = 0u32;
+    for rx in rxs {
+        // Exactly-once: every receiver resolves within the window.
+        match rx
+            .recv_timeout(Duration::from_secs(180))
+            .unwrap_or_else(|e| panic!("{mode:?}: receiver hung under kill wave: {e}"))
+        {
+            GenResponse::Done(_) => finished += 1,
+            GenResponse::Failed(f) => {
+                failed += 1;
+                max_retries = max_retries.max(f.retries);
+            }
+        }
+    }
+    let submitted = engine.metrics.submitted() as u64;
+    let m_finished = engine.metrics.finished() as u64;
+    let m_failed = engine.metrics.failed();
+    assert!(
+        engine.metrics.crashes() >= 1,
+        "{mode:?}: the seeded kill must register as a crash"
+    );
+    assert_eq!(
+        m_finished + m_failed,
+        submitted,
+        "{mode:?}: termination ledger"
+    );
+    assert_eq!(finished, m_finished, "{mode:?}: every completion delivered");
+    assert_eq!(failed, m_failed, "{mode:?}: every failure delivered");
+    engine.shutdown();
+    (submitted, finished, failed, max_retries)
+}
+
+#[test]
+fn kill_wave_terminates_every_request_exactly_once_all_modes() {
+    if !artifacts() {
+        return;
+    }
+    for epd in [
+        EpdConfig::epd(Topology::new(2, 2, 1), 1, 1, 128),
+        EpdConfig::distserve(2, 1, 1, 128),
+        EpdConfig::aggregated(3, 16),
+    ] {
+        let mode = epd.mode;
+        let (submitted, finished, failed, max_retries) = run_kill_wave(epd, 10);
+        assert_eq!(submitted, 10, "{mode:?}");
+        assert_eq!(finished + failed, 10, "{mode:?}: exactly one outcome each");
+        assert!(
+            max_retries <= 2,
+            "{mode:?}: retries ({max_retries}) exceed retry_limit"
+        );
+    }
+}
+
+#[test]
+fn dormant_plan_is_byte_identical_to_supervision_off() {
+    if !artifacts() {
+        return;
+    }
+    // Pre-PR behavior: all new keys at defaults.
+    let base = EpdConfig::epd(Topology::new(2, 1, 1), 1, 1, 128);
+    // Supervision on, fault plan dormant (seed 0): recovery machinery is
+    // armed but must never fire — greedy decode is deterministic, so the
+    // generated tokens must match bit-for-bit.
+    let mut supervised = base.clone();
+    supervised.supervise = true;
+
+    let shapes = [(0u32, 6u32), (1, 8), (3, 10)];
+    let engine_a = EpdEngine::start(EngineConfig::new("artifacts", base)).unwrap();
+    let mut tokens_a = Vec::new();
+    for &(images, max_tokens) in &shapes {
+        tokens_a.push(engine_a.generate(images, "dormancy", max_tokens).unwrap().tokens);
+    }
+    engine_a.shutdown();
+
+    let engine_b = EpdEngine::start(EngineConfig::new("artifacts", supervised)).unwrap();
+    for (i, &(images, max_tokens)) in shapes.iter().enumerate() {
+        let out = engine_b.generate(images, "dormancy", max_tokens).unwrap();
+        assert_eq!(
+            out.tokens, tokens_a[i],
+            "supervised dormant run diverged on shape {:?}",
+            shapes[i]
+        );
+    }
+    assert_eq!(engine_b.metrics.crashes(), 0);
+    assert_eq!(engine_b.metrics.failed(), 0);
+    assert_eq!(engine_b.metrics.requests_retried(), 0);
+    assert_eq!(engine_b.metrics.requests_retargeted(), 0);
+    assert_eq!(engine_b.metrics.degraded_fallbacks(), 0);
+    engine_b.shutdown();
+}
+
+#[test]
+fn deadline_failures_surface_as_typed_504s() {
+    if !artifacts() {
+        return;
+    }
+    let mut epd = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
+    epd.supervise = true;
+    epd.supervise_grace_ms = 50;
+    epd.sample_interval = 0.02;
+    let engine = EpdEngine::start(EngineConfig::new("artifacts", epd)).unwrap();
+    // An impossible deadline: 1 ms for a multimodal request. The stage
+    // boundary (or the watchdog) must cancel it with a deadline failure,
+    // and `wait` must map it to a 504 `deadline_exceeded`.
+    let req = SubmitRequest::new("too slow")
+        .images(2)
+        .max_tokens(32)
+        .seed(5)
+        .deadline_ms(1);
+    let (_, rx) = engine.submit_request(req).unwrap();
+    let err = engine.wait(&rx, 1).expect_err("1 ms deadline cannot be met");
+    assert_eq!(err.status, 504, "{err:?}");
+    assert_eq!(err.code, "deadline_exceeded");
+    assert!(err.retry_after_ms.is_some());
+    // A healthy follow-up still serves: the cancelled request released
+    // its resources.
+    let ok = engine.generate(1, "after the 504", 4).unwrap();
+    assert_eq!(ok.tokens.len(), 4);
+    engine.shutdown();
+}

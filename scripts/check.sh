@@ -24,6 +24,12 @@ cargo bench --no-run --quiet
 echo "==> cargo test"
 cargo test -q
 
+echo "==> engine supervision properties (fault-plan determinism, exactly-once, dormancy)"
+cargo test -q --test property_engine_faults
+
+echo "==> engine chaos smoke (seeded kill wave via HTTP; exit-0 skip without artifacts)"
+cargo run --release --quiet --example chaos_recovery
+
 echo "==> chaos fault-wave smoke (seeded wave through the real CLI)"
 cargo run --release --quiet -- \
   simulate --faults wave --topology 2E2P2D \

@@ -1,0 +1,183 @@
+//! Surrogate-accelerated planning A/B + scoring-throughput gate.
+//!
+//! Two claims, both on the phase-shifting workload that
+//! `perf_reallocation` established as the planner's stress regime:
+//!
+//! 1. **Quality:** `planner = "surrogate"` (GP prefilter + short-horizon
+//!    what-if evaluation) holds SLO attainment at least equal to
+//!    `planner = "predictive"` — the prefilter's honest set always
+//!    contains the analytic heuristic's pick, so it can only re-rank
+//!    with better information, never regress past it.
+//! 2. **Throughput (the gate):** tier 1 (GP scoring) evaluates **≥ 10×**
+//!    more candidates per unit time than tier 2 (honest what-if
+//!    simulation) — the headroom that lets a planning pass consider the
+//!    whole neighborhood instead of a handful of candidates.
+//!
+//! Emits `results/BENCH_planner_surrogate.json` (via `GateReport`) for
+//! `scripts/bench_json.sh` / `make bench-json`.
+
+use epdserve::coordinator::profiler::WorkloadProfile;
+use epdserve::core::config::{EpdConfig, PlannerPolicy};
+use epdserve::core::slo::Slo;
+use epdserve::core::topology::Topology;
+use epdserve::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use epdserve::optimizer::space::topology_neighborhood;
+use epdserve::optimizer::surrogate::{planner_features, SurrogateModel};
+use epdserve::optimizer::whatif::WhatIfEvaluator;
+use epdserve::sim::engine::{SimConfig, Simulator};
+use epdserve::sim::outcome::SimOutcome;
+use epdserve::util::bench::{fmt, BenchRunner, GateReport, TableReport};
+use epdserve::util::rng::Rng;
+use epdserve::workload::{PhaseShiftWorkload, Workload};
+
+/// Candidates tier 1 must score in the time tier 2 scores one.
+const GATE_RATIO: f64 = 10.0;
+/// Attainment slack for tie-level noise between the two planners.
+const ATTAINMENT_SLACK: f64 = 0.02;
+const N_REQUESTS: usize = 150;
+const TAIL_RATE: f64 = 2.5;
+
+fn mk_cfg(spec: &LmmSpec, planner: PlannerPolicy) -> SimConfig {
+    // Same slice as perf_reallocation: right for the burst, decode-starved
+    // for the tail — the planner's job is to notice and move capacity.
+    let mut epd = EpdConfig::epd(Topology::new(2, 2, 1), 1, 1, 2);
+    epd.role_switching = true;
+    epd.planner = planner;
+    epd.plan_interval = 0.5;
+    SimConfig::new(spec.clone(), DeviceSpec::a100(), epd)
+}
+
+fn run(spec: &LmmSpec, planner: PlannerPolicy) -> SimOutcome {
+    let w = PhaseShiftWorkload::default();
+    let mut rng = Rng::new(0x5EA7);
+    let reqs = w.generate(spec, N_REQUESTS, TAIL_RATE, &mut rng);
+    Simulator::run(&mk_cfg(spec, planner), &reqs)
+}
+
+/// The phase shift's tail regime, as the profiler would report it.
+fn tail_profile() -> WorkloadProfile {
+    WorkloadProfile {
+        arrival_rate: TAIL_RATE,
+        images_per_request: 0.0,
+        prompt_tokens: 64.0,
+        output_tokens: 160.0,
+        mm_tokens: 0.0,
+        service: [0.0, 0.1, 0.5],
+        queue_len: [0.0, 0.5, 12.0],
+        backlog: [0.0, 0.3, 30.0],
+        utilization: [0.05, 0.2, 1.0],
+        instances: [2, 2, 1],
+    }
+}
+
+fn main() {
+    let spec = LmmSpec::get(ModelId::MiniCpmV26);
+    let slo = Slo::new(6.0, 0.035);
+
+    // ---- Quality A/B --------------------------------------------------
+    let pred = run(&spec, PlannerPolicy::Predictive);
+    let sur = run(&spec, PlannerPolicy::Surrogate);
+    let att_pred = pred.slo_attainment(slo);
+    let att_sur = sur.slo_attainment(slo);
+
+    assert_eq!(pred.reallocation.surrogate_scored, 0, "predictive must stay dormant");
+    assert!(sur.reallocation.surrogate_scored > 0, "tier 1 never ran");
+    assert!(sur.reallocation.whatif_evals > 0, "tier 2 never ran");
+    assert!(
+        sur.reallocation.whatif_evals < sur.reallocation.surrogate_scored,
+        "the prefilter must evaluate fewer candidates than it scores: {:?}",
+        sur.reallocation
+    );
+    for (name, out) in [("predictive", &pred), ("surrogate", &sur)] {
+        assert_eq!(
+            out.finished().count() as u32 + out.rejected,
+            N_REQUESTS as u32,
+            "{name} lost requests"
+        );
+    }
+
+    // ---- Scoring throughput: tier 1 vs tier 2 ------------------------
+    let epd = EpdConfig::epd(Topology::new(2, 2, 1), 1, 1, 2);
+    let profile = tail_profile();
+    let cur = Topology::new(2, 2, 1);
+    let cands = topology_neighborhood(cur, 2, 1);
+    assert!(!cands.is_empty());
+
+    // Train the surrogate the way the planner does: one honest score per
+    // candidate, negated into the GP.
+    let mut whatif = WhatIfEvaluator::new(spec.clone(), DeviceSpec::a100(), &epd);
+    let mut model = SurrogateModel::new(2.0);
+    for &c in &cands {
+        let s = whatif.score(&profile, c);
+        model.observe(planner_features(&profile, c), -s);
+    }
+
+    let runner = BenchRunner::quick();
+    let gp = runner.time("gp_score_full_neighborhood", || {
+        let mut acc = 0.0;
+        for &c in &cands {
+            let (mu, _var) = model.predict(&planner_features(&profile, c));
+            acc += mu;
+        }
+        std::hint::black_box(acc);
+    });
+    let honest = runner.time("whatif_score_one_candidate", || {
+        std::hint::black_box(whatif.score(&profile, cands[0]));
+    });
+    println!("{}", gp.report());
+    println!("{}", honest.report());
+
+    let gp_per_cand_ns = gp.mean_ns / cands.len() as f64;
+    let ratio = honest.mean_ns / gp_per_cand_ns.max(1e-9);
+
+    let mut t = TableReport::new(
+        "perf_planner_surrogate",
+        "Surrogate planning: GP prefilter vs honest what-if evaluation (MiniCPM-V 2.6, 2E2P1D phase shift)",
+        &["metric", "predictive", "surrogate"],
+    );
+    t.row(vec!["SLO attainment".into(), fmt(att_pred, 3), fmt(att_sur, 3)]);
+    t.row(vec![
+        "plans (steps)".into(),
+        format!("{} ({})", pred.reallocation.plans, pred.reallocation.planned_steps),
+        format!("{} ({})", sur.reallocation.plans, sur.reallocation.planned_steps),
+    ]);
+    t.row(vec![
+        "candidates GP-scored".into(),
+        "0".into(),
+        sur.reallocation.surrogate_scored.to_string(),
+    ]);
+    t.row(vec![
+        "honest what-if evals".into(),
+        "0".into(),
+        sur.reallocation.whatif_evals.to_string(),
+    ]);
+    t.note(format!(
+        "tier-1 GP scoring: {} ns/candidate; tier-2 what-if: {} ns/candidate -> {:.0}x (gate >= {:.0}x)",
+        fmt(gp_per_cand_ns, 0),
+        fmt(honest.mean_ns, 0),
+        ratio,
+        GATE_RATIO
+    ));
+    t.note(format!(
+        "forced explorations (uncertainty floor): {}",
+        sur.reallocation.forced_explorations
+    ));
+    t.emit();
+
+    assert!(
+        att_sur >= att_pred - ATTAINMENT_SLACK,
+        "surrogate attainment {att_sur:.3} regressed past predictive {att_pred:.3}"
+    );
+    assert!(
+        ratio >= GATE_RATIO,
+        "GP prefilter only {ratio:.1}x faster per candidate than honest evaluation (gate {GATE_RATIO}x)"
+    );
+
+    GateReport::at_least(
+        "planner_surrogate",
+        "GP surrogate scores >= 10x more candidates per planning interval than honest what-if evaluation, at SLO attainment no worse than predictive",
+        GATE_RATIO,
+        ratio,
+    )
+    .emit();
+}

@@ -22,6 +22,7 @@ use crate::model::vision::Resolution;
 use crate::optimizer::bayes::{BayesOpt, BayesOptConfig};
 use crate::optimizer::objective::{ConfigEvaluator, Objective};
 use crate::optimizer::space::SearchSpace;
+use crate::optimizer::surrogate::SurrogateModel;
 use crate::sim::engine::{SimConfig, Simulator};
 use crate::util::argp::{flag, opt, ArgError, Cli, CmdSpec};
 use crate::util::rng::Rng;
@@ -127,6 +128,10 @@ fn cli() -> Cli {
                 opt("threads", Some("0"), "parallel sim evaluations for --sweep (0 = all cores)"),
                 flag("random", "random search instead of Bayesian"),
                 flag("sweep", "exhaustive parallel sweep over every topology (uses --threads)"),
+                flag(
+                    "surrogate",
+                    "with --sweep: GP-prefilter the grid — simulate a few seed points, EI-rank the rest, simulate only the top candidates",
+                ),
             ],
             positional: vec![],
         })
@@ -433,6 +438,48 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                     t => t,
                 };
                 let points = space.topology_grid();
+                if args.flag("surrogate") {
+                    // GP prefilter: honestly simulate a strided handful
+                    // of seed points, train the surrogate on them,
+                    // EI-rank the remainder, and honestly simulate only
+                    // the top-ranked (plus any past the variance floor).
+                    let mut model = SurrogateModel::new(2.0);
+                    let stride = (points.len() / 5).max(1);
+                    let seeds: Vec<usize> = (0..points.len()).step_by(stride).collect();
+                    let mut evaluated: Vec<(usize, f64)> = Vec::new();
+                    for &i in &seeds {
+                        let v = ev.goodput(&points[i]);
+                        model.observe(points[i].features(), v);
+                        evaluated.push((i, v));
+                    }
+                    let rest: Vec<usize> =
+                        (0..points.len()).filter(|i| !seeds.contains(i)).collect();
+                    let feats: Vec<Vec<f64>> =
+                        rest.iter().map(|&i| points[i].features()).collect();
+                    let sel = model.select(&feats, 5, 0.25);
+                    for ri in sel.chosen {
+                        let i = rest[ri];
+                        let v = ev.goodput(&points[i]);
+                        model.observe(points[i].features(), v);
+                        evaluated.push((i, v));
+                    }
+                    for &(i, v) in &evaluated {
+                        println!("  {}  goodput {:.3} req/s", points[i].topology, v);
+                    }
+                    let &(bi, bv) = evaluated
+                        .iter()
+                        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                        .unwrap();
+                    println!(
+                        "best topology: {} at {:.3} req/s ({} simulated of {} candidates; {} GP-prefiltered away)",
+                        points[bi].topology,
+                        bv,
+                        evaluated.len(),
+                        points.len(),
+                        points.len() - evaluated.len()
+                    );
+                    return Ok(());
+                }
                 let values = ev.goodput_many(&points, threads);
                 let best = values
                     .iter()

@@ -25,6 +25,8 @@ use crate::core::config::{EpdConfig, PlannerPolicy};
 use crate::core::stage::Stage;
 use crate::core::topology::Topology;
 use crate::optimizer::space::topology_neighborhood;
+use crate::optimizer::surrogate::{planner_features, SurrogateModel};
+use crate::optimizer::whatif::WhatIfEvaluator;
 
 use super::profiler::{WorkloadProfile, WorkloadProfiler};
 use super::role_switch::{RoleSwitchController, SwitchDecision, SwitchPolicy};
@@ -63,17 +65,34 @@ pub struct PlannerConfig {
     /// Neighborhood radius: candidate topologies within this many
     /// single-instance moves of the current one.
     pub radius: u32,
+    /// [`PlannerPolicy::Surrogate`] only: honest what-if evaluations per
+    /// planning pass (the GP forwards its EI-ranked top-k).
+    pub surrogate_topk: usize,
+    /// [`PlannerPolicy::Surrogate`] only: posterior-variance floor above
+    /// which a candidate is forced into the honest set (exploration).
+    pub surrogate_min_var: f64,
 }
 
 impl PlannerConfig {
     pub fn new(policy: PlannerPolicy, plan_interval: f64, switch: SwitchPolicy) -> PlannerConfig {
-        PlannerConfig { policy, plan_interval, switch, horizon: 10.0, radius: 2 }
+        PlannerConfig {
+            policy,
+            plan_interval,
+            switch,
+            horizon: 10.0,
+            radius: 2,
+            surrogate_topk: 3,
+            surrogate_min_var: 0.25,
+        }
     }
 
     /// The planner configuration an [`EpdConfig`] implies (shared by the
     /// simulator and the real engine).
     pub fn from_epd(epd: &EpdConfig, switch: SwitchPolicy) -> PlannerConfig {
-        PlannerConfig::new(epd.planner, epd.plan_interval, switch)
+        let mut cfg = PlannerConfig::new(epd.planner, epd.plan_interval, switch);
+        cfg.surrogate_topk = epd.surrogate_topk.max(1);
+        cfg.surrogate_min_var = epd.surrogate_min_var.max(0.0);
+        cfg
     }
 }
 
@@ -92,6 +111,22 @@ pub struct ReallocationStats {
     /// Pending plans dropped because the cluster drifted away from their
     /// preconditions.
     pub aborted_plans: u64,
+    /// Candidates scored through the GP surrogate (tier 1). Zero for
+    /// greedy/predictive runs — the dormancy witness.
+    pub surrogate_scored: u64,
+    /// Honest short-horizon what-if simulations run (tier 2).
+    pub whatif_evals: u64,
+    /// Honest evaluations forced by the uncertainty floor rather than EI
+    /// rank — the model re-anchoring after profile drift.
+    pub forced_explorations: u64,
+}
+
+/// The surrogate policy's two evaluation tiers, boxed as one unit so the
+/// dormant (greedy/predictive) planner stays a small struct.
+#[derive(Debug, Clone)]
+struct SurrogateEngine {
+    model: SurrogateModel,
+    whatif: WhatIfEvaluator,
 }
 
 /// The planner + shared plan-executor state machine.
@@ -103,6 +138,11 @@ pub struct ReallocationPlanner {
     blocked_streak: u32,
     last_plan: f64,
     stats: ReallocationStats,
+    /// Present only when the owner wired a what-if evaluator for the
+    /// [`PlannerPolicy::Surrogate`] policy; `None` otherwise (including
+    /// surrogate runs on hosts with no simulator access, which fall back
+    /// to the analytic predictive pass).
+    surrogate: Option<Box<SurrogateEngine>>,
 }
 
 /// Ticks a pending step may stay gate-blocked before the whole plan is
@@ -118,7 +158,17 @@ impl ReallocationPlanner {
             blocked_streak: 0,
             last_plan: f64::NEG_INFINITY,
             stats: ReallocationStats::default(),
+            surrogate: None,
         }
+    }
+
+    /// Wire the honest evaluation tier for [`PlannerPolicy::Surrogate`]:
+    /// a fresh GP surrogate plus the caller's what-if evaluator. Without
+    /// this call a surrogate-policy planner falls back to the analytic
+    /// predictive pass.
+    pub fn attach_surrogate(&mut self, whatif: WhatIfEvaluator) {
+        self.surrogate =
+            Some(Box::new(SurrogateEngine { model: SurrogateModel::new(2.0), whatif }));
     }
 
     pub fn stats(&self) -> ReallocationStats {
@@ -151,6 +201,7 @@ impl ReallocationPlanner {
                 PlannerPolicy::Predictive => {
                     Self::plan_predictive(&self.cfg, &profiler.profile(), counts)
                 }
+                PlannerPolicy::Surrogate => self.plan_surrogate(&profiler.profile(), counts),
             };
             if let Some(p) = plan {
                 self.stats.plans += 1;
@@ -176,7 +227,9 @@ impl ReallocationPlanner {
         let above_floor = counts[fi] > self.cfg.switch.min_instances;
         let safe = match self.cfg.policy {
             PlannerPolicy::Greedy => above_floor,
-            PlannerPolicy::Predictive => above_floor && !(queued[fi] && counts[fi] <= 1),
+            PlannerPolicy::Predictive | PlannerPolicy::Surrogate => {
+                above_floor && !(queued[fi] && counts[fi] <= 1)
+            }
         };
         if safe {
             self.pending.pop_front();
@@ -247,6 +300,105 @@ impl ReallocationPlanner {
         // suppresses churn on near-ties).
         let cost: f64 = plan.steps.iter().map(|s| s.migration_time).sum();
         if cur_score - best_score <= cost + 0.25 {
+            return None;
+        }
+        Some(plan)
+    }
+
+    /// The surrogate planning pass (two-tier evaluation): the GP scores
+    /// the whole neighborhood (tier 1, microseconds per candidate) and
+    /// forwards only the EI-ranked top-k — plus any candidate past the
+    /// uncertainty floor, plus the analytic heuristic's pick as a safety
+    /// net — to honest short-horizon what-if simulation (tier 2). Every
+    /// honest score is fed back into the GP, so the model sharpens as the
+    /// planner runs. Public (like [`Self::plan_predictive`]) so plan
+    /// quality can be property-tested directly.
+    pub fn plan_surrogate(
+        &mut self,
+        profile: &WorkloadProfile,
+        counts: [u32; 3],
+    ) -> Option<SwitchPlan> {
+        // Take the engine out of `self` for the duration of the pass so
+        // stats on `self` stay mutable alongside it.
+        let Some(mut eng) = self.surrogate.take() else {
+            // No what-if evaluator wired (e.g. the real engine's monitor
+            // thread): degrade gracefully to the analytic pass.
+            return Self::plan_predictive(&self.cfg, profile, counts);
+        };
+        let plan = self.plan_surrogate_with(&mut eng, profile, counts);
+        self.surrogate = Some(eng);
+        plan
+    }
+
+    fn plan_surrogate_with(
+        &mut self,
+        eng: &mut SurrogateEngine,
+        profile: &WorkloadProfile,
+        counts: [u32; 3],
+    ) -> Option<SwitchPlan> {
+        let cur = Topology::new(counts[0], counts[1], counts[2]);
+        let floor = self.cfg.switch.min_instances;
+        // Candidates that would starve a stage with work score infinite
+        // analytically; drop them before they reach either tier.
+        let cands: Vec<Topology> = topology_neighborhood(cur, self.cfg.radius, floor)
+            .into_iter()
+            .filter(|&c| score_topology(profile, counts, c, self.cfg.horizon).is_finite())
+            .collect();
+        if cands.is_empty() {
+            return None;
+        }
+
+        // Tier 1: GP-score the whole pool.
+        let feats: Vec<Vec<f64>> = cands.iter().map(|&c| planner_features(profile, c)).collect();
+        self.stats.surrogate_scored += cands.len() as u64;
+        let sel = eng.model.select(&feats, self.cfg.surrogate_topk, self.cfg.surrogate_min_var);
+        self.stats.forced_explorations += sel.forced;
+
+        // Honest set: the GP's picks plus the analytic heuristic's pick,
+        // so the prefilter can never do worse than `plan_predictive`'s
+        // choice — at worst it spends one extra honest evaluation on it.
+        let mut honest = sel.chosen;
+        let analytic = (0..cands.len()).min_by(|&a, &b| {
+            score_topology(profile, counts, cands[a], self.cfg.horizon)
+                .partial_cmp(&score_topology(profile, counts, cands[b], self.cfg.horizon))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        if let Some(a) = analytic {
+            if !honest.contains(&a) {
+                honest.push(a);
+            }
+        }
+
+        // Tier 2: honest what-if evaluation of the survivors (common
+        // random numbers — every candidate replays the same synthetic
+        // workload). Scores are negated into the GP: lower latency is a
+        // higher objective.
+        let cur_score = eng.whatif.score(profile, cur);
+        self.stats.whatif_evals += 1;
+        eng.model.observe(planner_features(profile, cur), -cur_score);
+        let mut best = cur;
+        let mut best_score = cur_score;
+        for i in honest {
+            let cand = cands[i];
+            let s = eng.whatif.score(profile, cand);
+            self.stats.whatif_evals += 1;
+            eng.model.observe(planner_features(profile, cand), -s);
+            if s < best_score {
+                best_score = s;
+                best = cand;
+            }
+        }
+        if best == cur {
+            return None;
+        }
+        let plan = diff_to_steps(cur, best, profile, &self.cfg.switch);
+        // Hysteresis on the same scale as `plan_predictive`: what-if
+        // scores are per-request seconds, so the relief is weighted by
+        // the requests expected over one what-if horizon before being
+        // compared against the migration downtime the plan spends.
+        let cost: f64 = plan.steps.iter().map(|s| s.migration_time).sum();
+        let weight = (profile.arrival_rate * eng.whatif.horizon).max(1.0);
+        if (cur_score - best_score) * weight <= cost + 0.25 {
             return None;
         }
         Some(plan)
@@ -493,6 +645,58 @@ mod tests {
         });
         assert_eq!(p.release([2, 1, 1], [false, true, false]), None, "queued work blocks");
         assert!(p.release([2, 1, 1], [false, false, false]).is_some(), "idle stage may drain");
+    }
+
+    #[test]
+    fn surrogate_without_evaluator_falls_back_to_analytic_planning() {
+        let mut p = ReallocationPlanner::new(cfg(PlannerPolicy::Surrogate));
+        let plan = p
+            .plan_surrogate(&decode_pressured(), [2, 2, 1])
+            .expect("fallback must still relieve decode pressure");
+        assert!(!plan.is_empty());
+        for s in &plan.steps {
+            assert_eq!(s.to, Stage::Decode);
+        }
+        // Analytic fallback touches neither tier.
+        assert_eq!(p.stats().surrogate_scored, 0);
+        assert_eq!(p.stats().whatif_evals, 0);
+        assert_eq!(p.stats().forced_explorations, 0);
+    }
+
+    #[test]
+    fn surrogate_with_evaluator_runs_both_tiers() {
+        use crate::model::spec::{DeviceSpec, LmmSpec, ModelId};
+        let mut p = ReallocationPlanner::new(cfg(PlannerPolicy::Surrogate));
+        let epd = EpdConfig::epd(Topology::new(2, 2, 1), 1, 1, 2);
+        p.attach_surrogate(WhatIfEvaluator::new(
+            LmmSpec::get(ModelId::MiniCpmV26),
+            DeviceSpec::a100(),
+            &epd,
+        ));
+        let prof = WorkloadProfile {
+            arrival_rate: 2.5,
+            prompt_tokens: 64.0,
+            output_tokens: 160.0,
+            ..decode_pressured()
+        };
+        let plan = p.plan_surrogate(&prof, [2, 2, 1]);
+        let stats = p.stats();
+        assert!(stats.surrogate_scored > 0, "tier 1 must score the neighborhood");
+        assert!(
+            stats.whatif_evals >= 2,
+            "tier 2 must honestly evaluate current + survivors: {stats:?}"
+        );
+        assert!(
+            stats.whatif_evals < stats.surrogate_scored + 2,
+            "the prefilter must evaluate fewer candidates than it scores"
+        );
+        if let Some(plan) = plan {
+            for s in &plan.steps {
+                assert_eq!(s.to, Stage::Decode, "moves feed the bottleneck: {plan:?}");
+            }
+        }
+        // The honest evaluations trained the model.
+        assert!(p.surrogate.as_ref().unwrap().model.observations() >= 2);
     }
 
     #[test]

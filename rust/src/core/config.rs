@@ -98,6 +98,12 @@ pub enum PlannerPolicy {
     /// The online reallocation planner: scores topology neighborhoods
     /// against the profiled workload and emits multi-step switch plans.
     Predictive,
+    /// The predictive planner with two-tier candidate evaluation: an
+    /// online GP surrogate EI-ranks the whole neighborhood, and only the
+    /// top-k (plus high-uncertainty explorations) get an honest
+    /// short-horizon what-if simulation. See
+    /// `optimizer::{surrogate, whatif}`.
+    Surrogate,
 }
 
 impl PlannerPolicy {
@@ -105,6 +111,7 @@ impl PlannerPolicy {
         match s.to_ascii_lowercase().as_str() {
             "greedy" => Some(PlannerPolicy::Greedy),
             "predictive" | "planner" => Some(PlannerPolicy::Predictive),
+            "surrogate" => Some(PlannerPolicy::Surrogate),
             _ => None,
         }
     }
@@ -112,6 +119,7 @@ impl PlannerPolicy {
         match self {
             PlannerPolicy::Greedy => "greedy",
             PlannerPolicy::Predictive => "predictive",
+            PlannerPolicy::Surrogate => "surrogate",
         }
     }
 }
@@ -232,6 +240,16 @@ pub struct EpdConfig {
     /// monitor tick — the legacy greedy cadence (the greedy controller's
     /// own cooldown remains the real rate limiter there).
     pub plan_interval: f64,
+    /// `planner = "surrogate"` only: how many GP-ranked candidates per
+    /// planning pass get an honest what-if evaluation. Default 3.
+    pub surrogate_topk: usize,
+    /// `planner = "surrogate"` only: posterior-variance floor above which
+    /// a candidate is considered outside training support and forced into
+    /// the honest set regardless of EI rank. Default 0.25.
+    pub surrogate_min_var: f64,
+    /// `planner = "surrogate"` only: seconds of synthetic arrivals each
+    /// what-if simulation replays. Default 3.0 (floored at 0.5).
+    pub whatif_horizon: f64,
     /// Real-engine monitor thread sample period, seconds. Default 0.1
     /// (the previously hard-coded 100 ms). The simulator's tick period
     /// stays `SimConfig::monitor_interval`.
@@ -349,6 +367,9 @@ impl EpdConfig {
             link_contention: false,
             planner: PlannerPolicy::Greedy,
             plan_interval: 0.0,
+            surrogate_topk: 3,
+            surrogate_min_var: 0.25,
+            whatif_horizon: 3.0,
             sample_interval: 0.1,
             monitor_alpha: 0.4,
             fault_seed: 0,
@@ -436,8 +457,11 @@ impl EpdConfig {
     /// ep_chunk_tokens = 512   # 0 = monolithic EP handoff
     /// pd_layer_groups = 8     # 0 = monolithic PD (KV) handoff
     /// link_contention = false # serialize transfers sharing a link
-    /// planner = "greedy"      # greedy | predictive (reallocation policy)
+    /// planner = "greedy"      # greedy | predictive | surrogate (reallocation policy)
     /// plan_interval = 0.0     # seconds between planning passes; 0 = every tick
+    /// surrogate_topk = 3      # surrogate only: honest evals per planning pass
+    /// surrogate_min_var = 0.25 # surrogate only: variance floor forcing exploration
+    /// whatif_horizon = 3.0    # surrogate only: what-if sim horizon, seconds
     /// sample_interval = 0.1   # engine monitor sample period, seconds
     /// monitor_alpha = 0.4     # engine monitor EWMA weight
     /// fault_seed = 0          # 0 = chaos off; non-zero seeds a fault wave
@@ -500,6 +524,15 @@ impl EpdConfig {
         }
         if let Some(v) = doc.get_f64("", "plan_interval") {
             cfg.plan_interval = v.max(0.0);
+        }
+        if let Some(v) = doc.get_i64("", "surrogate_topk") {
+            cfg.surrogate_topk = v.max(1) as usize;
+        }
+        if let Some(v) = doc.get_f64("", "surrogate_min_var") {
+            cfg.surrogate_min_var = v.max(0.0);
+        }
+        if let Some(v) = doc.get_f64("", "whatif_horizon") {
+            cfg.whatif_horizon = v.max(0.5);
         }
         if let Some(v) = doc.get_f64("", "sample_interval") {
             cfg.sample_interval = v.max(0.001);
@@ -620,6 +653,9 @@ mod tests {
         assert!(!cfg.link_contention, "contention modelling is opt-in");
         assert_eq!(cfg.planner, PlannerPolicy::Greedy, "legacy policy is the default");
         assert_eq!(cfg.plan_interval, 0.0, "legacy cadence is the default");
+        assert_eq!(cfg.surrogate_topk, 3);
+        assert_eq!(cfg.surrogate_min_var, 0.25);
+        assert_eq!(cfg.whatif_horizon, 3.0);
         assert_eq!(cfg.sample_interval, 0.1);
         assert_eq!(cfg.monitor_alpha, 0.4);
         assert_eq!(cfg.fault_seed, 0, "chaos is opt-in");
@@ -667,8 +703,11 @@ encoder_cache_tokens = 4096
 ep_chunk_tokens = 512
 pd_layer_groups = 8
 link_contention = true
-planner = "predictive"
+planner = "surrogate"
 plan_interval = 2.5
+surrogate_topk = 5
+surrogate_min_var = 0.5
+whatif_horizon = 4.0
 sample_interval = 0.05
 monitor_alpha = 0.25
 fault_seed = 7
@@ -711,8 +750,11 @@ assign = "round-robin"
         assert_eq!(cfg.ep_chunk_tokens, 512);
         assert_eq!(cfg.pd_layer_groups, 8);
         assert!(cfg.link_contention);
-        assert_eq!(cfg.planner, PlannerPolicy::Predictive);
+        assert_eq!(cfg.planner, PlannerPolicy::Surrogate);
         assert_eq!(cfg.plan_interval, 2.5);
+        assert_eq!(cfg.surrogate_topk, 5);
+        assert_eq!(cfg.surrogate_min_var, 0.5);
+        assert_eq!(cfg.whatif_horizon, 4.0);
         assert_eq!(cfg.sample_interval, 0.05);
         assert_eq!(cfg.monitor_alpha, 0.25);
         assert_eq!(cfg.fault_seed, 7);
@@ -761,6 +803,8 @@ assign = "round-robin"
         assert_eq!(QueuePolicy::parse("??"), None);
         assert_eq!(PlannerPolicy::parse("Predictive"), Some(PlannerPolicy::Predictive));
         assert_eq!(PlannerPolicy::parse("greedy"), Some(PlannerPolicy::Greedy));
+        assert_eq!(PlannerPolicy::parse("Surrogate"), Some(PlannerPolicy::Surrogate));
+        assert_eq!(PlannerPolicy::Surrogate.name(), "surrogate");
         assert_eq!(PlannerPolicy::parse("??"), None);
     }
 

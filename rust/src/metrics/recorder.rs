@@ -65,6 +65,9 @@ pub struct MetricsRecorder {
     released_steps: AtomicU64,
     blocked_steps: AtomicU64,
     aborted_plans: AtomicU64,
+    surrogate_scored: AtomicU64,
+    whatif_evals: AtomicU64,
+    forced_explorations: AtomicU64,
     /// Supervision & recovery counters (named for parity with the
     /// simulator's `ResilienceStats` so sim and engine dashboards line
     /// up): worker crashes observed by the supervisor, requests
@@ -245,6 +248,9 @@ impl MetricsRecorder {
         self.released_steps.store(stats.released_steps, Ordering::Relaxed);
         self.blocked_steps.store(stats.blocked_steps, Ordering::Relaxed);
         self.aborted_plans.store(stats.aborted_plans, Ordering::Relaxed);
+        self.surrogate_scored.store(stats.surrogate_scored, Ordering::Relaxed);
+        self.whatif_evals.store(stats.whatif_evals, Ordering::Relaxed);
+        self.forced_explorations.store(stats.forced_explorations, Ordering::Relaxed);
     }
 
     /// The last mirrored planner snapshot.
@@ -255,6 +261,9 @@ impl MetricsRecorder {
             released_steps: self.released_steps.load(Ordering::Relaxed),
             blocked_steps: self.blocked_steps.load(Ordering::Relaxed),
             aborted_plans: self.aborted_plans.load(Ordering::Relaxed),
+            surrogate_scored: self.surrogate_scored.load(Ordering::Relaxed),
+            whatif_evals: self.whatif_evals.load(Ordering::Relaxed),
+            forced_explorations: self.forced_explorations.load(Ordering::Relaxed),
         }
     }
 
@@ -501,6 +510,9 @@ impl MetricsRecorder {
                     ("released_steps", Json::num(r.released_steps as f64)),
                     ("blocked_steps", Json::num(r.blocked_steps as f64)),
                     ("aborted_plans", Json::num(r.aborted_plans as f64)),
+                    ("surrogate_scored", Json::num(r.surrogate_scored as f64)),
+                    ("whatif_evals", Json::num(r.whatif_evals as f64)),
+                    ("forced_explorations", Json::num(r.forced_explorations as f64)),
                 ])
             }),
         ])
@@ -612,6 +624,9 @@ mod tests {
             released_steps: 4,
             blocked_steps: 2,
             aborted_plans: 1,
+            surrogate_scored: 40,
+            whatif_evals: 6,
+            forced_explorations: 2,
         };
         m.record_reallocation(s);
         m.on_role_switch();
@@ -619,6 +634,14 @@ mod tests {
         assert_eq!(m.role_switches(), 1);
         let j = m.report();
         assert_eq!(j.get("reallocation").unwrap().get("plans").unwrap().as_u64(), Some(3));
+        assert_eq!(
+            j.get("reallocation").unwrap().get("surrogate_scored").unwrap().as_u64(),
+            Some(40)
+        );
+        assert_eq!(
+            j.get("reallocation").unwrap().get("whatif_evals").unwrap().as_u64(),
+            Some(6)
+        );
         assert!(j.get("stage_busy_seconds").unwrap().get("decode").is_some());
     }
 

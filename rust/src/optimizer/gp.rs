@@ -1,7 +1,9 @@
 //! A small Gaussian-process regressor (RBF kernel, Cholesky solve) — the
-//! surrogate for Bayesian optimization over the config space. Sample
-//! counts are tiny (tens of simulator evaluations), so the O(n³) solve is
-//! irrelevant.
+//! surrogate for Bayesian optimization over the config space and the
+//! online planner's candidate prefilter. Batch refits pay the O(n³)
+//! factorization; [`Gp::observe`] grows the same factor one rank-1 row at
+//! a time for O(n²) per observation, bit-for-bit identical to a batch
+//! refit on the same data.
 
 /// GP with RBF kernel k(x,x') = σ²·exp(−‖x−x'‖²/(2ℓ²)) + noise·δ.
 #[derive(Debug, Clone)]
@@ -10,6 +12,8 @@ pub struct Gp {
     signal_var: f64,
     noise_var: f64,
     xs: Vec<Vec<f64>>,
+    /// Observed targets, kept so incremental appends can re-center.
+    ys: Vec<f64>,
     /// Cholesky factor L of K (lower triangular, row-major packed).
     chol: Vec<Vec<f64>>,
     /// α = K⁻¹ y.
@@ -25,10 +29,25 @@ impl Gp {
             signal_var,
             noise_var,
             xs: Vec::new(),
+            ys: Vec::new(),
             chol: Vec::new(),
             alpha: Vec::new(),
             y_mean: 0.0,
         }
+    }
+
+    /// Observations currently in the model.
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// The prior (signal) variance σ² — what an empty GP predicts.
+    pub fn signal_var(&self) -> f64 {
+        self.signal_var
     }
 
     fn kernel(&self, a: &[f64], b: &[f64]) -> f64 {
@@ -40,8 +59,6 @@ impl Gp {
     pub fn fit(&mut self, xs: Vec<Vec<f64>>, ys: &[f64]) {
         assert_eq!(xs.len(), ys.len());
         let n = xs.len();
-        self.y_mean = if n == 0 { 0.0 } else { ys.iter().sum::<f64>() / n as f64 };
-        let yc: Vec<f64> = ys.iter().map(|y| y - self.y_mean).collect();
 
         // Build K + noise I.
         let mut k = vec![vec![0.0; n]; n];
@@ -68,25 +85,66 @@ impl Gp {
                 }
             }
         }
-        // Solve L z = y, then Lᵀ α = z.
+        self.xs = xs;
+        self.ys = ys.to_vec();
+        self.chol = l;
+        self.refresh_alpha();
+    }
+
+    /// Append one observation with a rank-1 Cholesky update: the new row
+    /// of L costs O(n²) (vs the O(n³) refactorization [`Self::fit`]
+    /// pays) and is arithmetic-for-arithmetic the row `fit` would have
+    /// produced, so an incrementally grown GP predicts bit-for-bit
+    /// identically to a batch refit on the same data (property-tested in
+    /// `rust/tests/property_surrogate.rs`).
+    pub fn observe(&mut self, x: Vec<f64>, y: f64) {
+        let n = self.xs.len();
+        let mut row = vec![0.0; n + 1];
+        for j in 0..n {
+            let mut s = self.kernel(&x, &self.xs[j]);
+            for t in 0..j {
+                s -= row[t] * self.chol[j][t];
+            }
+            row[j] = s / self.chol[j][j];
+        }
+        let mut s = self.kernel(&x, &x);
+        s += self.noise_var + 1e-9;
+        for t in 0..n {
+            s -= row[t] * row[t];
+        }
+        row[n] = s.max(1e-12).sqrt();
+        self.xs.push(x);
+        self.ys.push(y);
+        self.chol.push(row);
+        // α and the centered targets depend on every y through the mean:
+        // re-solve the two triangular systems (O(n²)) from the stored ys.
+        self.refresh_alpha();
+    }
+
+    /// Recompute the mean-centering and α = K⁻¹(y − ȳ) from the current
+    /// factor — the O(n²) tail shared by `fit` and `observe`. Same
+    /// arithmetic (and therefore the same bits) as the historical inline
+    /// solves in `fit`.
+    fn refresh_alpha(&mut self) {
+        let n = self.xs.len();
+        self.y_mean = if n == 0 { 0.0 } else { self.ys.iter().sum::<f64>() / n as f64 };
+        // Solve L z = y − ȳ, then Lᵀ α = z.
         let mut z = vec![0.0; n];
         for i in 0..n {
-            let mut s = yc[i];
+            let mut s = self.ys[i] - self.y_mean;
             for t in 0..i {
-                s -= l[i][t] * z[t];
+                s -= self.chol[i][t] * z[t];
             }
-            z[i] = s / l[i][i];
+            z[i] = s / self.chol[i][i];
         }
         let mut alpha = vec![0.0; n];
         for i in (0..n).rev() {
             let mut s = z[i];
             for t in i + 1..n {
-                s -= l[t][i] * alpha[t];
+                s -= self.chol[t][i] * alpha[t];
             }
-            alpha[i] = s / l[i][i];
+            alpha[i] = s / self.chol[i][i];
         }
-        self.xs = xs;
-        self.chol = l;
         self.alpha = alpha;
     }
 
@@ -193,5 +251,59 @@ mod tests {
         let (mu, var) = gp.predict(&[1.0]);
         assert_eq!(mu, 0.0);
         assert_eq!(var, 2.0);
+    }
+
+    /// Deterministic pseudo-random doubles in [0, 1) for the equivalence
+    /// tests (xorshift; no RNG dependency inside the optimizer crate).
+    fn prand(state: &mut u64) -> f64 {
+        *state ^= *state << 13;
+        *state ^= *state >> 7;
+        *state ^= *state << 17;
+        (*state >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    #[test]
+    fn incremental_observe_matches_batch_fit_bitwise() {
+        let mut s = 0x9E37_79B9_7F4A_7C15u64;
+        let xs: Vec<Vec<f64>> =
+            (0..12).map(|_| (0..3).map(|_| prand(&mut s) * 4.0).collect()).collect();
+        let ys: Vec<f64> = (0..12).map(|_| prand(&mut s) * 2.0 - 1.0).collect();
+
+        let mut batch = Gp::new(1.5, 0.8, 1e-4);
+        batch.fit(xs.clone(), &ys);
+        let mut inc = Gp::new(1.5, 0.8, 1e-4);
+        for (x, y) in xs.iter().zip(&ys) {
+            inc.observe(x.clone(), *y);
+        }
+        assert_eq!(inc.len(), batch.len());
+
+        for _ in 0..20 {
+            let probe: Vec<f64> = (0..3).map(|_| prand(&mut s) * 5.0 - 0.5).collect();
+            let (mb, vb) = batch.predict(&probe);
+            let (mi, vi) = inc.predict(&probe);
+            assert_eq!(mb.to_bits(), mi.to_bits(), "posterior mean must match bitwise");
+            assert_eq!(vb.to_bits(), vi.to_bits(), "posterior variance must match bitwise");
+            let eb = batch.expected_improvement(&probe, 0.3);
+            let ei = inc.expected_improvement(&probe, 0.3);
+            assert_eq!(eb.to_bits(), ei.to_bits(), "EI must match bitwise");
+        }
+    }
+
+    #[test]
+    fn observe_extends_an_existing_fit() {
+        let mut gp = Gp::new(1.0, 1.0, 1e-6);
+        gp.fit(vec![vec![0.0], vec![1.0]], &[0.0, 1.0]);
+        gp.observe(vec![2.0], 0.0);
+        assert_eq!(gp.len(), 3);
+        let mut batch = Gp::new(1.0, 1.0, 1e-6);
+        batch.fit(vec![vec![0.0], vec![1.0], vec![2.0]], &[0.0, 1.0, 0.0]);
+        let (m_inc, v_inc) = gp.predict(&[1.5]);
+        let (m_b, v_b) = batch.predict(&[1.5]);
+        assert_eq!(m_inc.to_bits(), m_b.to_bits());
+        assert_eq!(v_inc.to_bits(), v_b.to_bits());
+        // The appended point interpolates like any fitted one.
+        let (mu, var) = gp.predict(&[2.0]);
+        assert!((mu - 0.0).abs() < 1e-2, "mu {mu}");
+        assert!(var < 0.01);
     }
 }

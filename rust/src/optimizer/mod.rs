@@ -6,12 +6,22 @@
 //! surrogate ([`gp`]) and expected improvement; [`space`] defines the
 //! discrete configuration space with the paper's implicit constraints
 //! (total GPUs fixed, ≥1 instance per needed stage).
+//!
+//! The same GP machinery also powers the *online* planner: [`surrogate`]
+//! maintains an incrementally trained model over (workload profile,
+//! topology) features that prefilters reallocation candidates, and
+//! [`whatif`] evaluates the survivors with short pooled simulations
+//! seeded from the live profile.
 
 pub mod space;
 pub mod gp;
 pub mod bayes;
 pub mod objective;
+pub mod surrogate;
+pub mod whatif;
 
 pub use bayes::{BayesOpt, BayesOptConfig};
 pub use objective::{ConfigEvaluator, Objective};
 pub use space::{topology_neighborhood, ConfigPoint, SearchSpace};
+pub use surrogate::{planner_features, Selection, SurrogateModel};
+pub use whatif::WhatIfEvaluator;

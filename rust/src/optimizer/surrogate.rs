@@ -1,0 +1,233 @@
+//! Tier 1 of the two-tier candidate evaluation path: an online GP
+//! surrogate over (workload profile, candidate topology) features.
+//!
+//! The reallocation planner's honest candidate evaluation — a short
+//! what-if simulation per topology ([`super::whatif::WhatIfEvaluator`]) —
+//! costs milliseconds; `Gp::predict` costs microseconds. The
+//! [`SurrogateModel`] therefore scores the *whole* topology neighborhood
+//! through the GP each planning pass and forwards only the EI-ranked
+//! top-k to real evaluation. Every honest evaluation the system ever
+//! runs is fed back through [`SurrogateModel::observe`] (the O(n²)
+//! incremental Cholesky append), so the surrogate sharpens for free as
+//! the planner works.
+//!
+//! An uncertainty floor keeps the prefilter honest under drift: a
+//! candidate whose posterior variance exceeds `min_var` lies outside the
+//! training support (the profile moved, or the topology was never
+//! tried), and jumps the EI queue so the model re-anchors instead of
+//! extrapolating.
+
+use crate::coordinator::profiler::WorkloadProfile;
+use crate::core::topology::Topology;
+
+use super::gp::Gp;
+
+/// Observations kept before the training window is compacted: the GP
+/// solve is O(n²) per append, so an unbounded window would make planning
+/// cost grow with uptime. At the cap the model refits on the most recent
+/// half — recency matters more than ancient profiles anyway.
+const MAX_OBSERVATIONS: usize = 256;
+
+/// Feature vector for one (profile, candidate topology) pair — the
+/// planner-side analogue of `ConfigPoint::features`. Token counts are
+/// scaled and backlogs log-compressed so no single dimension dwarfs the
+/// RBF distance.
+pub fn planner_features(profile: &WorkloadProfile, cand: Topology) -> Vec<f64> {
+    vec![
+        profile.arrival_rate,
+        profile.images_per_request,
+        profile.prompt_tokens / 64.0,
+        profile.output_tokens / 64.0,
+        profile.backlog[0].max(0.0).ln_1p(),
+        profile.backlog[1].max(0.0).ln_1p(),
+        profile.backlog[2].max(0.0).ln_1p(),
+        profile.utilization[0],
+        profile.utilization[1],
+        profile.utilization[2],
+        cand.encode as f64,
+        cand.prefill as f64,
+        cand.decode as f64,
+    ]
+}
+
+/// Indices chosen by [`SurrogateModel::select`], plus how many of them
+/// were forced through by the uncertainty floor rather than EI rank.
+#[derive(Debug, Clone, Default)]
+pub struct Selection {
+    /// Candidate indices to evaluate honestly, best-ranked first.
+    pub chosen: Vec<usize>,
+    /// How many of `chosen` exceeded the posterior-variance floor.
+    pub forced: u64,
+}
+
+/// The online GP surrogate: trains incrementally on observed
+/// (features → objective) pairs and EI-ranks candidate pools. Objectives
+/// are on a maximization scale — the planner feeds negated what-if
+/// scores.
+#[derive(Debug, Clone)]
+pub struct SurrogateModel {
+    gp: Gp,
+    /// Recent training window, kept verbatim so the compaction refit can
+    /// rebuild the factor from scratch.
+    window: Vec<(Vec<f64>, f64)>,
+    /// Best objective observed so far (the EI anchor).
+    best_y: f64,
+    observations: u64,
+}
+
+impl SurrogateModel {
+    pub fn new(lengthscale: f64) -> SurrogateModel {
+        SurrogateModel {
+            gp: Gp::new(lengthscale, 1.0, 1e-4),
+            window: Vec::new(),
+            best_y: f64::NEG_INFINITY,
+            observations: 0,
+        }
+    }
+
+    /// Total observations ever fed in (not capped by the window).
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Posterior (mean, variance) at `features`.
+    pub fn predict(&self, features: &[f64]) -> (f64, f64) {
+        self.gp.predict(features)
+    }
+
+    /// Feed one honest evaluation back into the model.
+    pub fn observe(&mut self, features: Vec<f64>, y: f64) {
+        if y > self.best_y {
+            self.best_y = y;
+        }
+        self.observations += 1;
+        if self.window.len() >= MAX_OBSERVATIONS {
+            // Compact: refit on the most recent half. One O(k³) refit
+            // per k/2 appends keeps amortized planning cost flat.
+            self.window.drain(..MAX_OBSERVATIONS / 2);
+            self.window.push((features, y));
+            let xs: Vec<Vec<f64>> = self.window.iter().map(|(x, _)| x.clone()).collect();
+            let ys: Vec<f64> = self.window.iter().map(|(_, v)| *v).collect();
+            self.gp.fit(xs, &ys);
+        } else {
+            self.window.push((features.clone(), y));
+            self.gp.observe(features, y);
+        }
+    }
+
+    /// EI-rank a candidate pool and return the top-k to evaluate
+    /// honestly. Candidates whose posterior variance exceeds `min_var`
+    /// are outside training support and are forced ahead of the EI
+    /// ranking (the exploration floor); ties break on pool order so the
+    /// selection is deterministic.
+    pub fn select(&self, feats: &[Vec<f64>], topk: usize, min_var: f64) -> Selection {
+        let k = topk.max(1).min(feats.len());
+        if self.gp.is_empty() {
+            // Untrained model: everything is unexplored. Take the pool
+            // head (deterministic) and flag it all as forced.
+            return Selection { chosen: (0..k).collect(), forced: k as u64 };
+        }
+        let mut ranked: Vec<(usize, bool, f64)> = feats
+            .iter()
+            .enumerate()
+            .map(|(i, f)| {
+                let (_, var) = self.gp.predict(f);
+                let ei = self.gp.expected_improvement(f, self.best_y);
+                (i, var > min_var, ei)
+            })
+            .collect();
+        ranked.sort_by(|a, b| {
+            b.1.cmp(&a.1)
+                .then(b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal))
+                .then(a.0.cmp(&b.0))
+        });
+        let chosen: Vec<usize> = ranked.iter().take(k).map(|r| r.0).collect();
+        let forced = ranked.iter().take(k).filter(|r| r.1).count() as u64;
+        Selection { chosen, forced }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> WorkloadProfile {
+        WorkloadProfile {
+            arrival_rate: 2.5,
+            images_per_request: 2.0,
+            prompt_tokens: 64.0,
+            output_tokens: 160.0,
+            mm_tokens: 2560.0,
+            service: [0.1, 0.2, 0.4],
+            queue_len: [0.0, 0.5, 12.0],
+            backlog: [0.0, 0.3, 30.0],
+            utilization: [0.05, 0.2, 1.0],
+            instances: [2, 2, 1],
+        }
+    }
+
+    #[test]
+    fn features_distinguish_candidates_and_profiles() {
+        let p = profile();
+        let a = planner_features(&p, Topology::new(2, 2, 1));
+        let b = planner_features(&p, Topology::new(1, 1, 3));
+        assert_eq!(a.len(), b.len());
+        assert_ne!(a, b, "topology dims must differ");
+        let mut drifted = p;
+        drifted.arrival_rate = 9.0;
+        assert_ne!(a, planner_features(&drifted, Topology::new(2, 2, 1)));
+    }
+
+    #[test]
+    fn untrained_model_forces_pool_head() {
+        let m = SurrogateModel::new(2.0);
+        let feats = vec![vec![0.0], vec![1.0], vec![2.0]];
+        let sel = m.select(&feats, 2, 0.25);
+        assert_eq!(sel.chosen, vec![0, 1]);
+        assert_eq!(sel.forced, 2);
+    }
+
+    #[test]
+    fn trained_model_prefers_the_known_optimum_region() {
+        let mut m = SurrogateModel::new(1.0);
+        // y peaks at x = 2.
+        for (x, y) in [(0.0, 0.0), (1.0, 0.5), (2.0, 1.0), (3.0, 0.5), (4.0, 0.0)] {
+            m.observe(vec![x], y);
+        }
+        assert_eq!(m.observations(), 5);
+        // Tight pool near training data: EI must rank the point closest
+        // to the optimum first (none exceed the variance floor).
+        let feats = vec![vec![0.1], vec![2.1], vec![3.9]];
+        let sel = m.select(&feats, 1, 10.0);
+        assert_eq!(sel.chosen, vec![1]);
+        assert_eq!(sel.forced, 0);
+    }
+
+    #[test]
+    fn uncertainty_floor_forces_out_of_support_candidates() {
+        let mut m = SurrogateModel::new(0.5);
+        for (x, y) in [(0.0, 0.8), (0.5, 1.0), (1.0, 0.9)] {
+            m.observe(vec![x], y);
+        }
+        // x = 50 is far outside support: high variance forces it in
+        // ahead of near-data candidates even though its EI is not top.
+        let feats = vec![vec![0.4], vec![50.0]];
+        let sel = m.select(&feats, 1, 0.25);
+        assert_eq!(sel.chosen, vec![1], "out-of-support candidate jumps the queue");
+        assert_eq!(sel.forced, 1);
+    }
+
+    #[test]
+    fn window_compaction_keeps_the_model_bounded() {
+        let mut m = SurrogateModel::new(2.0);
+        for i in 0..(MAX_OBSERVATIONS + 40) {
+            let x = (i % 37) as f64 * 0.1;
+            m.observe(vec![x], (x - 1.5).abs());
+        }
+        assert_eq!(m.observations() as usize, MAX_OBSERVATIONS + 40);
+        assert!(m.window.len() <= MAX_OBSERVATIONS, "window stays capped");
+        // Still predicts something sane after compaction.
+        let (mu, var) = m.predict(&[1.5]);
+        assert!(mu.is_finite() && var.is_finite());
+    }
+}

@@ -1,0 +1,228 @@
+//! Tier 2 of the two-tier candidate evaluation path: short-horizon
+//! what-if simulation seeded from the live workload profile.
+//!
+//! `ConfigEvaluator` answers "what is this config's goodput" by binary-
+//! searching full workload replays — thousands of requests per candidate,
+//! far too slow for a planning pass. The [`WhatIfEvaluator`] answers the
+//! planner's much narrower question — "how would the *current* workload
+//! fare on this topology over the next few seconds" — with a simulation
+//! short enough to run per candidate per tick:
+//!
+//! - The synthetic workload is generated from the profiler's EWMAs
+//!   (arrival rate, images/prompt/output shape) plus a backlog prelude
+//!   standing in for the work already queued.
+//! - Every candidate in a planning pass sees the *identical* workload
+//!   (common random numbers: one fixed seed), so candidate comparisons
+//!   cancel the sampling noise instead of chasing it.
+//! - Runs go through [`Simulator::run_pooled`] with a resident
+//!   [`SimPool`]: the event heap, request slab and scratch buffers are
+//!   recycled across evaluations instead of reallocated per run, and
+//!   timelines stay off so metrics accumulate in O(1) memory.
+
+use crate::coordinator::profiler::WorkloadProfile;
+use crate::core::config::{EpdConfig, PlannerPolicy, RouterPolicy};
+use crate::core::request::Request;
+use crate::core::stage::Stage;
+use crate::core::topology::Topology;
+use crate::model::spec::{DeviceSpec, LmmSpec};
+use crate::model::vision::Resolution;
+use crate::sim::engine::{SimConfig, SimPool, Simulator};
+use crate::util::rng::Rng;
+use crate::workload::build_request;
+
+/// Fixed workload seed: common random numbers across every candidate (and
+/// every planning pass), so what-if scores are comparable and replayable.
+const WHATIF_SEED: u64 = 0x57A7_1C5E;
+
+/// Most synthetic requests per evaluation (arrivals + backlog prelude):
+/// keeps the worst-case cost of one honest evaluation bounded no matter
+/// how hot the profile runs.
+const MAX_ARRIVALS: usize = 48;
+const MAX_BACKLOG: usize = 24;
+
+/// Short-horizon candidate evaluator. Scores are mean end-to-end latency
+/// in seconds (lower is better) with shed/starved work penalized, so a
+/// candidate can never look good by dropping requests.
+#[derive(Debug, Clone)]
+pub struct WhatIfEvaluator {
+    spec: LmmSpec,
+    device: DeviceSpec,
+    /// The live config with every control loop forced off (role
+    /// switching, faults, router): a what-if run measures the candidate
+    /// topology, not the controllers layered on top of it.
+    template: EpdConfig,
+    /// Seconds of synthetic arrivals per evaluation.
+    pub horizon: f64,
+    pool: SimPool,
+    evals: u64,
+}
+
+impl WhatIfEvaluator {
+    pub fn new(spec: LmmSpec, device: DeviceSpec, epd: &EpdConfig) -> WhatIfEvaluator {
+        let mut template = epd.clone();
+        template.role_switching = false;
+        template.planner = PlannerPolicy::Greedy;
+        template.plan_interval = 0.0;
+        template.router = RouterPolicy::Off;
+        template.fault_seed = 0;
+        WhatIfEvaluator {
+            spec,
+            device,
+            template,
+            horizon: epd.whatif_horizon.max(0.5),
+            pool: SimPool::default(),
+            evals: 0,
+        }
+    }
+
+    /// Honest evaluations run so far (feeds the planner's stats).
+    pub fn evals(&self) -> u64 {
+        self.evals
+    }
+
+    /// The template with its instance list rebuilt for `cand`, keeping
+    /// the live per-stage batch sizes.
+    fn candidate_config(&self, cand: Topology) -> EpdConfig {
+        let batch = |role: Stage| {
+            self.template
+                .instances
+                .iter()
+                .find(|i| i.role == role)
+                .map(|i| i.max_batch)
+                .unwrap_or(1)
+        };
+        let mut cfg = self.template.clone();
+        cfg.instances = EpdConfig::epd(
+            cand,
+            batch(Stage::Encode),
+            batch(Stage::Prefill),
+            batch(Stage::Decode),
+        )
+        .instances;
+        cfg
+    }
+
+    /// Synthesize the planning horizon's workload from the profile: a
+    /// t = 0 prelude standing in for queued backlog, then Poisson
+    /// arrivals at the profiled rate with the profiled request shape.
+    fn synth_requests(&self, profile: &WorkloadProfile) -> Vec<Request> {
+        let rate = profile.arrival_rate;
+        let queued: f64 = profile.queue_len.iter().sum();
+        if rate <= 1e-9 && queued < 0.5 {
+            return Vec::new();
+        }
+        let n_backlog = (queued.round().max(0.0) as usize).min(MAX_BACKLOG);
+        let n_arrive = if rate <= 1e-9 {
+            0
+        } else {
+            ((rate * self.horizon).ceil() as usize).clamp(2, MAX_ARRIVALS)
+        };
+        let images = profile.images_per_request.round().max(0.0) as u32;
+        let prompt = profile.prompt_tokens.round().max(1.0) as u32;
+        let output = profile.output_tokens.round().max(1.0) as u32;
+        let mut rng = Rng::new(WHATIF_SEED);
+        let mut out = Vec::with_capacity(n_backlog + n_arrive);
+        for i in 0..n_backlog {
+            out.push(build_request(&self.spec, i as u64, 0.0, prompt, images, Resolution::four_k(), output));
+        }
+        let mut t = 0.0;
+        for i in 0..n_arrive {
+            t += rng.exp(rate);
+            out.push(build_request(
+                &self.spec,
+                (n_backlog + i) as u64,
+                t,
+                prompt,
+                images,
+                Resolution::four_k(),
+                output,
+            ));
+        }
+        out
+    }
+
+    /// Score `cand` under the profiled workload: mean end-to-end latency
+    /// plus a penalty per request the candidate failed to finish within
+    /// the run (shed, or starved on an instance-less stage). Lower is
+    /// better; an idle profile scores 0 for every candidate.
+    pub fn score(&mut self, profile: &WorkloadProfile, cand: Topology) -> f64 {
+        let requests = self.synth_requests(profile);
+        if requests.is_empty() {
+            return 0.0;
+        }
+        let mut cfg = SimConfig::new(self.spec.clone(), self.device, self.candidate_config(cand));
+        cfg.record_timelines = false;
+        let out = Simulator::run_pooled(&cfg, &requests, &mut self.pool);
+        self.evals += 1;
+        let n = requests.len() as f64;
+        let missing = n - out.streamed.finished as f64;
+        out.mean_latency() + missing.max(0.0) * (4.0 * self.horizon) / n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelId;
+
+    fn evaluator() -> WhatIfEvaluator {
+        let epd = EpdConfig::epd(Topology::new(2, 2, 1), 1, 1, 2);
+        WhatIfEvaluator::new(LmmSpec::get(ModelId::MiniCpmV26), DeviceSpec::a100(), &epd)
+    }
+
+    fn pressured_profile() -> WorkloadProfile {
+        WorkloadProfile {
+            arrival_rate: 2.5,
+            images_per_request: 0.0,
+            prompt_tokens: 64.0,
+            output_tokens: 160.0,
+            mm_tokens: 0.0,
+            service: [0.0, 0.1, 0.5],
+            queue_len: [0.0, 0.5, 12.0],
+            backlog: [0.0, 0.3, 30.0],
+            utilization: [0.05, 0.2, 1.0],
+            instances: [2, 2, 1],
+        }
+    }
+
+    #[test]
+    fn idle_profile_scores_zero() {
+        let mut ev = evaluator();
+        let idle = WorkloadProfile {
+            arrival_rate: 0.0,
+            queue_len: [0.0; 3],
+            ..pressured_profile()
+        };
+        assert_eq!(ev.score(&idle, Topology::new(2, 2, 1)), 0.0);
+        assert_eq!(ev.evals(), 0, "idle scoring runs no simulation");
+    }
+
+    #[test]
+    fn scores_are_deterministic_and_favor_the_relieving_topology() {
+        let mut ev = evaluator();
+        let prof = pressured_profile();
+        let cur = ev.score(&prof, Topology::new(2, 2, 1));
+        let cur2 = ev.score(&prof, Topology::new(2, 2, 1));
+        assert_eq!(cur.to_bits(), cur2.to_bits(), "common random numbers: replayable");
+        let shifted = ev.score(&prof, Topology::new(1, 1, 3));
+        assert!(
+            shifted < cur,
+            "decode-starved profile must prefer decode capacity: {shifted} vs {cur}"
+        );
+        assert_eq!(ev.evals(), 3);
+    }
+
+    #[test]
+    fn template_disables_every_control_loop() {
+        let mut epd = EpdConfig::epd(Topology::new(2, 2, 1), 1, 1, 2);
+        epd.role_switching = true;
+        epd.planner = PlannerPolicy::Surrogate;
+        epd.router = RouterPolicy::On;
+        epd.fault_seed = 9;
+        let ev = WhatIfEvaluator::new(LmmSpec::get(ModelId::MiniCpmV26), DeviceSpec::a100(), &epd);
+        assert!(!ev.template.role_switching, "no nested planning");
+        assert_eq!(ev.template.planner, PlannerPolicy::Greedy);
+        assert_eq!(ev.template.router, RouterPolicy::Off);
+        assert_eq!(ev.template.fault_seed, 0);
+    }
+}

@@ -90,6 +90,17 @@ impl<T> Slab<T> {
         self.live == 0
     }
 
+    /// Drop every value and reset the watermark, keeping the slot and
+    /// free-list allocations — the recycling hook for pooled simulator
+    /// runs ([`crate::sim::engine::SimPool`]). A cleared slab assigns
+    /// slots exactly like a fresh one.
+    pub fn clear(&mut self) {
+        self.slots.clear();
+        self.free.clear();
+        self.live = 0;
+        self.peak_live = 0;
+    }
+
     /// Iterate occupied slots in slot order.
     pub fn iter(&self) -> impl Iterator<Item = (u32, &T)> {
         self.slots
@@ -173,6 +184,21 @@ mod tests {
         let idx = s.insert(7);
         s.remove(idx as u64);
         let _ = s[idx as u64];
+    }
+
+    #[test]
+    fn clear_restores_fresh_slot_numbering() {
+        let mut s: Slab<u64> = Slab::new();
+        for i in 0..5 {
+            s.insert(i);
+        }
+        s.remove(2);
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.peak_live(), 0, "watermark resets with the contents");
+        assert_eq!(s.insert(40), 0, "slot numbering restarts at zero");
+        assert_eq!(s.insert(41), 1);
+        assert_eq!(s.peak_live(), 2);
     }
 
     #[test]

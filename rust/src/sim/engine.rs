@@ -45,8 +45,9 @@ use crate::coordinator::migration::{MigrationKind, TransferModel};
 use crate::coordinator::planner::{PlannerConfig, ReallocationPlanner};
 use crate::coordinator::profiler::WorkloadProfiler;
 use crate::coordinator::role_switch::SwitchPolicy;
-use crate::core::config::EpdConfig;
+use crate::core::config::{EpdConfig, PlannerPolicy};
 use crate::core::request::{Priority, Request, RequestId, RequestTimeline};
+use crate::optimizer::whatif::WhatIfEvaluator;
 use crate::core::slo::Slo;
 use crate::core::stage::Stage;
 use crate::core::topology::DeploymentMode;
@@ -111,6 +112,55 @@ impl SimConfig {
             eager_arrivals: false,
             faults,
         }
+    }
+}
+
+/// Recyclable simulator buffers: the event heap, the request slab and
+/// the batch-formation scratch vectors, reused across runs instead of
+/// reallocated per run.
+///
+/// The PR 5 arenas made these allocation-free *within* a run; the
+/// what-if evaluator (`optimizer::whatif`) runs hundreds of tiny
+/// simulations per planning pass, where per-run setup dominates — so the
+/// pool carries the warmed allocations *between* runs. Every buffer is
+/// stored cleared, and a cleared buffer is behaviorally identical to a
+/// fresh one (slot numbering, event sequencing), so
+/// [`Simulator::run_pooled`] is bit-for-bit equivalent to
+/// [`Simulator::run`] — which is itself just a pooled run over a
+/// throwaway pool (property-tested in `rust/tests/property_surrogate.rs`).
+#[derive(Default)]
+pub struct SimPool {
+    events: EventQueue,
+    reqs: Slab<ReqState>,
+    vec_pool: Vec<Vec<QueuedRequest>>,
+    scratch_insts: Vec<usize>,
+    scratch_order: Vec<usize>,
+    scratch_loads: Vec<f64>,
+    scratch_ids: Vec<RequestId>,
+    scratch_deltas: Vec<(RequestId, u64)>,
+    scratch_active: Vec<RequestId>,
+    /// Completed runs that recycled these buffers (telemetry).
+    runs: u64,
+}
+
+impl SimPool {
+    /// Completed runs that have recycled this pool's buffers.
+    pub fn runs(&self) -> u64 {
+        self.runs
+    }
+}
+
+impl std::fmt::Debug for SimPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SimPool").field("runs", &self.runs).finish_non_exhaustive()
+    }
+}
+
+impl Clone for SimPool {
+    /// Pools hold scratch, not state: a clone starts cold rather than
+    /// duplicating warmed buffers (lets owners derive `Clone`).
+    fn clone(&self) -> SimPool {
+        SimPool::default()
     }
 }
 
@@ -300,6 +350,9 @@ pub struct Simulator<'a> {
     /// state is bounded by in-flight requests. Event payloads carry slot
     /// indices (widened to `u64` engine-side, matching `RequestId`).
     reqs: Slab<ReqState>,
+    /// Peak slab occupancy stashed by [`Self::harvest`] when the slab is
+    /// recycled into the pool before `into_outcome` reads it.
+    pooled_peak_live: usize,
     /// The workload being replayed (arrivals stream from it lazily).
     requests: &'a [Request],
     /// Arrival order when the input is not already sorted by arrival
@@ -377,12 +430,28 @@ pub struct Simulator<'a> {
 impl<'a> Simulator<'a> {
     /// Run a workload to completion and return the outcome.
     pub fn run(cfg: &'a SimConfig, requests: &'a [Request]) -> SimOutcome {
-        let mut sim = Simulator::new(cfg, requests);
+        // A throwaway pool's buffers are all fresh, so this is the
+        // pooled path with zero recycling — one code path, bit-for-bit.
+        let mut pool = SimPool::default();
+        Self::run_pooled(cfg, requests, &mut pool)
+    }
+
+    /// Run a workload to completion, borrowing the big simulator buffers
+    /// from `pool` and returning them (cleared) afterwards. Repeated
+    /// short runs — the what-if evaluator's bread and butter — skip the
+    /// per-run heap/slab/scratch allocations entirely.
+    pub fn run_pooled(
+        cfg: &'a SimConfig,
+        requests: &'a [Request],
+        pool: &mut SimPool,
+    ) -> SimOutcome {
+        let mut sim = Simulator::new(cfg, requests, pool);
         sim.main_loop();
+        sim.harvest(pool);
         sim.into_outcome()
     }
 
-    fn new(cfg: &'a SimConfig, requests: &'a [Request]) -> Simulator<'a> {
+    fn new(cfg: &'a SimConfig, requests: &'a [Request], pool: &mut SimPool) -> Simulator<'a> {
         let cost = CostModel::new(cfg.spec.clone(), cfg.device);
         let transfer = TransferModel::from_device(&cfg.device);
         let mem = MemoryModel::new(cfg.spec.clone(), cfg.device);
@@ -443,8 +512,17 @@ impl<'a> Simulator<'a> {
             });
             Some(order)
         };
-        let mut events = EventQueue::new();
+        // Pool buffers arrive cleared; a cleared buffer behaves exactly
+        // like a fresh one (see `SimPool`), it just keeps its capacity.
+        let mut events = std::mem::take(&mut pool.events);
         events.reserve_seqs(requests.len() as u64);
+
+        let mut planner = ReallocationPlanner::new(PlannerConfig::from_epd(&cfg.epd, cfg.switch_policy));
+        if cfg.epd.role_switching && cfg.epd.planner == PlannerPolicy::Surrogate {
+            // The evaluator's template forces `role_switching = false`,
+            // so its inner what-if runs never recurse into planning.
+            planner.attach_surrogate(WhatIfEvaluator::new(cfg.spec.clone(), cfg.device, &cfg.epd));
+        }
 
         let mut sim = Simulator {
             cfg,
@@ -454,7 +532,8 @@ impl<'a> Simulator<'a> {
             events,
             now: 0.0,
             insts,
-            reqs: Slab::new(),
+            reqs: std::mem::take(&mut pool.reqs),
+            pooled_peak_live: 0,
             requests,
             arrival_order,
             next_arrival: 0,
@@ -469,13 +548,13 @@ impl<'a> Simulator<'a> {
             admission: AdmissionStats::default(),
             entry_parked: Vec::new(),
             prefill_parked: Vec::new(),
-            scratch_insts: Vec::new(),
-            scratch_order: Vec::new(),
-            scratch_loads: Vec::new(),
-            scratch_ids: Vec::new(),
-            scratch_deltas: Vec::new(),
-            scratch_active: Vec::new(),
-            vec_pool: Vec::new(),
+            scratch_insts: std::mem::take(&mut pool.scratch_insts),
+            scratch_order: std::mem::take(&mut pool.scratch_order),
+            scratch_loads: std::mem::take(&mut pool.scratch_loads),
+            scratch_ids: std::mem::take(&mut pool.scratch_ids),
+            scratch_deltas: std::mem::take(&mut pool.scratch_deltas),
+            scratch_active: std::mem::take(&mut pool.scratch_active),
+            vec_pool: std::mem::take(&mut pool.vec_pool),
             enc_cache: EncoderCache::with_capacity_tokens(
                 cfg.epd.encoder_cache_tokens,
                 cfg.spec.vision.tokens_per_tile.max(1),
@@ -485,7 +564,7 @@ impl<'a> Simulator<'a> {
             // runs stay bit-for-bit; the engine-side default lives in
             // `EpdConfig::monitor_alpha`.
             profiler: WorkloadProfiler::new(0.3),
-            planner: ReallocationPlanner::new(PlannerConfig::from_epd(&cfg.epd, cfg.switch_policy)),
+            planner,
             busy_acc: [0.0; 3],
             ep_overlap: EpOverlapStats::default(),
             pd_overlap: PdOverlapStats::default(),
@@ -603,8 +682,40 @@ impl<'a> Simulator<'a> {
         })
     }
 
+    /// Return the recyclable buffers to `pool`, cleared. Runs after
+    /// `main_loop` and before `into_outcome`; the request slab is only
+    /// recycled when timelines are off (otherwise `into_outcome` still
+    /// needs to drain straggler timelines from it).
+    fn harvest(&mut self, pool: &mut SimPool) {
+        // The loop can break early (all work done) with future events
+        // still heaped — drop them with the recycling clear.
+        self.events.clear();
+        pool.events = std::mem::take(&mut self.events);
+        if !self.cfg.record_timelines {
+            self.pooled_peak_live = self.reqs.peak_live();
+            self.reqs.clear();
+            pool.reqs = std::mem::take(&mut self.reqs);
+        }
+        self.scratch_insts.clear();
+        pool.scratch_insts = std::mem::take(&mut self.scratch_insts);
+        self.scratch_order.clear();
+        pool.scratch_order = std::mem::take(&mut self.scratch_order);
+        self.scratch_loads.clear();
+        pool.scratch_loads = std::mem::take(&mut self.scratch_loads);
+        self.scratch_ids.clear();
+        pool.scratch_ids = std::mem::take(&mut self.scratch_ids);
+        self.scratch_deltas.clear();
+        pool.scratch_deltas = std::mem::take(&mut self.scratch_deltas);
+        self.scratch_active.clear();
+        pool.scratch_active = std::mem::take(&mut self.scratch_active);
+        pool.vec_pool = std::mem::take(&mut self.vec_pool);
+        pool.runs += 1;
+    }
+
     fn into_outcome(self) -> SimOutcome {
-        let peak_live = self.reqs.peak_live();
+        // `max` with the harvest stash: 0 when the slab was not recycled,
+        // so the unpooled path reads exactly what it always did.
+        let peak_live = self.reqs.peak_live().max(self.pooled_peak_live);
         let mut timelines = self.done_timelines;
         if self.cfg.record_timelines {
             // Unfinished stragglers (terminated runs) report their
@@ -3386,7 +3497,7 @@ mod tests {
             let mut cfg = epd_cfg(&spec);
             cfg.epd = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
             cfg.epd.pd_layer_groups = groups;
-            let mut sim = Simulator::new(&cfg, &reqs);
+            let mut sim = Simulator::new(&cfg, &reqs, &mut SimPool::default());
             let d = sim.insts.iter().position(|i| i.kind == WorkKind::Decode).unwrap();
             // The lone decoder spends the whole request lifetime
             // mid-switch; the role returns only at t = 50.
@@ -3417,7 +3528,7 @@ mod tests {
         let mut cfg = epd_cfg(&spec);
         cfg.epd = EpdConfig::epd(Topology::new(1, 1, 2), 1, 1, 128);
         cfg.epd.pd_layer_groups = 4;
-        let mut sim = Simulator::new(&cfg, &reqs);
+        let mut sim = Simulator::new(&cfg, &reqs, &mut SimPool::default());
         let mut diverted = false;
         while let Some((t, ev)) = sim.events.pop() {
             sim.now = t;
@@ -3454,7 +3565,7 @@ mod tests {
         let reqs = mk_requests(1, 1.0, 1, 4, &spec);
         let mut cfg = epd_cfg(&spec);
         cfg.epd = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
-        let mut sim = Simulator::new(&cfg, &reqs);
+        let mut sim = Simulator::new(&cfg, &reqs, &mut SimPool::default());
         let e = sim.insts.iter().position(|i| i.kind == WorkKind::Encode).unwrap();
         sim.insts[e].switching = true;
         sim.events.push(50.0, Event::SwitchDone { instance: e as u32 });
@@ -3488,7 +3599,7 @@ mod tests {
             let mut cfg = epd_cfg(&spec);
             cfg.epd = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
             cfg.epd.ep_chunk_tokens = chunk;
-            let mut sim = Simulator::new(&cfg, &reqs);
+            let mut sim = Simulator::new(&cfg, &reqs, &mut SimPool::default());
             let p = sim.insts.iter().position(|i| i.kind == WorkKind::Prefill).unwrap();
             sim.insts[p].switching = true;
             sim.events.push(50.0, Event::SwitchDone { instance: p as u32 });
@@ -3608,7 +3719,7 @@ mod tests {
             .unwrap();
         epd.instances[d_small].max_batch = 1;
         let cfg = SimConfig::new(spec.clone(), DeviceSpec::a100(), epd);
-        let sim = Simulator::new(&cfg, &[]);
+        let sim = Simulator::new(&cfg, &[], &mut SimPool::default());
         let decoders: Vec<usize> = sim
             .insts
             .iter()

@@ -142,6 +142,15 @@ impl EventQueue {
         self.heap.pop().map(|s| (s.time, s.event))
     }
 
+    /// Drop all events and reset the sequence counter, keeping the
+    /// heap's allocation — the recycling hook for pooled simulator runs
+    /// ([`crate::sim::engine::SimPool`]). A cleared queue is
+    /// indistinguishable from a fresh one except for capacity.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -200,5 +209,20 @@ mod tests {
     fn rejects_nan_times() {
         let mut q = EventQueue::new();
         q.push(f64::NAN, Event::MonitorTick);
+    }
+
+    #[test]
+    fn clear_resets_to_fresh_state() {
+        let mut q = EventQueue::new();
+        q.reserve_seqs(10);
+        q.push(1.0, Event::MonitorTick);
+        q.push(2.0, Event::MonitorTick);
+        q.clear();
+        assert!(q.is_empty());
+        // Sequence numbering restarts: FIFO order matches a fresh queue.
+        q.push(1.0, Event::Arrival(1));
+        q.push(1.0, Event::Arrival(2));
+        assert_eq!(q.pop().unwrap().1, Event::Arrival(1));
+        assert_eq!(q.pop().unwrap().1, Event::Arrival(2));
     }
 }

@@ -23,7 +23,7 @@ pub mod outcome;
 
 pub use arena::Slab;
 pub use cost::{CostModel, StragglerMap};
-pub use engine::{SimConfig, Simulator};
+pub use engine::{SimConfig, SimPool, Simulator};
 pub use fault::{FaultPlan, ResilienceStats};
 pub use link::{LinkScheduler, LinkStats};
 pub use outcome::{AdmissionStats, EpOverlapStats, PdOverlapStats, SimOutcome, StreamedMetrics};

@@ -316,6 +316,12 @@ impl SimOutcome {
                     ("released_steps", Json::num(self.reallocation.released_steps as f64)),
                     ("blocked_steps", Json::num(self.reallocation.blocked_steps as f64)),
                     ("aborted_plans", Json::num(self.reallocation.aborted_plans as f64)),
+                    ("surrogate_scored", Json::num(self.reallocation.surrogate_scored as f64)),
+                    ("whatif_evals", Json::num(self.reallocation.whatif_evals as f64)),
+                    (
+                        "forced_explorations",
+                        Json::num(self.reallocation.forced_explorations as f64),
+                    ),
                 ]),
             ),
             (

@@ -27,6 +27,9 @@ cargo test -q
 echo "==> engine supervision properties (fault-plan determinism, exactly-once, dormancy)"
 cargo test -q --test property_engine_faults
 
+echo "==> surrogate planning properties (GP bit-equivalence, pooled dormancy, replay, prefilter quality)"
+cargo test -q --test property_surrogate
+
 echo "==> engine chaos smoke (seeded kill wave via HTTP; exit-0 skip without artifacts)"
 cargo run --release --quiet --example chaos_recovery
 

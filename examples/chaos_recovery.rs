@@ -2,13 +2,15 @@
 //! frontend and watch the supervision layer redispatch the stranded
 //! requests — no hung client, no silent loss, clean drain.
 //!
-//! The engine runs 2E2P1D on tiny_lmm with supervision armed and a
-//! deterministic fault plan that panics one encoder after two jobs
-//! (instance 0 — a same-kind sibling always survives). A burst of
-//! concurrent `/v1/completions` posts rides through the kill; every
-//! response must be a 200 completion or a typed 5xx, `/metrics` must
-//! show the crash and redispatch counters, and a drain-mode shutdown
-//! must terminate with nothing in flight.
+//! The engine runs 2E2P1D on tiny_lmm with supervision armed, the
+//! circuit-breaker layer on, and a deterministic fault plan that panics
+//! one encoder after two jobs (instance 0 — a same-kind sibling always
+//! survives). A burst of concurrent `/v1/completions` posts rides
+//! through the kill; every response must be a 200 completion or a typed
+//! 5xx, `/metrics` must show the crash and redispatch counters plus the
+//! health-layer counters (the kill opens the dead worker's breaker,
+//! nothing is lost), and a drain-mode shutdown must terminate with
+//! nothing in flight.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example chaos_recovery
@@ -62,6 +64,11 @@ fn main() -> anyhow::Result<()> {
     epd.retry_base_ms = 5;
     epd.drain_timeout_ms = 60_000;
     epd.sample_interval = 0.02;
+    // Health-aware control plane: the seeded kill must surface as a
+    // breaker transition in /metrics (a flapping worker would escalate
+    // to quarantine — worker panics are one-shot here, so the smoke
+    // asserts the open; the flap escalation is property-tested).
+    epd.health_breaker = true;
     let mut cfg = EngineConfig::new("artifacts", epd);
     cfg.fault_plan = EngineFaultPlan::none().with_kill(0, 2);
 
@@ -117,6 +124,24 @@ fn main() -> anyhow::Result<()> {
         counter("requests_retried") + counter("requests_retargeted") >= 1.0,
         "redispatch counters must move under a kill"
     );
+    // Health-aware control plane: the kill feeds the breaker, the
+    // surviving sibling keeps the loss count at zero, and every
+    // health/hedge/budget counter is exposed for scrapers even at rest.
+    assert!(counter("breaker_opens") >= 1.0, "the kill must open the dead worker's breaker");
+    assert_eq!(counter("requests_lost") as u64, 0, "a surviving sibling means zero lost requests");
+    for key in [
+        "quarantines",
+        "breaker_probes",
+        "hedges_issued",
+        "hedges_won",
+        "hedges_cancelled",
+        "retry_budget_exhausted",
+    ] {
+        assert!(
+            resilience.get(key).is_some(),
+            "/metrics resilience must expose the {key} counter"
+        );
+    }
 
     server.stop();
     match Arc::try_unwrap(engine) {

@@ -61,6 +61,11 @@ fn cli() -> Cli {
                     Some("off"),
                     "engine chaos injection: off | wave | wave:<seed> (seeded worker-kill wave; implies supervised recovery paths are exercised)",
                 ),
+                opt(
+                    "health",
+                    Some("off"),
+                    "engine health layer: off | on (breaker-gated typed submits + cluster retry budget; implies --supervise)",
+                ),
             ],
             positional: vec![],
         })
@@ -104,6 +109,11 @@ fn cli() -> Cli {
                     "faults",
                     Some("off"),
                     "chaos injection: off | wave | wave:<seed> (seeded crash/link-degrade/straggler/OOM wave; replays bit-for-bit per seed)",
+                ),
+                opt(
+                    "health",
+                    Some("off"),
+                    "health-aware control plane: off | on | replan (on = circuit breakers + P95 hedged dispatch + cluster retry budget; replan adds fault-aware replanning via role switching)",
                 ),
                 flag("no-irp", "disable intra-request parallelism"),
                 flag(
@@ -238,6 +248,20 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                     anyhow::bail!("unknown --engine-faults '{other}' (off | wave | wave:<seed>)")
                 }
             }
+            match args.str("health") {
+                "off" => {}
+                "on" => {
+                    // Breaker-gated typed submits plus a cluster-wide
+                    // redispatch budget; hedged dispatch is sim-only (the
+                    // pull-based engine has no dispatch point to duplicate).
+                    // The breaker is fed by supervision crash sweeps, so
+                    // health implies --supervise.
+                    cfg.health_breaker = true;
+                    cfg.retry_budget_per_s = 4.0;
+                    cfg.supervise = true;
+                }
+                other => anyhow::bail!("unknown --health '{other}' (off | on)"),
+            }
             let engine = Arc::new(crate::engine::serve::EpdEngine::start(
                 crate::engine::serve::EngineConfig::new(args.str("artifacts"), cfg),
             )?);
@@ -335,6 +359,22 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                 }
                 other => anyhow::bail!("unknown --faults '{other}' (off | wave | wave:<seed>)"),
             }
+            match args.str("health") {
+                "off" => {}
+                s @ ("on" | "replan") => {
+                    // Mirrors the health-aware arm of perf_health_routing:
+                    // breakers + quarantine, P95 hedged dispatch, and a
+                    // cluster-wide redispatch budget.
+                    epd.health_breaker = true;
+                    epd.hedge_quantile = 0.95;
+                    epd.retry_budget_per_s = 4.0;
+                    if s == "replan" {
+                        epd.health_replan = true;
+                        epd.role_switching = true;
+                    }
+                }
+                other => anyhow::bail!("unknown --health '{other}' (off | on | replan)"),
+            }
             let mut cfg = SimConfig::new(spec.clone(), device, epd);
             let slo = Slo::new(args.f64("slo-ttft"), args.f64("slo-tpot"));
             if args.flag("no-timelines") {
@@ -389,6 +429,19 @@ fn dispatch(args: &crate::util::argp::Args) -> anyhow::Result<()> {
                         r.requests_retargeted,
                         r.recovery_seconds,
                         r.slo_dip
+                    );
+                }
+                if args.str("health") != "off" {
+                    let h = &out.resilience;
+                    println!(
+                        "health:     breaker opens {} quarantines {} probes {}  hedges {} (won {} / cancelled {})  budget sheds {}",
+                        h.breaker_opens,
+                        h.quarantines,
+                        h.breaker_probes,
+                        h.hedges_issued,
+                        h.hedges_won,
+                        h.hedges_cancelled,
+                        h.retry_budget_exhausted
                     );
                 }
                 if !out.timelines_recorded {

@@ -180,6 +180,16 @@ impl ReallocationPlanner {
         self.pending.len()
     }
 
+    /// Fault-aware emergency replanning (`health_replan = true`): arm the
+    /// next [`ReallocationPlanner::tick`] to plan immediately instead of
+    /// waiting out the remainder of `plan_interval`. A crash changes the
+    /// effective topology *now*; the caller pairs this with an immediate
+    /// out-of-band tick. Idempotent, and a no-op for a plan already in
+    /// flight (`tick` never abandons pending steps mid-plan).
+    pub fn force_plan(&mut self) {
+        self.last_plan = f64::NEG_INFINITY;
+    }
+
     /// One control tick: maybe adopt a fresh plan, then release at most
     /// one step for the caller to execute (sim `begin_switch` / engine
     /// `Ctrl::Switch`). `counts` are live non-migrating instance counts
@@ -594,6 +604,42 @@ mod tests {
             }
         }
         assert_eq!(released as u64, p.stats().released_steps);
+    }
+
+    #[test]
+    fn force_plan_overrides_the_interval_gate() {
+        let mut c = cfg(PlannerPolicy::Predictive);
+        c.plan_interval = 100.0;
+        let mut p = ReallocationPlanner::new(c);
+        let prof = {
+            let mut w = WorkloadProfiler::new(0.3);
+            let d = decode_pressured();
+            for s in Stage::ALL {
+                let i = s.index();
+                let base: [u32; 3] = [2, 2, 1];
+                w.observe_stage(s, d.queue_len[i] as usize, d.backlog[i], d.utilization[i], base[i]);
+            }
+            w
+        };
+        let queued = [false, false, true];
+        let mut counts = [2u32, 2, 1];
+        let s1 = p.tick(0.0, &prof, counts, queued).expect("initial plan");
+        counts[s1.from.index()] -= 1;
+        counts[s1.to.index()] += 1;
+        for k in 1..10 {
+            if let Some(s) = p.tick(k as f64, &prof, counts, queued) {
+                counts[s.from.index()] -= 1;
+                counts[s.to.index()] += 1;
+            }
+        }
+        assert_eq!(p.stats().plans, 1);
+        // Same pressure again well inside the interval: the gate holds...
+        assert!(p.tick(50.0, &prof, [2, 2, 1], queued).is_none(), "interval gate");
+        assert_eq!(p.stats().plans, 1);
+        // ...until a crash forces an out-of-band emergency pass.
+        p.force_plan();
+        assert!(p.tick(50.5, &prof, [2, 2, 1], queued).is_some(), "emergency replan");
+        assert_eq!(p.stats().plans, 2);
     }
 
     #[test]

@@ -337,6 +337,39 @@ pub struct EpdConfig {
     /// Injected streamed EP/PD handoff failures (each exercises the
     /// per-request monolithic fallback).
     pub engine_fault_handoff_errors: u32,
+    /// Health-aware control plane: per-instance circuit breakers on the
+    /// dispatch path (`router/health.rs`). Off (the default) keeps
+    /// dispatch fault-blind and bit-for-bit identical to prior builds.
+    pub health_breaker: bool,
+    /// Seconds a breaker stays Open after a failure before probing.
+    pub health_open_secs: f64,
+    /// Probe admissions granted when an Open breaker goes Half-Open.
+    pub health_probes: u32,
+    /// Failures inside `health_flap_window_secs` that escalate an
+    /// instance from Open into quarantine.
+    pub health_flap_threshold: u32,
+    /// Width (seconds) of the flapping-detection window.
+    pub health_flap_window_secs: f64,
+    /// Base quarantine probation (seconds); doubles per repeat offence
+    /// with deterministic seeded jitter on top.
+    pub health_probation_secs: f64,
+    /// Fault-aware replanning: Open/quarantined instances count zero
+    /// capacity in topology scoring and a crash forces an out-of-band
+    /// plan tick. Off by default.
+    pub health_replan: bool,
+    /// Hedged dispatch trigger quantile in (0, 1]: a request whose stage
+    /// wait exceeds this quantile of observed waits gets a duplicate on a
+    /// healthy sibling (first completion wins). 0 (the default) disables
+    /// hedging entirely.
+    pub hedge_quantile: f64,
+    /// Stage-wait samples required before hedge thresholds engage.
+    pub hedge_min_samples: u64,
+    /// Cluster-wide redispatch budget, tokens per second: crash-wave
+    /// retries beyond the bucket degrade to typed sheds instead of a
+    /// retry storm. 0 (the default) leaves redispatch uncapped.
+    pub retry_budget_per_s: f64,
+    /// Burst capacity of the redispatch token bucket.
+    pub retry_budget_burst: f64,
 }
 
 impl EpdConfig {
@@ -399,6 +432,17 @@ impl EpdConfig {
             engine_fault_after_jobs: 4,
             engine_fault_slow_ms: 0,
             engine_fault_handoff_errors: 0,
+            health_breaker: false,
+            health_open_secs: 5.0,
+            health_probes: 3,
+            health_flap_threshold: 2,
+            health_flap_window_secs: 60.0,
+            health_probation_secs: 10.0,
+            health_replan: false,
+            hedge_quantile: 0.0,
+            hedge_min_samples: 20,
+            retry_budget_per_s: 0.0,
+            retry_budget_burst: 10.0,
         }
     }
 
@@ -491,6 +535,17 @@ impl EpdConfig {
     /// engine_fault_after_jobs = 4 # jobs a doomed worker completes first
     /// engine_fault_slow_ms = 0 # injected straggler delay per job
     /// engine_fault_handoff_errors = 0 # injected streamed-handoff failures
+    /// health_breaker = false  # circuit breakers on the dispatch path
+    /// health_open_secs = 5.0  # Open hold before probing
+    /// health_probes = 3       # Half-Open probe budget
+    /// health_flap_threshold = 2 # failures in the window => quarantine
+    /// health_flap_window_secs = 60.0
+    /// health_probation_secs = 10.0 # base probation; doubles per offence
+    /// health_replan = false   # unhealthy = zero capacity + emergency plan tick
+    /// hedge_quantile = 0.0    # 0 = hedged dispatch off; e.g. 0.95
+    /// hedge_min_samples = 20  # sketch warm-up before hedging engages
+    /// retry_budget_per_s = 0.0 # 0 = cluster redispatch uncapped
+    /// retry_budget_burst = 10.0
     /// [sched]
     /// queue = "fcfs"          # fcfs | sjf | slo-aware
     /// assign = "least-loaded" # round-robin | least-loaded
@@ -621,6 +676,36 @@ impl EpdConfig {
         if let Some(v) = doc.get_i64("", "engine_fault_handoff_errors") {
             cfg.engine_fault_handoff_errors = v.max(0) as u32;
         }
+        cfg.health_breaker = doc.get_bool("", "health_breaker").unwrap_or(false);
+        if let Some(v) = doc.get_f64("", "health_open_secs") {
+            cfg.health_open_secs = v.max(0.0);
+        }
+        if let Some(v) = doc.get_i64("", "health_probes") {
+            cfg.health_probes = v.max(1) as u32;
+        }
+        if let Some(v) = doc.get_i64("", "health_flap_threshold") {
+            cfg.health_flap_threshold = v.max(0) as u32;
+        }
+        if let Some(v) = doc.get_f64("", "health_flap_window_secs") {
+            cfg.health_flap_window_secs = v.max(0.0);
+        }
+        if let Some(v) = doc.get_f64("", "health_probation_secs") {
+            cfg.health_probation_secs = v.max(0.0);
+        }
+        cfg.health_replan = doc.get_bool("", "health_replan").unwrap_or(false);
+        if let Some(v) = doc.get_f64("", "hedge_quantile") {
+            anyhow::ensure!((0.0..=1.0).contains(&v), "bad 'hedge_quantile': must be in [0, 1]");
+            cfg.hedge_quantile = v;
+        }
+        if let Some(v) = doc.get_i64("", "hedge_min_samples") {
+            cfg.hedge_min_samples = v.max(1) as u64;
+        }
+        if let Some(v) = doc.get_f64("", "retry_budget_per_s") {
+            cfg.retry_budget_per_s = v.max(0.0);
+        }
+        if let Some(v) = doc.get_f64("", "retry_budget_burst") {
+            cfg.retry_budget_burst = v.max(1.0);
+        }
         if let Some(q) = doc.get_str("sched", "queue") {
             let q = QueuePolicy::parse(q).context("bad sched.queue")?;
             cfg.sched_encode.queue = q;
@@ -680,6 +765,17 @@ mod tests {
         assert_eq!(cfg.engine_fault_after_jobs, 4);
         assert_eq!(cfg.engine_fault_slow_ms, 0);
         assert_eq!(cfg.engine_fault_handoff_errors, 0);
+        assert!(!cfg.health_breaker, "the breaker is opt-in");
+        assert_eq!(cfg.health_open_secs, 5.0);
+        assert_eq!(cfg.health_probes, 3);
+        assert_eq!(cfg.health_flap_threshold, 2);
+        assert_eq!(cfg.health_flap_window_secs, 60.0);
+        assert_eq!(cfg.health_probation_secs, 10.0);
+        assert!(!cfg.health_replan, "fault-aware replanning is opt-in");
+        assert_eq!(cfg.hedge_quantile, 0.0, "hedged dispatch is opt-in");
+        assert_eq!(cfg.hedge_min_samples, 20);
+        assert_eq!(cfg.retry_budget_per_s, 0.0, "redispatch uncapped by default");
+        assert_eq!(cfg.retry_budget_burst, 10.0);
 
         let ds = EpdConfig::distserve(7, 1, 1, 128);
         assert_eq!(ds.mode, DeploymentMode::PdDisagg);
@@ -737,6 +833,17 @@ engine_fault_kills = 2
 engine_fault_after_jobs = 6
 engine_fault_slow_ms = 15
 engine_fault_handoff_errors = 1
+health_breaker = true
+health_open_secs = 2.0
+health_probes = 5
+health_flap_threshold = 3
+health_flap_window_secs = 30.0
+health_probation_secs = 8.0
+health_replan = true
+hedge_quantile = 0.95
+hedge_min_samples = 10
+retry_budget_per_s = 4.0
+retry_budget_burst = 20.0
 [sched]
 queue = "sjf"
 assign = "round-robin"
@@ -784,6 +891,17 @@ assign = "round-robin"
         assert_eq!(cfg.engine_fault_after_jobs, 6);
         assert_eq!(cfg.engine_fault_slow_ms, 15);
         assert_eq!(cfg.engine_fault_handoff_errors, 1);
+        assert!(cfg.health_breaker);
+        assert_eq!(cfg.health_open_secs, 2.0);
+        assert_eq!(cfg.health_probes, 5);
+        assert_eq!(cfg.health_flap_threshold, 3);
+        assert_eq!(cfg.health_flap_window_secs, 30.0);
+        assert_eq!(cfg.health_probation_secs, 8.0);
+        assert!(cfg.health_replan);
+        assert_eq!(cfg.hedge_quantile, 0.95);
+        assert_eq!(cfg.hedge_min_samples, 10);
+        assert_eq!(cfg.retry_budget_per_s, 4.0);
+        assert_eq!(cfg.retry_budget_burst, 20.0);
         assert_eq!(cfg.sched_decode.queue, QueuePolicy::Sjf);
         assert_eq!(cfg.sched_encode.assign, AssignPolicy::RoundRobin);
         let d = cfg.instances.iter().find(|i| i.role == Stage::Decode).unwrap();
@@ -821,6 +939,14 @@ assign = "round-robin"
         let doc = TomlDoc::parse("router_tenant_weights = \"0;4\"").unwrap();
         assert!(EpdConfig::from_toml(&doc).is_err());
         let doc = TomlDoc::parse("router_slo_ttft = -1.0").unwrap();
+        assert!(EpdConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn from_toml_rejects_bad_hedge_quantile() {
+        let doc = TomlDoc::parse("hedge_quantile = 1.5").unwrap();
+        assert!(EpdConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("hedge_quantile = -0.1").unwrap();
         assert!(EpdConfig::from_toml(&doc).is_err());
     }
 

@@ -27,7 +27,7 @@ use super::instance::{instance_main, Ctrl, InstanceParams};
 use super::job::{FailReason, GenFailure, GenOutput, GenRequest, GenResponse, Job, ReqCtx};
 use super::queues::StageQueues;
 use super::supervise::{
-    fail_and_clean, lock_clean, supervise_tick, EngineFaultPlan, Supervision,
+    fail_and_clean, lock_clean, stage_has_healthy, supervise_tick, EngineFaultPlan, Supervision,
 };
 
 /// Engine configuration.
@@ -188,6 +188,23 @@ impl EpdEngine {
     ) -> Result<(u64, Receiver<GenResponse>), ApiError> {
         if self.queues.supervision.is_draining() {
             return Err(ApiError::draining(self.retry_hint_ms()));
+        }
+        // Circuit breakers at the typed front door (`health_breaker`):
+        // a request whose path needs a stage with no healthy (alive and
+        // breaker-admitting) instance is shed with a retry hint instead
+        // of queueing onto a fabric that cannot serve it. The engine's
+        // pull-based dispatch needs no per-instance steering beyond this
+        // — a breaker-refused instance is either dead (it pulls nothing)
+        // or probing its way back through the shared queues.
+        if self.queues.supervision.health_active() {
+            let mode = self.cfg.epd.mode;
+            let mut stages = vec![Stage::Prefill, Stage::Decode];
+            if req.media.images > 0 {
+                stages.push(Stage::Encode);
+            }
+            if stages.iter().any(|&s| !stage_has_healthy(&self.queues, mode, s)) {
+                return Err(ApiError::shed(self.retry_hint_ms()));
+            }
         }
         if let Some(rc) = &self.router {
             let outlook = self.router_outlook(req.media.images);
@@ -506,6 +523,11 @@ fn monitor_main(
     let sample = Duration::from_secs_f64(epd.sample_interval.max(0.001));
     let mut profiler = WorkloadProfiler::new(epd.monitor_alpha.clamp(0.01, 1.0));
     let mut planner = ReallocationPlanner::new(PlannerConfig::from_epd(&epd, policy));
+    // Fault-aware replanning (`health_replan`): a crash swept this tick
+    // forces the planner to re-plan immediately instead of waiting out
+    // its cadence.
+    let health_replan = crate::router::health::HealthConfig::from_epd(&epd)
+        .is_some_and(|hc| hc.replan);
     let t0 = std::time::Instant::now();
     let mut prev_busy = [0.0f64; 3];
     let mut prev_jobs = [0u64; 3];
@@ -516,9 +538,12 @@ fn monitor_main(
         // Supervision pass: heartbeat staleness, crash sweeps, due
         // retries, uncovered-stage evacuation, deadline watchdog. A
         // no-op (five cheap checks) when supervision is off.
-        supervise_tick(&queues, &metrics, epd.mode);
+        let crashes_swept = supervise_tick(&queues, &metrics, epd.mode);
         if !epd.role_switching {
             continue;
+        }
+        if health_replan && crashes_swept > 0 {
+            planner.force_plan();
         }
         let now = t0.elapsed().as_secs_f64();
         let counts = [

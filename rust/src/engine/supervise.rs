@@ -21,6 +21,7 @@ use crate::core::config::EpdConfig;
 use crate::core::stage::Stage;
 use crate::core::topology::DeploymentMode;
 use crate::metrics::recorder::MetricsRecorder;
+use crate::router::health::{HealthConfig, HealthStats, HealthTracker, RetryBudget};
 use crate::util::rng::Rng;
 
 use super::instance::pull_stages;
@@ -276,6 +277,14 @@ pub struct Supervision {
     retries: Mutex<Vec<RetryItem>>,
     watch: Mutex<Vec<Weak<ReqCtx>>>,
     draining: AtomicBool,
+    /// Per-instance circuit breakers (`health_breaker = on`): fed by
+    /// crash events, consulted at typed-submit admission. `None` at
+    /// defaults — the health layer is bit-for-bit absent.
+    health: Option<Mutex<HealthTracker>>,
+    /// Cluster-wide redispatch token bucket (`retry_budget_per_s > 0`):
+    /// crash sweeps and worker-failure retries past the budget degrade
+    /// to typed sheds instead of a retry storm.
+    retry_budget: Option<Mutex<RetryBudget>>,
 }
 
 impl Supervision {
@@ -298,6 +307,8 @@ impl Supervision {
             retries: Mutex::new(Vec::new()),
             watch: Mutex::new(Vec::new()),
             draining: AtomicBool::new(false),
+            health: None,
+            retry_budget: None,
         }
     }
 
@@ -315,6 +326,15 @@ impl Supervision {
         if epd.engine_fault_seed != 0 {
             s.jitter_seed = epd.engine_fault_seed;
         }
+        // Same gating as the simulator: the health layer resolves to
+        // nothing at defaults (no tracker, no bucket).
+        let health_cfg = HealthConfig::from_epd(epd);
+        s.health = health_cfg
+            .filter(|hc| hc.breaker)
+            .map(|hc| Mutex::new(HealthTracker::new(hc, instances)));
+        s.retry_budget = health_cfg
+            .filter(|hc| hc.retry_budget_per_s > 0.0)
+            .map(|hc| Mutex::new(RetryBudget::new(hc.retry_budget_per_s, hc.retry_budget_burst)));
         s
     }
 
@@ -360,9 +380,50 @@ impl Supervision {
             return false;
         }
         warn!("instance {instance} crashed: {reason}");
+        // Feed the breaker: the instance opens (and a flapper
+        // quarantines) the moment its death is recorded.
+        if let Some(h) = &self.health {
+            let now = self.now_ms() as f64 / 1000.0;
+            lock_clean(h).on_failure(now, instance);
+        }
         lock_clean(&self.crashes)
             .push(CrashEvent { instance, reason: reason.to_string() });
         true
+    }
+
+    /// Whether the breaker layer is configured (`health_breaker = on`).
+    pub fn health_active(&self) -> bool {
+        self.health.is_some()
+    }
+
+    /// Breaker admission check for `instance`: `true` with no breaker
+    /// configured; otherwise consumes a Half-Open probe like any
+    /// dispatch offer would.
+    pub fn health_admits(&self, instance: usize) -> bool {
+        match &self.health {
+            Some(h) => {
+                let now = self.now_ms() as f64 / 1000.0;
+                lock_clean(h).admits(now, instance)
+            }
+            None => true,
+        }
+    }
+
+    /// Snapshot of the breaker counters for the `/metrics` mirror.
+    pub fn health_stats(&self) -> Option<HealthStats> {
+        self.health.as_ref().map(|h| lock_clean(h).stats)
+    }
+
+    /// One redispatch token, or `true` unconditionally when no retry
+    /// budget is configured.
+    pub fn budget_allows(&self) -> bool {
+        match &self.retry_budget {
+            Some(b) => {
+                let now = self.now_ms() as f64 / 1000.0;
+                lock_clean(b).try_take(now)
+            }
+            None => true,
+        }
     }
 
     /// Drain pending crash events (the supervisor tick owns recovery).
@@ -546,6 +607,13 @@ pub fn recover_or_fail(
     let sup = &queues.supervision;
     if let Some(job) = sup.ledger.take(token) {
         if sup.active() && ctx.retry_count() < sup.retry_limit {
+            if !sup.budget_allows() {
+                // Cluster retry budget exhausted: the failure degrades to
+                // a typed shed instead of another redispatch.
+                metrics.on_retry_budget_exhausted();
+                fail_and_clean(queues, ctx, FailReason::Runtime(what.to_string()), metrics);
+                return;
+            }
             let attempt = ctx.note_retry();
             metrics.on_request_retried();
             sup.schedule_retry(job, attempt);
@@ -565,10 +633,30 @@ fn stage_covered(queues: &StageQueues, mode: DeploymentMode, stage: Stage) -> bo
         .any(|(i, &r)| queues.supervision.is_alive(i) && pull_stages(mode, r).contains(&stage))
 }
 
+/// [`stage_covered`] plus the circuit breaker: an alive instance whose
+/// breaker refuses traffic (Open/Quarantined) does not count. The typed
+/// submit path sheds new requests when a required stage has no healthy
+/// instance left. Identical to [`stage_covered`] without
+/// `health_breaker` — `health_admits` is then unconditionally true.
+pub fn stage_has_healthy(queues: &StageQueues, mode: DeploymentMode, stage: Stage) -> bool {
+    let roles = queues.roles_snapshot();
+    roles.iter().enumerate().any(|(i, &r)| {
+        queues.supervision.is_alive(i)
+            && pull_stages(mode, r).contains(&stage)
+            && queues.supervision.health_admits(i)
+    })
+}
+
 /// One supervisor pass, run from the monitor loop (and from the drain
 /// loop in `shutdown`): heartbeat scan → crash sweep & redispatch → due
-/// retries → orphaned-queue evacuation → deadline watchdog.
-pub fn supervise_tick(queues: &StageQueues, metrics: &MetricsRecorder, mode: DeploymentMode) {
+/// retries → orphaned-queue evacuation → deadline watchdog. Returns the
+/// number of crash events swept this pass, so the monitor can force an
+/// out-of-band plan pass under `health_replan`.
+pub fn supervise_tick(
+    queues: &StageQueues,
+    metrics: &MetricsRecorder,
+    mode: DeploymentMode,
+) -> usize {
     let sup = &queues.supervision;
 
     // 1. Heartbeat scan: silent workers become synthetic crash events.
@@ -582,8 +670,11 @@ pub fn supervise_tick(queues: &StageQueues, metrics: &MetricsRecorder, mode: Dep
     // same-kind sibling (exactly once — sweeping removes the claim).
     // Decode-side jobs count as re-targets (the engine analogue of the
     // simulator's reserved-stream `pd_retarget`), encode/prefill as
-    // retries.
+    // retries. Each redispatch consumes a cluster retry-budget token;
+    // past the budget, the sweep degrades to typed sheds.
+    let mut crashes = 0usize;
     for ev in sup.take_crashes() {
+        crashes += 1;
         for job in sup.ledger.sweep_instance(ev.instance) {
             let ctx = Arc::clone(job.ctx());
             if ctx.is_terminated() || ctx.is_cancelled() {
@@ -595,6 +686,11 @@ pub fn supervise_tick(queues: &StageQueues, metrics: &MetricsRecorder, mode: Dep
                 continue;
             }
             if sup.active() && ctx.retry_count() < sup.retry_limit {
+                if !sup.budget_allows() {
+                    metrics.on_retry_budget_exhausted();
+                    fail_and_clean(queues, &ctx, FailReason::WorkerLost, metrics);
+                    continue;
+                }
                 let attempt = ctx.note_retry();
                 if matches!(stage, Stage::Decode) {
                     metrics.on_request_retargeted();
@@ -642,6 +738,13 @@ pub fn supervise_tick(queues: &StageQueues, metrics: &MetricsRecorder, mode: Dep
     for ctx in sup.expired_watches() {
         fail_and_clean(queues, &ctx, FailReason::DeadlineExceeded, metrics);
     }
+
+    // 6. Mirror the breaker counters into `/metrics` (store semantics —
+    // absent entirely without `health_breaker`).
+    if let Some(hs) = sup.health_stats() {
+        metrics.record_health(&hs);
+    }
+    crashes
 }
 
 #[cfg(test)]

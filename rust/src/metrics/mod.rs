@@ -3,6 +3,8 @@
 
 pub mod goodput;
 pub mod recorder;
+pub mod resilience;
 
 pub use goodput::{find_goodput, GoodputResult};
 pub use recorder::MetricsRecorder;
+pub use resilience::ResilienceCounters;

@@ -10,6 +10,8 @@ use crate::coordinator::planner::ReallocationStats;
 use crate::core::request::RequestId;
 use crate::core::slo::Slo;
 use crate::core::stage::Stage;
+use crate::metrics::resilience::ResilienceCounters;
+use crate::router::health::HealthStats;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -85,6 +87,18 @@ pub struct MetricsRecorder {
     degraded_fallbacks: AtomicU64,
     drain_failed: AtomicU64,
     failed: AtomicU64,
+    /// Health-layer counters (shared schema with the simulator via
+    /// `metrics::resilience::ResilienceCounters`): breaker transitions
+    /// mirrored from the supervisor's `HealthTracker` snapshot, hedge
+    /// lifecycle events, and redispatches shed by the cluster retry
+    /// budget.
+    breaker_opens: AtomicU64,
+    breaker_probes: AtomicU64,
+    quarantines: AtomicU64,
+    hedges_issued: AtomicU64,
+    hedges_won: AtomicU64,
+    hedges_cancelled: AtomicU64,
+    retry_budget_exhausted: AtomicU64,
 }
 
 impl MetricsRecorder {
@@ -309,6 +323,54 @@ impl MetricsRecorder {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Mirror the supervisor's `HealthTracker` counters (monitor thread,
+    /// once per supervise tick — store semantics like
+    /// [`MetricsRecorder::record_reallocation`]).
+    pub fn record_health(&self, h: &HealthStats) {
+        self.breaker_opens.store(h.breaker_opens, Ordering::Relaxed);
+        self.breaker_probes.store(h.breaker_probes, Ordering::Relaxed);
+        self.quarantines.store(h.quarantines, Ordering::Relaxed);
+    }
+
+    /// Record one duplicate dispatch issued for a slow in-flight request.
+    pub fn on_hedge_issued(&self) {
+        self.hedges_issued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a hedge whose duplicate leg completed first.
+    pub fn on_hedge_won(&self) {
+        self.hedges_won.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a hedge copy cancelled after the other leg completed.
+    pub fn on_hedge_cancelled(&self) {
+        self.hedges_cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a redispatch converted to a typed shed by the exhausted
+    /// cluster retry budget.
+    pub fn on_retry_budget_exhausted(&self) {
+        self.retry_budget_exhausted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the schema shared with the simulator's
+    /// `ResilienceStats` (one struct, one field list — they cannot drift).
+    pub fn resilience_counters(&self) -> ResilienceCounters {
+        ResilienceCounters {
+            crashes: self.crashes.load(Ordering::Relaxed),
+            requests_lost: self.requests_lost.load(Ordering::Relaxed),
+            requests_retried: self.requests_retried.load(Ordering::Relaxed),
+            requests_retargeted: self.requests_retargeted.load(Ordering::Relaxed),
+            breaker_opens: self.breaker_opens.load(Ordering::Relaxed),
+            breaker_probes: self.breaker_probes.load(Ordering::Relaxed),
+            quarantines: self.quarantines.load(Ordering::Relaxed),
+            hedges_issued: self.hedges_issued.load(Ordering::Relaxed),
+            hedges_won: self.hedges_won.load(Ordering::Relaxed),
+            hedges_cancelled: self.hedges_cancelled.load(Ordering::Relaxed),
+            retry_budget_exhausted: self.retry_budget_exhausted.load(Ordering::Relaxed),
+        }
+    }
+
     pub fn crashes(&self) -> u64 {
         self.crashes.load(Ordering::Relaxed)
     }
@@ -486,21 +548,15 @@ impl MetricsRecorder {
                     ("degraded", Json::num(self.router_degraded() as f64)),
                 ]),
             ),
-            (
-                "resilience",
-                Json::obj(vec![
-                    ("crashes", Json::num(self.crashes() as f64)),
-                    ("requests_lost", Json::num(self.requests_lost() as f64)),
-                    ("requests_retried", Json::num(self.requests_retried() as f64)),
-                    (
-                        "requests_retargeted",
-                        Json::num(self.requests_retargeted() as f64),
-                    ),
-                    ("deadline_exceeded", Json::num(self.deadline_exceeded() as f64)),
-                    ("degraded_fallbacks", Json::num(self.degraded_fallbacks() as f64)),
-                    ("drain_failed", Json::num(self.drain_failed() as f64)),
-                ]),
-            ),
+            ("resilience", {
+                // The shared schema first (one field list with the sim —
+                // see metrics/resilience.rs), then the engine-only tails.
+                let mut fields = self.resilience_counters().json_fields();
+                fields.push(("deadline_exceeded", Json::num(self.deadline_exceeded() as f64)));
+                fields.push(("degraded_fallbacks", Json::num(self.degraded_fallbacks() as f64)));
+                fields.push(("drain_failed", Json::num(self.drain_failed() as f64)));
+                Json::obj(fields)
+            }),
             ("reallocation", {
                 let r = self.reallocation();
                 Json::obj(vec![
@@ -675,6 +731,34 @@ mod tests {
         assert_eq!(r.get("deadline_exceeded").unwrap().as_u64(), Some(1));
         assert_eq!(r.get("degraded_fallbacks").unwrap().as_u64(), Some(1));
         assert_eq!(r.get("drain_failed").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn health_counters_share_the_sim_schema() {
+        let m = MetricsRecorder::new();
+        m.record_health(&HealthStats { breaker_opens: 2, quarantines: 1, breaker_probes: 5 });
+        m.on_hedge_issued();
+        m.on_hedge_won();
+        m.on_hedge_cancelled();
+        m.on_retry_budget_exhausted();
+        let c = m.resilience_counters();
+        assert_eq!(c.breaker_opens, 2);
+        assert_eq!(c.breaker_probes, 5);
+        assert_eq!(c.quarantines, 1);
+        assert_eq!(c.hedges_issued, 1);
+        assert_eq!(c.hedges_won, 1);
+        assert_eq!(c.hedges_cancelled, 1);
+        assert_eq!(c.retry_budget_exhausted, 1);
+        // record_health is a mirror: re-recording stores, not adds.
+        m.record_health(&HealthStats { breaker_opens: 3, quarantines: 1, breaker_probes: 5 });
+        assert_eq!(m.resilience_counters().breaker_opens, 3);
+        // /metrics exposes every shared field.
+        let j = m.report();
+        let r = j.get("resilience").unwrap();
+        assert_eq!(r.get("breaker_opens").unwrap().as_u64(), Some(3));
+        assert_eq!(r.get("quarantines").unwrap().as_u64(), Some(1));
+        assert_eq!(r.get("hedges_issued").unwrap().as_u64(), Some(1));
+        assert_eq!(r.get("retry_budget_exhausted").unwrap().as_u64(), Some(1));
     }
 
     #[test]

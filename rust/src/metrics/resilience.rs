@@ -1,0 +1,107 @@
+//! The one resilience-counter schema shared by both halves of the stack.
+//!
+//! The simulator's [`ResilienceStats`](crate::sim::fault::ResilienceStats)
+//! and the engine's [`MetricsRecorder`](crate::metrics::recorder) used to
+//! maintain parallel hand-matched field lists; every new counter had to be
+//! added twice and could silently drift. [`ResilienceCounters`] is the
+//! shared core: the sim embeds it (and `Deref`s to it so existing field
+//! accesses keep working), the recorder snapshots its atomics into it, and
+//! both JSON reports emit [`ResilienceCounters::json_fields`] so the
+//! schema cannot diverge. Side-specific extras (the sim's chaos event
+//! counts and recovery metrics, the engine's deadline/drain failures) are
+//! appended after the shared fields by their owners.
+
+use crate::router::health::HealthStats;
+use crate::util::json::Json;
+
+/// Resilience counters with identical meaning in the simulator and the
+/// real engine. All zeros unless faults fire or a health-layer knob is on.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResilienceCounters {
+    /// Instance crashes executed (sim) / observed by the supervisor
+    /// (engine); deduplicated to one per instance death.
+    pub crashes: u64,
+    /// Requests terminally failed by instance loss. Lost requests still
+    /// count toward the termination ledger so conservation holds:
+    /// sim `finished + rejected + lost == submitted`, engine
+    /// `finished + failed == submitted`.
+    pub requests_lost: u64,
+    /// Work items re-queued to a sibling after a crash drain or abort.
+    pub requests_retried: u64,
+    /// Decode-side reservations/work re-targeted off a dead instance.
+    pub requests_retargeted: u64,
+    /// Circuit-breaker Closed/Half-Open → Open transitions.
+    pub breaker_opens: u64,
+    /// Half-Open probe admissions granted by the breaker.
+    pub breaker_probes: u64,
+    /// Flapping instances escalated into quarantine.
+    pub quarantines: u64,
+    /// Duplicate dispatches issued for slow in-flight requests.
+    pub hedges_issued: u64,
+    /// Hedges whose duplicate completed first (the hedge paid off).
+    pub hedges_won: u64,
+    /// Hedge copies cancelled after the other leg completed first.
+    pub hedges_cancelled: u64,
+    /// Redispatches converted to typed sheds by the exhausted cluster
+    /// retry budget.
+    pub retry_budget_exhausted: u64,
+}
+
+impl ResilienceCounters {
+    /// The shared JSON schema, in canonical field order. Owners append
+    /// their side-specific fields after these.
+    pub fn json_fields(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("crashes", Json::num(self.crashes as f64)),
+            ("requests_lost", Json::num(self.requests_lost as f64)),
+            ("requests_retried", Json::num(self.requests_retried as f64)),
+            ("requests_retargeted", Json::num(self.requests_retargeted as f64)),
+            ("breaker_opens", Json::num(self.breaker_opens as f64)),
+            ("breaker_probes", Json::num(self.breaker_probes as f64)),
+            ("quarantines", Json::num(self.quarantines as f64)),
+            ("hedges_issued", Json::num(self.hedges_issued as f64)),
+            ("hedges_won", Json::num(self.hedges_won as f64)),
+            ("hedges_cancelled", Json::num(self.hedges_cancelled as f64)),
+            ("retry_budget_exhausted", Json::num(self.retry_budget_exhausted as f64)),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(self.json_fields())
+    }
+
+    /// Overwrite the breaker-side counters from a
+    /// [`HealthTracker`](crate::router::health::HealthTracker) snapshot
+    /// (the tracker owns those counts; end-of-run sync point).
+    pub fn absorb_health(&mut self, h: &HealthStats) {
+        self.breaker_opens = h.breaker_opens;
+        self.breaker_probes = h.breaker_probes;
+        self.quarantines = h.quarantines;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_has_every_field_and_defaults_to_zero() {
+        let c = ResilienceCounters::default();
+        let j = c.to_json();
+        for (name, _) in c.json_fields() {
+            assert_eq!(j.get(name).unwrap().as_f64(), Some(0.0), "{name}");
+        }
+        assert_eq!(c.json_fields().len(), 11);
+    }
+
+    #[test]
+    fn absorb_health_overwrites_breaker_counters_only() {
+        let mut c = ResilienceCounters { crashes: 3, hedges_issued: 2, ..Default::default() };
+        c.absorb_health(&HealthStats { breaker_opens: 4, quarantines: 1, breaker_probes: 9 });
+        assert_eq!(c.crashes, 3);
+        assert_eq!(c.hedges_issued, 2);
+        assert_eq!(c.breaker_opens, 4);
+        assert_eq!(c.breaker_probes, 9);
+        assert_eq!(c.quarantines, 1);
+    }
+}

@@ -88,7 +88,15 @@ pub fn decide(
         return AdmissionDecision::Degrade { max_tokens: cfg.degrade_tokens };
     }
     let excess_ms = ((ttft - ttft_bound).max(0.0) * 1000.0) as u64;
-    AdmissionDecision::Shed { retry_after_ms: excess_ms.max(cfg.retry_after_ms) }
+    // Backoff hint: the projected drain time of the queues ahead — the
+    // only component of the projection that improves by waiting (the
+    // request's own encode/prefill costs do not shrink). The SLO excess
+    // keeps the hint proportional under heavy overload, and the
+    // configured floor backstops an all-service-time projection.
+    let drain_ms = ((outlook.entry_wait + outlook.prefill_wait) * 1000.0) as u64;
+    AdmissionDecision::Shed {
+        retry_after_ms: excess_ms.max(drain_ms).max(cfg.retry_after_ms),
+    }
 }
 
 #[cfg(test)]
@@ -164,6 +172,31 @@ mod tests {
         // No SLO target, but the request's own deadline budget gates it.
         match decide(&c, &outlook(2.0, 0.0), Priority::Interactive, 1.0) {
             AdmissionDecision::Shed { retry_after_ms } => assert_eq!(retry_after_ms, 1000),
+            other => panic!("expected shed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shed_hint_tracks_queue_drain_time() {
+        let c = cfg(2.0, 0.05, false);
+        // Overload driven by queued work: the hint is the projected
+        // drain of the queues ahead (3.0 s + 1.5 s), not the 250 ms
+        // static floor — by the hinted retry, the backlog has cleared.
+        let o = AdmissionOutlook {
+            entry_wait: 3.0,
+            prefill_wait: 1.5,
+            prefill_cost: 0.1,
+            decode_step: 0.01,
+            ..Default::default()
+        };
+        match decide(&c, &o, Priority::Interactive, f64::INFINITY) {
+            AdmissionDecision::Shed { retry_after_ms } => assert_eq!(retry_after_ms, 4500),
+            other => panic!("expected shed, got {other:?}"),
+        }
+        // Overload from pure service time still falls back to the floor.
+        let o2 = AdmissionOutlook { prefill_cost: 2.1, ..Default::default() };
+        match decide(&c, &o2, Priority::Interactive, f64::INFINITY) {
+            AdmissionDecision::Shed { retry_after_ms } => assert_eq!(retry_after_ms, 250),
             other => panic!("expected shed, got {other:?}"),
         }
     }

@@ -1,0 +1,554 @@
+//! The shared per-instance health layer behind the health-aware control
+//! plane: one circuit-breaker state machine consumed by *both* engines —
+//! the simulator (fed by `sim::fault` crash/OOM events and `SwitchDone`
+//! recoveries) and the real engine (fed by `engine::supervise` panic
+//! sweeps and heartbeat deaths) — so chaos-bench results predict real
+//! deployment behavior.
+//!
+//! Per instance, a [`HealthTracker`] runs the classic breaker cycle
+//!
+//! ```text
+//!            failure                    recovery / open_secs elapse
+//!  Closed ───────────▶ Open ──────────────────────────▶ HalfOpen
+//!    ▲                   │                                  │
+//!    │ probe succeeds    │ flap_threshold failures          │ probe fails
+//!    └───────────────────┤ inside flap_window               ▼
+//!                        ▼                                Open
+//!                   Quarantined ──(seeded probation expires)──▶ HalfOpen
+//! ```
+//!
+//! plus two cluster-wide guards: a [`RetryBudget`] token bucket capping
+//! the redispatch rate a crash wave may generate, and a [`HedgeTracker`]
+//! deriving per-stage hedge thresholds from streaming quantile sketches
+//! ([`crate::util::stats::QuantileSketch`]).
+//!
+//! Everything here is deterministic — time is caller-supplied `f64`
+//! seconds (virtual in the simulator, wall-clock in the engine), and the
+//! quarantine probation backoff is a pure function of `(seed, instance,
+//! offence)` — and dormant by default: [`HealthConfig::from_epd`] returns
+//! `None` until one of the `health_*` / `hedge_*` / `retry_budget_*`
+//! keys leaves its default, and a `None` config wires no tracker at all
+//! (property-tested in `rust/tests/property_health.rs`).
+
+use crate::core::config::EpdConfig;
+use crate::util::rng::Rng;
+use crate::util::stats::QuantileSketch;
+
+/// Fallback jitter seed when no `fault_seed` is armed (probation backoff
+/// must stay deterministic even in fault-free configurations).
+const DEFAULT_HEALTH_SEED: u64 = 0x4EA1_7500_0000_0001;
+
+/// Cap on the probation-doubling exponent (`probation_secs << 6` max).
+const MAX_PROBATION_SHIFT: u32 = 6;
+
+/// Resolved health-layer tunables (the `health_*` / `hedge_*` /
+/// `retry_budget_*` block of [`EpdConfig`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthConfig {
+    /// Circuit-breaker dispatch filtering (skip Open, probe Half-Open,
+    /// quarantine flappers).
+    pub breaker: bool,
+    /// Fault-aware replanning: unhealthy instances count zero capacity
+    /// and a crash forces an out-of-band plan tick.
+    pub replan: bool,
+    /// Seconds an instance stays Open after a failure before probing.
+    pub open_secs: f64,
+    /// Probe budget granted on the Open → Half-Open transition.
+    pub half_open_probes: u32,
+    /// Failures inside `flap_window` that escalate to quarantine.
+    pub flap_threshold: u32,
+    /// Width (seconds) of the flapping-detection window.
+    pub flap_window: f64,
+    /// Base quarantine probation; doubles per repeat offence (seeded
+    /// jitter on top, capped at `base << 6`).
+    pub probation_secs: f64,
+    /// Hedge trigger quantile in (0, 1]; 0 disables hedged dispatch.
+    pub hedge_quantile: f64,
+    /// Stage-wait samples required before hedge thresholds engage.
+    pub hedge_min_samples: u64,
+    /// Cluster-wide redispatch tokens per second; 0 disables the budget.
+    pub retry_budget_per_s: f64,
+    /// Token-bucket burst capacity.
+    pub retry_budget_burst: f64,
+    /// Jitter seed for the probation backoff (the fault seed when armed).
+    pub seed: u64,
+}
+
+impl HealthConfig {
+    /// Resolve from config. `None` — the default — means the health layer
+    /// is entirely absent: no tracker, no budget, no sketches, bit-for-bit
+    /// today's behavior.
+    pub fn from_epd(epd: &EpdConfig) -> Option<HealthConfig> {
+        let dormant = !epd.health_breaker
+            && !epd.health_replan
+            && epd.hedge_quantile <= 0.0
+            && epd.retry_budget_per_s <= 0.0;
+        if dormant {
+            return None;
+        }
+        Some(HealthConfig {
+            breaker: epd.health_breaker,
+            replan: epd.health_replan,
+            open_secs: epd.health_open_secs.max(0.0),
+            half_open_probes: epd.health_probes.max(1),
+            flap_threshold: epd.health_flap_threshold,
+            flap_window: epd.health_flap_window_secs.max(0.0),
+            probation_secs: epd.health_probation_secs.max(0.0),
+            hedge_quantile: epd.hedge_quantile.clamp(0.0, 1.0),
+            hedge_min_samples: epd.hedge_min_samples.max(1),
+            retry_budget_per_s: epd.retry_budget_per_s.max(0.0),
+            retry_budget_burst: epd.retry_budget_burst.max(1.0),
+            seed: if epd.fault_seed != 0 { epd.fault_seed } else { DEFAULT_HEALTH_SEED },
+        })
+    }
+}
+
+/// Breaker state of one instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: dispatch freely.
+    Closed,
+    /// Recently failed: skip until `open_secs` elapse or recovery lands.
+    Open,
+    /// Probing: admit up to the probe budget, then hold.
+    HalfOpen,
+    /// Flapping offender: skip until the seeded probation expires.
+    Quarantined,
+}
+
+#[derive(Debug, Clone)]
+struct InstanceHealth {
+    state: BreakerState,
+    /// Release time for Open / Quarantined (virtual or wall seconds).
+    until: f64,
+    /// Remaining Half-Open probe budget.
+    probes_left: u32,
+    /// Failure timestamps inside the flapping window (pruned lazily).
+    recent_failures: Vec<f64>,
+    /// Quarantine offences served — the probation-doubling exponent.
+    offences: u32,
+    /// Set between a failure and its recovery signal (the simulator's
+    /// crash → `SwitchDone` bracket).
+    pending_recovery: bool,
+}
+
+impl InstanceHealth {
+    fn new() -> InstanceHealth {
+        InstanceHealth {
+            state: BreakerState::Closed,
+            until: 0.0,
+            probes_left: 0,
+            recent_failures: Vec::new(),
+            offences: 0,
+            pending_recovery: false,
+        }
+    }
+}
+
+/// Health-layer event counters, merged into the shared
+/// [`crate::metrics::resilience::ResilienceCounters`] by both engines.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HealthStats {
+    /// Closed/Half-Open → Open transitions.
+    pub breaker_opens: u64,
+    /// Escalations into quarantine by the flapping detector.
+    pub quarantines: u64,
+    /// Half-Open probe admissions granted.
+    pub breaker_probes: u64,
+}
+
+/// The shared per-instance health state machine.
+#[derive(Debug, Clone)]
+pub struct HealthTracker {
+    cfg: HealthConfig,
+    instances: Vec<InstanceHealth>,
+    pub stats: HealthStats,
+}
+
+impl HealthTracker {
+    pub fn new(cfg: HealthConfig, instances: usize) -> HealthTracker {
+        HealthTracker {
+            cfg,
+            instances: (0..instances).map(|_| InstanceHealth::new()).collect(),
+            stats: HealthStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &HealthConfig {
+        &self.cfg
+    }
+
+    pub fn state(&self, idx: usize) -> BreakerState {
+        self.instances.get(idx).map_or(BreakerState::Closed, |h| h.state)
+    }
+
+    /// Deterministic probation for offence `k` of `instance`:
+    /// `probation_secs * 2^min(k, 6)` plus seeded jitter below half the
+    /// base — a pure function of `(seed, instance, k)`.
+    fn probation(&self, instance: usize, offence: u32) -> f64 {
+        let base = self.cfg.probation_secs;
+        let scaled = base * f64::from(1u32 << offence.min(MAX_PROBATION_SHIFT));
+        let jitter = Rng::new(
+            self.cfg.seed
+                ^ (instance as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ u64::from(offence),
+        )
+        .uniform(0.0, 0.5 * base.max(1e-9));
+        scaled + jitter
+    }
+
+    /// Record a failure signal (sim crash/OOM, engine panic or heartbeat
+    /// death) at `now`. Repeat offenders inside the flapping window land
+    /// in quarantine with doubling probation; everyone else opens.
+    pub fn on_failure(&mut self, now: f64, idx: usize) {
+        let flap_threshold = self.cfg.flap_threshold;
+        let flap_window = self.cfg.flap_window;
+        let open_secs = self.cfg.open_secs;
+        let Some(h) = self.instances.get_mut(idx) else { return };
+        h.recent_failures.retain(|&t| now - t <= flap_window);
+        h.recent_failures.push(now);
+        h.probes_left = 0;
+        h.pending_recovery = true;
+        if flap_threshold > 0 && h.recent_failures.len() >= flap_threshold as usize {
+            let offence = h.offences;
+            h.state = BreakerState::Quarantined;
+            h.offences += 1;
+            self.stats.quarantines += 1;
+            let until = now + self.probation(idx, offence);
+            self.instances[idx].until = until;
+        } else {
+            h.state = BreakerState::Open;
+            h.until = now + open_secs;
+            self.stats.breaker_opens += 1;
+        }
+    }
+
+    /// Record a recovery signal (the simulator's post-downtime
+    /// `SwitchDone`; the engine has no in-process revival, so only the
+    /// time-based release below applies there). An Open instance moves to
+    /// Half-Open with a fresh probe budget; a quarantined one keeps
+    /// serving its probation — that is the point of quarantine.
+    pub fn on_recovery(&mut self, now: f64, idx: usize) {
+        let probes = self.cfg.half_open_probes;
+        let open_secs = self.cfg.open_secs;
+        let Some(h) = self.instances.get_mut(idx) else { return };
+        h.pending_recovery = false;
+        if h.state == BreakerState::Open {
+            h.state = BreakerState::HalfOpen;
+            h.probes_left = probes;
+            h.until = now + open_secs;
+        }
+    }
+
+    /// Whether the instance's next recovery signal should be routed here
+    /// (a crash is in flight between `on_failure` and `on_recovery`).
+    pub fn recovery_pending(&self, idx: usize) -> bool {
+        self.instances.get(idx).is_some_and(|h| h.pending_recovery)
+    }
+
+    /// Record a successfully completed work item on `idx`: a Half-Open
+    /// instance that proves itself closes again.
+    pub fn on_success(&mut self, _now: f64, idx: usize) {
+        let Some(h) = self.instances.get_mut(idx) else { return };
+        if h.state == BreakerState::HalfOpen {
+            h.state = BreakerState::Closed;
+            h.probes_left = 0;
+        }
+    }
+
+    /// Dispatch filter: may one work item be sent to `idx` right now?
+    /// Mutating — lapsed Open/Quarantined states roll into Half-Open, and
+    /// a Half-Open admission consumes one probe token. Callers must treat
+    /// a `false` as "prefer a sibling", never as "drop the request":
+    /// when every candidate refuses, dispatch falls back to ignoring
+    /// health so the breaker can degrade service but never wedge it.
+    pub fn admits(&mut self, now: f64, idx: usize) -> bool {
+        let probes = self.cfg.half_open_probes;
+        let open_secs = self.cfg.open_secs;
+        let Some(h) = self.instances.get_mut(idx) else { return true };
+        match h.state {
+            BreakerState::Closed => true,
+            BreakerState::Open | BreakerState::Quarantined => {
+                if now >= h.until && !h.pending_recovery {
+                    h.state = BreakerState::HalfOpen;
+                    h.probes_left = probes;
+                    h.until = now + open_secs;
+                    self.probe(idx)
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                // A spent probe budget re-arms after `open_secs`: the
+                // probes may all have been dispatch *offers* that picked a
+                // sibling, and with no work landing, no success signal can
+                // ever close the breaker — without the re-arm the
+                // instance would idle forever.
+                if h.probes_left == 0 && now >= h.until {
+                    h.probes_left = probes;
+                    h.until = now + open_secs;
+                }
+                self.probe(idx)
+            }
+        }
+    }
+
+    fn probe(&mut self, idx: usize) -> bool {
+        let h = &mut self.instances[idx];
+        if h.probes_left == 0 {
+            return false;
+        }
+        h.probes_left -= 1;
+        self.stats.breaker_probes += 1;
+        true
+    }
+
+    /// Non-mutating capacity view for the planner: Open and Quarantined
+    /// instances contribute zero capacity; Closed and Half-Open count.
+    pub fn counts_capacity(&self, now: f64, idx: usize) -> bool {
+        match self.state(idx) {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open | BreakerState::Quarantined => {
+                self.instances[idx].until <= now && !self.instances[idx].pending_recovery
+            }
+        }
+    }
+}
+
+/// Cluster-wide redispatch token bucket: a crash wave may retry at most
+/// `burst` items instantly and `rate` items per second sustained; past
+/// that, recovery degrades to typed sheds instead of a retry storm.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryBudget {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: f64,
+}
+
+impl RetryBudget {
+    pub fn new(rate_per_s: f64, burst: f64) -> RetryBudget {
+        let burst = burst.max(1.0);
+        RetryBudget { rate: rate_per_s.max(0.0), burst, tokens: burst, last: 0.0 }
+    }
+
+    /// Take one redispatch token at `now`; `false` means the budget is
+    /// exhausted and the item must shed instead of retry.
+    pub fn try_take(&mut self, now: f64) -> bool {
+        self.tokens = (self.tokens + (now - self.last).max(0.0) * self.rate).min(self.burst);
+        self.last = now;
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Tokens currently available (diagnostics).
+    pub fn available(&self) -> f64 {
+        self.tokens
+    }
+}
+
+/// Per-stage hedge thresholds from streaming quantile sketches: a stage
+/// wait above the configured quantile of everything previously observed
+/// for that stage marks the request hedge-eligible.
+#[derive(Debug, Clone)]
+pub struct HedgeTracker {
+    quantile: f64,
+    min_samples: u64,
+    sketches: Vec<QuantileSketch>,
+}
+
+impl HedgeTracker {
+    /// `stages` independent sketches (the simulator indexes by work
+    /// kind). 1% relative error — the same sketch the timeline-free
+    /// metrics path uses.
+    pub fn new(quantile: f64, min_samples: u64, stages: usize) -> HedgeTracker {
+        HedgeTracker {
+            quantile: quantile.clamp(0.0, 1.0),
+            min_samples: min_samples.max(1),
+            sketches: (0..stages).map(|_| QuantileSketch::default()).collect(),
+        }
+    }
+
+    /// Record one observed stage wait.
+    pub fn observe(&mut self, stage: usize, wait: f64) {
+        if let Some(s) = self.sketches.get_mut(stage) {
+            s.record(wait.max(0.0));
+        }
+    }
+
+    /// The hedge threshold for `stage`, once enough samples exist to make
+    /// the quantile meaningful; `None` while warming up (never hedge on a
+    /// cold sketch).
+    pub fn threshold(&self, stage: usize) -> Option<f64> {
+        let s = self.sketches.get(stage)?;
+        if s.count() < self.min_samples {
+            return None;
+        }
+        Some(s.quantile(self.quantile))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::topology::Topology;
+
+    fn cfg() -> HealthConfig {
+        HealthConfig {
+            breaker: true,
+            replan: true,
+            open_secs: 5.0,
+            half_open_probes: 2,
+            flap_threshold: 2,
+            flap_window: 60.0,
+            probation_secs: 10.0,
+            hedge_quantile: 0.95,
+            hedge_min_samples: 4,
+            retry_budget_per_s: 1.0,
+            retry_budget_burst: 2.0,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn default_config_resolves_to_none() {
+        let epd = EpdConfig::epd(Topology::new(1, 1, 1), 1, 1, 128);
+        assert!(HealthConfig::from_epd(&epd).is_none(), "health layer must default dormant");
+        let mut on = epd;
+        on.health_breaker = true;
+        assert!(HealthConfig::from_epd(&on).is_some());
+    }
+
+    #[test]
+    fn breaker_cycle_closed_open_halfopen_closed() {
+        let mut t = HealthTracker::new(cfg(), 2);
+        assert!(t.admits(0.0, 0));
+        t.on_failure(1.0, 0);
+        assert_eq!(t.state(0), BreakerState::Open);
+        assert!(!t.admits(2.0, 0), "open instances are skipped");
+        assert!(t.admits(2.0, 1), "siblings unaffected");
+        t.on_recovery(3.0, 0);
+        assert_eq!(t.state(0), BreakerState::HalfOpen);
+        // Bounded probing: exactly `half_open_probes` admissions.
+        assert!(t.admits(3.0, 0));
+        assert!(t.admits(3.0, 0));
+        assert!(!t.admits(3.0, 0), "probe budget exhausted");
+        t.on_success(4.0, 0);
+        assert_eq!(t.state(0), BreakerState::Closed);
+        assert!(t.admits(5.0, 0));
+        assert_eq!(t.stats.breaker_opens, 1);
+        assert_eq!(t.stats.breaker_probes, 2);
+        assert_eq!(t.stats.quarantines, 0);
+    }
+
+    #[test]
+    fn open_lapses_into_half_open_without_recovery_signal() {
+        // The engine path: no revival event, the time-based release must
+        // re-probe after `open_secs` — but only once the failure's
+        // recovery bracket is not pending (sim crashes must wait for
+        // their SwitchDone).
+        let mut t = HealthTracker::new(cfg(), 1);
+        t.on_failure(0.0, 0);
+        assert!(!t.admits(10.0, 0), "pending recovery holds the breaker");
+        t.on_recovery(0.5, 0);
+        t.on_failure(100.0, 0); // outside the flap window: opens again
+        t.on_recovery(100.5, 0);
+        t.on_success(101.0, 0);
+        t.on_failure(200.0, 0);
+        t.instances[0].pending_recovery = false; // engine-style: no bracket
+        assert!(!t.admits(204.9, 0), "still inside open_secs");
+        assert!(t.admits(205.1, 0), "lapsed open rolls into a probe");
+        assert_eq!(t.state(0), BreakerState::HalfOpen);
+    }
+
+    #[test]
+    fn spent_probe_budget_rearms_after_open_secs() {
+        // All probes can be consumed as dispatch *offers* that end up
+        // picking a sibling; the breaker must re-offer the instance after
+        // another `open_secs` instead of idling it forever.
+        let mut t = HealthTracker::new(cfg(), 1);
+        t.on_failure(0.0, 0);
+        t.on_recovery(1.0, 0);
+        assert!(t.admits(1.0, 0));
+        assert!(t.admits(1.0, 0));
+        assert!(!t.admits(1.0, 0), "budget spent");
+        assert!(!t.admits(5.9, 0), "still inside the re-arm window");
+        assert!(t.admits(6.1, 0), "budget re-arms after open_secs");
+        assert_eq!(t.state(0), BreakerState::HalfOpen);
+    }
+
+    #[test]
+    fn flapping_escalates_to_quarantine_with_doubling_probation() {
+        let mut t = HealthTracker::new(cfg(), 1);
+        t.on_failure(0.0, 0);
+        t.on_recovery(1.0, 0);
+        t.on_failure(2.0, 0); // 2nd failure inside the 60 s window
+        assert_eq!(t.state(0), BreakerState::Quarantined);
+        assert_eq!(t.stats.quarantines, 1);
+        let first_until = t.instances[0].until;
+        assert!(first_until >= 2.0 + 10.0, "probation at least the base");
+        assert!(first_until <= 2.0 + 10.0 + 5.0, "jitter below half the base");
+        // Recovery does not release quarantine.
+        t.on_recovery(3.0, 0);
+        assert_eq!(t.state(0), BreakerState::Quarantined);
+        assert!(!t.admits(first_until - 0.1, 0));
+        // Probation expiry releases into a bounded probe.
+        assert!(t.admits(first_until + 0.1, 0));
+        assert_eq!(t.state(0), BreakerState::HalfOpen);
+        t.on_success(first_until + 0.2, 0);
+        // A third offence doubles the probation.
+        t.on_failure(first_until + 1.0, 0);
+        assert_eq!(t.state(0), BreakerState::Quarantined);
+        let second = t.instances[0].until - (first_until + 1.0);
+        assert!(second >= 20.0, "offence 1 serves 2x the base: {second}");
+    }
+
+    #[test]
+    fn probation_is_deterministic_in_seed_instance_offence() {
+        let t = HealthTracker::new(cfg(), 3);
+        assert_eq!(t.probation(1, 0).to_bits(), t.probation(1, 0).to_bits());
+        assert_ne!(t.probation(1, 0).to_bits(), t.probation(2, 0).to_bits());
+        assert_ne!(t.probation(1, 0).to_bits(), t.probation(1, 1).to_bits());
+    }
+
+    #[test]
+    fn planner_capacity_view_is_non_mutating() {
+        let mut t = HealthTracker::new(cfg(), 2);
+        t.on_failure(0.0, 0);
+        assert!(!t.counts_capacity(1.0, 0), "open = zero capacity");
+        assert!(t.counts_capacity(1.0, 1));
+        t.on_recovery(2.0, 0);
+        assert!(t.counts_capacity(2.5, 0), "half-open counts as capacity");
+        let probes_before = t.instances[0].probes_left;
+        let _ = t.counts_capacity(2.5, 0);
+        assert_eq!(t.instances[0].probes_left, probes_before, "view consumes nothing");
+    }
+
+    #[test]
+    fn retry_budget_caps_burst_and_refills() {
+        let mut b = RetryBudget::new(1.0, 2.0);
+        assert!(b.try_take(0.0));
+        assert!(b.try_take(0.0));
+        assert!(!b.try_take(0.0), "burst spent");
+        assert!(!b.try_take(0.5), "half a token is not a token");
+        assert!(b.try_take(1.5), "refilled at 1/s");
+        assert!((b.available() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hedge_threshold_needs_warmup_then_tracks_quantile() {
+        let mut h = HedgeTracker::new(0.9, 4, 2);
+        h.observe(0, 1.0);
+        h.observe(0, 1.0);
+        h.observe(0, 1.0);
+        assert_eq!(h.threshold(0), None, "cold sketch never hedges");
+        h.observe(0, 10.0);
+        let th = h.threshold(0).expect("warm sketch");
+        assert!(th > 5.0, "p90 of [1,1,1,10] sits at the tail: {th}");
+        assert_eq!(h.threshold(1), None, "stages are independent");
+    }
+}

@@ -22,9 +22,11 @@
 
 pub mod admission;
 pub mod fair;
+pub mod health;
 
 pub use admission::{decide, AdmissionDecision, AdmissionOutlook};
 pub use fair::FairQueue;
+pub use health::{BreakerState, HealthConfig, HealthTracker, HedgeTracker, RetryBudget};
 
 use crate::core::config::{EpdConfig, RouterPolicy};
 use crate::core::slo::Slo;

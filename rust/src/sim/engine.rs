@@ -53,6 +53,7 @@ use crate::core::stage::Stage;
 use crate::core::topology::DeploymentMode;
 use crate::model::memory::{MemoryModel, NodeKind};
 use crate::model::spec::{DeviceSpec, LmmSpec};
+use crate::router::health::{HealthConfig, HealthTracker, HedgeTracker, RetryBudget};
 use crate::router::{decide, AdmissionDecision, AdmissionOutlook, FairQueue, RouterConfig, RouterStats};
 use crate::sched::assign::Assigner;
 use crate::sched::batcher::Batcher;
@@ -285,6 +286,14 @@ struct ReqState {
     pd_kv_arrived: u64,
     /// The tail group landed and the request joined a decode queue.
     pd_joined: bool,
+    // ---- hedged dispatch state (hedge_quantile > 0 only) ----
+    /// A duplicate entry-queue copy exists: `(primary, hedge)` instance
+    /// indices at issue time. While set, the slab slot's free is
+    /// deferred — the losing copy still references it from a queue.
+    hedge: Option<(u32, u32)>,
+    /// One copy of the hedged pair entered a batch; the twin is
+    /// discarded when it surfaces.
+    hedge_claimed: bool,
 }
 
 impl ReqState {
@@ -313,6 +322,8 @@ impl ReqState {
             pd_kv_sent: 0,
             pd_kv_arrived: 0,
             pd_joined: false,
+            hedge: None,
+            hedge_claimed: false,
         }
     }
 
@@ -425,6 +436,24 @@ pub struct Simulator<'a> {
     /// Earliest timed fault (+inf when none) — the recovery anchor.
     first_fault_at: f64,
     resilience: ResilienceStats,
+    // ---- health-aware control plane (all `None`/false — and therefore
+    // bit-for-bit dormant — until a health_*/hedge_*/retry_budget_* key
+    // leaves its default) ----
+    /// Per-instance circuit breakers (`health_breaker = on`): dispatch
+    /// skips Open instances, probes Half-Open ones with bounded traffic,
+    /// and quarantines flappers under seeded probation backoff.
+    health: Option<HealthTracker>,
+    /// Cluster-wide redispatch token bucket (`retry_budget_per_s > 0`):
+    /// crash-drain retries past the budget degrade to typed sheds.
+    retry_budget: Option<RetryBudget>,
+    /// Per-entry-stage hedge thresholds (`hedge_quantile > 0`): requests
+    /// waiting past the stage quantile get a duplicate on a healthy
+    /// sibling; first copy into a batch wins, the twin is discarded.
+    hedges: Option<HedgeTracker>,
+    /// Fault-aware replanning (`health_replan = on`): breaker-blocked
+    /// instances count zero capacity and a crash forces an out-of-band
+    /// plan pass.
+    health_replan: bool,
 }
 
 impl<'a> Simulator<'a> {
@@ -517,6 +546,21 @@ impl<'a> Simulator<'a> {
         let mut events = std::mem::take(&mut pool.events);
         events.reserve_seqs(requests.len() as u64);
 
+        // The health layer resolves to nothing at defaults: no tracker,
+        // no token bucket, no sketches — the dormant path carries four
+        // `None`/false fields and touches them only behind `if let`.
+        let health_cfg = HealthConfig::from_epd(&cfg.epd);
+        let health = health_cfg
+            .filter(|hc| hc.breaker)
+            .map(|hc| HealthTracker::new(hc, insts.len()));
+        let retry_budget = health_cfg
+            .filter(|hc| hc.retry_budget_per_s > 0.0)
+            .map(|hc| RetryBudget::new(hc.retry_budget_per_s, hc.retry_budget_burst));
+        let hedges = health_cfg
+            .filter(|hc| hc.hedge_quantile > 0.0)
+            .map(|hc| HedgeTracker::new(hc.hedge_quantile, hc.hedge_min_samples, 3));
+        let health_replan = health_cfg.is_some_and(|hc| hc.replan);
+
         let mut planner = ReallocationPlanner::new(PlannerConfig::from_epd(&cfg.epd, cfg.switch_policy));
         if cfg.epd.role_switching && cfg.epd.planner == PlannerPolicy::Surrogate {
             // The evaluator's template forces `role_switching = false`,
@@ -585,6 +629,10 @@ impl<'a> Simulator<'a> {
             fault_windows: Vec::new(),
             first_fault_at,
             resilience: ResilienceStats::default(),
+            health,
+            retry_budget,
+            hedges,
+            health_replan,
         };
         if cfg.eager_arrivals {
             while sim.next_arrival < sim.total_count {
@@ -659,9 +707,11 @@ impl<'a> Simulator<'a> {
             }
             Event::DecodeStepDone { instance } => self.on_decode_step_done(instance as usize),
             Event::FusedStepDone { instance } => self.on_fused_step_done(instance as usize),
-            Event::MonitorTick => self.on_monitor_tick(),
+            Event::MonitorTick => self.monitor_pass(true),
             Event::SwitchDone { instance } => self.on_switch_done(instance as usize),
             Event::Fault { action } => self.on_fault(action as usize),
+            Event::HedgeCheck { req, inst } => self.on_hedge_check(req as u64, inst as usize),
+            Event::PlanNow => self.monitor_pass(false),
         }
         // Front-door drain: any event that freed queue room (a batch
         // starting, a switch completing) lets held requests through.
@@ -730,6 +780,9 @@ impl<'a> Simulator<'a> {
         }
         timelines.sort_by_key(|t| t.id);
         let mut resilience = self.resilience;
+        if let Some(h) = &self.health {
+            resilience.counters.absorb_health(&h.stats);
+        }
         resilience.straggler_instances = self.stragglers.slowed();
         let (recovery_seconds, slo_dip) = super::fault::recovery_metrics(
             &self.fault_windows,
@@ -838,6 +891,222 @@ impl<'a> Simulator<'a> {
             / 8.0_f64.min(self.insts[idx].max_batch as f64)
     }
 
+    // ---- health-aware control plane (dormant unless configured) ----
+
+    /// Drop breaker-refused candidates from `cands`, keeping the
+    /// survivors' index order (the tie-break every selection site relies
+    /// on). When *every* candidate refuses the list is left untouched:
+    /// the breaker may degrade placement quality but must never wedge
+    /// dispatch — a request always goes somewhere that serves its stage.
+    fn healthy_filter(&mut self, cands: &mut Vec<usize>) {
+        let Some(h) = &mut self.health else { return };
+        let now = self.now;
+        let mut kept = 0;
+        for i in 0..cands.len() {
+            if h.admits(now, cands[i]) {
+                cands.swap(kept, i);
+                kept += 1;
+            }
+        }
+        if kept > 0 {
+            cands.truncate(kept);
+        }
+    }
+
+    /// A work item completed on `idx`: a Half-Open breaker that proves
+    /// itself closes again.
+    fn note_success(&mut self, idx: usize) {
+        if let Some(h) = &mut self.health {
+            h.on_success(self.now, idx);
+        }
+    }
+
+    /// One redispatch token, or `true` unconditionally when no retry
+    /// budget is configured.
+    fn budget_allows(&mut self) -> bool {
+        let now = self.now;
+        match &mut self.retry_budget {
+            Some(b) => b.try_take(now),
+            None => true,
+        }
+    }
+
+    /// Arm a hedge timer for a just-enqueued entry request: if it has
+    /// not entered a batch one stage-quantile threshold from now, a
+    /// duplicate copy is issued on a healthy sibling. No-op while
+    /// hedging is off or the stage sketch is still warming up.
+    fn maybe_schedule_hedge(&mut self, id: RequestId, inst: usize) {
+        let stage = hedge_stage(self.insts[inst].kind);
+        let Some(hd) = &self.hedges else { return };
+        let Some(th) = hd.threshold(stage) else { return };
+        // The timer mirrors the zero-token nudges: it keeps the slab
+        // slot alive until it fires, so it can never touch a recycled
+        // slot.
+        self.reqs[id].pending_nudges += 1;
+        self.events
+            .push(self.now + th, Event::HedgeCheck { req: id as u32, inst: inst as u32 });
+    }
+
+    /// A hedge timer fired for a request enqueued on `inst`.
+    fn on_hedge_check(&mut self, id: RequestId, inst: usize) {
+        let (free, eligible) = {
+            let r = &mut self.reqs[id];
+            r.pending_nudges -= 1;
+            (
+                r.zombie && r.pending_nudges == 0 && r.hedge.is_none(),
+                // Still waiting (no batch stamped its encode start), not
+                // already hedged, not terminated.
+                !r.zombie && r.hedge.is_none() && r.tl.encode_start.is_nan(),
+            )
+        };
+        if free {
+            self.reqs.remove(id);
+            return;
+        }
+        if eligible {
+            self.issue_hedge(id, inst);
+        }
+    }
+
+    /// Issue the duplicate entry for a hedge-eligible request: pick the
+    /// least-loaded healthy same-kind sibling of `primary` and push a
+    /// copy of the entry item there. First copy into a batch wins; the
+    /// twin is discarded at its own batch formation
+    /// ([`Self::hedge_claim_batch`]).
+    fn issue_hedge(&mut self, id: RequestId, primary: usize) {
+        let kind = self.insts[primary].kind;
+        let mut cands = std::mem::take(&mut self.scratch_insts);
+        self.fill_with_kind(kind, &mut cands);
+        cands.retain(|&i| i != primary);
+        self.healthy_filter(&mut cands);
+        let pick = self.least_loaded(&cands);
+        self.scratch_insts = cands;
+        let Some(dup) = pick else { return };
+        // Recompute the entry item exactly as the original dispatch
+        // priced it (single-shard EPD encode, or the fused entry cost).
+        let (shard, est, deadline, class) = {
+            let r = &mut self.reqs[id];
+            r.hedge = Some((primary as u32, dup as u32));
+            let tiles = r.req.total_tiles();
+            let est = match kind {
+                WorkKind::Encode => {
+                    self.cost.shard_preprocess_time(
+                        r.req.images,
+                        r.req.resolution,
+                        tiles,
+                        tiles,
+                        1,
+                        0,
+                    ) + self.cost.encode_time(tiles)
+                }
+                _ => {
+                    let encode_est = if r.encode_cached {
+                        self.cost.cache_hit_time()
+                    } else {
+                        self.cost.preprocess_time(r.req.images, r.req.resolution)
+                            + self.cost.encode_time(tiles)
+                    };
+                    encode_est + self.cost.prefill_time(r.req.prefill_tokens())
+                }
+            };
+            (tiles, est, r.req.deadline, r.req.class)
+        };
+        self.resilience.hedges_issued += 1;
+        self.insts[dup].queue.push(QueuedRequest {
+            id,
+            shard,
+            enqueue_time: self.now,
+            est_cost: est,
+            deadline,
+            class,
+        });
+        self.kick_instance(dup);
+    }
+
+    /// Hedge claim/discard pass over a freshly formed entry batch on
+    /// `idx`: the first copy of a hedged pair to reach a batch claims
+    /// the request (claiming on the hedge target counts a win); a copy
+    /// whose twin already claimed — or whose request already finished —
+    /// is dropped here, before any work is modelled for it. Only called
+    /// while hedging is on.
+    fn hedge_claim_batch(&mut self, idx: usize, items: &mut Vec<QueuedRequest>) {
+        let mut w = 0;
+        for i in 0..items.len() {
+            let id = items[i].id;
+            let keep = {
+                let r = &mut self.reqs[id];
+                if r.zombie || (r.hedge.is_some() && r.hedge_claimed) {
+                    false
+                } else {
+                    if let Some((_, dup)) = r.hedge {
+                        r.hedge_claimed = true;
+                        if idx == dup as usize {
+                            self.resilience.hedges_won += 1;
+                        }
+                    }
+                    true
+                }
+            };
+            if keep {
+                items.swap(w, i);
+                w += 1;
+            } else {
+                self.cancel_hedge_copy(id);
+            }
+        }
+        items.truncate(w);
+    }
+
+    /// Drop the losing copy of a hedged pair (the twin already entered a
+    /// batch, or the request already terminated). Clears the hedge
+    /// tether and frees a zombified slot it was keeping alive.
+    fn cancel_hedge_copy(&mut self, id: RequestId) {
+        let (had_hedge, free) = {
+            let r = &mut self.reqs[id];
+            let had = r.hedge.take().is_some();
+            (had, r.zombie && r.pending_nudges == 0)
+        };
+        if had_hedge {
+            self.resilience.hedges_cancelled += 1;
+        }
+        if free {
+            self.reqs.remove(id);
+        }
+    }
+
+    /// Terminate a crash-displaced item whose redispatch the retry
+    /// budget refused: a typed shed (counted like an admission
+    /// rejection) instead of another wave of retries.
+    fn shed_on_budget(&mut self, id: RequestId) {
+        self.resilience.retry_budget_exhausted += 1;
+        self.rejected += 1;
+        self.finished_count += 1;
+        self.record_fault_window(false);
+        let unpin = {
+            let r = &mut self.reqs[id];
+            if r.cache_pinned {
+                r.cache_pinned = false;
+                r.req.media_hash
+            } else {
+                None
+            }
+        };
+        if let Some(h) = unpin {
+            self.enc_cache.unpin(h);
+        }
+        if let Some(pos) = self.pd_parked.iter().position(|&p| p == id) {
+            self.pd_parked.remove(pos);
+        }
+        let defer = {
+            let r = &mut self.reqs[id];
+            r.zombie = true;
+            r.pending_nudges > 0 || r.hedge.is_some()
+        };
+        if !defer {
+            self.reqs.remove(id);
+        }
+    }
+
     // ---- arrival ----
 
     fn on_arrival(&mut self, widx: u32) {
@@ -883,7 +1152,11 @@ impl<'a> Simulator<'a> {
     /// single-path dispatch body, shared verbatim by the off path and
     /// the front door. `entry` is the non-empty entry-candidate scratch
     /// buffer; every branch returns it to `scratch_insts`.
-    fn route_request(&mut self, req: Request, tl: RequestTimeline, entry: Vec<usize>) {
+    fn route_request(&mut self, req: Request, tl: RequestTimeline, mut entry: Vec<usize>) {
+        // Circuit breakers steer entry placement away from Open and
+        // quarantined instances (falling back to the full set when every
+        // candidate refuses). No-op without `health_breaker`.
+        self.healthy_filter(&mut entry);
         let total_tiles = req.total_tiles();
 
         // Cross-request encoder cache: a content-addressed hit skips the
@@ -1037,7 +1310,15 @@ impl<'a> Simulator<'a> {
                     });
                     self.kick_instance(inst_idx);
                 }
+                // Hedged dispatch covers single-copy entries only: a
+                // duplicated shard of a multi-shard spread would
+                // double-count its siblings' completion, and a chunked
+                // stream would double-emit its tokens.
+                let single_entry = if shard_fanout == 1 && !chunked { Some(order[0]) } else { None };
                 self.scratch_order = order;
+                if let Some(primary) = single_entry {
+                    self.maybe_schedule_hedge(id, primary);
+                }
             }
             DeploymentMode::PdDisagg | DeploymentMode::Aggregated => {
                 let id = self.reqs.insert(ReqState::new(req.clone(), tl, 1)) as u64;
@@ -1064,6 +1345,7 @@ impl<'a> Simulator<'a> {
                     class: req.class,
                 });
                 self.kick_instance(inst_idx);
+                self.maybe_schedule_hedge(id, inst_idx);
             }
         }
     }
@@ -1308,6 +1590,23 @@ impl<'a> Simulator<'a> {
             self.recycle_batch_vec(items);
             return;
         }
+        if self.hedges.is_some() {
+            // Drop hedge-loser copies before they touch a device; if the
+            // claim pass empties the batch, re-pull immediately so the
+            // instance is not left idle with work still queued.
+            self.hedge_claim_batch(idx, &mut items);
+            if items.is_empty() {
+                self.recycle_batch_vec(items);
+                self.kick_instance(idx);
+                return;
+            }
+            let stage = hedge_stage(self.insts[idx].kind);
+            if let Some(hd) = &mut self.hedges {
+                for item in &items {
+                    hd.observe(stage, self.now - item.enqueue_time);
+                }
+            }
+        }
         let mut duration = 0.0;
         for item in &items {
             duration += item.est_cost; // preproc + encode per shard
@@ -1413,6 +1712,7 @@ impl<'a> Simulator<'a> {
         }
         let mut items = std::mem::take(&mut self.insts[idx].in_flight);
         self.insts[idx].busy = false;
+        self.note_success(idx);
         for item in items.drain(..) {
             let (all_done, mm_tokens) = {
                 let r = &mut self.reqs[item.id];
@@ -1516,7 +1816,7 @@ impl<'a> Simulator<'a> {
             let r = &mut self.reqs[id];
             r.pending_nudges -= 1;
             if r.zombie {
-                if r.pending_nudges == 0 {
+                if r.pending_nudges == 0 && r.hedge.is_none() {
                     self.reqs.remove(id);
                 }
                 return;
@@ -1569,6 +1869,7 @@ impl<'a> Simulator<'a> {
             self.prefill_park(id);
             return;
         }
+        self.healthy_filter(&mut prefills);
         let idx = match self.reqs[id].prefill_inst {
             Some(i) if prefills.contains(&i) => i,
             _ => self.least_loaded(&prefills).unwrap(),
@@ -1603,6 +1904,7 @@ impl<'a> Simulator<'a> {
             self.prefill_park(id);
             return;
         }
+        self.healthy_filter(&mut prefills);
         let est = {
             let r = &self.reqs[id];
             self.cost.prefill_time(r.req.prefill_tokens())
@@ -1778,6 +2080,7 @@ impl<'a> Simulator<'a> {
     fn on_prefill_done(&mut self, idx: usize) {
         let mut items = std::mem::take(&mut self.insts[idx].in_flight);
         self.insts[idx].busy = false;
+        self.note_success(idx);
         if self.chunked() {
             for item in items.drain(..) {
                 let finished = {
@@ -1875,6 +2178,7 @@ impl<'a> Simulator<'a> {
             self.pd_park(id);
             return;
         }
+        self.healthy_filter(&mut decoders);
         // Reject a request whose context can never fit this cluster's KV.
         let ctx = self.reqs[id].req.prefill_tokens();
         let fits_somewhere = decoders.iter().any(|&d| {
@@ -1891,7 +2195,7 @@ impl<'a> Simulator<'a> {
             let defer = {
                 let r = &mut self.reqs[id];
                 r.zombie = true;
-                r.pending_nudges > 0
+                r.pending_nudges > 0 || r.hedge.is_some()
             };
             if !defer {
                 self.reqs.remove(id);
@@ -1968,6 +2272,7 @@ impl<'a> Simulator<'a> {
         if first {
             let mut cands = std::mem::take(&mut self.scratch_insts);
             self.fill_with_kind(self.decode_kind(), &mut cands);
+            self.healthy_filter(&mut cands);
             cands.retain(|&d| self.insts[d].kv.can_admit(ctx + 1));
             let pick = self.least_loaded(&cands);
             self.scratch_insts = cands;
@@ -2060,6 +2365,7 @@ impl<'a> Simulator<'a> {
         }
         let mut cands = std::mem::take(&mut self.scratch_insts);
         self.fill_with_kind(self.decode_kind(), &mut cands);
+        self.healthy_filter(&mut cands);
         cands.retain(|&d| self.insts[d].kv.can_admit(ctx + 1));
         let pick = self.least_loaded(&cands);
         self.scratch_insts = cands;
@@ -2205,6 +2511,7 @@ impl<'a> Simulator<'a> {
 
     fn on_decode_step_done(&mut self, idx: usize) {
         self.insts[idx].busy = false;
+        self.note_success(idx);
         // Two recycled vectors swap roles each step: the old active set
         // drains into the survivor buffer, allocation-free.
         let mut active = std::mem::take(&mut self.insts[idx].active);
@@ -2250,6 +2557,23 @@ impl<'a> Simulator<'a> {
         if items.is_empty() {
             self.recycle_batch_vec(items);
             return;
+        }
+        if self.hedges.is_some() {
+            // Drop hedge-loser copies before they touch a device; if the
+            // claim pass empties the batch, re-pull immediately so the
+            // instance is not left idle with work still queued.
+            self.hedge_claim_batch(idx, &mut items);
+            if items.is_empty() {
+                self.recycle_batch_vec(items);
+                self.kick_instance(idx);
+                return;
+            }
+            let stage = hedge_stage(self.insts[idx].kind);
+            if let Some(hd) = &mut self.hedges {
+                for item in &items {
+                    hd.observe(stage, self.now - item.enqueue_time);
+                }
+            }
         }
         let chunk = self.cfg.epd.ep_chunk_tokens;
         let mut duration = 0.0;
@@ -2324,6 +2648,7 @@ impl<'a> Simulator<'a> {
     fn on_fused_step_done(&mut self, idx: usize) {
         let mut items = std::mem::take(&mut self.insts[idx].in_flight);
         self.insts[idx].busy = false;
+        self.note_success(idx);
         for item in items.drain(..) {
             let (media_hash, was_pinned, mm_tokens) = {
                 let r = &mut self.reqs[item.id];
@@ -2364,7 +2689,9 @@ impl<'a> Simulator<'a> {
             r.tl.finish = self.now;
             r.tl.output_tokens = r.req.output_tokens;
             r.zombie = true;
-            (r.tl.clone(), r.pending_nudges > 0)
+            // Defer the free while nudges are in the heap *or* an
+            // unclaimed hedge twin could still surface in a batch.
+            (r.tl.clone(), r.pending_nudges > 0 || r.hedge.is_some())
         };
         let (ttft, tpot, latency) = (tl.ttft(), tl.tpot(), tl.latency());
         self.streamed.ttft.record(ttft);
@@ -2396,7 +2723,10 @@ impl<'a> Simulator<'a> {
 
     // ---- online reallocation (profiler → planner → executor) ----
 
-    fn on_monitor_tick(&mut self) {
+    /// One monitor pass: profiler feeds + planner tick + executor step.
+    /// `rearm` distinguishes the periodic tick chain (re-schedules
+    /// itself) from a crash-forced out-of-band [`Event::PlanNow`].
+    fn monitor_pass(&mut self, rearm: bool) {
         // Feed per-stage signals into the profiler (identical observation
         // math to the pre-planner monitor, so `planner = "greedy"` stays
         // bit-for-bit).
@@ -2404,9 +2734,20 @@ impl<'a> Simulator<'a> {
         let mut qlen = [0usize; 3];
         let mut backlog = [0.0f64; 3];
         let mut busy = [0u32; 3];
-        for inst in &self.insts {
+        for (iidx, inst) in self.insts.iter().enumerate() {
             if inst.switching {
                 continue;
+            }
+            // Fault-aware replanning: breaker-blocked (Open/Quarantined)
+            // instances contribute zero capacity, so the planner scores
+            // topologies against the post-fault cluster instead of the
+            // nameplate one.
+            if self.health_replan {
+                if let Some(h) = &self.health {
+                    if !h.counts_capacity(self.now, iidx) {
+                        continue;
+                    }
+                }
             }
             let sidx = inst.role.index();
             counts[sidx] += 1;
@@ -2477,8 +2818,10 @@ impl<'a> Simulator<'a> {
         // monitor keeps ticking exactly in the (role-switching) runs where
         // this state is reachable.
         self.pd_wake_parked();
-        self.events
-            .push(self.now + self.cfg.monitor_interval, Event::MonitorTick);
+        if rearm {
+            self.events
+                .push(self.now + self.cfg.monitor_interval, Event::MonitorTick);
+        }
     }
 
     fn begin_switch(&mut self, idx: usize, to: Stage, migration_time: f64) {
@@ -2546,6 +2889,12 @@ impl<'a> Simulator<'a> {
 
     fn on_switch_done(&mut self, idx: usize) {
         self.insts[idx].switching = false;
+        // Restart/onload closes the crash→recovery bracket: an Open
+        // breaker moves to Half-Open (probed back to traffic); a planned
+        // role switch with no preceding failure is a no-op here.
+        if let Some(h) = &mut self.health {
+            h.on_recovery(self.now, idx);
+        }
         if self.insts[idx].serves_decode() {
             // Event-driven wake for requests that reached the PD edge
             // while no instance served decode: re-run their admission
@@ -2631,35 +2980,83 @@ impl<'a> Simulator<'a> {
             return; // already down (mid-switch or an earlier crash)
         }
         self.resilience.crashes += 1;
+        if let Some(h) = &mut self.health {
+            h.on_failure(self.now, idx);
+        }
         let kind = self.insts[idx].kind;
         // Queued (not-yet-started) work survives the crash — it only
         // lived in the scheduler: re-home it round-robin onto live
         // same-kind siblings; with none it waits out the downtime here.
         let mut drained = self.insts[idx].queue.drain_all();
-        let drained_decode = self.insts[idx].decode_queue.drain_all();
-        self.resilience.requests_retried += (drained.len() + drained_decode.len()) as u64;
-        let siblings: Vec<usize> = self
+        let mut drained_decode = self.insts[idx].decode_queue.drain_all();
+        let mut siblings: Vec<usize> = self
             .insts
             .iter()
             .enumerate()
             .filter(|(i, inst)| *i != idx && inst.kind == kind && !inst.switching)
             .map(|(i, _)| i)
             .collect();
+        self.healthy_filter(&mut siblings);
         if siblings.is_empty() {
+            self.resilience.requests_retried +=
+                (drained.len() + drained_decode.len()) as u64;
             for item in drained.drain(..) {
                 self.insts[idx].queue.push(item);
             }
-            for item in drained_decode {
+            for item in drained_decode.drain(..) {
                 self.insts[idx].decode_queue.push(item);
             }
         } else {
-            for (k, item) in drained.drain(..).enumerate() {
+            // Redispatch under the cluster-wide retry budget: each
+            // re-homed item consumes a token; once the bucket is dry,
+            // *sheddable* items degrade to typed sheds instead of
+            // amplifying the crash wave. IRP shards (WorkKind::Encode
+            // entry items) are never shed — dropping one would strand
+            // its sibling shards — and neither is either copy of an
+            // in-flight hedge pair (the twin may already be executing).
+            let mut k = 0usize;
+            for item in drained.drain(..) {
+                let (stale, sheddable) = {
+                    let r = &self.reqs[item.id];
+                    (
+                        r.zombie || r.hedge_claimed,
+                        kind != WorkKind::Encode && r.hedge.is_none(),
+                    )
+                };
+                if stale {
+                    // Hedge-loser copy (or already-terminated request):
+                    // the crash disposes of it exactly as batch formation
+                    // would have.
+                    self.cancel_hedge_copy(item.id);
+                    continue;
+                }
+                if sheddable && !self.budget_allows() {
+                    self.shed_on_budget(item.id);
+                    continue;
+                }
+                self.resilience.requests_retried += 1;
                 let target = siblings[k % siblings.len()];
+                k += 1;
                 self.insts[target].queue.push(item);
                 self.kick_instance(target);
             }
-            for (k, item) in drained_decode.into_iter().enumerate() {
+            let mut k = 0usize;
+            for item in drained_decode.drain(..) {
+                let (stale, sheddable) = {
+                    let r = &self.reqs[item.id];
+                    (r.zombie || r.hedge_claimed, r.hedge.is_none())
+                };
+                if stale {
+                    self.cancel_hedge_copy(item.id);
+                    continue;
+                }
+                if sheddable && !self.budget_allows() {
+                    self.shed_on_budget(item.id);
+                    continue;
+                }
+                self.resilience.requests_retried += 1;
                 let target = siblings[k % siblings.len()];
+                k += 1;
                 self.insts[target].decode_queue.push(item);
                 self.kick_instance(target);
             }
@@ -2698,6 +3095,16 @@ impl<'a> Simulator<'a> {
         }
         self.resilience.requests_retargeted += streaming;
         self.events.push(self.now + downtime, Event::SwitchDone { instance: idx as u32 });
+        // Fault-aware replanning: a crash immediately forces one
+        // out-of-band plan pass (the planner sees the breaker-blocked
+        // instance as zero capacity) instead of waiting out the rest of
+        // the periodic monitor interval. `PlanNow` runs a monitor pass
+        // without re-arming the tick chain, so the periodic cadence is
+        // undisturbed.
+        if self.health_replan && self.cfg.epd.role_switching {
+            self.planner.force_plan();
+            self.events.push(self.now, Event::PlanNow);
+        }
     }
 
     /// Terminate a request killed by a crash: accounted like a rejection
@@ -2714,7 +3121,7 @@ impl<'a> Simulator<'a> {
         let defer = {
             let r = &mut self.reqs[id];
             r.zombie = true;
-            r.pending_nudges > 0
+            r.pending_nudges > 0 || r.hedge.is_some()
         };
         if !defer {
             self.reqs.remove(id);
@@ -2734,6 +3141,14 @@ impl<'a> Simulator<'a> {
             return;
         }
         self.resilience.encoder_ooms += 1;
+        // An OOM is a fault signal but the device survives it: feed the
+        // breaker a failure + instant recovery, landing the instance in
+        // Half-Open (probed, and quarantined if it flaps) rather than
+        // Open (no SwitchDone will ever arrive to close it).
+        if let Some(h) = &mut self.health {
+            h.on_failure(self.now, idx);
+            h.on_recovery(self.now, idx);
+        }
         let mut items = std::mem::take(&mut self.insts[idx].in_flight);
         self.resilience.requests_retried += items.len() as u64;
         self.insts[idx].oom_abort = true;
@@ -2777,6 +3192,17 @@ fn work_kind(mode: DeploymentMode, role: Stage) -> WorkKind {
             Stage::Decode => WorkKind::Decode,
         },
         DeploymentMode::Aggregated => WorkKind::Monolith,
+    }
+}
+
+/// Canonical hedge-sketch index for a work kind. Keyed by *kind*, not
+/// instance role, because PD-disagg maps both Encode and Prefill roles
+/// onto FusedEp instances — their waits must land in one sketch.
+fn hedge_stage(kind: WorkKind) -> usize {
+    match kind {
+        WorkKind::Encode | WorkKind::FusedEp | WorkKind::Monolith => 0,
+        WorkKind::Prefill => 1,
+        WorkKind::Decode => 2,
     }
 }
 

@@ -64,6 +64,14 @@ pub enum Event {
     /// flattened [`FaultPlan`](crate::sim::fault::FaultPlan) schedule).
     /// Never scheduled when the plan is empty.
     Fault { action: EvReq },
+    /// Hedged-dispatch timer: the request was enqueued on `inst` and has
+    /// had one stage-quantile threshold to enter a batch; if it is still
+    /// waiting, a duplicate entry is issued on a healthy sibling. Never
+    /// scheduled while hedging is off (`hedge_quantile = 0`).
+    HedgeCheck { req: EvReq, inst: EvInst },
+    /// Out-of-band plan pass forced by a crash (`health_replan = on`):
+    /// one monitor pass that does *not* re-arm the periodic tick chain.
+    PlanNow,
 }
 
 // The whole point of the compact payloads: a heap entry is two cache

@@ -19,6 +19,9 @@
 //! and the same plan replay byte-identically (`SimOutcome::to_json()`),
 //! so chaos scenarios are regression-testable rather than flaky.
 
+use std::ops::{Deref, DerefMut};
+
+use crate::metrics::resilience::ResilienceCounters;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -286,27 +289,24 @@ pub enum FaultKind {
 
 /// Resilience accounting attached to
 /// [`SimOutcome`](crate::sim::outcome::SimOutcome) — all zeros when the
-/// plan is empty.
+/// plan is empty and the health layer is off.
+///
+/// The counters shared with the engine recorder (crashes, lost/retried/
+/// re-targeted requests, breaker/hedge/retry-budget events) live in the
+/// embedded [`ResilienceCounters`]; this struct `Deref`s to it so
+/// `stats.crashes`-style access keeps working, and appends the
+/// sim-only chaos event counts and recovery metrics.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ResilienceStats {
-    /// Crashes executed (a crash landing on an already-down instance is
-    /// skipped and not counted).
-    pub crashes: u64,
+    /// The schema shared with `metrics/recorder.rs` — see
+    /// [`crate::metrics::resilience`].
+    pub counters: ResilienceCounters,
     /// Link-degradation windows that began.
     pub link_degradations: u64,
     /// Encoder OOMs that actually aborted an in-flight batch.
     pub encoder_ooms: u64,
     /// Instances running with a straggler multiplier != 1.
     pub straggler_instances: u64,
-    /// Requests terminated by a crash (active decode state died with the
-    /// instance). Lost requests still count toward `finished_count` so
-    /// conservation holds: submitted = completed + rejected + lost.
-    pub requests_lost: u64,
-    /// Work items re-queued after a crash drain or an OOM abort.
-    pub requests_retried: u64,
-    /// Streamed-PD reservations released from a dead decode target and
-    /// re-reserved elsewhere (crash-time evacuations).
-    pub requests_retargeted: u64,
     /// Seconds from the first timed fault until windowed SLO attainment
     /// is back at its pre-fault level (0 when never degraded; capped at
     /// the end of the run when it never recovers).
@@ -316,19 +316,28 @@ pub struct ResilienceStats {
     pub slo_dip: f64,
 }
 
+impl Deref for ResilienceStats {
+    type Target = ResilienceCounters;
+    fn deref(&self) -> &ResilienceCounters {
+        &self.counters
+    }
+}
+
+impl DerefMut for ResilienceStats {
+    fn deref_mut(&mut self) -> &mut ResilienceCounters {
+        &mut self.counters
+    }
+}
+
 impl ResilienceStats {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("crashes", Json::num(self.crashes as f64)),
-            ("link_degradations", Json::num(self.link_degradations as f64)),
-            ("encoder_ooms", Json::num(self.encoder_ooms as f64)),
-            ("straggler_instances", Json::num(self.straggler_instances as f64)),
-            ("requests_lost", Json::num(self.requests_lost as f64)),
-            ("requests_retried", Json::num(self.requests_retried as f64)),
-            ("requests_retargeted", Json::num(self.requests_retargeted as f64)),
-            ("recovery_seconds", Json::num(self.recovery_seconds)),
-            ("slo_dip", Json::num(self.slo_dip)),
-        ])
+        let mut fields = self.counters.json_fields();
+        fields.push(("link_degradations", Json::num(self.link_degradations as f64)));
+        fields.push(("encoder_ooms", Json::num(self.encoder_ooms as f64)));
+        fields.push(("straggler_instances", Json::num(self.straggler_instances as f64)));
+        fields.push(("recovery_seconds", Json::num(self.recovery_seconds)));
+        fields.push(("slo_dip", Json::num(self.slo_dip)));
+        Json::obj(fields)
     }
 }
 
@@ -469,9 +478,18 @@ mod tests {
 
     #[test]
     fn resilience_json_has_all_fields() {
-        let j = ResilienceStats { crashes: 2, requests_lost: 1, ..Default::default() }.to_json();
+        let mut s = ResilienceStats {
+            counters: ResilienceCounters { crashes: 2, requests_lost: 1, ..Default::default() },
+            ..Default::default()
+        };
+        s.quarantines += 3; // through DerefMut into the shared counters
+        assert_eq!(s.crashes, 2, "Deref reads the shared counters");
+        let j = s.to_json();
         assert_eq!(j.get("crashes").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get("requests_lost").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("quarantines").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("hedges_issued").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("retry_budget_exhausted").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("slo_dip").unwrap().as_f64(), Some(0.0));
     }
 }

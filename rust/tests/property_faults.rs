@@ -70,6 +70,7 @@ fn empty_plan_is_dormant_and_deterministic() {
                 );
                 conserved(&a);
             }
+            Ok(())
         },
     );
 }
@@ -88,6 +89,7 @@ fn fault_waves_replay_bit_for_bit() {
             let b = run_with(epd, plan, images as u32, 16, 25);
             assert_eq!(a.to_json().pretty(), b.to_json().pretty(), "wave replay diverged");
             conserved(&a);
+            Ok(())
         },
     );
 }
@@ -116,6 +118,7 @@ fn requests_terminate_exactly_once_under_crash_schedules() {
                 assert!(out.resilience.crashes >= 1, "at least one crash must execute");
                 conserved(&out);
             }
+            Ok(())
         },
     );
 }

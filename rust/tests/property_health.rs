@@ -1,0 +1,349 @@
+//! Health-layer properties: every `health_*` / `hedge_*` /
+//! `retry_budget_*` knob must be bit-for-bit dormant at defaults (and
+//! inert when armed but untriggered) in all three deployment modes;
+//! breaker-governed runs must replay byte-identically under a seeded
+//! fault wave; the termination ledger must balance when instances crash
+//! while hedged copies are in flight; and a flapping instance must land
+//! in quarantine and be released once its probation lapses.
+
+use std::cell::Cell;
+
+use epdserve::core::config::EpdConfig;
+use epdserve::core::topology::Topology;
+use epdserve::model::spec::{DeviceSpec, LmmSpec, ModelId};
+use epdserve::router::health::{BreakerState, HealthConfig, HealthTracker};
+use epdserve::sim::engine::{SimConfig, Simulator};
+use epdserve::sim::fault::FaultPlan;
+use epdserve::sim::outcome::SimOutcome;
+use epdserve::util::quickcheck::{forall_cfg, pair, usize_in, Config};
+use epdserve::util::rng::Rng;
+use epdserve::workload::synthetic::SyntheticWorkload;
+use epdserve::workload::Workload;
+
+fn spec() -> LmmSpec {
+    LmmSpec::get(ModelId::MiniCpmV26)
+}
+
+fn run_with(epd: EpdConfig, faults: FaultPlan, images: u32, out: u32, n: usize) -> SimOutcome {
+    let sp = spec();
+    let mut cfg = SimConfig::new(sp.clone(), DeviceSpec::a100(), epd);
+    cfg.faults = faults;
+    let w = SyntheticWorkload::new(images, out);
+    let mut rng = Rng::new(0x4EA_175);
+    let reqs = w.generate(&sp, n, 1.5, &mut rng);
+    Simulator::run(&cfg, &reqs)
+}
+
+fn modes() -> [EpdConfig; 3] {
+    [
+        EpdConfig::epd(Topology::new(2, 1, 1), 1, 1, 32),
+        EpdConfig::distserve(3, 1, 1, 32),
+        EpdConfig::aggregated(4, 32),
+    ]
+}
+
+/// Every submitted request terminates exactly once, sheds included.
+fn conserved(out: &SimOutcome) {
+    let terminated = out.streamed.finished as usize
+        + out.rejected as usize
+        + out.resilience.requests_lost as usize;
+    assert_eq!(
+        terminated, out.submitted,
+        "finished {} + rejected {} + lost {} != submitted {}",
+        out.streamed.finished, out.rejected, out.resilience.requests_lost, out.submitted
+    );
+}
+
+/// All four knobs fully armed, for the chaos-facing properties.
+fn all_knobs(mut epd: EpdConfig) -> EpdConfig {
+    epd.health_breaker = true;
+    epd.health_replan = true;
+    epd.hedge_quantile = 0.9;
+    epd.hedge_min_samples = 4;
+    epd.retry_budget_per_s = 2.0;
+    epd.retry_budget_burst = 4.0;
+    epd
+}
+
+/// Dormancy: each of the four health behaviors, armed but untriggered
+/// (calm run — no faults, sketches cold), produces the byte-identical
+/// outcome of the all-defaults run in every deployment mode. The knobs
+/// may only change what happens when their trigger fires.
+#[test]
+fn untriggered_health_knobs_are_bit_for_bit_dormant() {
+    forall_cfg(
+        Config { cases: 6, seed: 0x4EA_1D0, max_shrink_steps: 0 },
+        pair(usize_in(1, 6), usize_in(1, 40)),
+        |&(images, out)| {
+            for epd in modes() {
+                assert!(
+                    HealthConfig::from_epd(&epd).is_none(),
+                    "the health layer must be absent at defaults"
+                );
+                let baseline =
+                    run_with(epd.clone(), FaultPlan::none(), images as u32, out as u32, 20)
+                        .to_json()
+                        .pretty();
+                let variants: [(&str, fn(EpdConfig) -> EpdConfig); 5] = [
+                    ("breaker on, no failures", |mut e| {
+                        e.health_breaker = true;
+                        e
+                    }),
+                    ("replan on, no crashes", |mut e| {
+                        e.health_replan = true;
+                        e
+                    }),
+                    ("retry budget on, nothing redispatched", |mut e| {
+                        e.retry_budget_per_s = 4.0;
+                        e
+                    }),
+                    ("hedging armed, sketch never warms", |mut e| {
+                        e.hedge_quantile = 0.95;
+                        e.hedge_min_samples = 1_000_000;
+                        e
+                    }),
+                    ("all four armed at once", |mut e| {
+                        e.health_breaker = true;
+                        e.health_replan = true;
+                        e.retry_budget_per_s = 4.0;
+                        e.hedge_quantile = 0.95;
+                        e.hedge_min_samples = 1_000_000;
+                        e
+                    }),
+                ];
+                for (what, arm) in variants {
+                    let armed = arm(epd.clone());
+                    assert!(
+                        HealthConfig::from_epd(&armed).is_some(),
+                        "{what}: the armed layer must resolve"
+                    );
+                    let got =
+                        run_with(armed, FaultPlan::none(), images as u32, out as u32, 20);
+                    assert_eq!(
+                        got.resilience.breaker_opens + got.resilience.quarantines
+                            + got.resilience.hedges_issued
+                            + got.resilience.retry_budget_exhausted,
+                        0,
+                        "{what}: untriggered knobs left tracks: {:?}",
+                        got.resilience
+                    );
+                    assert_eq!(
+                        got.to_json().pretty(),
+                        baseline,
+                        "{what}: outcome must be byte-identical to defaults"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Replay: with every knob armed, any seeded fault wave produces a
+/// byte-identical outcome when run twice — breaker transitions, hedges
+/// and budget sheds are all deterministic functions of (seed, config).
+#[test]
+fn health_governed_wave_replays_bit_for_bit() {
+    forall_cfg(
+        Config { cases: 8, seed: 0x4EA_1D1, max_shrink_steps: 0 },
+        pair(usize_in(1, 10_000), usize_in(1, 6)),
+        |&(wave_seed, images)| {
+            let epd = all_knobs(EpdConfig::epd(Topology::new(2, 2, 2), 1, 1, 16));
+            let plan = FaultPlan::wave(wave_seed as u64, 6, 4.0, 2, 3.0, 2.0, 1.5);
+            let a = run_with(epd.clone(), plan.clone(), images as u32, 16, 25);
+            let b = run_with(epd, plan, images as u32, 16, 25);
+            assert_eq!(
+                a.to_json().pretty(),
+                b.to_json().pretty(),
+                "health-governed wave replay diverged"
+            );
+            conserved(&a);
+            Ok(())
+        },
+    );
+}
+
+/// Conservation under hedged chaos: with hedging aggressive (every
+/// warmed-up entry wait past the median spawns a duplicate) and random
+/// crash schedules — including crashes that land while hedged copies
+/// are in flight — the termination ledger still balances in every mode.
+#[test]
+fn hedged_runs_conserve_the_ledger_under_crash_schedules() {
+    let hedged_runs = Cell::new(0u64);
+    forall_cfg(
+        Config { cases: 12, seed: 0x4EA_1D2, max_shrink_steps: 0 },
+        pair(usize_in(1, 100_000), usize_in(1, 5)),
+        |&(seed, images)| {
+            let mut rng = Rng::new(seed as u64);
+            for epd in modes() {
+                let n_inst = epd.instances.len();
+                let mut armed = epd;
+                armed.health_breaker = true;
+                armed.hedge_quantile = 0.5;
+                armed.hedge_min_samples = 2;
+                let mut plan = FaultPlan::none();
+                for _ in 0..rng.range(1, 3) {
+                    plan = plan.with_crash(
+                        rng.uniform(0.1, 12.0),
+                        rng.below(n_inst as u64) as usize,
+                        rng.uniform(0.5, 4.0),
+                    );
+                }
+                let out = run_with(armed, plan, images as u32, 12, 20);
+                assert!(out.resilience.crashes >= 1, "at least one crash must execute");
+                assert!(
+                    out.resilience.hedges_won <= out.resilience.hedges_issued,
+                    "wins cannot exceed issues: {:?}",
+                    out.resilience
+                );
+                if out.resilience.hedges_issued > 0 {
+                    hedged_runs.set(hedged_runs.get() + 1);
+                }
+                conserved(&out);
+            }
+            Ok(())
+        },
+    );
+    assert!(
+        hedged_runs.get() > 0,
+        "the schedule space must exercise crashes with hedges in flight"
+    );
+}
+
+/// Deterministic hedge lifecycle: under backlog with a warm sketch,
+/// duplicates are actually issued, a crash mid-run does not unbalance
+/// the ledger, and the whole run replays byte-identically.
+#[test]
+fn hedges_fire_under_backlog_and_crash_conserves() {
+    let run = || {
+        let mut epd = EpdConfig::aggregated(4, 32);
+        epd.health_breaker = true;
+        epd.hedge_quantile = 0.6;
+        epd.hedge_min_samples = 2;
+        let sp = spec();
+        let mut cfg = SimConfig::new(sp.clone(), DeviceSpec::a100(), epd);
+        cfg.faults = FaultPlan::none().with_crash(4.0, 0, 2.0);
+        let w = SyntheticWorkload::new(2, 16);
+        let mut rng = Rng::new(0x4EA_1D3);
+        let reqs = w.generate(&sp, 60, 8.0, &mut rng);
+        Simulator::run(&cfg, &reqs)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.to_json().pretty(), b.to_json().pretty(), "hedged run replay diverged");
+    assert_eq!(a.resilience.crashes, 1);
+    assert!(a.resilience.hedges_issued > 0, "backlog must trigger hedges: {:?}", a.resilience);
+    assert!(a.resilience.hedges_won <= a.resilience.hedges_issued);
+    assert!(a.resilience.hedges_cancelled <= a.resilience.hedges_issued);
+    conserved(&a);
+}
+
+/// The retry budget is a real cap: a crash that displaces more queued
+/// work than the bucket holds sheds the excess as typed rejections
+/// instead of redispatching it, and the ledger still balances.
+#[test]
+fn exhausted_retry_budget_sheds_typed() {
+    let run = |budgeted: bool| {
+        let mut epd = EpdConfig::aggregated(4, 32);
+        if budgeted {
+            epd.retry_budget_per_s = 0.01; // ~no refill over the run
+            epd.retry_budget_burst = 1.0; // exactly one free redispatch
+        }
+        let sp = spec();
+        let mut cfg = SimConfig::new(sp.clone(), DeviceSpec::a100(), epd);
+        // Crash at peak backlog so the drain displaces far more than one
+        // bucket token's worth of queued work.
+        cfg.faults = FaultPlan::none().with_crash(6.0, 0, 2.0);
+        let w = SyntheticWorkload::new(2, 16);
+        let mut rng = Rng::new(0x4EA_1D4);
+        let reqs = w.generate(&sp, 60, 8.0, &mut rng);
+        Simulator::run(&cfg, &reqs)
+    };
+    let uncapped = run(false);
+    assert_eq!(uncapped.resilience.retry_budget_exhausted, 0);
+    assert!(
+        uncapped.resilience.requests_retried > 1,
+        "the crash must displace a backlog worth capping: {:?}",
+        uncapped.resilience
+    );
+    let capped = run(true);
+    assert!(
+        capped.resilience.retry_budget_exhausted > 0,
+        "the one-token bucket must refuse the rest of the backlog: {:?}",
+        capped.resilience
+    );
+    assert!(capped.rejected as u64 >= capped.resilience.retry_budget_exhausted);
+    conserved(&capped);
+    // Replay determinism of the shedding run.
+    assert_eq!(run(true).to_json().pretty(), capped.to_json().pretty());
+}
+
+/// Flapping escalates: the same instance crashing twice inside the flap
+/// window lands in quarantine (after a plain Open on the first crash),
+/// the run still completes, and the faulted run replays byte-identically.
+#[test]
+fn flapping_instance_lands_in_quarantine() {
+    let run = || {
+        let mut epd = EpdConfig::epd(Topology::new(2, 1, 1), 1, 1, 32);
+        epd.health_breaker = true; // defaults: flap_threshold 2, window 60 s
+        // Instance 0 (an encoder) crashes at t=2 and again at t=5 —
+        // two failures well inside the window.
+        let plan = FaultPlan::none().with_crash(2.0, 0, 1.0).with_crash(5.0, 0, 1.0);
+        run_with(epd, plan, 2, 16, 30)
+    };
+    let out = run();
+    assert_eq!(out.resilience.crashes, 2);
+    assert_eq!(out.resilience.breaker_opens, 1, "first crash opens: {:?}", out.resilience);
+    assert_eq!(out.resilience.quarantines, 1, "second crash quarantines: {:?}", out.resilience);
+    conserved(&out);
+    assert_eq!(out.to_json().pretty(), run().to_json().pretty(), "flap replay diverged");
+}
+
+/// Quarantine releases after probation, and only after: for any jitter
+/// seed and victim, a first-offence probation lies in
+/// `[base, 1.5 * base)` — the instance is still refused just before the
+/// floor and re-admitted (as a Half-Open probe) past the ceiling.
+#[test]
+fn quarantine_releases_after_probation() {
+    forall_cfg(
+        Config { cases: 32, seed: 0x4EA_1D5, max_shrink_steps: 0 },
+        pair(usize_in(1, 1_000_000), usize_in(0, 3)),
+        |&(seed, idx)| {
+            let base = 10.0;
+            let cfg = HealthConfig {
+                breaker: true,
+                replan: false,
+                open_secs: 5.0,
+                half_open_probes: 3,
+                flap_threshold: 2,
+                flap_window: 60.0,
+                probation_secs: base,
+                hedge_quantile: 0.0,
+                hedge_min_samples: 1,
+                retry_budget_per_s: 0.0,
+                retry_budget_burst: 1.0,
+                seed: seed as u64,
+            };
+            let mut t = HealthTracker::new(cfg, 4);
+            t.on_failure(1.0, idx); // first failure: plain Open
+            assert_eq!(t.state(idx), BreakerState::Open);
+            t.on_recovery(1.5, idx); // device back: Half-Open
+            assert_eq!(t.state(idx), BreakerState::HalfOpen);
+            t.on_failure(2.0, idx); // second failure in window: quarantine
+            assert_eq!(t.state(idx), BreakerState::Quarantined);
+            assert_eq!(t.stats.quarantines, 1);
+            assert_eq!(t.stats.breaker_opens, 1);
+            // The post-downtime recovery signal does NOT release it.
+            t.on_recovery(2.5, idx);
+            assert_eq!(t.state(idx), BreakerState::Quarantined);
+            // Refused before the probation floor (jitter only adds)...
+            assert!(!t.admits(2.0 + base - 1e-6, idx), "released before the floor");
+            assert_eq!(t.state(idx), BreakerState::Quarantined);
+            // ...and released past the jitter ceiling, as a probe.
+            assert!(t.admits(2.0 + 1.5 * base + 1e-3, idx), "probation must end");
+            assert_eq!(t.state(idx), BreakerState::HalfOpen);
+            assert!(t.stats.breaker_probes >= 1);
+            Ok(())
+        },
+    );
+}

@@ -78,6 +78,7 @@ fn router_off_is_bit_for_bit_dormant() {
                 );
                 conserved(&a);
             }
+            Ok(())
         },
     );
 }
@@ -106,6 +107,7 @@ fn router_on_replays_bit_for_bit() {
                 a.submitted as u64,
                 "every arrival is routed or shed exactly once"
             );
+            Ok(())
         },
     );
 }
@@ -142,6 +144,7 @@ fn weighted_fairness_bound_holds() {
                     "round {round}: window served {got:?}, weights {weights:?}"
                 );
             }
+            Ok(())
         },
     );
 }

@@ -4,7 +4,8 @@
 # results/BENCH_reallocation.json, results/BENCH_sim_throughput.json,
 # results/BENCH_chaos.json, results/BENCH_router.json,
 # results/BENCH_engine_recovery.json,
-# results/BENCH_planner_surrogate.json — gate name,
+# results/BENCH_planner_surrogate.json,
+# results/BENCH_health_routing.json — gate name,
 # baseline, measured, pass),
 # seeding the repo's perf trajectory.
 # Exits non-zero when a bench fails outright or a gate reports pass=false.
@@ -12,14 +13,14 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-benches=(perf_pd_overlap perf_ep_overlap perf_reallocation perf_planner_surrogate perf_sim_throughput perf_chaos_resilience perf_router_slo perf_engine_recovery)
+benches=(perf_pd_overlap perf_ep_overlap perf_reallocation perf_planner_surrogate perf_sim_throughput perf_chaos_resilience perf_health_routing perf_router_slo perf_engine_recovery)
 for b in "${benches[@]}"; do
   echo "==> cargo bench --bench $b"
   cargo bench --bench "$b"
 done
 
 fail=0
-for id in pd_overlap ep_overlap reallocation planner_surrogate sim_throughput chaos router engine_recovery; do
+for id in pd_overlap ep_overlap reallocation planner_surrogate sim_throughput chaos health_routing router engine_recovery; do
   f="results/BENCH_${id}.json"
   if [[ ! -f "$f" ]]; then
     echo "MISSING: $f (bench did not emit its gate summary)" >&2

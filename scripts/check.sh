@@ -30,6 +30,9 @@ cargo test -q --test property_engine_faults
 echo "==> surrogate planning properties (GP bit-equivalence, pooled dormancy, replay, prefilter quality)"
 cargo test -q --test property_surrogate
 
+echo "==> health-layer properties (knob dormancy, breaker/hedge replay, crash conservation, quarantine probation)"
+cargo test -q --test property_health
+
 echo "==> engine chaos smoke (seeded kill wave via HTTP; exit-0 skip without artifacts)"
 cargo run --release --quiet --example chaos_recovery
 
